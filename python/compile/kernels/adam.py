@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: fused Adam step.
+
+Elementwise over the flat parameter vector, one pass: both moment updates,
+bias corrections and the parameter step fused so θ/m/v/g stream through
+VMEM exactly once (vs. ~7 separate elementwise HLO ops unfused). The
+step count `t` and learning rate arrive as (1,) refs because they are
+runtime inputs of the artifact, not compile-time constants.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def _adam_kernel(theta_ref, m_ref, v_ref, g_ref, t_ref, lr_ref,
+                 ot_ref, om_ref, ov_ref):
+    g = g_ref[...]
+    t = t_ref[0]
+    lr = lr_ref[0]
+    m2 = BETA1 * m_ref[...] + (1.0 - BETA1) * g
+    v2 = BETA2 * v_ref[...] + (1.0 - BETA2) * g * g
+    mhat = m2 / (1.0 - jnp.power(BETA1, t))
+    vhat = v2 / (1.0 - jnp.power(BETA2, t))
+    ot_ref[...] = theta_ref[...] - lr * mhat / (jnp.sqrt(vhat) + EPS)
+    om_ref[...] = m2
+    ov_ref[...] = v2
+
+
+def adam(theta, m, v, grad, t, lr, *, block_d=None):
+    """One fused Adam step. `t`, `lr` are (1,) arrays.
+
+    Returns (theta', m', v').
+    """
+    (dim,) = theta.shape
+    if block_d is None:
+        block_d = next(b for b in range(min(dim, 2048), 0, -1) if dim % b == 0)
+    assert dim % block_d == 0
+    grid = (dim // block_d,)
+    vec = pl.BlockSpec((block_d,), lambda j: (j,))
+    scalar = pl.BlockSpec((1,), lambda j: (0,))
+    out = jax.ShapeDtypeStruct((dim,), theta.dtype)
+    return pl.pallas_call(
+        _adam_kernel,
+        grid=grid,
+        in_specs=[vec, vec, vec, vec, scalar, scalar],
+        out_specs=(vec, vec, vec),
+        out_shape=(out, out, out),
+        interpret=True,
+    )(theta, m, v, grad, t, lr)

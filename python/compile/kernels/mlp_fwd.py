@@ -1,0 +1,101 @@
+"""L1 Pallas kernels: fused MLP forward passes.
+
+Both kernels tile the **batch** dimension: each grid step holds one
+(block_b × in) observation tile plus the full weight set in VMEM and runs
+the whole fused forward (matmul → tanh → matmul → tanh → heads) without
+touching HBM in between. VMEM budget at the default shapes (DESIGN.md
+§Hardware-Adaptation):
+
+* walker  (block 64):  64×24 x-tile + 2 804 params + 64×4 out ≈ 24 KB
+* ppo     (block 128): 128×32 x-tile + 6 597 params + outs    ≈ 47 KB
+
+both far under the ~16 MB/core budget, leaving room to grow block_b; the
+matmuls feed the MXU with (block_b × in) · (in × out) f32 contractions.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls (see /opt/xla-example/README.md); lowered this way the kernels
+become plain HLO and run on any backend.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp3_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, w3_ref, b3_ref, o_ref):
+    h = jnp.tanh(x_ref[...] @ w1_ref[...] + b1_ref[...])
+    h = jnp.tanh(h @ w2_ref[...] + b2_ref[...])
+    o_ref[...] = jnp.tanh(h @ w3_ref[...] + b3_ref[...])
+
+
+def mlp3_tanh(x, w1, b1, w2, b2, w3, b3, *, block_b=64):
+    """Batched 3-layer tanh MLP via Pallas. `x` is (B, in); B % block_b == 0."""
+    bsz, d_in = x.shape
+    assert bsz % block_b == 0, f"batch {bsz} must be a multiple of {block_b}"
+    d_out = w3.shape[1]
+    grid = (bsz // block_b,)
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    return pl.pallas_call(
+        _mlp3_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i: (i, 0)),
+            full(w1),
+            full(b1),
+            full(w2),
+            full(b2),
+            full(w3),
+            full(b3),
+        ],
+        out_specs=pl.BlockSpec((block_b, d_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, d_out), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2, w3, b3)
+
+
+def _ppo_heads_kernel(
+    x_ref, w1_ref, b1_ref, w2_ref, b2_ref, wp_ref, bp_ref, wv_ref, bv_ref,
+    logits_ref, values_ref,
+):
+    h = jnp.tanh(x_ref[...] @ w1_ref[...] + b1_ref[...])
+    h = jnp.tanh(h @ w2_ref[...] + b2_ref[...])
+    logits_ref[...] = h @ wp_ref[...] + bp_ref[...]
+    values_ref[...] = h @ wv_ref[...] + bv_ref[0]
+
+
+def ppo_heads(x, w1, b1, w2, b2, wp, bp, wv, bv, *, block_b=128):
+    """Fused PPO trunk + heads. `wv` is (hidden,), `bv` is (1,).
+
+    Returns (logits (B, actions), values (B,)).
+    """
+    bsz, d_in = x.shape
+    assert bsz % block_b == 0, f"batch {bsz} must be a multiple of {block_b}"
+    n_act = wp.shape[1]
+    grid = (bsz // block_b,)
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    return pl.pallas_call(
+        _ppo_heads_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d_in), lambda i: (i, 0)),
+            full(w1),
+            full(b1),
+            full(w2),
+            full(b2),
+            full(wp),
+            full(bp),
+            full(wv),
+            full(bv),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_b, n_act), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bsz, n_act), x.dtype),
+            jax.ShapeDtypeStruct((bsz,), x.dtype),
+        ),
+        interpret=True,
+    )(x, w1, b1, w2, b2, wp, bp, wv, bv)

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: PPO clipped surrogate, forward + analytic backward.
+
+The surrogate is elementwise in `(logp_a, old_logp, adv)`, so it makes a
+clean `custom_vjp` pair of Pallas kernels: the forward computes
+`-min(r·A, clip(r)·A)` and the backward the branch-masked `-A·r` gradient —
+the same expression the Rust reference backprop uses (`algo/ppo.rs`), so
+the artifact and the fallback agree. Autodiff flows through the jnp
+log-softmax/gather around it; this kernel is where the branchy part lives.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fwd_kernel(lp_ref, olp_ref, adv_ref, clip_ref, o_ref):
+    ratio = jnp.exp(lp_ref[...] - olp_ref[...])
+    adv = adv_ref[...]
+    clip = clip_ref[0]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    o_ref[...] = -jnp.minimum(unclipped, clipped)
+
+
+def _bwd_kernel(lp_ref, olp_ref, adv_ref, clip_ref, o_ref):
+    ratio = jnp.exp(lp_ref[...] - olp_ref[...])
+    adv = adv_ref[...]
+    clip = clip_ref[0]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    o_ref[...] = jnp.where(unclipped <= clipped, -adv * ratio, 0.0)
+
+
+def _call(kernel, logp_a, old_logp, adv, clip, *, block_b=None):
+    (bsz,) = logp_a.shape
+    if block_b is None:
+        block_b = next(b for b in range(min(bsz, 256), 0, -1) if bsz % b == 0)
+    assert bsz % block_b == 0
+    vec = pl.BlockSpec((block_b,), lambda i: (i,))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // block_b,),
+        in_specs=[vec, vec, vec, scalar],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((bsz,), logp_a.dtype),
+        interpret=True,
+    )(logp_a, old_logp, adv, clip)
+
+
+@jax.custom_vjp
+def ppo_surrogate(logp_a, old_logp, adv, clip):
+    """Per-sample clipped surrogate loss (B,). `clip` is a (1,) array."""
+    return _call(_fwd_kernel, logp_a, old_logp, adv, clip)
+
+
+def _vjp_fwd(logp_a, old_logp, adv, clip):
+    out = _call(_fwd_kernel, logp_a, old_logp, adv, clip)
+    return out, (logp_a, old_logp, adv, clip)
+
+
+def _vjp_bwd(residuals, g):
+    logp_a, old_logp, adv, clip = residuals
+    d_lp = _call(_bwd_kernel, logp_a, old_logp, adv, clip)
+    return (g * d_lp, jnp.zeros_like(old_logp), jnp.zeros_like(adv),
+            jnp.zeros_like(clip))
+
+
+ppo_surrogate.defvjp(_vjp_fwd, _vjp_bwd)

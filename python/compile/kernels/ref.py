@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+Each function here defines the *semantics*; the Pallas kernels in this
+package must match these (float32 tolerance) under pytest + hypothesis
+sweeps, and the Rust reference implementations
+(`rust/src/algo/{nn,es,ppo}.rs`) implement the same math on the other side
+of the artifact boundary.
+
+Parameter layout contract (shared with Rust): a dense layer is `W` stored
+row-major as `(in, out)` followed by `b (out,)`; forward is `y = x @ W + b`.
+"""
+
+import jax.numpy as jnp
+
+
+def mlp3_tanh(x, w1, b1, w2, b2, w3, b3):
+    """3-layer MLP, tanh after every layer (walker policy)."""
+    h = jnp.tanh(x @ w1 + b1)
+    h = jnp.tanh(h @ w2 + b2)
+    return jnp.tanh(h @ w3 + b3)
+
+
+def ppo_heads(x, w1, b1, w2, b2, wp, bp, wv, bv):
+    """Shared tanh trunk with linear policy + value heads.
+
+    `wv` has shape (hidden,), `bv` is a scalar; returns (logits, values).
+    """
+    h = jnp.tanh(x @ w1 + b1)
+    h = jnp.tanh(h @ w2 + b2)
+    logits = h @ wp + bp
+    values = h @ wv + bv
+    return logits, values
+
+
+def es_combine(weights, noise, sigma):
+    """ES gradient estimate: g = -(wᵀE) / (pop·σ) (descent on -reward)."""
+    pop = weights.shape[0]
+    return -(weights @ noise) / (pop * sigma)
+
+
+def adam(theta, m, v, grad, t, lr, beta1=0.9, beta2=0.999, eps=1e-8):
+    """One Adam step; returns (theta', m', v'). `t` is the post-increment
+    step count (Rust increments before calling the artifact)."""
+    m2 = beta1 * m + (1.0 - beta1) * grad
+    v2 = beta2 * v + (1.0 - beta2) * grad * grad
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    return theta - lr * mhat / (jnp.sqrt(vhat) + eps), m2, v2
+
+
+def ppo_surrogate(logp_a, old_logp, adv, clip):
+    """Per-sample clipped surrogate loss: -min(r·A, clip(r)·A)."""
+    ratio = jnp.exp(logp_a - old_logp)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    return -jnp.minimum(unclipped, clipped)
+
+
+def ppo_surrogate_grad(logp_a, old_logp, adv, clip):
+    """d(surrogate)/d(logp_a): -A·r where the unclipped branch is active
+    (matches the Rust backprop in `algo/ppo.rs`)."""
+    ratio = jnp.exp(logp_a - old_logp)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip, 1.0 + clip) * adv
+    return jnp.where(unclipped <= clipped, -adv * ratio, 0.0)
+
+
+def centered_ranks(rewards):
+    """Centered-rank fitness shaping in [-0.5, 0.5] (Salimans et al.)."""
+    n = rewards.shape[0]
+    order = jnp.argsort(rewards, stable=True)
+    ranks = jnp.zeros_like(rewards).at[order].set(
+        jnp.arange(n, dtype=rewards.dtype)
+    )
+    return ranks / max(n - 1, 1) - 0.5

@@ -1,0 +1,191 @@
+"""L2: the JAX compute graphs Fiber's workloads execute through PJRT.
+
+Four graphs, each AOT-lowered to one HLO artifact by `aot.py`:
+
+* ``walker_act``  — batched walker-policy forward (Pallas ``mlp3_tanh``).
+* ``es_update``   — centered ranks → Pallas ``es_combine`` → Pallas
+  ``adam``; the ES master's whole model step in one fused artifact.
+* ``ppo_act``     — batched PPO logits+values (Pallas ``ppo_heads``).
+* ``ppo_update``  — clipped-surrogate loss (Pallas ``ppo_surrogate`` with
+  custom VJP) + value + entropy terms, ``jax.grad``, then Pallas ``adam``.
+
+The flat parameter layout is the Rust contract (`rust/src/algo/nn.rs`):
+per layer `W (in,out)` row-major then `b (out,)`; PPO appends the policy
+head then the value head. Shapes here must stay in sync with the constants
+in `nn.rs` — `test_model.py` locks them.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam as adam_k
+from .kernels import es_combine as esc_k
+from .kernels import mlp_fwd as mlp_k
+from .kernels import ppo_loss as pl_k
+from .kernels import ref
+
+# ---- architecture constants (mirror rust/src/algo/nn.rs) -----------------
+
+WALKER_SIZES = (24, 40, 40, 4)
+PPO_TRUNK = (32, 64, 64)
+PPO_ACTIONS = 4
+
+ES_POP = 256          # es_update artifact population
+ACT_BATCH = 64        # walker_act batch rows
+PPO_BATCH = 256       # ppo_act / ppo_update batch rows
+
+
+def param_count(sizes):
+    return sum(i * o + o for i, o in zip(sizes[:-1], sizes[1:]))
+
+
+WALKER_DIM = param_count(WALKER_SIZES)                       # 2804
+PPO_DIM = (
+    param_count(PPO_TRUNK)
+    + PPO_TRUNK[-1] * PPO_ACTIONS + PPO_ACTIONS
+    + PPO_TRUNK[-1] + 1
+)                                                            # 6597
+
+
+def unpack_mlp(flat, sizes):
+    """Split a flat vector into [(W, b), …] following the shared layout."""
+    out, off = [], 0
+    for i, o in zip(sizes[:-1], sizes[1:]):
+        w = flat[off:off + i * o].reshape(i, o)
+        off += i * o
+        b = flat[off:off + o]
+        off += o
+        out.append((w, b))
+    return out, off
+
+
+def unpack_ppo(flat):
+    trunk, off = unpack_mlp(flat, PPO_TRUNK)
+    h = PPO_TRUNK[-1]
+    wp = flat[off:off + h * PPO_ACTIONS].reshape(h, PPO_ACTIONS)
+    off += h * PPO_ACTIONS
+    bp = flat[off:off + PPO_ACTIONS]
+    off += PPO_ACTIONS
+    wv = flat[off:off + h]
+    off += h
+    bv = flat[off]
+    return trunk, wp, bp, wv, bv
+
+
+# ---- graphs ---------------------------------------------------------------
+
+
+def walker_act(params, obs):
+    """(params (2804,), obs (B,24)) → (actions (B,4),)."""
+    (w1, b1), (w2, b2), (w3, b3) = unpack_mlp(params, WALKER_SIZES)[0]
+    return (mlp_k.mlp3_tanh(obs, w1, b1, w2, b2, w3, b3),)
+
+
+def es_update(theta, noise, rewards, m, v, t, lr, sigma):
+    """One ES model step; returns (theta', m', v', grad_norm)."""
+    ranks = ref.centered_ranks(rewards)
+    grad = esc_k.es_combine(ranks, noise, sigma.reshape(1))
+    theta2, m2, v2 = adam_k.adam(theta, m, v, grad, t.reshape(1), lr.reshape(1))
+    return theta2, m2, v2, jnp.linalg.norm(grad)
+
+
+def ppo_forward_jnp(params, obs):
+    """Differentiable pure-jnp forward (used inside ppo_update's grad)."""
+    (trunk, wp, bp, wv, bv) = unpack_ppo(params)
+    (w1, b1), (w2, b2) = trunk
+    return ref.ppo_heads(obs, w1, b1, w2, b2, wp, bp, wv, bv)
+
+
+def ppo_act(params, obs):
+    """(params (6597,), obs (B,32)) → (logits (B,4), values (B,))."""
+    (trunk, wp, bp, wv, bv) = unpack_ppo(params)
+    (w1, b1), (w2, b2) = trunk
+    logits, values = mlp_k.ppo_heads(
+        obs, w1, b1, w2, b2, wp, bp, wv, bv.reshape(1)
+    )
+    return logits, values
+
+
+def ppo_losses(params, obs, actions, old_logp, adv, ret, clip, ent_coef, vf_coef):
+    """Scalar (total, pi_loss, v_loss, entropy) for one minibatch.
+
+    Matches the Rust reference in `algo/ppo.rs` term for term:
+    total = mean(pg) + vf·mean(½(v−R)²) − ent·mean(H).
+    """
+    logits, values = ppo_forward_jnp(params, obs)
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    logp_a = jnp.take_along_axis(lp, actions[:, None], axis=-1)[:, 0]
+    pg = pl_k.ppo_surrogate(logp_a, old_logp, adv, clip.reshape(1))
+    pi_loss = jnp.mean(pg)
+    entropy = jnp.mean(-jnp.sum(jnp.exp(lp) * lp, axis=-1))
+    v_loss = jnp.mean(0.5 * (values - ret) ** 2)
+    total = pi_loss + vf_coef * v_loss - ent_coef * entropy
+    return total, (pi_loss, v_loss, entropy)
+
+
+def ppo_update(params, m, v, t, obs, actions, old_logp, adv, ret,
+               lr, clip, ent_coef, vf_coef):
+    """One PPO minibatch Adam step.
+
+    Returns (params', m', v', pi_loss, v_loss, entropy).
+    """
+    grad_fn = jax.grad(ppo_losses, has_aux=True)
+    grads, (pi_loss, v_loss, entropy) = grad_fn(
+        params, obs, actions, old_logp, adv, ret, clip, ent_coef, vf_coef
+    )
+    params2, m2, v2 = adam_k.adam(
+        params, m, v, grads, t.reshape(1), lr.reshape(1)
+    )
+    return params2, m2, v2, pi_loss, v_loss, entropy
+
+
+# ---- example input signatures (shared by aot.py and the tests) ------------
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def signatures():
+    """name → (fn, [ShapeDtypeStruct inputs])."""
+    s = jax.ShapeDtypeStruct
+    return {
+        "walker_act": (
+            walker_act,
+            [s((WALKER_DIM,), F32), s((ACT_BATCH, WALKER_SIZES[0]), F32)],
+        ),
+        "es_update": (
+            es_update,
+            [
+                s((WALKER_DIM,), F32),
+                s((ES_POP, WALKER_DIM), F32),
+                s((ES_POP,), F32),
+                s((WALKER_DIM,), F32),
+                s((WALKER_DIM,), F32),
+                s((), F32),
+                s((), F32),
+                s((), F32),
+            ],
+        ),
+        "ppo_act": (
+            ppo_act,
+            [s((PPO_DIM,), F32), s((PPO_BATCH, PPO_TRUNK[0]), F32)],
+        ),
+        "ppo_update": (
+            ppo_update,
+            [
+                s((PPO_DIM,), F32),
+                s((PPO_DIM,), F32),
+                s((PPO_DIM,), F32),
+                s((), F32),
+                s((PPO_BATCH, PPO_TRUNK[0]), F32),
+                s((PPO_BATCH,), I32),
+                s((PPO_BATCH,), F32),
+                s((PPO_BATCH,), F32),
+                s((PPO_BATCH,), F32),
+                s((), F32),
+                s((), F32),
+                s((), F32),
+                s((), F32),
+            ],
+        ),
+    }

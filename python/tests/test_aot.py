@@ -1,0 +1,61 @@
+"""AOT path: HLO-text lowering + manifest emission."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_to_hlo_text_produces_parseable_module():
+    fn = lambda x, y: (x @ y + 2.0,)
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    hlo = aot.to_hlo_text(fn, [spec, spec])
+    assert "HloModule" in hlo
+    assert "f32[2,2]" in hlo
+    # return_tuple=True → the entry root is a tuple.
+    assert "tuple(" in hlo or ") tuple" in hlo
+
+
+def test_dtype_and_shape_formatting():
+    import numpy as np
+
+    assert aot.dtype_name(np.dtype(np.float32)) == "f32"
+    assert aot.dtype_name(np.dtype(np.int32)) == "i32"
+    assert aot.shape_str(()) == "scalar"
+    assert aot.shape_str((256, 32)) == "256x32"
+
+
+def test_full_aot_run_writes_manifest(tmp_path):
+    # Lower only the two small models to keep the test fast.
+    out = tmp_path / "artifacts"
+    env = dict(os.environ)
+    r = subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", str(out),
+         "--only", "walker_act"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(aot.__file__))),
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    assert r.returncode == 0, r.stderr
+    manifest = (out / "manifest.txt").read_text()
+    assert "model walker_act walker_act.hlo.txt" in manifest
+    assert f"input walker_act 0 f32 {model.WALKER_DIM}" in manifest
+    assert f"input walker_act 1 f32 {model.ACT_BATCH}x24" in manifest
+    assert f"output walker_act 0 f32 {model.ACT_BATCH}x4" in manifest
+    hlo = (out / "walker_act.hlo.txt").read_text()
+    assert "HloModule" in hlo
+
+
+def test_manifest_matches_eval_shapes():
+    # Every declared signature must lower without error through eval_shape
+    # (cheap structural check; the full lowering is covered above and by
+    # `make artifacts`).
+    for name, (fn, inputs) in model.signatures().items():
+        outs = jax.tree_util.tree_leaves(jax.eval_shape(fn, *inputs))
+        for o in outs:
+            assert o.dtype in (jnp.float32, jnp.int32), name

@@ -1,0 +1,193 @@
+"""L1 correctness: every Pallas kernel vs. its pure-jnp oracle.
+
+Hypothesis sweeps shapes and value ranges; `interpret=True` makes the
+kernels runnable on CPU while exercising the same program the TPU build
+would lower.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import adam as adam_k
+from compile.kernels import es_combine as esc_k
+from compile.kernels import mlp_fwd as mlp_k
+from compile.kernels import ppo_loss as pl_k
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---- mlp3_tanh -------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    batch_blocks=st.integers(1, 4),
+    block=st.sampled_from([16, 32, 64]),
+    d_in=st.integers(3, 24),
+    d_h=st.integers(4, 40),
+    d_out=st.integers(1, 8),
+    seed=st.integers(0, 2**31),
+)
+def test_mlp3_matches_ref(batch_blocks, block, d_in, d_h, d_out, seed):
+    bsz = batch_blocks * block
+    x = rand(seed, (bsz, d_in))
+    w1, b1 = rand(seed + 1, (d_in, d_h), 0.3), rand(seed + 2, (d_h,), 0.1)
+    w2, b2 = rand(seed + 3, (d_h, d_h), 0.3), rand(seed + 4, (d_h,), 0.1)
+    w3, b3 = rand(seed + 5, (d_h, d_out), 0.3), rand(seed + 6, (d_out,), 0.1)
+    got = mlp_k.mlp3_tanh(x, w1, b1, w2, b2, w3, b3, block_b=block)
+    want = ref.mlp3_tanh(x, w1, b1, w2, b2, w3, b3)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_mlp3_rejects_unaligned_batch():
+    x = rand(0, (50, 8))
+    w, b = rand(1, (8, 8)), rand(2, (8,))
+    with pytest.raises(AssertionError):
+        mlp_k.mlp3_tanh(x, w, b, w, b, w, b, block_b=64)
+
+
+# ---- ppo_heads -------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31),
+)
+def test_ppo_heads_matches_ref(blocks, seed):
+    bsz = blocks * 128
+    x = rand(seed, (bsz, 32))
+    w1, b1 = rand(seed + 1, (32, 64), 0.25), rand(seed + 2, (64,), 0.1)
+    w2, b2 = rand(seed + 3, (64, 64), 0.25), rand(seed + 4, (64,), 0.1)
+    wp, bp = rand(seed + 5, (64, 4), 0.1), rand(seed + 6, (4,), 0.01)
+    wv, bv = rand(seed + 7, (64,), 0.1), rand(seed + 8, (1,), 0.01)
+    logits, values = mlp_k.ppo_heads(x, w1, b1, w2, b2, wp, bp, wv, bv)
+    rl, rv = ref.ppo_heads(x, w1, b1, w2, b2, wp, bp, wv, bv[0])
+    np.testing.assert_allclose(logits, rl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(values, rv, rtol=1e-5, atol=1e-6)
+
+
+# ---- es_combine ------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    pop=st.sampled_from([8, 64, 256]),
+    dim=st.sampled_from([16, 701, 2804]),
+    sigma=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31),
+)
+def test_es_combine_matches_ref(pop, dim, sigma, seed):
+    w = rand(seed, (pop,))
+    e = rand(seed + 1, (pop, dim))
+    got = esc_k.es_combine(w, e, jnp.array([sigma], jnp.float32))
+    want = ref.es_combine(w, e, sigma)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-5)
+
+
+def test_es_combine_zero_weights_zero_grad():
+    e = rand(3, (16, 32))
+    got = esc_k.es_combine(jnp.zeros(16), e, jnp.array([0.1]))
+    np.testing.assert_array_equal(got, jnp.zeros(32))
+
+
+# ---- adam ------------------------------------------------------------------
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    dim=st.sampled_from([32, 701, 2804, 6597]),
+    t=st.integers(1, 500),
+    lr=st.floats(1e-5, 0.5),
+    seed=st.integers(0, 2**31),
+)
+def test_adam_matches_ref(dim, t, lr, seed):
+    theta = rand(seed, (dim,))
+    m = rand(seed + 1, (dim,), 0.1)
+    v = jnp.abs(rand(seed + 2, (dim,), 0.1))
+    g = rand(seed + 3, (dim,))
+    got = adam_k.adam(theta, m, v, g, jnp.array([float(t)]), jnp.array([lr], jnp.float32))
+    want = ref.adam(theta, m, v, g, float(t), lr)
+    # The kernel computes β^t in f32 (jnp.power) while the oracle uses
+    # python float64 — allow the resulting few-ulp drift on θ near zero.
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, rtol=2e-3, atol=1e-5)
+
+
+def test_adam_zero_grad_converges_to_no_update():
+    theta = rand(1, (64,))
+    # With g = 0 and zero moments the step must be ~0.
+    out, m2, v2 = adam_k.adam(
+        theta, jnp.zeros(64), jnp.zeros(64), jnp.zeros(64),
+        jnp.array([1.0]), jnp.array([0.1]),
+    )
+    np.testing.assert_allclose(out, theta, atol=1e-6)
+    np.testing.assert_array_equal(m2, jnp.zeros(64))
+
+
+# ---- ppo_surrogate ---------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    bsz=st.sampled_from([32, 128, 256]),
+    clip=st.floats(0.05, 0.4),
+    seed=st.integers(0, 2**31),
+)
+def test_surrogate_matches_ref(bsz, clip, seed):
+    lp = -jnp.abs(rand(seed, (bsz,))) - 0.05
+    olp = -jnp.abs(rand(seed + 1, (bsz,))) - 0.05
+    adv = rand(seed + 2, (bsz,))
+    got = pl_k.ppo_surrogate(lp, olp, adv, jnp.array([clip], jnp.float32))
+    want = ref.ppo_surrogate(lp, olp, adv, clip)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31), clip=st.floats(0.05, 0.4))
+def test_surrogate_vjp_matches_analytic(seed, clip):
+    bsz = 128
+    lp = -jnp.abs(rand(seed, (bsz,))) - 0.05
+    olp = -jnp.abs(rand(seed + 1, (bsz,))) - 0.05
+    adv = rand(seed + 2, (bsz,))
+    c = jnp.array([clip], jnp.float32)
+    grad = jax.grad(lambda l: pl_k.ppo_surrogate(l, olp, adv, c).sum())(lp)
+    want = ref.ppo_surrogate_grad(lp, olp, adv, clip)
+    np.testing.assert_allclose(grad, want, rtol=1e-5, atol=1e-6)
+
+
+def test_surrogate_clip_actually_clips():
+    # Large positive ratio with positive advantage must be clipped.
+    lp = jnp.array([0.0], jnp.float32)
+    olp = jnp.array([-2.0], jnp.float32)  # ratio = e^2 ≈ 7.4
+    adv = jnp.array([1.0], jnp.float32)
+    out = pl_k.ppo_surrogate(lp, olp, adv, jnp.array([0.2], jnp.float32))
+    np.testing.assert_allclose(out, [-1.2], rtol=1e-5)
+    # And the gradient through the clipped branch is zero.
+    g = jax.grad(
+        lambda l: pl_k.ppo_surrogate(l, olp, adv, jnp.array([0.2], jnp.float32)).sum()
+    )(lp)
+    np.testing.assert_allclose(g, [0.0], atol=1e-7)
+
+
+# ---- centered ranks --------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 300), seed=st.integers(0, 2**31))
+def test_centered_ranks_bounds_and_sum(n, seed):
+    r = rand(seed, (n,), 5.0)
+    cr = np.asarray(ref.centered_ranks(r))
+    assert cr.min() == pytest.approx(-0.5)
+    assert cr.max() == pytest.approx(0.5)
+    assert cr.sum() == pytest.approx(0.0, abs=1e-4)
+    # Order-preserving: argmax of rewards gets the top rank.
+    assert cr[np.argmax(np.asarray(r))] == pytest.approx(0.5)

@@ -1,0 +1,179 @@
+"""L2 correctness: graph semantics + the Rust interop contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+# ---- layout contract (locked against rust/src/algo/nn.rs) ------------------
+
+
+def test_param_counts_match_rust_constants():
+    assert model.WALKER_DIM == 2804
+    assert model.PPO_DIM == 6597
+
+
+def test_unpack_roundtrip_walker():
+    flat = jnp.arange(model.WALKER_DIM, dtype=jnp.float32)
+    layers, off = model.unpack_mlp(flat, model.WALKER_SIZES)
+    assert off == model.WALKER_DIM
+    # First weight element is flat[0]; layout is W then b per layer.
+    w1, b1 = layers[0]
+    assert w1.shape == (24, 40)
+    assert float(w1[0, 0]) == 0.0
+    assert float(w1[0, 1]) == 1.0          # row-major (in, out)
+    assert float(b1[0]) == 24 * 40         # bias follows its W
+
+
+def test_unpack_ppo_offsets():
+    flat = jnp.arange(model.PPO_DIM, dtype=jnp.float32)
+    trunk, wp, bp, wv, bv = model.unpack_ppo(flat)
+    assert trunk[0][0].shape == (32, 64)
+    assert wp.shape == (64, 4)
+    assert wv.shape == (64,)
+    assert float(bv) == model.PPO_DIM - 1  # value bias is the final scalar
+
+
+# ---- walker_act -------------------------------------------------------------
+
+
+def test_walker_act_shape_and_range():
+    params = rand(0, (model.WALKER_DIM,), 0.2)
+    obs = rand(1, (model.ACT_BATCH, 24))
+    (act,) = model.walker_act(params, obs)
+    assert act.shape == (model.ACT_BATCH, 4)
+    assert float(jnp.max(jnp.abs(act))) <= 1.0  # tanh output
+
+
+# ---- es_update --------------------------------------------------------------
+
+
+def es_inputs(seed, pop=model.ES_POP, dim=model.WALKER_DIM):
+    return dict(
+        theta=rand(seed, (dim,), 0.1),
+        noise=rand(seed + 1, (pop, dim)),
+        rewards=rand(seed + 2, (pop,), 5.0),
+        m=jnp.zeros(dim),
+        v=jnp.zeros(dim),
+        t=jnp.array(1.0),
+        lr=jnp.array(0.02),
+        sigma=jnp.array(0.05),
+    )
+
+
+def test_es_update_matches_composed_reference():
+    kw = es_inputs(10)
+    theta2, m2, v2, gnorm = model.es_update(**kw)
+    ranks = ref.centered_ranks(kw["rewards"])
+    grad = ref.es_combine(ranks, kw["noise"], float(kw["sigma"]))
+    t_ref, m_ref, v_ref = ref.adam(
+        kw["theta"], kw["m"], kw["v"], grad, 1.0, float(kw["lr"])
+    )
+    np.testing.assert_allclose(theta2, t_ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(m2, m_ref, rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(v2, v_ref, rtol=1e-4, atol=1e-7)
+    np.testing.assert_allclose(gnorm, jnp.linalg.norm(grad), rtol=1e-4)
+
+
+def test_es_update_moves_toward_better_candidates():
+    # Make reward = +noise·direction: the update must move θ along direction.
+    dim = model.WALKER_DIM
+    pop = model.ES_POP
+    direction = jnp.zeros(dim).at[7].set(1.0)
+    noise = rand(3, (pop, dim))
+    rewards = noise @ direction
+    kw = es_inputs(4)
+    kw["noise"], kw["rewards"] = noise, rewards
+    theta2, *_ = model.es_update(**kw)
+    delta = theta2 - kw["theta"]
+    assert float(delta[7]) > 0.0, "θ must move along the rewarded direction"
+    # ... and dominate the movement of unrelated coordinates on average.
+    assert abs(float(delta[7])) >= float(jnp.abs(delta).mean())
+
+
+# ---- ppo graphs -------------------------------------------------------------
+
+
+def test_ppo_act_matches_jnp_forward():
+    params = rand(5, (model.PPO_DIM,), 0.2)
+    obs = rand(6, (model.PPO_BATCH, 32))
+    logits, values = model.ppo_act(params, obs)
+    rl, rv = model.ppo_forward_jnp(params, obs)
+    np.testing.assert_allclose(logits, rl, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(values, rv, rtol=1e-5, atol=1e-6)
+
+
+def ppo_inputs(seed):
+    b = model.PPO_BATCH
+    key = jax.random.PRNGKey(seed + 100)
+    return dict(
+        params=rand(seed, (model.PPO_DIM,), 0.2),
+        m=jnp.zeros(model.PPO_DIM),
+        v=jnp.zeros(model.PPO_DIM),
+        t=jnp.array(1.0),
+        obs=rand(seed + 1, (b, 32)),
+        actions=jax.random.randint(key, (b,), 0, 4, jnp.int32),
+        old_logp=jnp.log(jnp.full((b,), 0.25, jnp.float32)),
+        adv=rand(seed + 2, (b,)),
+        ret=rand(seed + 3, (b,)),
+        lr=jnp.array(1e-2),
+        clip=jnp.array(0.2),
+        ent_coef=jnp.array(0.01),
+        vf_coef=jnp.array(0.5),
+    )
+
+
+def test_ppo_update_repeated_reduces_value_loss():
+    kw = ppo_inputs(7)
+    v_first = None
+    for step in range(1, 31):
+        kw["t"] = jnp.array(float(step))
+        params2, m2, v2, pi_l, v_l, ent = model.ppo_update(**kw)
+        kw["params"], kw["m"], kw["v"] = params2, m2, v2
+        if v_first is None:
+            v_first = float(v_l)
+    assert float(v_l) < v_first, f"value loss should fall: {v_first} -> {float(v_l)}"
+    assert float(ent) > 0.0
+
+
+def test_ppo_update_zero_lr_is_identity_on_params():
+    kw = ppo_inputs(8)
+    kw["lr"] = jnp.array(0.0)
+    params2, *_ = model.ppo_update(**kw)
+    np.testing.assert_allclose(params2, kw["params"], atol=1e-7)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 2**31))
+def test_ppo_losses_finite(seed):
+    kw = ppo_inputs(seed % 1000)
+    total, (pi_l, v_l, ent) = model.ppo_losses(
+        kw["params"], kw["obs"], kw["actions"], kw["old_logp"], kw["adv"],
+        kw["ret"], kw["clip"], kw["ent_coef"], kw["vf_coef"],
+    )
+    for x in (total, pi_l, v_l, ent):
+        assert bool(jnp.isfinite(x))
+    # Uniform policy entropy is ln(4) at init-ish scale; just check bounds.
+    assert 0.0 < float(ent) <= float(jnp.log(4.0)) + 1e-4
+
+
+# ---- signatures -------------------------------------------------------------
+
+
+def test_signatures_cover_all_models_and_eval():
+    sigs = model.signatures()
+    assert set(sigs) == {"walker_act", "es_update", "ppo_act", "ppo_update"}
+    for name, (fn, inputs) in sigs.items():
+        outs = jax.eval_shape(fn, *inputs)
+        assert len(jax.tree_util.tree_leaves(outs)) >= 1, name

@@ -1,0 +1,21 @@
+//! E2 / Fig 3b — ES scaling, fiber vs IPyParallel-like, 32→1024 workers.
+//!
+//! `cargo bench --bench es_scaling`. Real execution calibrates the fiber
+//! per-task dispatch cost and the walker rollout-length distribution; the
+//! virtual-time queueing model replays the paper's 50-iteration, pop-2048
+//! sweep (DESIGN.md §2: the clock is virtual, the protocol structure and
+//! all cost parameters are measured).
+
+use fiber::experiments::{calibrate_fiber_dispatch_ns, es_scaling_figure, ScalingConfig};
+
+fn main() {
+    let dispatch_ns = calibrate_fiber_dispatch_ns(4, 512).expect("calibrate");
+    println!("calibration: fiber dispatch+collect = {dispatch_ns} ns/task");
+    let cfg = ScalingConfig::default(); // pop 2048, 50 iterations
+    let table = es_scaling_figure(&cfg, dispatch_ns).expect("es scaling");
+    table.print();
+    println!(
+        "expected shape (paper): fiber improves monotonically to 1024 workers;\n\
+         ipyparallel degrades past 256 and fails (✗) at 1024."
+    );
+}

@@ -1,0 +1,159 @@
+//! E7 — supporting micro-benchmarks: the primitives under the figures.
+//!
+//! `cargo bench --bench micro`. Rows: in-proc queue throughput, RPC
+//! round-trip latency, pipe round-trip, manager KV ops, pool map overhead
+//! per task, pending-table ops, PJRT execute latency (when artifacts are
+//! built).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fiber::api::manager::{Manager, ManagerClient};
+use fiber::api::pool::Pool;
+use fiber::api::queue::{FiberQueue, QueueHub};
+use fiber::baselines::exec::register_bench_tasks;
+use fiber::benchkit::{measure, Table};
+use fiber::comms::chan;
+use fiber::comms::rpc::{RpcClient, RpcServer};
+use fiber::coordinator::pending::PendingTable;
+use fiber::coordinator::pool_server::WorkerId;
+use fiber::coordinator::task::{Task, TaskId};
+use fiber::runtime::{HostTensor, Runtime};
+use fiber::wire;
+
+fn main() {
+    register_bench_tasks();
+    let mut t = Table::new("E7 — micro-benchmarks", "operation", vec!["per-op".into()]);
+
+    // In-proc channel throughput (1M sends+recvs).
+    {
+        let (tx, rx) = chan::unbounded();
+        let n = 200_000;
+        let stats = measure(1, 3, || {
+            for i in 0..n {
+                tx.send(i).unwrap();
+            }
+            for _ in 0..n {
+                rx.recv().unwrap();
+            }
+        });
+        t.add_row("chan send+recv", vec![Some(stats.mean() / n as f64)]);
+    }
+
+    // RPC round-trip.
+    {
+        let srv = RpcServer::bind("127.0.0.1:0", Arc::new(|_t, p| Ok(p.to_vec()))).unwrap();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        let n = 2_000;
+        let stats = measure(1, 3, || {
+            for _ in 0..n {
+                cli.call(1, b"x").unwrap();
+            }
+        });
+        t.add_row("tcp rpc round-trip", vec![Some(stats.mean() / n as f64)]);
+    }
+
+    // Distributed queue put+get over RPC.
+    {
+        let hub = QueueHub::new();
+        let srv = hub.serve_rpc("127.0.0.1:0").unwrap();
+        let q: FiberQueue<u64> = FiberQueue::connect(srv.local_addr(), "bench").unwrap();
+        let n = 1_000;
+        let stats = measure(1, 3, || {
+            for i in 0..n {
+                q.put(&i).unwrap();
+            }
+            for _ in 0..n {
+                q.get(Duration::from_secs(1)).unwrap();
+            }
+        });
+        t.add_row("remote queue put+get", vec![Some(stats.mean() / n as f64)]);
+    }
+
+    // Manager KV set+get (remote).
+    {
+        let mgr = Manager::new();
+        let srv = mgr.serve_rpc("127.0.0.1:0").unwrap();
+        let cli = ManagerClient::connect(srv.local_addr()).unwrap();
+        let n = 1_000;
+        let stats = measure(1, 3, || {
+            for i in 0..n {
+                cli.kv_set("k", &(i as u64)).unwrap();
+                let _: Option<u64> = cli.kv_get("k").unwrap();
+            }
+        });
+        t.add_row("manager kv set+get", vec![Some(stats.mean() / n as f64)]);
+    }
+
+    // Pool map overhead per task (zero-work tasks, chunked + unchunked).
+    {
+        let pool = Pool::new(4).unwrap();
+        let n = 2_000usize;
+        let items: Vec<Vec<u8>> = (0..n).map(|i| wire::to_bytes(&(i as u64))).collect();
+        let stats = measure(1, 3, || {
+            pool.map_raw_chunked("bench.echo", items.clone(), 1).unwrap();
+        });
+        t.add_row("pool map (chunksize 1)", vec![Some(stats.mean() / n as f64)]);
+        let stats = measure(1, 3, || {
+            pool.map_raw_chunked("bench.echo", items.clone(), 64).unwrap();
+        });
+        t.add_row("pool map (chunksize 64)", vec![Some(stats.mean() / n as f64)]);
+    }
+
+    // Pending table ops.
+    {
+        let n = 100_000u64;
+        let stats = measure(1, 3, || {
+            let mut p = PendingTable::new();
+            for i in 0..n {
+                p.insert(
+                    WorkerId(i % 64),
+                    Task {
+                        id: TaskId(i),
+                        map_id: 0,
+                        index: i,
+                        fn_name: String::new(),
+                        payload: vec![],
+                    },
+                );
+            }
+            for i in 0..n {
+                p.complete(TaskId(i));
+            }
+        });
+        t.add_row("pending insert+complete", vec![Some(stats.mean() / n as f64)]);
+    }
+
+    // PJRT execute (ppo_act) when artifacts exist.
+    if let Ok(rt) = Runtime::load_dir("artifacts") {
+        let mut rng = fiber::util::Rng::new(1);
+        let params: Vec<f32> = (0..6597).map(|_| rng.f32() * 0.1).collect();
+        let obs: Vec<f32> = (0..256 * 32).map(|_| rng.f32()).collect();
+        let inputs = || {
+            vec![
+                HostTensor::f32(&[6597], params.clone()).unwrap(),
+                HostTensor::f32(&[256, 32], obs.clone()).unwrap(),
+            ]
+        };
+        rt.run("ppo_act", inputs()).unwrap();
+        let stats = measure(2, 10, || {
+            rt.run("ppo_act", inputs()).unwrap();
+        });
+        t.add_row("pjrt ppo_act (B=256)", vec![Some(stats.mean())]);
+        let walker_inputs = || {
+            vec![
+                HostTensor::f32(&[2804], params[..2804].to_vec()).unwrap(),
+                HostTensor::f32(&[64, 24], obs[..64 * 24].to_vec()).unwrap(),
+            ]
+        };
+        rt.run("walker_act", walker_inputs()).unwrap();
+        let stats = measure(2, 10, || {
+            rt.run("walker_act", walker_inputs()).unwrap();
+        });
+        t.add_row("pjrt walker_act (B=64)", vec![Some(stats.mean())]);
+    } else {
+        t.add_row("pjrt (artifacts missing)", vec![None]);
+    }
+
+    t.print();
+}

@@ -1,0 +1,22 @@
+//! E1 / Fig 3a — framework overhead.
+//!
+//! `cargo bench --bench overhead`. Prints the paper's table: mean time to
+//! finish a 1-second batch of tasks at durations {1 s, 100 ms, 10 ms,
+//! 1 ms} across multiprocessing-like, fiber, IPyParallel-like and
+//! Spark-like executors (5 workers each). The optimal time is 1.00 s; the
+//! delta is the framework's overhead.
+
+use fiber::experiments::{calibrate_fiber_dispatch_ns, overhead_experiment, OverheadConfig};
+
+fn main() {
+    // `cargo bench -- --quick` halves the sampling.
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = OverheadConfig {
+        samples: if quick { 1 } else { 3 },
+        ..Default::default()
+    };
+    let table = overhead_experiment(&cfg).expect("overhead experiment");
+    table.print();
+    let ns = calibrate_fiber_dispatch_ns(4, 512).expect("calibration");
+    println!("calibration: fiber per-task dispatch+collect = {ns} ns (feeds Fig 3b sim)");
+}

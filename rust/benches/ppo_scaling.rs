@@ -1,0 +1,84 @@
+//! E3 / Fig 3c — PPO scaling, multiprocessing (≤32, one machine) vs fiber
+//! (8→256 workers).
+//!
+//! `cargo bench --bench ppo_scaling`. The Breakout step cost is measured
+//! on the real env; the leader's per-worker scatter/gather cost is
+//! measured on the real `VecEnv` pipe path; the model-step cost is
+//! measured through the real `ppo_update` PJRT artifact when present.
+
+use std::sync::Arc;
+
+use fiber::algo::ppo::{MiniBatch, PpoConfig, PpoTrainer, ARTIFACT_BATCH};
+use fiber::algo::vec_env::VecEnv;
+use fiber::api::queue::QueueHub;
+use fiber::cluster::LocalBackend;
+use fiber::experiments::{ppo_scaling_figure, ScalingConfig};
+use fiber::runtime::Runtime;
+use fiber::util::{Rng, Stopwatch};
+
+/// Measure the leader-side per-worker cost of one vectorized step.
+fn measure_sync_per_worker_ns() -> u64 {
+    let hub = QueueHub::new();
+    let be = LocalBackend::new();
+    let n_envs = 8;
+    let ve = VecEnv::breakout(&be, &hub, n_envs, 4).expect("vecenv");
+    ve.reset(1).expect("reset");
+    let actions = vec![0usize; n_envs];
+    for _ in 0..50 {
+        ve.step(&actions).unwrap();
+    }
+    let sw = Stopwatch::start();
+    let n = 500;
+    for _ in 0..n {
+        ve.step(&actions).unwrap();
+    }
+    let per_step = sw.elapsed_ns() / n;
+    ve.close();
+    // Subtract the env compute itself to isolate the communication cost.
+    let env_ns = fiber::experiments::scaling::measure_breakout_step_ns(20_000) as u64;
+    (per_step.saturating_sub(env_ns * n_envs as u64)) / n_envs as u64
+}
+
+/// Measure the real model-step (one ppo_update artifact call), else fall
+/// back to a representative constant.
+fn measure_model_step_ns() -> u64 {
+    let Ok(rt) = Runtime::load_dir("artifacts") else {
+        println!("no artifacts; using 30 ms model step (1080 Ti-representative)");
+        return 30_000_000;
+    };
+    let mut tr = PpoTrainer::new(PpoConfig::default());
+    let mut rng = Rng::new(1);
+    let b = ARTIFACT_BATCH;
+    let mb = MiniBatch {
+        obs: (0..b * 32).map(|_| rng.f32()).collect(),
+        actions: (0..b).map(|_| rng.below(4) as i32).collect(),
+        old_logp: vec![-1.4; b],
+        adv: (0..b).map(|_| rng.f32() - 0.5).collect(),
+        ret: (0..b).map(|_| rng.f32()).collect(),
+    };
+    tr.update_minibatch(&mb, Some(&rt)).expect("warm");
+    let sw = Stopwatch::start();
+    let n = 20;
+    for _ in 0..n {
+        tr.update_minibatch(&mb, Some(&rt)).expect("update");
+    }
+    // A PPO iteration runs epochs × (batch/minibatch) updates; scale to the
+    // default 3 epochs × 4 minibatches.
+    (sw.elapsed_ns() / n) * 12
+}
+
+fn main() {
+    let sync_ns = measure_sync_per_worker_ns();
+    println!("calibration: leader sync cost = {sync_ns} ns/worker/step");
+    let model_step_ns = measure_model_step_ns();
+    println!("calibration: model step = {:.2} ms/iteration", model_step_ns as f64 / 1e6);
+    let cfg = ScalingConfig::default(); // 10 M frames
+    let table = ppo_scaling_figure(&cfg, sync_ns.max(50), model_step_ns).expect("ppo scaling");
+    table.print();
+    println!(
+        "expected shape (paper): multiprocessing capped at 32 (one machine, ✗ beyond);\n\
+         fiber from 64 workers beats the best single-machine result; fiber@256 less\n\
+         than half of fiber@8; ≤3% fiber-vs-mp gap at matched small worker counts."
+    );
+    let _ = Arc::new(());
+}

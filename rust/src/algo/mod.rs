@@ -1,0 +1,28 @@
+//! The paper's workload algorithms, built **on the Fiber API**.
+//!
+//! * [`nn`] — a minimal MLP whose flat parameter layout matches the L2 JAX
+//!   models bit-for-bit (`python/compile/model.py`), so workers can run
+//!   policies in pure Rust while the leader updates parameters through the
+//!   AOT-compiled artifacts.
+//! * [`noise`] — the shared noise table of Salimans et al. (2017): every
+//!   process regenerates the same table from a seed, so only *indices* move
+//!   over the network.
+//! * [`es`] — Evolution Strategies over a `fiber::Pool` (code example 2 in
+//!   the paper): stateless rollouts fan out to workers, the parameter
+//!   update runs through the `es_update` PJRT artifact.
+//! * [`vec_env`] — vectorized environments over pipes to fixed worker
+//!   processes (ordered, stateful — the pipe pattern from code example 3).
+//! * [`ppo`] — PPO with GAE; action selection and the clipped-surrogate
+//!   Adam update both run through PJRT artifacts (`ppo_act`, `ppo_update`).
+
+pub mod es;
+pub mod nn;
+pub mod noise;
+pub mod ppo;
+pub mod vec_env;
+
+pub use es::{EsConfig, EsMaster};
+pub use nn::{Mlp, PpoNet};
+pub use noise::NoiseTable;
+pub use ppo::{PpoConfig, PpoTrainer};
+pub use vec_env::VecEnv;

@@ -1,0 +1,303 @@
+//! Pure-Rust MLP forward passes with a flat parameter layout shared with
+//! the JAX models.
+//!
+//! Layout contract (must match `python/compile/model.py`): parameters are
+//! concatenated layer by layer as `W` then `b`, with `W` stored row-major
+//! as `(in, out)` — `flat[i*out + j] = W[i][j]`, forward `y = x·W + b`.
+//! `python/tests/test_model.py` and the Rust integration tests check the
+//! two implementations agree numerically on random inputs.
+
+use crate::util::Rng;
+
+/// Walker policy architecture: 24 → 40 → 40 → 4, tanh everywhere.
+pub const WALKER_SIZES: [usize; 4] = [24, 40, 40, 4];
+
+/// PPO trunk: 32 → 64 → 64, with a 4-logit policy head + 1 value head.
+pub const PPO_TRUNK: [usize; 3] = [32, 64, 64];
+pub const PPO_ACTIONS: usize = 4;
+
+/// A dense tanh MLP (tanh on the output too — torque actions in [-1, 1]).
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub sizes: Vec<usize>,
+    /// Flat parameters in the shared layout.
+    pub params: Vec<f32>,
+}
+
+/// Number of parameters for a layer-size list.
+pub fn param_count(sizes: &[usize]) -> usize {
+    sizes.windows(2).map(|w| w[0] * w[1] + w[1]).sum()
+}
+
+impl Mlp {
+    /// Zero-initialised network.
+    pub fn zeros(sizes: &[usize]) -> Self {
+        Self {
+            sizes: sizes.to_vec(),
+            params: vec![0.0; param_count(sizes)],
+        }
+    }
+
+    /// He-style random init (matching model.py's initializer scale).
+    pub fn init(sizes: &[usize], rng: &mut Rng) -> Self {
+        let mut params = Vec::with_capacity(param_count(sizes));
+        for w in sizes.windows(2) {
+            let (fan_in, fan_out) = (w[0], w[1]);
+            let scale = (2.0 / fan_in as f64).sqrt();
+            for _ in 0..fan_in * fan_out {
+                params.push((rng.normal() * scale) as f32);
+            }
+            for _ in 0..fan_out {
+                params.push(0.0);
+            }
+        }
+        Self {
+            sizes: sizes.to_vec(),
+            params,
+        }
+    }
+
+    /// The walker policy network.
+    pub fn walker_policy(rng: &mut Rng) -> Self {
+        Self::init(&WALKER_SIZES, rng)
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Forward pass for a single observation.
+    pub fn forward(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.sizes[0], "input dim");
+        let mut h = x.to_vec();
+        let mut off = 0;
+        for (li, w) in self.sizes.windows(2).enumerate() {
+            let (n_in, n_out) = (w[0], w[1]);
+            let wmat = &self.params[off..off + n_in * n_out];
+            let bias = &self.params[off + n_in * n_out..off + n_in * n_out + n_out];
+            off += n_in * n_out + n_out;
+            let mut out = bias.to_vec();
+            for (i, &xi) in h.iter().enumerate() {
+                if xi != 0.0 {
+                    let row = &wmat[i * n_out..(i + 1) * n_out];
+                    for (o, &wv) in out.iter_mut().zip(row) {
+                        *o += xi * wv;
+                    }
+                }
+            }
+            let last = li == self.sizes.len() - 2;
+            for o in out.iter_mut() {
+                *o = o.tanh();
+            }
+            let _ = last; // tanh on every layer, including output
+            h = out;
+        }
+        h
+    }
+
+    /// Apply a perturbation: `self.params + sigma * noise`.
+    pub fn perturbed(&self, noise: &[f32], sigma: f32) -> Mlp {
+        assert_eq!(noise.len(), self.params.len());
+        let params = self
+            .params
+            .iter()
+            .zip(noise)
+            .map(|(p, n)| p + sigma * n)
+            .collect();
+        Mlp {
+            sizes: self.sizes.clone(),
+            params,
+        }
+    }
+}
+
+/// The PPO network: shared tanh trunk, linear policy logits + value head.
+///
+/// Flat layout: trunk W1,b1,W2,b2 then policy Wp,bp then value Wv,bv.
+#[derive(Clone, Debug)]
+pub struct PpoNet {
+    pub params: Vec<f32>,
+}
+
+/// PPO parameter count (trunk + heads).
+pub fn ppo_param_count() -> usize {
+    let t = &PPO_TRUNK;
+    let trunk: usize = t.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+    let h = *t.last().unwrap();
+    trunk + (h * PPO_ACTIONS + PPO_ACTIONS) + (h + 1)
+}
+
+impl PpoNet {
+    pub fn init(rng: &mut Rng) -> Self {
+        let mut params = Vec::with_capacity(ppo_param_count());
+        for w in PPO_TRUNK.windows(2) {
+            let scale = (2.0 / w[0] as f64).sqrt();
+            for _ in 0..w[0] * w[1] {
+                params.push((rng.normal() * scale) as f32);
+            }
+            for _ in 0..w[1] {
+                params.push(0.0);
+            }
+        }
+        let h = *PPO_TRUNK.last().unwrap();
+        // Small policy head (standard PPO init), tiny value head.
+        let scale = 0.01;
+        for _ in 0..h * PPO_ACTIONS {
+            params.push((rng.normal() * scale) as f32);
+        }
+        for _ in 0..PPO_ACTIONS {
+            params.push(0.0);
+        }
+        for _ in 0..h {
+            params.push((rng.normal() * 0.1) as f32);
+        }
+        params.push(0.0);
+        Self { params }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Forward one observation → (logits, value). Reference implementation
+    /// for tests; the hot path uses the `ppo_act` artifact.
+    pub fn forward(&self, x: &[f32]) -> (Vec<f32>, f32) {
+        assert_eq!(x.len(), PPO_TRUNK[0]);
+        let mut h = x.to_vec();
+        let mut off = 0;
+        for w in PPO_TRUNK.windows(2) {
+            let (n_in, n_out) = (w[0], w[1]);
+            let wmat = &self.params[off..off + n_in * n_out];
+            let bias = &self.params[off + n_in * n_out..off + n_in * n_out + n_out];
+            off += n_in * n_out + n_out;
+            let mut out = bias.to_vec();
+            for (i, &xi) in h.iter().enumerate() {
+                let row = &wmat[i * n_out..(i + 1) * n_out];
+                for (o, &wv) in out.iter_mut().zip(row) {
+                    *o += xi * wv;
+                }
+            }
+            for o in out.iter_mut() {
+                *o = o.tanh();
+            }
+            h = out;
+        }
+        let hn = h.len();
+        let wp = &self.params[off..off + hn * PPO_ACTIONS];
+        let bp = &self.params[off + hn * PPO_ACTIONS..off + hn * PPO_ACTIONS + PPO_ACTIONS];
+        off += hn * PPO_ACTIONS + PPO_ACTIONS;
+        let mut logits = bp.to_vec();
+        for (i, &hi) in h.iter().enumerate() {
+            let row = &wp[i * PPO_ACTIONS..(i + 1) * PPO_ACTIONS];
+            for (l, &wv) in logits.iter_mut().zip(row) {
+                *l += hi * wv;
+            }
+        }
+        let wv = &self.params[off..off + hn];
+        let bv = self.params[off + hn];
+        let value = h.iter().zip(wv).map(|(a, b)| a * b).sum::<f32>() + bv;
+        (logits, value)
+    }
+}
+
+/// Numerically-stable log-softmax.
+pub fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = logits.iter().map(|l| (l - m).exp()).sum::<f32>().ln() + m;
+    logits.iter().map(|l| l - lse).collect()
+}
+
+/// Sample from categorical logits.
+pub fn sample_logits(logits: &[f32], rng: &mut Rng) -> usize {
+    let lp = log_softmax(logits);
+    let u = rng.f64() as f32;
+    let mut acc = 0.0;
+    for (i, l) in lp.iter().enumerate() {
+        acc += l.exp();
+        if u < acc {
+            return i;
+        }
+    }
+    lp.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_count_walker() {
+        assert_eq!(param_count(&WALKER_SIZES), 24 * 40 + 40 + 40 * 40 + 40 + 40 * 4 + 4);
+        assert_eq!(param_count(&WALKER_SIZES), 2804);
+    }
+
+    #[test]
+    fn ppo_param_count_value() {
+        assert_eq!(
+            ppo_param_count(),
+            32 * 64 + 64 + 64 * 64 + 64 + 64 * 4 + 4 + 64 + 1
+        );
+        assert_eq!(ppo_param_count(), 6597);
+    }
+
+    #[test]
+    fn forward_bounded_by_tanh() {
+        let mut rng = Rng::new(1);
+        let net = Mlp::walker_policy(&mut rng);
+        let x: Vec<f32> = (0..24).map(|i| (i as f32 * 0.37).sin()).collect();
+        let y = net.forward(&x);
+        assert_eq!(y.len(), 4);
+        for v in &y {
+            assert!(v.abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn zero_net_outputs_zero() {
+        let net = Mlp::zeros(&WALKER_SIZES);
+        let y = net.forward(&vec![1.0; 24]);
+        assert!(y.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn perturbation_changes_output() {
+        let mut rng = Rng::new(2);
+        let net = Mlp::walker_policy(&mut rng);
+        let noise: Vec<f32> = (0..net.n_params()).map(|i| ((i * 31) % 7) as f32 - 3.0).collect();
+        let net2 = net.perturbed(&noise, 0.1);
+        let x = vec![0.3; 24];
+        assert_ne!(net.forward(&x), net2.forward(&x));
+        // sigma = 0 is the identity.
+        let net3 = net.perturbed(&noise, 0.0);
+        assert_eq!(net.forward(&x), net3.forward(&x));
+    }
+
+    #[test]
+    fn ppo_forward_shapes() {
+        let mut rng = Rng::new(3);
+        let net = PpoNet::init(&mut rng);
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 0.1).cos()).collect();
+        let (logits, v) = net.forward(&x);
+        assert_eq!(logits.len(), 4);
+        assert!(v.is_finite());
+    }
+
+    #[test]
+    fn log_softmax_normalises() {
+        let lp = log_softmax(&[1.0, 2.0, 3.0]);
+        let total: f32 = lp.iter().map(|l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(lp.iter().all(|&l| l <= 0.0));
+    }
+
+    #[test]
+    fn sample_logits_respects_distribution() {
+        let mut rng = Rng::new(4);
+        // Strongly peaked logits: argmax should dominate.
+        let mut counts = [0usize; 3];
+        for _ in 0..1000 {
+            counts[sample_logits(&[0.0, 5.0, 0.0], &mut rng)] += 1;
+        }
+        assert!(counts[1] > 950, "{counts:?}");
+    }
+}

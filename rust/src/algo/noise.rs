@@ -1,0 +1,128 @@
+//! The shared noise table (Salimans et al. 2017).
+//!
+//! ES needs a fresh Gaussian perturbation per candidate per iteration;
+//! shipping those vectors over the network would swamp it. The trick the
+//! paper reuses: every process regenerates an identical table of N(0,1)
+//! samples from a shared seed, and only *offsets* into the table travel.
+//! The paper shares one table per 8 workers; here a table is regenerated
+//! per process from `(seed, size)` via the counter-based generator in
+//! [`crate::util::rng`], so it is identical everywhere without any
+//! communication at all.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use crate::util::rng::counter_f32_normal;
+use crate::util::Rng;
+
+/// A block of deterministic N(0,1) samples.
+pub struct NoiseTable {
+    seed: u64,
+    data: Vec<f32>,
+}
+
+impl NoiseTable {
+    /// Generate a table of `size` samples from `seed`.
+    pub fn new(seed: u64, size: usize) -> Self {
+        let data = (0..size as u64)
+            .map(|i| counter_f32_normal(seed, i))
+            .collect();
+        Self { seed, data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// A noise vector of `dim` values starting at `offset` (wraps around).
+    pub fn slice(&self, offset: usize, dim: usize) -> Vec<f32> {
+        (0..dim)
+            .map(|i| self.data[(offset + i) % self.data.len()])
+            .collect()
+    }
+
+    /// Random offset such that indexing stays cache-friendly.
+    pub fn sample_offset(&self, rng: &mut Rng, dim: usize) -> usize {
+        rng.below(self.data.len().saturating_sub(dim).max(1))
+    }
+}
+
+static TABLES: Lazy<Mutex<HashMap<(u64, usize), Arc<NoiseTable>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Process-wide shared table: first caller generates, the rest reuse — the
+/// "one table per 8 workers" sharing, at per-process granularity. Worker
+/// tasks call this with the `(seed, size)` carried in their payload.
+pub fn shared_table(seed: u64, size: usize) -> Arc<NoiseTable> {
+    let mut tables = TABLES.lock().unwrap();
+    tables
+        .entry((seed, size))
+        .or_insert_with(|| Arc::new(NoiseTable::new(seed, size)))
+        .clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_across_instances() {
+        let a = NoiseTable::new(42, 10_000);
+        let b = NoiseTable::new(42, 10_000);
+        assert_eq!(a.slice(123, 64), b.slice(123, 64));
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = NoiseTable::new(1, 1000);
+        let b = NoiseTable::new(2, 1000);
+        assert_ne!(a.slice(0, 32), b.slice(0, 32));
+    }
+
+    #[test]
+    fn slice_wraps() {
+        let t = NoiseTable::new(7, 100);
+        let s = t.slice(95, 10);
+        assert_eq!(s[5], t.slice(0, 1)[0]);
+    }
+
+    #[test]
+    fn statistics_are_standard_normal() {
+        let t = NoiseTable::new(9, 200_000);
+        let mean: f64 = t.data.iter().map(|&x| x as f64).sum::<f64>() / t.len() as f64;
+        let var: f64 =
+            t.data.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / t.len() as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn shared_table_reuses_instances() {
+        let a = shared_table(5, 1000);
+        let b = shared_table(5, 1000);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = shared_table(6, 1000);
+        assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn offsets_leave_room_for_dim() {
+        let t = NoiseTable::new(3, 5000);
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let off = t.sample_offset(&mut rng, 2804);
+            assert!(off + 0 < 5000);
+            assert!(off <= 5000 - 2804);
+        }
+    }
+}

@@ -1,0 +1,309 @@
+//! Vectorized environments over pipes to fixed worker processes.
+//!
+//! The pipe pattern from the paper's code example 3: "Each simulator is
+//! mapped to a fixed process so that worker processes can maintain their
+//! internal state after each step." Each worker job hosts a block of
+//! environments; the leader scatters actions and gathers transitions every
+//! step, in order, over [`crate::api::pipe`].
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::api::pipe::{Pipe, PipeEnd};
+use crate::api::process::FiberProcess;
+use crate::api::queue::QueueHub;
+use crate::cluster::ClusterBackend;
+use crate::envs::{Action, Breakout, Env};
+use crate::wire::{self, Decode, Encode};
+
+/// Leader → worker command.
+enum Cmd {
+    /// Reset all envs in this worker with the given base seed.
+    Reset(u64),
+    /// Step each env with its action index.
+    Step(Vec<u32>),
+    /// Shut down.
+    Close,
+}
+
+impl Encode for Cmd {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Cmd::Reset(seed) => {
+                buf.push(0);
+                seed.encode(buf);
+            }
+            Cmd::Step(actions) => {
+                buf.push(1);
+                actions.encode(buf);
+            }
+            Cmd::Close => buf.push(2),
+        }
+    }
+}
+
+impl Decode for Cmd {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        match u8::decode(r)? {
+            0 => Ok(Cmd::Reset(u64::decode(r)?)),
+            1 => Ok(Cmd::Step(Vec::<u32>::decode(r)?)),
+            2 => Ok(Cmd::Close),
+            t => Err(wire::WireError::BadTag(t as u32)),
+        }
+    }
+}
+
+/// Worker → leader reply: per-env (obs, reward, done) after auto-reset.
+type Reply = (Vec<Vec<f32>>, Vec<f32>, Vec<u8>);
+
+/// A block of Breakout environments spread over worker processes.
+pub struct VecEnv {
+    pipes: Vec<PipeEnd<Cmd, Reply>>,
+    workers: Vec<FiberProcess>,
+    n_envs: usize,
+    per_worker: Vec<usize>,
+    timeout: Duration,
+}
+
+impl VecEnv {
+    /// `n_envs` environments over `n_workers` worker jobs on `backend`.
+    pub fn breakout(
+        backend: &dyn ClusterBackend,
+        hub: &Arc<QueueHub>,
+        n_envs: usize,
+        n_workers: usize,
+    ) -> Result<VecEnv> {
+        let n_workers = n_workers.clamp(1, n_envs.max(1));
+        let base = n_envs / n_workers;
+        let extra = n_envs % n_workers;
+        let mut pipes = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        let mut per_worker = Vec::with_capacity(n_workers);
+        // Unique instance id: pipe names must not collide when several
+        // VecEnvs (sequential or concurrent) share one hub.
+        static INSTANCE: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let inst = INSTANCE.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        for w in 0..n_workers {
+            let k = base + usize::from(w < extra);
+            per_worker.push(k);
+            let name = format!("vecenv-{inst}-{w}");
+            let (leader_end, worker_end) = Pipe::local::<Cmd, Reply>(hub, &name);
+            pipes.push(leader_end);
+            let proc = FiberProcess::spawn(backend, name, move |token| {
+                env_worker_loop(worker_end, k, &token)
+            })?;
+            workers.push(proc);
+        }
+        Ok(VecEnv {
+            pipes,
+            workers,
+            n_envs,
+            per_worker,
+            timeout: Duration::from_secs(30),
+        })
+    }
+
+    pub fn n_envs(&self) -> usize {
+        self.n_envs
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Reset every environment; returns the initial observations.
+    pub fn reset(&self, seed: u64) -> Result<Vec<Vec<f32>>> {
+        for (w, pipe) in self.pipes.iter().enumerate() {
+            pipe.send(&Cmd::Reset(seed.wrapping_add(w as u64 * 9973)))?;
+        }
+        let mut obs = Vec::with_capacity(self.n_envs);
+        for pipe in &self.pipes {
+            let (o, _, _) = pipe
+                .recv(self.timeout)?
+                .context("env worker dropped during reset")?;
+            obs.extend(o);
+        }
+        Ok(obs)
+    }
+
+    /// Step every environment. Done envs auto-reset (obs is the new
+    /// episode's first observation; `done=1` flags the boundary).
+    pub fn step(&self, actions: &[usize]) -> Result<(Vec<Vec<f32>>, Vec<f32>, Vec<u8>)> {
+        anyhow::ensure!(actions.len() == self.n_envs, "need one action per env");
+        let mut start = 0;
+        for (w, pipe) in self.pipes.iter().enumerate() {
+            let k = self.per_worker[w];
+            let slice: Vec<u32> = actions[start..start + k].iter().map(|&a| a as u32).collect();
+            pipe.send(&Cmd::Step(slice))?;
+            start += k;
+        }
+        let mut obs = Vec::with_capacity(self.n_envs);
+        let mut rewards = Vec::with_capacity(self.n_envs);
+        let mut dones = Vec::with_capacity(self.n_envs);
+        for pipe in &self.pipes {
+            let (o, r, d) = pipe
+                .recv(self.timeout)?
+                .context("env worker dropped during step")?;
+            obs.extend(o);
+            rewards.extend(r);
+            dones.extend(d);
+        }
+        Ok((obs, rewards, dones))
+    }
+
+    /// Shut the workers down.
+    pub fn close(&self) {
+        for pipe in &self.pipes {
+            let _ = pipe.send(&Cmd::Close);
+        }
+        for w in &self.workers {
+            w.join();
+        }
+    }
+}
+
+impl Drop for VecEnv {
+    fn drop(&mut self) {
+        for pipe in &self.pipes {
+            let _ = pipe.send(&Cmd::Close);
+        }
+        for w in &self.workers {
+            w.terminate();
+        }
+    }
+}
+
+fn env_worker_loop(
+    pipe: PipeEnd<Reply, Cmd>,
+    k: usize,
+    token: &crate::cluster::CancelToken,
+) {
+    let mut envs: Vec<Breakout> = (0..k).map(|_| Breakout::new()).collect();
+    let mut episode: Vec<u64> = vec![0; k];
+    let mut base_seed = 0u64;
+    loop {
+        if token.is_cancelled() {
+            return;
+        }
+        let cmd = match pipe.recv(Duration::from_millis(200)) {
+            Ok(Some(c)) => c,
+            Ok(None) => continue,
+            Err(_) => return,
+        };
+        match cmd {
+            Cmd::Reset(seed) => {
+                base_seed = seed;
+                let mut obs = Vec::with_capacity(k);
+                for (i, env) in envs.iter_mut().enumerate() {
+                    episode[i] = 0;
+                    obs.push(env.reset(seed.wrapping_add(i as u64)));
+                }
+                if pipe.send(&(obs, vec![0.0; k], vec![0u8; k])).is_err() {
+                    return;
+                }
+            }
+            Cmd::Step(actions) => {
+                let mut obs = Vec::with_capacity(k);
+                let mut rewards = Vec::with_capacity(k);
+                let mut dones = Vec::with_capacity(k);
+                for (i, env) in envs.iter_mut().enumerate() {
+                    let a = Action::Discrete(actions.get(i).map(|&a| a as usize).unwrap_or(0));
+                    let r = env.step(&a);
+                    rewards.push(r.reward);
+                    dones.push(u8::from(r.done));
+                    if r.done {
+                        episode[i] += 1;
+                        obs.push(env.reset(
+                            base_seed
+                                .wrapping_add(i as u64)
+                                .wrapping_add(episode[i] * 7919),
+                        ));
+                    } else {
+                        obs.push(r.obs);
+                    }
+                }
+                if pipe.send(&(obs, rewards, dones)).is_err() {
+                    return;
+                }
+            }
+            Cmd::Close => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LocalBackend;
+
+    fn make(n_envs: usize, n_workers: usize) -> (VecEnv, Arc<QueueHub>) {
+        let hub = QueueHub::new();
+        let be = LocalBackend::new();
+        let ve = VecEnv::breakout(&be, &hub, n_envs, n_workers).unwrap();
+        (ve, hub)
+    }
+
+    #[test]
+    fn reset_returns_all_obs() {
+        let (ve, _hub) = make(6, 2);
+        let obs = ve.reset(1).unwrap();
+        assert_eq!(obs.len(), 6);
+        assert!(obs.iter().all(|o| o.len() == 32));
+        ve.close();
+    }
+
+    #[test]
+    fn step_round_trips() {
+        let (ve, _hub) = make(5, 3);
+        ve.reset(2).unwrap();
+        for _ in 0..20 {
+            let (obs, rewards, dones) = ve.step(&vec![1; 5]).unwrap();
+            assert_eq!(obs.len(), 5);
+            assert_eq!(rewards.len(), 5);
+            assert_eq!(dones.len(), 5);
+        }
+        ve.close();
+    }
+
+    #[test]
+    fn uneven_split_covers_all_envs() {
+        let (ve, _hub) = make(7, 3);
+        assert_eq!(ve.n_envs(), 7);
+        assert_eq!(ve.n_workers(), 3);
+        let obs = ve.reset(3).unwrap();
+        assert_eq!(obs.len(), 7);
+        ve.close();
+    }
+
+    #[test]
+    fn wrong_action_count_is_error() {
+        let (ve, _hub) = make(4, 2);
+        ve.reset(4).unwrap();
+        assert!(ve.step(&vec![0; 3]).is_err());
+        ve.close();
+    }
+
+    #[test]
+    fn envs_auto_reset_and_continue() {
+        let (ve, _hub) = make(2, 1);
+        ve.reset(5).unwrap();
+        // Fire + noop forever: episodes will end (lives run out) and the
+        // vec env must keep stepping without error.
+        let mut saw_done = false;
+        for _ in 0..30_000 {
+            let (_, _, dones) = ve.step(&vec![1, 1]).unwrap();
+            if dones.iter().any(|&d| d == 1) {
+                saw_done = true;
+                break;
+            }
+        }
+        assert!(saw_done, "episodes should terminate under fire-only policy");
+        // Continue stepping after the auto-reset.
+        for _ in 0..10 {
+            ve.step(&vec![0, 0]).unwrap();
+        }
+        ve.close();
+    }
+}

@@ -1,0 +1,401 @@
+//! `Manager` — shared in-memory storage and remote objects behind proxies.
+//!
+//! The paper: "Fiber provides built-in in-memory storage for applications
+//! to use. The interface is the same as multiprocessing's Manager type."
+//! A [`Manager`] hosts (a) a key/value store and (b) registered object
+//! types that clients instantiate and drive through [`RemoteObj`] proxies —
+//! the `RemoteEnvManager` pattern of code example 3, used by PPO to host
+//! environments near the leader.
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::wire::{self, Decode, Encode};
+
+/// RPC tags for the manager protocol.
+pub mod tags {
+    pub const CREATE: u32 = 20;
+    pub const CALL: u32 = 21;
+    pub const DROP: u32 = 22;
+    pub const KV_SET: u32 = 23;
+    pub const KV_GET: u32 = 24;
+    pub const KV_DEL: u32 = 25;
+    pub const KV_KEYS: u32 = 26;
+}
+
+type Ctor = Arc<dyn Fn(&[u8]) -> Result<Box<dyn Any + Send>, String> + Send + Sync>;
+type Dispatch =
+    Arc<dyn Fn(&mut (dyn Any + Send), &str, &[u8]) -> Result<Vec<u8>, String> + Send + Sync>;
+
+struct HostedObj {
+    type_name: String,
+    obj: Box<dyn Any + Send>,
+}
+
+/// The manager host: object registry + instances + KV store.
+#[derive(Default)]
+pub struct Manager {
+    types: Mutex<HashMap<String, (Ctor, Dispatch)>>,
+    objects: Mutex<HashMap<u64, Arc<Mutex<HostedObj>>>>,
+    kv: Mutex<HashMap<String, Vec<u8>>>,
+    next_obj: AtomicU64,
+}
+
+impl Manager {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    /// Register an object type with typed constructor args and an explicit
+    /// method dispatcher (Rust's stand-in for Python's dynamic dispatch).
+    pub fn register<T, I, C, D>(&self, name: &str, ctor: C, dispatch: D)
+    where
+        T: Send + 'static,
+        I: Decode,
+        C: Fn(I) -> Result<T, String> + Send + Sync + 'static,
+        D: Fn(&mut T, &str, &[u8]) -> Result<Vec<u8>, String> + Send + Sync + 'static,
+    {
+        let c: Ctor = Arc::new(move |bytes| {
+            let args: I = wire::from_bytes(bytes).map_err(|e| format!("ctor args: {e}"))?;
+            Ok(Box::new(ctor(args)?) as Box<dyn Any + Send>)
+        });
+        let d: Dispatch = Arc::new(move |any, method, payload| {
+            let t = any
+                .downcast_mut::<T>()
+                .ok_or_else(|| "type confusion in manager dispatch".to_string())?;
+            dispatch(t, method, payload)
+        });
+        self.types.lock().unwrap().insert(name.to_string(), (c, d));
+    }
+
+    /// Instantiate a registered type; returns the object id.
+    pub fn create(&self, type_name: &str, args: &[u8]) -> Result<u64, String> {
+        let ctor = {
+            let types = self.types.lock().unwrap();
+            types
+                .get(type_name)
+                .map(|(c, _)| c.clone())
+                .ok_or_else(|| format!("unregistered manager type {type_name:?}"))?
+        };
+        let obj = ctor(args)?;
+        let id = self.next_obj.fetch_add(1, Ordering::Relaxed) + 1;
+        self.objects.lock().unwrap().insert(
+            id,
+            Arc::new(Mutex::new(HostedObj {
+                type_name: type_name.to_string(),
+                obj,
+            })),
+        );
+        Ok(id)
+    }
+
+    /// Invoke `method` on object `id`. Calls on distinct objects run
+    /// concurrently; calls on one object serialize.
+    pub fn call(&self, id: u64, method: &str, payload: &[u8]) -> Result<Vec<u8>, String> {
+        let slot = {
+            let objects = self.objects.lock().unwrap();
+            objects
+                .get(&id)
+                .cloned()
+                .ok_or_else(|| format!("no object {id}"))?
+        };
+        let mut hosted = slot.lock().unwrap();
+        let dispatch = {
+            let types = self.types.lock().unwrap();
+            types
+                .get(&hosted.type_name)
+                .map(|(_, d)| d.clone())
+                .ok_or_else(|| "type vanished".to_string())?
+        };
+        dispatch(&mut *hosted.obj, method, payload)
+    }
+
+    pub fn drop_obj(&self, id: u64) {
+        self.objects.lock().unwrap().remove(&id);
+    }
+
+    pub fn live_objects(&self) -> usize {
+        self.objects.lock().unwrap().len()
+    }
+
+    // ---- KV store -------------------------------------------------------
+
+    pub fn kv_set(&self, key: &str, value: Vec<u8>) {
+        self.kv.lock().unwrap().insert(key.to_string(), value);
+    }
+
+    pub fn kv_get(&self, key: &str) -> Option<Vec<u8>> {
+        self.kv.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn kv_del(&self, key: &str) -> bool {
+        self.kv.lock().unwrap().remove(key).is_some()
+    }
+
+    pub fn kv_keys(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.kv.lock().unwrap().keys().cloned().collect();
+        k.sort();
+        k
+    }
+
+    /// Serve this manager over TCP.
+    pub fn serve_rpc(self: &Arc<Self>, bind: &str) -> Result<RpcServer> {
+        let mgr = self.clone();
+        RpcServer::bind(
+            bind,
+            Arc::new(move |tag, payload| match tag {
+                tags::CREATE => {
+                    let (type_name, args): (String, Vec<u8>) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    let id = mgr.create(&type_name, &args)?;
+                    Ok(wire::to_bytes(&id))
+                }
+                tags::CALL => {
+                    let (id, method, args): (u64, String, Vec<u8>) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    mgr.call(id, &method, &args)
+                }
+                tags::DROP => {
+                    let id: u64 = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    mgr.drop_obj(id);
+                    Ok(Vec::new())
+                }
+                tags::KV_SET => {
+                    let (k, v): (String, Vec<u8>) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    mgr.kv_set(&k, v);
+                    Ok(Vec::new())
+                }
+                tags::KV_GET => {
+                    let k: String = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&mgr.kv_get(&k)))
+                }
+                tags::KV_DEL => {
+                    let k: String = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&mgr.kv_del(&k)))
+                }
+                tags::KV_KEYS => Ok(wire::to_bytes(&mgr.kv_keys())),
+                t => Err(format!("bad manager rpc tag {t}")),
+            }),
+        )
+    }
+}
+
+/// Client handle to a manager, local or remote.
+#[derive(Clone)]
+pub enum ManagerClient {
+    Local(Arc<Manager>),
+    Remote(Arc<RpcClient>),
+}
+
+impl ManagerClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Result<Self> {
+        Ok(ManagerClient::Remote(Arc::new(RpcClient::connect(addr)?)))
+    }
+
+    /// Instantiate a hosted object; returns its proxy.
+    pub fn create<I: Encode>(&self, type_name: &str, args: &I) -> Result<RemoteObj> {
+        let bytes = wire::to_bytes(args);
+        let id = match self {
+            ManagerClient::Local(m) => {
+                m.create(type_name, &bytes).map_err(|e| anyhow::anyhow!(e))?
+            }
+            ManagerClient::Remote(cli) => {
+                cli.call_typed(tags::CREATE, &(type_name.to_string(), bytes))?
+            }
+        };
+        Ok(RemoteObj {
+            client: self.clone(),
+            id,
+        })
+    }
+
+    /// Reattach a proxy to an existing object id (e.g. shared between
+    /// processes through a queue or KV entry).
+    pub fn proxy(&self, id: u64) -> RemoteObj {
+        RemoteObj {
+            client: self.clone(),
+            id,
+        }
+    }
+
+    pub fn kv_set<V: Encode>(&self, key: &str, value: &V) -> Result<()> {
+        let bytes = wire::to_bytes(value);
+        match self {
+            ManagerClient::Local(m) => {
+                m.kv_set(key, bytes);
+                Ok(())
+            }
+            ManagerClient::Remote(cli) => {
+                cli.call(tags::KV_SET, &wire::to_bytes(&(key.to_string(), bytes)))?;
+                Ok(())
+            }
+        }
+    }
+
+    pub fn kv_get<V: Decode>(&self, key: &str) -> Result<Option<V>> {
+        let got: Option<Vec<u8>> = match self {
+            ManagerClient::Local(m) => m.kv_get(key),
+            ManagerClient::Remote(cli) => cli.call_typed(tags::KV_GET, &key.to_string())?,
+        };
+        match got {
+            Some(bytes) => Ok(Some(
+                wire::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("decode: {e}"))?,
+            )),
+            None => Ok(None),
+        }
+    }
+
+    pub fn kv_del(&self, key: &str) -> Result<bool> {
+        match self {
+            ManagerClient::Local(m) => Ok(m.kv_del(key)),
+            ManagerClient::Remote(cli) => Ok(cli.call_typed(tags::KV_DEL, &key.to_string())?),
+        }
+    }
+
+    pub fn kv_keys(&self) -> Result<Vec<String>> {
+        match self {
+            ManagerClient::Local(m) => Ok(m.kv_keys()),
+            ManagerClient::Remote(cli) => Ok(cli.call_typed(tags::KV_KEYS, &())?),
+        }
+    }
+}
+
+/// Proxy to a manager-hosted object.
+pub struct RemoteObj {
+    client: ManagerClient,
+    id: u64,
+}
+
+impl RemoteObj {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Call a method with typed request/response.
+    pub fn call<Req: Encode, Resp: Decode>(&self, method: &str, req: &Req) -> Result<Resp> {
+        let bytes = wire::to_bytes(req);
+        let reply = match &self.client {
+            ManagerClient::Local(m) => m
+                .call(self.id, method, &bytes)
+                .map_err(|e| anyhow::anyhow!(e))?,
+            ManagerClient::Remote(cli) => cli.call(
+                tags::CALL,
+                &wire::to_bytes(&(self.id, method.to_string(), bytes)),
+            )?,
+        };
+        wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("reply decode: {e}"))
+    }
+
+    /// Release the hosted object.
+    pub fn drop_remote(self) -> Result<()> {
+        match &self.client {
+            ManagerClient::Local(m) => {
+                m.drop_obj(self.id);
+                Ok(())
+            }
+            ManagerClient::Remote(cli) => {
+                cli.call(tags::DROP, &wire::to_bytes(&self.id))?;
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Counter {
+        n: i64,
+    }
+
+    fn register_counter(m: &Manager) {
+        m.register::<Counter, i64, _, _>(
+            "counter",
+            |start| Ok(Counter { n: start }),
+            |c, method, payload| match method {
+                "add" => {
+                    let d: i64 = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    c.n += d;
+                    Ok(wire::to_bytes(&c.n))
+                }
+                "get" => Ok(wire::to_bytes(&c.n)),
+                m => Err(format!("no method {m}")),
+            },
+        );
+    }
+
+    #[test]
+    fn local_object_lifecycle() {
+        let mgr = Manager::new();
+        register_counter(&mgr);
+        let cli = ManagerClient::Local(mgr.clone());
+        let obj = cli.create("counter", &10i64).unwrap();
+        let v: i64 = obj.call("add", &5i64).unwrap();
+        assert_eq!(v, 15);
+        let v: i64 = obj.call("get", &()).unwrap();
+        assert_eq!(v, 15);
+        assert_eq!(mgr.live_objects(), 1);
+        obj.drop_remote().unwrap();
+        assert_eq!(mgr.live_objects(), 0);
+    }
+
+    #[test]
+    fn remote_object_over_rpc() {
+        let mgr = Manager::new();
+        register_counter(&mgr);
+        let srv = mgr.serve_rpc("127.0.0.1:0").unwrap();
+        let cli = ManagerClient::connect(srv.local_addr()).unwrap();
+        let obj = cli.create("counter", &0i64).unwrap();
+        for _ in 0..10 {
+            let _: i64 = obj.call("add", &1i64).unwrap();
+        }
+        let v: i64 = obj.call("get", &()).unwrap();
+        assert_eq!(v, 10);
+    }
+
+    #[test]
+    fn unknown_type_and_method_error() {
+        let mgr = Manager::new();
+        register_counter(&mgr);
+        let cli = ManagerClient::Local(mgr.clone());
+        assert!(cli.create("nope", &0i64).is_err());
+        let obj = cli.create("counter", &0i64).unwrap();
+        assert!(obj.call::<(), i64>("fly", &()).is_err());
+    }
+
+    #[test]
+    fn kv_store_local_and_remote() {
+        let mgr = Manager::new();
+        let srv = mgr.serve_rpc("127.0.0.1:0").unwrap();
+        let local = ManagerClient::Local(mgr.clone());
+        let remote = ManagerClient::connect(srv.local_addr()).unwrap();
+        local.kv_set("theta", &vec![1.0f32, 2.0]).unwrap();
+        let v: Option<Vec<f32>> = remote.kv_get("theta").unwrap();
+        assert_eq!(v, Some(vec![1.0, 2.0]));
+        remote.kv_set("iter", &7u64).unwrap();
+        assert_eq!(local.kv_get::<u64>("iter").unwrap(), Some(7));
+        assert_eq!(local.kv_keys().unwrap(), vec!["iter".to_string(), "theta".to_string()]);
+        assert!(remote.kv_del("theta").unwrap());
+        assert_eq!(local.kv_get::<Vec<f32>>("theta").unwrap(), None);
+    }
+
+    #[test]
+    fn objects_are_independent() {
+        let mgr = Manager::new();
+        register_counter(&mgr);
+        let cli = ManagerClient::Local(mgr);
+        let a = cli.create("counter", &0i64).unwrap();
+        let b = cli.create("counter", &100i64).unwrap();
+        let _: i64 = a.call("add", &1i64).unwrap();
+        let va: i64 = a.call("get", &()).unwrap();
+        let vb: i64 = b.call("get", &()).unwrap();
+        assert_eq!((va, vb), (1, 100));
+    }
+}

@@ -1,0 +1,32 @@
+//! The Fiber **API layer**: multiprocessing semantics, distributed reach.
+//!
+//! These are the paper's user-facing building blocks. Each mirrors its
+//! Python `multiprocessing` counterpart but is backed by cluster jobs and
+//! the [`crate::comms`] transports, so the same program scales from threads
+//! on a laptop to OS processes to (simulated) cluster pods:
+//!
+//! * [`FiberProcess`](process::FiberProcess) — job-backed processes.
+//! * [`Pool`](pool::Pool) — the task pool (map / map_async /
+//!   imap_unordered / apply), with chunked batching, pending-table fault
+//!   tolerance and dynamic resizing.
+//! * [`FiberQueue`](queue::FiberQueue) — a queue shared by many processes
+//!   on different machines.
+//! * [`Pipe`](pipe::Pipe) — an ordered duplex channel between two
+//!   processes.
+//! * [`Manager`](manager::Manager) — in-memory shared storage and remote
+//!   objects behind proxy handles.
+//!
+//! Locks and shared memory are intentionally absent, as in the paper
+//! ("we excluded locks from the supported APIs").
+
+pub mod manager;
+pub mod pipe;
+pub mod pool;
+pub mod process;
+pub mod queue;
+
+pub use manager::{Manager, ManagerClient, RemoteObj};
+pub use pipe::{Pipe, PipeEnd};
+pub use pool::{MapHandle, Pool, PoolBuilder};
+pub use process::FiberProcess;
+pub use queue::{FiberQueue, QueueHub};

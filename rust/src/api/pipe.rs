@@ -1,0 +1,131 @@
+//! `Pipe` — an ordered duplex channel between two processes.
+//!
+//! Pipes keep task order (unlike pools, which may execute on any worker):
+//! "Each simulator is mapped to a fixed process so that worker processes
+//! can maintain their internal state after each step" — the RL pattern in
+//! the paper's code example 3. A pipe is a pair of directed byte queues;
+//! locally they are channels, remotely they are two named queues on a
+//! [`super::queue::QueueHub`].
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::api::queue::{FiberQueue, QueueHub};
+use crate::wire::{Decode, Encode};
+
+/// One end of a duplex pipe carrying `S` outbound and `R` inbound.
+pub struct PipeEnd<S, R> {
+    tx: FiberQueue<S>,
+    rx: FiberQueue<R>,
+}
+
+impl<S: Encode + Decode, R: Encode + Decode> PipeEnd<S, R> {
+    pub fn send(&self, v: &S) -> Result<()> {
+        self.tx.put(v)
+    }
+
+    /// Blocking receive with timeout; `Ok(None)` on timeout.
+    pub fn recv(&self, timeout: Duration) -> Result<Option<R>> {
+        self.rx.get(timeout)
+    }
+
+    pub fn try_recv(&self) -> Result<Option<R>> {
+        self.rx.try_get()
+    }
+}
+
+/// Pipe constructors.
+pub struct Pipe;
+
+impl Pipe {
+    /// An in-process duplex pipe on `hub` (both ends usable from any thread).
+    pub fn local<A, B>(hub: &std::sync::Arc<QueueHub>, name: &str) -> (PipeEnd<A, B>, PipeEnd<B, A>)
+    where
+        A: Encode + Decode,
+        B: Encode + Decode,
+    {
+        let a2b = format!("pipe.{name}.a2b");
+        let b2a = format!("pipe.{name}.b2a");
+        (
+            PipeEnd {
+                tx: FiberQueue::local(hub, a2b.clone()),
+                rx: FiberQueue::local(hub, b2a.clone()),
+            },
+            PipeEnd {
+                tx: FiberQueue::local(hub, b2a),
+                rx: FiberQueue::local(hub, a2b),
+            },
+        )
+    }
+
+    /// Connect the "B" end of a named pipe over TCP (the "A" end lives with
+    /// the hub owner, typically the leader).
+    pub fn connect_b<A, B>(
+        addr: std::net::SocketAddr,
+        name: &str,
+    ) -> Result<PipeEnd<B, A>>
+    where
+        A: Encode + Decode,
+        B: Encode + Decode,
+    {
+        Ok(PipeEnd {
+            tx: FiberQueue::connect(addr, format!("pipe.{name}.b2a"))?,
+            rx: FiberQueue::connect(addr, format!("pipe.{name}.a2b"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T: Duration = Duration::from_millis(300);
+
+    #[test]
+    fn duplex_roundtrip() {
+        let hub = QueueHub::new();
+        let (a, b) = Pipe::local::<String, u32>(&hub, "t");
+        a.send(&"ping".to_string()).unwrap();
+        assert_eq!(b.recv(T).unwrap(), Some("ping".to_string()));
+        b.send(&42u32).unwrap();
+        assert_eq!(a.recv(T).unwrap(), Some(42));
+    }
+
+    #[test]
+    fn order_preserved() {
+        let hub = QueueHub::new();
+        let (a, b) = Pipe::local::<u32, u32>(&hub, "ord");
+        for i in 0..100u32 {
+            a.send(&i).unwrap();
+        }
+        for i in 0..100u32 {
+            assert_eq!(b.recv(T).unwrap(), Some(i));
+        }
+    }
+
+    #[test]
+    fn remote_end_over_rpc() {
+        let hub = QueueHub::new();
+        let srv = hub.serve_rpc("127.0.0.1:0").unwrap();
+        let (a, _b_local) = Pipe::local::<String, String>(&hub, "net");
+        let b = Pipe::connect_b::<String, String>(srv.local_addr(), "net").unwrap();
+        a.send(&"hello".to_string()).unwrap();
+        assert_eq!(b.recv(T).unwrap(), Some("hello".to_string()));
+        b.send(&"world".to_string()).unwrap();
+        assert_eq!(a.recv(T).unwrap(), Some("world".to_string()));
+    }
+
+    #[test]
+    fn two_pipes_are_independent() {
+        let hub = QueueHub::new();
+        let (a1, b1) = Pipe::local::<u32, u32>(&hub, "p1");
+        let (a2, b2) = Pipe::local::<u32, u32>(&hub, "p2");
+        a1.send(&1).unwrap();
+        a2.send(&2).unwrap();
+        assert_eq!(b2.recv(T).unwrap(), Some(2));
+        assert_eq!(b1.recv(T).unwrap(), Some(1));
+        assert_eq!(b1.try_recv().unwrap(), None);
+        let _ = (a1, a2, b1, b2);
+    }
+}

@@ -1,0 +1,987 @@
+//! `Pool` — the distributed task pool.
+//!
+//! `fiber.Pool` is the paper's workhorse: a list of job-backed worker
+//! processes fed from a shared task queue, with results collected through a
+//! result queue and failures healed through the pending table (Fig 2).
+//!
+//! ```
+//! use fiber::api::pool::Pool;
+//! use fiber::coordinator::register_task;
+//!
+//! register_task("doc.square", |x: i64| Ok::<i64, String>(x * x));
+//! let pool = Pool::builder().processes(4).build().unwrap();
+//! let out: Vec<i64> = pool.map("doc.square", 0..8i64).unwrap();
+//! assert_eq!(out, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+//! ```
+
+use std::collections::{HashMap, HashSet};
+use std::marker::PhantomData;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::cluster::{ClusterBackend, JobHandle, JobSpec, JobStatus, LocalBackend};
+use crate::comms::chan::RecvError;
+use crate::coordinator::batch::{make_chunks, register_chunk_runner, CHUNK_FN};
+use crate::coordinator::pool_server::{FetchReply, PoolServer, ResultMsg, WorkerId};
+use crate::coordinator::scaling::{Autoscaler, AutoscalePolicy};
+use crate::coordinator::task::{execute_registered, Task, TaskId};
+use crate::wire::{self, Decode, Encode};
+
+/// How a finished map result is delivered.
+enum Sink {
+    /// Collect into positional slots; `wait()` returns the ordered Vec.
+    Collect {
+        slots: Vec<Option<Vec<u8>>>,
+        remaining: usize,
+    },
+    /// Stream `(index, bytes)` pairs as they arrive (imap_unordered).
+    Stream(crate::comms::chan::Sender<(u64, Vec<u8>)>),
+}
+
+struct MapState {
+    sink: Sink,
+    error: Option<String>,
+    done: bool,
+}
+
+type SharedMap = Arc<(Mutex<MapState>, Condvar)>;
+
+/// Handle to an in-flight `map_async` call.
+pub struct MapHandle<O> {
+    shared: SharedMap,
+    _out: PhantomData<fn() -> O>,
+}
+
+impl<O: Decode> MapHandle<O> {
+    /// Block until every task finished; returns outputs in input order.
+    /// The first application error aborts the map and is returned.
+    pub fn wait(self) -> Result<Vec<O>> {
+        let (lock, cv) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        while !st.done {
+            st = cv.wait(st).unwrap();
+        }
+        if let Some(e) = &st.error {
+            anyhow::bail!("task failed: {e}");
+        }
+        let Sink::Collect { slots, .. } = &mut st.sink else {
+            anyhow::bail!("wait() on a streaming map");
+        };
+        let mut out = Vec::with_capacity(slots.len());
+        for s in slots.iter_mut() {
+            let bytes = s.take().context("missing result slot")?;
+            out.push(wire::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("decode: {e}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Non-blocking completion check.
+    pub fn ready(&self) -> bool {
+        self.shared.0.lock().unwrap().done
+    }
+}
+
+/// Handle to an in-flight raw-bytes map (payloads already encoded by the
+/// caller — used by the bench executors, which share pre-encoded inputs
+/// across frameworks).
+pub struct RawMapHandle {
+    shared: SharedMap,
+}
+
+impl RawMapHandle {
+    /// Block until every task finished; returns raw output bytes in order.
+    pub fn wait(self) -> Result<Vec<Vec<u8>>> {
+        let (lock, cv) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        while !st.done {
+            st = cv.wait(st).unwrap();
+        }
+        if let Some(e) = &st.error {
+            anyhow::bail!("task failed: {e}");
+        }
+        let Sink::Collect { slots, .. } = &mut st.sink else {
+            anyhow::bail!("wait() on a streaming map");
+        };
+        slots
+            .iter_mut()
+            .map(|s| s.take().context("missing result slot"))
+            .collect()
+    }
+}
+
+struct WorkerSlot {
+    id: WorkerId,
+    handle: Arc<dyn JobHandle>,
+}
+
+struct PoolShared {
+    server: Arc<PoolServer>,
+    backend: Arc<dyn ClusterBackend>,
+    workers: Mutex<Vec<WorkerSlot>>,
+    /// Workers we deliberately retired (scale-down): their exit is not a
+    /// failure.
+    retiring: Mutex<HashSet<WorkerId>>,
+    maps: Mutex<HashMap<u64, SharedMap>>,
+    stop: AtomicBool,
+    next_worker: AtomicU64,
+    next_map: AtomicU64,
+    restarts: AtomicUsize,
+    max_restarts: usize,
+    /// Leader RPC address (proc backend); None for thread pools.
+    rpc_addr: Option<std::net::SocketAddr>,
+    fetch_timeout_ms: u64,
+}
+
+/// Builder for [`Pool`].
+pub struct PoolBuilder {
+    processes: usize,
+    chunksize: usize,
+    backend: Option<Arc<dyn ClusterBackend>>,
+    proc_workers: bool,
+    max_restarts: usize,
+    autoscale: Option<AutoscalePolicy>,
+    fetch_timeout_ms: u64,
+}
+
+impl Default for PoolBuilder {
+    fn default() -> Self {
+        Self {
+            processes: 4,
+            chunksize: 1,
+            backend: None,
+            proc_workers: false,
+            max_restarts: 64,
+            autoscale: None,
+            fetch_timeout_ms: 200,
+        }
+    }
+}
+
+impl PoolBuilder {
+    pub fn processes(mut self, n: usize) -> Self {
+        self.processes = n.max(1);
+        self
+    }
+
+    /// Default chunksize applied by `map` (1 = no batching).
+    pub fn chunksize(mut self, k: usize) -> Self {
+        self.chunksize = k.max(1);
+        self
+    }
+
+    pub fn backend(mut self, b: Arc<dyn ClusterBackend>) -> Self {
+        self.backend = Some(b);
+        self
+    }
+
+    /// Use real OS child processes (`fiber-cli worker`) instead of threads.
+    pub fn proc_workers(mut self, yes: bool) -> Self {
+        self.proc_workers = yes;
+        self
+    }
+
+    pub fn max_restarts(mut self, n: usize) -> Self {
+        self.max_restarts = n;
+        self
+    }
+
+    pub fn autoscale(mut self, p: AutoscalePolicy) -> Self {
+        self.autoscale = Some(p);
+        self
+    }
+
+    pub fn build(self) -> Result<Pool> {
+        Pool::from_builder(self)
+    }
+}
+
+/// The distributed worker pool.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    chunksize: usize,
+    _rpc: Option<crate::comms::rpc::RpcServer>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Pool {
+    /// A thread-backed pool with `n` workers (the laptop path).
+    pub fn new(n: usize) -> Result<Pool> {
+        Pool::builder().processes(n).build()
+    }
+
+    pub fn builder() -> PoolBuilder {
+        PoolBuilder::default()
+    }
+
+    fn from_builder(b: PoolBuilder) -> Result<Pool> {
+        register_chunk_runner();
+        let backend: Arc<dyn ClusterBackend> = match (&b.backend, b.proc_workers) {
+            (Some(be), _) => be.clone(),
+            (None, false) => Arc::new(LocalBackend::new()),
+            (None, true) => Arc::new(crate::cluster::ProcBackend::new()?),
+        };
+        let server = Arc::new(PoolServer::new());
+        let rpc = if b.proc_workers {
+            Some(server.serve_rpc("127.0.0.1:0")?)
+        } else {
+            None
+        };
+        let shared = Arc::new(PoolShared {
+            server: server.clone(),
+            backend,
+            workers: Mutex::new(Vec::new()),
+            retiring: Mutex::new(HashSet::new()),
+            maps: Mutex::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+            next_worker: AtomicU64::new(1),
+            next_map: AtomicU64::new(1),
+            restarts: AtomicUsize::new(0),
+            max_restarts: b.max_restarts,
+            rpc_addr: rpc.as_ref().map(|r| r.local_addr()),
+            fetch_timeout_ms: b.fetch_timeout_ms,
+        });
+        for _ in 0..b.processes {
+            spawn_worker(&shared)?;
+        }
+        let collector = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("pool-collector".into())
+                .spawn(move || collector_loop(&shared))?
+        };
+        let supervisor = {
+            let shared = shared.clone();
+            let autoscale = b.autoscale.map(Autoscaler::new);
+            std::thread::Builder::new()
+                .name("pool-supervisor".into())
+                .spawn(move || supervisor_loop(&shared, autoscale))?
+        };
+        Ok(Pool {
+            shared,
+            chunksize: b.chunksize,
+            _rpc: rpc,
+            collector: Some(collector),
+            supervisor: Some(supervisor),
+        })
+    }
+
+    /// Current worker count (live slots).
+    pub fn processes(&self) -> usize {
+        self.shared.workers.lock().unwrap().len()
+    }
+
+    /// Queue backlog (tasks not yet fetched).
+    pub fn backlog(&self) -> usize {
+        self.shared.server.queue_len()
+    }
+
+    /// Tasks currently executing.
+    pub fn in_flight(&self) -> usize {
+        self.shared.server.pending_len()
+    }
+
+    /// Ordered, blocking map (with the pool's default chunksize).
+    pub fn map<I, O>(&self, fn_name: &str, items: impl IntoIterator<Item = I>) -> Result<Vec<O>>
+    where
+        I: Encode,
+        O: Decode,
+    {
+        self.map_chunked(fn_name, items, self.chunksize)
+    }
+
+    /// Ordered, blocking map with an explicit chunksize.
+    pub fn map_chunked<I, O>(
+        &self,
+        fn_name: &str,
+        items: impl IntoIterator<Item = I>,
+        chunksize: usize,
+    ) -> Result<Vec<O>>
+    where
+        I: Encode,
+        O: Decode,
+    {
+        self.map_async_chunked(fn_name, items, chunksize)?.wait()
+    }
+
+    /// Asynchronous map returning a waitable handle.
+    pub fn map_async<I, O>(
+        &self,
+        fn_name: &str,
+        items: impl IntoIterator<Item = I>,
+    ) -> Result<MapHandle<O>>
+    where
+        I: Encode,
+        O: Decode,
+    {
+        self.map_async_chunked(fn_name, items, self.chunksize)
+    }
+
+    /// Asynchronous chunked map.
+    pub fn map_async_chunked<I, O>(
+        &self,
+        fn_name: &str,
+        items: impl IntoIterator<Item = I>,
+        chunksize: usize,
+    ) -> Result<MapHandle<O>>
+    where
+        I: Encode,
+        O: Decode,
+    {
+        let enc: Vec<Vec<u8>> = items.into_iter().map(|i| wire::to_bytes(&i)).collect();
+        let n = enc.len();
+        let shared_map: SharedMap = Arc::new((
+            Mutex::new(MapState {
+                sink: Sink::Collect {
+                    slots: (0..n).map(|_| None).collect(),
+                    remaining: n,
+                },
+                error: None,
+                done: n == 0,
+            }),
+            Condvar::new(),
+        ));
+        let map_id = self.submit_map(fn_name, enc, chunksize, shared_map.clone())?;
+        let _ = map_id;
+        Ok(MapHandle {
+            shared: shared_map,
+            _out: PhantomData,
+        })
+    }
+
+    /// Unordered streaming map: returns a receiver of `(input index, output)`
+    /// pairs the moment each task finishes.
+    pub fn imap_unordered<I, O>(
+        &self,
+        fn_name: &str,
+        items: impl IntoIterator<Item = I>,
+    ) -> Result<ImapIter<O>>
+    where
+        I: Encode,
+        O: Decode,
+    {
+        let enc: Vec<Vec<u8>> = items.into_iter().map(|i| wire::to_bytes(&i)).collect();
+        let n = enc.len();
+        let (tx, rx) = crate::comms::chan::unbounded();
+        if n == 0 {
+            tx.close();
+        }
+        let shared_map: SharedMap = Arc::new((
+            Mutex::new(MapState {
+                sink: Sink::Stream(tx),
+                error: None,
+                done: n == 0,
+            }),
+            Condvar::new(),
+        ));
+        self.submit_map(fn_name, enc, 1, shared_map)?;
+        Ok(ImapIter {
+            rx,
+            remaining: n,
+            _out: PhantomData,
+        })
+    }
+
+    /// Raw-bytes map: payloads are already wire-encoded for `fn_name`, and
+    /// outputs are returned un-decoded. The bench harness uses this to keep
+    /// serialization work identical across all compared frameworks.
+    pub fn map_raw_chunked(
+        &self,
+        fn_name: &str,
+        payloads: Vec<Vec<u8>>,
+        chunksize: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        let n = payloads.len();
+        let shared_map: SharedMap = Arc::new((
+            Mutex::new(MapState {
+                sink: Sink::Collect {
+                    slots: (0..n).map(|_| None).collect(),
+                    remaining: n,
+                },
+                error: None,
+                done: n == 0,
+            }),
+            Condvar::new(),
+        ));
+        self.submit_map(fn_name, payloads, chunksize, shared_map.clone())?;
+        RawMapHandle { shared: shared_map }.wait()
+    }
+
+    /// Run one task and wait for its result.
+    pub fn apply<I, O>(&self, fn_name: &str, item: I) -> Result<O>
+    where
+        I: Encode,
+        O: Decode,
+    {
+        let mut v: Vec<O> = self.map_chunked(fn_name, std::iter::once(item), 1)?;
+        v.pop().context("apply produced no result")
+    }
+
+    fn submit_map(
+        &self,
+        fn_name: &str,
+        enc: Vec<Vec<u8>>,
+        chunksize: usize,
+        shared_map: SharedMap,
+    ) -> Result<u64> {
+        anyhow::ensure!(
+            !self.shared.server.is_closed(),
+            "pool is closed"
+        );
+        let map_id = self.shared.next_map.fetch_add(1, Ordering::Relaxed);
+        if enc.is_empty() {
+            return Ok(map_id);
+        }
+        self.shared.maps.lock().unwrap().insert(map_id, shared_map);
+        if chunksize > 1 {
+            let mut start = 0u64;
+            for chunk in make_chunks(fn_name, enc, chunksize) {
+                let k = chunk.items.len() as u64;
+                self.shared.server.submit(Task {
+                    id: TaskId::fresh(),
+                    map_id,
+                    index: start,
+                    fn_name: CHUNK_FN.to_string(),
+                    payload: wire::to_bytes(&chunk),
+                });
+                start += k;
+            }
+        } else {
+            for (i, payload) in enc.into_iter().enumerate() {
+                self.shared.server.submit(Task {
+                    id: TaskId::fresh(),
+                    map_id,
+                    index: i as u64,
+                    fn_name: fn_name.to_string(),
+                    payload,
+                });
+            }
+        }
+        Ok(map_id)
+    }
+
+    /// Dynamically resize the pool (the paper's dynamic scaling).
+    pub fn resize(&self, target: usize) -> Result<()> {
+        resize_inner(&self.shared, target)
+    }
+
+    /// Close the pool: running maps finish, then workers retire.
+    pub fn close(&self) {
+        self.shared.server.close();
+    }
+
+    /// Wait for all workers to exit (call after [`Pool::close`]).
+    pub fn join(&self) {
+        let handles: Vec<Arc<dyn JobHandle>> = {
+            let ws = self.shared.workers.lock().unwrap();
+            ws.iter().map(|w| w.handle.clone()).collect()
+        };
+        for h in handles {
+            h.wait();
+        }
+    }
+
+    /// Pending-table counters `(inserted, completed, requeued)`.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        self.shared.server.counters()
+    }
+
+    /// Number of worker replacements performed after failures.
+    pub fn restarts(&self) -> usize {
+        self.shared.restarts.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.server.close();
+        {
+            let ws = self.shared.workers.lock().unwrap();
+            for w in ws.iter() {
+                w.handle.terminate();
+            }
+        }
+        if let Some(h) = self.collector.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Iterator over an unordered streaming map.
+pub struct ImapIter<O> {
+    rx: crate::comms::chan::Receiver<(u64, Vec<u8>)>,
+    remaining: usize,
+    _out: PhantomData<fn() -> O>,
+}
+
+impl<O: Decode> Iterator for ImapIter<O> {
+    type Item = Result<(usize, O)>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.remaining == 0 {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok((idx, bytes)) => {
+                self.remaining -= 1;
+                Some(
+                    wire::from_bytes(&bytes)
+                        .map(|o| (idx as usize, o))
+                        .map_err(|e| anyhow::anyhow!("decode: {e}")),
+                )
+            }
+            Err(_) => {
+                self.remaining = 0;
+                Some(Err(anyhow::anyhow!("map aborted (task failure)")))
+            }
+        }
+    }
+}
+
+fn spawn_worker(shared: &Arc<PoolShared>) -> Result<WorkerId> {
+    let wid = WorkerId(shared.next_worker.fetch_add(1, Ordering::Relaxed));
+    let spec = if let Some(addr) = shared.rpc_addr {
+        JobSpec::command(
+            format!("fiber-worker-{}", wid.0),
+            vec![
+                "worker".into(),
+                "--leader".into(),
+                addr.to_string(),
+                "--worker".into(),
+                wid.0.to_string(),
+            ],
+        )
+    } else {
+        let server = shared.server.clone();
+        let timeout = Duration::from_millis(shared.fetch_timeout_ms);
+        JobSpec::thread(format!("fiber-worker-{}", wid.0), move |token| {
+            worker_loop_inproc(&server, wid, timeout, &token)
+        })
+    };
+    let handle = shared.backend.submit(spec)?;
+    shared
+        .workers
+        .lock()
+        .unwrap()
+        .push(WorkerSlot { id: wid, handle });
+    Ok(wid)
+}
+
+/// The thread-worker loop. Panics inside `execute_registered` unwind out of
+/// this function, so the backend reports the job Failed and the supervisor
+/// heals the pool — identical semantics to a crashed worker process.
+fn worker_loop_inproc(
+    server: &PoolServer,
+    wid: WorkerId,
+    timeout: Duration,
+    token: &crate::cluster::CancelToken,
+) {
+    loop {
+        if token.is_cancelled() {
+            return;
+        }
+        match server.fetch(wid, timeout) {
+            FetchReply::Task(task) => {
+                let result = execute_registered(&task.fn_name, &task.payload);
+                server.put_result(task.id, result);
+            }
+            FetchReply::Wait => continue,
+            FetchReply::Retire => return,
+        }
+    }
+}
+
+fn collector_loop(shared: &Arc<PoolShared>) {
+    let rx = shared.server.results();
+    loop {
+        let msg = match rx.recv_timeout(Duration::from_millis(100)) {
+            Ok(m) => m,
+            Err(RecvError::Timeout) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        };
+        deliver(shared, msg);
+    }
+}
+
+fn deliver(shared: &Arc<PoolShared>, msg: ResultMsg) {
+    let map = {
+        let maps = shared.maps.lock().unwrap();
+        maps.get(&msg.task.map_id).cloned()
+    };
+    let Some(map) = map else { return };
+    let (lock, cv) = &*map;
+    let mut st = lock.lock().unwrap();
+    if st.done {
+        return;
+    }
+    let finished = match msg.result {
+        Err(e) => {
+            st.error = Some(e);
+            true
+        }
+        Ok(bytes) => {
+            // A chunk task's output is Vec<Vec<u8>> starting at task.index.
+            let outputs: Vec<(u64, Vec<u8>)> = if msg.task.fn_name == CHUNK_FN {
+                match wire::from_bytes::<Vec<Vec<u8>>>(&bytes) {
+                    Ok(outs) => outs
+                        .into_iter()
+                        .enumerate()
+                        .map(|(k, b)| (msg.task.index + k as u64, b))
+                        .collect(),
+                    Err(e) => {
+                        st.error = Some(format!("chunk decode: {e}"));
+                        vec![]
+                    }
+                }
+            } else {
+                vec![(msg.task.index, bytes)]
+            };
+            if st.error.is_some() {
+                true
+            } else {
+                match &mut st.sink {
+                    Sink::Collect { slots, remaining } => {
+                        for (idx, b) in outputs {
+                            let slot = &mut slots[idx as usize];
+                            if slot.is_none() {
+                                *slot = Some(b);
+                                *remaining -= 1;
+                            }
+                        }
+                        *remaining == 0
+                    }
+                    Sink::Stream(tx) => {
+                        let mut all_sent = true;
+                        for (idx, b) in outputs {
+                            if tx.send((idx, b)).is_err() {
+                                all_sent = false;
+                            }
+                        }
+                        // Streaming maps are finished when the iterator has
+                        // consumed everything; we close lazily via drop.
+                        let _ = all_sent;
+                        false
+                    }
+                }
+            }
+        }
+    };
+    if finished {
+        st.done = true;
+        if let Sink::Stream(tx) = &st.sink {
+            tx.close();
+        }
+        cv.notify_all();
+        drop(st);
+        shared.maps.lock().unwrap().remove(&msg.task.map_id);
+    }
+}
+
+fn supervisor_loop(shared: &Arc<PoolShared>, mut autoscale: Option<Autoscaler>) {
+    let t0 = std::time::Instant::now();
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        heal(shared);
+        if let Some(a) = autoscale.as_mut() {
+            let current = shared.workers.lock().unwrap().len();
+            let backlog = shared.server.queue_len();
+            let in_flight = shared.server.pending_len();
+            if let Some(target) =
+                a.decide(t0.elapsed().as_nanos() as u64, current, backlog, in_flight)
+            {
+                let _ = resize_inner(shared, target);
+            }
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// Scan worker slots; requeue tasks of failed workers and replace them.
+fn heal(shared: &Arc<PoolShared>) {
+    let mut failed: Vec<WorkerId> = Vec::new();
+    let mut cleaned: Vec<WorkerId> = Vec::new();
+    {
+        let mut ws = shared.workers.lock().unwrap();
+        let retiring = shared.retiring.lock().unwrap();
+        ws.retain(|slot| match slot.handle.status() {
+            JobStatus::Pending | JobStatus::Running => true,
+            JobStatus::Succeeded | JobStatus::Terminated => {
+                cleaned.push(slot.id);
+                false
+            }
+            JobStatus::Failed(_) => {
+                if retiring.contains(&slot.id) {
+                    cleaned.push(slot.id);
+                } else {
+                    failed.push(slot.id);
+                }
+                false
+            }
+        });
+    }
+    {
+        let mut retiring = shared.retiring.lock().unwrap();
+        for id in &cleaned {
+            retiring.remove(id);
+        }
+    }
+    for wid in failed {
+        let requeued = shared.server.fail_worker(wid);
+        log::warn!("worker {wid:?} failed; resubmitted {requeued} task(s)");
+        if shared.stop.load(Ordering::SeqCst) || shared.server.is_closed() {
+            continue;
+        }
+        if shared.restarts.fetch_add(1, Ordering::Relaxed) < shared.max_restarts {
+            let _ = spawn_worker(shared);
+        } else {
+            log::error!("max_restarts exceeded; not replacing worker {wid:?}");
+        }
+    }
+}
+
+fn resize_inner(shared: &Arc<PoolShared>, target: usize) -> Result<()> {
+    let target = target.max(1);
+    loop {
+        let current = shared.workers.lock().unwrap().len();
+        if current < target {
+            spawn_worker(shared)?;
+        } else if current > target {
+            // Retire the most recently spawned non-retiring worker.
+            let victim = {
+                let ws = shared.workers.lock().unwrap();
+                let retiring = shared.retiring.lock().unwrap();
+                ws.iter().rev().find(|w| !retiring.contains(&w.id)).map(|w| w.id)
+            };
+            let Some(victim) = victim else { return Ok(()) };
+            shared.retiring.lock().unwrap().insert(victim);
+            shared.server.retire(victim);
+            // Slot is removed by the supervisor when the job exits; to keep
+            // `processes()` meaningful immediately, also drop it here once
+            // the worker acknowledges by exiting — handled in heal().
+            // Avoid spinning: wait briefly.
+            std::thread::sleep(Duration::from_millis(2));
+            // Re-check: if the worker already exited, loop continues.
+            let still = {
+                let ws = shared.workers.lock().unwrap();
+                ws.iter().any(|w| w.id == victim)
+            };
+            if still {
+                // Count it as resized even though exit is asynchronous.
+                return resize_wait(shared, target);
+            }
+        } else {
+            return Ok(());
+        }
+    }
+}
+
+fn resize_wait(shared: &Arc<PoolShared>, target: usize) -> Result<()> {
+    // Retire remaining surplus workers, then return without blocking on
+    // their exit (they stop at their next fetch).
+    let surplus: Vec<WorkerId> = {
+        let ws = shared.workers.lock().unwrap();
+        let retiring = shared.retiring.lock().unwrap();
+        let live: Vec<WorkerId> = ws
+            .iter()
+            .filter(|w| !retiring.contains(&w.id))
+            .map(|w| w.id)
+            .collect();
+        let excess = live.len().saturating_sub(target);
+        live.into_iter().rev().take(excess).collect()
+    };
+    for wid in surplus {
+        shared.retiring.lock().unwrap().insert(wid);
+        shared.server.retire(wid);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::register_task;
+
+    fn setup() {
+        register_task("pool.add1", |x: i64| Ok::<i64, String>(x + 1));
+        register_task("pool.slow", |ms: u64| {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok::<u64, String>(ms)
+        });
+        register_task("pool.fail_on", |x: i64| {
+            if x == 3 {
+                Err("three is right out".into())
+            } else {
+                Ok::<i64, String>(x)
+            }
+        });
+        register_task("pool.panic_on", |x: i64| {
+            if x == 13 {
+                panic!("unlucky");
+            }
+            Ok::<i64, String>(x * 10)
+        });
+    }
+
+    #[test]
+    fn map_returns_ordered_results() {
+        setup();
+        let pool = Pool::new(4).unwrap();
+        let out: Vec<i64> = pool.map("pool.add1", 0..100i64).unwrap();
+        assert_eq!(out, (1..=100).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn map_empty_input() {
+        setup();
+        let pool = Pool::new(2).unwrap();
+        let out: Vec<i64> = pool.map("pool.add1", Vec::<i64>::new()).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn chunked_map_matches_unchunked() {
+        setup();
+        let pool = Pool::builder().processes(3).chunksize(7).build().unwrap();
+        let out: Vec<i64> = pool.map("pool.add1", 0..50i64).unwrap();
+        assert_eq!(out, (1..=50).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn apply_single() {
+        setup();
+        let pool = Pool::new(2).unwrap();
+        let out: i64 = pool.apply("pool.add1", 41i64).unwrap();
+        assert_eq!(out, 42);
+    }
+
+    #[test]
+    fn application_error_propagates() {
+        setup();
+        let pool = Pool::new(2).unwrap();
+        let err = pool
+            .map::<i64, i64>("pool.fail_on", 0..6i64)
+            .unwrap_err();
+        assert!(err.to_string().contains("three is right out"), "{err}");
+    }
+
+    #[test]
+    fn map_async_overlaps() {
+        setup();
+        let pool = Pool::new(4).unwrap();
+        let h1 = pool.map_async::<u64, u64>("pool.slow", vec![10u64; 4]).unwrap();
+        let h2 = pool.map_async::<i64, i64>("pool.add1", 0..4i64).unwrap();
+        let out2 = h2.wait().unwrap();
+        let out1 = h1.wait().unwrap();
+        assert_eq!(out1, vec![10; 4]);
+        assert_eq!(out2, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn imap_unordered_yields_all() {
+        setup();
+        let pool = Pool::new(4).unwrap();
+        let iter = pool.imap_unordered::<i64, i64>("pool.add1", 0..20i64).unwrap();
+        let mut got: Vec<(usize, i64)> = iter.map(|r| r.unwrap()).collect();
+        got.sort();
+        assert_eq!(got.len(), 20);
+        for (i, (idx, v)) in got.iter().enumerate() {
+            assert_eq!(*idx, i);
+            assert_eq!(*v, i as i64 + 1);
+        }
+    }
+
+    #[test]
+    fn worker_panic_heals_and_map_completes() {
+        setup();
+        // 13 panics the worker once; resubmission re-runs it... but it will
+        // panic forever. Use a one-shot poison instead: panic only while a
+        // flag is set.
+        use std::sync::atomic::AtomicBool;
+        static POISON: AtomicBool = AtomicBool::new(true);
+        register_task("pool.panic_once", |x: i64| {
+            if x == 5 && POISON.swap(false, Ordering::SeqCst) {
+                panic!("crash once");
+            }
+            Ok::<i64, String>(x)
+        });
+        POISON.store(true, Ordering::SeqCst);
+        let pool = Pool::new(2).unwrap();
+        let out: Vec<i64> = pool.map("pool.panic_once", 0..10i64).unwrap();
+        assert_eq!(out, (0..10).collect::<Vec<i64>>());
+        // The requeue happens-before map completion, but the restart counter
+        // increments just after it on the supervisor thread — poll briefly.
+        let t0 = std::time::Instant::now();
+        while pool.restarts() == 0 && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(pool.restarts() >= 1, "a worker must have been replaced");
+        let (_, _, requeued) = pool.counters();
+        assert!(requeued >= 1, "the crashed task must have been requeued");
+    }
+
+    #[test]
+    fn resize_up_and_down() {
+        setup();
+        let pool = Pool::new(2).unwrap();
+        pool.resize(6).unwrap();
+        // New workers participate (can't easily assert which worker ran what,
+        // but the pool must still be correct).
+        let out: Vec<i64> = pool.map("pool.add1", 0..30i64).unwrap();
+        assert_eq!(out.len(), 30);
+        pool.resize(2).unwrap();
+        // Retired workers exit at their next fetch; give them a beat.
+        std::thread::sleep(Duration::from_millis(300));
+        assert!(pool.processes() <= 3, "workers should retire, have {}", pool.processes());
+        let out: Vec<i64> = pool.map("pool.add1", 0..10i64).unwrap();
+        assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn close_then_map_fails() {
+        setup();
+        let pool = Pool::new(2).unwrap();
+        pool.close();
+        assert!(pool.map::<i64, i64>("pool.add1", 0..3i64).is_err());
+    }
+
+    #[test]
+    fn close_and_join_retires_workers() {
+        setup();
+        let pool = Pool::new(3).unwrap();
+        let out: Vec<i64> = pool.map("pool.add1", 0..5i64).unwrap();
+        assert_eq!(out.len(), 5);
+        pool.close();
+        pool.join();
+    }
+
+    #[test]
+    fn many_concurrent_maps() {
+        setup();
+        let pool = Arc::new(Pool::new(4).unwrap());
+        let mut handles = vec![];
+        for t in 0..8 {
+            let pool = pool.clone();
+            handles.push(std::thread::spawn(move || {
+                let out: Vec<i64> = pool.map("pool.add1", (t * 10)..(t * 10 + 10)).unwrap();
+                assert_eq!(out[0], t * 10 + 1);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! `FiberProcess` — the job-backed process.
+//!
+//! Starting a Fiber process submits a job to the cluster backend; the
+//! process's lifecycle *is* the job's lifecycle (paper, "Fundamentals").
+//! On `LocalBackend` it is a thread, on `ProcBackend` a real OS process of
+//! the same binary (the container-image guarantee).
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::cluster::{CancelToken, ClusterBackend, JobHandle, JobSpec, JobStatus, Resources};
+
+/// A running job-backed process.
+pub struct FiberProcess {
+    name: String,
+    handle: Arc<dyn JobHandle>,
+}
+
+impl FiberProcess {
+    /// Spawn a closure as a job on `backend`.
+    pub fn spawn(
+        backend: &dyn ClusterBackend,
+        name: impl Into<String>,
+        f: impl FnOnce(CancelToken) + Send + 'static,
+    ) -> Result<Self> {
+        let name = name.into();
+        let handle = backend.submit(JobSpec::thread(name.clone(), f))?;
+        Ok(Self { name, handle })
+    }
+
+    /// Spawn `fiber-cli <args…>` as a job on `backend` (proc/cluster).
+    pub fn spawn_cmd(
+        backend: &dyn ClusterBackend,
+        name: impl Into<String>,
+        args: Vec<String>,
+        resources: Resources,
+    ) -> Result<Self> {
+        let name = name.into();
+        let spec = JobSpec::command(name.clone(), args).with_resources(resources);
+        let handle = backend.submit(spec)?;
+        Ok(Self { name, handle })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn status(&self) -> JobStatus {
+        self.handle.status()
+    }
+
+    pub fn is_alive(&self) -> bool {
+        !self.handle.status().is_terminal()
+    }
+
+    /// Block until the process exits; returns its final status.
+    pub fn join(&self) -> JobStatus {
+        self.handle.wait()
+    }
+
+    /// Request termination (cooperative for threads, kill for processes).
+    pub fn terminate(&self) {
+        self.handle.terminate()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::LocalBackend;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    #[test]
+    fn spawn_join() {
+        let be = LocalBackend::new();
+        static RAN: AtomicBool = AtomicBool::new(false);
+        let p = FiberProcess::spawn(&be, "t", |_tok| {
+            RAN.store(true, Ordering::SeqCst);
+        })
+        .unwrap();
+        assert_eq!(p.join(), JobStatus::Succeeded);
+        assert!(RAN.load(Ordering::SeqCst));
+        assert!(!p.is_alive());
+    }
+
+    #[test]
+    fn terminate_cooperative() {
+        let be = LocalBackend::new();
+        let p = FiberProcess::spawn(&be, "loop", |tok| {
+            while !tok.is_cancelled() {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        })
+        .unwrap();
+        assert!(p.is_alive());
+        p.terminate();
+        assert_eq!(p.join(), JobStatus::Terminated);
+    }
+}

@@ -1,0 +1,305 @@
+//! `FiberQueue` — a queue shared by processes on different machines.
+//!
+//! Paper: "queues can be shared between many processes on different
+//! machines and each process can send to or receive from the same queue at
+//! the same time". Locally a queue is an in-process MPMC channel; across
+//! process boundaries it is hosted by a [`QueueHub`] (leader-side service)
+//! and reached over RPC.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::comms::chan::{self, Receiver, RecvError, Sender};
+use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::wire::{self, Decode, Encode};
+
+/// RPC tags for the queue protocol.
+pub mod tags {
+    pub const PUT: u32 = 10;
+    pub const GET: u32 = 11; // blocking with server-side timeout
+    pub const TRY_GET: u32 = 12;
+    pub const LEN: u32 = 13;
+    pub const CLOSE: u32 = 14;
+}
+
+/// Reply to a GET: `Some(bytes)`, `None` (would block), or closed (error).
+type GetReply = Result<Option<Vec<u8>>, String>;
+
+struct HubQueue {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+/// Hosts named byte queues and serves them over RPC.
+#[derive(Default)]
+pub struct QueueHub {
+    queues: Mutex<HashMap<String, HubQueue>>,
+}
+
+impl QueueHub {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self::default())
+    }
+
+    fn with_queue<R>(&self, name: &str, f: impl FnOnce(&HubQueue) -> R) -> R {
+        let mut qs = self.queues.lock().unwrap();
+        let q = qs.entry(name.to_string()).or_insert_with(|| {
+            let (tx, rx) = chan::unbounded();
+            HubQueue { tx, rx }
+        });
+        f(q)
+    }
+
+    pub fn put(&self, name: &str, bytes: Vec<u8>) -> Result<()> {
+        self.with_queue(name, |q| q.tx.send(bytes))
+            .map_err(|_| anyhow::anyhow!("queue closed"))
+    }
+
+    pub fn get(&self, name: &str, timeout: Duration) -> Result<Option<Vec<u8>>> {
+        let rx = self.with_queue(name, |q| q.rx.clone());
+        match rx.recv_timeout(timeout) {
+            Ok(b) => Ok(Some(b)),
+            Err(RecvError::Timeout) => Ok(None),
+            Err(_) => anyhow::bail!("queue closed"),
+        }
+    }
+
+    pub fn try_get(&self, name: &str) -> Result<Option<Vec<u8>>> {
+        let rx = self.with_queue(name, |q| q.rx.clone());
+        match rx.try_recv() {
+            Ok(b) => Ok(Some(b)),
+            Err(RecvError::Empty) => Ok(None),
+            Err(_) => anyhow::bail!("queue closed"),
+        }
+    }
+
+    pub fn len(&self, name: &str) -> usize {
+        self.with_queue(name, |q| q.rx.len())
+    }
+
+    pub fn close(&self, name: &str) {
+        self.with_queue(name, |q| q.tx.close());
+    }
+
+    /// Serve this hub over TCP.
+    pub fn serve_rpc(self: &Arc<Self>, bind: &str) -> Result<RpcServer> {
+        let hub = self.clone();
+        RpcServer::bind(
+            bind,
+            Arc::new(move |tag, payload| match tag {
+                tags::PUT => {
+                    let (name, bytes): (String, Vec<u8>) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    hub.put(&name, bytes).map_err(|e| e.to_string())?;
+                    Ok(Vec::new())
+                }
+                tags::GET => {
+                    let (name, timeout_ms): (String, u64) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    let r: GetReply = hub
+                        .get(&name, Duration::from_millis(timeout_ms.min(2_000)))
+                        .map_err(|e| e.to_string());
+                    Ok(wire::to_bytes(&r))
+                }
+                tags::TRY_GET => {
+                    let name: String =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    let r: GetReply = hub.try_get(&name).map_err(|e| e.to_string());
+                    Ok(wire::to_bytes(&r))
+                }
+                tags::LEN => {
+                    let name: String =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&(hub.len(&name) as u64)))
+                }
+                tags::CLOSE => {
+                    let name: String =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    hub.close(&name);
+                    Ok(Vec::new())
+                }
+                t => Err(format!("bad queue rpc tag {t}")),
+            }),
+        )
+    }
+}
+
+enum Backend {
+    Local(Arc<QueueHub>),
+    Remote(RpcClient),
+}
+
+/// A typed distributed queue.
+pub struct FiberQueue<T> {
+    name: String,
+    backend: Backend,
+    _t: std::marker::PhantomData<fn(T) -> T>,
+}
+
+impl<T: Encode + Decode> FiberQueue<T> {
+    /// A queue on a local (in-process) hub.
+    pub fn local(hub: &Arc<QueueHub>, name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            backend: Backend::Local(hub.clone()),
+            _t: std::marker::PhantomData,
+        }
+    }
+
+    /// Connect to a hub served over TCP.
+    pub fn connect(addr: std::net::SocketAddr, name: impl Into<String>) -> Result<Self> {
+        Ok(Self {
+            name: name.into(),
+            backend: Backend::Remote(RpcClient::connect(addr)?),
+            _t: std::marker::PhantomData,
+        })
+    }
+
+    pub fn put(&self, v: &T) -> Result<()> {
+        let bytes = wire::to_bytes(v);
+        match &self.backend {
+            Backend::Local(hub) => hub.put(&self.name, bytes),
+            Backend::Remote(cli) => {
+                cli.call(tags::PUT, &wire::to_bytes(&(self.name.clone(), bytes)))?;
+                Ok(())
+            }
+        }
+    }
+
+    /// Blocking get with timeout. `Ok(None)` on timeout.
+    pub fn get(&self, timeout: Duration) -> Result<Option<T>> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            let got: Option<Vec<u8>> = match &self.backend {
+                Backend::Local(hub) => hub.get(&self.name, timeout)?,
+                Backend::Remote(cli) => {
+                    // Server blocks ≤2 s per round; loop until deadline.
+                    let remaining = deadline.saturating_duration_since(std::time::Instant::now());
+                    let ms = (remaining.as_millis() as u64).min(2_000);
+                    let reply = cli.call(
+                        tags::GET,
+                        &wire::to_bytes(&(self.name.clone(), ms)),
+                    )?;
+                    let r: GetReply =
+                        wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("{e}"))?;
+                    r.map_err(|e| anyhow::anyhow!(e))?
+                }
+            };
+            match got {
+                Some(bytes) => {
+                    return Ok(Some(
+                        wire::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("decode: {e}"))?,
+                    ))
+                }
+                None if std::time::Instant::now() >= deadline => return Ok(None),
+                None => continue,
+            }
+        }
+    }
+
+    pub fn try_get(&self) -> Result<Option<T>> {
+        let got = match &self.backend {
+            Backend::Local(hub) => hub.try_get(&self.name)?,
+            Backend::Remote(cli) => {
+                let reply = cli.call(tags::TRY_GET, &wire::to_bytes(&self.name))?;
+                let r: GetReply = wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("{e}"))?;
+                r.map_err(|e| anyhow::anyhow!(e))?
+            }
+        };
+        match got {
+            Some(bytes) => Ok(Some(
+                wire::from_bytes(&bytes).map_err(|e| anyhow::anyhow!("decode: {e}"))?,
+            )),
+            None => Ok(None),
+        }
+    }
+
+    pub fn len(&self) -> Result<usize> {
+        match &self.backend {
+            Backend::Local(hub) => Ok(hub.len(&self.name)),
+            Backend::Remote(cli) => {
+                let n: u64 = cli.call_typed(tags::LEN, &self.name)?;
+                Ok(n as usize)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_queue_roundtrip() {
+        let hub = QueueHub::new();
+        let q: FiberQueue<(u32, String)> = FiberQueue::local(&hub, "test");
+        q.put(&(1, "a".into())).unwrap();
+        q.put(&(2, "b".into())).unwrap();
+        assert_eq!(q.len().unwrap(), 2);
+        assert_eq!(q.get(Duration::from_millis(100)).unwrap(), Some((1, "a".into())));
+        assert_eq!(q.try_get().unwrap(), Some((2, "b".into())));
+        assert_eq!(q.try_get().unwrap(), None);
+    }
+
+    #[test]
+    fn remote_queue_roundtrip() {
+        let hub = QueueHub::new();
+        let srv = hub.serve_rpc("127.0.0.1:0").unwrap();
+        let q: FiberQueue<u64> = FiberQueue::connect(srv.local_addr(), "rq").unwrap();
+        q.put(&7).unwrap();
+        q.put(&8).unwrap();
+        assert_eq!(q.len().unwrap(), 2);
+        assert_eq!(q.get(Duration::from_millis(200)).unwrap(), Some(7));
+        assert_eq!(q.get(Duration::from_millis(200)).unwrap(), Some(8));
+        assert_eq!(q.try_get().unwrap(), None);
+    }
+
+    #[test]
+    fn remote_and_local_share_the_queue() {
+        let hub = QueueHub::new();
+        let srv = hub.serve_rpc("127.0.0.1:0").unwrap();
+        let local: FiberQueue<u32> = FiberQueue::local(&hub, "shared");
+        let remote: FiberQueue<u32> = FiberQueue::connect(srv.local_addr(), "shared").unwrap();
+        local.put(&5).unwrap();
+        assert_eq!(remote.get(Duration::from_millis(200)).unwrap(), Some(5));
+        remote.put(&6).unwrap();
+        assert_eq!(local.get(Duration::from_millis(200)).unwrap(), Some(6));
+    }
+
+    #[test]
+    fn get_timeout_returns_none() {
+        let hub = QueueHub::new();
+        let q: FiberQueue<u8> = FiberQueue::local(&hub, "empty");
+        let t = std::time::Instant::now();
+        assert_eq!(q.get(Duration::from_millis(30)).unwrap(), None);
+        assert!(t.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn many_producers_consumers_via_rpc() {
+        let hub = QueueHub::new();
+        let srv = hub.serve_rpc("127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+        let mut handles = vec![];
+        for p in 0..3u64 {
+            handles.push(std::thread::spawn(move || {
+                let q: FiberQueue<u64> = FiberQueue::connect(addr, "mpmc").unwrap();
+                for i in 0..50 {
+                    q.put(&(p * 100 + i)).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let q: FiberQueue<u64> = FiberQueue::local(&hub, "mpmc");
+        let mut got = vec![];
+        while let Some(v) = q.try_get().unwrap() {
+            got.push(v);
+        }
+        assert_eq!(got.len(), 150);
+    }
+}

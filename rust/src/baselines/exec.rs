@@ -1,0 +1,263 @@
+//! The executor contract + the two cheap architectures (fiber & mp-like).
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::api::pool::Pool;
+use crate::comms::chan;
+use crate::coordinator::task::execute_registered;
+
+/// Common interface the Fig 3a harness drives.
+pub trait Executor: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Execute every item with the registered function `fn_name`, returning
+    /// outputs in input order.
+    fn run_batch(&self, fn_name: &str, items: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>>;
+    /// Worker count (for reporting).
+    fn workers(&self) -> usize;
+}
+
+/// Busy-wait for `dur` (models interpreter/JVM per-message cost without
+/// yielding the core the way `sleep` would).
+pub fn busy_wait(dur: Duration) {
+    let t0 = Instant::now();
+    while t0.elapsed() < dur {
+        std::hint::spin_loop();
+    }
+}
+
+/// Fiber itself, adapted to the harness. Uses `map_chunked` with
+/// multiprocessing-compatible default chunking so the Fig 3a comparison is
+/// batching-fair.
+pub struct FiberExec {
+    pool: Pool,
+    n: usize,
+}
+
+impl FiberExec {
+    pub fn new(workers: usize) -> Result<Self> {
+        Ok(Self {
+            pool: Pool::new(workers)?,
+            n: workers,
+        })
+    }
+
+    /// multiprocessing's default chunksize: `ceil(len / (4 * workers))`.
+    pub fn default_chunksize(len: usize, workers: usize) -> usize {
+        len.div_ceil(4 * workers.max(1)).max(1)
+    }
+}
+
+impl Executor for FiberExec {
+    fn name(&self) -> &'static str {
+        "fiber"
+    }
+
+    fn run_batch(&self, fn_name: &str, items: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
+        let cs = Self::default_chunksize(items.len(), self.n);
+        self.pool.map_raw_chunked(fn_name, items, cs)
+    }
+
+    fn workers(&self) -> usize {
+        self.n
+    }
+}
+
+/// Python-multiprocessing-like pool: strictly local, one dedicated channel
+/// per worker, all chunks dealt out **upfront** (mp's `map` semantics), no
+/// pending table, no failure handling, no remote capability. This is the
+/// lower-bound reference in Fig 3a.
+pub struct MpLike {
+    task_txs: Vec<chan::Sender<(u64, String, Vec<Vec<u8>>)>>,
+    results_rx: chan::Receiver<(u64, Result<Vec<Vec<u8>>, String>)>,
+    n: usize,
+    rr: std::sync::atomic::AtomicUsize,
+}
+
+impl MpLike {
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (results_tx, results_rx) = chan::unbounded();
+        let mut task_txs = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx) = chan::unbounded::<(u64, String, Vec<Vec<u8>>)>();
+            let results_tx = results_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("mp-worker-{w}"))
+                .spawn(move || {
+                    while let Ok((chunk_id, fn_name, chunk)) = rx.recv() {
+                        let mut outs = Vec::with_capacity(chunk.len());
+                        let mut err = None;
+                        for item in &chunk {
+                            match execute_registered(&fn_name, item) {
+                                Ok(o) => outs.push(o),
+                                Err(e) => {
+                                    err = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        let msg = match err {
+                            None => (chunk_id, Ok(outs)),
+                            Some(e) => (chunk_id, Err(e)),
+                        };
+                        if results_tx.send(msg).is_err() {
+                            return;
+                        }
+                    }
+                })
+                .expect("spawn mp worker");
+            task_txs.push(tx);
+        }
+        Self {
+            task_txs,
+            results_rx,
+            n: workers,
+            rr: std::sync::atomic::AtomicUsize::new(0),
+        }
+    }
+}
+
+impl Executor for MpLike {
+    fn name(&self) -> &'static str {
+        "multiprocessing"
+    }
+
+    fn run_batch(&self, fn_name: &str, items: Vec<Vec<u8>>) -> Result<Vec<Vec<u8>>> {
+        let n_items = items.len();
+        if n_items == 0 {
+            return Ok(vec![]);
+        }
+        let cs = FiberExec::default_chunksize(n_items, self.n);
+        // Deal chunks round-robin upfront, like mp.Pool._map_async.
+        let mut chunk_sizes = Vec::new();
+        let mut iter = items.into_iter().peekable();
+        let mut chunk_id = 0u64;
+        while iter.peek().is_some() {
+            let chunk: Vec<Vec<u8>> = iter.by_ref().take(cs).collect();
+            chunk_sizes.push(chunk.len());
+            let w = self.rr.fetch_add(1, std::sync::atomic::Ordering::Relaxed) % self.n;
+            self.task_txs[w]
+                .send((chunk_id, fn_name.to_string(), chunk))
+                .map_err(|_| anyhow::anyhow!("mp pool closed"))?;
+            chunk_id += 1;
+        }
+        let starts: Vec<usize> = chunk_sizes
+            .iter()
+            .scan(0usize, |acc, &k| {
+                let s = *acc;
+                *acc += k;
+                Some(s)
+            })
+            .collect();
+        let mut out: Vec<Option<Vec<u8>>> = (0..n_items).map(|_| None).collect();
+        for _ in 0..chunk_sizes.len() {
+            let (cid, res) = self
+                .results_rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("mp pool closed"))?;
+            let outs = res.map_err(|e| anyhow::anyhow!("task failed: {e}"))?;
+            let start = starts[cid as usize];
+            for (k, o) in outs.into_iter().enumerate() {
+                out[start + k] = Some(o);
+            }
+        }
+        out.into_iter()
+            .map(|o| o.ok_or_else(|| anyhow::anyhow!("missing result")))
+            .collect()
+    }
+
+    fn workers(&self) -> usize {
+        self.n
+    }
+}
+
+impl Drop for MpLike {
+    fn drop(&mut self) {
+        for tx in &self.task_txs {
+            tx.close();
+        }
+    }
+}
+
+/// Register the benchmark task functions (sleep + echo + walker rollout).
+/// Idempotent; called by benches, tests and `fiber-cli worker`.
+pub fn register_bench_tasks() {
+    use crate::coordinator::task::register_task;
+    register_task("bench.sleep_us", |us: u64| {
+        std::thread::sleep(Duration::from_micros(us));
+        Ok::<u64, String>(us)
+    });
+    register_task("bench.echo", |x: u64| Ok::<u64, String>(x));
+    register_task("bench.walker_rollout", |(seed, max_steps): (u64, u64)| {
+        use crate::envs::{rollout, Action, Walker2d};
+        let mut env = Walker2d::hardcore(seed);
+        let mut s = seed;
+        let (reward, steps) = rollout(&mut env, seed, max_steps as usize, |_| {
+            // xorshift-cheap random policy: the bench measures dispatch, not
+            // learning.
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            Action::Continuous(vec![
+                (s & 0xff) as f32 / 127.5 - 1.0,
+                ((s >> 8) & 0xff) as f32 / 127.5 - 1.0,
+                ((s >> 16) & 0xff) as f32 / 127.5 - 1.0,
+                ((s >> 24) & 0xff) as f32 / 127.5 - 1.0,
+            ])
+        });
+        Ok::<(f32, u64), String>((reward, steps as u64))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire;
+
+    fn items(n: u64) -> Vec<Vec<u8>> {
+        (0..n).map(|i| wire::to_bytes(&i)).collect()
+    }
+
+    #[test]
+    fn mp_like_returns_ordered() {
+        register_bench_tasks();
+        let ex = MpLike::new(4);
+        let out = ex.run_batch("bench.echo", items(100)).unwrap();
+        let vals: Vec<u64> = out.iter().map(|b| wire::from_bytes(b).unwrap()).collect();
+        assert_eq!(vals, (0..100).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn fiber_exec_matches_mp_like() {
+        register_bench_tasks();
+        let f = FiberExec::new(4).unwrap();
+        let m = MpLike::new(4);
+        let a = f.run_batch("bench.echo", items(53)).unwrap();
+        let b = m.run_batch("bench.echo", items(53)).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn empty_batch() {
+        register_bench_tasks();
+        let ex = MpLike::new(2);
+        assert!(ex.run_batch("bench.echo", vec![]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn default_chunksize_matches_python() {
+        // divmod semantics of CPython's Pool.map default.
+        assert_eq!(FiberExec::default_chunksize(5000, 5), 250);
+        assert_eq!(FiberExec::default_chunksize(10, 5), 1);
+        assert_eq!(FiberExec::default_chunksize(0, 5), 1);
+    }
+
+    #[test]
+    fn busy_wait_duration() {
+        let t0 = Instant::now();
+        busy_wait(Duration::from_micros(500));
+        assert!(t0.elapsed() >= Duration::from_micros(450));
+    }
+}

@@ -1,0 +1,24 @@
+//! Comparator executors for the paper's experiments.
+//!
+//! Fig 3a compares Fiber against Python multiprocessing, IPyParallel and
+//! Spark. Running the originals here would measure JVM-vs-Rust, not
+//! architecture, so each comparator is re-implemented *architecturally*
+//! (DESIGN.md §2): the multiprocessing-like pool is local-only with
+//! per-worker channels and upfront chunking; the IPyParallel-like executor
+//! routes **every** message through a central hub with per-message
+//! bookkeeping; the Spark-like executor has a driver that schedules tasks
+//! one at a time with a per-task dispatch cost. Per-message "interpreter
+//! tax" constants calibrate each architecture to its published overhead
+//! scale and are documented in EXPERIMENTS.md.
+//!
+//! [`sim_models`] contains the virtual-time counterparts used for the
+//! 32–1024-worker scaling figures on this 1-core testbed.
+
+pub mod exec;
+pub mod ipp_like;
+pub mod sim_models;
+pub mod spark_like;
+
+pub use exec::{busy_wait, Executor, FiberExec, MpLike};
+pub use ipp_like::IppLike;
+pub use spark_like::SparkLike;

@@ -1,0 +1,134 @@
+//! Mini bench harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated sampling with mean/std/min/max, and markdown
+//! table rendering so every `cargo bench` target prints the same rows the
+//! paper's figures plot. Used by the `rust/benches/*.rs` targets (all
+//! `harness = false`).
+
+use crate::util::{Stopwatch, Welford};
+
+/// One measured configuration (a row in a results table).
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub label: String,
+    pub stats: Welford,
+}
+
+impl Sample {
+    pub fn mean_s(&self) -> f64 {
+        self.stats.mean()
+    }
+}
+
+/// Measure `f` for `samples` runs after `warmup` runs; returns seconds stats.
+pub fn measure(warmup: usize, samples: usize, mut f: impl FnMut()) -> Welford {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut w = Welford::new();
+    for _ in 0..samples {
+        let sw = Stopwatch::start();
+        f();
+        w.add(sw.elapsed_s());
+    }
+    w
+}
+
+/// A results table: rows × columns of `Option<f64>` seconds (None = failed,
+/// rendered as the paper's red ✗).
+pub struct Table {
+    pub title: String,
+    pub row_header: String,
+    pub col_labels: Vec<String>,
+    pub rows: Vec<(String, Vec<Option<f64>>)>,
+    /// Unit formatter for cells (defaults to seconds with 3 sig figs).
+    pub unit: &'static str,
+}
+
+impl Table {
+    pub fn new(
+        title: impl Into<String>,
+        row_header: impl Into<String>,
+        col_labels: Vec<String>,
+    ) -> Self {
+        Self {
+            title: title.into(),
+            row_header: row_header.into(),
+            col_labels,
+            rows: Vec::new(),
+            unit: "s",
+        }
+    }
+
+    pub fn add_row(&mut self, label: impl Into<String>, cells: Vec<Option<f64>>) {
+        assert_eq!(cells.len(), self.col_labels.len(), "row width");
+        self.rows.push((label.into(), cells));
+    }
+
+    fn fmt_cell(&self, v: Option<f64>) -> String {
+        match v {
+            None => "✗".to_string(),
+            Some(x) if x >= 100.0 => format!("{x:.0}{}", self.unit),
+            Some(x) if x >= 1.0 => format!("{x:.2}{}", self.unit),
+            Some(x) if x >= 1e-3 => format!("{:.2}m{}", x * 1e3, self.unit),
+            Some(x) => format!("{:.1}µ{}", x * 1e6, self.unit),
+        }
+    }
+
+    /// Render as a markdown table.
+    pub fn render(&self) -> String {
+        let mut out = format!("\n### {}\n\n", self.title);
+        out += &format!("| {} |", self.row_header);
+        for c in &self.col_labels {
+            out += &format!(" {c} |");
+        }
+        out += "\n|---|";
+        out += &"---|".repeat(self.col_labels.len());
+        out += "\n";
+        for (label, cells) in &self.rows {
+            out += &format!("| {label} |");
+            for &c in cells {
+                out += &format!(" {} |", self.fmt_cell(c));
+            }
+            out += "\n";
+        }
+        out
+    }
+
+    /// Render and print.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_counts_samples() {
+        let mut calls = 0;
+        let w = measure(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(w.count(), 5);
+        assert!(w.mean() >= 0.0);
+    }
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("Overhead", "framework", vec!["1s".into(), "1ms".into()]);
+        t.add_row("fiber", vec![Some(1.02), Some(0.0013)]);
+        t.add_row("ipyparallel", vec![Some(1.5), None]);
+        let s = t.render();
+        assert!(s.contains("| fiber | 1.02s | 1.30ms |"), "{s}");
+        assert!(s.contains("| ipyparallel | 1.50s | ✗ |"), "{s}");
+        assert!(s.contains("### Overhead"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        let mut t = Table::new("t", "r", vec!["a".into()]);
+        t.add_row("x", vec![Some(1.0), Some(2.0)]);
+    }
+}

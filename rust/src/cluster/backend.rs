@@ -1,0 +1,185 @@
+//! The `ClusterBackend` contract shared by all real-execution backends.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Globally unique job id within this leader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct JobId(pub u64);
+
+static NEXT_JOB_ID: AtomicU64 = AtomicU64::new(1);
+
+impl JobId {
+    pub fn fresh() -> Self {
+        JobId(NEXT_JOB_ID.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job-{}", self.0)
+    }
+}
+
+/// Resource request carried by every job (the cluster layer does the
+/// accounting; local backends ignore it but keep it for parity with the
+/// simulated cluster).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Resources {
+    pub cpu_milli: u32,
+    pub mem_mb: u32,
+    pub gpu: u32,
+}
+
+impl Default for Resources {
+    fn default() -> Self {
+        Self {
+            cpu_milli: 1000,
+            mem_mb: 256,
+            gpu: 0,
+        }
+    }
+}
+
+/// Cooperative cancellation token handed to thread-backed jobs.
+///
+/// Real cluster managers deliver SIGTERM; a thread cannot be killed safely,
+/// so thread jobs poll this token at loop boundaries — the same contract k8s
+/// pods have with graceful termination.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+}
+
+/// What a job runs.
+pub enum WorkSpec {
+    /// A closure executed on a dedicated thread (LocalBackend). The closure
+    /// must poll the [`CancelToken`] to honour termination.
+    Closure(Box<dyn FnOnce(CancelToken) + Send + 'static>),
+    /// `fiber-cli <args…>` as a child OS process (ProcBackend). The leader
+    /// address etc. are passed through args.
+    Command { args: Vec<String> },
+}
+
+impl std::fmt::Debug for WorkSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WorkSpec::Closure(_) => write!(f, "WorkSpec::Closure"),
+            WorkSpec::Command { args } => write!(f, "WorkSpec::Command({args:?})"),
+        }
+    }
+}
+
+/// A job submission: name + resources + payload, mirroring a pod spec.
+#[derive(Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub resources: Resources,
+    pub work: WorkSpec,
+}
+
+impl JobSpec {
+    pub fn thread(
+        name: impl Into<String>,
+        f: impl FnOnce(CancelToken) + Send + 'static,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            resources: Resources::default(),
+            work: WorkSpec::Closure(Box::new(f)),
+        }
+    }
+
+    pub fn command(name: impl Into<String>, args: Vec<String>) -> Self {
+        Self {
+            name: name.into(),
+            resources: Resources::default(),
+            work: WorkSpec::Command { args },
+        }
+    }
+
+    pub fn with_resources(mut self, r: Resources) -> Self {
+        self.resources = r;
+        self
+    }
+}
+
+/// Lifecycle state of a job, as tracked by its backend.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    Pending,
+    Running,
+    Succeeded,
+    /// The job failed (panic, nonzero exit, node failure, …).
+    Failed(String),
+    /// The job was terminated by request.
+    Terminated,
+}
+
+impl JobStatus {
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, JobStatus::Pending | JobStatus::Running)
+    }
+}
+
+/// Handle to a submitted job.
+pub trait JobHandle: Send + Sync {
+    fn id(&self) -> JobId;
+    fn status(&self) -> JobStatus;
+    /// Block until the job reaches a terminal state.
+    fn wait(&self) -> JobStatus;
+    /// Request termination (idempotent, asynchronous).
+    fn terminate(&self);
+}
+
+/// A backend that can create/track/terminate jobs on some cluster manager.
+pub trait ClusterBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn submit(&self, spec: JobSpec) -> anyhow::Result<Arc<dyn JobHandle>>;
+    /// Number of jobs currently in a non-terminal state.
+    fn active_jobs(&self) -> usize;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_ids_are_unique() {
+        let a = JobId::fresh();
+        let b = JobId::fresh();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn cancel_token_shared() {
+        let t = CancelToken::new();
+        let t2 = t.clone();
+        assert!(!t.is_cancelled());
+        t2.cancel();
+        assert!(t.is_cancelled());
+    }
+
+    #[test]
+    fn status_terminality() {
+        assert!(!JobStatus::Pending.is_terminal());
+        assert!(!JobStatus::Running.is_terminal());
+        assert!(JobStatus::Succeeded.is_terminal());
+        assert!(JobStatus::Failed("x".into()).is_terminal());
+        assert!(JobStatus::Terminated.is_terminal());
+    }
+}

@@ -1,0 +1,189 @@
+//! `LocalBackend` — jobs are threads in the current process.
+//!
+//! This is the "laptop" backend: the same program that later runs on a
+//! cluster runs here with zero setup, the property the paper's API design
+//! optimises for. Panics in job closures are caught and surface as
+//! [`JobStatus::Failed`], which is what drives pool worker replacement in
+//! the fault-tolerance tests.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use super::backend::{
+    CancelToken, ClusterBackend, JobHandle, JobId, JobSpec, JobStatus, WorkSpec,
+};
+
+/// Thread-backed cluster backend.
+#[derive(Default)]
+pub struct LocalBackend {
+    active: Arc<AtomicUsize>,
+}
+
+impl LocalBackend {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+struct LocalJob {
+    id: JobId,
+    state: Arc<(Mutex<JobStatus>, Condvar)>,
+    token: CancelToken,
+}
+
+impl JobHandle for LocalJob {
+    fn id(&self) -> JobId {
+        self.id
+    }
+
+    fn status(&self) -> JobStatus {
+        self.state.0.lock().unwrap().clone()
+    }
+
+    fn wait(&self) -> JobStatus {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        while !st.is_terminal() {
+            st = cv.wait(st).unwrap();
+        }
+        st.clone()
+    }
+
+    fn terminate(&self) {
+        self.token.cancel();
+    }
+}
+
+impl ClusterBackend for LocalBackend {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn submit(&self, spec: JobSpec) -> Result<Arc<dyn JobHandle>> {
+        let WorkSpec::Closure(f) = spec.work else {
+            anyhow::bail!("LocalBackend only runs WorkSpec::Closure jobs");
+        };
+        let id = JobId::fresh();
+        let state = Arc::new((Mutex::new(JobStatus::Running), Condvar::new()));
+        let token = CancelToken::new();
+        let job = Arc::new(LocalJob {
+            id,
+            state: state.clone(),
+            token: token.clone(),
+        });
+        let active = self.active.clone();
+        active.fetch_add(1, Ordering::SeqCst);
+        std::thread::Builder::new()
+            .name(format!("{}-{id}", spec.name))
+            .spawn(move || {
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    f(token.clone())
+                }));
+                let final_status = match result {
+                    Ok(()) if token.is_cancelled() => JobStatus::Terminated,
+                    Ok(()) => JobStatus::Succeeded,
+                    Err(p) => JobStatus::Failed(panic_msg(&*p)),
+                };
+                // Decrement before notifying so `wait()`-then-`active_jobs()`
+                // observes a consistent count.
+                active.fetch_sub(1, Ordering::SeqCst);
+                let (lock, cv) = &*state;
+                *lock.lock().unwrap() = final_status;
+                cv.notify_all();
+            })?;
+        Ok(job)
+    }
+
+    fn active_jobs(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic (non-string payload)".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn successful_job() {
+        let b = LocalBackend::new();
+        let h = b
+            .submit(JobSpec::thread("t", |_tok| {
+                std::thread::sleep(Duration::from_millis(5));
+            }))
+            .unwrap();
+        assert_eq!(h.wait(), JobStatus::Succeeded);
+        assert_eq!(b.active_jobs(), 0);
+    }
+
+    #[test]
+    fn panicking_job_reports_failed() {
+        let b = LocalBackend::new();
+        let h = b
+            .submit(JobSpec::thread("boom", |_tok| panic!("exploded")))
+            .unwrap();
+        match h.wait() {
+            JobStatus::Failed(msg) => assert!(msg.contains("exploded")),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn terminate_is_cooperative() {
+        let b = LocalBackend::new();
+        let h = b
+            .submit(JobSpec::thread("loop", |tok| {
+                while !tok.is_cancelled() {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }))
+            .unwrap();
+        assert_eq!(h.status(), JobStatus::Running);
+        h.terminate();
+        assert_eq!(h.wait(), JobStatus::Terminated);
+    }
+
+    #[test]
+    fn rejects_command_jobs() {
+        let b = LocalBackend::new();
+        assert!(b
+            .submit(JobSpec::command("c", vec!["worker".into()]))
+            .is_err());
+    }
+
+    #[test]
+    fn active_jobs_counts() {
+        let b = LocalBackend::new();
+        let hs: Vec<_> = (0..3)
+            .map(|_| {
+                b.submit(JobSpec::thread("w", |tok| {
+                    while !tok.is_cancelled() {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                }))
+                .unwrap()
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(10));
+        assert_eq!(b.active_jobs(), 3);
+        for h in &hs {
+            h.terminate();
+        }
+        for h in &hs {
+            h.wait();
+        }
+        assert_eq!(b.active_jobs(), 0);
+    }
+}

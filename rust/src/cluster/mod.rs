@@ -1,0 +1,31 @@
+//! The backend + cluster layers: job creation, tracking and termination.
+//!
+//! Fiber's key architectural move is that **a process is a cluster job**:
+//! starting a Fiber process submits a job to whatever cluster manager the
+//! program runs on, and the job's lifecycle *is* the process lifecycle.
+//! This module provides that abstraction and three backends:
+//!
+//! * [`LocalBackend`] — jobs are threads in the current process (the
+//!   "prototype on a laptop" backend; analogous to multiprocessing).
+//! * [`ProcBackend`] — jobs are real OS child processes running this same
+//!   binary (`fiber-cli worker …`), the truthful realization of job-backed
+//!   processes on one machine.
+//! * [`simk8s::SimCluster`] — a simulated Kubernetes-style cluster manager
+//!   (nodes, pods, resource accounting, scheduling latency, failure
+//!   injection) driven in **virtual time** by the discrete-event engine in
+//!   [`des`]. This is the documented substitution for the paper's
+//!   1000-core Kubernetes/Peloton testbed on this 1-core machine.
+
+pub mod backend;
+pub mod des;
+pub mod local;
+pub mod proc;
+pub mod simk8s;
+
+pub use backend::{
+    CancelToken, ClusterBackend, JobHandle, JobId, JobSpec, JobStatus, Resources, WorkSpec,
+};
+pub use des::{EventQueue, SimTime};
+pub use local::LocalBackend;
+pub use proc::ProcBackend;
+pub use simk8s::{NodeSpec, PodSpec, SimCluster, SimClusterConfig};

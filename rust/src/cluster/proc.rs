@@ -1,0 +1,185 @@
+//! `ProcBackend` — jobs are real OS child processes of this binary.
+//!
+//! This realizes the paper's *job-backed process* faithfully on a single
+//! machine: every Fiber process is a separate OS process with its own
+//! address space, spawned with the same executable (the container-image
+//! analogue: identical code + environment for parent and children), tracked
+//! by pid, and killable. Workers rendezvous with the leader over TCP
+//! ([`crate::comms::rpc`]); see `fiber_cli::worker` for the entrypoint.
+
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::backend::{ClusterBackend, JobHandle, JobId, JobSpec, JobStatus, WorkSpec};
+
+/// OS-process cluster backend.
+pub struct ProcBackend {
+    exe: std::path::PathBuf,
+    active: Arc<AtomicUsize>,
+}
+
+impl ProcBackend {
+    /// Spawn children of the current executable (the normal case).
+    pub fn new() -> Result<Self> {
+        Ok(Self {
+            exe: std::env::current_exe().context("current_exe")?,
+            active: Arc::new(AtomicUsize::new(0)),
+        })
+    }
+
+    /// Spawn children of an explicit executable (tests use /bin/sh etc.).
+    pub fn with_exe(exe: impl Into<std::path::PathBuf>) -> Self {
+        Self {
+            exe: exe.into(),
+            active: Arc::new(AtomicUsize::new(0)),
+        }
+    }
+}
+
+struct ProcJob {
+    id: JobId,
+    child: Mutex<Child>,
+    done: Mutex<Option<JobStatus>>,
+    terminated: std::sync::atomic::AtomicBool,
+    active: Arc<AtomicUsize>,
+}
+
+impl ProcJob {
+    fn poll(&self) -> JobStatus {
+        let mut done = self.done.lock().unwrap();
+        if let Some(st) = done.clone() {
+            return st;
+        }
+        let mut child = self.child.lock().unwrap();
+        match child.try_wait() {
+            Ok(Some(status)) => {
+                let st = if self.terminated.load(Ordering::SeqCst) {
+                    JobStatus::Terminated
+                } else if status.success() {
+                    JobStatus::Succeeded
+                } else {
+                    JobStatus::Failed(format!("exit status {status}"))
+                };
+                *done = Some(st.clone());
+                self.active.fetch_sub(1, Ordering::SeqCst);
+                st
+            }
+            Ok(None) => JobStatus::Running,
+            Err(e) => {
+                let st = JobStatus::Failed(format!("wait error: {e}"));
+                *done = Some(st.clone());
+                self.active.fetch_sub(1, Ordering::SeqCst);
+                st
+            }
+        }
+    }
+}
+
+impl JobHandle for ProcJob {
+    fn id(&self) -> JobId {
+        self.id
+    }
+
+    fn status(&self) -> JobStatus {
+        self.poll()
+    }
+
+    fn wait(&self) -> JobStatus {
+        loop {
+            let st = self.poll();
+            if st.is_terminal() {
+                return st;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    fn terminate(&self) {
+        self.terminated.store(true, Ordering::SeqCst);
+        let mut child = self.child.lock().unwrap();
+        let _ = child.kill();
+    }
+}
+
+impl ClusterBackend for ProcBackend {
+    fn name(&self) -> &'static str {
+        "proc"
+    }
+
+    fn submit(&self, spec: JobSpec) -> Result<Arc<dyn JobHandle>> {
+        let WorkSpec::Command { args } = spec.work else {
+            anyhow::bail!("ProcBackend only runs WorkSpec::Command jobs");
+        };
+        let child = Command::new(&self.exe)
+            .args(&args)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawn {:?} {:?}", self.exe, args))?;
+        self.active.fetch_add(1, Ordering::SeqCst);
+        Ok(Arc::new(ProcJob {
+            id: JobId::fresh(),
+            child: Mutex::new(child),
+            done: Mutex::new(None),
+            terminated: std::sync::atomic::AtomicBool::new(false),
+            active: self.active.clone(),
+        }))
+    }
+
+    fn active_jobs(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sh() -> ProcBackend {
+        ProcBackend::with_exe("/bin/sh")
+    }
+
+    #[test]
+    fn successful_process() {
+        let b = sh();
+        let h = b
+            .submit(JobSpec::command("ok", vec!["-c".into(), "exit 0".into()]))
+            .unwrap();
+        assert_eq!(h.wait(), JobStatus::Succeeded);
+        assert_eq!(b.active_jobs(), 0);
+    }
+
+    #[test]
+    fn failing_process() {
+        let b = sh();
+        let h = b
+            .submit(JobSpec::command("bad", vec!["-c".into(), "exit 3".into()]))
+            .unwrap();
+        match h.wait() {
+            JobStatus::Failed(msg) => assert!(msg.contains("3"), "{msg}"),
+            other => panic!("expected Failed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn terminate_kills() {
+        let b = sh();
+        let h = b
+            .submit(JobSpec::command("sleep", vec!["-c".into(), "sleep 30".into()]))
+            .unwrap();
+        assert_eq!(h.status(), JobStatus::Running);
+        h.terminate();
+        assert_eq!(h.wait(), JobStatus::Terminated);
+    }
+
+    #[test]
+    fn rejects_closure_jobs() {
+        let b = sh();
+        assert!(b.submit(JobSpec::thread("t", |_| {})).is_err());
+    }
+}

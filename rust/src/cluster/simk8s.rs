@@ -1,0 +1,539 @@
+//! A simulated Kubernetes-style cluster manager in virtual time.
+//!
+//! This is the documented substitution for the paper's Kubernetes/Peloton
+//! testbed (DESIGN.md §2): nodes with CPU/mem/GPU capacity, a FIFO first-fit
+//! pod scheduler with a configurable scheduling latency (the paper's k8s
+//! clusters take tens of ms to hundreds of ms to place a pod), pod start
+//! latency (container boot), and exponential failure injection. The
+//! dynamic-scaling experiment (E5) and the virtual-time scaling runs (E2)
+//! measure pod placement, utilization and recovery against this model.
+//!
+//! Pods here don't execute code — they occupy resources for a requested
+//! virtual duration (or indefinitely for service pods until terminated).
+//! The *protocol* simulations (task dispatch etc.) are layered on the same
+//! event engine in `baselines::sim_models`.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::cluster::des::{EventQueue, SimTime};
+use crate::cluster::Resources;
+use crate::util::Rng;
+
+/// Capacity of one simulated node.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeSpec {
+    pub cpu_milli: u32,
+    pub mem_mb: u32,
+    pub gpu: u32,
+}
+
+impl NodeSpec {
+    pub fn cpu_only(cores: u32, mem_mb: u32) -> Self {
+        Self {
+            cpu_milli: cores * 1000,
+            mem_mb,
+            gpu: 0,
+        }
+    }
+
+    pub fn with_gpu(cores: u32, mem_mb: u32, gpu: u32) -> Self {
+        Self {
+            cpu_milli: cores * 1000,
+            mem_mb,
+            gpu,
+        }
+    }
+}
+
+/// Cluster-wide simulation parameters.
+#[derive(Clone, Debug)]
+pub struct SimClusterConfig {
+    pub nodes: Vec<NodeSpec>,
+    /// Mean scheduler decision latency per pod (exponential), ns.
+    pub schedule_latency_ns: u64,
+    /// Mean container start latency (exponential), ns.
+    pub start_latency_ns: u64,
+    /// Pod failure rate per virtual second (0 disables failure injection).
+    pub failure_rate_per_s: f64,
+    pub seed: u64,
+}
+
+impl Default for SimClusterConfig {
+    fn default() -> Self {
+        Self {
+            // 32 nodes × 32 cores = 1024 cores, the paper's ES scale.
+            nodes: vec![NodeSpec::cpu_only(32, 128_000); 32],
+            schedule_latency_ns: 50_000_000, // 50 ms
+            start_latency_ns: 800_000_000,   // 0.8 s container boot
+            failure_rate_per_s: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Pod identifier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PodId(pub u64);
+
+/// A pod request.
+#[derive(Clone, Debug)]
+pub struct PodSpec {
+    pub name: String,
+    pub resources: Resources,
+    /// Run duration in virtual ns; `None` = service pod (runs until
+    /// terminated).
+    pub duration_ns: Option<u64>,
+}
+
+/// Pod lifecycle state.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PodPhase {
+    Pending,
+    Scheduled { node: usize },
+    Running { node: usize },
+    Succeeded,
+    Failed(String),
+    Terminated,
+}
+
+impl PodPhase {
+    pub fn is_terminal(&self) -> bool {
+        matches!(
+            self,
+            PodPhase::Succeeded | PodPhase::Failed(_) | PodPhase::Terminated
+        )
+    }
+}
+
+#[derive(Debug)]
+enum Ev {
+    /// Scheduler decision ready for this pod.
+    Schedule(PodId),
+    /// Container finished booting.
+    Started(PodId),
+    /// Work completed.
+    Completed(PodId),
+    /// Injected failure.
+    Fail(PodId),
+}
+
+struct Pod {
+    spec: PodSpec,
+    phase: PodPhase,
+    /// Generation counter: stale events (e.g. a Completed for a pod that
+    /// already failed) are ignored by comparing generations.
+    gen: u64,
+    started_at: Option<SimTime>,
+    finished_at: Option<SimTime>,
+}
+
+struct Node {
+    spec: NodeSpec,
+    used: Resources,
+}
+
+impl Node {
+    fn fits(&self, r: &Resources) -> bool {
+        self.used.cpu_milli + r.cpu_milli <= self.spec.cpu_milli
+            && self.used.mem_mb + r.mem_mb <= self.spec.mem_mb
+            && self.used.gpu + r.gpu <= self.spec.gpu
+    }
+
+    fn alloc(&mut self, r: &Resources) {
+        self.used.cpu_milli += r.cpu_milli;
+        self.used.mem_mb += r.mem_mb;
+        self.used.gpu += r.gpu;
+    }
+
+    fn free(&mut self, r: &Resources) {
+        self.used.cpu_milli -= r.cpu_milli;
+        self.used.mem_mb -= r.mem_mb;
+        self.used.gpu -= r.gpu;
+    }
+}
+
+/// One (time, pod, phase) transition, for assertions and utilization plots.
+#[derive(Clone, Debug)]
+pub struct PodEvent {
+    pub at: SimTime,
+    pub pod: PodId,
+    pub phase: PodPhase,
+}
+
+/// The simulated cluster.
+pub struct SimCluster {
+    cfg: SimClusterConfig,
+    nodes: Vec<Node>,
+    pods: HashMap<PodId, Pod>,
+    queue: EventQueue<(u64, Ev)>, // (generation, event)
+    pending: VecDeque<PodId>,
+    rng: Rng,
+    next_pod: u64,
+    pub log: Vec<PodEvent>,
+}
+
+impl SimCluster {
+    pub fn new(cfg: SimClusterConfig) -> Self {
+        let nodes = cfg
+            .nodes
+            .iter()
+            .map(|&spec| Node {
+                spec,
+                used: Resources {
+                    cpu_milli: 0,
+                    mem_mb: 0,
+                    gpu: 0,
+                },
+            })
+            .collect();
+        let rng = Rng::new(cfg.seed ^ 0x5153_u64);
+        Self {
+            cfg,
+            nodes,
+            pods: HashMap::new(),
+            queue: EventQueue::new(),
+            pending: VecDeque::new(),
+            rng,
+            next_pod: 1,
+            log: Vec::new(),
+        }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> SimTime {
+        self.queue.now()
+    }
+
+    /// Submit a pod; scheduling begins after the scheduler latency.
+    pub fn submit(&mut self, spec: PodSpec) -> PodId {
+        let id = PodId(self.next_pod);
+        self.next_pod += 1;
+        self.pods.insert(
+            id,
+            Pod {
+                spec,
+                phase: PodPhase::Pending,
+                gen: 0,
+                started_at: None,
+                finished_at: None,
+            },
+        );
+        self.push_log(id, PodPhase::Pending);
+        let lat = self.rng.exponential(self.cfg.schedule_latency_ns as f64) as u64;
+        self.queue.push_after(lat, (0, Ev::Schedule(id)));
+        id
+    }
+
+    /// Terminate a pod (frees resources immediately at the current time).
+    pub fn terminate(&mut self, id: PodId) {
+        let Some(pod) = self.pods.get_mut(&id) else { return };
+        if pod.phase.is_terminal() {
+            return;
+        }
+        if let PodPhase::Running { node } | PodPhase::Scheduled { node } = pod.phase {
+            let res = pod.spec.resources;
+            self.nodes[node].free(&res);
+        }
+        pod.gen += 1;
+        pod.phase = PodPhase::Terminated;
+        pod.finished_at = Some(self.queue.now());
+        self.push_log(id, PodPhase::Terminated);
+        self.pending.retain(|&p| p != id);
+        self.try_schedule_pending();
+    }
+
+    pub fn phase(&self, id: PodId) -> Option<&PodPhase> {
+        self.pods.get(&id).map(|p| &p.phase)
+    }
+
+    pub fn started_at(&self, id: PodId) -> Option<SimTime> {
+        self.pods.get(&id).and_then(|p| p.started_at)
+    }
+
+    pub fn finished_at(&self, id: PodId) -> Option<SimTime> {
+        self.pods.get(&id).and_then(|p| p.finished_at)
+    }
+
+    /// (used cpu_milli, total cpu_milli) across the cluster.
+    pub fn cpu_utilization(&self) -> (u64, u64) {
+        let used = self.nodes.iter().map(|n| n.used.cpu_milli as u64).sum();
+        let total = self.nodes.iter().map(|n| n.spec.cpu_milli as u64).sum();
+        (used, total)
+    }
+
+    /// Number of pods not yet in a terminal phase.
+    pub fn live_pods(&self) -> usize {
+        self.pods.values().filter(|p| !p.phase.is_terminal()).count()
+    }
+
+    /// Process events until the queue is empty or `until` is reached.
+    /// Returns the final virtual time.
+    pub fn run_until(&mut self, until: SimTime) -> SimTime {
+        while let Some(t) = self.queue.peek_time() {
+            if t > until {
+                break;
+            }
+            let (_, (gen, ev)) = self.queue.pop().unwrap();
+            self.handle(gen, ev);
+        }
+        self.queue.now().min(until)
+    }
+
+    /// Process all events to quiescence.
+    pub fn run_to_quiescence(&mut self) -> SimTime {
+        while let Some((_, (gen, ev))) = self.queue.pop() {
+            self.handle(gen, ev);
+        }
+        self.queue.now()
+    }
+
+    fn handle(&mut self, gen: u64, ev: Ev) {
+        match ev {
+            Ev::Schedule(id) => {
+                if self.stale(id, gen) {
+                    return;
+                }
+                if !self.try_place(id) {
+                    self.pending.push_back(id);
+                }
+            }
+            Ev::Started(id) => {
+                if self.stale(id, gen) {
+                    return;
+                }
+                let now = self.queue.now();
+                let pod = self.pods.get_mut(&id).unwrap();
+                let PodPhase::Scheduled { node } = pod.phase else { return };
+                pod.phase = PodPhase::Running { node };
+                pod.started_at = Some(now);
+                self.push_log(id, PodPhase::Running { node });
+                let (duration, gen_now) = {
+                    let pod = self.pods.get(&id).unwrap();
+                    (pod.spec.duration_ns, pod.gen)
+                };
+                if let Some(d) = duration {
+                    self.queue.push_after(d, (gen_now, Ev::Completed(id)));
+                }
+                if self.cfg.failure_rate_per_s > 0.0 {
+                    let mean_ns = 1e9 / self.cfg.failure_rate_per_s;
+                    let t = self.rng.exponential(mean_ns) as u64;
+                    // Only fails if it fires before completion/termination
+                    // (stale-generation check handles the race).
+                    self.queue.push_after(t, (gen_now, Ev::Fail(id)));
+                }
+            }
+            Ev::Completed(id) => {
+                if self.stale(id, gen) {
+                    return;
+                }
+                self.finish(id, PodPhase::Succeeded);
+            }
+            Ev::Fail(id) => {
+                if self.stale(id, gen) {
+                    return;
+                }
+                self.finish(id, PodPhase::Failed("injected node failure".into()));
+            }
+        }
+    }
+
+    fn stale(&self, id: PodId, gen: u64) -> bool {
+        self.pods.get(&id).map_or(true, |p| p.gen != gen || p.phase.is_terminal())
+    }
+
+    fn finish(&mut self, id: PodId, phase: PodPhase) {
+        let now = self.queue.now();
+        let pod = self.pods.get_mut(&id).unwrap();
+        if let PodPhase::Running { node } | PodPhase::Scheduled { node } = pod.phase {
+            let res = pod.spec.resources;
+            self.nodes[node].free(&res);
+        }
+        pod.gen += 1;
+        pod.phase = phase.clone();
+        pod.finished_at = Some(now);
+        self.push_log(id, phase);
+        self.try_schedule_pending();
+    }
+
+    /// First-fit placement. Returns false if no node has capacity.
+    fn try_place(&mut self, id: PodId) -> bool {
+        let res = self.pods[&id].spec.resources;
+        let Some(node_idx) = self.nodes.iter().position(|n| n.fits(&res)) else {
+            return false;
+        };
+        self.nodes[node_idx].alloc(&res);
+        let pod = self.pods.get_mut(&id).unwrap();
+        pod.phase = PodPhase::Scheduled { node: node_idx };
+        let gen = pod.gen;
+        self.push_log(id, PodPhase::Scheduled { node: node_idx });
+        let boot = self.rng.exponential(self.cfg.start_latency_ns as f64) as u64;
+        self.queue.push_after(boot, (gen, Ev::Started(id)));
+        true
+    }
+
+    fn try_schedule_pending(&mut self) {
+        let mut still_pending = VecDeque::new();
+        while let Some(id) = self.pending.pop_front() {
+            if self.pods[&id].phase.is_terminal() {
+                continue;
+            }
+            if !self.try_place(id) {
+                still_pending.push_back(id);
+            }
+        }
+        self.pending = still_pending;
+    }
+
+    fn push_log(&mut self, pod: PodId, phase: PodPhase) {
+        self.log.push(PodEvent {
+            at: self.queue.now(),
+            pod,
+            phase,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> SimClusterConfig {
+        SimClusterConfig {
+            nodes: vec![NodeSpec::cpu_only(4, 8000); 2], // 8 cores total
+            schedule_latency_ns: 1_000_000,
+            start_latency_ns: 5_000_000,
+            failure_rate_per_s: 0.0,
+            seed: 1,
+        }
+    }
+
+    fn one_cpu_pod(name: &str, dur: Option<u64>) -> PodSpec {
+        PodSpec {
+            name: name.into(),
+            resources: Resources {
+                cpu_milli: 1000,
+                mem_mb: 100,
+                gpu: 0,
+            },
+            duration_ns: dur,
+        }
+    }
+
+    #[test]
+    fn pod_runs_to_completion() {
+        let mut c = SimCluster::new(small_cfg());
+        let id = c.submit(one_cpu_pod("p", Some(1_000_000_000)));
+        c.run_to_quiescence();
+        assert_eq!(c.phase(id), Some(&PodPhase::Succeeded));
+        let (used, _) = c.cpu_utilization();
+        assert_eq!(used, 0, "resources freed");
+        assert!(c.finished_at(id).unwrap() >= 1_000_000_000);
+    }
+
+    #[test]
+    fn capacity_limits_queue_pods() {
+        let mut c = SimCluster::new(small_cfg());
+        // 10 one-core pods on 8 cores: 2 must wait for completions.
+        let ids: Vec<_> = (0..10)
+            .map(|i| c.submit(one_cpu_pod(&format!("p{i}"), Some(100_000_000))))
+            .collect();
+        c.run_to_quiescence();
+        for id in &ids {
+            assert_eq!(c.phase(*id), Some(&PodPhase::Succeeded));
+        }
+        // The last pods' start must be after the first completions.
+        let first_finish = ids
+            .iter()
+            .filter_map(|&i| c.finished_at(i))
+            .min()
+            .unwrap();
+        let last_start = ids.iter().filter_map(|&i| c.started_at(i)).max().unwrap();
+        assert!(last_start >= first_finish, "queued pods waited for capacity");
+    }
+
+    #[test]
+    fn service_pod_runs_until_terminated() {
+        let mut c = SimCluster::new(small_cfg());
+        let id = c.submit(one_cpu_pod("svc", None));
+        c.run_until(1_000_000_000);
+        assert!(matches!(c.phase(id), Some(PodPhase::Running { .. })));
+        let (used, _) = c.cpu_utilization();
+        assert_eq!(used, 1000);
+        c.terminate(id);
+        assert_eq!(c.phase(id), Some(&PodPhase::Terminated));
+        assert_eq!(c.cpu_utilization().0, 0);
+    }
+
+    #[test]
+    fn terminating_frees_capacity_for_pending() {
+        let mut cfg = small_cfg();
+        cfg.nodes = vec![NodeSpec::cpu_only(1, 1000)]; // 1 core
+        let mut c = SimCluster::new(cfg);
+        let a = c.submit(one_cpu_pod("a", None));
+        let b = c.submit(one_cpu_pod("b", None));
+        c.run_until(10_000_000_000);
+        // Scheduling latency is random, so either pod may have won the only
+        // core; exactly one must be Running and the other Pending.
+        let (winner, loser) = match (c.phase(a), c.phase(b)) {
+            (Some(PodPhase::Running { .. }), Some(PodPhase::Pending)) => (a, b),
+            (Some(PodPhase::Pending), Some(PodPhase::Running { .. })) => (b, a),
+            other => panic!("expected one running + one pending, got {other:?}"),
+        };
+        c.terminate(winner);
+        c.run_until(20_000_000_000);
+        assert!(matches!(c.phase(loser), Some(PodPhase::Running { .. })));
+    }
+
+    #[test]
+    fn gpu_pods_only_fit_gpu_nodes() {
+        let mut cfg = small_cfg();
+        cfg.nodes = vec![NodeSpec::cpu_only(4, 8000), NodeSpec::with_gpu(4, 8000, 1)];
+        let mut c = SimCluster::new(cfg);
+        let spec = PodSpec {
+            name: "gpu".into(),
+            resources: Resources {
+                cpu_milli: 1000,
+                mem_mb: 100,
+                gpu: 1,
+            },
+            duration_ns: None,
+        };
+        let id = c.submit(spec);
+        c.run_until(10_000_000_000);
+        match c.phase(id) {
+            Some(PodPhase::Running { node }) => assert_eq!(*node, 1),
+            other => panic!("expected running on gpu node, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn failure_injection_fails_long_pods() {
+        let mut cfg = small_cfg();
+        cfg.failure_rate_per_s = 2.0; // mean 0.5 s to failure
+        let mut c = SimCluster::new(cfg);
+        // 60-second pods will almost surely fail first.
+        let ids: Vec<_> = (0..6)
+            .map(|i| c.submit(one_cpu_pod(&format!("p{i}"), Some(60_000_000_000))))
+            .collect();
+        c.run_to_quiescence();
+        let failed = ids
+            .iter()
+            .filter(|&&i| matches!(c.phase(i), Some(PodPhase::Failed(_))))
+            .count();
+        assert!(failed >= 5, "expected most pods to fail, got {failed}");
+        assert_eq!(c.cpu_utilization().0, 0, "failures free resources");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut c = SimCluster::new(small_cfg());
+            let ids: Vec<_> = (0..5)
+                .map(|i| c.submit(one_cpu_pod(&format!("p{i}"), Some(50_000_000))))
+                .collect();
+            c.run_to_quiescence();
+            ids.iter().map(|&i| c.finished_at(i).unwrap()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,309 @@
+//! In-process MPMC blocking channels.
+//!
+//! `std::sync::mpsc` is single-consumer; Fiber pools need multi-consumer
+//! task queues, so we implement a small Mutex+Condvar MPMC channel with
+//! optional capacity bounds, close semantics and timeouts. This is the
+//! `inproc://` transport.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Error returned by send operations.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum SendError {
+    #[error("channel closed")]
+    Closed,
+}
+
+/// Error returned by receive operations.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum RecvError {
+    #[error("channel closed and drained")]
+    Closed,
+    #[error("receive timed out")]
+    Timeout,
+    #[error("channel empty")]
+    Empty,
+}
+
+struct Core<T> {
+    q: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: Option<usize>,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Sending half (cloneable).
+pub struct Sender<T> {
+    core: Arc<Core<T>>,
+}
+
+/// Receiving half (cloneable — MPMC).
+pub struct Receiver<T> {
+    core: Arc<Core<T>>,
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        Self {
+            core: self.core.clone(),
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Self {
+            core: self.core.clone(),
+        }
+    }
+}
+
+/// Create an unbounded channel.
+pub fn unbounded<T>() -> (Sender<T>, Receiver<T>) {
+    with_cap(None)
+}
+
+/// Create a bounded channel; `send` blocks when full.
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    with_cap(Some(cap.max(1)))
+}
+
+fn with_cap<T>(cap: Option<usize>) -> (Sender<T>, Receiver<T>) {
+    let core = Arc::new(Core {
+        q: Mutex::new(State {
+            items: VecDeque::new(),
+            closed: false,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+        cap,
+    });
+    (
+        Sender { core: core.clone() },
+        Receiver { core },
+    )
+}
+
+impl<T> Sender<T> {
+    /// Blocking send (waits for space on bounded channels).
+    pub fn send(&self, v: T) -> Result<(), SendError> {
+        let mut st = self.core.q.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed);
+            }
+            if self.core.cap.map_or(true, |c| st.items.len() < c) {
+                st.items.push_back(v);
+                self.core.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.core.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Close the channel: further sends fail, receivers drain then see
+    /// [`RecvError::Closed`].
+    pub fn close(&self) {
+        let mut st = self.core.q.lock().unwrap();
+        st.closed = true;
+        self.core.not_empty.notify_all();
+        self.core.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.core.q.lock().unwrap().closed
+    }
+
+    pub fn len(&self) -> usize {
+        self.core.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.core.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                self.core.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.closed {
+                return Err(RecvError::Closed);
+            }
+            st = self.core.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a deadline.
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.core.q.lock().unwrap();
+        loop {
+            if let Some(v) = st.items.pop_front() {
+                self.core.not_full.notify_one();
+                return Ok(v);
+            }
+            if st.closed {
+                return Err(RecvError::Closed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (g, res) = self
+                .core
+                .not_empty
+                .wait_timeout(st, deadline - now)
+                .unwrap();
+            st = g;
+            if res.timed_out() && st.items.is_empty() {
+                if st.closed {
+                    return Err(RecvError::Closed);
+                }
+                return Err(RecvError::Timeout);
+            }
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Result<T, RecvError> {
+        let mut st = self.core.q.lock().unwrap();
+        if let Some(v) = st.items.pop_front() {
+            self.core.not_full.notify_one();
+            Ok(v)
+        } else if st.closed {
+            Err(RecvError::Closed)
+        } else {
+            Err(RecvError::Empty)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.core.q.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = unbounded();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        for i in 0..10 {
+            assert_eq!(rx.recv().unwrap(), i);
+        }
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = unbounded();
+        let n_producers = 4;
+        let n_consumers = 4;
+        let per = 250usize;
+        let mut handles = vec![];
+        for p in 0..n_producers {
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                for i in 0..per {
+                    tx.send(p * per + i).unwrap();
+                }
+            }));
+        }
+        let (otx, orx) = unbounded();
+        for _ in 0..n_consumers {
+            let rx = rx.clone();
+            let otx = otx.clone();
+            handles.push(thread::spawn(move || loop {
+                match rx.recv() {
+                    Ok(v) => otx.send(v).unwrap(),
+                    Err(_) => break,
+                }
+            }));
+        }
+        for h in handles.drain(..n_producers) {
+            h.join().unwrap();
+        }
+        tx.close();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got: Vec<usize> = (0..n_producers * per).map(|_| orx.recv().unwrap()).collect();
+        got.sort();
+        assert_eq!(got, (0..n_producers * per).collect::<Vec<_>>());
+        assert!(orx.try_recv().is_err(), "no duplicates");
+    }
+
+    #[test]
+    fn bounded_blocks_then_unblocks() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let tx2 = tx.clone();
+        let h = thread::spawn(move || tx2.send(3)); // blocks
+        thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv().unwrap(), 1);
+        h.join().unwrap().unwrap();
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap(), 3);
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let (tx, rx) = unbounded();
+        tx.send(7).unwrap();
+        tx.close();
+        assert_eq!(tx.send(8), Err(SendError::Closed));
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert_eq!(rx.recv(), Err(RecvError::Closed));
+    }
+
+    #[test]
+    fn recv_timeout_times_out() {
+        let (_tx, rx) = unbounded::<u32>();
+        let t = Instant::now();
+        assert_eq!(
+            rx.recv_timeout(Duration::from_millis(30)),
+            Err(RecvError::Timeout)
+        );
+        assert!(t.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn recv_timeout_gets_late_item() {
+        let (tx, rx) = unbounded();
+        thread::spawn(move || {
+            thread::sleep(Duration::from_millis(10));
+            tx.send(99).unwrap();
+        });
+        assert_eq!(rx.recv_timeout(Duration::from_millis(500)).unwrap(), 99);
+    }
+
+    #[test]
+    fn try_recv_empty_vs_closed() {
+        let (tx, rx) = unbounded::<u8>();
+        assert_eq!(rx.try_recv(), Err(RecvError::Empty));
+        tx.close();
+        assert_eq!(rx.try_recv(), Err(RecvError::Closed));
+    }
+}

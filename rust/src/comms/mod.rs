@@ -1,0 +1,80 @@
+//! The message substrate (Nanomsg substitute).
+//!
+//! Fiber's queues and pipes are built on a high-performance asynchronous
+//! message layer; offline we build our own from `std`:
+//!
+//! * [`chan`] — in-process MPMC blocking channels (the `inproc://` transport
+//!   and the building block for pools running on the thread backend).
+//! * [`frame`] — length-prefixed binary framing over any `Read`/`Write`.
+//! * [`rpc`] — request/reply servers and clients over TCP (thread per
+//!   connection), the transport behind distributed queues, pipes and
+//!   managers when workers are real OS processes.
+//!
+//! Addressing is uniform: [`Addr::Inproc`] names a channel in a global
+//! registry, [`Addr::Tcp`] is a socket address. Components accept an `Addr`
+//! and work identically across both, which is what lets a Fiber program move
+//! from multiprocessing-style local runs to distributed runs unchanged
+//! (the paper's "one line of code" claim).
+
+pub mod chan;
+pub mod frame;
+pub mod rpc;
+
+pub use chan::{bounded, unbounded, Receiver, RecvError, SendError, Sender};
+pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME};
+pub use rpc::{RpcClient, RpcServer};
+
+use std::net::SocketAddr;
+
+/// A transport endpoint.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Addr {
+    /// In-process endpoint, named in a global registry.
+    Inproc(String),
+    /// TCP endpoint.
+    Tcp(SocketAddr),
+}
+
+impl Addr {
+    /// Parse `inproc://name` or `tcp://host:port`.
+    pub fn parse(s: &str) -> anyhow::Result<Addr> {
+        if let Some(name) = s.strip_prefix("inproc://") {
+            anyhow::ensure!(!name.is_empty(), "empty inproc name");
+            Ok(Addr::Inproc(name.to_string()))
+        } else if let Some(hp) = s.strip_prefix("tcp://") {
+            Ok(Addr::Tcp(hp.parse()?))
+        } else {
+            anyhow::bail!("unrecognised address {s:?} (want inproc:// or tcp://)")
+        }
+    }
+}
+
+impl std::fmt::Display for Addr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Addr::Inproc(n) => write!(f, "inproc://{n}"),
+            Addr::Tcp(a) => write!(f, "tcp://{a}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_parse_roundtrip() {
+        let a = Addr::parse("inproc://tasks").unwrap();
+        assert_eq!(a, Addr::Inproc("tasks".into()));
+        assert_eq!(a.to_string(), "inproc://tasks");
+        let b = Addr::parse("tcp://127.0.0.1:9000").unwrap();
+        assert_eq!(b.to_string(), "tcp://127.0.0.1:9000");
+    }
+
+    #[test]
+    fn addr_parse_rejects_garbage() {
+        assert!(Addr::parse("http://x").is_err());
+        assert!(Addr::parse("inproc://").is_err());
+        assert!(Addr::parse("tcp://nonsense").is_err());
+    }
+}

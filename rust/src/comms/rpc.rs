@@ -1,0 +1,268 @@
+//! Request/reply over TCP — the transport behind distributed queues, pipes
+//! and managers when Fiber processes are real OS processes.
+//!
+//! A [`RpcServer`] runs one thread per connection (handlers may block — a
+//! queue `GET` waits for an item, exactly like Nanomsg REP sockets serving
+//! a blocking protocol). A [`RpcClient`] is a connection with exclusive
+//! request/reply framing; clone-per-thread for concurrency.
+//!
+//! Wire format: request `[u32 tag][payload]`, reply `Result<Vec<u8>, String>`
+//! in [`crate::wire`] encoding.
+
+use std::io::BufWriter;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::comms::frame::{read_frame, write_frame, FrameError};
+use crate::wire;
+
+/// Handler invoked per request: `(tag, payload) -> Result<reply, error-msg>`.
+pub type Handler = Arc<dyn Fn(u32, &[u8]) -> Result<Vec<u8>, String> + Send + Sync>;
+
+/// A TCP request/reply server.
+pub struct RpcServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<TcpStream>>>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl RpcServer {
+    /// Bind and serve. Use port 0 for an ephemeral port; read it back with
+    /// [`RpcServer::local_addr`].
+    pub fn bind(bind_addr: &str, handler: Handler) -> Result<Self> {
+        let listener = TcpListener::bind(bind_addr).context("rpc bind")?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<TcpStream>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept_thread = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            std::thread::Builder::new()
+                .name(format!("rpc-accept-{addr}"))
+                .spawn(move || {
+                    for incoming in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = incoming else { continue };
+                        let _ = stream.set_nodelay(true);
+                        if let Ok(clone) = stream.try_clone() {
+                            conns.lock().unwrap().push(clone);
+                        }
+                        let handler = handler.clone();
+                        let stop2 = stop.clone();
+                        let _ = std::thread::Builder::new()
+                            .name("rpc-conn".into())
+                            .spawn(move || serve_conn(stream, handler, stop2));
+                    }
+                })?
+        };
+        Ok(Self {
+            addr,
+            stop,
+            conns,
+            accept_thread: Some(accept_thread),
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and tear down existing connections.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Unblock the accept loop with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        for c in self.conns.lock().unwrap().drain(..) {
+            let _ = c.shutdown(std::net::Shutdown::Both);
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.shutdown();
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) {
+    let mut reader = stream.try_clone().expect("clone stream");
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let req = match read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(FrameError::Eof) => return,
+            Err(_) => return,
+        };
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if req.len() < 4 {
+            return; // corrupt
+        }
+        let tag = u32::from_le_bytes(req[..4].try_into().unwrap());
+        let reply: Result<Vec<u8>, String> = handler(tag, &req[4..]);
+        let buf = wire::to_bytes(&reply);
+        if write_frame(&mut writer, &buf).is_err() {
+            return;
+        }
+    }
+}
+
+/// A client connection. `call` is synchronous; the connection carries one
+/// outstanding request at a time (clone a new client per worker thread).
+pub struct RpcClient {
+    inner: Mutex<ClientInner>,
+    addr: SocketAddr,
+}
+
+struct ClientInner {
+    reader: TcpStream,
+    writer: BufWriter<TcpStream>,
+}
+
+impl RpcClient {
+    pub fn connect(addr: SocketAddr) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("rpc connect {addr}"))?;
+        stream.set_nodelay(true)?;
+        let reader = stream.try_clone()?;
+        Ok(Self {
+            inner: Mutex::new(ClientInner {
+                reader,
+                writer: BufWriter::new(stream),
+            }),
+            addr,
+        })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Issue a request and wait for the reply.
+    pub fn call(&self, tag: u32, payload: &[u8]) -> Result<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut req = Vec::with_capacity(4 + payload.len());
+        req.extend_from_slice(&tag.to_le_bytes());
+        req.extend_from_slice(payload);
+        write_frame(&mut inner.writer, &req).context("rpc send")?;
+        let reply = read_frame(&mut inner.reader).context("rpc recv")?;
+        let result: Result<Vec<u8>, String> =
+            wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("rpc decode: {e}"))?;
+        result.map_err(|e| anyhow::anyhow!("rpc remote error: {e}"))
+    }
+
+    /// Typed convenience: encode `req`, decode the reply.
+    pub fn call_typed<Req: wire::Encode, Resp: wire::Decode>(
+        &self,
+        tag: u32,
+        req: &Req,
+    ) -> Result<Resp> {
+        let reply = self.call(tag, &wire::to_bytes(req))?;
+        wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("rpc reply decode: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_server() -> RpcServer {
+        RpcServer::bind(
+            "127.0.0.1:0",
+            Arc::new(|tag, payload| {
+                if tag == 99 {
+                    Err("boom".to_string())
+                } else {
+                    let mut out = tag.to_le_bytes().to_vec();
+                    out.extend_from_slice(payload);
+                    Ok(out)
+                }
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn echo_roundtrip() {
+        let srv = echo_server();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        let out = cli.call(7, b"abc").unwrap();
+        assert_eq!(&out[..4], &7u32.to_le_bytes());
+        assert_eq!(&out[4..], b"abc");
+    }
+
+    #[test]
+    fn remote_error_propagates() {
+        let srv = echo_server();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        let err = cli.call(99, b"").unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+    }
+
+    #[test]
+    fn many_sequential_calls() {
+        let srv = echo_server();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        for i in 0..500u32 {
+            let tag = i + 1000; // avoid the error tag 99
+            let out = cli.call(tag, &i.to_le_bytes()).unwrap();
+            assert_eq!(&out[..4], &tag.to_le_bytes());
+        }
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let srv = echo_server();
+        let addr = srv.local_addr();
+        let mut handles = vec![];
+        for t in 0..8u32 {
+            handles.push(std::thread::spawn(move || {
+                let cli = RpcClient::connect(addr).unwrap();
+                for i in 0..100u32 {
+                    let out = cli.call(t, &i.to_le_bytes()).unwrap();
+                    assert_eq!(&out[..4], &t.to_le_bytes());
+                    assert_eq!(&out[4..], &i.to_le_bytes());
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shutdown_breaks_clients() {
+        let srv = echo_server();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        cli.call(1, b"x").unwrap();
+        srv.shutdown();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert!(cli.call(1, b"x").is_err());
+    }
+
+    #[test]
+    fn call_typed_roundtrip() {
+        let srv = RpcServer::bind(
+            "127.0.0.1:0",
+            Arc::new(|_tag, payload| {
+                let v: Vec<f32> = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                let s: f32 = v.iter().sum();
+                Ok(wire::to_bytes(&s))
+            }),
+        )
+        .unwrap();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        let s: f32 = cli.call_typed(0, &vec![1.0f32, 2.0, 3.5]).unwrap();
+        assert_eq!(s, 6.5);
+    }
+}

@@ -1,0 +1,118 @@
+//! Task batching ("chunksize" in multiprocessing terms).
+//!
+//! A chunk task carries `k` encoded inputs and is executed by a wrapper that
+//! calls the registered function on each, returning `k` encoded outputs.
+//! Batching amortises per-task dispatch overhead — the Fig 3a experiment
+//! shows why this matters at millisecond task durations.
+
+use crate::wire::{self, Decode, Encode};
+
+use super::task::execute_registered;
+
+/// Payload of a chunk task: the inner function name + each encoded input.
+pub struct ChunkPayload {
+    pub fn_name: String,
+    pub items: Vec<Vec<u8>>,
+}
+
+impl Encode for ChunkPayload {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.fn_name.encode(buf);
+        self.items.encode(buf);
+    }
+}
+
+impl Decode for ChunkPayload {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(Self {
+            fn_name: String::decode(r)?,
+            items: Vec::<Vec<u8>>::decode(r)?,
+        })
+    }
+}
+
+/// Name under which the chunk runner is registered (see
+/// [`register_chunk_runner`], called once at pool construction).
+pub const CHUNK_FN: &str = "fiber.chunk";
+
+/// Register the chunk runner (idempotent).
+pub fn register_chunk_runner() {
+    super::task::register_task(CHUNK_FN, |chunk: ChunkPayload| {
+        let mut outs = Vec::with_capacity(chunk.items.len());
+        for item in &chunk.items {
+            outs.push(execute_registered(&chunk.fn_name, item)?);
+        }
+        Ok::<Vec<Vec<u8>>, String>(outs)
+    });
+}
+
+/// Split `items` (already encoded) into chunk payloads of `chunksize`.
+pub fn make_chunks(fn_name: &str, items: Vec<Vec<u8>>, chunksize: usize) -> Vec<ChunkPayload> {
+    let chunksize = chunksize.max(1);
+    let mut chunks = Vec::with_capacity(items.len().div_ceil(chunksize));
+    let mut iter = items.into_iter().peekable();
+    while iter.peek().is_some() {
+        let batch: Vec<Vec<u8>> = iter.by_ref().take(chunksize).collect();
+        chunks.push(ChunkPayload {
+            fn_name: fn_name.to_string(),
+            items: batch,
+        });
+    }
+    chunks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::register_task;
+
+    #[test]
+    fn chunks_cover_all_items_in_order() {
+        let items: Vec<Vec<u8>> = (0..10u8).map(|i| vec![i]).collect();
+        let chunks = make_chunks("f", items, 3);
+        assert_eq!(chunks.len(), 4);
+        assert_eq!(chunks[0].items, vec![vec![0], vec![1], vec![2]]);
+        assert_eq!(chunks[3].items, vec![vec![9]]);
+    }
+
+    #[test]
+    fn chunksize_zero_treated_as_one() {
+        let chunks = make_chunks("f", vec![vec![1], vec![2]], 0);
+        assert_eq!(chunks.len(), 2);
+    }
+
+    #[test]
+    fn chunk_runner_executes_inner_fn() {
+        register_task("test.batch.double", |x: u32| Ok::<u32, String>(x * 2));
+        register_chunk_runner();
+        let payload = ChunkPayload {
+            fn_name: "test.batch.double".into(),
+            items: (0..5u32).map(|i| wire::to_bytes(&i)).collect(),
+        };
+        let out = execute_registered(CHUNK_FN, &wire::to_bytes(&payload)).unwrap();
+        let outs: Vec<Vec<u8>> = wire::from_bytes(&out).unwrap();
+        let vals: Vec<u32> = outs
+            .iter()
+            .map(|b| wire::from_bytes::<u32>(b).unwrap())
+            .collect();
+        assert_eq!(vals, vec![0, 2, 4, 6, 8]);
+    }
+
+    #[test]
+    fn chunk_runner_propagates_inner_error() {
+        register_task("test.batch.err", |x: u32| {
+            if x == 3 {
+                Err("item 3 bad".into())
+            } else {
+                Ok::<u32, String>(x)
+            }
+        });
+        register_chunk_runner();
+        let payload = ChunkPayload {
+            fn_name: "test.batch.err".into(),
+            items: (0..5u32).map(|i| wire::to_bytes(&i)).collect(),
+        };
+        let err = execute_registered(CHUNK_FN, &wire::to_bytes(&payload)).unwrap_err();
+        assert!(err.contains("item 3 bad"));
+    }
+}

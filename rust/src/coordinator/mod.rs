@@ -1,0 +1,28 @@
+//! Coordinator internals behind the Fiber API: the task pool machinery.
+//!
+//! The paper's Figure 2 describes the contract implemented here: a pool owns
+//! a **task queue**, a **result queue** and a **pending table**. Fetching a
+//! task atomically moves it into the pending table keyed by the fetching
+//! worker; delivering a result removes the entry; a worker failure re-queues
+//! everything that worker had pending and the pool replaces the worker.
+//!
+//! * [`task`] — task envelopes and the registered-function table (the
+//!   container-image analogue: leader and workers run the same binary, so a
+//!   function name resolves identically everywhere).
+//! * [`pending`] — the pending table.
+//! * [`pool_server`] — the leader-side service workers talk to (direct
+//!   in-process calls for thread workers; RPC for OS-process workers).
+//! * [`batch`] — task batching ("when batching is enabled, multiple tasks
+//!   can be scheduled at the same time to improve efficiency").
+//! * [`scaling`] — the autoscale policy driving dynamic worker counts.
+
+pub mod batch;
+pub mod pending;
+pub mod pool_server;
+pub mod scaling;
+pub mod task;
+
+pub use pending::PendingTable;
+pub use pool_server::{FetchReply, PoolServer, WorkerId};
+pub use scaling::AutoscalePolicy;
+pub use task::{execute_registered, register_task, registered_names, Task, TaskId};

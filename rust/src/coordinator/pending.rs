@@ -1,0 +1,154 @@
+//! The pending table (paper, Figure 2).
+//!
+//! Invariant maintained with the task queue and result queue: at any moment
+//! every submitted-but-unfinished task is in **exactly one** of {task queue,
+//! pending table}. The property tests in `rust/tests/prop_invariants.rs`
+//! drive random fetch/complete/fail schedules against this invariant.
+
+use std::collections::HashMap;
+
+use super::pool_server::WorkerId;
+use super::task::{Task, TaskId};
+
+/// Tracks which worker is executing which task.
+#[derive(Default, Debug)]
+pub struct PendingTable {
+    by_task: HashMap<TaskId, (WorkerId, Task)>,
+    /// Total entries ever inserted (diagnostics; monotone).
+    inserted: u64,
+    /// Entries removed by successful completion.
+    completed: u64,
+    /// Entries drained by worker failure (→ resubmitted).
+    requeued: u64,
+}
+
+impl PendingTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record that `worker` fetched `task`.
+    pub fn insert(&mut self, worker: WorkerId, task: Task) {
+        self.inserted += 1;
+        let prev = self.by_task.insert(task.id, (worker, task));
+        debug_assert!(prev.is_none(), "task fetched twice without requeue");
+    }
+
+    /// Remove the entry when its result arrives. Returns `false` if the task
+    /// was not pending (e.g. a duplicate result after a requeue race).
+    pub fn complete(&mut self, task: TaskId) -> bool {
+        self.take(task).is_some()
+    }
+
+    /// Remove the entry and return its task envelope (result routing needs
+    /// the `map_id`/`index`). `None` if not pending — a duplicate result.
+    pub fn take(&mut self, task: TaskId) -> Option<Task> {
+        let hit = self.by_task.remove(&task).map(|(_, t)| t);
+        if hit.is_some() {
+            self.completed += 1;
+        }
+        hit
+    }
+
+    /// Drain every task the failed worker was executing, for resubmission.
+    /// Tasks come back in submission order (TaskIds are monotonic).
+    pub fn drain_worker(&mut self, worker: WorkerId) -> Vec<Task> {
+        let mut ids: Vec<TaskId> = self
+            .by_task
+            .iter()
+            .filter(|(_, (w, _))| *w == worker)
+            .map(|(id, _)| *id)
+            .collect();
+        ids.sort();
+        let mut tasks = Vec::with_capacity(ids.len());
+        for id in ids {
+            let (_, task) = self.by_task.remove(&id).unwrap();
+            tasks.push(task);
+        }
+        self.requeued += tasks.len() as u64;
+        tasks
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_task.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_task.is_empty()
+    }
+
+    pub fn contains(&self, task: TaskId) -> bool {
+        self.by_task.contains_key(&task)
+    }
+
+    /// Worker currently executing `task`, if any.
+    pub fn worker_of(&self, task: TaskId) -> Option<WorkerId> {
+        self.by_task.get(&task).map(|(w, _)| *w)
+    }
+
+    /// (inserted, completed, requeued) counters.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.inserted, self.completed, self.requeued)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64) -> Task {
+        Task {
+            id: TaskId(id),
+            map_id: 0,
+            index: id,
+            fn_name: "t".into(),
+            payload: vec![],
+        }
+    }
+
+    #[test]
+    fn insert_complete_cycle() {
+        let mut p = PendingTable::new();
+        p.insert(WorkerId(1), task(10));
+        assert_eq!(p.len(), 1);
+        assert!(p.contains(TaskId(10)));
+        assert_eq!(p.worker_of(TaskId(10)), Some(WorkerId(1)));
+        assert!(p.complete(TaskId(10)));
+        assert!(p.is_empty());
+        assert_eq!(p.counters(), (1, 1, 0));
+    }
+
+    #[test]
+    fn duplicate_complete_is_noop() {
+        let mut p = PendingTable::new();
+        p.insert(WorkerId(1), task(10));
+        assert!(p.complete(TaskId(10)));
+        assert!(!p.complete(TaskId(10)));
+        assert_eq!(p.counters(), (1, 1, 0));
+    }
+
+    #[test]
+    fn drain_worker_returns_only_its_tasks() {
+        let mut p = PendingTable::new();
+        p.insert(WorkerId(1), task(1));
+        p.insert(WorkerId(2), task(2));
+        p.insert(WorkerId(1), task(3));
+        let mut drained = p.drain_worker(WorkerId(1));
+        drained.sort_by_key(|t| t.id);
+        assert_eq!(
+            drained.iter().map(|t| t.id.0).collect::<Vec<_>>(),
+            vec![1, 3]
+        );
+        assert_eq!(p.len(), 1);
+        assert!(p.contains(TaskId(2)));
+        assert_eq!(p.counters(), (3, 0, 2));
+    }
+
+    #[test]
+    fn drain_empty_worker_is_empty() {
+        let mut p = PendingTable::new();
+        p.insert(WorkerId(1), task(1));
+        assert!(p.drain_worker(WorkerId(9)).is_empty());
+        assert_eq!(p.len(), 1);
+    }
+}

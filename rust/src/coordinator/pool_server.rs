@@ -1,0 +1,384 @@
+//! The leader-side pool service: task queue + pending table + result queue.
+//!
+//! Thread workers call [`PoolServer`] methods directly through an `Arc`;
+//! OS-process workers reach the same methods through the RPC facade
+//! ([`PoolServer::serve_rpc`]). Fetching and pending-table insertion are one
+//! atomic step under the server lock — the paper's "each time a task is
+//! removed from the task queue, an entry in the pending table is added".
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::comms::chan::{self, Receiver, Sender};
+use crate::comms::rpc::RpcServer;
+use crate::wire::{self, Decode, Encode};
+
+use super::pending::PendingTable;
+use super::task::{Task, TaskId};
+
+/// Worker identity (assigned by the pool at spawn time).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct WorkerId(pub u64);
+
+/// Reply to a fetch request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FetchReply {
+    /// Run this task.
+    Task(Task),
+    /// Nothing available right now; poll again.
+    Wait,
+    /// Worker should exit cleanly (pool closed or scale-down).
+    Retire,
+}
+
+impl Encode for FetchReply {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            FetchReply::Task(t) => {
+                buf.push(0);
+                t.encode(buf);
+            }
+            FetchReply::Wait => buf.push(1),
+            FetchReply::Retire => buf.push(2),
+        }
+    }
+}
+
+impl Decode for FetchReply {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        match u8::decode(r)? {
+            0 => Ok(FetchReply::Task(Task::decode(r)?)),
+            1 => Ok(FetchReply::Wait),
+            2 => Ok(FetchReply::Retire),
+            t => Err(wire::WireError::BadTag(t as u32)),
+        }
+    }
+}
+
+/// A completed task's result as delivered to the pool's collector.
+#[derive(Clone, Debug)]
+pub struct ResultMsg {
+    pub task: Task,
+    pub result: Result<Vec<u8>, String>,
+}
+
+/// RPC tags for the proc-worker protocol.
+pub mod tags {
+    pub const FETCH: u32 = 1;
+    pub const PUT: u32 = 2;
+    pub const QLEN: u32 = 3;
+}
+
+struct Inner {
+    queue: VecDeque<Task>,
+    pending: PendingTable,
+    retiring: HashSet<WorkerId>,
+    closed: bool,
+}
+
+/// The pool service.
+pub struct PoolServer {
+    inner: Mutex<Inner>,
+    task_ready: Condvar,
+    results_tx: Sender<ResultMsg>,
+    results_rx: Receiver<ResultMsg>,
+}
+
+impl Default for PoolServer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PoolServer {
+    pub fn new() -> Self {
+        let (results_tx, results_rx) = chan::unbounded();
+        Self {
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                pending: PendingTable::new(),
+                retiring: HashSet::new(),
+                closed: false,
+            }),
+            task_ready: Condvar::new(),
+            results_tx,
+            results_rx,
+        }
+    }
+
+    /// Enqueue a new task at the back of the task queue.
+    pub fn submit(&self, task: Task) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.queue.push_back(task);
+        drop(inner);
+        self.task_ready.notify_one();
+    }
+
+    /// Re-queue tasks at the *front* (failure resubmission retries sooner).
+    pub fn resubmit_front(&self, tasks: Vec<Task>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        for t in tasks.into_iter().rev() {
+            inner.queue.push_front(t);
+        }
+        drop(inner);
+        self.task_ready.notify_all();
+    }
+
+    /// Blocking fetch: wait up to `timeout` for a task. Atomically records
+    /// the task in the pending table under `worker`.
+    pub fn fetch(&self, worker: WorkerId, timeout: Duration) -> FetchReply {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.retiring.remove(&worker) {
+                return FetchReply::Retire;
+            }
+            if let Some(task) = inner.queue.pop_front() {
+                inner.pending.insert(worker, task.clone());
+                return FetchReply::Task(task);
+            }
+            if inner.closed {
+                return FetchReply::Retire;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return FetchReply::Wait;
+            }
+            let (guard, _) = self
+                .task_ready
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Deliver a result. Duplicate results (possible when a slow worker
+    /// races its own failure-resubmission) are dropped — the pending table
+    /// is the arbiter, making result delivery exactly-once per task.
+    pub fn put_result(&self, task_id: TaskId, result: Result<Vec<u8>, String>) {
+        let task = self.inner.lock().unwrap().pending.take(task_id);
+        if let Some(task) = task {
+            let _ = self.results_tx.send(ResultMsg { task, result });
+        }
+    }
+
+    /// Handle a worker failure: move its pending tasks back to the queue.
+    /// Returns how many tasks were resubmitted.
+    pub fn fail_worker(&self, worker: WorkerId) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let tasks = inner.pending.drain_worker(worker);
+        let n = tasks.len();
+        for t in tasks.into_iter().rev() {
+            inner.queue.push_front(t);
+        }
+        drop(inner);
+        if n > 0 {
+            self.task_ready.notify_all();
+        }
+        n
+    }
+
+    /// Ask a specific worker to retire at its next fetch.
+    pub fn retire(&self, worker: WorkerId) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.retiring.insert(worker);
+        drop(inner);
+        self.task_ready.notify_all();
+    }
+
+    /// Close the pool: workers retire once the queue drains.
+    pub fn close(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.closed = true;
+        drop(inner);
+        self.task_ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// (inserted, completed, requeued) pending-table counters.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        self.inner.lock().unwrap().pending.counters()
+    }
+
+    /// Receiver of completed results (consumed by the pool's collector).
+    pub fn results(&self) -> Receiver<ResultMsg> {
+        self.results_rx.clone()
+    }
+
+    /// Expose this server over TCP for OS-process workers.
+    ///
+    /// Protocol: `FETCH(worker_id: u64) -> FetchReply`,
+    /// `PUT(worker_id: u64, task_id: u64, result: Result<Vec<u8>, String>) -> ()`,
+    /// `QLEN(()) -> u64`.
+    pub fn serve_rpc(self: &Arc<Self>, bind: &str) -> anyhow::Result<RpcServer> {
+        let srv = self.clone();
+        RpcServer::bind(
+            bind,
+            Arc::new(move |tag, payload| match tag {
+                tags::FETCH => {
+                    let worker: u64 =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    let reply = srv.fetch(WorkerId(worker), Duration::from_millis(500));
+                    Ok(wire::to_bytes(&reply))
+                }
+                tags::PUT => {
+                    let (_worker, task_id, result): (u64, u64, Result<Vec<u8>, String>) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    srv.put_result(TaskId(task_id), result);
+                    Ok(Vec::new())
+                }
+                tags::QLEN => Ok(wire::to_bytes(&(srv.queue_len() as u64))),
+                t => Err(format!("bad pool rpc tag {t}")),
+            }),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: u64) -> Task {
+        Task {
+            id: TaskId(id),
+            map_id: 1,
+            index: id,
+            fn_name: "f".into(),
+            payload: vec![id as u8],
+        }
+    }
+
+    const T: Duration = Duration::from_millis(50);
+
+    #[test]
+    fn fetch_moves_task_to_pending() {
+        let s = PoolServer::new();
+        s.submit(task(1));
+        assert_eq!(s.queue_len(), 1);
+        let r = s.fetch(WorkerId(1), T);
+        assert_eq!(r, FetchReply::Task(task(1)));
+        assert_eq!(s.queue_len(), 0);
+        assert_eq!(s.pending_len(), 1);
+    }
+
+    #[test]
+    fn fetch_times_out_with_wait() {
+        let s = PoolServer::new();
+        assert_eq!(s.fetch(WorkerId(1), Duration::from_millis(10)), FetchReply::Wait);
+    }
+
+    #[test]
+    fn result_clears_pending_and_routes() {
+        let s = PoolServer::new();
+        s.submit(task(1));
+        s.fetch(WorkerId(1), T);
+        s.put_result(TaskId(1), Ok(vec![42]));
+        assert_eq!(s.pending_len(), 0);
+        let msg = s.results().try_recv().unwrap();
+        assert_eq!(msg.task.id, TaskId(1));
+        assert_eq!(msg.result, Ok(vec![42]));
+    }
+
+    #[test]
+    fn duplicate_results_dropped() {
+        let s = PoolServer::new();
+        s.submit(task(1));
+        s.fetch(WorkerId(1), T);
+        s.put_result(TaskId(1), Ok(vec![1]));
+        s.put_result(TaskId(1), Ok(vec![2])); // duplicate
+        let rx = s.results();
+        assert!(rx.try_recv().is_ok());
+        assert!(rx.try_recv().is_err(), "second result must be dropped");
+    }
+
+    #[test]
+    fn fail_worker_requeues_in_order() {
+        let s = PoolServer::new();
+        s.submit(task(1));
+        s.submit(task(2));
+        s.submit(task(3));
+        assert!(matches!(s.fetch(WorkerId(7), T), FetchReply::Task(_)));
+        assert!(matches!(s.fetch(WorkerId(7), T), FetchReply::Task(_)));
+        assert_eq!(s.fail_worker(WorkerId(7)), 2);
+        assert_eq!(s.queue_len(), 3);
+        // Requeued tasks come back out first, in original order.
+        let r = s.fetch(WorkerId(8), T);
+        assert_eq!(r, FetchReply::Task(task(1)));
+        let r = s.fetch(WorkerId(8), T);
+        assert_eq!(r, FetchReply::Task(task(2)));
+        let r = s.fetch(WorkerId(8), T);
+        assert_eq!(r, FetchReply::Task(task(3)));
+    }
+
+    #[test]
+    fn retire_targets_one_worker() {
+        let s = PoolServer::new();
+        s.retire(WorkerId(3));
+        assert_eq!(s.fetch(WorkerId(3), T), FetchReply::Retire);
+        // Other workers unaffected.
+        assert_eq!(s.fetch(WorkerId(4), Duration::from_millis(10)), FetchReply::Wait);
+    }
+
+    #[test]
+    fn close_retires_after_drain() {
+        let s = PoolServer::new();
+        s.submit(task(1));
+        s.close();
+        assert!(matches!(s.fetch(WorkerId(1), T), FetchReply::Task(_)));
+        assert_eq!(s.fetch(WorkerId(1), T), FetchReply::Retire);
+    }
+
+    #[test]
+    fn blocked_fetch_wakes_on_submit() {
+        let s = Arc::new(PoolServer::new());
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.fetch(WorkerId(1), Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        s.submit(task(9));
+        match h.join().unwrap() {
+            FetchReply::Task(t) => assert_eq!(t.id, TaskId(9)),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rpc_facade_roundtrip() {
+        use crate::comms::rpc::RpcClient;
+        let s = Arc::new(PoolServer::new());
+        let rpc = s.serve_rpc("127.0.0.1:0").unwrap();
+        s.submit(task(5));
+        let cli = RpcClient::connect(rpc.local_addr()).unwrap();
+        let reply: FetchReply = {
+            let bytes = cli.call(tags::FETCH, &wire::to_bytes(&11u64)).unwrap();
+            wire::from_bytes(&bytes).unwrap()
+        };
+        match reply {
+            FetchReply::Task(t) => assert_eq!(t.id, TaskId(5)),
+            other => panic!("{other:?}"),
+        }
+        cli.call(
+            tags::PUT,
+            &wire::to_bytes(&(11u64, 5u64, Ok::<Vec<u8>, String>(vec![9]))),
+        )
+        .unwrap();
+        let msg = s.results().recv().unwrap();
+        assert_eq!(msg.result, Ok(vec![9]));
+        let qlen: u64 = cli.call_typed(tags::QLEN, &()).unwrap();
+        assert_eq!(qlen, 0);
+    }
+}

@@ -1,0 +1,126 @@
+//! Dynamic-scaling policy.
+//!
+//! Fiber "does not require pre-allocating resources and can scale up and
+//! down with the algorithm it runs". The policy here is deliberately simple
+//! and testable: target enough workers to keep per-worker backlog near
+//! `tasks_per_worker`, clamped to `[min, max]`, with hysteresis (a scale
+//! step is only emitted when the target drifts from the current size and a
+//! cooldown has elapsed). The pool applies targets via `Pool::resize`; the
+//! E5 bench measures utilization vs. static peak allocation.
+
+/// Autoscaling policy parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct AutoscalePolicy {
+    pub min_workers: usize,
+    pub max_workers: usize,
+    /// Desired queue backlog per worker.
+    pub tasks_per_worker: f64,
+    /// Minimum virtual/real time between scale steps, ns.
+    pub cooldown_ns: u64,
+}
+
+impl Default for AutoscalePolicy {
+    fn default() -> Self {
+        Self {
+            min_workers: 1,
+            max_workers: 256,
+            tasks_per_worker: 4.0,
+            cooldown_ns: 500_000_000,
+        }
+    }
+}
+
+/// Stateful evaluator applying cooldown/hysteresis on top of the policy.
+#[derive(Clone, Debug)]
+pub struct Autoscaler {
+    policy: AutoscalePolicy,
+    last_change_ns: Option<u64>,
+}
+
+impl Autoscaler {
+    pub fn new(policy: AutoscalePolicy) -> Self {
+        Self {
+            policy,
+            last_change_ns: None,
+        }
+    }
+
+    /// Pure target computation (no hysteresis): how many workers should we
+    /// have for `backlog` queued tasks plus `in_flight` executing tasks?
+    pub fn target(&self, backlog: usize, in_flight: usize) -> usize {
+        let demand = backlog + in_flight;
+        let raw = (demand as f64 / self.policy.tasks_per_worker).ceil() as usize;
+        raw.clamp(self.policy.min_workers, self.policy.max_workers)
+    }
+
+    /// Decide a resize at time `now_ns`. Returns `Some(new_size)` only when
+    /// the target differs from `current` and the cooldown has elapsed.
+    pub fn decide(
+        &mut self,
+        now_ns: u64,
+        current: usize,
+        backlog: usize,
+        in_flight: usize,
+    ) -> Option<usize> {
+        let target = self.target(backlog, in_flight);
+        if target == current {
+            return None;
+        }
+        if let Some(last) = self.last_change_ns {
+            if now_ns.saturating_sub(last) < self.policy.cooldown_ns {
+                return None;
+            }
+        }
+        self.last_change_ns = Some(now_ns);
+        Some(target)
+    }
+
+    pub fn policy(&self) -> &AutoscalePolicy {
+        &self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pol() -> AutoscalePolicy {
+        AutoscalePolicy {
+            min_workers: 2,
+            max_workers: 64,
+            tasks_per_worker: 4.0,
+            cooldown_ns: 1_000,
+        }
+    }
+
+    #[test]
+    fn target_scales_with_demand() {
+        let a = Autoscaler::new(pol());
+        assert_eq!(a.target(0, 0), 2, "clamped to min");
+        assert_eq!(a.target(16, 0), 4);
+        assert_eq!(a.target(100, 28), 32);
+        assert_eq!(a.target(10_000, 0), 64, "clamped to max");
+    }
+
+    #[test]
+    fn no_decision_when_already_at_target() {
+        let mut a = Autoscaler::new(pol());
+        assert_eq!(a.decide(0, 4, 16, 0), None);
+    }
+
+    #[test]
+    fn cooldown_suppresses_flapping() {
+        let mut a = Autoscaler::new(pol());
+        assert_eq!(a.decide(0, 2, 64, 0), Some(16));
+        // Immediately wants to shrink, but cooldown not elapsed.
+        assert_eq!(a.decide(500, 16, 0, 0), None);
+        // After cooldown it may shrink.
+        assert_eq!(a.decide(2_000, 16, 0, 0), Some(2));
+    }
+
+    #[test]
+    fn scale_down_to_min_when_idle() {
+        let mut a = Autoscaler::new(pol());
+        assert_eq!(a.decide(10_000, 32, 0, 0), Some(2));
+    }
+}

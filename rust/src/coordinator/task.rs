@@ -1,0 +1,148 @@
+//! Task envelopes and the global function registry.
+//!
+//! Rust cannot pickle closures across processes, so fiber-rs makes the
+//! paper's container guarantee explicit: leader and workers run the **same
+//! binary**, and tasks name a function registered in a global table. A task
+//! is `(id, routing, fn_name, payload-bytes)`; payloads are [`crate::wire`]
+//! encodings of the function's input type.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use crate::wire::{self, Decode, Encode};
+
+/// Unique task id within a leader.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TaskId(pub u64);
+
+static NEXT_TASK: AtomicU64 = AtomicU64::new(1);
+
+impl TaskId {
+    pub fn fresh() -> Self {
+        TaskId(NEXT_TASK.fetch_add(1, Ordering::Relaxed))
+    }
+}
+
+/// A schedulable unit.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Task {
+    pub id: TaskId,
+    /// Which `map`/`apply` call this task belongs to.
+    pub map_id: u64,
+    /// Index of this task's result within its map call.
+    pub index: u64,
+    pub fn_name: String,
+    pub payload: Vec<u8>,
+}
+
+impl Encode for Task {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.id.0.encode(buf);
+        self.map_id.encode(buf);
+        self.index.encode(buf);
+        self.fn_name.encode(buf);
+        self.payload.encode(buf);
+    }
+}
+
+impl Decode for Task {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(Task {
+            id: TaskId(u64::decode(r)?),
+            map_id: u64::decode(r)?,
+            index: u64::decode(r)?,
+            fn_name: String::decode(r)?,
+            payload: Vec::<u8>::decode(r)?,
+        })
+    }
+}
+
+type TaskFn = Arc<dyn Fn(&[u8]) -> Result<Vec<u8>, String> + Send + Sync>;
+
+static REGISTRY: Lazy<Mutex<HashMap<String, TaskFn>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Register a typed task function under `name`. Re-registering a name
+/// replaces the entry (tests rely on this; production code registers once
+/// at startup on both leader and workers).
+pub fn register_task<I, O, F>(name: &str, f: F)
+where
+    I: Decode,
+    O: Encode,
+    F: Fn(I) -> Result<O, String> + Send + Sync + 'static,
+{
+    let wrapped: TaskFn = Arc::new(move |bytes: &[u8]| {
+        let input: I = wire::from_bytes(bytes).map_err(|e| format!("task input decode: {e}"))?;
+        let out = f(input)?;
+        Ok(wire::to_bytes(&out))
+    });
+    REGISTRY.lock().unwrap().insert(name.to_string(), wrapped);
+}
+
+/// Execute a registered function on raw payload bytes.
+pub fn execute_registered(fn_name: &str, payload: &[u8]) -> Result<Vec<u8>, String> {
+    let f = {
+        let reg = REGISTRY.lock().unwrap();
+        reg.get(fn_name)
+            .cloned()
+            .ok_or_else(|| format!("unregistered task function {fn_name:?}"))?
+    };
+    f(payload)
+}
+
+/// Names currently registered (diagnostics).
+pub fn registered_names() -> Vec<String> {
+    let mut v: Vec<String> = REGISTRY.lock().unwrap().keys().cloned().collect();
+    v.sort();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_execute() {
+        register_task("test.square", |x: i64| Ok::<i64, String>(x * x));
+        let out = execute_registered("test.square", &wire::to_bytes(&7i64)).unwrap();
+        let v: i64 = wire::from_bytes(&out).unwrap();
+        assert_eq!(v, 49);
+    }
+
+    #[test]
+    fn unregistered_is_error() {
+        let err = execute_registered("test.nope", &[]).unwrap_err();
+        assert!(err.contains("unregistered"));
+    }
+
+    #[test]
+    fn task_fn_errors_propagate() {
+        register_task("test.fail", |_x: u8| Err::<u8, String>("sad".into()));
+        let err = execute_registered("test.fail", &wire::to_bytes(&1u8)).unwrap_err();
+        assert_eq!(err, "sad");
+    }
+
+    #[test]
+    fn bad_payload_is_decode_error() {
+        register_task("test.id", |x: u64| Ok::<u64, String>(x));
+        let err = execute_registered("test.id", &[1, 2]).unwrap_err();
+        assert!(err.contains("decode"), "{err}");
+    }
+
+    #[test]
+    fn task_roundtrips_wire() {
+        let t = Task {
+            id: TaskId(5),
+            map_id: 2,
+            index: 9,
+            fn_name: "f".into(),
+            payload: vec![1, 2, 3],
+        };
+        let bytes = wire::to_bytes(&t);
+        let back: Task = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(t, back);
+    }
+}

@@ -1,0 +1,331 @@
+//! Breakout — the ALE substitute for the PPO experiment (DESIGN.md §2).
+//!
+//! Paddle, ball and a 6×10 brick wall in a unit court. The observation is a
+//! compact 32-d feature vector (paddle x, ball kinematics, per-column brick
+//! counts, …) instead of 84×84 pixels: the PPO experiment probes the
+//! *framework's* distributed env stepping, and a feature observation keeps
+//! the model MLP-sized so the step budget is spent where the experiment
+//! looks. Actions follow ALE Breakout: NOOP / FIRE / RIGHT / LEFT.
+
+use crate::util::Rng;
+
+use super::{Action, ActionSpec, Env, StepResult};
+
+pub const BRICK_COLS: usize = 10;
+pub const BRICK_ROWS: usize = 6;
+const PADDLE_W: f32 = 0.14;
+const PADDLE_SPEED: f32 = 0.035;
+const BALL_SPEED: f32 = 0.022;
+const BRICK_TOP: f32 = 0.55;
+const BRICK_H: f32 = 0.04;
+const LIVES: u32 = 5;
+
+/// The Breakout environment.
+#[derive(Clone, Debug)]
+pub struct Breakout {
+    paddle_x: f32,
+    ball: (f32, f32),
+    vel: (f32, f32),
+    bricks: [[bool; BRICK_COLS]; BRICK_ROWS],
+    lives: u32,
+    launched: bool,
+    rng: Rng,
+    done: bool,
+    score: u32,
+}
+
+impl Default for Breakout {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Breakout {
+    pub fn new() -> Self {
+        Self {
+            paddle_x: 0.5,
+            ball: (0.5, 0.2),
+            vel: (0.0, 0.0),
+            bricks: [[true; BRICK_COLS]; BRICK_ROWS],
+            lives: LIVES,
+            launched: false,
+            rng: Rng::new(0),
+            done: false,
+            score: 0,
+        }
+    }
+
+    pub fn score(&self) -> u32 {
+        self.score
+    }
+
+    pub fn bricks_left(&self) -> usize {
+        self.bricks
+            .iter()
+            .flat_map(|r| r.iter())
+            .filter(|&&b| b)
+            .count()
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let mut o = Vec::with_capacity(32);
+        o.push(self.paddle_x * 2.0 - 1.0);
+        o.push(self.ball.0 * 2.0 - 1.0);
+        o.push(self.ball.1 * 2.0 - 1.0);
+        o.push(self.vel.0 / BALL_SPEED);
+        o.push(self.vel.1 / BALL_SPEED);
+        o.push(self.lives as f32 / LIVES as f32);
+        // Per-column brick counts (10) + per-row brick counts (6).
+        for c in 0..BRICK_COLS {
+            let n = (0..BRICK_ROWS).filter(|&r| self.bricks[r][c]).count();
+            o.push(n as f32 / BRICK_ROWS as f32);
+        }
+        for r in 0..BRICK_ROWS {
+            let n = (0..BRICK_COLS).filter(|&c| self.bricks[r][c]).count();
+            o.push(n as f32 / BRICK_COLS as f32);
+        }
+        // Relative paddle→ball, launch flag, and padding to 32.
+        o.push(self.ball.0 - self.paddle_x);
+        o.push(if self.launched { 1.0 } else { 0.0 });
+        while o.len() < 32 {
+            o.push(0.0);
+        }
+        o
+    }
+
+    fn launch(&mut self) {
+        if !self.launched {
+            self.launched = true;
+            let dir = if self.rng.chance(0.5) { 1.0 } else { -1.0 };
+            let angle = 0.35 + self.rng.f32() * 0.4;
+            self.vel = (dir * BALL_SPEED * angle.sin(), BALL_SPEED * angle.cos());
+        }
+    }
+}
+
+impl Env for Breakout {
+    fn obs_dim(&self) -> usize {
+        32
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        ActionSpec::Discrete(4) // NOOP, FIRE, RIGHT, LEFT
+    }
+
+    fn reset(&mut self, seed: u64) -> Vec<f32> {
+        *self = Breakout::new();
+        self.rng = Rng::new(seed ^ 0xB4EA);
+        self.paddle_x = 0.3 + self.rng.f32() * 0.4;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action) -> StepResult {
+        debug_assert!(!self.done, "step() after done");
+        let a = match action {
+            Action::Discrete(a) => *a,
+            Action::Continuous(v) => {
+                // Allow continuous drivers: sign → direction.
+                let x = v.first().copied().unwrap_or(0.0);
+                if x > 0.33 {
+                    2
+                } else if x < -0.33 {
+                    3
+                } else {
+                    0
+                }
+            }
+        };
+        match a {
+            1 => self.launch(),
+            2 => self.paddle_x = (self.paddle_x + PADDLE_SPEED).min(1.0 - PADDLE_W / 2.0),
+            3 => self.paddle_x = (self.paddle_x - PADDLE_SPEED).max(PADDLE_W / 2.0),
+            _ => {}
+        }
+        let mut reward = 0.0f32;
+        if self.launched {
+            let (mut bx, mut by) = self.ball;
+            bx += self.vel.0;
+            by += self.vel.1;
+            // Walls.
+            if bx <= 0.0 {
+                bx = -bx;
+                self.vel.0 = self.vel.0.abs();
+            }
+            if bx >= 1.0 {
+                bx = 2.0 - bx;
+                self.vel.0 = -self.vel.0.abs();
+            }
+            if by >= 1.0 {
+                by = 2.0 - by;
+                self.vel.1 = -self.vel.1.abs();
+            }
+            // Bricks.
+            if by >= BRICK_TOP && by < BRICK_TOP + BRICK_ROWS as f32 * BRICK_H {
+                let r = ((by - BRICK_TOP) / BRICK_H) as usize;
+                let c = ((bx * BRICK_COLS as f32) as usize).min(BRICK_COLS - 1);
+                if r < BRICK_ROWS && self.bricks[r][c] {
+                    self.bricks[r][c] = false;
+                    self.vel.1 = -self.vel.1;
+                    // Higher rows score more, like ALE.
+                    reward += (BRICK_ROWS - r) as f32;
+                    self.score += (BRICK_ROWS - r) as u32;
+                }
+            }
+            // Paddle.
+            let paddle_y = 0.08;
+            if by <= paddle_y && self.vel.1 < 0.0 {
+                if (bx - self.paddle_x).abs() <= PADDLE_W / 2.0 {
+                    by = paddle_y + (paddle_y - by);
+                    // English: hit offset bends the rebound.
+                    let off = (bx - self.paddle_x) / (PADDLE_W / 2.0);
+                    self.vel.0 = BALL_SPEED * off * 0.9;
+                    self.vel.1 = (BALL_SPEED * BALL_SPEED - self.vel.0 * self.vel.0)
+                        .max(1e-6)
+                        .sqrt();
+                } else if by <= 0.0 {
+                    // Missed: lose a life.
+                    self.lives -= 1;
+                    self.launched = false;
+                    self.ball = (self.paddle_x, 0.2);
+                    self.vel = (0.0, 0.0);
+                    if self.lives == 0 {
+                        self.done = true;
+                    }
+                    return StepResult {
+                        obs: self.obs(),
+                        reward: 0.0,
+                        done: self.done,
+                    };
+                }
+            }
+            self.ball = (bx, by);
+        } else {
+            self.ball = (self.paddle_x, 0.2);
+        }
+        if self.bricks_left() == 0 {
+            self.done = true; // cleared the wall
+        }
+        StepResult {
+            obs: self.obs(),
+            reward,
+            done: self.done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_is_32d_and_bounded() {
+        let mut env = Breakout::new();
+        let obs = env.reset(1);
+        assert_eq!(obs.len(), 32);
+        env.step(&Action::Discrete(1));
+        for _ in 0..200 {
+            let r = env.step(&Action::Discrete(0));
+            for (i, v) in r.obs.iter().enumerate() {
+                assert!(v.abs() <= 2.0, "obs[{i}]={v} out of range");
+            }
+            if r.done {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut env = Breakout::new();
+            env.reset(seed);
+            let mut total = 0.0;
+            env.step(&Action::Discrete(1));
+            for i in 0..400 {
+                let a = if i % 3 == 0 { 2 } else { 3 };
+                let r = env.step(&Action::Discrete(a));
+                total += r.reward;
+                if r.done {
+                    break;
+                }
+            }
+            total
+        };
+        assert_eq!(run(9), run(9));
+    }
+
+    #[test]
+    fn ball_eventually_hits_bricks_with_tracking_policy() {
+        let mut env = Breakout::new();
+        let mut obs = env.reset(3);
+        env.step(&Action::Discrete(1)); // FIRE
+        let mut total = 0.0;
+        for _ in 0..3000 {
+            // Track the ball with the paddle.
+            let ball_rel = obs[16 + BRICK_COLS]; // actually recompute:
+            let _ = ball_rel;
+            let paddle = obs[0];
+            let ball = obs[1];
+            let a = if ball > paddle + 0.02 {
+                2
+            } else if ball < paddle - 0.02 {
+                3
+            } else if obs[31] == 0.0 {
+                1
+            } else {
+                0
+            };
+            // Relaunch if needed.
+            let r = env.step(&Action::Discrete(a));
+            total += r.reward;
+            obs = r.obs;
+            if r.done {
+                break;
+            }
+            if obs[29] == 0.0 {
+                env_relaunch(&mut env);
+            }
+        }
+        assert!(total > 0.0, "tracking policy should break bricks, got {total}");
+        assert!(env.score() > 0);
+    }
+
+    fn env_relaunch(env: &mut Breakout) {
+        env.step(&Action::Discrete(1));
+    }
+
+    #[test]
+    fn losing_all_lives_ends_episode() {
+        let mut env = Breakout::new();
+        env.reset(5);
+        // Never move the paddle; fire and wait for 5 misses.
+        let mut done = false;
+        for _ in 0..20_000 {
+            let r = env.step(&Action::Discrete(1)); // FIRE relaunches when idle
+            if r.done {
+                done = true;
+                break;
+            }
+        }
+        // Either died (lost lives without moving) or cleared; dying is the
+        // overwhelmingly likely case with a static paddle.
+        assert!(done, "episode must terminate");
+    }
+
+    #[test]
+    fn brick_counts_decrease_monotonically() {
+        let mut env = Breakout::new();
+        env.reset(2);
+        env.step(&Action::Discrete(1));
+        let mut last = env.bricks_left();
+        for _ in 0..2000 {
+            let r = env.step(&Action::Discrete(0));
+            let now = env.bricks_left();
+            assert!(now <= last);
+            last = now;
+            if r.done {
+                break;
+            }
+        }
+    }
+}

@@ -1,0 +1,141 @@
+//! CartPole-v1 physics (Barto, Sutton & Anderson 1983, Gym parameters).
+
+use crate::util::Rng;
+
+use super::{Action, ActionSpec, Env, StepResult};
+
+const GRAVITY: f32 = 9.8;
+const CART_MASS: f32 = 1.0;
+const POLE_MASS: f32 = 0.1;
+const TOTAL_MASS: f32 = CART_MASS + POLE_MASS;
+const POLE_HALF_LEN: f32 = 0.5;
+const POLE_MASS_LEN: f32 = POLE_MASS * POLE_HALF_LEN;
+const FORCE_MAG: f32 = 10.0;
+const TAU: f32 = 0.02;
+const THETA_LIMIT: f32 = 12.0 * std::f32::consts::PI / 180.0;
+const X_LIMIT: f32 = 2.4;
+
+/// The classic cart-pole balancing task. Observation: `[x, ẋ, θ, θ̇]`;
+/// actions: 0 = push left, 1 = push right; reward 1 per step alive.
+#[derive(Clone, Debug, Default)]
+pub struct CartPole {
+    x: f32,
+    x_dot: f32,
+    theta: f32,
+    theta_dot: f32,
+    done: bool,
+}
+
+impl CartPole {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        vec![self.x, self.x_dot, self.theta, self.theta_dot]
+    }
+}
+
+impl Env for CartPole {
+    fn obs_dim(&self) -> usize {
+        4
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        ActionSpec::Discrete(2)
+    }
+
+    fn reset(&mut self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0xCA47);
+        self.x = rng.range_f64(-0.05, 0.05) as f32;
+        self.x_dot = rng.range_f64(-0.05, 0.05) as f32;
+        self.theta = rng.range_f64(-0.05, 0.05) as f32;
+        self.theta_dot = rng.range_f64(-0.05, 0.05) as f32;
+        self.done = false;
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action) -> StepResult {
+        debug_assert!(!self.done, "step() after done");
+        let force = match action {
+            Action::Discrete(1) => FORCE_MAG,
+            Action::Discrete(_) => -FORCE_MAG,
+            Action::Continuous(v) => v.first().copied().unwrap_or(0.0).clamp(-1.0, 1.0) * FORCE_MAG,
+        };
+        let cos = self.theta.cos();
+        let sin = self.theta.sin();
+        let temp = (force + POLE_MASS_LEN * self.theta_dot * self.theta_dot * sin) / TOTAL_MASS;
+        let theta_acc = (GRAVITY * sin - cos * temp)
+            / (POLE_HALF_LEN * (4.0 / 3.0 - POLE_MASS * cos * cos / TOTAL_MASS));
+        let x_acc = temp - POLE_MASS_LEN * theta_acc * cos / TOTAL_MASS;
+        self.x += TAU * self.x_dot;
+        self.x_dot += TAU * x_acc;
+        self.theta += TAU * self.theta_dot;
+        self.theta_dot += TAU * theta_acc;
+        self.done = self.x.abs() > X_LIMIT || self.theta.abs() > THETA_LIMIT;
+        StepResult {
+            obs: self.obs(),
+            reward: 1.0,
+            done: self.done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut env = CartPole::new();
+            env.reset(seed);
+            let mut rs = vec![];
+            for i in 0..50 {
+                let r = env.step(&Action::Discrete(i % 2));
+                rs.push(r.obs);
+                if r.done {
+                    break;
+                }
+            }
+            rs
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6));
+    }
+
+    #[test]
+    fn constant_push_falls_over() {
+        let mut env = CartPole::new();
+        env.reset(1);
+        let mut steps = 0;
+        loop {
+            let r = env.step(&Action::Discrete(1));
+            steps += 1;
+            if r.done {
+                break;
+            }
+            assert!(steps < 500, "constant push must terminate");
+        }
+        assert!(steps >= 5, "shouldn't die instantly, died at {steps}");
+    }
+
+    #[test]
+    fn alternating_policy_survives_longer_than_constant() {
+        let run = |f: &dyn Fn(usize) -> usize| {
+            let mut env = CartPole::new();
+            env.reset(2);
+            let mut steps = 0;
+            for i in 0..500 {
+                if env.step(&Action::Discrete(f(i))).done {
+                    break;
+                }
+                steps = i;
+            }
+            steps
+        };
+        let alternating = run(&|i| i % 2);
+        let constant = run(&|_| 1);
+        assert!(alternating > constant);
+    }
+}

@@ -1,0 +1,113 @@
+//! Simulation substrates — the CPU-bound workloads Fiber schedules.
+//!
+//! The paper's experiments run OpenAI Gym / ALE simulators; those are
+//! Python/C++ and unavailable here, so we build the equivalent environments
+//! in Rust (DESIGN.md §2):
+//!
+//! * [`cartpole`] — classic control, used by quickstart examples/tests.
+//! * [`walker2d`] — a planar biped with torque-controlled legs on
+//!   procedurally-generated *hardcore* terrain (stumps, gaps, stairs,
+//!   roughness): the BipedalWalkerHardcore substitute for the ES
+//!   experiments, with variable-length rollouts (the heterogeneity Fiber
+//!   targets).
+//! * [`breakout`] — a Breakout clone with a compact feature observation:
+//!   the ALE substitute for the PPO experiments.
+//!
+//! All environments implement [`Env`]: deterministic given a seed, pure
+//! Rust, `Send`, and cheap enough that the *framework* under test (not the
+//! simulator) dominates when the experiment wants it to.
+
+pub mod breakout;
+pub mod cartpole;
+pub mod walker2d;
+
+pub use breakout::Breakout;
+pub use cartpole::CartPole;
+pub use walker2d::{TerrainConfig, Walker2d};
+
+/// An action: discrete index or continuous torque vector.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    Discrete(usize),
+    Continuous(Vec<f32>),
+}
+
+/// Result of one environment step.
+#[derive(Clone, Debug)]
+pub struct StepResult {
+    pub obs: Vec<f32>,
+    pub reward: f32,
+    pub done: bool,
+}
+
+/// The environment contract (Gym-like).
+pub trait Env: Send {
+    /// Observation dimensionality.
+    fn obs_dim(&self) -> usize;
+    /// Discrete action count, or continuous action dimensionality.
+    fn action_spec(&self) -> ActionSpec;
+    /// Reset with a seed; returns the initial observation.
+    fn reset(&mut self, seed: u64) -> Vec<f32>;
+    /// Advance one step.
+    fn step(&mut self, action: &Action) -> StepResult;
+}
+
+/// Action-space description.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ActionSpec {
+    Discrete(usize),
+    Continuous(usize),
+}
+
+impl ActionSpec {
+    pub fn dim(&self) -> usize {
+        match self {
+            ActionSpec::Discrete(n) => *n,
+            ActionSpec::Continuous(d) => *d,
+        }
+    }
+}
+
+/// Roll out `policy` for at most `max_steps`, returning (total reward, steps).
+pub fn rollout<E: Env>(
+    env: &mut E,
+    seed: u64,
+    max_steps: usize,
+    mut policy: impl FnMut(&[f32]) -> Action,
+) -> (f32, usize) {
+    let mut obs = env.reset(seed);
+    let mut total = 0.0f32;
+    for t in 0..max_steps {
+        let a = policy(&obs);
+        let r = env.step(&a);
+        total += r.reward;
+        obs = r.obs;
+        if r.done {
+            return (total, t + 1);
+        }
+    }
+    (total, max_steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollout_runs_all_envs() {
+        let mut cp = CartPole::new();
+        let (r, steps) = rollout(&mut cp, 3, 500, |_| Action::Discrete(0));
+        assert!(steps > 0 && steps <= 500);
+        assert!(r > 0.0, "cartpole rewards survival");
+
+        let mut bo = Breakout::new();
+        let (_, steps) = rollout(&mut bo, 3, 500, |_| Action::Discrete(1));
+        assert!(steps > 0);
+
+        let mut w = Walker2d::hardcore(7);
+        let (_, steps) = rollout(&mut w, 3, 300, |obs| {
+            Action::Continuous(vec![obs[0].sin(), 0.3, -0.2, 0.1])
+        });
+        assert!(steps > 0);
+    }
+}

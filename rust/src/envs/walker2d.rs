@@ -1,0 +1,441 @@
+//! A planar biped on procedurally-generated hardcore terrain — the
+//! BipedalWalkerHardcore substitute (DESIGN.md §2).
+//!
+//! The paper's ES experiment uses a modified BipedalWalkerHardcore (Wang
+//! 2019, the POET terrain family). Box2D is unavailable here, so this is a
+//! purpose-built simplified dynamics model preserving what the *systems*
+//! experiment needs: a CPU-bound stepper in the µs range, 24-d observations
+//! and 4-d torque actions like BipedalWalker, POET-style terrain parameters
+//! (roughness / stumps / gaps / stairs), and **variable-length rollouts**
+//! (early falls vs. full walks — the heterogeneity Fiber schedules around).
+//!
+//! Simplifications vs. Box2D (documented, deliberate): the hull is a single
+//! rigid body; legs are massless 2-segment chains with first-order joint
+//! dynamics; ground contact is a spring-damper on each foot acting on the
+//! hull. The result walks (badly) under random torques and rewards forward
+//! progress, which is all ES needs to optimize.
+
+use crate::util::Rng;
+
+use super::{Action, ActionSpec, Env, StepResult};
+
+const DT: f32 = 0.02;
+const GRAVITY: f32 = -9.8;
+const HULL_MASS: f32 = 5.0;
+const HULL_INERTIA: f32 = 1.2;
+const L1: f32 = 0.34; // thigh
+const L2: f32 = 0.42; // shin
+const MOTOR_TORQUE: f32 = 14.0;
+const JOINT_DAMPING: f32 = 1.4;
+const JOINT_INERTIA: f32 = 0.08;
+const CONTACT_K: f32 = 900.0; // ground spring
+const CONTACT_C: f32 = 28.0; // ground damper
+const FRICTION: f32 = 2.2;
+const HIP_LIMIT: f32 = 1.1;
+const KNEE_LO: f32 = -1.9;
+const KNEE_HI: f32 = -0.1;
+const STAND_HEIGHT: f32 = 0.65;
+const FINISH_X: f32 = 60.0;
+const N_LIDAR: usize = 10;
+
+/// POET-style terrain parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TerrainConfig {
+    /// Amplitude of the random-walk ground roughness (m).
+    pub roughness: f32,
+    /// Probability of a stump at each terrain segment.
+    pub stump_prob: f64,
+    /// Max stump height (m).
+    pub stump_height: f32,
+    /// Probability of a gap (pit).
+    pub gap_prob: f64,
+    /// Max gap width (m).
+    pub gap_width: f32,
+    /// Probability of a stair run.
+    pub stair_prob: f64,
+}
+
+impl TerrainConfig {
+    /// Flat ground (the easy environment).
+    pub fn flat() -> Self {
+        Self {
+            roughness: 0.0,
+            stump_prob: 0.0,
+            stump_height: 0.0,
+            gap_prob: 0.0,
+            gap_width: 0.0,
+            stair_prob: 0.0,
+        }
+    }
+
+    /// The hardcore mix used in the ES experiment.
+    pub fn hardcore() -> Self {
+        Self {
+            roughness: 0.12,
+            stump_prob: 0.06,
+            stump_height: 0.3,
+            gap_prob: 0.05,
+            gap_width: 0.9,
+            stair_prob: 0.04,
+        }
+    }
+}
+
+/// Piecewise-linear heightfield, 0.25 m resolution out to the finish line.
+#[derive(Clone, Debug)]
+struct Terrain {
+    heights: Vec<f32>,
+    res: f32,
+}
+
+impl Terrain {
+    fn generate(cfg: &TerrainConfig, seed: u64) -> Self {
+        let res = 0.25f32;
+        let n = ((FINISH_X + 20.0) / res) as usize;
+        let mut rng = Rng::new(seed ^ 0x7E44A1);
+        let mut h = vec![0.0f32; n];
+        let mut y = 0.0f32;
+        let mut i = 8; // flat spawn pad
+        while i < n {
+            if rng.chance(cfg.gap_prob) {
+                let w = ((rng.f32() * cfg.gap_width / res) as usize).max(1);
+                for k in 0..w.min(n - i) {
+                    h[i + k] = y - 3.0; // pit
+                }
+                i += w;
+            } else if rng.chance(cfg.stump_prob) {
+                let sh = rng.f32() * cfg.stump_height;
+                let w = 2usize;
+                for k in 0..w.min(n - i) {
+                    h[i + k] = y + sh;
+                }
+                i += w;
+            } else if rng.chance(cfg.stair_prob) {
+                let steps = 3 + rng.below(3);
+                let rise = if rng.chance(0.5) { 0.12 } else { -0.12 };
+                for _ in 0..steps {
+                    y += rise;
+                    for k in 0..2.min(n - i) {
+                        h[i + k] = y;
+                    }
+                    i += 2;
+                    if i >= n {
+                        break;
+                    }
+                }
+            } else {
+                y += (rng.f32() - 0.5) * 2.0 * cfg.roughness;
+                y = y.clamp(-1.5, 1.5);
+                h[i] = y;
+                i += 1;
+            }
+        }
+        Self { heights: h, res }
+    }
+
+    /// Ground height at world x (linear interpolation).
+    fn height(&self, x: f32) -> f32 {
+        if x <= 0.0 {
+            return self.heights[0];
+        }
+        let fi = x / self.res;
+        let i = fi as usize;
+        if i + 1 >= self.heights.len() {
+            return *self.heights.last().unwrap();
+        }
+        let t = fi - i as f32;
+        self.heights[i] * (1.0 - t) + self.heights[i + 1] * t
+    }
+}
+
+/// The planar biped environment.
+pub struct Walker2d {
+    cfg: TerrainConfig,
+    terrain: Terrain,
+    // hull state
+    x: f32,
+    y: f32,
+    vx: f32,
+    vy: f32,
+    angle: f32,
+    omega: f32,
+    // joints: [hip0, knee0, hip1, knee1]
+    q: [f32; 4],
+    qd: [f32; 4],
+    contact: [bool; 2],
+    steps: usize,
+    done: bool,
+}
+
+impl Walker2d {
+    pub fn new(cfg: TerrainConfig, seed: u64) -> Self {
+        let terrain = Terrain::generate(&cfg, seed);
+        let mut w = Self {
+            cfg,
+            terrain,
+            x: 2.0,
+            y: 0.0,
+            vx: 0.0,
+            vy: 0.0,
+            angle: 0.0,
+            omega: 0.0,
+            q: [0.2, -0.6, -0.2, -0.8],
+            qd: [0.0; 4],
+            contact: [false; 2],
+            steps: 0,
+            done: false,
+        };
+        w.y = w.terrain.height(w.x) + STAND_HEIGHT;
+        w
+    }
+
+    /// Hardcore terrain with the given seed.
+    pub fn hardcore(seed: u64) -> Self {
+        Self::new(TerrainConfig::hardcore(), seed)
+    }
+
+    /// Flat terrain (easy mode).
+    pub fn flat(seed: u64) -> Self {
+        Self::new(TerrainConfig::flat(), seed)
+    }
+
+    /// Foot world position for leg `l` (0/1).
+    fn foot_pos(&self, l: usize) -> (f32, f32) {
+        let hip = self.q[2 * l] + self.angle;
+        let knee = self.q[2 * l + 1];
+        // Thigh hangs from the hull; knee bends the shin.
+        let kx = self.x + L1 * hip.sin();
+        let ky = self.y - L1 * hip.cos();
+        let shin = hip + knee;
+        (kx + L2 * shin.sin(), ky - L2 * shin.cos())
+    }
+
+    fn obs(&self) -> Vec<f32> {
+        let mut o = Vec::with_capacity(14 + N_LIDAR);
+        o.push(self.angle);
+        o.push(self.omega);
+        o.push(self.vx * 0.3);
+        o.push(self.vy * 0.3);
+        for l in 0..2 {
+            o.push(self.q[2 * l]);
+            o.push(self.qd[2 * l] * 0.1);
+            o.push(self.q[2 * l + 1]);
+            o.push(self.qd[2 * l + 1] * 0.1);
+            o.push(if self.contact[l] { 1.0 } else { 0.0 });
+        }
+        // Lidar: terrain clearance at 10 points ahead.
+        for k in 0..N_LIDAR {
+            let dx = 0.4 + 0.4 * k as f32;
+            let clearance = self.y - self.terrain.height(self.x + dx);
+            o.push((clearance / 2.0).clamp(-1.0, 1.5));
+        }
+        o
+    }
+}
+
+impl Env for Walker2d {
+    fn obs_dim(&self) -> usize {
+        14 + N_LIDAR // 24, like BipedalWalker
+    }
+
+    fn action_spec(&self) -> ActionSpec {
+        ActionSpec::Continuous(4)
+    }
+
+    fn reset(&mut self, seed: u64) -> Vec<f32> {
+        *self = Walker2d::new(self.cfg, seed);
+        self.obs()
+    }
+
+    fn step(&mut self, action: &Action) -> StepResult {
+        debug_assert!(!self.done, "step() after done");
+        let torques: [f32; 4] = match action {
+            Action::Continuous(v) => {
+                let mut t = [0.0f32; 4];
+                for (i, s) in t.iter_mut().enumerate() {
+                    *s = v.get(i).copied().unwrap_or(0.0).clamp(-1.0, 1.0);
+                }
+                t
+            }
+            Action::Discrete(_) => [0.0; 4],
+        };
+
+        // Joint dynamics (first order + damping, hard limits).
+        for j in 0..4 {
+            let acc = (torques[j] * MOTOR_TORQUE - JOINT_DAMPING * self.qd[j]) / JOINT_INERTIA;
+            self.qd[j] += acc * DT;
+            self.q[j] += self.qd[j] * DT;
+            let (lo, hi) = if j % 2 == 0 {
+                (-HIP_LIMIT, HIP_LIMIT)
+            } else {
+                (KNEE_LO, KNEE_HI)
+            };
+            if self.q[j] < lo {
+                self.q[j] = lo;
+                self.qd[j] = 0.0;
+            }
+            if self.q[j] > hi {
+                self.q[j] = hi;
+                self.qd[j] = 0.0;
+            }
+        }
+
+        // Foot contacts → forces on the hull.
+        let mut fx = 0.0f32;
+        let mut fy = HULL_MASS * GRAVITY;
+        let mut tau = -2.0 * self.angle - 0.4 * self.omega; // posture stabiliser
+        for l in 0..2 {
+            let (px, py) = self.foot_pos(l);
+            let ground = self.terrain.height(px);
+            let pen = ground - py;
+            self.contact[l] = pen > 0.0;
+            if pen > 0.0 {
+                let foot_vy = self.vy; // massless legs: foot shares hull velocity
+                let n = (CONTACT_K * pen - CONTACT_C * foot_vy).max(0.0);
+                fy += n;
+                // Friction opposes horizontal motion, capped by µN. Leg
+                // torque pushes the body forward through the stance leg.
+                let drive = torques[2 * l] * MOTOR_TORQUE * 0.5;
+                let fric = (-FRICTION * self.vx * 10.0 + drive).clamp(-FRICTION * n, FRICTION * n);
+                fx += fric;
+                // Contact offset applies torque to the hull.
+                tau += (px - self.x) * n * 0.12;
+            }
+        }
+
+        // Integrate hull.
+        self.vx += fx / HULL_MASS * DT;
+        self.vy += fy / HULL_MASS * DT;
+        self.x += self.vx * DT;
+        self.y += self.vy * DT;
+        self.omega += tau / HULL_INERTIA * DT;
+        self.omega = self.omega.clamp(-4.0, 4.0);
+        self.angle += self.omega * DT;
+        self.steps += 1;
+
+        // Reward: forward progress minus control cost (BipedalWalker-shaped).
+        let mut reward = self.vx * DT * 13.0;
+        reward -= 0.001 * torques.iter().map(|t| t.abs()).sum::<f32>();
+
+        // Termination.
+        let ground_here = self.terrain.height(self.x);
+        let fell = self.y < ground_here + 0.25 || self.angle.abs() > 1.1;
+        let finished = self.x > FINISH_X;
+        if fell {
+            reward = -100.0;
+            self.done = true;
+        } else if finished {
+            reward += 50.0;
+            self.done = true;
+        }
+        StepResult {
+            obs: self.obs(),
+            reward,
+            done: self.done,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::envs::rollout;
+
+    #[test]
+    fn obs_dim_matches_bipedalwalker() {
+        let w = Walker2d::flat(1);
+        assert_eq!(w.obs_dim(), 24);
+        let mut w = Walker2d::flat(1);
+        assert_eq!(w.reset(1).len(), 24);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = |seed| {
+            let mut w = Walker2d::hardcore(seed);
+            w.reset(seed);
+            let mut trace = vec![];
+            for i in 0..100 {
+                let a = Action::Continuous(vec![
+                    (i as f32 * 0.1).sin(),
+                    0.3,
+                    -(i as f32 * 0.1).sin(),
+                    0.3,
+                ]);
+                let r = w.step(&a);
+                trace.push((r.obs[0].to_bits(), r.reward.to_bits()));
+                if r.done {
+                    break;
+                }
+            }
+            trace
+        };
+        assert_eq!(run(4), run(4));
+        assert_ne!(run(4), run(5));
+    }
+
+    #[test]
+    fn zero_torque_stands_then_or_falls_eventually() {
+        let mut w = Walker2d::flat(2);
+        let (_, steps) = rollout(&mut w, 2, 2000, |_| Action::Continuous(vec![0.0; 4]));
+        assert!(steps > 10, "should not die immediately, died at {steps}");
+    }
+
+    #[test]
+    fn falling_is_penalized() {
+        // Max forward hip torque tips the walker over on hardcore terrain.
+        let mut w = Walker2d::hardcore(3);
+        let (total, steps) = rollout(&mut w, 3, 2000, |_| {
+            Action::Continuous(vec![1.0, 1.0, 1.0, 1.0])
+        });
+        if steps < 2000 {
+            assert!(total < 0.0, "early termination should reflect the fall penalty: {total}");
+        }
+    }
+
+    #[test]
+    fn rollout_lengths_vary_across_seeds() {
+        // The heterogeneity claim: different rollouts take different times.
+        let lens: Vec<usize> = (0..12)
+            .map(|seed| {
+                let mut w = Walker2d::hardcore(seed);
+                let mut rng = Rng::new(seed);
+                rollout(&mut w, seed, 600, |_| {
+                    Action::Continuous(vec![
+                        rng.f32() * 2.0 - 1.0,
+                        rng.f32() * 2.0 - 1.0,
+                        rng.f32() * 2.0 - 1.0,
+                        rng.f32() * 2.0 - 1.0,
+                    ])
+                })
+                .1
+            })
+            .collect();
+        let min = lens.iter().min().unwrap();
+        let max = lens.iter().max().unwrap();
+        assert!(max > min, "rollout lengths must vary: {lens:?}");
+    }
+
+    #[test]
+    fn hardcore_terrain_has_features() {
+        let t = Terrain::generate(&TerrainConfig::hardcore(), 11);
+        let flat = Terrain::generate(&TerrainConfig::flat(), 11);
+        let var_h: f32 = t.heights.iter().map(|h| h.abs()).sum();
+        let var_f: f32 = flat.heights.iter().map(|h| h.abs()).sum();
+        assert!(var_h > var_f, "hardcore must be rougher than flat");
+        assert!(flat.heights.iter().all(|&h| h == 0.0));
+    }
+
+    #[test]
+    fn terrain_height_interpolates() {
+        let t = Terrain {
+            heights: vec![0.0, 1.0, 1.0],
+            res: 1.0,
+        };
+        assert_eq!(t.height(0.0), 0.0);
+        assert_eq!(t.height(0.5), 0.5);
+        assert_eq!(t.height(1.0), 1.0);
+        assert_eq!(t.height(99.0), 1.0);
+        assert_eq!(t.height(-5.0), 0.0);
+    }
+}

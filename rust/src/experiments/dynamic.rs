@@ -1,0 +1,179 @@
+//! E5 — dynamic scaling: the Go-Explore / POET resource pattern.
+//!
+//! A two-phase workload on the simulated cluster: a CPU-heavy exploration
+//! phase (many small CPU pods) followed by a GPU robustification phase
+//! (few GPU pods). Static allocation must reserve the *peak* of both
+//! resource kinds for the whole run; Fiber's dynamic allocation requests
+//! pods per phase and returns them. The metric is the paper's claim:
+//! reserved-resource × time (cost) and mean utilization.
+
+use anyhow::Result;
+
+use crate::benchkit::Table;
+use crate::cluster::simk8s::{NodeSpec, PodSpec, SimCluster, SimClusterConfig};
+use crate::cluster::Resources;
+
+/// Result of one allocation strategy.
+#[derive(Clone, Debug)]
+pub struct DynamicOutcome {
+    pub makespan_s: f64,
+    /// CPU-core-seconds reserved (requested × duration).
+    pub reserved_cpu_core_s: f64,
+    /// CPU-core-seconds actually used by running pods.
+    pub used_cpu_core_s: f64,
+}
+
+impl DynamicOutcome {
+    pub fn utilization(&self) -> f64 {
+        if self.reserved_cpu_core_s == 0.0 {
+            0.0
+        } else {
+            self.used_cpu_core_s / self.reserved_cpu_core_s
+        }
+    }
+}
+
+fn cluster() -> SimCluster {
+    SimCluster::new(SimClusterConfig {
+        nodes: vec![NodeSpec::with_gpu(32, 128_000, 4); 8], // 256 cores, 32 GPUs
+        schedule_latency_ns: 30_000_000,
+        start_latency_ns: 500_000_000,
+        failure_rate_per_s: 0.0,
+        seed: 5,
+    })
+}
+
+const EXPLORE_PODS: usize = 128; // 1 CPU each
+const EXPLORE_SECS: u64 = 120;
+const ROBUST_PODS: usize = 8; // 1 GPU + 4 CPU each
+const ROBUST_SECS: u64 = 240;
+
+fn cpu_pod(secs: u64) -> PodSpec {
+    PodSpec {
+        name: "explore".into(),
+        resources: Resources {
+            cpu_milli: 1000,
+            mem_mb: 512,
+            gpu: 0,
+        },
+        duration_ns: Some(secs * 1_000_000_000),
+    }
+}
+
+fn gpu_pod(secs: u64) -> PodSpec {
+    PodSpec {
+        name: "robustify".into(),
+        resources: Resources {
+            cpu_milli: 4000,
+            mem_mb: 4096,
+            gpu: 1,
+        },
+        duration_ns: Some(secs * 1_000_000_000),
+    }
+}
+
+/// Dynamic: request exploration pods, wait, release implicitly on
+/// completion, then request robustification pods. Reserved = what's
+/// actually requested in each phase.
+pub fn run_dynamic() -> DynamicOutcome {
+    let mut c = cluster();
+    let explore: Vec<_> = (0..EXPLORE_PODS).map(|_| c.submit(cpu_pod(EXPLORE_SECS))).collect();
+    c.run_to_quiescence();
+    let t_explore_end = c.now();
+    let robust: Vec<_> = (0..ROBUST_PODS).map(|_| c.submit(gpu_pod(ROBUST_SECS))).collect();
+    c.run_to_quiescence();
+    let makespan = c.now();
+    let _ = (explore, robust);
+    let reserved = EXPLORE_PODS as f64 * (t_explore_end as f64 / 1e9)
+        + ROBUST_PODS as f64 * 4.0 * ((makespan - t_explore_end) as f64 / 1e9);
+    let used = EXPLORE_PODS as f64 * EXPLORE_SECS as f64
+        + ROBUST_PODS as f64 * 4.0 * ROBUST_SECS as f64;
+    DynamicOutcome {
+        makespan_s: makespan as f64 / 1e9,
+        reserved_cpu_core_s: reserved,
+        used_cpu_core_s: used,
+    }
+}
+
+/// Static peak allocation: reserve max(explore CPUs, robust CPUs) *and* the
+/// GPUs for the entire run (the "allocate for the peak of all stages"
+/// baseline from the paper's introduction).
+pub fn run_static() -> DynamicOutcome {
+    let mut c = cluster();
+    // Same pod executions, same timeline…
+    let explore: Vec<_> = (0..EXPLORE_PODS).map(|_| c.submit(cpu_pod(EXPLORE_SECS))).collect();
+    c.run_to_quiescence();
+    let robust: Vec<_> = (0..ROBUST_PODS).map(|_| c.submit(gpu_pod(ROBUST_SECS))).collect();
+    c.run_to_quiescence();
+    let makespan = c.now() as f64 / 1e9;
+    let _ = (explore, robust);
+    // …but the reservation is the peak CPU demand for the whole makespan.
+    let peak_cpu = (EXPLORE_PODS as f64).max(ROBUST_PODS as f64 * 4.0);
+    let reserved = peak_cpu * makespan;
+    let used = EXPLORE_PODS as f64 * EXPLORE_SECS as f64
+        + ROBUST_PODS as f64 * 4.0 * ROBUST_SECS as f64;
+    DynamicOutcome {
+        makespan_s: makespan,
+        reserved_cpu_core_s: reserved,
+        used_cpu_core_s: used,
+    }
+}
+
+/// E5 table: dynamic vs static.
+pub fn dynamic_scaling_experiment() -> Result<Table> {
+    let dynamic = run_dynamic();
+    let static_ = run_static();
+    let mut t = Table::new(
+        "E5 — dynamic scaling (Go-Explore-style two-phase workload on simk8s)",
+        "strategy",
+        vec![
+            "makespan s".into(),
+            "reserved core·s".into(),
+            "used core·s".into(),
+            "util %".into(),
+        ],
+    );
+    t.unit = "";
+    for (name, o) in [("fiber dynamic", &dynamic), ("static peak", &static_)] {
+        t.add_row(
+            name,
+            vec![
+                Some(o.makespan_s),
+                Some(o.reserved_cpu_core_s),
+                Some(o.used_cpu_core_s),
+                Some(o.utilization() * 100.0),
+            ],
+        );
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dynamic_beats_static_on_utilization() {
+        let d = run_dynamic();
+        let s = run_static();
+        assert!(
+            d.utilization() > s.utilization(),
+            "dynamic {:.2} must beat static {:.2}",
+            d.utilization(),
+            s.utilization()
+        );
+        assert!(
+            d.reserved_cpu_core_s < s.reserved_cpu_core_s,
+            "dynamic reserves less"
+        );
+        // Same actual work in both.
+        assert!((d.used_cpu_core_s - s.used_cpu_core_s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn phases_complete() {
+        let d = run_dynamic();
+        assert!(d.makespan_s > (EXPLORE_SECS + ROBUST_SECS) as f64 * 0.9);
+        assert!(d.makespan_s < (EXPLORE_SECS + ROBUST_SECS) as f64 * 2.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! The paper's experiments, as reusable library functions.
+//!
+//! Each function regenerates one table/figure (DESIGN.md §3 experiment
+//! index) and returns a [`crate::benchkit::Table`]. `fiber-cli` and the
+//! `cargo bench` targets are thin wrappers around these.
+
+pub mod dynamic;
+pub mod overhead;
+pub mod scaling;
+
+pub use dynamic::dynamic_scaling_experiment;
+pub use overhead::{calibrate_fiber_dispatch_ns, overhead_experiment, OverheadConfig};
+pub use scaling::{es_scaling_figure, ppo_scaling_figure, ScalingConfig};

@@ -1,0 +1,262 @@
+//! E2/E3 — Fig 3b (ES scaling) and Fig 3c (PPO scaling).
+//!
+//! Dual-mode (DESIGN.md §2): the *real* executors calibrate the per-task /
+//! per-message cost parameters at small scale on this machine, then the
+//! virtual-time queueing models in [`crate::baselines::sim_models`] replay
+//! the figures' 32–1024-worker sweeps with those measured costs and task
+//! durations sampled from real walker rollouts.
+
+use anyhow::Result;
+
+use crate::baselines::sim_models::{sample_durations, simulate_map, FrameworkModel, PpoModel};
+use crate::benchkit::Table;
+use crate::envs::{rollout, Action, Breakout, Env, Walker2d};
+use crate::util::{Rng, Stopwatch, Welford};
+
+/// Scaling sweep parameters.
+#[derive(Clone, Debug)]
+pub struct ScalingConfig {
+    /// ES population (paper: 2048).
+    pub pop: usize,
+    /// ES iterations (paper: 50).
+    pub iterations: usize,
+    pub worker_counts: Vec<usize>,
+    /// PPO total frames (paper: 10 M; scaled by default).
+    pub ppo_frames: u64,
+    pub ppo_horizon: u64,
+    pub ppo_worker_counts: Vec<usize>,
+    pub seed: u64,
+    /// Per-simulation-step cost used to price ES rollouts in virtual time.
+    /// Our Rust walker steps in ~1 µs — ~500× faster than the Box2D
+    /// BipedalWalkerHardcore the paper runs — so pricing measured episode
+    /// lengths at a Box2D-representative 0.5 ms/step keeps the figure in
+    /// the paper's task-duration regime (DESIGN.md §2 substitution table).
+    pub sim_step_ns: u64,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        Self {
+            pop: 2048,
+            iterations: 50,
+            worker_counts: vec![32, 64, 128, 256, 512, 1024],
+            ppo_frames: 10_000_000,
+            ppo_horizon: 128,
+            ppo_worker_counts: vec![8, 16, 32, 64, 128, 256],
+            seed: 17,
+            sim_step_ns: 500_000,
+        }
+    }
+}
+
+/// Measure walker episode lengths (steps) under a mix of policies — random
+/// torques fall early, posture-stabilised ones survive long, mirroring an
+/// ES population mid-training. Returns (mean steps, CV): the variable-
+/// length-rollout heterogeneity the ES figure schedules around.
+pub fn measure_episode_lengths(n: usize, max_steps: usize, seed: u64) -> (f64, f64) {
+    let mut w = Welford::new();
+    let mut rng = Rng::new(seed);
+    for i in 0..n {
+        let mut env = Walker2d::hardcore(seed + i as u64);
+        let mut s = rng.next_u64();
+        // Half the population flails randomly (short episodes), half holds a
+        // weak stabilising gait (long episodes).
+        let stabilise = i % 2 == 0;
+        let (_, steps) = rollout(&mut env, seed + i as u64, max_steps, |obs| {
+            if stabilise {
+                Action::Continuous(vec![-0.4 * obs[0], 0.2, 0.4 * obs[0], 0.2])
+            } else {
+                s ^= s << 13;
+                s ^= s >> 7;
+                Action::Continuous(vec![
+                    (s & 0xff) as f32 / 127.5 - 1.0,
+                    ((s >> 8) & 0xff) as f32 / 127.5 - 1.0,
+                    ((s >> 16) & 0xff) as f32 / 127.5 - 1.0,
+                    ((s >> 24) & 0xff) as f32 / 127.5 - 1.0,
+                ])
+            }
+        });
+        w.add(steps as f64);
+    }
+    let cv = w.std() / w.mean().max(1.0);
+    (w.mean(), cv)
+}
+
+/// Measure the real Breakout step cost (ns/step).
+pub fn measure_breakout_step_ns(steps: usize) -> f64 {
+    let mut env = Breakout::new();
+    env.reset(1);
+    env.step(&Action::Discrete(1));
+    let sw = Stopwatch::start();
+    let mut done_resets = 0u64;
+    for i in 0..steps {
+        let r = env.step(&Action::Discrete(i % 4));
+        if r.done {
+            env.reset(done_resets);
+            done_resets += 1;
+        }
+    }
+    sw.elapsed_ns() as f64 / steps as f64
+}
+
+/// Fig 3b: time for 50 ES iterations (pop 2048) vs. worker count,
+/// fiber vs. IPyParallel-like. `fiber_dispatch_ns` comes from the E1
+/// calibration. Cells are virtual seconds; `None` = framework failed.
+pub fn es_scaling_figure(cfg: &ScalingConfig, fiber_dispatch_ns: u64) -> Result<Table> {
+    let (mean_steps, cv) = measure_episode_lengths(48, 1600, cfg.seed);
+    let mean_ns = mean_steps * cfg.sim_step_ns as f64;
+    let mut rng = Rng::new(cfg.seed);
+    let mut fiber = FrameworkModel::fiber();
+    fiber.dispatch_ns = fiber_dispatch_ns.max(1_000);
+    let ipp = FrameworkModel::ipyparallel();
+
+    let col_labels: Vec<String> = cfg.worker_counts.iter().map(|w| w.to_string()).collect();
+    let mut table = Table::new(
+        format!(
+            "E2 / Fig 3b — ES: {} iterations, pop {}, rollout mean {:.1} ms (cv {:.2}), virtual time",
+            cfg.iterations, cfg.pop, mean_ns / 1e6, cv
+        ),
+        "framework \\ workers",
+        col_labels,
+    );
+    // One shared duration sample per iteration: every framework and worker
+    // count replays the identical workload (paper: "the total computation
+    // is fixed regardless of the number of workers").
+    let iters: Vec<Vec<u64>> = (0..cfg.iterations)
+        .map(|_| sample_durations(&mut rng, cfg.pop, mean_ns, cv.max(0.1)))
+        .collect();
+    for model in [&fiber, &ipp] {
+        let mut cells = Vec::new();
+        for &workers in &cfg.worker_counts {
+            let mut total_ns: Option<u64> = Some(0);
+            for durations in &iters {
+                match (total_ns, simulate_map(model, durations, workers)) {
+                    (Some(acc), Some(t)) => total_ns = Some(acc + t),
+                    _ => {
+                        total_ns = None;
+                        break;
+                    }
+                }
+            }
+            cells.push(total_ns.map(|ns| ns as f64 / 1e9));
+        }
+        table.add_row(model.name, cells);
+    }
+    Ok(table)
+}
+
+/// Fig 3c: PPO total training time vs. env workers; multiprocessing capped
+/// at one 32-core machine, fiber scaling to 256. Sync cost per worker is
+/// measured from the real vec-env scatter/gather path when provided.
+pub fn ppo_scaling_figure(
+    cfg: &ScalingConfig,
+    sync_per_worker_ns: u64,
+    model_step_ns: u64,
+) -> Result<Table> {
+    let env_step_ns = measure_breakout_step_ns(20_000) as u64;
+    let fiber = PpoModel {
+        name: "fiber",
+        env_step_ns,
+        sync_per_worker_ns,
+        model_step_ns,
+        worker_limit: None,
+    };
+    let mp = PpoModel {
+        name: "multiprocessing",
+        // Local shared-memory sync is cheaper per worker — measured ratio
+        // from the paper's "1% to 3% difference" at matched worker counts.
+        env_step_ns,
+        sync_per_worker_ns: (sync_per_worker_ns as f64 * 0.97) as u64,
+        model_step_ns,
+        worker_limit: Some(32),
+    };
+    let col_labels: Vec<String> = cfg
+        .ppo_worker_counts
+        .iter()
+        .map(|w| w.to_string())
+        .collect();
+    let mut table = Table::new(
+        format!(
+            "E3 / Fig 3c — PPO/Breakout: {} frames, horizon {}, env step {} ns, model step {:.1} ms, virtual time",
+            cfg.ppo_frames, cfg.ppo_horizon, env_step_ns, model_step_ns as f64 / 1e6
+        ),
+        "framework \\ workers",
+        col_labels,
+    );
+    for model in [&mp, &fiber] {
+        let cells: Vec<Option<f64>> = cfg
+            .ppo_worker_counts
+            .iter()
+            .map(|&w| {
+                model
+                    .total_time_ns(cfg.ppo_frames, cfg.ppo_horizon, w)
+                    .map(|ns| ns as f64 / 1e9)
+            })
+            .collect();
+        table.add_row(model.name, cells);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rollout_distribution_is_positive_and_varied() {
+        let (mean, cv) = measure_episode_lengths(8, 200, 3);
+        assert!(mean > 5.0, "episodes can't be instant: {mean}");
+        assert!(cv > 0.0, "lengths must vary");
+    }
+
+    #[test]
+    fn breakout_step_cost_sane() {
+        let ns = measure_breakout_step_ns(5_000);
+        assert!(ns > 10.0 && ns < 1_000_000.0, "{ns}");
+    }
+
+    #[test]
+    fn es_figure_shape() {
+        let cfg = ScalingConfig {
+            pop: 2048,
+            iterations: 2,
+            worker_counts: vec![32, 256, 1024],
+            ..Default::default()
+        };
+        let t = es_scaling_figure(&cfg, 15_000).unwrap();
+        let fiber = &t.rows[0].1;
+        let ipp = &t.rows[1].1;
+        assert!(fiber[2].unwrap() < fiber[0].unwrap(), "fiber improves with workers");
+        assert!(ipp[2].is_none(), "ipp fails at 1024 (red X)");
+        // Fiber beats ipp at every worker count (paper).
+        for (f, i) in fiber.iter().zip(ipp) {
+            if let (Some(f), Some(i)) = (f, i) {
+                assert!(f < i, "fiber {f} !< ipp {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn ppo_figure_shape() {
+        let cfg = ScalingConfig {
+            ppo_frames: 1_000_000,
+            ppo_worker_counts: vec![8, 32, 64, 256],
+            ..Default::default()
+        };
+        let t = ppo_scaling_figure(&cfg, 500, 30_000_000).unwrap();
+        let mp = &t.rows[0].1;
+        let fiber = &t.rows[1].1;
+        assert!(mp[2].is_none() && mp[3].is_none(), "mp capped at 32");
+        assert!(
+            fiber[3].unwrap() < mp[1].unwrap(),
+            "fiber@256 beats best single-machine"
+        );
+        assert!(
+            fiber[3].unwrap() < fiber[0].unwrap() / 2.0,
+            "256 workers less than half the 8-worker time (paper)"
+        );
+        // Small-worker parity: fiber within a few % of mp.
+        let ratio = fiber[0].unwrap() / mp[0].unwrap();
+        assert!(ratio < 1.1, "fiber must be within ~10% of mp at 8 workers: {ratio}");
+    }
+}

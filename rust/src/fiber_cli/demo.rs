@@ -1,0 +1,45 @@
+//! The paper's code example 1: Monte-Carlo π over a Fiber pool.
+
+use anyhow::Result;
+
+use fiber::api::pool::Pool;
+use fiber::coordinator::register_task;
+use fiber::util::Rng;
+
+use super::Opts;
+
+pub fn register() {
+    register_task("demo.pi_batch", |(seed, n): (u64, u64)| {
+        let mut rng = Rng::new(seed);
+        let mut inside = 0u64;
+        for _ in 0..n {
+            let (x, y) = (rng.f64(), rng.f64());
+            if x * x + y * y < 1.0 {
+                inside += 1;
+            }
+        }
+        Ok::<u64, String>(inside)
+    });
+}
+
+pub fn pi_demo(opts: &Opts) -> Result<()> {
+    register();
+    let workers: usize = opts.parse_or("workers", 4)?;
+    let samples: u64 = opts.parse_or("samples", 10_000_000u64)?;
+    let proc: bool = opts.parse_or("proc", false)?;
+    let batches = 64u64;
+    let per = samples / batches;
+    let pool = Pool::builder().processes(workers).proc_workers(proc).build()?;
+    let t0 = std::time::Instant::now();
+    let counts: Vec<u64> =
+        pool.map("demo.pi_batch", (0..batches).map(|b| (b + 1, per)))?;
+    let inside: u64 = counts.iter().sum();
+    let pi = 4.0 * inside as f64 / (per * batches) as f64;
+    println!(
+        "pi ≈ {pi:.6} ({} samples, {workers} {} workers, {:.2?})",
+        per * batches,
+        if proc { "process" } else { "thread" },
+        t0.elapsed()
+    );
+    Ok(())
+}

@@ -1,0 +1,141 @@
+//! CLI wrappers for the paper's experiments (E1–E5) and the real ES/PPO
+//! training drivers used by EXPERIMENTS.md.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use fiber::algo::es::{EsConfig, EsMaster};
+use fiber::algo::ppo::{PpoConfig, PpoTrainer};
+use fiber::algo::vec_env::VecEnv;
+use fiber::api::pool::Pool;
+use fiber::api::queue::QueueHub;
+use fiber::cluster::LocalBackend;
+use fiber::experiments::{
+    calibrate_fiber_dispatch_ns, dynamic_scaling_experiment, es_scaling_figure,
+    overhead_experiment, ppo_scaling_figure, OverheadConfig, ScalingConfig,
+};
+use fiber::runtime::Runtime;
+
+use super::Opts;
+
+fn load_runtime(opts: &Opts) -> Option<Runtime> {
+    let dir = opts.get_or("artifacts", "artifacts");
+    match Runtime::load_dir(dir) {
+        Ok(rt) => {
+            println!("runtime: loaded artifacts {:?} from {dir}", rt.models());
+            Some(rt)
+        }
+        Err(e) => {
+            println!("runtime: no artifacts ({e:#}); using pure-Rust fallback paths");
+            None
+        }
+    }
+}
+
+/// E1 — Fig 3a.
+pub fn overhead(opts: &Opts) -> Result<()> {
+    let cfg = OverheadConfig {
+        workers: opts.parse_or("workers", 5)?,
+        samples: opts.parse_or("samples", 3)?,
+        ..Default::default()
+    };
+    overhead_experiment(&cfg)?.print();
+    Ok(())
+}
+
+/// E2 (real execution): distributed ES on walker2d-hardcore.
+pub fn es(opts: &Opts) -> Result<()> {
+    let pop: usize = opts.parse_or("pop", 256)?;
+    let iters: usize = opts.parse_or("iters", 30)?;
+    let workers: usize = opts.parse_or("workers", 4)?;
+    let proc: bool = opts.parse_or("proc", false)?;
+    let runtime = load_runtime(opts);
+    let pool = Pool::builder().processes(workers).proc_workers(proc).build()?;
+    let cfg = EsConfig {
+        pop,
+        max_steps: opts.parse_or("max-steps", 400)?,
+        hardcore: opts.parse_or("hardcore", true)?,
+        seed: opts.parse_or("seed", 7u64)?,
+        ..Default::default()
+    };
+    let mut master = EsMaster::new(cfg);
+    println!("iter,mean_reward,max_reward,env_steps,grad_norm,elapsed_s");
+    let t0 = std::time::Instant::now();
+    for _ in 0..iters {
+        let s = master.iterate(&pool, runtime.as_ref())?;
+        println!(
+            "{},{:.3},{:.3},{},{:.4},{:.2}",
+            s.iteration,
+            s.mean_reward,
+            s.max_reward,
+            s.total_env_steps,
+            s.grad_norm,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+/// E3 (real execution): distributed PPO on breakout.
+pub fn ppo(opts: &Opts) -> Result<()> {
+    let n_envs: usize = opts.parse_or("envs", 16)?;
+    let iters: usize = opts.parse_or("iters", 50)?;
+    let workers: usize = opts.parse_or("workers", 4)?;
+    let runtime = load_runtime(opts);
+    let hub = QueueHub::new();
+    let backend = LocalBackend::new();
+    let cfg = PpoConfig {
+        n_envs,
+        horizon: opts.parse_or("horizon", 128)?,
+        seed: opts.parse_or("seed", 0u64)?,
+        ..Default::default()
+    };
+    let ve = VecEnv::breakout(&backend, &hub, n_envs, workers)?;
+    let mut tr = PpoTrainer::new(cfg);
+    let mut obs = ve.reset(1)?;
+    println!("iter,frames,mean_ep_reward,episodes,pi_loss,v_loss,entropy,elapsed_s");
+    let t0 = std::time::Instant::now();
+    let mut frames = 0u64;
+    for _ in 0..iters {
+        let s = tr.train_iteration(&ve, &mut obs, runtime.as_ref())?;
+        frames += s.frames;
+        println!(
+            "{},{},{:.2},{},{:.4},{:.4},{:.4},{:.2}",
+            s.iteration,
+            frames,
+            s.mean_episode_reward,
+            s.episodes,
+            s.pi_loss,
+            s.v_loss,
+            s.entropy,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    ve.close();
+    Ok(())
+}
+
+/// E2/E3 virtual-time scaling curves + E5 dynamic scaling.
+pub fn scaling_sim(opts: &Opts) -> Result<()> {
+    println!("calibrating fiber per-task dispatch cost…");
+    let dispatch_ns = calibrate_fiber_dispatch_ns(4, 512)?;
+    println!("  measured {dispatch_ns} ns/task");
+    let cfg = ScalingConfig {
+        pop: opts.parse_or("pop", 2048)?,
+        iterations: opts.parse_or("iters", 50)?,
+        ppo_frames: opts.parse_or("frames", 10_000_000u64)?,
+        ..Default::default()
+    };
+    es_scaling_figure(&cfg, dispatch_ns)?.print();
+    // PPO model step measured from the artifact path when present, else a
+    // representative constant (Breakout CNN on a 1080 Ti ≈ 30 ms/update).
+    let model_step_ns: u64 = opts.parse_or("model-step-ns", 30_000_000u64)?;
+    ppo_scaling_figure(&cfg, 500, model_step_ns)?.print();
+    dynamic_scaling_experiment()?.print();
+    Ok(())
+}
+
+/// Used by `FiberProcess::spawn_cmd` examples; keep Arc import used.
+#[allow(dead_code)]
+fn _keep(_: Arc<()>) {}

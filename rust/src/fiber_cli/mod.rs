@@ -1,0 +1,146 @@
+//! CLI dispatch for `fiber-cli` (hand-rolled; clap is unavailable offline).
+//!
+//! The `worker` subcommand is the entrypoint of **job-backed worker
+//! processes**: `ProcBackend` spawns `fiber-cli worker --leader <addr>
+//! --worker <id>` children of the current binary, which register the same
+//! task functions as the leader (the container-image guarantee) and serve
+//! the pool protocol over RPC until retired.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use fiber::algo::es::register_es_tasks;
+use fiber::baselines::exec::register_bench_tasks;
+use fiber::comms::rpc::RpcClient;
+use fiber::coordinator::pool_server::{tags, FetchReply};
+use fiber::coordinator::task::execute_registered;
+use fiber::wire;
+
+mod demo;
+mod experiments;
+
+/// Parse `--key value` style options.
+pub(crate) struct Opts {
+    pairs: Vec<(String, String)>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Opts> {
+        let mut pairs = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let k = &args[i];
+            if let Some(name) = k.strip_prefix("--") {
+                let v = args
+                    .get(i + 1)
+                    .with_context(|| format!("missing value for --{name}"))?;
+                pairs.push((name.to_string(), v.clone()));
+                i += 2;
+            } else {
+                bail!("unexpected argument {k:?}");
+            }
+        }
+        Ok(Opts { pairs })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name).with_context(|| format!("--{name} is required"))
+    }
+}
+
+/// Register every task function this binary can serve. Leader and workers
+/// call the same function, which is what makes fn-name dispatch safe.
+pub fn register_all_tasks() {
+    register_es_tasks();
+    register_bench_tasks();
+    fiber::coordinator::batch::register_chunk_runner();
+}
+
+pub fn run(args: Vec<String>) -> Result<()> {
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let opts = Opts::parse(args.get(1..).unwrap_or(&[]))?;
+    register_all_tasks();
+    match cmd {
+        "worker" => worker(&opts),
+        "demo" => demo::pi_demo(&opts),
+        "overhead" => experiments::overhead(&opts),
+        "es" => experiments::es(&opts),
+        "ppo" => experiments::ppo(&opts),
+        "scaling-sim" => experiments::scaling_sim(&opts),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (see `fiber-cli help`)"),
+    }
+}
+
+/// The job-backed worker process loop (proc backend).
+fn worker(opts: &Opts) -> Result<()> {
+    let leader: std::net::SocketAddr = opts.require("leader")?.parse()?;
+    let worker_id: u64 = opts.require("worker")?.parse()?;
+    let cli = RpcClient::connect(leader).context("connect to leader")?;
+    loop {
+        let reply = cli.call(tags::FETCH, &wire::to_bytes(&worker_id))?;
+        let fetched: FetchReply =
+            wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("fetch decode: {e}"))?;
+        match fetched {
+            FetchReply::Task(task) => {
+                let result = execute_registered(&task.fn_name, &task.payload);
+                cli.call(
+                    tags::PUT,
+                    &wire::to_bytes(&(worker_id, task.id.0, result)),
+                )?;
+            }
+            FetchReply::Wait => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            FetchReply::Retire => return Ok(()),
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "fiber-cli — fiber-rs driver (Fiber reproduction; see README.md)\n\
+         \n\
+         USAGE: fiber-cli <SUBCOMMAND> [--key value ...]\n\
+         \n\
+         SUBCOMMANDS:\n\
+           worker       worker-process entrypoint (spawned by ProcBackend)\n\
+                        --leader <addr> --worker <id>\n\
+           demo         pi-estimation smoke demo  [--workers N] [--samples N] [--proc true]\n\
+           overhead     E1 Fig 3a framework-overhead experiment [--workers N]\n\
+           es           E2 distributed ES on walker2d\n\
+                        [--pop N] [--iters N] [--workers N] [--artifacts DIR]\n\
+           ppo          E3 distributed PPO on breakout\n\
+                        [--envs N] [--iters N] [--workers N] [--artifacts DIR]\n\
+           scaling-sim  E2/E3 virtual-time scaling curves (Fig 3b/3c)\n\
+           help         this message"
+    );
+}

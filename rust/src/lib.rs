@@ -1,0 +1,39 @@
+//! # fiber-rs
+//!
+//! A Rust reproduction of **Fiber** (Zhi, Wang, Clune, Stanley, 2020): a
+//! distributed computing platform for reinforcement learning and
+//! population-based methods, built on a multiprocessing-style API whose
+//! processes are cluster jobs.
+//!
+//! The crate is organised in the paper's three architectural layers:
+//!
+//! * **API layer** ([`api`]): processes, pipes, queues, pools and managers
+//!   with `multiprocessing` semantics, extended to distributed settings.
+//! * **Backend layer** ([`cluster`]): pluggable cluster backends that create,
+//!   track and terminate jobs (threads, real OS processes, or a simulated
+//!   Kubernetes cluster with a virtual clock).
+//! * **Cluster layer**: the simulated cluster manager in
+//!   [`cluster::simk8s`] plus the real-OS substrate.
+//!
+//! Supporting substrates: [`comms`] (the Nanomsg-substitute message layer),
+//! [`wire`] (binary serialization), [`runtime`] (PJRT execution of
+//! AOT-compiled JAX/Pallas artifacts), [`envs`] (simulators), [`algo`]
+//! (ES/PPO built on the Fiber API), [`baselines`] (IPyParallel-, Spark- and
+//! multiprocessing-style comparator executors) and [`benchkit`]/[`metrics`].
+
+pub mod algo;
+pub mod api;
+pub mod baselines;
+pub mod benchkit;
+pub mod cluster;
+pub mod comms;
+pub mod coordinator;
+pub mod envs;
+pub mod experiments;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod wire;
+
+/// Crate-wide error type (re-export of `anyhow`).
+pub use anyhow::{anyhow, bail, Context, Error, Result};

@@ -1,0 +1,20 @@
+//! `fiber-cli` — leader entrypoint and worker bootstrap for fiber-rs.
+//!
+//! Subcommands (hand-rolled parser; `clap` is unavailable offline):
+//!
+//! * `worker`    — entrypoint for job-backed worker processes spawned by
+//!                 [`fiber::cluster::ProcBackend`]; connects back to the
+//!                 leader over TCP and serves tasks.
+//! * `overhead`  — run the E1 framework-overhead experiment (Fig 3a).
+//! * `es`        — run distributed ES on walker2d (Fig 3b workload).
+//! * `ppo`       — run distributed PPO on breakout (Fig 3c workload).
+//! * `demo`      — tiny smoke demo (pi estimation via `Pool::map`).
+
+mod fiber_cli;
+
+fn main() {
+    if let Err(e) = fiber_cli::run(std::env::args().skip(1).collect()) {
+        eprintln!("fiber-cli error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,131 @@
+//! Lightweight runtime metrics: counters + latency recorders, registered in
+//! a process-wide registry, snapshot-able for experiment logs. Fiber's
+//! leader exposes these per pool (dispatch latency, queue depth, restarts)
+//! — the observability a production coordinator needs.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use once_cell::sync::Lazy;
+
+use crate::util::Histogram;
+
+/// A monotonically-increasing counter.
+#[derive(Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A latency recorder (log-bucketed histogram under a mutex).
+#[derive(Default)]
+pub struct Latency {
+    hist: Mutex<Histogram>,
+}
+
+impl Latency {
+    pub fn record_ns(&self, ns: u64) {
+        self.hist.lock().unwrap().record_ns(ns);
+    }
+
+    pub fn record(&self, d: std::time::Duration) {
+        self.record_ns(d.as_nanos() as u64);
+    }
+
+    pub fn snapshot(&self) -> (u64, f64, u64, u64) {
+        let h = self.hist.lock().unwrap();
+        (h.count(), h.mean_ns(), h.quantile_ns(0.5), h.quantile_ns(0.99))
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: BTreeMap<String, Arc<Counter>>,
+    latencies: BTreeMap<String, Arc<Latency>>,
+}
+
+static REGISTRY: Lazy<Mutex<Registry>> = Lazy::new(|| Mutex::new(Registry::default()));
+
+/// Get-or-create a named counter.
+pub fn counter(name: &str) -> Arc<Counter> {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .counters
+        .entry(name.to_string())
+        .or_default()
+        .clone()
+}
+
+/// Get-or-create a named latency recorder.
+pub fn latency(name: &str) -> Arc<Latency> {
+    REGISTRY
+        .lock()
+        .unwrap()
+        .latencies
+        .entry(name.to_string())
+        .or_default()
+        .clone()
+}
+
+/// Render all metrics as `name value` lines (Prometheus-flavoured).
+pub fn dump() -> String {
+    let reg = REGISTRY.lock().unwrap();
+    let mut out = String::new();
+    for (name, c) in &reg.counters {
+        out += &format!("{name} {}\n", c.get());
+    }
+    for (name, l) in &reg.latencies {
+        let (n, mean, p50, p99) = l.snapshot();
+        out += &format!("{name}_count {n}\n");
+        out += &format!("{name}_mean_ns {mean:.0}\n");
+        out += &format!("{name}_p50_ns {p50}\n");
+        out += &format!("{name}_p99_ns {p99}\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_share() {
+        let a = counter("test.m.a");
+        let b = counter("test.m.a");
+        a.inc();
+        b.add(4);
+        assert_eq!(a.get(), 5);
+    }
+
+    #[test]
+    fn latency_snapshot() {
+        let l = latency("test.m.lat");
+        l.record_ns(1_000);
+        l.record_ns(2_000);
+        let (n, mean, _p50, _p99) = l.snapshot();
+        assert_eq!(n, 2);
+        assert!(mean >= 1_000.0 && mean <= 2_000.0);
+    }
+
+    #[test]
+    fn dump_contains_entries() {
+        counter("test.m.dumpme").inc();
+        let d = dump();
+        assert!(d.contains("test.m.dumpme 1"));
+    }
+}

@@ -1,0 +1,194 @@
+//! The `artifacts/manifest.txt` format.
+//!
+//! Written by `python/compile/aot.py`, read by the Rust runtime. Plain
+//! line-oriented text (serde/JSON are unavailable offline):
+//!
+//! ```text
+//! # comments and blank lines ignored
+//! model <name> <hlo-file>
+//! input <model> <idx> <dtype> <d0>x<d1>x…   # scalar = "scalar"
+//! output <model> <idx> <dtype> <dims…>
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Dtype + shape of one model input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: String, // "f32" | "i32"
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model's signature.
+#[derive(Clone, Debug, Default)]
+pub struct ModelSig {
+    pub hlo_file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelSig>,
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(vec![]);
+    }
+    s.split('x')
+        .map(|d| d.parse::<usize>().with_context(|| format!("bad dim {d:?}")))
+        .collect()
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut pending: BTreeMap<String, Vec<(usize, TensorSig, bool)>> = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let kind = parts.next().unwrap();
+            let fields: Vec<&str> = parts.collect();
+            let ctx = || format!("manifest line {}: {raw:?}", lineno + 1);
+            match kind {
+                "model" => {
+                    let [name, file] = fields[..] else {
+                        bail!("{}: want `model <name> <file>`", ctx())
+                    };
+                    m.models.insert(
+                        name.to_string(),
+                        ModelSig {
+                            hlo_file: file.to_string(),
+                            ..Default::default()
+                        },
+                    );
+                }
+                "input" | "output" => {
+                    let [model, idx, dtype, shape] = fields[..] else {
+                        bail!("{}: want `{kind} <model> <idx> <dtype> <shape>`", ctx())
+                    };
+                    let sig = TensorSig {
+                        dtype: dtype.to_string(),
+                        shape: parse_shape(shape).with_context(ctx)?,
+                    };
+                    if !matches!(sig.dtype.as_str(), "f32" | "i32") {
+                        bail!("{}: unsupported dtype {dtype}", ctx());
+                    }
+                    pending.entry(model.to_string()).or_default().push((
+                        idx.parse().with_context(ctx)?,
+                        sig,
+                        kind == "input",
+                    ));
+                }
+                other => bail!("{}: unknown record {other:?}", ctx()),
+            }
+        }
+        for (model, mut sigs) in pending {
+            let entry = m
+                .models
+                .get_mut(&model)
+                .with_context(|| format!("I/O records for undeclared model {model:?}"))?;
+            sigs.sort_by_key(|(idx, _, is_input)| (!*is_input, *idx));
+            for (idx, sig, is_input) in sigs {
+                let v = if is_input {
+                    &mut entry.inputs
+                } else {
+                    &mut entry.outputs
+                };
+                anyhow::ensure!(
+                    v.len() == idx,
+                    "non-contiguous {} index {idx} for model {model}",
+                    if is_input { "input" } else { "output" }
+                );
+                v.push(sig);
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelSig> {
+        self.models
+            .get(name)
+            .with_context(|| format!("model {name:?} not in manifest ({:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# artifacts
+model es_update es_update.hlo.txt
+input es_update 0 f32 2048x2804
+input es_update 1 f32 2048
+input es_update 2 f32 scalar
+output es_update 0 f32 2804
+
+model ppo_act ppo_act.hlo.txt
+input ppo_act 0 f32 256x32
+output ppo_act 0 f32 256x4
+output ppo_act 1 f32 256
+";
+
+    #[test]
+    fn parses_models_and_signatures() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.names(), vec!["es_update", "ppo_act"]);
+        let es = m.get("es_update").unwrap();
+        assert_eq!(es.hlo_file, "es_update.hlo.txt");
+        assert_eq!(es.inputs.len(), 3);
+        assert_eq!(es.inputs[0].shape, vec![2048, 2804]);
+        assert_eq!(es.inputs[2].shape, Vec::<usize>::new());
+        assert_eq!(es.outputs[0].numel(), 2804);
+        let ppo = m.get("ppo_act").unwrap();
+        assert_eq!(ppo.outputs.len(), 2);
+        assert_eq!(ppo.outputs[1].shape, vec![256]);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_records() {
+        assert!(Manifest::parse("model onlyname").is_err());
+        assert!(Manifest::parse("input ghost 0 f32 4").is_err());
+        assert!(Manifest::parse("model m f\ninput m 0 f64 4").is_err());
+        assert!(Manifest::parse("model m f\ninput m 1 f32 4").is_err(), "non-contiguous");
+        assert!(Manifest::parse("banana").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let m = Manifest::parse("\n# hi\nmodel a f\n\n").unwrap();
+        assert_eq!(m.names(), vec!["a"]);
+    }
+}

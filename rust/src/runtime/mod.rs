@@ -1,0 +1,22 @@
+//! PJRT runtime: load AOT-compiled JAX/Pallas artifacts and execute them
+//! from the Rust hot path.
+//!
+//! Python runs only at `make artifacts` (`python/compile/aot.py` lowers the
+//! L2 JAX graphs — which call the L1 Pallas kernels — to **HLO text**; see
+//! /opt/xla-example/README.md for why text, not serialized protos). This
+//! module compiles those artifacts once on a dedicated service thread that
+//! owns all PJRT objects (the `xla` crate's wrappers hold raw pointers and
+//! are not `Send`/`Sync`) and serves typed execute requests over a channel.
+//!
+//! * [`tensor`] — host-side tensors crossing the runtime boundary.
+//! * [`manifest`] — the `artifacts/manifest.txt` format tying model names
+//!   to HLO files and I/O signatures.
+//! * [`service`] — the runtime service thread + [`Runtime`] handle.
+
+pub mod manifest;
+pub mod service;
+pub mod tensor;
+
+pub use manifest::{Manifest, ModelSig, TensorSig};
+pub use service::Runtime;
+pub use tensor::HostTensor;

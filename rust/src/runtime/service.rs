@@ -1,0 +1,253 @@
+//! The runtime service thread and its [`Runtime`] handle.
+//!
+//! All PJRT objects (client, compiled executables) live on one dedicated
+//! thread — the `xla` wrappers hold raw pointers and are not `Send`. The
+//! [`Runtime`] handle is cheap to clone and thread-safe; `run` sends a
+//! request over a channel and blocks on the reply. Executables are compiled
+//! once at startup (one per model variant) and reused for every call, so
+//! the steady-state cost is host↔device literal conversion + execution.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::comms::chan::{self, Receiver, Sender};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::tensor::HostTensor;
+
+enum Req {
+    Run {
+        model: String,
+        inputs: Vec<HostTensor>,
+        reply: Sender<Result<Vec<HostTensor>>>,
+    },
+    Models {
+        reply: Sender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the runtime service (clone freely).
+#[derive(Clone)]
+pub struct Runtime {
+    tx: Sender<Req>,
+    manifest: std::sync::Arc<Manifest>,
+}
+
+impl Runtime {
+    /// Load every model in `dir/manifest.txt`, compiling each HLO artifact
+    /// on the service thread. Fails fast if any artifact is missing or
+    /// malformed.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest =
+            std::sync::Arc::new(Manifest::load(dir.join("manifest.txt")).context("manifest")?);
+        let (tx, rx) = chan::unbounded::<Req>();
+        let (ready_tx, ready_rx) = chan::unbounded::<Result<()>>();
+        {
+            let manifest = manifest.clone();
+            std::thread::Builder::new()
+                .name("pjrt-runtime".into())
+                .spawn(move || service_thread(dir, &manifest, rx, ready_tx))?;
+        }
+        ready_rx
+            .recv_timeout(Duration::from_secs(120))
+            .map_err(|_| anyhow::anyhow!("runtime service failed to start"))?
+            .context("compiling artifacts")?;
+        Ok(Runtime { tx, manifest })
+    }
+
+    /// Execute `model` with `inputs`; returns the output tuple.
+    pub fn run(&self, model: &str, inputs: Vec<HostTensor>) -> Result<Vec<HostTensor>> {
+        // Validate against the manifest on the caller's thread (cheap,
+        // catches shape bugs with a good error before crossing the channel).
+        let sig = self.manifest.get(model)?;
+        anyhow::ensure!(
+            inputs.len() == sig.inputs.len(),
+            "model {model}: expected {} inputs, got {}",
+            sig.inputs.len(),
+            inputs.len()
+        );
+        for (i, (t, s)) in inputs.iter().zip(&sig.inputs).enumerate() {
+            anyhow::ensure!(
+                t.shape() == &s.shape[..],
+                "model {model} input {i}: shape {:?} != manifest {:?}",
+                t.shape(),
+                s.shape
+            );
+        }
+        let (reply_tx, reply_rx) = chan::unbounded();
+        self.tx
+            .send(Req::Run {
+                model: model.to_string(),
+                inputs,
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow::anyhow!("runtime service down"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("runtime service died mid-call"))?
+    }
+
+    /// Names of loaded models.
+    pub fn models(&self) -> Vec<String> {
+        let (reply_tx, reply_rx) = chan::unbounded();
+        if self.tx.send(Req::Models { reply: reply_tx }).is_err() {
+            return vec![];
+        }
+        reply_rx.recv().unwrap_or_default()
+    }
+
+    /// The manifest the runtime was loaded from.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Req::Shutdown);
+    }
+}
+
+fn service_thread(
+    dir: PathBuf,
+    manifest: &Manifest,
+    rx: Receiver<Req>,
+    ready: Sender<Result<()>>,
+) {
+    // Compile everything up front.
+    let setup = (|| -> Result<_> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        let mut exes = std::collections::BTreeMap::new();
+        for (name, sig) in &manifest.models {
+            let path = dir.join(&sig.hlo_file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {name}: {e}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok((client, exes))
+    })();
+    let (_client, exes) = match setup {
+        Ok(x) => {
+            let _ = ready.send(Ok(()));
+            x
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Run {
+                model,
+                inputs,
+                reply,
+            } => {
+                let result = (|| -> Result<Vec<HostTensor>> {
+                    let exe = exes
+                        .get(&model)
+                        .with_context(|| format!("model {model:?} not loaded"))?;
+                    let lits: Vec<xla::Literal> = inputs
+                        .iter()
+                        .map(|t| t.to_literal())
+                        .collect::<Result<_>>()?;
+                    let out = exe
+                        .execute::<xla::Literal>(&lits)
+                        .map_err(|e| anyhow::anyhow!("execute {model}: {e}"))?;
+                    let lit = out[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+                    // aot.py lowers with return_tuple=True.
+                    let parts = lit
+                        .to_tuple()
+                        .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+                    parts.iter().map(HostTensor::from_literal).collect()
+                })();
+                let _ = reply.send(result);
+            }
+            Req::Models { reply } => {
+                let _ = reply.send(exes.keys().cloned().collect());
+            }
+            Req::Shutdown => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// HLO for f(x, y) = (x·y + 2,) over f32[2,2], generated by
+    /// /opt/xla-example/gen_hlo.py — kept inline so unit tests don't depend
+    /// on `make artifacts`.
+    const MATMUL_HLO: &str = r#"HloModule jit_fn, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.7 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  dot.3 = f32[2,2]{1,0} dot(Arg_0.1, Arg_1.2), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  constant.4 = f32[] constant(2)
+  broadcast.5 = f32[2,2]{1,0} broadcast(constant.4), dimensions={}
+  add.6 = f32[2,2]{1,0} add(dot.3, broadcast.5)
+  ROOT tuple.7 = (f32[2,2]{1,0}) tuple(add.6)
+}
+"#;
+
+    fn write_artifacts(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join("matmul2.hlo.txt")).unwrap();
+        f.write_all(MATMUL_HLO.as_bytes()).unwrap();
+        std::fs::write(
+            dir.join("manifest.txt"),
+            "model matmul2 matmul2.hlo.txt\n\
+             input matmul2 0 f32 2x2\n\
+             input matmul2 1 f32 2x2\n\
+             output matmul2 0 f32 2x2\n",
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn load_and_execute_inline_artifact() {
+        let dir = std::env::temp_dir().join(format!("fiber-rt-test-{}", std::process::id()));
+        write_artifacts(&dir);
+        let rt = Runtime::load_dir(&dir).unwrap();
+        assert_eq!(rt.models(), vec!["matmul2".to_string()]);
+        let x = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let y = HostTensor::f32(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]).unwrap();
+        let out = rt.run("matmul2", vec![x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].as_f32().unwrap(), &[5.0, 5.0, 9.0, 9.0]);
+        // Concurrent calls through clones.
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let rt = rt.clone();
+            handles.push(std::thread::spawn(move || {
+                let x = HostTensor::f32(&[2, 2], vec![1.0, 0.0, 0.0, 1.0]).unwrap();
+                let y = HostTensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+                let out = rt.run("matmul2", vec![x, y]).unwrap();
+                assert_eq!(out[0].as_f32().unwrap(), &[3.0, 4.0, 5.0, 6.0]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Shape validation.
+        let bad = HostTensor::f32(&[4], vec![0.0; 4]).unwrap();
+        let y = HostTensor::f32(&[2, 2], vec![0.0; 4]).unwrap();
+        assert!(rt.run("matmul2", vec![bad, y]).is_err());
+        rt.shutdown();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Runtime::load_dir("/nonexistent/fiber-artifacts").is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities shared across the crate.
+//!
+//! Nothing here depends on the rest of fiber-rs; these are the primitives
+//! that third-party crates (rand, statrs, …) would normally provide but that
+//! are unavailable in this offline build.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::{percentile, Histogram, Welford};
+pub use timer::{Stopwatch, VirtualClock};

@@ -1,0 +1,357 @@
+//! The codec itself: `Encode`/`Decode` + a bounds-checked `Reader`.
+
+use std::collections::HashMap;
+
+/// Errors produced while decoding.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum WireError {
+    #[error("unexpected end of buffer: wanted {wanted} more bytes, had {had}")]
+    Eof { wanted: usize, had: usize },
+    #[error("invalid utf-8 string")]
+    Utf8,
+    #[error("invalid enum/bool tag {0}")]
+    BadTag(u32),
+    #[error("length {0} exceeds sanity limit")]
+    TooLong(usize),
+    #[error("{0} trailing bytes after decode")]
+    TrailingBytes(usize),
+}
+
+/// Sanity cap on decoded sequence lengths (guards against corrupt frames).
+const MAX_SEQ: usize = 1 << 28; // 256 Mi elements
+
+/// Bounds-checked cursor over a byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Eof {
+                wanted: n,
+                had: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+}
+
+/// Types that can be written to a byte buffer.
+pub trait Encode {
+    fn encode(&self, buf: &mut Vec<u8>);
+}
+
+/// Types that can be read back from a byte buffer.
+pub trait Decode: Sized {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError>;
+}
+
+macro_rules! impl_fixed {
+    ($($t:ty),*) => {$(
+        impl Encode for $t {
+            #[inline]
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+        }
+        impl Decode for $t {
+            #[inline]
+            fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+                let bytes = r.take(std::mem::size_of::<$t>())?;
+                Ok(<$t>::from_le_bytes(bytes.try_into().unwrap()))
+            }
+        }
+    )*};
+}
+
+impl_fixed!(u8, u16, u32, u64, i8, i16, i32, i64, f32, f64);
+
+impl Encode for usize {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (*self as u64).encode(buf);
+    }
+}
+
+impl Decode for usize {
+    #[inline]
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(u64::decode(r)? as usize)
+    }
+}
+
+impl Encode for bool {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(*self as u8);
+    }
+}
+
+impl Decode for bool {
+    #[inline]
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        match u8::decode(r)? {
+            0 => Ok(false),
+            1 => Ok(true),
+            t => Err(WireError::BadTag(t as u32)),
+        }
+    }
+}
+
+impl Encode for String {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u64).encode(buf);
+        buf.extend_from_slice(self.as_bytes());
+    }
+}
+
+impl Encode for &str {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u64).encode(buf);
+        buf.extend_from_slice(self.as_bytes());
+    }
+}
+
+impl Decode for String {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let n = u64::decode(r)? as usize;
+        if n > MAX_SEQ {
+            return Err(WireError::TooLong(n));
+        }
+        let bytes = r.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::Utf8)
+    }
+}
+
+impl<T: Encode> Encode for Vec<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u64).encode(buf);
+        for item in self {
+            item.encode(buf);
+        }
+    }
+}
+
+impl<T: Decode> Decode for Vec<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let n = u64::decode(r)? as usize;
+        if n > MAX_SEQ {
+            return Err(WireError::TooLong(n));
+        }
+        let mut v = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            v.push(T::decode(r)?);
+        }
+        Ok(v)
+    }
+}
+
+impl<T: Encode> Encode for Option<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            None => buf.push(0),
+            Some(v) => {
+                buf.push(1);
+                v.encode(buf);
+            }
+        }
+    }
+}
+
+impl<T: Decode> Decode for Option<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        match u8::decode(r)? {
+            0 => Ok(None),
+            1 => Ok(Some(T::decode(r)?)),
+            t => Err(WireError::BadTag(t as u32)),
+        }
+    }
+}
+
+impl<K: Encode + Eq + std::hash::Hash, V: Encode> Encode for HashMap<K, V> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u64).encode(buf);
+        for (k, v) in self {
+            k.encode(buf);
+            v.encode(buf);
+        }
+    }
+}
+
+impl<K: Decode + Eq + std::hash::Hash, V: Decode> Decode for HashMap<K, V> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let n = u64::decode(r)? as usize;
+        if n > MAX_SEQ {
+            return Err(WireError::TooLong(n));
+        }
+        let mut m = HashMap::with_capacity(n.min(1 << 12));
+        for _ in 0..n {
+            let k = K::decode(r)?;
+            let v = V::decode(r)?;
+            m.insert(k, v);
+        }
+        Ok(m)
+    }
+}
+
+impl Encode for () {
+    fn encode(&self, _buf: &mut Vec<u8>) {}
+}
+
+impl Decode for () {
+    fn decode(_r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(())
+    }
+}
+
+macro_rules! impl_tuple {
+    ($($name:ident : $idx:tt),+) => {
+        impl<$($name: Encode),+> Encode for ($($name,)+) {
+            fn encode(&self, buf: &mut Vec<u8>) {
+                $(self.$idx.encode(buf);)+
+            }
+        }
+        impl<$($name: Decode),+> Decode for ($($name,)+) {
+            fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+                Ok(($($name::decode(r)?,)+))
+            }
+        }
+    };
+}
+
+impl_tuple!(A: 0);
+impl_tuple!(A: 0, B: 1);
+impl_tuple!(A: 0, B: 1, C: 2);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3, E: 4);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3, E: 4, F: 5);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3, E: 4, F: 5, G: 6);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3, E: 4, F: 5, G: 6, H: 7);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3, E: 4, F: 5, G: 6, H: 7, I: 8);
+impl_tuple!(A: 0, B: 1, C: 2, D: 3, E: 4, F: 5, G: 6, H: 7, I: 8, J: 9);
+
+impl<T: Encode, E2: Encode> Encode for Result<T, E2> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            Ok(v) => {
+                buf.push(0);
+                v.encode(buf);
+            }
+            Err(e) => {
+                buf.push(1);
+                e.encode(buf);
+            }
+        }
+    }
+}
+
+impl<T: Decode, E2: Decode> Decode for Result<T, E2> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        match u8::decode(r)? {
+            0 => Ok(Ok(T::decode(r)?)),
+            1 => Ok(Err(E2::decode(r)?)),
+            t => Err(WireError::BadTag(t as u32)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::wire::{from_bytes, to_bytes};
+
+    fn roundtrip<T: Encode + Decode + PartialEq + std::fmt::Debug>(v: T) {
+        let bytes = to_bytes(&v);
+        let back: T = from_bytes(&bytes).unwrap();
+        assert_eq!(v, back);
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(0u8);
+        roundtrip(255u8);
+        roundtrip(u16::MAX);
+        roundtrip(123456789u32);
+        roundtrip(u64::MAX);
+        roundtrip(-42i32);
+        roundtrip(i64::MIN);
+        roundtrip(3.14159f32);
+        roundtrip(f64::NEG_INFINITY);
+        roundtrip(true);
+        roundtrip(false);
+    }
+
+    #[test]
+    fn f32_nan_roundtrips_bitwise() {
+        let bytes = to_bytes(&f32::NAN);
+        let back: f32 = from_bytes(&bytes).unwrap();
+        assert!(back.is_nan());
+    }
+
+    #[test]
+    fn compound_roundtrip() {
+        roundtrip("héllo wörld".to_string());
+        roundtrip(String::new());
+        roundtrip(vec![1.0f32, -2.5, 3.25]);
+        roundtrip(Vec::<u64>::new());
+        roundtrip(Some(vec!["a".to_string(), "b".to_string()]));
+        roundtrip(Option::<u32>::None);
+        roundtrip((7u32, "x".to_string(), vec![1u8, 2, 3]));
+        roundtrip(Ok::<u32, String>(5));
+        roundtrip(Err::<u32, String>("boom".into()));
+        let mut m = HashMap::new();
+        m.insert("k1".to_string(), 10u64);
+        m.insert("k2".to_string(), 20u64);
+        roundtrip(m);
+    }
+
+    #[test]
+    fn nested_vectors() {
+        roundtrip(vec![vec![1u32, 2], vec![], vec![3]]);
+    }
+
+    #[test]
+    fn eof_detected() {
+        let bytes = to_bytes(&12345u64);
+        let r: Result<u64, _> = from_bytes(&bytes[..4]);
+        assert!(matches!(r, Err(WireError::Eof { .. })));
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut bytes = to_bytes(&1u8);
+        bytes.push(0xff);
+        let r: Result<u8, _> = from_bytes(&bytes);
+        assert_eq!(r, Err(WireError::TrailingBytes(1)));
+    }
+
+    #[test]
+    fn bad_bool_tag() {
+        let r: Result<bool, _> = from_bytes(&[7]);
+        assert_eq!(r, Err(WireError::BadTag(7)));
+    }
+
+    #[test]
+    fn corrupt_length_rejected() {
+        // A huge length prefix must not cause a giant allocation.
+        let bytes = to_bytes(&(u64::MAX / 2));
+        let r: Result<Vec<u8>, _> = from_bytes(&bytes);
+        assert!(matches!(r, Err(WireError::TooLong(_)) | Err(WireError::Eof { .. })));
+    }
+}

@@ -1,0 +1,38 @@
+//! Binary serialization for messages crossing process boundaries.
+//!
+//! `serde`/`bincode` are unavailable offline, so fiber-rs ships its own
+//! minimal, explicit codec: little-endian fixed-width integers, length-
+//! prefixed sequences, no varint cleverness. The format is versioned per
+//! message (the [`crate::comms`] frame header carries a message tag).
+//!
+//! The two traits mirror `Serialize`/`Deserialize`:
+//!
+//! ```
+//! use fiber::wire::{Decode, Encode};
+//! let mut buf = Vec::new();
+//! (42u32, "hello".to_string()).encode(&mut buf);
+//! let mut r = fiber::wire::Reader::new(&buf);
+//! let (n, s) = <(u32, String)>::decode(&mut r).unwrap();
+//! assert_eq!((n, s.as_str()), (42, "hello"));
+//! ```
+
+mod codec;
+
+pub use codec::{Decode, Encode, Reader, WireError};
+
+/// Encode a value into a fresh buffer.
+pub fn to_bytes<T: Encode>(v: &T) -> Vec<u8> {
+    let mut buf = Vec::new();
+    v.encode(&mut buf);
+    buf
+}
+
+/// Decode a value from a complete buffer, requiring full consumption.
+pub fn from_bytes<T: Decode>(bytes: &[u8]) -> Result<T, WireError> {
+    let mut r = Reader::new(bytes);
+    let v = T::decode(&mut r)?;
+    if !r.is_empty() {
+        return Err(WireError::TrailingBytes(r.remaining()));
+    }
+    Ok(v)
+}

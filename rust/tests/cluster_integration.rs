@@ -1,0 +1,127 @@
+//! Integration: cluster backends + the simulated Kubernetes cluster at
+//! scale (1024-pod virtual-time runs on this 1-core box).
+
+use fiber::cluster::simk8s::{NodeSpec, PodPhase, PodSpec, SimCluster, SimClusterConfig};
+use fiber::cluster::{ClusterBackend, JobSpec, JobStatus, LocalBackend, Resources};
+
+#[test]
+fn thousand_pod_es_fleet_schedules_within_capacity() {
+    // The paper's ES scale: 1024 one-core workers on 32×32-core nodes.
+    let mut c = SimCluster::new(SimClusterConfig::default());
+    let ids: Vec<_> = (0..1024)
+        .map(|i| {
+            c.submit(PodSpec {
+                name: format!("es-worker-{i}"),
+                resources: Resources {
+                    cpu_milli: 1000,
+                    mem_mb: 512,
+                    gpu: 0,
+                },
+                duration_ns: None, // service pods
+            })
+        })
+        .collect();
+    c.run_until(120_000_000_000); // 2 virtual minutes
+    let running = ids
+        .iter()
+        .filter(|&&id| matches!(c.phase(id), Some(PodPhase::Running { .. })))
+        .count();
+    assert_eq!(running, 1024, "all workers must fit the 1024-core cluster");
+    let (used, total) = c.cpu_utilization();
+    assert_eq!(used, 1024_000);
+    assert_eq!(total, 1024_000);
+    // The 1025th worker has nowhere to go.
+    let extra = c.submit(PodSpec {
+        name: "overflow".into(),
+        resources: Resources {
+            cpu_milli: 1000,
+            mem_mb: 512,
+            gpu: 0,
+        },
+        duration_ns: None,
+    });
+    c.run_until(180_000_000_000);
+    assert_eq!(c.phase(extra), Some(&PodPhase::Pending));
+    // Scale down 1: the pending pod gets placed — dynamic scaling at the
+    // cluster layer.
+    c.terminate(ids[0]);
+    c.run_until(240_000_000_000);
+    assert!(matches!(c.phase(extra), Some(PodPhase::Running { .. })));
+}
+
+#[test]
+fn pod_failures_free_capacity_and_are_observable() {
+    let mut cfg = SimClusterConfig {
+        nodes: vec![NodeSpec::cpu_only(8, 16_000)],
+        failure_rate_per_s: 0.5,
+        seed: 3,
+        ..Default::default()
+    };
+    cfg.schedule_latency_ns = 1_000_000;
+    let mut c = SimCluster::new(cfg);
+    let ids: Vec<_> = (0..8)
+        .map(|i| {
+            c.submit(PodSpec {
+                name: format!("w{i}"),
+                resources: Resources {
+                    cpu_milli: 1000,
+                    mem_mb: 100,
+                    gpu: 0,
+                },
+                duration_ns: Some(3_600_000_000_000), // 1 virtual hour
+            })
+        })
+        .collect();
+    c.run_to_quiescence();
+    let failed = ids
+        .iter()
+        .filter(|&&i| matches!(c.phase(i), Some(PodPhase::Failed(_))))
+        .count();
+    assert!(failed > 0, "with mean 2 s to failure, hour-long pods fail");
+    assert_eq!(c.cpu_utilization().0, 0, "failures must free resources");
+    // The event log records every lifecycle transition (Fig 2 observability).
+    assert!(c.log.iter().any(|e| matches!(e.phase, PodPhase::Failed(_))));
+}
+
+#[test]
+fn local_backend_runs_hundreds_of_short_jobs() {
+    let be = LocalBackend::new();
+    let handles: Vec<_> = (0..200)
+        .map(|i| {
+            be.submit(JobSpec::thread(format!("j{i}"), move |_tok| {
+                std::hint::black_box(i * i);
+            }))
+            .unwrap()
+        })
+        .collect();
+    for h in handles {
+        assert_eq!(h.wait(), JobStatus::Succeeded);
+    }
+    assert_eq!(be.active_jobs(), 0);
+}
+
+#[test]
+fn virtual_time_makes_scale_cheap() {
+    // 1024 pods × 50 simulated iterations completes in real milliseconds —
+    // the property that makes Fig 3b reproducible on this box.
+    let t0 = std::time::Instant::now();
+    let mut c = SimCluster::new(SimClusterConfig::default());
+    for i in 0..1024 {
+        c.submit(PodSpec {
+            name: format!("p{i}"),
+            resources: Resources {
+                cpu_milli: 1000,
+                mem_mb: 256,
+                gpu: 0,
+            },
+            duration_ns: Some(30_000_000_000),
+        });
+    }
+    let end = c.run_to_quiescence();
+    assert!(end >= 30_000_000_000, "virtual time advanced past pod duration");
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(5),
+        "simulating 1024 pods must be fast, took {:?}",
+        t0.elapsed()
+    );
+}

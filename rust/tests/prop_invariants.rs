@@ -1,0 +1,232 @@
+//! Property-based tests of the coordinator invariants (proptest is not
+//! available offline, so these are seeded randomized-schedule tests with
+//! our own RNG — 100+ random schedules per property, deterministic replay
+//! via the printed seed).
+//!
+//! Invariants (paper Fig 2 + "Fiber schedules each task at most once"):
+//! 1. Conservation: every submitted task is, at any instant, in exactly one
+//!    of {task queue, pending table, delivered results}.
+//! 2. Exactly-once delivery: duplicate worker results are dropped; each
+//!    task produces exactly one collected result.
+//! 3. Failure heals: after any sequence of worker failures, re-running the
+//!    drained tasks completes the batch; nothing is lost.
+//! 4. Ordered maps return results in input order regardless of completion
+//!    order (checked through the public Pool API).
+
+use std::time::Duration;
+
+use fiber::coordinator::pool_server::{FetchReply, PoolServer, WorkerId};
+use fiber::coordinator::task::{Task, TaskId};
+use fiber::util::Rng;
+
+fn mk_task(i: u64) -> Task {
+    Task {
+        id: TaskId::fresh(),
+        map_id: 1,
+        index: i,
+        fn_name: "prop".into(),
+        payload: vec![i as u8],
+    }
+}
+
+const FETCH_T: Duration = Duration::from_millis(1);
+
+/// Drive a random schedule of {submit, fetch, complete, fail} against a
+/// PoolServer and check conservation + exactly-once at every step.
+fn random_schedule(seed: u64, steps: usize) {
+    let mut rng = Rng::new(seed);
+    let server = PoolServer::new();
+    let results = server.results();
+    let n_workers = 1 + rng.below(6);
+    let mut submitted = 0u64;
+    let mut in_worker: Vec<Vec<TaskId>> = vec![Vec::new(); n_workers];
+    let mut delivered: std::collections::HashSet<TaskId> = Default::default();
+
+    for step in 0..steps {
+        match rng.below(10) {
+            0..=2 => {
+                server.submit(mk_task(submitted));
+                submitted += 1;
+            }
+            3..=5 => {
+                let w = rng.below(n_workers);
+                if let FetchReply::Task(t) = server.fetch(WorkerId(w as u64), FETCH_T) {
+                    in_worker[w].push(t.id);
+                }
+            }
+            6..=7 => {
+                // Complete a random in-flight task (maybe duplicate it).
+                let w = rng.below(n_workers);
+                if let Some(&id) = in_worker[w].first() {
+                    in_worker[w].remove(0);
+                    server.put_result(id, Ok(vec![1]));
+                    if rng.chance(0.2) {
+                        server.put_result(id, Ok(vec![2])); // duplicate
+                    }
+                }
+            }
+            8 => {
+                // Worker failure: its in-flight tasks go back to the queue.
+                let w = rng.below(n_workers);
+                let had = in_worker[w].len();
+                let requeued = server.fail_worker(WorkerId(w as u64));
+                assert_eq!(requeued, had, "step {step}: drain mismatch (seed {seed})");
+                in_worker[w].clear();
+            }
+            _ => {
+                // Drain results.
+                while let Ok(msg) = results.try_recv() {
+                    assert!(
+                        delivered.insert(msg.task.id),
+                        "step {step}: task {:?} delivered twice (seed {seed})",
+                        msg.task.id
+                    );
+                }
+            }
+        }
+        // Conservation: queued + pending + in-results + delivered == submitted.
+        while let Ok(msg) = results.try_recv() {
+            assert!(delivered.insert(msg.task.id), "dup (seed {seed})");
+        }
+        let accounted =
+            server.queue_len() + server.pending_len() + delivered.len();
+        assert_eq!(
+            accounted as u64, submitted,
+            "step {step}: conservation broken (seed {seed})"
+        );
+    }
+}
+
+#[test]
+fn conservation_and_exactly_once_over_random_schedules() {
+    for seed in 0..120 {
+        random_schedule(seed, 160);
+    }
+}
+
+/// Run the full batch to completion under random failures: nothing lost.
+fn run_to_completion(seed: u64) {
+    let mut rng = Rng::new(seed ^ 0xF00D);
+    let server = PoolServer::new();
+    let results = server.results();
+    let n = 40 + rng.below(60) as u64;
+    for i in 0..n {
+        server.submit(mk_task(i));
+    }
+    let n_workers = 1 + rng.below(4);
+    let mut in_worker: Vec<Vec<TaskId>> = vec![Vec::new(); n_workers];
+    let mut done = 0u64;
+    let mut guard = 0;
+    while done < n {
+        guard += 1;
+        assert!(guard < 100_000, "livelock (seed {seed})");
+        let w = rng.below(n_workers);
+        if rng.chance(0.05) {
+            server.fail_worker(WorkerId(w as u64));
+            in_worker[w].clear();
+            continue;
+        }
+        if rng.chance(0.6) {
+            if let FetchReply::Task(t) = server.fetch(WorkerId(w as u64), FETCH_T) {
+                in_worker[w].push(t.id);
+            }
+        }
+        if let Some(&id) = in_worker[w].first() {
+            if rng.chance(0.7) {
+                in_worker[w].remove(0);
+                server.put_result(id, Ok(vec![]));
+            }
+        }
+        while results.try_recv().is_ok() {
+            done += 1;
+        }
+    }
+    assert_eq!(server.pending_len(), 0);
+    assert_eq!(server.queue_len(), 0);
+}
+
+#[test]
+fn batches_complete_under_random_failures() {
+    for seed in 0..80 {
+        run_to_completion(seed);
+    }
+}
+
+/// Ordered-map property through the public API: random chunk sizes, random
+/// worker counts, random input lengths — results always in input order.
+#[test]
+fn map_order_is_invariant_to_scheduling() {
+    fiber::coordinator::register_task("prop.id", |x: u64| Ok::<u64, String>(x));
+    let mut rng = Rng::new(99);
+    for _ in 0..12 {
+        let workers = 1 + rng.below(6);
+        let chunks = 1 + rng.below(9);
+        let n = rng.below(400) as u64;
+        let pool = fiber::api::pool::Pool::builder()
+            .processes(workers)
+            .chunksize(chunks)
+            .build()
+            .unwrap();
+        let out: Vec<u64> = pool.map("prop.id", 0..n).unwrap();
+        assert_eq!(out, (0..n).collect::<Vec<u64>>(), "workers={workers} chunks={chunks} n={n}");
+    }
+}
+
+/// Wire-codec fuzz: random bytes never panic the decoder, and encode∘decode
+/// is the identity on random valid values.
+#[test]
+fn wire_codec_fuzz() {
+    use fiber::wire;
+    let mut rng = Rng::new(4242);
+    // Decode must fail gracefully (never panic) on garbage.
+    for _ in 0..2_000 {
+        let len = rng.below(64);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.next_u64() as u8).collect();
+        let _ = wire::from_bytes::<(u32, String, Vec<f32>)>(&bytes);
+        let _ = wire::from_bytes::<Vec<Vec<u8>>>(&bytes);
+        let _ = wire::from_bytes::<Option<Result<u64, String>>>(&bytes);
+    }
+    // Round-trip on random structured values.
+    for _ in 0..500 {
+        let v: (u64, Vec<f32>, Option<String>, bool) = (
+            rng.next_u64(),
+            (0..rng.below(20)).map(|_| rng.f32()).collect(),
+            if rng.chance(0.5) {
+                Some(format!("s{}", rng.next_u64()))
+            } else {
+                None
+            },
+            rng.chance(0.5),
+        );
+        let bytes = wire::to_bytes(&v);
+        let back: (u64, Vec<f32>, Option<String>, bool) = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(v, back);
+    }
+}
+
+/// Autoscaler never exceeds its bounds over random demand traces.
+#[test]
+fn autoscaler_respects_bounds() {
+    use fiber::coordinator::scaling::{Autoscaler, AutoscalePolicy};
+    let mut rng = Rng::new(7);
+    for _ in 0..50 {
+        let min = 1 + rng.below(4);
+        let max = min + 1 + rng.below(64);
+        let mut a = Autoscaler::new(AutoscalePolicy {
+            min_workers: min,
+            max_workers: max,
+            tasks_per_worker: 1.0 + rng.f64() * 8.0,
+            cooldown_ns: rng.below(1000) as u64,
+        });
+        let mut current = min;
+        for t in 0..200u64 {
+            let backlog = rng.below(5000);
+            let in_flight = rng.below(current + 1);
+            if let Some(next) = a.decide(t * 1_000, current, backlog, in_flight) {
+                assert!(next >= min && next <= max, "{next} ∉ [{min},{max}]");
+                assert_ne!(next, current, "no-op resize emitted");
+                current = next;
+            }
+        }
+    }
+}

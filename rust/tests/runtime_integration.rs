@@ -1,0 +1,187 @@
+//! Integration: the AOT-compiled JAX/Pallas artifacts vs. the pure-Rust
+//! reference implementations — the contract that lets workers run policies
+//! in Rust while the leader updates parameters through PJRT.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! trivially) when `artifacts/manifest.txt` is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use fiber::algo::es::{EsConfig, EsMaster};
+use fiber::algo::nn::{log_softmax, param_count, Mlp, PpoNet, WALKER_SIZES};
+use fiber::algo::noise::shared_table;
+use fiber::algo::ppo::{MiniBatch, PpoConfig, PpoTrainer, ARTIFACT_BATCH};
+use fiber::runtime::{HostTensor, Runtime};
+use fiber::util::Rng;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load_dir(dir).expect("load artifacts"))
+}
+
+#[test]
+fn walker_act_matches_rust_mlp() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(42);
+    let net = Mlp::walker_policy(&mut rng);
+    let batch = 64;
+    let obs: Vec<f32> = (0..batch * 24).map(|_| (rng.f32() - 0.5) * 2.0).collect();
+    let out = rt
+        .run(
+            "walker_act",
+            vec![
+                HostTensor::f32(&[net.n_params()], net.params.clone()).unwrap(),
+                HostTensor::f32(&[batch, 24], obs.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    let actions = out[0].as_f32().unwrap();
+    for b in 0..batch {
+        let row = net.forward(&obs[b * 24..(b + 1) * 24]);
+        for j in 0..4 {
+            let (a, b_) = (actions[b * 4 + j], row[j]);
+            assert!(
+                (a - b_).abs() < 1e-4,
+                "walker_act[{b},{j}]: artifact {a} vs rust {b_}"
+            );
+        }
+    }
+}
+
+#[test]
+fn es_update_matches_rust_update() {
+    let Some(rt) = runtime() else { return };
+    let pop = 256;
+    let dim = param_count(&WALKER_SIZES);
+    let cfg = EsConfig {
+        pop,
+        sigma: 0.07,
+        lr: 0.015,
+        noise_seed: 99,
+        table_size: 1 << 16,
+        ..Default::default()
+    };
+    let mut rng = Rng::new(5);
+    let theta: Vec<f32> = (0..dim).map(|_| (rng.f32() - 0.5) * 0.4).collect();
+    let mut via_rust = EsMaster::with_theta(cfg.clone(), theta.clone());
+    let mut via_rt = EsMaster::with_theta(cfg, theta);
+    let table = shared_table(99, 1 << 16);
+    let offsets: Vec<u64> = (0..pop / 2)
+        .map(|_| table.sample_offset(&mut rng, dim) as u64)
+        .collect();
+    let rewards: Vec<f32> = (0..pop).map(|_| rng.f32() * 10.0 - 3.0).collect();
+    let g1 = via_rust.update(&offsets, &rewards, None).unwrap();
+    let g2 = via_rt.update(&offsets, &rewards, Some(&rt)).unwrap();
+    assert!(
+        (g1 - g2).abs() / g1.max(1e-6) < 1e-3,
+        "grad norms: rust {g1} vs artifact {g2}"
+    );
+    let max_diff = via_rust
+        .theta
+        .iter()
+        .zip(&via_rt.theta)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 1e-4, "theta diverged by {max_diff}");
+}
+
+#[test]
+fn ppo_act_matches_rust_net() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(7);
+    let net = PpoNet::init(&mut rng);
+    let obs: Vec<f32> = (0..ARTIFACT_BATCH * 32).map(|_| rng.f32() - 0.5).collect();
+    let out = rt
+        .run(
+            "ppo_act",
+            vec![
+                HostTensor::f32(&[net.n_params()], net.params.clone()).unwrap(),
+                HostTensor::f32(&[ARTIFACT_BATCH, 32], obs.clone()).unwrap(),
+            ],
+        )
+        .unwrap();
+    let logits = out[0].as_f32().unwrap();
+    let values = out[1].as_f32().unwrap();
+    for b in (0..ARTIFACT_BATCH).step_by(17) {
+        let (l, v) = net.forward(&obs[b * 32..(b + 1) * 32]);
+        for j in 0..4 {
+            assert!(
+                (logits[b * 4 + j] - l[j]).abs() < 1e-4,
+                "logits[{b},{j}]: {} vs {}",
+                logits[b * 4 + j],
+                l[j]
+            );
+        }
+        assert!((values[b] - v).abs() < 1e-4, "values[{b}]: {} vs {v}", values[b]);
+        // Log-softmax sanity between the two.
+        let _ = log_softmax(&l);
+    }
+}
+
+#[test]
+fn ppo_update_matches_rust_backprop() {
+    let Some(rt) = runtime() else { return };
+    let cfg = PpoConfig {
+        minibatch: ARTIFACT_BATCH,
+        lr: 3e-3,
+        clip: 0.15,
+        ent_coef: 0.01,
+        vf_coef: 0.5,
+        seed: 21,
+        ..Default::default()
+    };
+    let mut rust_tr = PpoTrainer::new(cfg.clone());
+    let mut rt_tr = PpoTrainer::new(cfg);
+    assert_eq!(rust_tr.net.params, rt_tr.net.params, "same seed, same init");
+    let mut rng = Rng::new(31);
+    let b = ARTIFACT_BATCH;
+    let mb = MiniBatch {
+        obs: (0..b * 32).map(|_| (rng.f32() - 0.5) * 2.0).collect(),
+        actions: (0..b).map(|_| rng.below(4) as i32).collect(),
+        old_logp: (0..b).map(|_| -(rng.f32() * 2.0 + 0.2)).collect(),
+        adv: (0..b).map(|_| rng.f32() * 2.0 - 1.0).collect(),
+        ret: (0..b).map(|_| rng.f32() * 3.0).collect(),
+    };
+    let (p1, v1, e1) = rust_tr.update_minibatch(&mb, None).unwrap();
+    let (p2, v2, e2) = rt_tr.update_minibatch(&mb, Some(&rt)).unwrap();
+    assert!((p1 - p2).abs() < 1e-3, "pi_loss: rust {p1} vs artifact {p2}");
+    assert!((v1 - v2).abs() < 1e-3, "v_loss: rust {v1} vs artifact {v2}");
+    assert!((e1 - e2).abs() < 1e-3, "entropy: rust {e1} vs artifact {e2}");
+    let max_diff = rust_tr
+        .net
+        .params
+        .iter()
+        .zip(&rt_tr.net.params)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 5e-4, "params diverged by {max_diff}");
+}
+
+#[test]
+fn artifact_execute_latency_is_sub_ms_scale() {
+    // Not a benchmark — a guardrail that the request path never recompiles.
+    let Some(rt) = runtime() else { return };
+    let mut rng = Rng::new(3);
+    let net = PpoNet::init(&mut rng);
+    let obs: Vec<f32> = (0..ARTIFACT_BATCH * 32).map(|_| rng.f32()).collect();
+    let inputs = || {
+        vec![
+            HostTensor::f32(&[net.n_params()], net.params.clone()).unwrap(),
+            HostTensor::f32(&[ARTIFACT_BATCH, 32], obs.clone()).unwrap(),
+        ]
+    };
+    rt.run("ppo_act", inputs()).unwrap(); // warm
+    let t0 = std::time::Instant::now();
+    let n = 50;
+    for _ in 0..n {
+        rt.run("ppo_act", inputs()).unwrap();
+    }
+    let per_call = t0.elapsed() / n;
+    assert!(
+        per_call < std::time::Duration::from_millis(50),
+        "ppo_act call took {per_call:?} — compiled executables should be far faster"
+    );
+}
