@@ -1,0 +1,176 @@
+//! Ring allreduce vs naive gather-broadcast across payload sizes and world
+//! sizes.
+//!
+//! `cargo bench --bench ring_allreduce` (add `-- --quick` to trim the
+//! sweep). Prints benchkit tables and writes machine-readable results to
+//! `BENCH_ring.json`.
+//!
+//! The headline number is not wall-clock on a small box (every "node" is a
+//! thread sharing the same cores) but **leader bandwidth**: gather-broadcast
+//! moves `2·(n-1)·θ` bytes through rank 0 while ring allreduce moves
+//! `2·(n-1)/n·θ` through *every* member — the per-node cost stays flat as
+//! the world grows, which is the property that lets population-based
+//! methods scale past a single leader's NIC.
+
+use std::time::Instant;
+
+use fiber::benchkit::{Json, Table};
+use fiber::ring::{Rendezvous, RingMember};
+use fiber::util::Welford;
+
+struct ConfigResult {
+    world: usize,
+    elems: usize,
+    ring: Welford,
+    naive: Welford,
+    /// Per-op payload bytes through the busiest member, ring allreduce.
+    ring_max_member_bytes: u64,
+    /// Per-op payload bytes through rank 0, gather-broadcast.
+    naive_root_bytes: u64,
+}
+
+fn run_config(world: usize, elems: usize, samples: usize) -> ConfigResult {
+    let rv = Rendezvous::new(world);
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            std::thread::spawn(move || {
+                let mut m = RingMember::join_inproc(&rv).unwrap();
+                let mut buf: Vec<f32> = (0..elems)
+                    .map(|i| (m.rank() + 1) as f32 * 1e-3 + (i % 17) as f32 * 1e-4)
+                    .collect();
+                m.allreduce_sum(&mut buf).unwrap(); // warmup
+                m.reset_counters();
+                let mut ring_times = Vec::with_capacity(samples);
+                for _ in 0..samples {
+                    let t = Instant::now();
+                    m.allreduce_sum(&mut buf).unwrap();
+                    ring_times.push(t.elapsed().as_secs_f64());
+                }
+                let ring_bytes = (m.bytes_sent() + m.bytes_received()) / samples as u64;
+                m.reset_counters();
+                let mut naive_times = Vec::with_capacity(samples);
+                for _ in 0..samples {
+                    let t = Instant::now();
+                    m.gather_broadcast_sum(0, &mut buf).unwrap();
+                    naive_times.push(t.elapsed().as_secs_f64());
+                }
+                let naive_bytes = (m.bytes_sent() + m.bytes_received()) / samples as u64;
+                (m.rank(), ring_times, naive_times, ring_bytes, naive_bytes)
+            })
+        })
+        .collect();
+    let mut ring = Welford::new();
+    let mut naive = Welford::new();
+    let mut ring_max_member_bytes = 0u64;
+    let mut naive_root_bytes = 0u64;
+    for h in handles {
+        let (rank, ring_times, naive_times, ring_bytes, naive_bytes) = h.join().unwrap();
+        ring_max_member_bytes = ring_max_member_bytes.max(ring_bytes);
+        if rank == 0 {
+            // Collectives synchronize, so rank 0's clock stands in for the
+            // whole world's.
+            for t in ring_times {
+                ring.add(t);
+            }
+            for t in naive_times {
+                naive.add(t);
+            }
+            naive_root_bytes = naive_bytes;
+        }
+    }
+    ConfigResult {
+        world,
+        elems,
+        ring,
+        naive,
+        ring_max_member_bytes,
+        naive_root_bytes,
+    }
+}
+
+fn payload_label(elems: usize) -> String {
+    let bytes = elems * 4;
+    if bytes >= 1 << 20 {
+        format!("{}MB", bytes >> 20)
+    } else {
+        format!("{}KB", bytes >> 10)
+    }
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let worlds: &[usize] = if quick { &[2, 4, 8] } else { &[2, 4, 8, 16] };
+    // 1 KB .. 16 MB payloads (f32 elements).
+    let payloads: &[usize] = if quick {
+        &[256, 16_384, 262_144]
+    } else {
+        &[256, 16_384, 262_144, 4_194_304]
+    };
+    let col_labels: Vec<String> = payloads.iter().map(|&e| payload_label(e)).collect();
+    let mut ring_table = Table::new("Ring allreduce (wall)", "world", col_labels.clone());
+    let mut naive_table = Table::new("Gather-broadcast (wall)", "world", col_labels.clone());
+    let mut hotspot_table = Table::new(
+        "Busiest-node payload per op: ring max-member as % of naive root",
+        "world",
+        col_labels,
+    );
+    hotspot_table.unit = "%";
+    let mut records = Vec::new();
+    for &world in worlds {
+        let mut ring_row = Vec::new();
+        let mut naive_row = Vec::new();
+        let mut hotspot_row = Vec::new();
+        for &elems in payloads {
+            let samples = if elems >= 1 << 20 { 2 } else { 5 };
+            let r = run_config(world, elems, samples);
+            ring_row.push(Some(r.ring.mean()));
+            naive_row.push(Some(r.naive.mean()));
+            hotspot_row.push(Some(
+                100.0 * r.ring_max_member_bytes as f64 / r.naive_root_bytes as f64,
+            ));
+            println!(
+                "world {:>2}  {:>5}  ring {:>9.3}ms  naive {:>9.3}ms  busiest-node bytes ring {} vs root {}",
+                r.world,
+                payload_label(r.elems),
+                r.ring.mean() * 1e3,
+                r.naive.mean() * 1e3,
+                r.ring_max_member_bytes,
+                r.naive_root_bytes,
+            );
+            records.push(Json::Obj(vec![
+                ("world".into(), Json::num(r.world as f64)),
+                ("elems".into(), Json::num(r.elems as f64)),
+                ("payload_bytes".into(), Json::num((r.elems * 4) as f64)),
+                ("ring_mean_s".into(), Json::num(r.ring.mean())),
+                ("ring_std_s".into(), Json::num(r.ring.std())),
+                ("naive_mean_s".into(), Json::num(r.naive.mean())),
+                ("naive_std_s".into(), Json::num(r.naive.std())),
+                (
+                    "ring_max_member_bytes".into(),
+                    Json::num(r.ring_max_member_bytes as f64),
+                ),
+                (
+                    "naive_root_bytes".into(),
+                    Json::num(r.naive_root_bytes as f64),
+                ),
+            ]));
+        }
+        ring_table.add_row(format!("{world}"), ring_row);
+        naive_table.add_row(format!("{world}"), naive_row);
+        hotspot_table.add_row(format!("{world}"), hotspot_row);
+    }
+    ring_table.print();
+    naive_table.print();
+    hotspot_table.print();
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::str("ring_allreduce")),
+        ("quick".into(), Json::Bool(quick)),
+        ("configs".into(), Json::Arr(records)),
+    ]);
+    let path = "BENCH_ring.json";
+    match doc.write(path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

@@ -11,10 +11,13 @@
 use anyhow::Result;
 
 use crate::api::pool::Pool;
+use crate::coordinator::task::execute_registered;
 use crate::coordinator::register_task;
 use crate::envs::{rollout, Action, Walker2d};
+use crate::ring::RingMember;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::Rng;
+use crate::wire;
 
 use super::nn::{Mlp, WALKER_SIZES};
 use super::noise::shared_table;
@@ -351,9 +354,190 @@ impl EsMaster {
     }
 }
 
+/// Balanced contiguous shard of `n_items` across `world` ranks:
+/// `(start, end)` with every shard within one item of the others.
+pub fn shard_range(n_items: usize, world: usize, rank: usize) -> (usize, usize) {
+    let base = n_items / world;
+    let rem = n_items % world;
+    let lo = rank * base + rank.min(rem);
+    let len = base + usize::from(rank < rem);
+    (lo, lo + len)
+}
+
+/// A decentralized ES replica: one per ring member, no leader.
+///
+/// Every rank constructs an identical `EsRingNode` (same config, same
+/// initial θ) and drives the **same** RNG sequence, so mirrored-pair
+/// offsets and env seeds agree everywhere without communication — only two
+/// collectives move data per iteration:
+///
+/// 1. an `O(pop)` allreduce that assembles the full reward vector from the
+///    per-rank evaluation shards, and
+/// 2. an `O(θ)` ring allreduce of the locally-accumulated weighted
+///    gradient contribution, replacing the centralized `O(pop·θ)` combine
+///    through the leader in [`EsMaster`].
+///
+/// Each rank then applies the identical Adam step, keeping θ replicated
+/// (the allreduce result is bitwise-identical on every rank).
+pub struct EsRingNode {
+    pub cfg: EsConfig,
+    pub theta: Vec<f32>,
+    adam: Adam,
+    rng: Rng,
+    iteration: usize,
+}
+
+impl EsRingNode {
+    /// All ranks must pass the same `cfg` and `theta`.
+    pub fn new(cfg: EsConfig, theta: Vec<f32>) -> Self {
+        let dim = theta.len();
+        let rng = Rng::new(cfg.seed);
+        Self {
+            cfg,
+            theta,
+            adam: Adam::new(dim),
+            rng,
+            iteration: 0,
+        }
+    }
+
+    /// Initial parameters from the walker policy (mirrors [`EsMaster::new`],
+    /// including keeping the RNG state advanced by the policy init so the
+    /// subsequent offset/env-seed stream matches the centralized run).
+    pub fn walker(cfg: EsConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let theta = Mlp::walker_policy(&mut rng).params;
+        let dim = theta.len();
+        Self {
+            cfg,
+            theta,
+            adam: Adam::new(dim),
+            rng,
+            iteration: 0,
+        }
+    }
+
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// One decentralized ES iteration. Evaluates this rank's shard of the
+    /// mirrored pairs locally (through the same registered task function
+    /// pool workers run — call [`register_es_tasks`] first) and combines
+    /// via ring collectives. Deterministic: matches the centralized
+    /// [`EsMaster`] update on the same seed to within float summation
+    /// order (tolerance-tested in `rust/tests/ring_integration.rs`).
+    pub fn iterate(&mut self, member: &mut RingMember) -> Result<EsIterStats> {
+        let half = self.cfg.pop / 2;
+        // Odd pop: the last slot is never evaluated, exactly like
+        // EsMaster (which builds 2·half eval inputs but scales by pop).
+        let n_evals = half * 2;
+        let dim = self.theta.len();
+        let table = shared_table(self.cfg.noise_seed, self.cfg.table_size);
+        // Drive the RNG exactly like EsMaster::iterate so a seeded
+        // decentralized run reproduces the centralized one: offsets first,
+        // then one env seed per evaluation in pair-major order.
+        let offsets: Vec<u64> = (0..half)
+            .map(|_| table.sample_offset(&mut self.rng, dim) as u64)
+            .collect();
+        let env_seeds: Vec<u64> = (0..n_evals)
+            .map(|_| self.rng.next_u64() % 1_000_000)
+            .collect();
+        // Evaluate only this rank's contiguous shard of mirrored pairs
+        // (inputs are built shard-local — no O(pop·θ) staging per rank).
+        let (pair_lo, pair_hi) = shard_range(half, member.world(), member.rank());
+        let mut local_steps = 0u64;
+        let mut rewards = vec![0.0f32; n_evals];
+        for k in pair_lo..pair_hi {
+            for (j, sign) in [1.0f32, -1.0].into_iter().enumerate() {
+                let idx = 2 * k + j;
+                let input: EvalInput = (
+                    self.theta.clone(),
+                    self.cfg.sigma,
+                    self.cfg.noise_seed,
+                    self.cfg.table_size as u64,
+                    offsets[k],
+                    sign,
+                    env_seeds[idx],
+                    self.cfg.max_steps as u64,
+                    self.cfg.hardcore as u8,
+                );
+                let out = execute_registered(&self.cfg.eval_task, &wire::to_bytes(&input))
+                    .map_err(|e| anyhow::anyhow!("es eval task: {e}"))?;
+                let (reward, steps): EvalOutput = wire::from_bytes(&out)
+                    .map_err(|e| anyhow::anyhow!("es eval decode: {e}"))?;
+                rewards[idx] = reward;
+                local_steps += steps;
+            }
+        }
+        member.allreduce_sum(&mut rewards)?;
+        // Step counts cross the f32-only collective exactly: split each
+        // per-rank u64 into two 24-bit-safe halves (exact in f32 up to
+        // 2^48 steps per rank), gather, and reassemble in u64.
+        let per_rank_steps = member.all_gather(&[
+            (local_steps & 0xFF_FFFF) as f32,
+            (local_steps >> 24) as f32,
+        ])?;
+        let total_steps: u64 = per_rank_steps
+            .chunks_exact(2)
+            .map(|c| c[0] as u64 + ((c[1] as u64) << 24))
+            .sum();
+
+        // Every rank computes identical centered ranks, accumulates only
+        // its shard's weighted noise, and the ring sums the O(θ) gradient.
+        let ranks = centered_ranks(&rewards);
+        let mut grad = vec![0.0f32; dim];
+        for k in pair_lo..pair_hi {
+            let row = table.slice(offsets[k] as usize, dim);
+            let w = ranks[2 * k] - ranks[2 * k + 1]; // mirrored pair: +n, -n
+            for (g, &n) in grad.iter_mut().zip(&row) {
+                *g += w * n;
+            }
+        }
+        member.allreduce_sum(&mut grad)?;
+        let scale = -1.0 / (self.cfg.pop as f32 * self.cfg.sigma);
+        for g in grad.iter_mut() {
+            *g *= scale;
+        }
+        let grad_norm = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+        let mut theta = std::mem::take(&mut self.theta);
+        self.adam.step(&mut theta, &grad, self.cfg.lr);
+        self.theta = theta;
+
+        self.iteration += 1;
+        let mean = rewards.iter().sum::<f32>() / rewards.len() as f32;
+        let max = rewards.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        Ok(EsIterStats {
+            iteration: self.iteration,
+            mean_reward: mean,
+            max_reward: max,
+            total_env_steps: total_steps,
+            grad_norm,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn shard_range_partitions_exactly() {
+        for n in [0usize, 1, 7, 16, 33] {
+            for world in [1usize, 2, 3, 5, 8] {
+                let mut covered = 0;
+                let mut prev_end = 0;
+                for r in 0..world {
+                    let (lo, hi) = shard_range(n, world, r);
+                    assert_eq!(lo, prev_end, "shards must be contiguous");
+                    assert!(hi - lo <= n / world + 1, "balanced within one item");
+                    covered += hi - lo;
+                    prev_end = hi;
+                }
+                assert_eq!(covered, n, "n={n} world={world}");
+            }
+        }
+    }
 
     #[test]
     fn centered_ranks_properties() {

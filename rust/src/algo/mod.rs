@@ -9,7 +9,9 @@
 //!   over the network.
 //! * [`es`] — Evolution Strategies over a `fiber::Pool` (code example 2 in
 //!   the paper): stateless rollouts fan out to workers, the parameter
-//!   update runs through the `es_update` PJRT artifact.
+//!   update runs through the `es_update` PJRT artifact. The decentralized
+//!   [`es::EsRingNode`] variant replaces the leader's `O(pop·θ)` combine
+//!   with an `O(θ)` ring allreduce over [`crate::ring`].
 //! * [`vec_env`] — vectorized environments over pipes to fixed worker
 //!   processes (ordered, stateful — the pipe pattern from code example 3).
 //! * [`ppo`] — PPO with GAE; action selection and the clipped-surrogate
@@ -21,7 +23,7 @@ pub mod noise;
 pub mod ppo;
 pub mod vec_env;
 
-pub use es::{EsConfig, EsMaster};
+pub use es::{EsConfig, EsMaster, EsRingNode};
 pub use nn::{Mlp, PpoNet};
 pub use noise::NoiseTable;
 pub use ppo::{PpoConfig, PpoTrainer};

@@ -337,6 +337,43 @@ impl PpoTrainer {
 
     /// Manual backprop through trunk + heads (the reference path).
     fn update_minibatch_rust(&mut self, mb: &MiniBatch) -> Result<(f32, f32, f32)> {
+        let (grad, pi_loss, v_loss, entropy) = self.minibatch_grad(mb);
+        let lr = self.cfg.lr;
+        let mut params = std::mem::take(&mut self.net.params);
+        self.adam.step(&mut params, &grad, lr);
+        self.net.params = params;
+        Ok((pi_loss, v_loss, entropy))
+    }
+
+    /// Data-parallel minibatch update: compute the local gradient, average
+    /// it across the ring (`O(θ)` per member instead of shipping
+    /// minibatches to a leader), and apply the identical Adam step on every
+    /// replica. All members must start from identical parameters (same
+    /// seed) and call this in lockstep; the averaged losses are returned.
+    pub fn update_minibatch_ring(
+        &mut self,
+        mb: &MiniBatch,
+        member: &mut crate::ring::RingMember,
+    ) -> Result<(f32, f32, f32)> {
+        let (mut grad, pi_loss, v_loss, entropy) = self.minibatch_grad(mb);
+        // Piggyback the three loss scalars on the gradient buffer so one
+        // collective covers both (same trick as EsRingNode's step counts).
+        grad.extend_from_slice(&[pi_loss, v_loss, entropy]);
+        member.allreduce_mean(&mut grad)?;
+        let entropy = grad.pop().expect("loss slot");
+        let v_loss = grad.pop().expect("loss slot");
+        let pi_loss = grad.pop().expect("loss slot");
+        let lr = self.cfg.lr;
+        let mut params = std::mem::take(&mut self.net.params);
+        self.adam.step(&mut params, &grad, lr);
+        self.net.params = params;
+        Ok((pi_loss, v_loss, entropy))
+    }
+
+    /// The clipped-surrogate gradient and losses for one minibatch,
+    /// without touching optimizer state (shared by the single-node and
+    /// ring-averaged update paths).
+    fn minibatch_grad(&self, mb: &MiniBatch) -> (Vec<f32>, f32, f32, f32) {
         let b = mb.actions.len();
         let obs_dim = PPO_TRUNK[0];
         let h = PPO_TRUNK[2];
@@ -458,14 +495,12 @@ impl PpoTrainer {
                 grad[o_b1 + j] += dz1[j];
             }
         }
-        let mut params = std::mem::take(&mut self.net.params);
-        self.adam.step(&mut params, &grad, cfg.lr);
-        self.net.params = params;
-        Ok((
+        (
+            grad,
             (pi_loss / b as f64) as f32,
             (v_loss / b as f64) as f32,
             (entropy / b as f64) as f32,
-        ))
+        )
     }
 
     pub fn iteration(&self) -> usize {
@@ -635,6 +670,86 @@ mod tests {
                 "param {pi}: finite-diff {fd} vs analytic {an}"
             );
         }
+    }
+
+    fn random_minibatch(seed: u64, b: usize) -> MiniBatch {
+        let mut rng = Rng::new(seed);
+        MiniBatch {
+            obs: (0..b * 32).map(|_| rng.f32() - 0.5).collect(),
+            actions: (0..b).map(|_| rng.below(4) as i32).collect(),
+            old_logp: vec![(0.25f32).ln(); b],
+            adv: (0..b).map(|_| rng.f32() - 0.5).collect(),
+            ret: (0..b).map(|_| rng.f32()).collect(),
+        }
+    }
+
+    #[test]
+    fn ring_update_matches_single_node_on_identical_minibatch() {
+        use crate::ring::{Rendezvous, RingMember};
+        use std::sync::Arc;
+        // With identical minibatches the ring-averaged gradient is bitwise
+        // the local gradient ((g+g)/2 == g), so the replicas must land on
+        // exactly the single-node parameters.
+        let cfg = PpoConfig {
+            minibatch: 16,
+            lr: 1e-2,
+            ..Default::default()
+        };
+        let mb = Arc::new(random_minibatch(77, 16));
+        let mut reference = PpoTrainer::new(cfg.clone());
+        let (rpi, rvl, rent) = reference.update_minibatch(&mb, None).unwrap();
+        let rv = Rendezvous::new(2);
+        let handles: Vec<_> = (0..2)
+            .map(|_| {
+                let rv = rv.clone();
+                let mb = mb.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_inproc(&rv).unwrap();
+                    let mut tr = PpoTrainer::new(cfg);
+                    let losses = tr.update_minibatch_ring(&mb, &mut m).unwrap();
+                    (tr.net.params, losses)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (params, (pi, vl, ent)) = h.join().unwrap();
+            assert_eq!(params, reference.net.params);
+            assert!((pi - rpi).abs() < 1e-6);
+            assert!((vl - rvl).abs() < 1e-6);
+            assert!((ent - rent).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn ring_replicas_stay_in_sync_on_distinct_minibatches() {
+        use crate::ring::{Rendezvous, RingMember};
+        let cfg = PpoConfig {
+            minibatch: 8,
+            lr: 1e-2,
+            ..Default::default()
+        };
+        let init = PpoTrainer::new(cfg.clone()).net.params;
+        let rv = Rendezvous::new(3);
+        let handles: Vec<_> = (0..3u64)
+            .map(|rank_seed| {
+                let rv = rv.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_inproc(&rv).unwrap();
+                    let mut tr = PpoTrainer::new(cfg);
+                    for step in 0..3u64 {
+                        let mb = random_minibatch(1000 + 31 * rank_seed + step, 8);
+                        tr.update_minibatch_ring(&mb, &mut m).unwrap();
+                    }
+                    tr.net.params
+                })
+            })
+            .collect();
+        let params: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(params[0], params[1], "replicas must not diverge");
+        assert_eq!(params[1], params[2], "replicas must not diverge");
+        assert_ne!(params[0], init, "training must move the parameters");
     }
 
     #[test]

@@ -951,6 +951,42 @@ mod tests {
     }
 
     #[test]
+    fn retiring_worker_delivers_in_flight_result() {
+        setup();
+        // Regression guard for the `retiring` bookkeeping (heal/resize): a
+        // worker asked to retire mid-task must still deliver its in-flight
+        // result — retirement only takes effect at the next fetch.
+        let pool = Pool::new(2).unwrap();
+        let h = pool
+            .map_async::<u64, u64>("pool.slow", vec![250u64, 250])
+            .unwrap();
+        // Wait until both tasks are actually executing on the two workers.
+        let t0 = std::time::Instant::now();
+        while pool.in_flight() < 2 && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(pool.in_flight(), 2, "both tasks should be running");
+        pool.resize(1).unwrap();
+        let out = h.wait().unwrap();
+        assert_eq!(out, vec![250, 250], "no in-flight result may be dropped");
+        let (_inserted, completed, requeued) = pool.counters();
+        assert_eq!(completed, 2);
+        assert_eq!(requeued, 0, "retiring is not a failure; nothing requeues");
+        // The surplus worker exits at its next fetch and its slot is
+        // cleaned from the retiring set (not treated as a failure).
+        let t0 = std::time::Instant::now();
+        while (pool.processes() > 1 || pool.restarts() > 0) && t0.elapsed() < Duration::from_secs(2)
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(pool.processes(), 1, "pool should settle at the resize target");
+        assert_eq!(pool.restarts(), 0, "a retiring exit must not trigger healing");
+        // The shrunken pool still works.
+        let out: Vec<i64> = pool.map("pool.add1", 0..5i64).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
     fn close_then_map_fails() {
         setup();
         let pool = Pool::new(2).unwrap();

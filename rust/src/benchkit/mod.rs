@@ -101,6 +101,90 @@ impl Table {
     }
 }
 
+/// A minimal JSON value (serde is unavailable offline) so bench targets
+/// can persist machine-readable results (e.g. `BENCH_ring.json`) next to
+/// the human-readable tables.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Num(f64),
+    Str(String),
+    Bool(bool),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn num(x: impl Into<f64>) -> Json {
+        Json::Num(x.into())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    /// Render as compact JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Num(x) => {
+                if x.is_finite() {
+                    out.push_str(&format!("{x}"));
+                } else {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                }
+            }
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Render and write to `path` (with a trailing newline).
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +214,20 @@ mod tests {
     fn row_width_checked() {
         let mut t = Table::new("t", "r", vec!["a".into()]);
         t.add_row("x", vec![Some(1.0), Some(2.0)]);
+    }
+
+    #[test]
+    fn json_renders_and_escapes() {
+        let j = Json::Obj(vec![
+            ("name".into(), Json::str("ring \"allreduce\"\n")),
+            ("world".into(), Json::num(4.0)),
+            ("ok".into(), Json::Bool(true)),
+            ("xs".into(), Json::Arr(vec![Json::num(1.5), Json::Num(f64::NAN)])),
+        ]);
+        let s = j.render();
+        assert_eq!(
+            s,
+            r#"{"name":"ring \"allreduce\"\n","world":4,"ok":true,"xs":[1.5,null]}"#
+        );
     }
 }

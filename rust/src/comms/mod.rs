@@ -37,12 +37,32 @@ pub enum Addr {
 
 impl Addr {
     /// Parse `inproc://name` or `tcp://host:port`.
+    ///
+    /// The TCP form accepts both a literal socket address
+    /// (`tcp://127.0.0.1:9000`) and a resolvable hostname
+    /// (`tcp://localhost:9000`, `tcp://node7:9000`) — hostnames go through
+    /// the system resolver, preferring an IPv4 result for a stable
+    /// `Display` round-trip.
     pub fn parse(s: &str) -> anyhow::Result<Addr> {
         if let Some(name) = s.strip_prefix("inproc://") {
             anyhow::ensure!(!name.is_empty(), "empty inproc name");
             Ok(Addr::Inproc(name.to_string()))
         } else if let Some(hp) = s.strip_prefix("tcp://") {
-            Ok(Addr::Tcp(hp.parse()?))
+            if let Ok(sa) = hp.parse::<SocketAddr>() {
+                return Ok(Addr::Tcp(sa));
+            }
+            use std::net::ToSocketAddrs;
+            let resolved: Vec<SocketAddr> = hp
+                .to_socket_addrs()
+                .map_err(|e| anyhow::anyhow!("cannot resolve {hp:?}: {e}"))?
+                .collect();
+            resolved
+                .iter()
+                .find(|sa| sa.is_ipv4())
+                .or_else(|| resolved.first())
+                .copied()
+                .map(Addr::Tcp)
+                .ok_or_else(|| anyhow::anyhow!("{hp:?} resolved to no addresses"))
         } else {
             anyhow::bail!("unrecognised address {s:?} (want inproc:// or tcp://)")
         }
@@ -76,5 +96,35 @@ mod tests {
         assert!(Addr::parse("http://x").is_err());
         assert!(Addr::parse("inproc://").is_err());
         assert!(Addr::parse("tcp://nonsense").is_err());
+    }
+
+    #[test]
+    fn addr_parse_resolves_hostnames() {
+        let a = Addr::parse("tcp://localhost:9000").unwrap();
+        let Addr::Tcp(sa) = a else {
+            panic!("expected a tcp addr")
+        };
+        assert_eq!(sa.port(), 9000);
+        assert!(sa.ip().is_loopback(), "localhost must resolve to loopback, got {sa}");
+    }
+
+    #[test]
+    fn addr_parse_literal_and_hostname_agree() {
+        // A numeric host:port takes the literal fast path and must equal
+        // the resolver's answer for the same input.
+        let lit = Addr::parse("tcp://127.0.0.1:8125").unwrap();
+        assert_eq!(lit, Addr::Tcp("127.0.0.1:8125".parse().unwrap()));
+        // IPv6 literals still parse (bracketed form).
+        let v6 = Addr::parse("tcp://[::1]:8126").unwrap();
+        let Addr::Tcp(sa) = v6 else {
+            panic!("expected a tcp addr")
+        };
+        assert_eq!(sa.port(), 8126);
+        assert!(sa.is_ipv6());
+    }
+
+    #[test]
+    fn addr_parse_hostname_missing_port_is_error() {
+        assert!(Addr::parse("tcp://localhost").is_err());
     }
 }

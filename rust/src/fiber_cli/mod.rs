@@ -19,6 +19,7 @@ use fiber::wire;
 
 mod demo;
 mod experiments;
+mod ring;
 
 /// Parse `--key value` style options.
 pub(crate) struct Opts {
@@ -87,6 +88,8 @@ pub fn run(args: Vec<String>) -> Result<()> {
     register_all_tasks();
     match cmd {
         "worker" => worker(&opts),
+        "ring" => ring::ring_demo(&opts),
+        "ring-node" => ring::ring_node(&opts),
         "demo" => demo::pi_demo(&opts),
         "overhead" => experiments::overhead(&opts),
         "es" => experiments::es(&opts),
@@ -134,6 +137,10 @@ fn print_help() {
          SUBCOMMANDS:\n\
            worker       worker-process entrypoint (spawned by ProcBackend)\n\
                         --leader <addr> --worker <id>\n\
+           ring         ring-allreduce collective demo\n\
+                        [--world N] [--elems N] [--proc true]\n\
+           ring-node    ring-member process entrypoint (spawned by `ring --proc true`)\n\
+                        --rendezvous <addr> [--elems N] [--bind ip:port]\n\
            demo         pi-estimation smoke demo  [--workers N] [--samples N] [--proc true]\n\
            overhead     E1 Fig 3a framework-overhead experiment [--workers N]\n\
            es           E2 distributed ES on walker2d\n\

@@ -15,6 +15,16 @@
 //! * **Cluster layer**: the simulated cluster manager in
 //!   [`cluster::simk8s`] plus the real-OS substrate.
 //!
+//! Beside Pool/Queue sits the collective-communication layer:
+//!
+//! * **Ring layer** ([`ring`]): a rendezvous service that turns cluster
+//!   jobs into ranked members of a ring (with generation bumps on
+//!   join/leave/resize, mirroring dynamic scaling), plus chunked ring
+//!   allreduce / broadcast / all-gather over `f32` buffers that work
+//!   identically on the thread and OS-process backends. This is what lets
+//!   ES and PPO combine updates peer-to-peer (`O(θ)` per node) instead of
+//!   funnelling `O(pop·θ)` through one leader.
+//!
 //! Supporting substrates: [`comms`] (the Nanomsg-substitute message layer),
 //! [`wire`] (binary serialization), [`runtime`] (PJRT execution of
 //! AOT-compiled JAX/Pallas artifacts), [`envs`] (simulators), [`algo`]
@@ -31,6 +41,7 @@ pub mod coordinator;
 pub mod envs;
 pub mod experiments;
 pub mod metrics;
+pub mod ring;
 pub mod runtime;
 pub mod util;
 pub mod wire;

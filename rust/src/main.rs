@@ -9,6 +9,8 @@
 //! * `es`        — run distributed ES on walker2d (Fig 3b workload).
 //! * `ppo`       — run distributed PPO on breakout (Fig 3c workload).
 //! * `demo`      — tiny smoke demo (pi estimation via `Pool::map`).
+//! * `ring`      — ring-allreduce collective demo (threads, or `--proc
+//!                 true` for OS-process members via `ring-node`).
 
 mod fiber_cli;
 

@@ -1,0 +1,716 @@
+//! Collective operations over a sealed ring: chunked ring allreduce
+//! (reduce-scatter + all-gather), broadcast, all-gather, and the naive
+//! gather-broadcast baseline the benches compare against.
+//!
+//! A [`RingMember`] owns one data-plane endpoint (an `inproc://` channel on
+//! the thread backend, a [`crate::comms::rpc`] server on the OS-process
+//! backend) and lazily-connected links to its peers. Collectives are SPMD:
+//! **every member of a generation must call the same collectives in the
+//! same order with the same buffer lengths and the same `chunk_elems`** —
+//! the op-sequence number baked into message tags keeps concurrent steps
+//! apart, not divergent programs.
+//!
+//! Cost model (θ = buffer elements, n = world): ring allreduce moves
+//! `2·(n-1)/n·θ` elements through every member — no hot spot — while the
+//! gather-broadcast baseline moves `2·(n-1)·θ` through the root. The
+//! per-member [`RingMember::bytes_sent`]/[`RingMember::bytes_received`]
+//! counters make that asymmetry measurable in `benches/ring_allreduce.rs`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use once_cell::sync::Lazy;
+
+use crate::comms::chan::{self, Receiver, Sender};
+use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::comms::Addr;
+use crate::wire;
+
+use super::topology::{Rendezvous, RendezvousClient, RingView};
+
+/// RPC tag carrying one data-plane message on TCP endpoints.
+pub const DATA_TAG: u32 = 1;
+
+/// A data-plane message: `(from_rank, op_tag, payload)`.
+type Msg = (u64, u64, Vec<u8>);
+
+/// Global registry of `inproc://` data endpoints (thread backend).
+static INPROC_EP: Lazy<Mutex<HashMap<String, Sender<Msg>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+static EP_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// How a member exposes its data-plane endpoint.
+pub enum Transport {
+    /// An in-process channel (thread backend).
+    Inproc,
+    /// Bind a TCP RPC server at this address (OS-process backend); use port
+    /// 0 for an ephemeral port. The advertised endpoint is the bound
+    /// address, so bind a peer-reachable interface.
+    TcpBind(String),
+}
+
+enum PeerTx {
+    Inproc(Sender<Msg>),
+    Tcp(RpcClient),
+}
+
+/// One ranked member of a sealed ring generation.
+pub struct RingMember {
+    view: RingView,
+    rendezvous: RendezvousClient,
+    endpoint: String,
+    rx: Receiver<Msg>,
+    _server: Option<RpcServer>,
+    peers: HashMap<usize, PeerTx>,
+    stash: VecDeque<Msg>,
+    op_seq: u64,
+    chunk_elems: usize,
+    timeout: Duration,
+    bytes_tx: u64,
+    bytes_rx: u64,
+}
+
+impl RingMember {
+    /// Join through an already-held in-process rendezvous (thread backend).
+    pub fn join_inproc(rv: &Arc<Rendezvous>) -> Result<RingMember> {
+        Self::join_with(RendezvousClient::local(rv.clone()), Transport::Inproc)
+    }
+
+    /// Join a rendezvous at `addr` (`inproc://…` or `tcp://…`), exposing a
+    /// TCP data endpoint when the rendezvous itself is remote. The data
+    /// endpoint binds loopback, which serves the single-host OS-process
+    /// backend; **multi-host members must use [`RingMember::join_addr_bind`]
+    /// with an interface their peers can route to**, since the bound
+    /// address is what gets advertised to the ring.
+    pub fn join_addr(addr: &Addr) -> Result<RingMember> {
+        Self::join_addr_bind(addr, "127.0.0.1:0")
+    }
+
+    /// [`RingMember::join_addr`] with an explicit TCP bind address for the
+    /// data endpoint (e.g. `10.0.0.7:0` on a cluster node). Ignored when
+    /// the rendezvous is `inproc://`.
+    pub fn join_addr_bind(addr: &Addr, tcp_bind: &str) -> Result<RingMember> {
+        let transport = match addr {
+            Addr::Inproc(_) => Transport::Inproc,
+            Addr::Tcp(_) => Transport::TcpBind(tcp_bind.to_string()),
+        };
+        Self::join_with(RendezvousClient::connect(addr)?, transport)
+    }
+
+    /// Join with explicit rendezvous client + data transport.
+    pub fn join_with(rendezvous: RendezvousClient, transport: Transport) -> Result<RingMember> {
+        let (tx, rx) = chan::unbounded::<Msg>();
+        let (endpoint, server) = match transport {
+            Transport::Inproc => {
+                let name = format!("ring-ep-{}", EP_SEQ.fetch_add(1, Ordering::Relaxed));
+                INPROC_EP.lock().unwrap().insert(name.clone(), tx);
+                (format!("inproc://{name}"), None)
+            }
+            Transport::TcpBind(bind) => {
+                let srv = RpcServer::bind(
+                    &bind,
+                    Arc::new(move |tag, payload| {
+                        if tag != DATA_TAG {
+                            return Err(format!("bad ring data tag {tag}"));
+                        }
+                        let msg: Msg = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                        tx.send(msg).map_err(|e| e.to_string())?;
+                        Ok(Vec::new())
+                    }),
+                )?;
+                (format!("tcp://{}", srv.local_addr()), Some(srv))
+            }
+        };
+        let view = match rendezvous.join(&endpoint, Duration::from_secs(30)) {
+            Ok(v) => v,
+            Err(e) => {
+                if let Some(name) = endpoint.strip_prefix("inproc://") {
+                    INPROC_EP.lock().unwrap().remove(name);
+                }
+                return Err(e);
+            }
+        };
+        Ok(RingMember {
+            view,
+            rendezvous,
+            endpoint,
+            rx,
+            _server: server,
+            peers: HashMap::new(),
+            stash: VecDeque::new(),
+            op_seq: 0,
+            chunk_elems: 1 << 15, // 128 KiB frames
+            timeout: Duration::from_secs(30),
+            bytes_tx: 0,
+            bytes_rx: 0,
+        })
+    }
+
+    pub fn rank(&self) -> usize {
+        self.view.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.view.world
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.view.generation
+    }
+
+    pub fn view(&self) -> &RingView {
+        &self.view
+    }
+
+    /// Payload bytes sent / received by this member so far.
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_tx
+    }
+
+    pub fn bytes_received(&self) -> u64 {
+        self.bytes_rx
+    }
+
+    pub fn reset_counters(&mut self) {
+        self.bytes_tx = 0;
+        self.bytes_rx = 0;
+    }
+
+    /// Maximum `f32`s per frame (must agree across all members).
+    pub fn set_chunk_elems(&mut self, elems: usize) {
+        self.chunk_elems = elems.max(1);
+    }
+
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+    }
+
+    /// Announce departure: bumps the ring generation so survivors
+    /// re-rendezvous (pair with [`RendezvousClient::resize`] on scale-down).
+    pub fn leave(&mut self) -> Result<()> {
+        self.rendezvous
+            .leave(self.view.generation, self.view.rank as u64)
+    }
+
+    // ---- collectives -----------------------------------------------------
+
+    /// In-place elementwise sum across all members (chunked ring
+    /// allreduce: reduce-scatter then all-gather, `2·(n-1)` pipeline steps).
+    pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        let n = self.view.world;
+        if n == 1 {
+            return Ok(());
+        }
+        let op = self.next_op();
+        let r = self.view.rank;
+        let right = self.view.right();
+        let left = self.view.left();
+        let bounds: Vec<(usize, usize)> = (0..n)
+            .map(|i| (i * buf.len() / n, (i + 1) * buf.len() / n))
+            .collect();
+        // Reduce-scatter: after step s, the received segment holds the sum
+        // of s+2 contributions; after n-1 steps rank r fully owns segment
+        // (r+1) mod n.
+        for s in 0..n - 1 {
+            let tag = op | s as u64;
+            let (lo, hi) = bounds[(r + n - s) % n];
+            self.send_chunks(right, tag, &buf[lo..hi])?;
+            let (lo, hi) = bounds[(r + 2 * n - s - 1) % n];
+            let incoming = self.recv_elems(left, tag, hi - lo)?;
+            for (d, v) in buf[lo..hi].iter_mut().zip(&incoming) {
+                *d += *v;
+            }
+        }
+        // All-gather: circulate the fully-reduced segments.
+        for s in 0..n - 1 {
+            let tag = op | (n - 1 + s) as u64;
+            let (lo, hi) = bounds[(r + 1 + n - s) % n];
+            self.send_chunks(right, tag, &buf[lo..hi])?;
+            let (lo, hi) = bounds[(r + n - s) % n];
+            let incoming = self.recv_elems(left, tag, hi - lo)?;
+            buf[lo..hi].copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    /// Allreduce then divide by the world size (data-parallel averaging).
+    pub fn allreduce_mean(&mut self, buf: &mut [f32]) -> Result<()> {
+        self.allreduce_sum(buf)?;
+        let inv = 1.0 / self.view.world as f32;
+        for v in buf.iter_mut() {
+            *v *= inv;
+        }
+        Ok(())
+    }
+
+    /// Pipelined ring broadcast of `root`'s buffer into every member's.
+    pub fn broadcast(&mut self, root: usize, buf: &mut [f32]) -> Result<()> {
+        let n = self.view.world;
+        anyhow::ensure!(root < n, "broadcast root {root} out of range (world {n})");
+        if n == 1 {
+            return Ok(());
+        }
+        let op = self.next_op();
+        let right = self.view.right();
+        let left = self.view.left();
+        if self.view.rank == root {
+            self.send_chunks(right, op, buf)?;
+        } else {
+            let k = msg_count(buf.len(), self.chunk_elems);
+            let mut pos = 0;
+            for _ in 0..k {
+                let bytes = self.recv_msg(left, op)?;
+                let vals = bytes_to_f32s(&bytes)?;
+                anyhow::ensure!(
+                    pos + vals.len() <= buf.len(),
+                    "broadcast overflow: peer sent more than the local buffer holds"
+                );
+                buf[pos..pos + vals.len()].copy_from_slice(&vals);
+                pos += vals.len();
+                if right != root {
+                    // Forward the still-encoded chunk immediately (pipeline).
+                    self.send_msg(right, op, bytes)?;
+                }
+            }
+            anyhow::ensure!(
+                pos == buf.len(),
+                "broadcast length mismatch: got {pos}, want {}",
+                buf.len()
+            );
+        }
+        Ok(())
+    }
+
+    /// Ring all-gather: every member contributes `mine` (equal lengths
+    /// across members); returns the world's contributions concatenated in
+    /// rank order.
+    pub fn all_gather(&mut self, mine: &[f32]) -> Result<Vec<f32>> {
+        let n = self.view.world;
+        let len = mine.len();
+        let r = self.view.rank;
+        let mut out = vec![0.0f32; n * len];
+        out[r * len..(r + 1) * len].copy_from_slice(mine);
+        if n == 1 {
+            return Ok(out);
+        }
+        let op = self.next_op();
+        let right = self.view.right();
+        let left = self.view.left();
+        for s in 0..n - 1 {
+            let tag = op | s as u64;
+            let send_seg = (r + n - s) % n;
+            let recv_seg = (r + 2 * n - 1 - s) % n;
+            self.send_chunks(right, tag, &out[send_seg * len..(send_seg + 1) * len])?;
+            let incoming = self.recv_elems(left, tag, len)?;
+            out[recv_seg * len..(recv_seg + 1) * len].copy_from_slice(&incoming);
+        }
+        Ok(out)
+    }
+
+    /// The leader-centric baseline: every member ships its full buffer to
+    /// `root`, which sums and ships the result back — `O(n·θ)` at the root.
+    /// Same result as [`RingMember::allreduce_sum`] up to summation order;
+    /// exists as the comparison target for `benches/ring_allreduce.rs`.
+    pub fn gather_broadcast_sum(&mut self, root: usize, buf: &mut [f32]) -> Result<()> {
+        let n = self.view.world;
+        anyhow::ensure!(root < n, "root {root} out of range (world {n})");
+        if n == 1 {
+            return Ok(());
+        }
+        let op = self.next_op();
+        if self.view.rank == root {
+            for other in 0..n {
+                if other == root {
+                    continue;
+                }
+                let incoming = self.recv_elems(other, op, buf.len())?;
+                for (d, v) in buf.iter_mut().zip(&incoming) {
+                    *d += *v;
+                }
+            }
+            for other in 0..n {
+                if other == root {
+                    continue;
+                }
+                self.send_chunks(other, op | 1 << 8, buf)?;
+            }
+        } else {
+            self.send_chunks(root, op, buf)?;
+            let incoming = self.recv_elems(root, op | 1 << 8, buf.len())?;
+            buf.copy_from_slice(&incoming);
+        }
+        Ok(())
+    }
+
+    // ---- plumbing --------------------------------------------------------
+
+    /// Per-collective namespace for message tags: high 48 bits are the op
+    /// sequence number, low 16 the phase/step within the op.
+    fn next_op(&mut self) -> u64 {
+        self.op_seq += 1;
+        self.op_seq << 16
+    }
+
+    fn peer(&mut self, to: usize) -> Result<&PeerTx> {
+        if !self.peers.contains_key(&to) {
+            let addr = self
+                .view
+                .members
+                .get(to)
+                .with_context(|| format!("no ring member at rank {to}"))?;
+            let link = match addr {
+                Addr::Inproc(name) => {
+                    let tx = INPROC_EP
+                        .lock()
+                        .unwrap()
+                        .get(name)
+                        .cloned()
+                        .with_context(|| format!("ring endpoint inproc://{name} is gone"))?;
+                    PeerTx::Inproc(tx)
+                }
+                Addr::Tcp(sa) => PeerTx::Tcp(RpcClient::connect(*sa)?),
+            };
+            self.peers.insert(to, link);
+        }
+        Ok(&self.peers[&to])
+    }
+
+    fn send_msg(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<()> {
+        let from = self.view.rank as u64;
+        let len = bytes.len() as u64;
+        match self.peer(to)? {
+            PeerTx::Inproc(tx) => {
+                tx.send((from, tag, bytes))
+                    .map_err(|e| anyhow::anyhow!("ring send to rank {to}: {e}"))?;
+            }
+            PeerTx::Tcp(cli) => {
+                cli.call(DATA_TAG, &wire::to_bytes(&(from, tag, bytes)))
+                    .with_context(|| format!("ring send to rank {to}"))?;
+            }
+        }
+        self.bytes_tx += len;
+        Ok(())
+    }
+
+    /// Send `vals` as one or more frames of at most `chunk_elems` each (an
+    /// empty slice still sends one empty frame to keep peers in lockstep).
+    fn send_chunks(&mut self, to: usize, tag: u64, vals: &[f32]) -> Result<()> {
+        if vals.is_empty() {
+            return self.send_msg(to, tag, Vec::new());
+        }
+        for chunk in vals.chunks(self.chunk_elems) {
+            self.send_msg(to, tag, f32s_to_bytes(chunk))?;
+        }
+        Ok(())
+    }
+
+    /// Next message from `from` with tag `tag`, buffering whatever else
+    /// arrives in the meantime.
+    fn recv_msg(&mut self, from: usize, tag: u64) -> Result<Vec<u8>> {
+        if let Some(pos) = self
+            .stash
+            .iter()
+            .position(|m| m.0 == from as u64 && m.1 == tag)
+        {
+            let msg = self.stash.remove(pos).unwrap();
+            self.bytes_rx += msg.2.len() as u64;
+            return Ok(msg.2);
+        }
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            let now = Instant::now();
+            anyhow::ensure!(
+                now < deadline,
+                "ring recv timed out waiting for rank {from} (generation {})",
+                self.view.generation
+            );
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(msg) => {
+                    if msg.0 == from as u64 && msg.1 == tag {
+                        self.bytes_rx += msg.2.len() as u64;
+                        return Ok(msg.2);
+                    }
+                    self.stash.push_back(msg);
+                }
+                Err(chan::RecvError::Timeout) => continue,
+                Err(e) => anyhow::bail!("ring data channel: {e}"),
+            }
+        }
+    }
+
+    /// Receive exactly `expected` f32 elements under `tag` from `from`
+    /// (the mirror of [`RingMember::send_chunks`]).
+    fn recv_elems(&mut self, from: usize, tag: u64, expected: usize) -> Result<Vec<f32>> {
+        let k = msg_count(expected, self.chunk_elems);
+        let mut out = Vec::with_capacity(expected);
+        for _ in 0..k {
+            let bytes = self.recv_msg(from, tag)?;
+            out.extend(bytes_to_f32s(&bytes)?);
+        }
+        anyhow::ensure!(
+            out.len() == expected,
+            "ring recv length mismatch from rank {from}: got {}, want {expected}",
+            out.len()
+        );
+        Ok(out)
+    }
+}
+
+impl Drop for RingMember {
+    fn drop(&mut self) {
+        if let Some(name) = self.endpoint.strip_prefix("inproc://") {
+            INPROC_EP.lock().unwrap().remove(name);
+        }
+    }
+}
+
+/// Frames needed for `len` elements at `chunk` elements per frame (an empty
+/// buffer still costs one frame).
+fn msg_count(len: usize, chunk: usize) -> usize {
+    if len == 0 {
+        1
+    } else {
+        (len + chunk - 1) / chunk
+    }
+}
+
+fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut bytes = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    bytes
+}
+
+fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "ring payload of {} bytes is not a whole number of f32s",
+        bytes.len()
+    );
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run `world` members as threads; each runs `f(member)`.
+    fn run_ring<T: Send + 'static>(
+        world: usize,
+        f: impl Fn(RingMember) -> T + Send + Sync + 'static,
+    ) -> Vec<T> {
+        let rv = Rendezvous::new(world);
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let rv = rv.clone();
+                let f = f.clone();
+                std::thread::spawn(move || {
+                    let m = RingMember::join_inproc(&rv).unwrap();
+                    f(m)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn member_input(rank: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| ((rank * 31 + i * 7) % 13) as f32 * 0.25 - 1.5)
+            .collect()
+    }
+
+    fn reference_sum(world: usize, len: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; len];
+        for r in 0..world {
+            for (o, v) in out.iter_mut().zip(member_input(r, len)) {
+                *o += v;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn allreduce_matches_reference_small_worlds() {
+        for world in [2usize, 3, 4, 5] {
+            // Lengths around segment boundaries, incl. len < world.
+            for len in [1usize, 2, 7, 64, 129] {
+                let out = run_ring(world, move |mut m| {
+                    let mut buf = member_input(m.rank(), len);
+                    m.allreduce_sum(&mut buf).unwrap();
+                    buf
+                });
+                let want = reference_sum(world, len);
+                for buf in out {
+                    for (a, b) in buf.iter().zip(&want) {
+                        assert!(
+                            (a - b).abs() < 1e-5,
+                            "world {world} len {len}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_chunked_framing() {
+        let out = run_ring(3, |mut m| {
+            m.set_chunk_elems(5); // force many frames per segment
+            let mut buf = member_input(m.rank(), 100);
+            m.allreduce_sum(&mut buf).unwrap();
+            buf
+        });
+        let want = reference_sum(3, 100);
+        for buf in out {
+            for (a, b) in buf.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_world_one_is_identity() {
+        let out = run_ring(1, |mut m| {
+            let mut buf = vec![1.0f32, 2.0, 3.0];
+            m.allreduce_sum(&mut buf).unwrap();
+            buf
+        });
+        assert_eq!(out[0], vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn allreduce_over_tcp_endpoints() {
+        let rv = Rendezvous::new(3);
+        let srv = rv.serve_rpc("127.0.0.1:0").unwrap();
+        let addr = Addr::Tcp(srv.local_addr());
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_addr(&addr).unwrap();
+                    let mut buf = member_input(m.rank(), 50);
+                    m.allreduce_sum(&mut buf).unwrap();
+                    buf
+                })
+            })
+            .collect();
+        let want = reference_sum(3, 50);
+        for h in handles {
+            let buf = h.join().unwrap();
+            for (a, b) in buf.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_distributes_root_buffer() {
+        let out = run_ring(4, |mut m| {
+            let mut buf = if m.rank() == 2 {
+                member_input(2, 33)
+            } else {
+                vec![0.0; 33]
+            };
+            m.broadcast(2, &mut buf).unwrap();
+            buf
+        });
+        let want = member_input(2, 33);
+        for buf in out {
+            assert_eq!(buf, want);
+        }
+    }
+
+    #[test]
+    fn all_gather_concatenates_in_rank_order() {
+        let out = run_ring(4, |mut m| {
+            let mine = member_input(m.rank(), 6);
+            m.all_gather(&mine).unwrap()
+        });
+        let mut want = Vec::new();
+        for r in 0..4 {
+            want.extend(member_input(r, 6));
+        }
+        for buf in out {
+            assert_eq!(buf, want);
+        }
+    }
+
+    #[test]
+    fn gather_broadcast_matches_allreduce_and_shows_root_hotspot() {
+        let world = 4;
+        let len = 256;
+        let out = run_ring(world, move |mut m| {
+            let mut ring_buf = member_input(m.rank(), len);
+            m.allreduce_sum(&mut ring_buf).unwrap();
+            let ring_bytes = m.bytes_sent() + m.bytes_received();
+            m.reset_counters();
+            let mut naive_buf = member_input(m.rank(), len);
+            m.gather_broadcast_sum(0, &mut naive_buf).unwrap();
+            let naive_bytes = m.bytes_sent() + m.bytes_received();
+            (m.rank(), ring_buf, naive_buf, ring_bytes, naive_bytes)
+        });
+        let want = reference_sum(world, len);
+        let mut ring_max = 0;
+        let mut root_naive = 0;
+        for (rank, ring_buf, naive_buf, ring_bytes, naive_bytes) in out {
+            for ((a, b), c) in ring_buf.iter().zip(&naive_buf).zip(&want) {
+                assert!((a - c).abs() < 1e-4 && (b - c).abs() < 1e-4);
+            }
+            ring_max = ring_bytes.max(ring_max);
+            if rank == 0 {
+                root_naive = naive_bytes;
+            }
+        }
+        // Ring: ~2(n-1)/n·θ per member. Naive root: 2(n-1)·θ — n× hotter.
+        let theta_bytes = (len * 4) as u64;
+        assert_eq!(root_naive, 2 * (world as u64 - 1) * theta_bytes);
+        assert!(
+            ring_max < root_naive,
+            "ring per-member traffic {ring_max} must undercut naive root {root_naive}"
+        );
+    }
+
+    #[test]
+    fn collectives_compose_in_sequence() {
+        let out = run_ring(3, |mut m| {
+            let mut a = vec![m.rank() as f32; 10];
+            m.allreduce_sum(&mut a).unwrap(); // 0+1+2 = 3
+            let mut b = vec![if m.rank() == 0 { 7.0 } else { 0.0 }; 4];
+            m.broadcast(0, &mut b).unwrap();
+            let g = m.all_gather(&[m.rank() as f32]).unwrap();
+            let mut c = vec![1.0f32; 5];
+            m.allreduce_mean(&mut c).unwrap();
+            (a, b, g, c)
+        });
+        for (a, b, g, c) in out {
+            assert_eq!(a, vec![3.0; 10]);
+            assert_eq!(b, vec![7.0; 4]);
+            assert_eq!(g, vec![0.0, 1.0, 2.0]);
+            assert_eq!(c, vec![1.0; 5]);
+        }
+    }
+
+    #[test]
+    fn msg_count_boundaries() {
+        assert_eq!(msg_count(0, 8), 1);
+        assert_eq!(msg_count(1, 8), 1);
+        assert_eq!(msg_count(8, 8), 1);
+        assert_eq!(msg_count(9, 8), 2);
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip_and_reject_ragged() {
+        let vals = vec![1.5f32, -2.25, f32::MIN_POSITIVE];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&vals)).unwrap(), vals);
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+    }
+}

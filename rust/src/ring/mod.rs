@@ -1,0 +1,48 @@
+//! `fiber.Ring` — the collective-communication subsystem.
+//!
+//! Pool and Queue move *tasks*; Ring moves *tensors*. The paper's third
+//! building block turns a set of cluster jobs into ranked members of a ring
+//! so population-based methods and distributed SGD can combine results
+//! peer-to-peer instead of funnelling everything through one leader. With a
+//! ring allreduce the leader-side traffic drops from `O(pop·θ)` to `O(θ)`
+//! per node — each member sends and receives `2·(n-1)/n · θ` elements no
+//! matter how large the world grows.
+//!
+//! Two layers:
+//!
+//! * [`topology`] — the rendezvous service. Members register, receive a
+//!   stable **rank** and the full ring membership for the current
+//!   **generation**; joins and leaves bump the generation so members
+//!   re-rendezvous (the dynamic-scaling story of
+//!   [`crate::coordinator::scaling`], applied to collectives).
+//! * [`collectives`] — chunked ring allreduce (reduce-scatter + all-gather),
+//!   broadcast and all-gather over `f32` buffers, framed with
+//!   [`crate::wire`] and working identically over `inproc://` channels
+//!   (thread backend, [`crate::cluster::LocalBackend`]) and `tcp://` RPC
+//!   (OS-process backend, [`crate::cluster::ProcBackend`]).
+//!
+//! ```
+//! use fiber::ring::{Rendezvous, RingMember};
+//!
+//! let rv = Rendezvous::inproc("doc-ring", 2);
+//! let h: Vec<_> = (0..2)
+//!     .map(|_| {
+//!         let rv = rv.clone();
+//!         std::thread::spawn(move || {
+//!             let mut m = RingMember::join_inproc(&rv).unwrap();
+//!             let mut buf = vec![(m.rank() + 1) as f32; 8];
+//!             m.allreduce_sum(&mut buf).unwrap();
+//!             buf
+//!         })
+//!     })
+//!     .collect();
+//! for t in h {
+//!     assert_eq!(t.join().unwrap(), vec![3.0f32; 8]); // 1 + 2
+//! }
+//! ```
+
+pub mod collectives;
+pub mod topology;
+
+pub use collectives::RingMember;
+pub use topology::{MemberInfo, Rendezvous, RendezvousClient, RingView};

@@ -1,0 +1,610 @@
+//! The ring rendezvous service: ranks, membership and generations.
+//!
+//! Members register with a rendezvous point (in-process `Arc` for the
+//! thread backend, [`crate::comms::rpc`] over TCP for OS-process workers),
+//! receive a stable **rank** and, once `world` members have arrived, the
+//! full membership of the current **generation**. Any join after the ring
+//! sealed, any [`Rendezvous::leave`] and any [`Rendezvous::resize`] (the
+//! collective analogue of `Pool::resize` dynamic scaling) bumps the
+//! generation: members discover the bump through [`RendezvousClient::
+//! membership`] and re-register, exactly like pool workers re-fetching
+//! after a scale event in [`crate::coordinator::scaling`].
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use once_cell::sync::Lazy;
+
+use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::comms::Addr;
+use crate::wire::{self, Decode, Encode};
+
+/// RPC tags for the rendezvous protocol.
+pub mod tags {
+    pub const REGISTER: u32 = 1;
+    pub const MEMBERSHIP: u32 = 2;
+    pub const LEAVE: u32 = 3;
+    pub const RESIZE: u32 = 4;
+}
+
+/// One registered member as seen by the rendezvous.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MemberInfo {
+    /// Rank within the generation (0-based, dense).
+    pub rank: u64,
+    /// The member's data-plane endpoint (`inproc://…` or `tcp://…`).
+    pub addr: String,
+}
+
+impl Encode for MemberInfo {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.rank.encode(buf);
+        self.addr.encode(buf);
+    }
+}
+
+impl Decode for MemberInfo {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(MemberInfo {
+            rank: u64::decode(r)?,
+            addr: String::decode(r)?,
+        })
+    }
+}
+
+/// A membership snapshot (the reply to [`tags::MEMBERSHIP`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Membership {
+    pub generation: u64,
+    pub world: u64,
+    pub sealed: bool,
+    pub members: Vec<MemberInfo>,
+    /// The most recent sealed generation, retained after a late join bumps
+    /// the forming generation so members of the just-sealed ring that have
+    /// not read their membership yet are not stranded. Cleared by
+    /// `leave`/`resize`, which genuinely invalidate old rings.
+    pub last_sealed: Option<(u64, Vec<MemberInfo>)>,
+}
+
+impl Encode for Membership {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.generation.encode(buf);
+        self.world.encode(buf);
+        self.sealed.encode(buf);
+        self.members.encode(buf);
+        self.last_sealed.encode(buf);
+    }
+}
+
+impl Decode for Membership {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(Membership {
+            generation: u64::decode(r)?,
+            world: u64::decode(r)?,
+            sealed: bool::decode(r)?,
+            members: Vec::<MemberInfo>::decode(r)?,
+            last_sealed: Option::<(u64, Vec<MemberInfo>)>::decode(r)?,
+        })
+    }
+}
+
+/// A member's resolved view of a sealed ring generation.
+#[derive(Clone, Debug)]
+pub struct RingView {
+    pub generation: u64,
+    pub rank: usize,
+    pub world: usize,
+    /// Data-plane endpoints indexed by rank.
+    pub members: Vec<Addr>,
+}
+
+impl RingView {
+    /// Rank of the right-hand neighbour (`rank + 1`, wrapping).
+    pub fn right(&self) -> usize {
+        (self.rank + 1) % self.world
+    }
+
+    /// Rank of the left-hand neighbour (`rank - 1`, wrapping).
+    pub fn left(&self) -> usize {
+        (self.rank + self.world - 1) % self.world
+    }
+}
+
+struct RvInner {
+    world: usize,
+    generation: u64,
+    sealed: bool,
+    members: Vec<String>,
+    /// `(generation, members)` of the last sealed generation, kept across a
+    /// late-join bump (see [`Membership::last_sealed`]).
+    last_sealed: Option<(u64, Vec<String>)>,
+}
+
+fn member_infos(members: &[String]) -> Vec<MemberInfo> {
+    members
+        .iter()
+        .enumerate()
+        .map(|(i, a)| MemberInfo {
+            rank: i as u64,
+            addr: a.clone(),
+        })
+        .collect()
+}
+
+/// The rendezvous point itself (server side).
+pub struct Rendezvous {
+    inner: Mutex<RvInner>,
+    changed: Condvar,
+}
+
+static INPROC_RV: Lazy<Mutex<HashMap<String, Arc<Rendezvous>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+impl Rendezvous {
+    /// A fresh rendezvous expecting `world` members per generation.
+    pub fn new(world: usize) -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(RvInner {
+                world: world.max(1),
+                generation: 0,
+                sealed: false,
+                members: Vec::new(),
+                last_sealed: None,
+            }),
+            changed: Condvar::new(),
+        })
+    }
+
+    /// Create and publish under `inproc://name` so thread-backend members
+    /// can find it through [`RendezvousClient::connect`].
+    pub fn inproc(name: &str, world: usize) -> Arc<Self> {
+        let rv = Self::new(world);
+        INPROC_RV
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), rv.clone());
+        rv
+    }
+
+    /// Remove an `inproc://` rendezvous from the global registry.
+    pub fn unpublish(name: &str) {
+        INPROC_RV.lock().unwrap().remove(name);
+    }
+
+    /// Register a member's data endpoint. A join after the current
+    /// generation sealed starts a new generation (re-rendezvous). Returns
+    /// `(generation, rank)`.
+    pub fn register(&self, data_addr: &str) -> (u64, u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.sealed {
+            // Archive the sealed membership before starting the next
+            // generation: members of the sealed ring that have not read it
+            // yet must still be able to (a late join must not strand a
+            // healthy generation mid-rendezvous).
+            let generation = inner.generation;
+            let archived = std::mem::take(&mut inner.members);
+            inner.last_sealed = Some((generation, archived));
+            inner.generation += 1;
+            inner.sealed = false;
+        }
+        inner.members.push(data_addr.to_string());
+        let rank = (inner.members.len() - 1) as u64;
+        if inner.members.len() >= inner.world {
+            inner.sealed = true;
+        }
+        let generation = inner.generation;
+        drop(inner);
+        self.changed.notify_all();
+        (generation, rank)
+    }
+
+    /// Current membership snapshot.
+    pub fn membership(&self) -> Membership {
+        let inner = self.inner.lock().unwrap();
+        Membership {
+            generation: inner.generation,
+            world: inner.world as u64,
+            sealed: inner.sealed,
+            members: member_infos(&inner.members),
+            last_sealed: inner
+                .last_sealed
+                .as_ref()
+                .map(|(g, m)| (*g, member_infos(m))),
+        }
+    }
+
+    /// A member leaves `generation`: bump the generation so survivors
+    /// re-rendezvous. Stale calls (old generation) are ignored. Pair with
+    /// [`Rendezvous::resize`] when the departure is a scale-down rather
+    /// than churn, otherwise the next generation waits for a replacement.
+    pub fn leave(&self, generation: u64, _rank: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.generation == generation {
+            inner.generation += 1;
+            inner.sealed = false;
+            inner.members.clear();
+            // A departure invalidates old rings outright — no archived
+            // snapshot may resurrect a generation missing a member.
+            inner.last_sealed = None;
+            drop(inner);
+            self.changed.notify_all();
+        }
+    }
+
+    /// Change the expected world size (dynamic scaling). Bumps the
+    /// generation; all members re-register.
+    pub fn resize(&self, world: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.world = world.max(1);
+        inner.generation += 1;
+        inner.sealed = false;
+        inner.members.clear();
+        inner.last_sealed = None;
+        drop(inner);
+        self.changed.notify_all();
+    }
+
+    /// Block until the given generation seals (or any later generation
+    /// starts, which means the caller's registration is stale).
+    fn wait_sealed(&self, generation: u64, timeout: Duration) -> Result<Membership> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if inner.sealed && inner.generation == generation {
+                // Snapshot under the held lock: a join-after-seal on another
+                // thread must not be able to clear the membership between
+                // our check and the read.
+                return Ok(Membership {
+                    generation,
+                    world: inner.world as u64,
+                    sealed: true,
+                    members: member_infos(&inner.members),
+                    last_sealed: None,
+                });
+            }
+            // Our generation sealed but a late join already started the
+            // next one: the archived snapshot is still valid for us.
+            if let Some((g, archived)) = &inner.last_sealed {
+                if *g == generation {
+                    return Ok(Membership {
+                        generation,
+                        world: archived.len() as u64,
+                        sealed: true,
+                        members: member_infos(archived),
+                        last_sealed: None,
+                    });
+                }
+            }
+            if inner.generation > generation {
+                anyhow::bail!(
+                    "ring generation bumped to {} while waiting on {generation} — re-register",
+                    inner.generation
+                );
+            }
+            let now = Instant::now();
+            anyhow::ensure!(now < deadline, "rendezvous timed out waiting for the ring to fill");
+            let (g, _) = self.changed.wait_timeout(inner, deadline - now).unwrap();
+            inner = g;
+        }
+    }
+
+    /// Expose this rendezvous over TCP for OS-process members.
+    pub fn serve_rpc(self: &Arc<Self>, bind: &str) -> Result<RpcServer> {
+        let rv = self.clone();
+        RpcServer::bind(
+            bind,
+            Arc::new(move |tag, payload| match tag {
+                tags::REGISTER => {
+                    let addr: String = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.register(&addr)))
+                }
+                tags::MEMBERSHIP => Ok(wire::to_bytes(&rv.membership())),
+                tags::LEAVE => {
+                    let (generation, rank): (u64, u64) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    rv.leave(generation, rank);
+                    Ok(Vec::new())
+                }
+                tags::RESIZE => {
+                    let world: u64 = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    rv.resize(world as usize);
+                    Ok(Vec::new())
+                }
+                t => Err(format!("bad rendezvous rpc tag {t}")),
+            }),
+        )
+    }
+}
+
+/// Client handle to a rendezvous, local or remote — the same four verbs
+/// over either transport, which is what lets ring programs move between
+/// the thread and OS-process backends unchanged.
+pub enum RendezvousClient {
+    Local(Arc<Rendezvous>),
+    Remote(RpcClient),
+}
+
+impl RendezvousClient {
+    /// Connect to `inproc://name` (published via [`Rendezvous::inproc`])
+    /// or `tcp://host:port` (served via [`Rendezvous::serve_rpc`]).
+    pub fn connect(addr: &Addr) -> Result<Self> {
+        match addr {
+            Addr::Inproc(name) => {
+                let rv = INPROC_RV
+                    .lock()
+                    .unwrap()
+                    .get(name)
+                    .cloned()
+                    .with_context(|| format!("no inproc rendezvous named {name:?}"))?;
+                Ok(RendezvousClient::Local(rv))
+            }
+            Addr::Tcp(sa) => Ok(RendezvousClient::Remote(RpcClient::connect(*sa)?)),
+        }
+    }
+
+    /// Wrap an already-held local rendezvous.
+    pub fn local(rv: Arc<Rendezvous>) -> Self {
+        RendezvousClient::Local(rv)
+    }
+
+    pub fn register(&self, data_addr: &str) -> Result<(u64, u64)> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.register(data_addr)),
+            RendezvousClient::Remote(cli) => {
+                cli.call_typed(tags::REGISTER, &data_addr.to_string())
+            }
+        }
+    }
+
+    pub fn membership(&self) -> Result<Membership> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.membership()),
+            RendezvousClient::Remote(cli) => cli.call_typed(tags::MEMBERSHIP, &()),
+        }
+    }
+
+    pub fn leave(&self, generation: u64, rank: u64) -> Result<()> {
+        match self {
+            RendezvousClient::Local(rv) => {
+                rv.leave(generation, rank);
+                Ok(())
+            }
+            RendezvousClient::Remote(cli) => cli.call_typed(tags::LEAVE, &(generation, rank)),
+        }
+    }
+
+    pub fn resize(&self, world: usize) -> Result<()> {
+        match self {
+            RendezvousClient::Local(rv) => {
+                rv.resize(world);
+                Ok(())
+            }
+            RendezvousClient::Remote(cli) => cli.call_typed(tags::RESIZE, &(world as u64)),
+        }
+    }
+
+    /// Register `data_addr` and block until the generation seals, returning
+    /// the member's resolved [`RingView`]. Errors if the generation bumps
+    /// mid-wait (caller should retry) or `timeout` elapses.
+    pub fn join(&self, data_addr: &str, timeout: Duration) -> Result<RingView> {
+        let (generation, rank) = self.register(data_addr)?;
+        let m = match self {
+            RendezvousClient::Local(rv) => rv.wait_sealed(generation, timeout)?,
+            RendezvousClient::Remote(_) => {
+                // Poll: RPC handlers shouldn't hold a server thread hostage
+                // for the whole rendezvous window.
+                let deadline = Instant::now() + timeout;
+                loop {
+                    let m = self.membership()?;
+                    if m.sealed && m.generation == generation {
+                        break m;
+                    }
+                    // A late join may have bumped the forming generation
+                    // right after ours sealed; the archive still serves us.
+                    if let Some((g, archived)) = &m.last_sealed {
+                        if *g == generation {
+                            break Membership {
+                                generation,
+                                world: archived.len() as u64,
+                                sealed: true,
+                                members: archived.clone(),
+                                last_sealed: None,
+                            };
+                        }
+                    }
+                    if m.generation > generation {
+                        anyhow::bail!(
+                            "ring generation bumped to {} while waiting on {generation} — re-register",
+                            m.generation
+                        );
+                    }
+                    anyhow::ensure!(
+                        Instant::now() < deadline,
+                        "rendezvous timed out waiting for the ring to fill"
+                    );
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+        };
+        let mut members = Vec::with_capacity(m.members.len());
+        for info in &m.members {
+            members.push(Addr::parse(&info.addr)?);
+        }
+        Ok(RingView {
+            generation,
+            rank: rank as usize,
+            world: members.len(),
+            members,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranks_are_dense_and_seal_at_world() {
+        let rv = Rendezvous::new(3);
+        assert_eq!(rv.register("inproc://a"), (0, 0));
+        assert_eq!(rv.register("inproc://b"), (0, 1));
+        assert!(!rv.membership().sealed);
+        assert_eq!(rv.register("inproc://c"), (0, 2));
+        let m = rv.membership();
+        assert!(m.sealed);
+        assert_eq!(m.members.len(), 3);
+        assert_eq!(m.members[1].addr, "inproc://b");
+    }
+
+    #[test]
+    fn join_after_seal_bumps_generation() {
+        let rv = Rendezvous::new(2);
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        assert_eq!(rv.membership().generation, 0);
+        // A third member joining forces re-rendezvous.
+        let (generation, rank) = rv.register("inproc://c");
+        assert_eq!((generation, rank), (1, 0));
+        let m = rv.membership();
+        assert_eq!(m.generation, 1);
+        assert!(!m.sealed);
+        assert_eq!(m.members.len(), 1);
+        // The sealed generation 0 is archived, not destroyed.
+        let (g, archived) = m.last_sealed.expect("sealed gen 0 archived");
+        assert_eq!(g, 0);
+        assert_eq!(archived.len(), 2);
+    }
+
+    #[test]
+    fn late_join_preserves_sealed_snapshot_for_unread_members() {
+        // Regression: a join landing right after a generation seals must
+        // not strand members of that generation that have not read their
+        // membership yet.
+        let rv = Rendezvous::new(2);
+        let (g0, _) = rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register("inproc://c"); // bumps the forming generation to 1
+        assert_eq!(rv.membership().generation, 1);
+        // A generation-0 member reading late still gets its sealed ring.
+        let m = rv.wait_sealed(g0, Duration::from_millis(50)).unwrap();
+        assert_eq!(m.generation, 0);
+        assert!(m.sealed);
+        assert_eq!(m.members.len(), 2);
+        assert_eq!(m.members[1].addr, "inproc://b");
+        // leave() invalidates the archive — no resurrecting a ring that
+        // lost a member.
+        rv.leave(1, 0);
+        assert!(rv.membership().last_sealed.is_none());
+        assert!(rv.wait_sealed(g0, Duration::from_millis(20)).is_err());
+    }
+
+    #[test]
+    fn leave_and_resize_bump_generation() {
+        let rv = Rendezvous::new(2);
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.leave(0, 1);
+        assert_eq!(rv.membership().generation, 1);
+        rv.leave(0, 0); // stale: already bumped
+        assert_eq!(rv.membership().generation, 1);
+        rv.resize(3);
+        let m = rv.membership();
+        assert_eq!(m.generation, 2);
+        assert_eq!(m.world, 3);
+    }
+
+    #[test]
+    fn join_blocks_until_full() {
+        let rv = Rendezvous::new(2);
+        let rv2 = rv.clone();
+        let h = std::thread::spawn(move || {
+            RendezvousClient::local(rv2)
+                .join("inproc://first", Duration::from_secs(5))
+                .unwrap()
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let v2 = RendezvousClient::local(rv.clone())
+            .join("inproc://second", Duration::from_secs(5))
+            .unwrap();
+        let v1 = h.join().unwrap();
+        assert_eq!(v1.rank, 0);
+        assert_eq!(v2.rank, 1);
+        assert_eq!(v1.world, 2);
+        assert_eq!(v1.members, v2.members);
+        assert_eq!(v1.right(), 1);
+        assert_eq!(v1.left(), 1);
+    }
+
+    #[test]
+    fn join_times_out_when_ring_never_fills() {
+        let rv = Rendezvous::new(2);
+        let err = RendezvousClient::local(rv)
+            .join("inproc://lonely", Duration::from_millis(30))
+            .unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn rpc_rendezvous_roundtrip() {
+        let rv = Rendezvous::new(2);
+        let srv = rv.serve_rpc("127.0.0.1:0").unwrap();
+        let addr = Addr::Tcp(srv.local_addr());
+        let a1 = addr.clone();
+        let h = std::thread::spawn(move || {
+            RendezvousClient::connect(&a1)
+                .unwrap()
+                .join("tcp://127.0.0.1:7001", Duration::from_secs(5))
+                .unwrap()
+        });
+        let v2 = RendezvousClient::connect(&addr)
+            .unwrap()
+            .join("tcp://127.0.0.1:7002", Duration::from_secs(5))
+            .unwrap();
+        let v1 = h.join().unwrap();
+        assert_eq!(v1.world, 2);
+        assert_eq!(v2.world, 2);
+        assert_ne!(v1.rank, v2.rank);
+        assert_eq!(v1.members, v2.members);
+    }
+
+    #[test]
+    fn membership_wire_roundtrip() {
+        let m = Membership {
+            generation: 3,
+            world: 2,
+            sealed: true,
+            members: vec![
+                MemberInfo {
+                    rank: 0,
+                    addr: "tcp://127.0.0.1:9000".into(),
+                },
+                MemberInfo {
+                    rank: 1,
+                    addr: "inproc://x".into(),
+                },
+            ],
+            last_sealed: Some((
+                2,
+                vec![MemberInfo {
+                    rank: 0,
+                    addr: "tcp://127.0.0.1:8000".into(),
+                }],
+            )),
+        };
+        let bytes = wire::to_bytes(&m);
+        let back: Membership = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn inproc_registry_publish_and_connect() {
+        let _rv = Rendezvous::inproc("topo-test-rv", 1);
+        let cli = RendezvousClient::connect(&Addr::parse("inproc://topo-test-rv").unwrap());
+        assert!(cli.is_ok());
+        Rendezvous::unpublish("topo-test-rv");
+        let cli = RendezvousClient::connect(&Addr::parse("inproc://topo-test-rv").unwrap());
+        assert!(cli.is_err());
+    }
+}

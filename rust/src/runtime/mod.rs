@@ -16,6 +16,18 @@
 pub mod manifest;
 pub mod service;
 pub mod tensor;
+pub mod xla_stub;
+
+/// The PJRT binding surface. Points at [`xla_stub`] in builds without
+/// `libxla_extension`; swapping in the real `xla` crate is a one-line
+/// change here (plus the dependency).
+pub use xla_stub as xla;
+
+/// Whether a real PJRT backend is linked (false under the stub — PJRT
+/// paths error at `Runtime::load_dir` and callers fall back to pure Rust).
+pub fn pjrt_available() -> bool {
+    xla::AVAILABLE
+}
 
 pub use manifest::{Manifest, ModelSig, TensorSig};
 pub use service::Runtime;

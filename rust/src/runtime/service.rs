@@ -15,6 +15,7 @@ use anyhow::{Context, Result};
 use crate::comms::chan::{self, Receiver, Sender};
 use crate::runtime::manifest::Manifest;
 use crate::runtime::tensor::HostTensor;
+use crate::runtime::xla;
 
 enum Req {
     Run {
@@ -215,6 +216,10 @@ ENTRY main.7 {
 
     #[test]
     fn load_and_execute_inline_artifact() {
+        if !crate::runtime::pjrt_available() {
+            eprintln!("skipping: built with the xla stub (no PJRT backend)");
+            return;
+        }
         let dir = std::env::temp_dir().join(format!("fiber-rt-test-{}", std::process::id()));
         write_artifacts(&dir);
         let rt = Runtime::load_dir(&dir).unwrap();

@@ -2,6 +2,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::runtime::xla;
+
 /// A host-side dense tensor (f32 or i32 — the dtypes our artifacts use).
 #[derive(Clone, Debug, PartialEq)]
 pub enum HostTensor {

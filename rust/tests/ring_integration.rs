@@ -1,0 +1,205 @@
+//! Integration tests for the `fiber::ring` collective layer: allreduce
+//! correctness across world sizes 2–16, the decentralized ES update vs the
+//! centralized combine, and generation-bumping dynamic scaling.
+
+use std::sync::Arc;
+
+use fiber::algo::es::{register_es_tasks, EsConfig, EsMaster, EsRingNode};
+use fiber::api::pool::Pool;
+use fiber::coordinator::scaling::{Autoscaler, AutoscalePolicy};
+use fiber::ring::{Rendezvous, RingMember};
+
+/// Run `world` ring members on threads, collecting each member's output.
+fn run_ring<T: Send + 'static>(
+    world: usize,
+    f: impl Fn(RingMember) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let rv = Rendezvous::new(world);
+    run_ring_on(&rv, world, f)
+}
+
+fn run_ring_on<T: Send + 'static>(
+    rv: &Arc<Rendezvous>,
+    world: usize,
+    f: impl Fn(RingMember) -> T + Send + Sync + 'static,
+) -> Vec<T> {
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            let f = f.clone();
+            std::thread::spawn(move || {
+                let m = RingMember::join_inproc(&rv).unwrap();
+                f(m)
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn member_input(rank: usize, len: usize) -> Vec<f32> {
+    (0..len)
+        .map(|i| (((rank + 1) * (i + 3)) % 101) as f32 * 0.02 - 1.0)
+        .collect()
+}
+
+/// Single-node reference reduce: sum the members' inputs in rank order.
+fn reference_sum(world: usize, len: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; len];
+    for r in 0..world {
+        for (o, v) in out.iter_mut().zip(member_input(r, len)) {
+            *o += v;
+        }
+    }
+    out
+}
+
+#[test]
+fn allreduce_matches_single_node_reference_for_worlds_2_to_16() {
+    let len = 500;
+    for world in 2..=16usize {
+        let out = run_ring(world, move |mut m| {
+            let mut buf = member_input(m.rank(), len);
+            m.allreduce_sum(&mut buf).unwrap();
+            buf
+        });
+        let want = reference_sum(world, len);
+        for (rank, buf) in out.iter().enumerate() {
+            for (i, (a, b)) in buf.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "world {world} rank {rank} elem {i}: ring {a} vs reference {b}"
+                );
+            }
+        }
+        // Every member must hold bitwise-identical results (replication).
+        for buf in &out[1..] {
+            assert_eq!(buf, &out[0], "world {world}: members disagree");
+        }
+    }
+}
+
+#[test]
+fn decentralized_es_update_matches_centralized_combine() {
+    register_es_tasks();
+    let cfg = EsConfig {
+        pop: 16,
+        sigma: 0.1,
+        lr: 0.05,
+        table_size: 1 << 12,
+        eval_task: "es.eval_toy".into(),
+        ..Default::default()
+    };
+    let theta0 = vec![0.2f32; 24];
+    let iters = 3;
+
+    // Centralized: leader combines O(pop·θ) through the pool.
+    let pool = Pool::new(2).unwrap();
+    let mut master = EsMaster::with_theta(cfg.clone(), theta0.clone());
+    let mut central = Vec::new();
+    for _ in 0..iters {
+        central.push(master.iterate(&pool, None).unwrap());
+    }
+
+    // Decentralized: 4 replicas, identical seeds, ring-allreduced O(θ).
+    let rv = Rendezvous::new(4);
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let rv = rv.clone();
+            let cfg = cfg.clone();
+            let theta0 = theta0.clone();
+            std::thread::spawn(move || {
+                let mut m = RingMember::join_inproc(&rv).unwrap();
+                let mut node = EsRingNode::new(cfg, theta0);
+                let mut stats = Vec::new();
+                for _ in 0..iters {
+                    stats.push(node.iterate(&mut m).unwrap());
+                }
+                (node.theta, stats)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    for (theta, stats) in &results {
+        for (i, (a, b)) in theta.iter().zip(&master.theta).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-5,
+                "theta[{i}]: ring {a} vs centralized {b}"
+            );
+        }
+        for (s, c) in stats.iter().zip(&central) {
+            assert!(
+                (s.mean_reward - c.mean_reward).abs() < 1e-5,
+                "iter {}: mean {} vs {}",
+                s.iteration,
+                s.mean_reward,
+                c.mean_reward
+            );
+            assert_eq!(s.total_env_steps, c.total_env_steps);
+            assert!((s.grad_norm - c.grad_norm).abs() < 1e-4);
+        }
+    }
+    // Replicas never diverge from one another (bitwise).
+    for (theta, _) in &results[1..] {
+        assert_eq!(theta, &results[0].0);
+    }
+}
+
+#[test]
+fn ring_world_follows_autoscaler_and_rejoins_across_generations() {
+    // The scaling policy that resizes pools also drives the ring world:
+    // resize bumps the generation and members re-rendezvous.
+    let mut scaler = Autoscaler::new(AutoscalePolicy {
+        min_workers: 1,
+        max_workers: 8,
+        tasks_per_worker: 4.0,
+        cooldown_ns: 0,
+    });
+    let w1 = scaler.target(16, 0);
+    assert_eq!(w1, 4);
+    let rv = Rendezvous::new(w1);
+    let out = run_ring_on(&rv, w1, |mut m| {
+        let mut buf = vec![1.0f32; 64];
+        m.allreduce_sum(&mut buf).unwrap();
+        (m.generation(), m.world(), buf[0])
+    });
+    for (generation, world, v) in out {
+        assert_eq!((generation, world, v), (0, 4, 4.0));
+    }
+
+    // Load drops; the scaler shrinks the world, the ring re-forms.
+    let w2 = scaler.decide(1, w1, 8, 0).expect("should shrink");
+    assert_eq!(w2, 2);
+    rv.resize(w2);
+    let out = run_ring_on(&rv, w2, |mut m| {
+        let mut buf = vec![1.0f32; 64];
+        m.allreduce_sum(&mut buf).unwrap();
+        (m.generation(), m.world(), buf[0])
+    });
+    for (generation, world, v) in out {
+        assert_eq!((generation, world, v), (1, 2, 2.0));
+    }
+}
+
+#[test]
+fn member_leave_forces_rerendezvous() {
+    let rv = Rendezvous::new(2);
+    let out = run_ring_on(&rv, 2, |mut m| {
+        let mut buf = vec![2.0f32; 8];
+        m.allreduce_sum(&mut buf).unwrap();
+        if m.rank() == 1 {
+            m.leave().unwrap();
+        }
+        buf[0]
+    });
+    assert_eq!(out, vec![4.0, 4.0]);
+    // The departure bumped the generation; a fresh pair can re-form.
+    assert_eq!(rv.membership().generation, 1);
+    let out = run_ring_on(&rv, 2, |mut m| {
+        let mut buf = vec![3.0f32; 8];
+        m.allreduce_sum(&mut buf).unwrap();
+        (m.generation(), buf[0])
+    });
+    assert_eq!(out, vec![(1, 6.0), (1, 6.0)]);
+}
