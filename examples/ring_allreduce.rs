@@ -9,11 +9,15 @@
 //! `RingMember::join_addr` at a TCP rendezvous (`fiber-cli ring --proc
 //! true`); here threads keep the example self-contained. The printout
 //! contrasts the per-member traffic with the naive gather-broadcast
-//! leader hotspot, and then demonstrates a generation bump: the ring
-//! scales from 4 members down to 3 and re-rendezvouses — the collective
-//! version of `Pool::resize` dynamic scaling.
+//! leader hotspot, then demonstrates a generation bump (the ring scales
+//! from 4 members down to 3 and re-rendezvouses — the collective version
+//! of `Pool::resize` dynamic scaling), and finally **failure healing**:
+//! one member is chaos-killed mid-allreduce and the survivors excise it,
+//! re-rank, and resume from their last completed chunk.
 
-use fiber::ring::{Rendezvous, RingMember};
+use std::time::Duration;
+
+use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
 
 const ELEMS: usize = 1 << 16; // 256 KB of f32 per member
 
@@ -77,5 +81,50 @@ fn main() -> anyhow::Result<()> {
         assert_eq!(generation, 1, "resize must bump the generation");
         assert_eq!(v, 3.0);
     }
+
+    // Failure healing: a fresh 3-ring, rank 2 dies after completing chunk
+    // 1 of 4. Survivors report it dead, re-rank, and resume — completed
+    // chunks keep the 3-way sum, resumed chunks hold the survivors' 2-way
+    // sum, identically on every survivor.
+    println!("\nchaos: killing rank 2 mid-allreduce…");
+    let rv = Rendezvous::new(3);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let rv = rv.clone();
+            std::thread::spawn(move || {
+                let mut m = RingMember::join_inproc(&rv).unwrap();
+                m.set_chunk_elems(8);
+                m.set_timeout(Duration::from_millis(250));
+                m.set_probe_interval(Duration::from_millis(10));
+                if m.rank() == 2 {
+                    m.set_kill_after_chunk(Some(1));
+                }
+                let mut buf = vec![(m.rank() + 1) as f32; 32];
+                match m.allreduce_sum(&mut buf) {
+                    Ok(()) => Some((m.rank(), m.world(), m.generation(), buf)),
+                    Err(e) => {
+                        assert!(is_chaos_killed(&e));
+                        None // the victim crashes without leave()
+                    }
+                }
+            })
+        })
+        .collect();
+    let survivors: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    assert_eq!(survivors.len(), 2);
+    for (rank, world, generation, buf) in &survivors {
+        // Chunks 0–1 (elems 0..16): 1+2+3 = 6. Chunks 2–3: survivors 1+2 = 3.
+        assert_eq!(&buf[..16], &[6.0f32; 16][..]);
+        assert_eq!(&buf[16..], &[3.0f32; 16][..]);
+        println!(
+            "survivor rank {rank}: world {world}, generation {generation} — \
+             banked chunks kept the 3-way sum, resumed chunks re-reduced 2-way"
+        );
+    }
+    assert_eq!(survivors[0].3, survivors[1].3, "survivors agree bitwise");
     Ok(())
 }

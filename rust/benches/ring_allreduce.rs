@@ -1,5 +1,6 @@
 //! Ring allreduce vs naive gather-broadcast across payload sizes and world
-//! sizes.
+//! sizes, plus the elastic-collectives series: overlap-on vs overlap-off
+//! wall time and kill-one-member recovery time.
 //!
 //! `cargo bench --bench ring_allreduce` (add `-- --quick` to trim the
 //! sweep). Prints benchkit tables and writes machine-readable results to
@@ -10,11 +11,16 @@
 //! moves `2·(n-1)·θ` bytes through rank 0 while ring allreduce moves
 //! `2·(n-1)/n·θ` through *every* member — the per-node cost stays flat as
 //! the world grows, which is the property that lets population-based
-//! methods scale past a single leader's NIC.
+//! methods scale past a single leader's NIC. The overlap series shows the
+//! double-buffered chunk pipeline (chunk *k+1*'s traffic in flight while
+//! chunk *k* reduces) is never slower than lockstep; the recovery record
+//! times a full allreduce in which one member dies mid-collective and the
+//! survivors heal and resume from their last completed chunk.
 
 use std::time::Instant;
 
 use fiber::benchkit::{Json, Table};
+use fiber::experiments::timed_allreduce;
 use fiber::ring::{Rendezvous, RingMember};
 use fiber::util::Welford;
 
@@ -23,19 +29,35 @@ struct ConfigResult {
     elems: usize,
     ring: Welford,
     naive: Welford,
+    overlap_efficiency: f64,
     /// Per-op payload bytes through the busiest member, ring allreduce.
     ring_max_member_bytes: u64,
     /// Per-op payload bytes through rank 0, gather-broadcast.
     naive_root_bytes: u64,
 }
 
-fn run_config(world: usize, elems: usize, samples: usize) -> ConfigResult {
+/// One (world, payload) measurement. The naive gather-broadcast baseline
+/// is optional so the overlap-off pass does not re-time it — main() only
+/// keeps the baseline from the overlap-on pass.
+fn run_config(
+    world: usize,
+    elems: usize,
+    samples: usize,
+    overlap: bool,
+    with_naive: bool,
+) -> ConfigResult {
     let rv = Rendezvous::new(world);
     let handles: Vec<_> = (0..world)
         .map(|_| {
             let rv = rv.clone();
             std::thread::spawn(move || {
                 let mut m = RingMember::join_inproc(&rv).unwrap();
+                m.set_overlap(overlap);
+                // Split every payload into 8 chunks so the overlap series
+                // actually exercises the double-buffer pipeline — with the
+                // 32Ki default, the small payloads would be a single chunk
+                // and both columns would time the identical path.
+                m.set_chunk_elems((elems / 8).max(1));
                 let mut buf: Vec<f32> = (0..elems)
                     .map(|i| (m.rank() + 1) as f32 * 1e-3 + (i % 17) as f32 * 1e-4)
                     .collect();
@@ -48,15 +70,18 @@ fn run_config(world: usize, elems: usize, samples: usize) -> ConfigResult {
                     ring_times.push(t.elapsed().as_secs_f64());
                 }
                 let ring_bytes = (m.bytes_sent() + m.bytes_received()) / samples as u64;
+                let overlap_eff = m.overlap_efficiency();
                 m.reset_counters();
                 let mut naive_times = Vec::with_capacity(samples);
-                for _ in 0..samples {
-                    let t = Instant::now();
-                    m.gather_broadcast_sum(0, &mut buf).unwrap();
-                    naive_times.push(t.elapsed().as_secs_f64());
+                if with_naive {
+                    for _ in 0..samples {
+                        let t = Instant::now();
+                        m.gather_broadcast_sum(0, &mut buf).unwrap();
+                        naive_times.push(t.elapsed().as_secs_f64());
+                    }
                 }
                 let naive_bytes = (m.bytes_sent() + m.bytes_received()) / samples as u64;
-                (m.rank(), ring_times, naive_times, ring_bytes, naive_bytes)
+                (m.rank(), ring_times, naive_times, ring_bytes, naive_bytes, overlap_eff)
             })
         })
         .collect();
@@ -64,8 +89,10 @@ fn run_config(world: usize, elems: usize, samples: usize) -> ConfigResult {
     let mut naive = Welford::new();
     let mut ring_max_member_bytes = 0u64;
     let mut naive_root_bytes = 0u64;
+    let mut overlap_efficiency = 0.0f64;
     for h in handles {
-        let (rank, ring_times, naive_times, ring_bytes, naive_bytes) = h.join().unwrap();
+        let (rank, ring_times, naive_times, ring_bytes, naive_bytes, overlap_eff) =
+            h.join().unwrap();
         ring_max_member_bytes = ring_max_member_bytes.max(ring_bytes);
         if rank == 0 {
             // Collectives synchronize, so rank 0's clock stands in for the
@@ -77,6 +104,7 @@ fn run_config(world: usize, elems: usize, samples: usize) -> ConfigResult {
                 naive.add(t);
             }
             naive_root_bytes = naive_bytes;
+            overlap_efficiency = overlap_eff;
         }
     }
     ConfigResult {
@@ -84,6 +112,7 @@ fn run_config(world: usize, elems: usize, samples: usize) -> ConfigResult {
         elems,
         ring,
         naive,
+        overlap_efficiency,
         ring_max_member_bytes,
         naive_root_bytes,
     }
@@ -108,7 +137,10 @@ fn main() {
         &[256, 16_384, 262_144, 4_194_304]
     };
     let col_labels: Vec<String> = payloads.iter().map(|&e| payload_label(e)).collect();
-    let mut ring_table = Table::new("Ring allreduce (wall)", "world", col_labels.clone());
+    let mut ring_table =
+        Table::new("Ring allreduce, overlap on (wall)", "world", col_labels.clone());
+    let mut lockstep_table =
+        Table::new("Ring allreduce, overlap off (wall)", "world", col_labels.clone());
     let mut naive_table = Table::new("Gather-broadcast (wall)", "world", col_labels.clone());
     let mut hotspot_table = Table::new(
         "Busiest-node payload per op: ring max-member as % of naive root",
@@ -119,21 +151,27 @@ fn main() {
     let mut records = Vec::new();
     for &world in worlds {
         let mut ring_row = Vec::new();
+        let mut lockstep_row = Vec::new();
         let mut naive_row = Vec::new();
         let mut hotspot_row = Vec::new();
         for &elems in payloads {
             let samples = if elems >= 1 << 20 { 2 } else { 5 };
-            let r = run_config(world, elems, samples);
+            let r = run_config(world, elems, samples, true, true);
+            let l = run_config(world, elems, samples, false, false);
             ring_row.push(Some(r.ring.mean()));
+            lockstep_row.push(Some(l.ring.mean()));
             naive_row.push(Some(r.naive.mean()));
             hotspot_row.push(Some(
                 100.0 * r.ring_max_member_bytes as f64 / r.naive_root_bytes as f64,
             ));
             println!(
-                "world {:>2}  {:>5}  ring {:>9.3}ms  naive {:>9.3}ms  busiest-node bytes ring {} vs root {}",
+                "world {:>2}  {:>5}  overlap {:>9.3}ms (eff {:>4.0}%)  lockstep {:>9.3}ms  \
+                 naive {:>9.3}ms  busiest-node bytes ring {} vs root {}",
                 r.world,
                 payload_label(r.elems),
                 r.ring.mean() * 1e3,
+                r.overlap_efficiency * 100.0,
+                l.ring.mean() * 1e3,
                 r.naive.mean() * 1e3,
                 r.ring_max_member_bytes,
                 r.naive_root_bytes,
@@ -144,6 +182,9 @@ fn main() {
                 ("payload_bytes".into(), Json::num((r.elems * 4) as f64)),
                 ("ring_mean_s".into(), Json::num(r.ring.mean())),
                 ("ring_std_s".into(), Json::num(r.ring.std())),
+                ("ring_lockstep_mean_s".into(), Json::num(l.ring.mean())),
+                ("ring_lockstep_std_s".into(), Json::num(l.ring.std())),
+                ("overlap_efficiency".into(), Json::num(r.overlap_efficiency)),
                 ("naive_mean_s".into(), Json::num(r.naive.mean())),
                 ("naive_std_s".into(), Json::num(r.naive.std())),
                 (
@@ -157,16 +198,43 @@ fn main() {
             ]));
         }
         ring_table.add_row(format!("{world}"), ring_row);
+        lockstep_table.add_row(format!("{world}"), lockstep_row);
         naive_table.add_row(format!("{world}"), naive_row);
         hotspot_table.add_row(format!("{world}"), hotspot_row);
     }
     ring_table.print();
+    lockstep_table.print();
     naive_table.print();
     hotspot_table.print();
+
+    // Kill-one-member recovery: the wall time of a single allreduce during
+    // which one rank dies and the survivors heal + resume (shared harness
+    // with the `scaling-sim` dashboard panel).
+    let recovery = timed_allreduce(4, 64 * 1024, true, true).expect("recovery run");
+    let (recovery_s, healed_world, heals) =
+        (recovery.wall_s, recovery.world_after, recovery.heals);
+    println!(
+        "\nkill-one-member recovery (world 4 → {healed_world}, 256KB payload): \
+         {:.1}ms wall including detection + heal ({} heal)",
+        recovery_s * 1e3,
+        heals,
+    );
+
     let doc = Json::Obj(vec![
         ("bench".into(), Json::str("ring_allreduce")),
         ("quick".into(), Json::Bool(quick)),
         ("configs".into(), Json::Arr(records)),
+        (
+            "recovery".into(),
+            Json::Obj(vec![
+                ("world".into(), Json::num(4.0)),
+                ("healed_world".into(), Json::num(healed_world as f64)),
+                ("elems".into(), Json::num(65536.0)),
+                ("kill_after_chunk".into(), Json::num(1.0)),
+                ("recovery_wall_s".into(), Json::num(recovery_s)),
+                ("heals".into(), Json::num(heals as f64)),
+            ]),
+        ),
     ]);
     let path = "BENCH_ring.json";
     match doc.write(path) {

@@ -20,7 +20,7 @@ use crate::util::Rng;
 use crate::wire;
 
 use super::nn::{Mlp, WALKER_SIZES};
-use super::noise::shared_table;
+use super::noise::{shared_table, shared_table_broadcast};
 
 /// ES hyper-parameters.
 #[derive(Clone, Debug)]
@@ -379,6 +379,15 @@ pub fn shard_range(n_items: usize, world: usize, rank: usize) -> (usize, usize) 
 ///
 /// Each rank then applies the identical Adam step, keeping θ replicated
 /// (the allreduce result is bitwise-identical on every rank).
+///
+/// The node is **resume-aware**: both collectives heal. If a member dies
+/// mid-allreduce the ring bumps its generation, the collective resumes
+/// over the survivors, and this node re-reads its rank/world *after* the
+/// reward combine, so the gradient accumulation **re-shards the
+/// population over the survivors** — the dead rank's mirrored pairs are
+/// folded into the survivors' gradient shards. Rewards the dead rank
+/// never contributed (chunks reduced after the heal) stay zero; they rank
+/// low and the update remains finite and identical on every survivor.
 pub struct EsRingNode {
     pub cfg: EsConfig,
     pub theta: Vec<f32>,
@@ -421,6 +430,15 @@ impl EsRingNode {
         self.iteration
     }
 
+    /// Build the shared noise table once on rank 0 and ring-broadcast it
+    /// to the other members, instead of every process regenerating it —
+    /// the start-up saving grows with the table size. A collective: every
+    /// member must call it before its first [`EsRingNode::iterate`].
+    pub fn warm_noise_table(&self, member: &mut RingMember) -> Result<()> {
+        shared_table_broadcast(member, self.cfg.noise_seed, self.cfg.table_size)?;
+        Ok(())
+    }
+
     /// One decentralized ES iteration. Evaluates this rank's shard of the
     /// mirrored pairs locally (through the same registered task function
     /// pool workers run — call [`register_es_tasks`] first) and combines
@@ -445,10 +463,14 @@ impl EsRingNode {
             .collect();
         // Evaluate only this rank's contiguous shard of mirrored pairs
         // (inputs are built shard-local — no O(pop·θ) staging per rank).
-        let (pair_lo, pair_hi) = shard_range(half, member.world(), member.rank());
+        let (eval_lo, eval_hi) = shard_range(half, member.world(), member.rank());
         let mut local_steps = 0u64;
         let mut rewards = vec![0.0f32; n_evals];
-        for k in pair_lo..pair_hi {
+        for k in eval_lo..eval_hi {
+            // Rollouts are the long compute phase: heartbeat between them
+            // so a slow shard is not mistaken for a dead member by peers
+            // already waiting in the allreduce.
+            member.heartbeat_now()?;
             for (j, sign) in [1.0f32, -1.0].into_iter().enumerate() {
                 let idx = 2 * k + j;
                 let input: EvalInput = (
@@ -470,21 +492,30 @@ impl EsRingNode {
                 local_steps += steps;
             }
         }
+        // Step counts piggyback on the reward allreduce as three 16-bit
+        // limbs (exact in f32: each limb sum stays below 2^24 for worlds
+        // up to 256, and recombining summed limbs with shifts carries
+        // correctly — supports 2^48 steps per rank). One collective covers
+        // both, and it is the *healing* collective, unlike `all_gather`,
+        // whose per-rank slots have no meaning once the world shrinks.
+        rewards.extend_from_slice(&[
+            (local_steps & 0xFFFF) as f32,
+            ((local_steps >> 16) & 0xFFFF) as f32,
+            ((local_steps >> 32) & 0xFFFF) as f32,
+        ]);
         member.allreduce_sum(&mut rewards)?;
-        // Step counts cross the f32-only collective exactly: split each
-        // per-rank u64 into two 24-bit-safe halves (exact in f32 up to
-        // 2^48 steps per rank), gather, and reassemble in u64.
-        let per_rank_steps = member.all_gather(&[
-            (local_steps & 0xFF_FFFF) as f32,
-            (local_steps >> 24) as f32,
-        ])?;
-        let total_steps: u64 = per_rank_steps
-            .chunks_exact(2)
-            .map(|c| c[0] as u64 + ((c[1] as u64) << 24))
-            .sum();
+        let limb2 = rewards.pop().expect("step limb") as u64;
+        let limb1 = rewards.pop().expect("step limb") as u64;
+        let limb0 = rewards.pop().expect("step limb") as u64;
+        let total_steps = limb0 + (limb1 << 16) + (limb2 << 32);
 
         // Every rank computes identical centered ranks, accumulates only
         // its shard's weighted noise, and the ring sums the O(θ) gradient.
+        // The shard is re-read *after* the reward collective: if the ring
+        // healed mid-allreduce, the survivors re-shard the whole
+        // population among themselves so the dead rank's pairs are not
+        // dropped from the gradient.
+        let (pair_lo, pair_hi) = shard_range(half, member.world(), member.rank());
         let ranks = centered_ranks(&rewards);
         let mut grad = vec![0.0f32; dim];
         for k in pair_lo..pair_hi {

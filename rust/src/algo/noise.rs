@@ -7,13 +7,20 @@
 //! The paper shares one table per 8 workers; here a table is regenerated
 //! per process from `(seed, size)` via the counter-based generator in
 //! [`crate::util::rng`], so it is identical everywhere without any
-//! communication at all.
+//! communication at all. For ring deployments,
+//! [`shared_table_broadcast`] replaces the per-process regeneration with
+//! one generation on the seed rank plus a pipelined ring broadcast —
+//! cutting worker start-up from `O(size)` RNG work per process to `O(size)`
+//! communication, which wins whenever the counter-based generator is the
+//! start-up bottleneck at large θ.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use anyhow::Result;
 use once_cell::sync::Lazy;
 
+use crate::ring::RingMember;
 use crate::util::rng::counter_f32_normal;
 use crate::util::Rng;
 
@@ -30,6 +37,18 @@ impl NoiseTable {
             .map(|i| counter_f32_normal(seed, i))
             .collect();
         Self { seed, data }
+    }
+
+    /// Wrap samples received over the wire (see [`shared_table_broadcast`]).
+    /// The caller asserts that `data` came from a table generated with
+    /// `seed` — the ring broadcast's root guarantees it.
+    pub fn from_data(seed: u64, data: Vec<f32>) -> Self {
+        Self { seed, data }
+    }
+
+    /// The raw samples (for broadcasting).
+    pub fn data(&self) -> &[f32] {
+        &self.data
     }
 
     pub fn len(&self) -> usize {
@@ -69,6 +88,34 @@ pub fn shared_table(seed: u64, size: usize) -> Arc<NoiseTable> {
         .entry((seed, size))
         .or_insert_with(|| Arc::new(NoiseTable::new(seed, size)))
         .clone()
+}
+
+/// Ring-shared table: rank 0 of the member's generation generates (or
+/// reuses) the table and ring-broadcasts it; every other rank receives it
+/// instead of regenerating, then caches it in the process-wide registry so
+/// subsequent [`shared_table`] calls (e.g. from eval tasks) hit the cache.
+///
+/// This is a **collective**: every member of the generation must call it,
+/// in the same SPMD position, with the same `(seed, size)`. Call it once at
+/// node start-up — `EsRingNode::warm_noise_table` does — before the first
+/// training iteration touches the table.
+pub fn shared_table_broadcast(
+    member: &mut RingMember,
+    seed: u64,
+    size: usize,
+) -> Result<Arc<NoiseTable>> {
+    let mut buf = if member.rank() == 0 {
+        shared_table(seed, size).data().to_vec()
+    } else {
+        vec![0.0f32; size]
+    };
+    member.broadcast(0, &mut buf)?;
+    let mut tables = TABLES.lock().unwrap();
+    let table = tables
+        .entry((seed, size))
+        .or_insert_with(|| Arc::new(NoiseTable::from_data(seed, buf)))
+        .clone();
+    Ok(table)
 }
 
 #[cfg(test)]
@@ -113,6 +160,31 @@ mod tests {
         assert!(Arc::ptr_eq(&a, &b));
         let c = shared_table(6, 1000);
         assert!(!Arc::ptr_eq(&a, &c));
+    }
+
+    #[test]
+    fn ring_broadcast_table_matches_generated() {
+        use crate::ring::Rendezvous;
+        let world = 3;
+        let seed = 4242u64;
+        let size = 4096usize;
+        let rv = Rendezvous::new(world);
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let rv = rv.clone();
+                std::thread::spawn(move || {
+                    let mut m = crate::ring::RingMember::join_inproc(&rv).unwrap();
+                    let t = shared_table_broadcast(&mut m, seed, size).unwrap();
+                    t.slice(17, 64)
+                })
+            })
+            .collect();
+        let want = NoiseTable::new(seed, size).slice(17, 64);
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want);
+        }
+        // And the broadcast result landed in the process-wide cache.
+        assert_eq!(shared_table(seed, size).slice(17, 64), want);
     }
 
     #[test]

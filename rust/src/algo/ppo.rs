@@ -350,6 +350,13 @@ impl PpoTrainer {
     /// minibatches to a leader), and apply the identical Adam step on every
     /// replica. All members must start from identical parameters (same
     /// seed) and call this in lockstep; the averaged losses are returned.
+    ///
+    /// Resume-aware: the allreduce heals, and the averaging divisor is the
+    /// world size read **after** the sum — a mid-collective heal averages
+    /// over the surviving replicas (identically on every rank), so the
+    /// minibatch work re-shards over the survivors instead of wedging.
+    /// Chunks summed before the heal keep the dead replica's banked
+    /// gradient contribution.
     pub fn update_minibatch_ring(
         &mut self,
         mb: &MiniBatch,
@@ -359,6 +366,8 @@ impl PpoTrainer {
         // Piggyback the three loss scalars on the gradient buffer so one
         // collective covers both (same trick as EsRingNode's step counts).
         grad.extend_from_slice(&[pi_loss, v_loss, entropy]);
+        // allreduce_mean divides by the world size read *after* the sum,
+        // which is what makes the averaging survivor-correct post-heal.
         member.allreduce_mean(&mut grad)?;
         let entropy = grad.pop().expect("loss slot");
         let v_loss = grad.pop().expect("loss slot");

@@ -146,9 +146,15 @@ impl<T> Receiver<T> {
         }
     }
 
-    /// Receive with a deadline.
+    /// Receive with a relative timeout.
     pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
-        let deadline = Instant::now() + timeout;
+        self.recv_deadline(Instant::now() + timeout)
+    }
+
+    /// Receive with an absolute deadline — the primitive behind the ring
+    /// collectives' resumable waits, where one logical wait is sliced into
+    /// many short probes that must not stretch the overall budget.
+    pub fn recv_deadline(&self, deadline: Instant) -> Result<T, RecvError> {
         let mut st = self.core.q.lock().unwrap();
         loop {
             if let Some(v) = st.items.pop_front() {
@@ -287,6 +293,17 @@ mod tests {
             Err(RecvError::Timeout)
         );
         assert!(t.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn recv_deadline_in_past_times_out_immediately() {
+        let (tx, rx) = unbounded::<u32>();
+        tx.send(5).unwrap();
+        // An item is available: delivered even with an expired deadline.
+        assert_eq!(rx.recv_deadline(Instant::now()).unwrap(), 5);
+        let t = Instant::now();
+        assert_eq!(rx.recv_deadline(t), Err(RecvError::Timeout));
+        assert!(t.elapsed() < Duration::from_millis(20));
     }
 
     #[test]

@@ -14,6 +14,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use anyhow::{Context, Result};
 
@@ -148,6 +149,20 @@ impl RpcClient {
         self.addr
     }
 
+    /// Bound every subsequent reply wait (deadline support for callers that
+    /// must not block forever on a wedged peer — the ring data plane sets
+    /// this to its collective timeout). `None` restores blocking reads.
+    /// A timed-out call leaves the connection with a half-read reply, so
+    /// treat timeout errors as fatal for this client and reconnect.
+    pub fn set_read_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .reader
+            .set_read_timeout(timeout)
+            .context("rpc set_read_timeout")?;
+        Ok(())
+    }
+
     /// Issue a request and wait for the reply.
     pub fn call(&self, tag: u32, payload: &[u8]) -> Result<Vec<u8>> {
         let mut inner = self.inner.lock().unwrap();
@@ -248,6 +263,26 @@ mod tests {
         srv.shutdown();
         std::thread::sleep(std::time::Duration::from_millis(30));
         assert!(cli.call(1, b"x").is_err());
+    }
+
+    #[test]
+    fn read_timeout_bounds_a_wedged_server() {
+        // A listener that accepts but never replies: the deadline-equipped
+        // client must give up instead of blocking the collective forever.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let hold = std::thread::spawn(move || {
+            let (conn, _) = listener.accept().unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(500));
+            drop(conn);
+        });
+        let cli = RpcClient::connect(addr).unwrap();
+        cli.set_read_timeout(Some(std::time::Duration::from_millis(40)))
+            .unwrap();
+        let t = std::time::Instant::now();
+        assert!(cli.call(1, b"x").is_err());
+        assert!(t.elapsed() < std::time::Duration::from_millis(400));
+        hold.join().unwrap();
     }
 
     #[test]

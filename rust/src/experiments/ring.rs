@@ -1,0 +1,134 @@
+//! The ring-collectives dashboard panel: overlap on/off allreduce wall
+//! time plus kill-one-member recovery, rendered as a [`Table`] alongside
+//! the Fig 3a/3b experiment outputs. The timing harness itself
+//! ([`timed_allreduce`]) is the single source of truth shared with
+//! `benches/ring_allreduce.rs`, which persists the full machine-readable
+//! sweep to `BENCH_ring.json` — panel and bench cannot silently measure
+//! different chaos protocols.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::benchkit::Table;
+use crate::ring::{is_chaos_killed, Rendezvous, RingMember};
+
+/// Result of one timed (possibly chaos-injected) allreduce.
+pub struct RingTiming {
+    /// Worst surviving member's wall time for the collective (detection
+    /// timeout and heal included when `kill_one` was set).
+    pub wall_s: f64,
+    /// World size after the collective (shrinks by one under chaos).
+    pub world_after: usize,
+    /// Heals survived (0 without chaos, ≥1 with).
+    pub heals: u64,
+}
+
+/// One timed allreduce over `world` thread members, split into 8 chunks so
+/// the overlap pipeline and the chunk-resume machinery are both exercised.
+/// With `kill_one`, the highest rank dies after completing chunk 1 and the
+/// survivors' heal + resume time is what gets measured.
+pub fn timed_allreduce(
+    world: usize,
+    elems: usize,
+    overlap: bool,
+    kill_one: bool,
+) -> Result<RingTiming> {
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let victim_rank = world - 1;
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            std::thread::spawn(move || -> Result<Option<(f64, usize, u64)>> {
+                let mut m = RingMember::join_inproc(&rv)?;
+                m.set_overlap(overlap);
+                m.set_chunk_elems((elems / 8).max(1));
+                if kill_one {
+                    m.set_timeout(Duration::from_millis(250));
+                    m.set_probe_interval(Duration::from_millis(10));
+                    if m.rank() == victim_rank {
+                        m.set_kill_after_chunk(Some(1));
+                    }
+                } else {
+                    // Warmup only when timing the steady state, not chaos.
+                    let mut w = vec![0.5f32; elems];
+                    m.allreduce_sum(&mut w)?;
+                }
+                let mut buf = vec![1.0f32; elems];
+                let t = Instant::now();
+                match m.allreduce_sum(&mut buf) {
+                    Ok(()) => Ok(Some((
+                        t.elapsed().as_secs_f64(),
+                        m.world(),
+                        m.heal_count(),
+                    ))),
+                    Err(e) if kill_one && is_chaos_killed(&e) => Ok(None),
+                    Err(e) => Err(e),
+                }
+            })
+        })
+        .collect();
+    let mut timing = RingTiming {
+        wall_s: 0.0,
+        world_after: 0,
+        heals: 0,
+    };
+    for h in handles {
+        if let Some((secs, w, heals)) = h.join().expect("ring timing thread")? {
+            timing.wall_s = timing.wall_s.max(secs);
+            timing.world_after = w;
+            timing.heals = timing.heals.max(heals);
+        }
+    }
+    Ok(timing)
+}
+
+/// The dashboard table: per world size, overlap-on vs overlap-off wall
+/// time for a 256 KB allreduce, and the wall time of the same collective
+/// when one member is killed mid-flight (heal + resume included).
+pub fn ring_collectives_figure() -> Result<Table> {
+    let elems = 64 * 1024; // 256 KB of f32
+    let mut table = Table::new(
+        "Ring allreduce (256KB): overlap vs lockstep, kill-one recovery",
+        "world",
+        vec![
+            "overlap on".into(),
+            "overlap off".into(),
+            "kill-one recovery".into(),
+        ],
+    );
+    for world in [2usize, 4] {
+        let on = timed_allreduce(world, elems, true, false)?;
+        let off = timed_allreduce(world, elems, false, false)?;
+        let recovery = timed_allreduce(world, elems, true, true)?;
+        table.add_row(
+            format!("{world}"),
+            vec![Some(on.wall_s), Some(off.wall_s), Some(recovery.wall_s)],
+        );
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_timing_reports_heal_and_shrunk_world() {
+        let t = timed_allreduce(3, 1024, true, true).unwrap();
+        assert_eq!(t.world_after, 2);
+        assert!(t.heals >= 1);
+        assert!(t.wall_s > 0.0);
+    }
+
+    #[test]
+    fn panel_renders_with_all_cells_populated() {
+        let t = ring_collectives_figure().unwrap();
+        assert_eq!(t.rows.len(), 2);
+        for (label, cells) in &t.rows {
+            assert_eq!(cells.len(), 3, "row {label}");
+            assert!(cells.iter().all(|c| c.is_some()), "row {label} has gaps");
+        }
+    }
+}

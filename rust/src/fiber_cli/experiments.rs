@@ -1,20 +1,26 @@
 //! CLI wrappers for the paper's experiments (E1–E5) and the real ES/PPO
-//! training drivers used by EXPERIMENTS.md.
+//! training drivers used by EXPERIMENTS.md — including the decentralized
+//! (leaderless) ES path over ring collectives, with a chaos switch that
+//! kills a rank mid-allreduce to demo pool-style healing live.
 
 use std::sync::Arc;
+use std::time::Duration;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
-use fiber::algo::es::{EsConfig, EsMaster};
+use fiber::algo::es::{EsConfig, EsMaster, EsRingNode};
 use fiber::algo::ppo::{PpoConfig, PpoTrainer};
 use fiber::algo::vec_env::VecEnv;
 use fiber::api::pool::Pool;
 use fiber::api::queue::QueueHub;
-use fiber::cluster::LocalBackend;
+use fiber::cluster::{ClusterBackend, JobHandle, JobSpec, JobStatus, LocalBackend, ProcBackend};
+use fiber::comms::Addr;
 use fiber::experiments::{
     calibrate_fiber_dispatch_ns, dynamic_scaling_experiment, es_scaling_figure,
-    overhead_experiment, ppo_scaling_figure, OverheadConfig, ScalingConfig,
+    overhead_experiment, ppo_scaling_figure, ring_collectives_figure, OverheadConfig,
+    ScalingConfig,
 };
+use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
 use fiber::runtime::Runtime;
 
 use super::Opts;
@@ -44,8 +50,13 @@ pub fn overhead(opts: &Opts) -> Result<()> {
     Ok(())
 }
 
-/// E2 (real execution): distributed ES on walker2d-hardcore.
+/// E2 (real execution): distributed ES on walker2d-hardcore. With
+/// `--decentralized true` the leader-centric pool path is replaced by
+/// [`EsRingNode`] replicas combining peer-to-peer over ring collectives.
 pub fn es(opts: &Opts) -> Result<()> {
+    if opts.parse_or("decentralized", false)? {
+        return es_decentralized(opts);
+    }
     let pop: usize = opts.parse_or("pop", 256)?;
     let iters: usize = opts.parse_or("iters", 30)?;
     let workers: usize = opts.parse_or("workers", 4)?;
@@ -75,6 +86,295 @@ pub fn es(opts: &Opts) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// The shared ES hyper-parameter surface of the decentralized paths.
+fn es_cfg_from_opts(opts: &Opts) -> Result<EsConfig> {
+    Ok(EsConfig {
+        pop: opts.parse_or("pop", 64)?,
+        sigma: opts.parse_or("sigma", 0.05)?,
+        lr: opts.parse_or("lr", 0.02)?,
+        noise_seed: opts.parse_or("noise-seed", 1234u64)?,
+        table_size: opts.parse_or("table-size", 1usize << 20)?,
+        max_steps: opts.parse_or("max-steps", 400)?,
+        hardcore: opts.parse_or("hardcore", true)?,
+        seed: opts.parse_or("seed", 7u64)?,
+        eval_task: if opts.parse_or("toy", false)? {
+            "es.eval_toy".into()
+        } else {
+            "es.eval_walker".into()
+        },
+    })
+}
+
+/// Every rank must construct an identical replica (same cfg, same θ).
+fn es_ring_replica(opts: &Opts, cfg: EsConfig) -> Result<EsRingNode> {
+    if opts.parse_or("toy", false)? {
+        let dim: usize = opts.parse_or("dim", 16)?;
+        Ok(EsRingNode::new(cfg, vec![0.0; dim]))
+    } else {
+        Ok(EsRingNode::walker(cfg))
+    }
+}
+
+/// Peer-wait budget: toy evals are instant; walker rollouts are the long
+/// compute phase and need a far larger allowance.
+fn replica_timeout(toy: bool) -> Duration {
+    if toy {
+        Duration::from_secs(2)
+    } else {
+        Duration::from_secs(20)
+    }
+}
+
+/// Heartbeat grace matched to the eval cadence: replicas heartbeat once
+/// per mirrored rollout pair, so the walker grace must exceed the longest
+/// single pair or a live-but-slow rank gets evicted as dead.
+fn replica_grace(toy: bool) -> Duration {
+    if toy {
+        Duration::from_millis(150)
+    } else {
+        Duration::from_secs(10)
+    }
+}
+
+/// With the 32Ki-element default chunking, a pop-sized reward buffer is a
+/// single chunk and `--kill-chunk` would silently never fire. When chaos
+/// is armed, every replica (victim and survivors alike — chunking is SPMD
+/// state) narrows its chunks so a handful of kill points exist.
+fn chaos_chunk_elems(pop: usize) -> usize {
+    (pop / 4).max(1)
+}
+
+/// One decentralized replica's run, shared by the thread path and the
+/// `es-node` process path so the two backends cannot drift. `kill` is the
+/// chaos switch `(rank, iter, chunk)` handed to *every* replica; the one
+/// whose joined ring rank matches plays the victim. Returns `None` when
+/// this replica died (simulated crash — caller drops/exits without
+/// `leave()`), else `(rank, generation, world, heals, θ)`.
+#[allow(clippy::type_complexity)]
+fn run_es_replica(
+    mut m: RingMember,
+    mut node: EsRingNode,
+    iters: usize,
+    toy: bool,
+    kill: Option<(usize, usize, u64)>,
+    log_every_rank: bool,
+) -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
+    m.set_timeout(replica_timeout(toy));
+    let victim = kill.is_some_and(|(r, _, _)| r == m.rank());
+    // Warm the table on the default (wide) chunking — the whole point of
+    // the broadcast is a handful of big frames — and only then narrow the
+    // chunks so the training collectives expose chaos kill points.
+    node.warm_noise_table(&mut m)?;
+    if kill.is_some() {
+        m.set_chunk_elems(chaos_chunk_elems(node.cfg.pop));
+    }
+    for i in 0..iters {
+        if victim && kill.is_some_and(|(_, ki, _)| ki == i) {
+            m.set_kill_after_chunk(kill.map(|(_, _, kc)| kc));
+        }
+        match node.iterate(&mut m) {
+            Ok(s) => {
+                if log_every_rank || m.rank() == 0 {
+                    println!(
+                        "rank {}/{} gen {}: iter {:>3}  mean {:>9.3}  max {:>9.3}  \
+                         steps {:>8}  |g| {:.4}",
+                        m.rank(),
+                        m.world(),
+                        m.generation(),
+                        s.iteration,
+                        s.mean_reward,
+                        s.max_reward,
+                        s.total_env_steps,
+                        s.grad_norm,
+                    );
+                }
+            }
+            Err(e) if is_chaos_killed(&e) => {
+                println!(
+                    "rank {} chaos-killed mid-allreduce (iter {i}) — crashing without leave()",
+                    m.rank()
+                );
+                return Ok(None);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some((
+        m.rank(),
+        m.generation(),
+        m.world(),
+        m.heal_count(),
+        node.theta,
+    )))
+}
+
+/// `fiber-cli es --decentralized true [--world N] [--iters N] [--proc true]
+/// [--kill-rank R --kill-iter I --kill-chunk K] [--toy true]` — leaderless
+/// ES over ring collectives. `--kill-rank` is the chaos switch: that rank
+/// dies mid-allreduce at iteration I and the survivors heal, re-shard the
+/// population, and keep training.
+fn es_decentralized(opts: &Opts) -> Result<()> {
+    let world: usize = opts.parse_or("world", 4)?;
+    let iters: usize = opts.parse_or("iters", 10)?;
+    let proc_mode: bool = opts.parse_or("proc", false)?;
+    let kill_rank: i64 = opts.parse_or("kill-rank", -1i64)?;
+    anyhow::ensure!(world >= 1, "--world must be >= 1");
+    anyhow::ensure!(
+        kill_rank < world as i64,
+        "--kill-rank {kill_rank} out of range for world {world}"
+    );
+    if proc_mode {
+        es_decentralized_proc(opts, world, iters, kill_rank)
+    } else {
+        es_decentralized_threads(opts, world, iters, kill_rank)
+    }
+}
+
+fn es_decentralized_threads(opts: &Opts, world: usize, iters: usize, kill_rank: i64) -> Result<()> {
+    let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
+    let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
+    let toy: bool = opts.parse_or("toy", false)?;
+    let cfg = es_cfg_from_opts(opts)?;
+    println!(
+        "decentralized ES: {world} ring replicas (threads), pop {}, {iters} iters{}",
+        cfg.pop,
+        if kill_rank >= 0 {
+            format!(" — chaos: kill rank {kill_rank} at iter {kill_iter} chunk {kill_chunk}")
+        } else {
+            String::new()
+        }
+    );
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(replica_grace(toy));
+    let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
+    let mut handles = Vec::new();
+    for _ in 0..world {
+        let rv = rv.clone();
+        let replica = es_ring_replica(opts, cfg.clone())?;
+        handles.push(std::thread::spawn(
+            move || -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
+                let m = RingMember::join_inproc(&rv)?;
+                run_es_replica(m, replica, iters, toy, kill, false)
+            },
+        ));
+    }
+    let mut survivors: Vec<(usize, u64, usize, u64, Vec<f32>)> = Vec::new();
+    for h in handles {
+        if let Some(s) = h.join().expect("replica thread")? {
+            survivors.push(s);
+        }
+    }
+    survivors.sort_by_key(|s| s.0);
+    let first = survivors.first().context("no surviving replicas")?;
+    for s in &survivors[1..] {
+        anyhow::ensure!(
+            s.4 == first.4,
+            "replicas diverged: rank {} disagrees with rank {}",
+            s.0,
+            first.0
+        );
+    }
+    anyhow::ensure!(
+        first.4.iter().all(|v| v.is_finite()),
+        "post-heal parameters must be finite"
+    );
+    println!(
+        "{} replicas finished in agreement (generation {}, world {}, {} heal(s)); \
+         θ finite and identical",
+        survivors.len(),
+        first.1,
+        first.2,
+        first.3,
+    );
+    Ok(())
+}
+
+fn es_decentralized_proc(opts: &Opts, world: usize, iters: usize, kill_rank: i64) -> Result<()> {
+    let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
+    let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
+    println!("decentralized ES: {world} es-node OS processes over TCP rendezvous");
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(replica_grace(opts.parse_or("toy", false)?));
+    let srv = rv.serve_rpc("127.0.0.1:0")?;
+    let rv_addr = format!("tcp://{}", srv.local_addr());
+    let backend = ProcBackend::new()?;
+    let forward = [
+        "pop", "sigma", "lr", "noise-seed", "table-size", "max-steps", "hardcore", "seed", "toy",
+        "dim",
+    ];
+    let handles: Vec<_> = (0..world)
+        .map(|i| {
+            let mut args = vec![
+                "es-node".to_string(),
+                "--rendezvous".into(),
+                rv_addr.clone(),
+                "--iters".into(),
+                iters.to_string(),
+            ];
+            for key in forward {
+                if let Some(v) = opts.get(key) {
+                    args.push(format!("--{key}"));
+                    args.push(v.to_string());
+                }
+            }
+            if kill_rank >= 0 {
+                // Ring ranks are assigned by registration order, not spawn
+                // order, so every child gets the chaos flags and compares
+                // against the rank it actually receives — same contract as
+                // the thread backend.
+                args.extend([
+                    "--kill-rank".into(),
+                    kill_rank.to_string(),
+                    "--kill-iter".into(),
+                    kill_iter.to_string(),
+                    "--kill-chunk".into(),
+                    kill_chunk.to_string(),
+                ]);
+            }
+            backend.submit(JobSpec::command(format!("es-node-{i}"), args))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    for h in handles {
+        match h.wait() {
+            JobStatus::Succeeded => {}
+            other => anyhow::bail!("es-node child ended {other:?}"),
+        }
+    }
+    println!("all es-node processes exited cleanly (victim included — it simulated a crash)");
+    Ok(())
+}
+
+/// `fiber-cli es-node --rendezvous tcp://… [--iters N] [--kill-rank R
+/// --kill-iter I --kill-chunk K] [--toy true]` — one OS-process
+/// decentralized-ES replica (spawned by `es --decentralized true --proc
+/// true`). Every replica receives the same chaos flags and the one whose
+/// **joined ring rank** matches `--kill-rank` plays the victim.
+pub fn es_node(opts: &Opts) -> Result<()> {
+    let rv_addr = Addr::parse(opts.require("rendezvous")?)?;
+    let iters: usize = opts.parse_or("iters", 10)?;
+    let kill_rank: i64 = opts.parse_or("kill-rank", -1i64)?;
+    let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
+    let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
+    let toy: bool = opts.parse_or("toy", false)?;
+    let cfg = es_cfg_from_opts(opts)?;
+    let node = es_ring_replica(opts, cfg)?;
+    let m = RingMember::join_addr(&rv_addr).context("join ring")?;
+    let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
+    match run_es_replica(m, node, iters, toy, kill, true)? {
+        None => {
+            // Skip destructors: a crash does not shut down cleanly.
+            std::process::exit(0)
+        }
+        Some((rank, generation, world, heals, _theta)) => {
+            println!(
+                "es-node rank {rank}/{world} done: generation {generation}, \
+                 {heals} heal(s) survived"
+            );
+            Ok(())
+        }
+    }
 }
 
 /// E3 (real execution): distributed PPO on breakout.
@@ -133,6 +433,10 @@ pub fn scaling_sim(opts: &Opts) -> Result<()> {
     let model_step_ns: u64 = opts.parse_or("model-step-ns", 30_000_000u64)?;
     ppo_scaling_figure(&cfg, 500, model_step_ns)?.print();
     dynamic_scaling_experiment()?.print();
+    // Ring-collectives panel: overlap on/off + kill-one recovery, folded in
+    // beside the scaling curves (full sweep: `cargo bench --bench
+    // ring_allreduce`, which persists BENCH_ring.json).
+    ring_collectives_figure()?.print();
     Ok(())
 }
 

@@ -93,6 +93,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "demo" => demo::pi_demo(&opts),
         "overhead" => experiments::overhead(&opts),
         "es" => experiments::es(&opts),
+        "es-node" => experiments::es_node(&opts),
         "ppo" => experiments::ppo(&opts),
         "scaling-sim" => experiments::scaling_sim(&opts),
         "help" | "--help" | "-h" => {
@@ -138,13 +139,18 @@ fn print_help() {
            worker       worker-process entrypoint (spawned by ProcBackend)\n\
                         --leader <addr> --worker <id>\n\
            ring         ring-allreduce collective demo\n\
-                        [--world N] [--elems N] [--proc true]\n\
+                        [--world N] [--elems N] [--proc true] [--overlap false]\n\
            ring-node    ring-member process entrypoint (spawned by `ring --proc true`)\n\
-                        --rendezvous <addr> [--elems N] [--bind ip:port]\n\
+                        --rendezvous <addr> [--elems N] [--bind ip:port] [--overlap false]\n\
            demo         pi-estimation smoke demo  [--workers N] [--samples N] [--proc true]\n\
            overhead     E1 Fig 3a framework-overhead experiment [--workers N]\n\
            es           E2 distributed ES on walker2d\n\
                         [--pop N] [--iters N] [--workers N] [--artifacts DIR]\n\
+                        [--decentralized true [--world N] [--proc true]\n\
+                         [--kill-rank R --kill-iter I --kill-chunk K] [--toy true]]\n\
+           es-node      decentralized-ES replica process entrypoint\n\
+                        --rendezvous <addr> [--iters N]\n\
+                        [--kill-rank R --kill-iter I --kill-chunk K]\n\
            ppo          E3 distributed PPO on breakout\n\
                         [--envs N] [--iters N] [--workers N] [--artifacts DIR]\n\
            scaling-sim  E2/E3 virtual-time scaling curves (Fig 3b/3c)\n\

@@ -38,48 +38,58 @@ fn verify(buf: &[f32], world: usize) -> Result<()> {
     Ok(())
 }
 
-/// `fiber-cli ring [--world N] [--elems N] [--proc true]`
+/// `fiber-cli ring [--world N] [--elems N] [--proc true] [--overlap false]`
 pub fn ring_demo(opts: &Opts) -> Result<()> {
     let world: usize = opts.parse_or("world", 4)?;
     let elems: usize = opts.parse_or("elems", 1 << 16)?;
     let proc_mode: bool = opts.parse_or("proc", false)?;
+    let overlap: bool = opts.parse_or("overlap", true)?;
     anyhow::ensure!(world >= 1, "--world must be >= 1");
     if proc_mode {
-        ring_demo_proc(world, elems)
+        ring_demo_proc(world, elems, overlap)
     } else {
-        ring_demo_threads(world, elems)
+        ring_demo_threads(world, elems, overlap)
     }
 }
 
-fn ring_demo_threads(world: usize, elems: usize) -> Result<()> {
-    println!("ring demo: {world} thread members, {elems} f32 elements ({} KB)", elems * 4 / 1024);
+fn ring_demo_threads(world: usize, elems: usize, overlap: bool) -> Result<()> {
+    println!(
+        "ring demo: {world} thread members, {elems} f32 elements ({} KB), overlap {}",
+        elems * 4 / 1024,
+        if overlap { "on" } else { "off" }
+    );
     let rv = Rendezvous::new(world);
     let handles: Vec<_> = (0..world)
         .map(|_| {
             let rv = rv.clone();
-            std::thread::spawn(move || -> Result<(usize, u64, u64)> {
+            std::thread::spawn(move || -> Result<(usize, u64, u64, f64)> {
                 let mut m = RingMember::join_inproc(&rv)?;
+                m.set_overlap(overlap);
                 let mut buf = member_buf(m.rank(), elems);
                 m.allreduce_sum(&mut buf)?;
                 verify(&buf, m.world())?;
                 let ring_bytes = m.bytes_sent() + m.bytes_received();
+                let overlap_eff = m.overlap_efficiency();
                 m.reset_counters();
                 let mut buf = member_buf(m.rank(), elems);
                 m.gather_broadcast_sum(0, &mut buf)?;
                 verify(&buf, m.world())?;
                 let naive_bytes = m.bytes_sent() + m.bytes_received();
-                Ok((m.rank(), ring_bytes, naive_bytes))
+                Ok((m.rank(), ring_bytes, naive_bytes, overlap_eff))
             })
         })
         .collect();
-    let mut rows: Vec<(usize, u64, u64)> = Vec::new();
+    let mut rows: Vec<(usize, u64, u64, f64)> = Vec::new();
     for h in handles {
         rows.push(h.join().expect("ring member thread")?);
     }
-    rows.sort();
-    println!("rank | ring allreduce bytes | gather-broadcast bytes");
-    for (rank, ring_bytes, naive_bytes) in &rows {
-        println!("{rank:>4} | {ring_bytes:>20} | {naive_bytes:>22}");
+    rows.sort_by_key(|r| r.0);
+    println!("rank | ring allreduce bytes | gather-broadcast bytes | overlap");
+    for (rank, ring_bytes, naive_bytes, overlap_eff) in &rows {
+        println!(
+            "{rank:>4} | {ring_bytes:>20} | {naive_bytes:>22} | {:>6.1}%",
+            overlap_eff * 100.0
+        );
     }
     let ring_max = rows.iter().map(|r| r.1).max().unwrap_or(0);
     let naive_root = rows.first().map(|r| r.2).unwrap_or(0);
@@ -92,8 +102,11 @@ fn ring_demo_threads(world: usize, elems: usize) -> Result<()> {
     Ok(())
 }
 
-fn ring_demo_proc(world: usize, elems: usize) -> Result<()> {
-    println!("ring demo: {world} OS-process members, {elems} f32 elements");
+fn ring_demo_proc(world: usize, elems: usize, overlap: bool) -> Result<()> {
+    println!(
+        "ring demo: {world} OS-process members, {elems} f32 elements, overlap {}",
+        if overlap { "on" } else { "off" }
+    );
     let rv = Rendezvous::new(world);
     let srv = rv.serve_rpc("127.0.0.1:0")?;
     let rv_addr = format!("tcp://{}", srv.local_addr());
@@ -108,6 +121,8 @@ fn ring_demo_proc(world: usize, elems: usize) -> Result<()> {
                     rv_addr.clone(),
                     "--elems".into(),
                     elems.to_string(),
+                    "--overlap".into(),
+                    overlap.to_string(),
                 ],
             ))
         })
@@ -129,8 +144,10 @@ fn ring_demo_proc(world: usize, elems: usize) -> Result<()> {
 pub fn ring_node(opts: &Opts) -> Result<()> {
     let rv_addr = Addr::parse(opts.require("rendezvous")?)?;
     let elems: usize = opts.parse_or("elems", 1 << 16)?;
+    let overlap: bool = opts.parse_or("overlap", true)?;
     let bind = opts.get_or("bind", "127.0.0.1:0");
     let mut m = RingMember::join_addr_bind(&rv_addr, bind).context("join ring")?;
+    m.set_overlap(overlap);
     let mut buf = member_buf(m.rank(), elems);
     m.allreduce_sum(&mut buf)?;
     verify(&buf, m.world())?;

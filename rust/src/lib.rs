@@ -23,13 +23,31 @@
 //!   allreduce / broadcast / all-gather over `f32` buffers that work
 //!   identically on the thread and OS-process backends. This is what lets
 //!   ES and PPO combine updates peer-to-peer (`O(θ)` per node) instead of
-//!   funnelling `O(pop·θ)` through one leader.
+//!   funnelling `O(pop·θ)` through one leader. Since the elastic-collectives
+//!   refactor the ring is **self-healing**: collectives execute an explicit
+//!   per-chunk step plan with recorded progress, members heartbeat the
+//!   rendezvous while they wait, a dead member is reported and excised, and
+//!   the survivors re-rank and resume from the first chunk any of them had
+//!   not completed — the paper's pending-table failure story applied to
+//!   collectives. The chunk pipeline is double-buffered so the next chunk's
+//!   traffic is in flight while the current one reduces.
 //!
 //! Supporting substrates: [`comms`] (the Nanomsg-substitute message layer),
 //! [`wire`] (binary serialization), [`runtime`] (PJRT execution of
 //! AOT-compiled JAX/Pallas artifacts), [`envs`] (simulators), [`algo`]
 //! (ES/PPO built on the Fiber API), [`baselines`] (IPyParallel-, Spark- and
 //! multiprocessing-style comparator executors) and [`benchkit`]/[`metrics`].
+
+// Crate-wide style decisions the CI clippy gate (-D warnings) must not
+// fight: indexed hot loops in the hand-written backprop/optimizer kernels
+// are deliberate (they mirror the artifact math element-by-element), the
+// experiment configs take many scalar knobs, and the manual div-ceil
+// predates a ubiquitous `usize::div_ceil`.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::manual_div_ceil
+)]
 
 pub mod algo;
 pub mod api;

@@ -1,6 +1,5 @@
-//! Collective operations over a sealed ring: chunked ring allreduce
-//! (reduce-scatter + all-gather), broadcast, all-gather, and the naive
-//! gather-broadcast baseline the benches compare against.
+//! Collective operations over a sealed ring, built as a **resumable step
+//! state machine** with failure healing and compute/communication overlap.
 //!
 //! A [`RingMember`] owns one data-plane endpoint (an `inproc://` channel on
 //! the thread backend, a [`crate::comms::rpc`] server on the OS-process
@@ -9,6 +8,39 @@
 //! same order with the same buffer lengths and the same `chunk_elems`** —
 //! the op-sequence number baked into message tags keeps concurrent steps
 //! apart, not divergent programs.
+//!
+//! ## The step state machine
+//!
+//! `allreduce_sum` no longer runs one monolithic blocking loop. The buffer
+//! is partitioned into **chunks** of at most `chunk_elems` elements, and
+//! each chunk is ring-allreduced by executing an explicit
+//! [`CollectiveStep`] plan — `n-1` reduce-scatter steps followed by `n-1`
+//! all-gather steps, each naming the segment to send right and the segment
+//! to receive from the left (see [`allreduce_plan`]). Progress is recorded
+//! per chunk, which buys two capabilities:
+//!
+//! * **Healing.** Every receive carries a deadline. When it expires, the
+//!   member accuses the silent peer through
+//!   [`super::topology::Rendezvous::report_dead`]; if accepted (the accused
+//!   stopped heartbeating), the rendezvous re-ranks the survivors into a
+//!   new sealed generation. Survivors agree on the resume point through the
+//!   `resume_poll` min-barrier and the collective **resumes from the first
+//!   chunk any survivor had not completed** — completed chunks keep their
+//!   reduced values (banked work, including the dead member's
+//!   contribution), unfinished chunks are rolled back to the input snapshot
+//!   and re-reduced over the survivors only.
+//! * **Overlap.** With `set_overlap(true)` (the default) two chunks are in
+//!   flight at once: chunk *k+1*'s sends are issued before chunk *k*'s
+//!   blocking receive + reduce, so its traffic rides the wire while *k*
+//!   reduces. [`RingMember::overlap_efficiency`] reports the fraction of
+//!   pipeline steps that ran with a second chunk in flight.
+//!
+//! Known limitation (documented, surfaced as an error rather than a hang):
+//! healing assumes the survivors share the interrupted collective. A crash
+//! landing exactly on a collective boundary — the dead member delivered
+//! all but the tail of collective *N*, letting some survivors advance into
+//! *N+1* — strands members in different ops; after three report strikes
+//! the stragglers fail with `PeerUnresponsive` instead of healing.
 //!
 //! Cost model (θ = buffer elements, n = world): ring allreduce moves
 //! `2·(n-1)/n·θ` elements through every member — no hot spot — while the
@@ -34,8 +66,10 @@ use super::topology::{Rendezvous, RendezvousClient, RingView};
 /// RPC tag carrying one data-plane message on TCP endpoints.
 pub const DATA_TAG: u32 = 1;
 
-/// A data-plane message: `(from_rank, op_tag, payload)`.
-type Msg = (u64, u64, Vec<u8>);
+/// A data-plane message: `(from_rank, generation, op_tag, payload)`. The
+/// generation stamp lets survivors of a heal drop stale traffic without
+/// mistaking an old rank numbering for the new one.
+type Msg = (u64, u64, u64, Vec<u8>);
 
 /// Global registry of `inproc://` data endpoints (thread backend).
 static INPROC_EP: Lazy<Mutex<HashMap<String, Sender<Msg>>>> =
@@ -58,6 +92,116 @@ enum PeerTx {
     Tcp(RpcClient),
 }
 
+/// Typed faults the collective engine distinguishes from generic errors.
+#[derive(Debug, PartialEq, Eq, thiserror::Error)]
+pub enum RingError {
+    /// The ring healed to a new generation; the interrupted collective
+    /// must re-sync and resume (handled internally by the retry loop).
+    #[error("ring healed to a new generation; collective must resume")]
+    HealNeeded,
+    /// A peer went silent but the rendezvous kept rejecting the death
+    /// report (it heartbeated, or the generation is in flux).
+    #[error("rank {0} is unresponsive but could not be evicted")]
+    PeerUnresponsive(usize),
+    /// Fault injection (`set_kill_after_chunk`) fired: this member is
+    /// simulating a crash and must stop participating immediately.
+    #[error("chaos fault injection: member killed after completing chunk")]
+    ChaosKilled,
+}
+
+/// True when `err` is the chaos-kill signal — CLI chaos drivers and tests
+/// use this to tell a simulated crash from a real failure.
+pub fn is_chaos_killed(err: &anyhow::Error) -> bool {
+    matches!(err.downcast_ref::<RingError>(), Some(RingError::ChaosKilled))
+}
+
+fn is_heal_needed(err: &anyhow::Error) -> bool {
+    matches!(err.downcast_ref::<RingError>(), Some(RingError::HealNeeded))
+}
+
+/// The two phases of a chunked ring allreduce.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPhase {
+    /// Incoming segment is summed into the local buffer.
+    ReduceScatter,
+    /// Incoming segment (fully reduced) overwrites the local buffer.
+    AllGather,
+}
+
+/// One pipeline step of the per-chunk ring-allreduce plan: which segment
+/// goes to the right neighbour, which arrives from the left, and how the
+/// arrival combines with the local buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct CollectiveStep {
+    pub phase: StepPhase,
+    /// Step index within the phase (`0..n-1`).
+    pub step: usize,
+    /// Segment index sent to the right neighbour.
+    pub send_seg: usize,
+    /// Segment index received from the left neighbour.
+    pub recv_seg: usize,
+}
+
+/// The explicit `2·(n-1)`-step plan one rank executes per chunk. After
+/// reduce-scatter step `s` the received segment holds the sum of `s+2`
+/// contributions; after `n-1` steps rank `r` fully owns segment
+/// `(r+1) mod n`, which the all-gather phase then circulates.
+pub fn allreduce_plan(world: usize, rank: usize) -> Vec<CollectiveStep> {
+    let (n, r) = (world, rank);
+    if n < 2 {
+        return Vec::new();
+    }
+    let mut plan = Vec::with_capacity(2 * (n - 1));
+    for s in 0..n - 1 {
+        plan.push(CollectiveStep {
+            phase: StepPhase::ReduceScatter,
+            step: s,
+            send_seg: (r + n - s) % n,
+            recv_seg: (r + 2 * n - s - 1) % n,
+        });
+    }
+    for s in 0..n - 1 {
+        plan.push(CollectiveStep {
+            phase: StepPhase::AllGather,
+            step: s,
+            send_seg: (r + 1 + n - s) % n,
+            recv_seg: (r + n - s) % n,
+        });
+    }
+    plan
+}
+
+/// Chunk partition of a buffer: contiguous ranges of at most `chunk`
+/// elements (an empty buffer is one empty chunk, keeping SPMD lockstep).
+fn chunk_ranges(len: usize, chunk: usize) -> Vec<(usize, usize)> {
+    if len == 0 {
+        return vec![(0, 0)];
+    }
+    (0..len)
+        .step_by(chunk.max(1))
+        .map(|lo| (lo, (lo + chunk).min(len)))
+        .collect()
+}
+
+/// Segment `i` of `n` within a chunk of `clen` elements.
+fn seg_bounds(clen: usize, n: usize, i: usize) -> (usize, usize) {
+    (i * clen / n, (i + 1) * clen / n)
+}
+
+/// Progress of one in-flight chunk through its step plan.
+#[derive(Clone, Copy, Debug)]
+struct ChunkRun {
+    chunk: usize,
+    step: usize,
+}
+
+enum RecvMode {
+    /// Timeouts trigger `report_dead` + healing (resumable collectives).
+    Heal,
+    /// Timeouts are hard errors (legacy lockstep collectives).
+    Fail,
+}
+
 /// One ranked member of a sealed ring generation.
 pub struct RingMember {
     view: RingView,
@@ -70,8 +214,14 @@ pub struct RingMember {
     op_seq: u64,
     chunk_elems: usize,
     timeout: Duration,
+    probe: Duration,
+    overlap: bool,
     bytes_tx: u64,
     bytes_rx: u64,
+    steps_total: u64,
+    steps_overlapped: u64,
+    heals: u64,
+    kill_after_chunk: Option<u64>,
 }
 
 impl RingMember {
@@ -145,8 +295,14 @@ impl RingMember {
             op_seq: 0,
             chunk_elems: 1 << 15, // 128 KiB frames
             timeout: Duration::from_secs(30),
+            probe: Duration::from_millis(25),
+            overlap: true,
             bytes_tx: 0,
             bytes_rx: 0,
+            steps_total: 0,
+            steps_overlapped: 0,
+            heals: 0,
+            kill_after_chunk: None,
         })
     }
 
@@ -175,18 +331,59 @@ impl RingMember {
         self.bytes_rx
     }
 
+    /// Fraction of pipeline steps executed with a second chunk in flight
+    /// (0.0 with overlap disabled or single-chunk buffers; approaches 1.0
+    /// when the double-buffer keeps the wire busy through every reduce).
+    pub fn overlap_efficiency(&self) -> f64 {
+        if self.steps_total == 0 {
+            0.0
+        } else {
+            self.steps_overlapped as f64 / self.steps_total as f64
+        }
+    }
+
+    /// Number of generation heals this member has survived mid-collective.
+    pub fn heal_count(&self) -> u64 {
+        self.heals
+    }
+
     pub fn reset_counters(&mut self) {
         self.bytes_tx = 0;
         self.bytes_rx = 0;
+        self.steps_total = 0;
+        self.steps_overlapped = 0;
     }
 
-    /// Maximum `f32`s per frame (must agree across all members).
+    /// Maximum `f32`s per chunk **and** per frame (must agree across all
+    /// members): chunk granularity is also the healing resume granularity.
     pub fn set_chunk_elems(&mut self, elems: usize) {
         self.chunk_elems = elems.max(1);
     }
 
+    /// Deadline for any single peer wait before the member accuses the
+    /// peer of being dead (must exceed the rendezvous heartbeat grace).
     pub fn set_timeout(&mut self, timeout: Duration) {
         self.timeout = timeout;
+    }
+
+    /// How often a blocked receive heartbeats the rendezvous and checks
+    /// for a generation bump started by another survivor.
+    pub fn set_probe_interval(&mut self, probe: Duration) {
+        self.probe = probe.max(Duration::from_millis(1));
+    }
+
+    /// Toggle the double-buffered chunk pipeline (on by default).
+    pub fn set_overlap(&mut self, overlap: bool) {
+        self.overlap = overlap;
+    }
+
+    /// Chaos fault injection: simulate a crash by erroring with
+    /// [`RingError::ChaosKilled`] right after chunk `chunk` of a healing
+    /// collective completes. The caller is expected to drop the member (or
+    /// exit the process) without calling [`RingMember::leave`], exactly
+    /// like a real crash.
+    pub fn set_kill_after_chunk(&mut self, chunk: Option<u64>) {
+        self.kill_after_chunk = chunk;
     }
 
     /// Announce departure: bumps the ring generation so survivors
@@ -198,46 +395,48 @@ impl RingMember {
 
     // ---- collectives -----------------------------------------------------
 
-    /// In-place elementwise sum across all members (chunked ring
-    /// allreduce: reduce-scatter then all-gather, `2·(n-1)` pipeline steps).
+    /// In-place elementwise sum across all members: chunked ring allreduce
+    /// driven by the [`CollectiveStep`] state machine, double-buffered when
+    /// overlap is on, and **self-healing** — a member death mid-collective
+    /// bumps the generation and the survivors resume from the first chunk
+    /// any of them had not completed. Completed chunks keep the old
+    /// generation's sum (banked work); resumed chunks hold the sum over
+    /// the survivors only.
     pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
-        let n = self.view.world;
-        if n == 1 {
+        if self.view.world == 1 {
             return Ok(());
         }
         let op = self.next_op();
-        let r = self.view.rank;
-        let right = self.view.right();
-        let left = self.view.left();
-        let bounds: Vec<(usize, usize)> = (0..n)
-            .map(|i| (i * buf.len() / n, (i + 1) * buf.len() / n))
-            .collect();
-        // Reduce-scatter: after step s, the received segment holds the sum
-        // of s+2 contributions; after n-1 steps rank r fully owns segment
-        // (r+1) mod n.
-        for s in 0..n - 1 {
-            let tag = op | s as u64;
-            let (lo, hi) = bounds[(r + n - s) % n];
-            self.send_chunks(right, tag, &buf[lo..hi])?;
-            let (lo, hi) = bounds[(r + 2 * n - s - 1) % n];
-            let incoming = self.recv_elems(left, tag, hi - lo)?;
-            for (d, v) in buf[lo..hi].iter_mut().zip(&incoming) {
-                *d += *v;
+        let chunks = chunk_ranges(buf.len(), self.chunk_elems);
+        self.ensure_tag_capacity(chunks.len())?;
+        let snapshot = buf.to_vec();
+        let mut start = 0usize;
+        let mut completed = 0usize;
+        loop {
+            match self.drive_allreduce(op, buf, &chunks, start, &mut completed) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if !is_heal_needed(&e) {
+                        return Err(e);
+                    }
+                    let resume = self.heal_and_sync(completed as u64)? as usize;
+                    // Unfinished chunks roll back to the pre-collective
+                    // input and re-reduce over the survivors.
+                    for &(lo, hi) in chunks.iter().skip(resume) {
+                        buf[lo..hi].copy_from_slice(&snapshot[lo..hi]);
+                    }
+                    start = resume;
+                    if self.view.world == 1 {
+                        return Ok(());
+                    }
+                }
             }
         }
-        // All-gather: circulate the fully-reduced segments.
-        for s in 0..n - 1 {
-            let tag = op | (n - 1 + s) as u64;
-            let (lo, hi) = bounds[(r + 1 + n - s) % n];
-            self.send_chunks(right, tag, &buf[lo..hi])?;
-            let (lo, hi) = bounds[(r + n - s) % n];
-            let incoming = self.recv_elems(left, tag, hi - lo)?;
-            buf[lo..hi].copy_from_slice(&incoming);
-        }
-        Ok(())
     }
 
     /// Allreduce then divide by the world size (data-parallel averaging).
+    /// The divisor is the world size **after** the sum, so a mid-collective
+    /// heal averages over the surviving replicas.
     pub fn allreduce_mean(&mut self, buf: &mut [f32]) -> Result<()> {
         self.allreduce_sum(buf)?;
         let inv = 1.0 / self.view.world as f32;
@@ -248,46 +447,49 @@ impl RingMember {
     }
 
     /// Pipelined ring broadcast of `root`'s buffer into every member's.
+    /// Chunk progress is recorded, so a non-root death mid-broadcast heals
+    /// and resumes like allreduce; a dead root is unrecoverable and errors.
+    /// `root` names a rank of the generation current at call time — the
+    /// member is tracked by endpoint across heals.
     pub fn broadcast(&mut self, root: usize, buf: &mut [f32]) -> Result<()> {
         let n = self.view.world;
         anyhow::ensure!(root < n, "broadcast root {root} out of range (world {n})");
         if n == 1 {
             return Ok(());
         }
+        let root_addr = self.view.members[root].clone();
         let op = self.next_op();
-        let right = self.view.right();
-        let left = self.view.left();
-        if self.view.rank == root {
-            self.send_chunks(right, op, buf)?;
-        } else {
-            let k = msg_count(buf.len(), self.chunk_elems);
-            let mut pos = 0;
-            for _ in 0..k {
-                let bytes = self.recv_msg(left, op)?;
-                let vals = bytes_to_f32s(&bytes)?;
-                anyhow::ensure!(
-                    pos + vals.len() <= buf.len(),
-                    "broadcast overflow: peer sent more than the local buffer holds"
-                );
-                buf[pos..pos + vals.len()].copy_from_slice(&vals);
-                pos += vals.len();
-                if right != root {
-                    // Forward the still-encoded chunk immediately (pipeline).
-                    self.send_msg(right, op, bytes)?;
+        let chunks = chunk_ranges(buf.len(), self.chunk_elems);
+        self.ensure_tag_capacity(chunks.len())?;
+        let mut start = 0usize;
+        let mut completed = 0usize;
+        loop {
+            let root_now = self
+                .view
+                .members
+                .iter()
+                .position(|a| *a == root_addr)
+                .context("broadcast root died; its buffer is unrecoverable")?;
+            if self.view.world == 1 {
+                return Ok(()); // sole survivor is the root itself
+            }
+            match self.drive_broadcast(op, root_now, buf, &chunks, start, &mut completed) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    if !is_heal_needed(&e) {
+                        return Err(e);
+                    }
+                    start = self.heal_and_sync(completed as u64)? as usize;
                 }
             }
-            anyhow::ensure!(
-                pos == buf.len(),
-                "broadcast length mismatch: got {pos}, want {}",
-                buf.len()
-            );
         }
-        Ok(())
     }
 
     /// Ring all-gather: every member contributes `mine` (equal lengths
     /// across members); returns the world's contributions concatenated in
-    /// rank order.
+    /// rank order. Lockstep (non-healing): a dead peer surfaces as a recv
+    /// timeout error — slot semantics under a shrunk world are ambiguous,
+    /// so this collective fails fast instead of resuming.
     pub fn all_gather(&mut self, mine: &[f32]) -> Result<Vec<f32>> {
         let n = self.view.world;
         let len = mine.len();
@@ -314,7 +516,8 @@ impl RingMember {
     /// The leader-centric baseline: every member ships its full buffer to
     /// `root`, which sums and ships the result back — `O(n·θ)` at the root.
     /// Same result as [`RingMember::allreduce_sum`] up to summation order;
-    /// exists as the comparison target for `benches/ring_allreduce.rs`.
+    /// exists as the comparison target for `benches/ring_allreduce.rs`
+    /// (lockstep, non-healing).
     pub fn gather_broadcast_sum(&mut self, root: usize, buf: &mut [f32]) -> Result<()> {
         let n = self.view.world;
         anyhow::ensure!(root < n, "root {root} out of range (world {n})");
@@ -346,13 +549,272 @@ impl RingMember {
         Ok(())
     }
 
+    // ---- the step-machine engine ----------------------------------------
+
+    /// Drive the chunked allreduce from chunk `start`, recording progress
+    /// in `completed` (count of fully all-gathered chunks — the value the
+    /// resume barrier reports). With overlap on, two chunks are in flight:
+    /// every tick issues both sends before either blocking receive.
+    fn drive_allreduce(
+        &mut self,
+        op: u64,
+        buf: &mut [f32],
+        chunks: &[(usize, usize)],
+        start: usize,
+        completed: &mut usize,
+    ) -> Result<()> {
+        let n = self.view.world;
+        *completed = start;
+        if n == 1 {
+            *completed = chunks.len();
+            return Ok(());
+        }
+        let plan = allreduce_plan(n, self.view.rank);
+        let spc = plan.len() as u64;
+        let right = self.view.right();
+        let left = self.view.left();
+        self.heartbeat_check()?;
+        let window = if self.overlap { 2 } else { 1 };
+        let mut active: VecDeque<ChunkRun> = VecDeque::new();
+        let mut next_chunk = start;
+        while *completed < chunks.len() {
+            while active.len() < window && next_chunk < chunks.len() {
+                active.push_back(ChunkRun {
+                    chunk: next_chunk,
+                    step: 0,
+                });
+                next_chunk += 1;
+            }
+            let in_flight = active.len() as u64;
+            self.steps_total += in_flight;
+            if in_flight > 1 {
+                self.steps_overlapped += in_flight;
+            }
+            // Send half: every in-flight chunk's current step goes out
+            // before any blocking receive.
+            for i in 0..active.len() {
+                let run = active[i];
+                let st = plan[run.step];
+                let (lo, hi) = chunks[run.chunk];
+                let (slo, shi) = seg_bounds(hi - lo, n, st.send_seg);
+                let tag = op | (run.chunk as u64 * spc + run.step as u64);
+                let payload = f32s_to_bytes(&buf[lo + slo..lo + shi]);
+                self.send_msg_healing(right, tag, payload)?;
+            }
+            // Receive half, oldest chunk first.
+            for i in 0..active.len() {
+                let run = active[i];
+                let st = plan[run.step];
+                let (lo, hi) = chunks[run.chunk];
+                let (rlo, rhi) = seg_bounds(hi - lo, n, st.recv_seg);
+                let tag = op | (run.chunk as u64 * spc + run.step as u64);
+                let bytes = self.recv_data(left, tag, RecvMode::Heal)?;
+                let incoming = bytes_to_f32s(&bytes)?;
+                anyhow::ensure!(
+                    incoming.len() == rhi - rlo,
+                    "ring step payload mismatch from rank {left}: got {}, want {}",
+                    incoming.len(),
+                    rhi - rlo
+                );
+                let dst = &mut buf[lo + rlo..lo + rhi];
+                match st.phase {
+                    StepPhase::ReduceScatter => {
+                        for (d, v) in dst.iter_mut().zip(&incoming) {
+                            *d += *v;
+                        }
+                    }
+                    StepPhase::AllGather => dst.copy_from_slice(&incoming),
+                }
+                active[i].step += 1;
+            }
+            // Retire finished chunks in admission order (keeps `completed`
+            // a prefix count, which the resume barrier relies on).
+            while active.front().is_some_and(|r| r.step == plan.len()) {
+                let run = active.pop_front().unwrap();
+                *completed += 1;
+                self.heartbeat_check()?;
+                if self.kill_after_chunk == Some(run.chunk as u64) {
+                    return Err(RingError::ChaosKilled.into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Drive the chunked broadcast from chunk `start` (root re-sends,
+    /// non-roots receive and forward still-encoded chunks — the pipeline).
+    fn drive_broadcast(
+        &mut self,
+        op: u64,
+        root: usize,
+        buf: &mut [f32],
+        chunks: &[(usize, usize)],
+        start: usize,
+        completed: &mut usize,
+    ) -> Result<()> {
+        let n = self.view.world;
+        *completed = start;
+        if n == 1 {
+            *completed = chunks.len();
+            return Ok(());
+        }
+        let right = self.view.right();
+        let left = self.view.left();
+        let rank = self.view.rank;
+        self.heartbeat_check()?;
+        for ci in start..chunks.len() {
+            let (lo, hi) = chunks[ci];
+            let tag = op | ci as u64;
+            if rank == root {
+                let payload = f32s_to_bytes(&buf[lo..hi]);
+                self.send_msg_healing(right, tag, payload)?;
+            } else {
+                let bytes = self.recv_data(left, tag, RecvMode::Heal)?;
+                let vals = bytes_to_f32s(&bytes)?;
+                anyhow::ensure!(
+                    vals.len() == hi - lo,
+                    "broadcast chunk {ci} length mismatch: got {}, want {}",
+                    vals.len(),
+                    hi - lo
+                );
+                buf[lo..hi].copy_from_slice(&vals);
+                if right != root {
+                    self.send_msg_healing(right, tag, bytes)?;
+                }
+            }
+            *completed += 1;
+            self.heartbeat_check()?;
+            if self.kill_after_chunk == Some(ci as u64) {
+                return Err(RingError::ChaosKilled.into());
+            }
+        }
+        Ok(())
+    }
+
+    // ---- healing ---------------------------------------------------------
+
+    /// Prove liveness to the rendezvous outside a collective. Members only
+    /// heartbeat automatically while they wait *inside* collectives, so a
+    /// long compute phase (e.g. a slow rollout shard) looks exactly like
+    /// death to an impatient peer — pump this between units of compute
+    /// work to keep the heartbeat-grace veto protecting you.
+    pub fn heartbeat_now(&self) -> Result<()> {
+        self.heartbeat().map(|_| ())
+    }
+
+    /// Heartbeat and learn the rendezvous' current generation in one
+    /// control-plane call (blocked receivers poll this every probe slice;
+    /// a full membership snapshot per slice would be needless weight).
+    fn heartbeat(&self) -> Result<u64> {
+        self.rendezvous.heartbeat(&self.endpoint)
+    }
+
+    /// Heartbeat and join any heal another survivor already started. This
+    /// is how a member that never blocks in a collective — a broadcast
+    /// root is pure-send — still observes a downstream death in bounded
+    /// time: the per-chunk heartbeat carries the bumped generation back.
+    fn heartbeat_check(&self) -> Result<()> {
+        if self.heartbeat()? > self.view.generation {
+            return Err(RingError::HealNeeded.into());
+        }
+        Ok(())
+    }
+
+    fn generation_bumped(&self) -> Result<bool> {
+        Ok(self.heartbeat()? > self.view.generation)
+    }
+
+    /// Adopt the healed generation (same endpoint, new rank/world), purge
+    /// stale state, and run the resume min-barrier. Returns the chunk index
+    /// the collective resumes from. Loops if yet another member dies while
+    /// the barrier is forming.
+    fn heal_and_sync(&mut self, completed: u64) -> Result<u64> {
+        loop {
+            let deadline = Instant::now() + self.timeout;
+            let view = loop {
+                let m = self.rendezvous.membership()?;
+                if m.generation > self.view.generation && m.sealed {
+                    match m.members.iter().position(|i| i.addr == self.endpoint) {
+                        Some(idx) => break m.resolve_view(idx)?,
+                        None => anyhow::bail!(
+                            "this member was evicted from the ring (reported dead) \
+                             at generation {}",
+                            m.generation
+                        ),
+                    }
+                }
+                anyhow::ensure!(
+                    Instant::now() < deadline,
+                    "ring heal: no healed generation appeared within the timeout \
+                     (a leave/resize mid-collective is not resumable)"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            };
+            let new_gen = view.generation;
+            self.view = view;
+            self.peers.clear();
+            self.stash.retain(|m| m.1 >= new_gen);
+            self.heals += 1;
+            self.heartbeat_check()?;
+            // The resume barrier can wait on survivors that are deep in a
+            // compute phase (e.g. ES rollouts) and have not touched the
+            // ring yet, so its budget is far larger than one peer wait.
+            // Past half that budget, a member that still has not reported
+            // is presumed a second simultaneous death and gets accused
+            // (the heartbeat grace still shields anyone actually alive).
+            let barrier_deadline = Instant::now() + self.timeout * 10;
+            let accuse_after = Instant::now() + self.timeout * 5;
+            let mut healed_again = false;
+            loop {
+                if let Some(min) =
+                    self.rendezvous
+                        .resume_poll(new_gen, self.view.rank as u64, completed)?
+                {
+                    return Ok(min);
+                }
+                if self.heartbeat()? > new_gen {
+                    healed_again = true; // another death while re-forming
+                    break;
+                }
+                if Instant::now() >= accuse_after {
+                    if let Some(missing) = self.rendezvous.resume_missing(new_gen)? {
+                        for rank in missing {
+                            if rank != self.view.rank as u64
+                                && self.rendezvous.report_dead(new_gen, rank)?
+                            {
+                                break;
+                            }
+                        }
+                    }
+                }
+                anyhow::ensure!(
+                    Instant::now() < barrier_deadline,
+                    "ring heal: resume barrier timed out at generation {new_gen}"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            debug_assert!(healed_again);
+        }
+    }
+
     // ---- plumbing --------------------------------------------------------
 
-    /// Per-collective namespace for message tags: high 48 bits are the op
-    /// sequence number, low 16 the phase/step within the op.
+    /// Per-collective namespace for message tags: high 40 bits are the op
+    /// sequence number, low 24 the chunk×step slot within the op.
     fn next_op(&mut self) -> u64 {
         self.op_seq += 1;
-        self.op_seq << 16
+        self.op_seq << 24
+    }
+
+    /// The chunk×step slot index must fit the 24-bit tag namespace.
+    fn ensure_tag_capacity(&self, n_chunks: usize) -> Result<()> {
+        let spc = 2 * self.view.world.saturating_sub(1).max(1);
+        anyhow::ensure!(
+            (n_chunks as u64) * (spc as u64) < 1 << 24,
+            "collective too finely chunked for the tag namespace: raise chunk_elems \
+             ({n_chunks} chunks × {spc} steps)"
+        );
+        Ok(())
     }
 
     fn peer(&mut self, to: usize) -> Result<&PeerTx> {
@@ -372,7 +834,13 @@ impl RingMember {
                         .with_context(|| format!("ring endpoint inproc://{name} is gone"))?;
                     PeerTx::Inproc(tx)
                 }
-                Addr::Tcp(sa) => PeerTx::Tcp(RpcClient::connect(*sa)?),
+                Addr::Tcp(sa) => {
+                    let cli = RpcClient::connect(*sa)?;
+                    // Deadline support threaded through comms::rpc: a send
+                    // to a wedged peer must not outlive the recv timeout.
+                    cli.set_read_timeout(Some(self.timeout))?;
+                    PeerTx::Tcp(cli)
+                }
             };
             self.peers.insert(to, link);
         }
@@ -381,14 +849,15 @@ impl RingMember {
 
     fn send_msg(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<()> {
         let from = self.view.rank as u64;
+        let generation = self.view.generation;
         let len = bytes.len() as u64;
         match self.peer(to)? {
             PeerTx::Inproc(tx) => {
-                tx.send((from, tag, bytes))
+                tx.send((from, generation, tag, bytes))
                     .map_err(|e| anyhow::anyhow!("ring send to rank {to}: {e}"))?;
             }
             PeerTx::Tcp(cli) => {
-                cli.call(DATA_TAG, &wire::to_bytes(&(from, tag, bytes)))
+                cli.call(DATA_TAG, &wire::to_bytes(&(from, generation, tag, bytes)))
                     .with_context(|| format!("ring send to rank {to}"))?;
             }
         }
@@ -396,8 +865,162 @@ impl RingMember {
         Ok(())
     }
 
+    /// One TCP data-plane call with an already-framed message (lets the
+    /// healing send retry on a fresh connection without re-encoding or
+    /// cloning the payload — `RpcClient::call` takes a borrow).
+    fn tcp_call(&mut self, to: usize, framed: &[u8]) -> Result<()> {
+        match self.peer(to)? {
+            PeerTx::Tcp(cli) => cli
+                .call(DATA_TAG, framed)
+                .map(|_| ())
+                .with_context(|| format!("ring send to rank {to}")),
+            PeerTx::Inproc(_) => anyhow::bail!("rank {to} is not a TCP peer"),
+        }
+    }
+
+    /// Healing-aware send. A failed TCP delivery retries once on a fresh
+    /// connection; any still-failing delivery (including an in-process
+    /// endpoint that vanished with its thread) accuses the peer and joins
+    /// the heal. The TCP path frames the message once up front so the
+    /// retry needs no payload clone; the in-process path moves the payload
+    /// straight into the channel (its only failure mode is a dead
+    /// endpoint, where the payload is moot).
+    fn send_msg_healing(&mut self, to: usize, tag: u64, bytes: Vec<u8>) -> Result<()> {
+        let err = if matches!(self.view.members.get(to), Some(Addr::Tcp(_))) {
+            let from = self.view.rank as u64;
+            let generation = self.view.generation;
+            let len = bytes.len() as u64;
+            let framed = wire::to_bytes(&(from, generation, tag, bytes));
+            match self.tcp_call(to, &framed) {
+                Ok(()) => {
+                    self.bytes_tx += len;
+                    return Ok(());
+                }
+                Err(_) => {
+                    self.peers.remove(&to); // drop the broken link, reconnect once
+                    match self.tcp_call(to, &framed) {
+                        Ok(()) => {
+                            self.bytes_tx += len;
+                            return Ok(());
+                        }
+                        Err(e) => e,
+                    }
+                }
+            }
+        } else {
+            match self.send_msg(to, tag, bytes) {
+                Ok(()) => return Ok(()),
+                Err(e) => e,
+            }
+        };
+        self.peers.remove(&to);
+        let deadline = Instant::now() + self.timeout;
+        loop {
+            if self.rendezvous.report_dead(self.view.generation, to as u64)? {
+                return Err(RingError::HealNeeded.into());
+            }
+            if self.generation_bumped()? {
+                return Err(RingError::HealNeeded.into());
+            }
+            if Instant::now() >= deadline {
+                return Err(err.context(format!(
+                    "ring send to rank {to} kept failing and the death report was rejected"
+                )));
+            }
+            std::thread::sleep(Duration::from_millis(10).min(self.probe));
+        }
+    }
+
+    /// Next message from `from` with tag `tag` in the current generation,
+    /// buffering whatever else arrives. Waits are sliced into probe
+    /// intervals: each slice heartbeats the rendezvous and checks for a
+    /// generation bump started by another survivor. In `Heal` mode an
+    /// expired deadline accuses the peer; in `Fail` mode it is an error.
+    fn recv_data(&mut self, from: usize, tag: u64, mode: RecvMode) -> Result<Vec<u8>> {
+        if let Some(pos) = self
+            .stash
+            .iter()
+            .position(|m| m.0 == from as u64 && m.1 == self.view.generation && m.2 == tag)
+        {
+            let msg = self.stash.remove(pos).unwrap();
+            self.bytes_rx += msg.3.len() as u64;
+            return Ok(msg.3);
+        }
+        let mut deadline = Instant::now() + self.timeout;
+        let mut strikes = 0u32;
+        loop {
+            let slice = (Instant::now() + self.probe).min(deadline);
+            match self.rx.recv_deadline(slice) {
+                Ok(msg) => {
+                    let generation = self.view.generation;
+                    if msg.1 < generation {
+                        continue; // stale traffic from a healed-away ring
+                    }
+                    if msg.1 > generation {
+                        // A peer already healed past us: keep its message
+                        // for the resumed attempt and go heal ourselves.
+                        self.stash.push_back(msg);
+                        match mode {
+                            RecvMode::Heal => return Err(RingError::HealNeeded.into()),
+                            RecvMode::Fail => anyhow::bail!(
+                                "ring healed to a new generation mid-collective; \
+                                 this collective is not resumable"
+                            ),
+                        }
+                    }
+                    if msg.0 == from as u64 && msg.2 == tag {
+                        self.bytes_rx += msg.3.len() as u64;
+                        return Ok(msg.3);
+                    }
+                    self.stash.push_back(msg);
+                }
+                Err(chan::RecvError::Timeout) => {
+                    // One control-plane call per slice: heartbeat + bump check.
+                    if self.generation_bumped()? {
+                        match mode {
+                            RecvMode::Heal => return Err(RingError::HealNeeded.into()),
+                            RecvMode::Fail => anyhow::bail!(
+                                "ring healed to a new generation mid-collective; \
+                                 this collective is not resumable"
+                            ),
+                        }
+                    }
+                    if Instant::now() >= deadline {
+                        match mode {
+                            RecvMode::Heal => {
+                                if self
+                                    .rendezvous
+                                    .report_dead(self.view.generation, from as u64)?
+                                {
+                                    return Err(RingError::HealNeeded.into());
+                                }
+                                if self.generation_bumped()? {
+                                    return Err(RingError::HealNeeded.into());
+                                }
+                                // Rejected (the peer heartbeated): extend
+                                // and keep waiting, up to three strikes.
+                                strikes += 1;
+                                if strikes >= 3 {
+                                    return Err(RingError::PeerUnresponsive(from).into());
+                                }
+                                deadline = Instant::now() + self.timeout;
+                            }
+                            RecvMode::Fail => anyhow::bail!(
+                                "ring recv timed out waiting for rank {from} (generation {})",
+                                self.view.generation
+                            ),
+                        }
+                    }
+                }
+                Err(e) => anyhow::bail!("ring data channel: {e}"),
+            }
+        }
+    }
+
     /// Send `vals` as one or more frames of at most `chunk_elems` each (an
     /// empty slice still sends one empty frame to keep peers in lockstep).
+    /// Used by the lockstep collectives; the step machine sends exactly one
+    /// frame per segment because segments never exceed `chunk_elems`.
     fn send_chunks(&mut self, to: usize, tag: u64, vals: &[f32]) -> Result<()> {
         if vals.is_empty() {
             return self.send_msg(to, tag, Vec::new());
@@ -408,47 +1031,13 @@ impl RingMember {
         Ok(())
     }
 
-    /// Next message from `from` with tag `tag`, buffering whatever else
-    /// arrives in the meantime.
-    fn recv_msg(&mut self, from: usize, tag: u64) -> Result<Vec<u8>> {
-        if let Some(pos) = self
-            .stash
-            .iter()
-            .position(|m| m.0 == from as u64 && m.1 == tag)
-        {
-            let msg = self.stash.remove(pos).unwrap();
-            self.bytes_rx += msg.2.len() as u64;
-            return Ok(msg.2);
-        }
-        let deadline = Instant::now() + self.timeout;
-        loop {
-            let now = Instant::now();
-            anyhow::ensure!(
-                now < deadline,
-                "ring recv timed out waiting for rank {from} (generation {})",
-                self.view.generation
-            );
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(msg) => {
-                    if msg.0 == from as u64 && msg.1 == tag {
-                        self.bytes_rx += msg.2.len() as u64;
-                        return Ok(msg.2);
-                    }
-                    self.stash.push_back(msg);
-                }
-                Err(chan::RecvError::Timeout) => continue,
-                Err(e) => anyhow::bail!("ring data channel: {e}"),
-            }
-        }
-    }
-
     /// Receive exactly `expected` f32 elements under `tag` from `from`
     /// (the mirror of [`RingMember::send_chunks`]).
     fn recv_elems(&mut self, from: usize, tag: u64, expected: usize) -> Result<Vec<f32>> {
         let k = msg_count(expected, self.chunk_elems);
         let mut out = Vec::with_capacity(expected);
         for _ in 0..k {
-            let bytes = self.recv_msg(from, tag)?;
+            let bytes = self.recv_data(from, tag, RecvMode::Fail)?;
             out.extend(bytes_to_f32s(&bytes)?);
         }
         anyhow::ensure!(
@@ -539,6 +1128,39 @@ mod tests {
     }
 
     #[test]
+    fn allreduce_plan_covers_every_segment_once_per_phase() {
+        for n in [2usize, 3, 5, 8] {
+            for r in 0..n {
+                let plan = allreduce_plan(n, r);
+                assert_eq!(plan.len(), 2 * (n - 1));
+                // The left neighbour's send at step s must be this rank's
+                // recv at step s, in both phases.
+                let left = (r + n - 1) % n;
+                let lplan = allreduce_plan(n, left);
+                for (mine, theirs) in plan.iter().zip(&lplan) {
+                    assert_eq!(mine.recv_seg, theirs.send_seg, "n={n} r={r}");
+                    assert_eq!(mine.phase, theirs.phase);
+                }
+                // Reduce-scatter ends owning segment (r+1)%n; all-gather
+                // first circulates exactly that segment.
+                assert_eq!(plan[n - 1].send_seg, (r + 1) % n);
+            }
+        }
+        assert!(allreduce_plan(1, 0).is_empty());
+    }
+
+    #[test]
+    fn chunk_ranges_partition_exactly() {
+        assert_eq!(chunk_ranges(0, 8), vec![(0, 0)]);
+        assert_eq!(chunk_ranges(5, 8), vec![(0, 5)]);
+        assert_eq!(chunk_ranges(8, 8), vec![(0, 8)]);
+        assert_eq!(chunk_ranges(17, 8), vec![(0, 8), (8, 16), (16, 17)]);
+        for (i, w) in chunk_ranges(1000, 7).windows(2).enumerate() {
+            assert_eq!(w[0].1, w[1].0, "chunk {i} not contiguous");
+        }
+    }
+
+    #[test]
     fn allreduce_matches_reference_small_worlds() {
         for world in [2usize, 3, 4, 5] {
             // Lengths around segment boundaries, incl. len < world.
@@ -564,7 +1186,7 @@ mod tests {
     #[test]
     fn allreduce_chunked_framing() {
         let out = run_ring(3, |mut m| {
-            m.set_chunk_elems(5); // force many frames per segment
+            m.set_chunk_elems(5); // force many chunks through the pipeline
             let mut buf = member_input(m.rank(), 100);
             m.allreduce_sum(&mut buf).unwrap();
             buf
@@ -574,6 +1196,33 @@ mod tests {
             for (a, b) in buf.iter().zip(&want) {
                 assert!((a - b).abs() < 1e-5);
             }
+        }
+    }
+
+    #[test]
+    fn overlap_off_matches_overlap_on_bitwise() {
+        let on = run_ring(4, |mut m| {
+            m.set_chunk_elems(16);
+            let mut buf = member_input(m.rank(), 200);
+            m.allreduce_sum(&mut buf).unwrap();
+            assert!(
+                m.overlap_efficiency() > 0.5,
+                "multi-chunk overlap run should pipeline: {}",
+                m.overlap_efficiency()
+            );
+            buf
+        });
+        let off = run_ring(4, |mut m| {
+            m.set_chunk_elems(16);
+            m.set_overlap(false);
+            let mut buf = member_input(m.rank(), 200);
+            m.allreduce_sum(&mut buf).unwrap();
+            assert_eq!(m.overlap_efficiency(), 0.0);
+            buf
+        });
+        // Same per-chunk summation order → bitwise-identical results.
+        for (a, b) in on.iter().zip(&off) {
+            assert_eq!(a, b);
         }
     }
 
@@ -697,6 +1346,73 @@ mod tests {
             assert_eq!(g, vec![0.0, 1.0, 2.0]);
             assert_eq!(c, vec![1.0; 5]);
         }
+    }
+
+    #[test]
+    fn kill_one_member_heals_and_resumes_from_completed_chunks() {
+        // World 3, 4 chunks of 8 elems; rank 2 dies after completing chunk
+        // 1. Survivors must finish with chunks 0–1 holding the full 3-way
+        // sum (banked work) and chunks 2–3 the survivors' 2-way sum.
+        let world = 3;
+        let len = 32;
+        let rv = Rendezvous::new(world);
+        rv.set_heartbeat_grace(Duration::from_millis(40));
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let rv = rv.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_inproc(&rv).unwrap();
+                    m.set_chunk_elems(8);
+                    m.set_timeout(Duration::from_millis(250));
+                    m.set_probe_interval(Duration::from_millis(10));
+                    let victim = m.rank() == 2;
+                    if victim {
+                        m.set_kill_after_chunk(Some(1));
+                    }
+                    let mut buf = member_input(m.rank(), len);
+                    match m.allreduce_sum(&mut buf) {
+                        Ok(()) => {
+                            assert!(!victim, "victim must not survive");
+                            Some((m.rank(), m.world(), m.generation(), m.heal_count(), buf))
+                        }
+                        Err(e) => {
+                            assert!(victim, "survivor failed: {e:#}");
+                            assert!(is_chaos_killed(&e), "unexpected fault: {e:#}");
+                            None // crash: drop the member without leave()
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut survivors: Vec<_> = handles
+            .into_iter()
+            .filter_map(|h| h.join().unwrap())
+            .collect();
+        survivors.sort_by_key(|s| s.0);
+        assert_eq!(survivors.len(), 2);
+        let full = reference_sum(3, len);
+        let mut partial = vec![0.0f32; len];
+        for r in [0usize, 1] {
+            for (o, v) in partial.iter_mut().zip(member_input(r, len)) {
+                *o += v;
+            }
+        }
+        for (_, w, generation, heals, buf) in &survivors {
+            assert_eq!(*w, 2, "world must shrink to the survivors");
+            assert_eq!(*generation, 1, "healing bumps the generation");
+            assert_eq!(*heals, 1);
+            for (i, v) in buf.iter().enumerate() {
+                let want = if i < 16 { full[i] } else { partial[i] };
+                assert!(
+                    (v - want).abs() < 1e-5,
+                    "elem {i}: got {v}, want {want} (full {} / partial {})",
+                    full[i],
+                    partial[i]
+                );
+            }
+        }
+        // Survivors agree bitwise.
+        assert_eq!(survivors[0].4, survivors[1].4);
     }
 
     #[test]

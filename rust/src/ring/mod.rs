@@ -14,12 +14,21 @@
 //!   stable **rank** and the full ring membership for the current
 //!   **generation**; joins and leaves bump the generation so members
 //!   re-rendezvous (the dynamic-scaling story of
-//!   [`crate::coordinator::scaling`], applied to collectives).
+//!   [`crate::coordinator::scaling`], applied to collectives). Members
+//!   heartbeat while they wait; `report_dead` heals a sealed generation by
+//!   re-ranking the survivors, and the `resume_poll` min-barrier lets them
+//!   agree where an interrupted collective resumes.
 //! * [`collectives`] — chunked ring allreduce (reduce-scatter + all-gather),
 //!   broadcast and all-gather over `f32` buffers, framed with
 //!   [`crate::wire`] and working identically over `inproc://` channels
 //!   (thread backend, [`crate::cluster::LocalBackend`]) and `tcp://` RPC
-//!   (OS-process backend, [`crate::cluster::ProcBackend`]).
+//!   (OS-process backend, [`crate::cluster::ProcBackend`]). Allreduce and
+//!   broadcast execute an explicit per-chunk [`CollectiveStep`] plan with
+//!   recorded progress, so a member death mid-collective **heals**: the
+//!   generation bumps, survivors re-rank and resume from the first chunk
+//!   any of them had not completed. The chunk pipeline is double-buffered
+//!   (chunk *k+1*'s traffic in flight while chunk *k* reduces) — see
+//!   [`RingMember::overlap_efficiency`].
 //!
 //! ```
 //! use fiber::ring::{Rendezvous, RingMember};
@@ -44,5 +53,7 @@
 pub mod collectives;
 pub mod topology;
 
-pub use collectives::RingMember;
+pub use collectives::{
+    allreduce_plan, is_chaos_killed, CollectiveStep, RingError, RingMember, StepPhase,
+};
 pub use topology::{MemberInfo, Rendezvous, RendezvousClient, RingView};

@@ -1,4 +1,5 @@
-//! The ring rendezvous service: ranks, membership and generations.
+//! The ring rendezvous service: ranks, membership, generations — and,
+//! since the elastic-collectives refactor, **failure healing**.
 //!
 //! Members register with a rendezvous point (in-process `Arc` for the
 //! thread backend, [`crate::comms::rpc`] over TCP for OS-process workers),
@@ -9,6 +10,18 @@
 //! generation: members discover the bump through [`RendezvousClient::
 //! membership`] and re-register, exactly like pool workers re-fetching
 //! after a scale event in [`crate::coordinator::scaling`].
+//!
+//! Healing is the pool's pending-table story applied to rings. Members
+//! [`Rendezvous::heartbeat`] while they wait on peers; a member whose recv
+//! deadline expires calls [`Rendezvous::report_dead`]. If the accused rank
+//! has not heartbeated within the grace window the rendezvous **re-ranks
+//! the survivors of the sealed generation into a new, immediately-sealed
+//! generation** (dense ranks, same endpoints, dead member excised) — no
+//! re-registration round-trip, because the sealed membership is the
+//! archive of who survives. Survivors then agree on where to resume the
+//! interrupted collective through the [`Rendezvous::resume_poll`]
+//! min-barrier: each reports how many chunks it completed, and everyone
+//! resumes from the minimum.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -27,6 +40,10 @@ pub mod tags {
     pub const MEMBERSHIP: u32 = 2;
     pub const LEAVE: u32 = 3;
     pub const RESIZE: u32 = 4;
+    pub const HEARTBEAT: u32 = 5;
+    pub const REPORT_DEAD: u32 = 6;
+    pub const RESUME: u32 = 7;
+    pub const RESUME_MISSING: u32 = 8;
 }
 
 /// One registered member as seen by the rendezvous.
@@ -90,6 +107,24 @@ impl Decode for Membership {
     }
 }
 
+impl Membership {
+    /// Resolve this membership into the [`RingView`] of the member at
+    /// `rank` — the single place endpoint strings become [`Addr`]s, shared
+    /// by the initial join and by mid-collective healing.
+    pub fn resolve_view(&self, rank: usize) -> Result<RingView> {
+        let mut members = Vec::with_capacity(self.members.len());
+        for info in &self.members {
+            members.push(Addr::parse(&info.addr)?);
+        }
+        Ok(RingView {
+            generation: self.generation,
+            rank,
+            world: members.len(),
+            members,
+        })
+    }
+}
+
 /// A member's resolved view of a sealed ring generation.
 #[derive(Clone, Debug)]
 pub struct RingView {
@@ -112,6 +147,13 @@ impl RingView {
     }
 }
 
+/// The per-healed-generation resume barrier: every survivor reports its
+/// completed-chunk count; the minimum is released once all have reported.
+struct ResumeState {
+    expected: usize,
+    reports: HashMap<u64, u64>,
+}
+
 struct RvInner {
     world: usize,
     generation: u64,
@@ -120,6 +162,16 @@ struct RvInner {
     /// `(generation, members)` of the last sealed generation, kept across a
     /// late-join bump (see [`Membership::last_sealed`]).
     last_sealed: Option<(u64, Vec<String>)>,
+    /// Last heartbeat per data-plane endpoint. Keyed by endpoint — not by
+    /// (generation, rank) — so a live member that has not yet noticed a
+    /// heal (its view still names the old generation) keeps its liveness
+    /// protection while ranks renumber around it.
+    heartbeats: HashMap<String, Instant>,
+    /// A `report_dead` against a rank that heartbeated within this window
+    /// is rejected — protects live-but-slow members from eviction.
+    grace: Duration,
+    /// Resume barriers for healed generations, keyed by generation.
+    resume: HashMap<u64, ResumeState>,
 }
 
 fn member_infos(members: &[String]) -> Vec<MemberInfo> {
@@ -152,9 +204,19 @@ impl Rendezvous {
                 sealed: false,
                 members: Vec::new(),
                 last_sealed: None,
+                heartbeats: HashMap::new(),
+                grace: Duration::from_millis(150),
+                resume: HashMap::new(),
             }),
             changed: Condvar::new(),
         })
+    }
+
+    /// How fresh a rank's heartbeat must be for a `report_dead` against it
+    /// to be rejected (default 150 ms). Tune below the members' recv
+    /// timeout, above their probe interval.
+    pub fn set_heartbeat_grace(&self, grace: Duration) {
+        self.inner.lock().unwrap().grace = grace;
     }
 
     /// Create and publish under `inproc://name` so thread-backend members
@@ -188,6 +250,8 @@ impl Rendezvous {
             inner.last_sealed = Some((generation, archived));
             inner.generation += 1;
             inner.sealed = false;
+            // heartbeats are endpoint-keyed and deliberately survive the
+            // bump: the archived generation's members are still live.
         }
         inner.members.push(data_addr.to_string());
         let rank = (inner.members.len() - 1) as u64;
@@ -228,6 +292,7 @@ impl Rendezvous {
             // A departure invalidates old rings outright — no archived
             // snapshot may resurrect a generation missing a member.
             inner.last_sealed = None;
+            inner.heartbeats.clear();
             drop(inner);
             self.changed.notify_all();
         }
@@ -242,8 +307,110 @@ impl Rendezvous {
         inner.sealed = false;
         inner.members.clear();
         inner.last_sealed = None;
+        inner.heartbeats.clear();
         drop(inner);
         self.changed.notify_all();
+    }
+
+    /// Record liveness for the member advertising `endpoint`. Members call
+    /// this while they wait on peers (and between units of compute work),
+    /// so silence is evidence of death rather than of a long compute
+    /// phase. Endpoint-keyed on purpose: it stays valid across heals and
+    /// rank renumbering. Returns the current generation, so one heartbeat
+    /// doubles as the generation-bump probe blocked receivers poll with —
+    /// no full membership snapshot needed per probe slice.
+    pub fn heartbeat(&self, endpoint: &str) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        inner
+            .heartbeats
+            .insert(endpoint.to_string(), Instant::now());
+        inner.generation
+    }
+
+    /// Accuse `rank` of `generation` of being dead. Returns `true` when the
+    /// accusation is accepted and the ring **healed**: the survivors of the
+    /// sealed generation are re-ranked (densely, in their old rank order)
+    /// into a new generation that seals immediately, and a resume barrier
+    /// is opened for it (see [`Rendezvous::resume_poll`]). Returns `false`
+    /// when the report is stale (generation already moved on), the ring is
+    /// not sealed, the rank is out of range, or the accused heartbeated
+    /// within the grace window — in the last case the reporter should keep
+    /// waiting and retry.
+    pub fn report_dead(&self, generation: u64, rank: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.generation != generation || !inner.sealed {
+            return false;
+        }
+        if rank as usize >= inner.members.len() {
+            return false;
+        }
+        if let Some(seen) = inner.heartbeats.get(&inner.members[rank as usize]) {
+            if seen.elapsed() < inner.grace {
+                return false; // alive by heartbeat — reject the accusation
+            }
+        }
+        inner.members.remove(rank as usize);
+        inner.generation += 1;
+        // The dead generation must not be resurrected from the archive.
+        inner.last_sealed = None;
+        // Drop liveness records for endpoints no longer in the ring (the
+        // dead member's among them); survivors' records stay valid.
+        let live: Vec<String> = inner.members.clone();
+        inner.heartbeats.retain(|addr, _| live.contains(addr));
+        let expected = inner.members.len();
+        if expected == 0 {
+            // The sole member died: nothing survives to resume. The next
+            // generation forms from scratch (world unchanged).
+            inner.sealed = false;
+        } else {
+            inner.sealed = true;
+            inner.world = expected;
+            let healed = inner.generation;
+            inner.resume.retain(|g, _| g + 8 > healed);
+            inner.resume.insert(
+                healed,
+                ResumeState {
+                    expected,
+                    reports: HashMap::new(),
+                },
+            );
+        }
+        drop(inner);
+        self.changed.notify_all();
+        true
+    }
+
+    /// The healed-generation resume barrier. Each survivor of `generation`
+    /// reports the number of collective chunks it had fully completed when
+    /// the failure hit; once every survivor has reported, everyone receives
+    /// the **minimum** — the chunk index the collective resumes from.
+    /// Returns `None` while reports are still outstanding (poll again) or
+    /// when `generation` has no open barrier. Re-reports from the same rank
+    /// overwrite idempotently.
+    pub fn resume_poll(&self, generation: u64, rank: u64, completed: u64) -> Option<u64> {
+        let mut inner = self.inner.lock().unwrap();
+        let st = inner.resume.get_mut(&generation)?;
+        st.reports.insert(rank, completed);
+        if st.reports.len() >= st.expected {
+            st.reports.values().min().copied()
+        } else {
+            None
+        }
+    }
+
+    /// Ranks of `generation` that have not reported into its resume
+    /// barrier yet — `None` when the generation has no open barrier.
+    /// Lets barrier waiters accuse a member that died *between* the first
+    /// death and the barrier (a second simultaneous failure) instead of
+    /// waiting on a corpse forever.
+    pub fn resume_missing(&self, generation: u64) -> Option<Vec<u64>> {
+        let inner = self.inner.lock().unwrap();
+        let st = inner.resume.get(&generation)?;
+        Some(
+            (0..st.expected as u64)
+                .filter(|r| !st.reports.contains_key(r))
+                .collect(),
+        )
     }
 
     /// Block until the given generation seals (or any later generation
@@ -311,6 +478,24 @@ impl Rendezvous {
                     let world: u64 = wire::from_bytes(payload).map_err(|e| e.to_string())?;
                     rv.resize(world as usize);
                     Ok(Vec::new())
+                }
+                tags::HEARTBEAT => {
+                    let endpoint: String = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.heartbeat(&endpoint)))
+                }
+                tags::REPORT_DEAD => {
+                    let (generation, rank): (u64, u64) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.report_dead(generation, rank)))
+                }
+                tags::RESUME => {
+                    let (generation, rank, completed): (u64, u64, u64) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.resume_poll(generation, rank, completed)))
+                }
+                tags::RESUME_MISSING => {
+                    let generation: u64 = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.resume_missing(generation)))
                 }
                 t => Err(format!("bad rendezvous rpc tag {t}")),
             }),
@@ -385,6 +570,47 @@ impl RendezvousClient {
         }
     }
 
+    /// Record liveness; returns the rendezvous' current generation (see
+    /// [`Rendezvous::heartbeat`]).
+    pub fn heartbeat(&self, endpoint: &str) -> Result<u64> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.heartbeat(endpoint)),
+            RendezvousClient::Remote(cli) => {
+                cli.call_typed(tags::HEARTBEAT, &endpoint.to_string())
+            }
+        }
+    }
+
+    /// Accuse a rank of being dead (see [`Rendezvous::report_dead`]).
+    pub fn report_dead(&self, generation: u64, rank: u64) -> Result<bool> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.report_dead(generation, rank)),
+            RendezvousClient::Remote(cli) => {
+                cli.call_typed(tags::REPORT_DEAD, &(generation, rank))
+            }
+        }
+    }
+
+    /// Poll the healed-generation resume barrier (see
+    /// [`Rendezvous::resume_poll`]).
+    pub fn resume_poll(&self, generation: u64, rank: u64, completed: u64) -> Result<Option<u64>> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.resume_poll(generation, rank, completed)),
+            RendezvousClient::Remote(cli) => {
+                cli.call_typed(tags::RESUME, &(generation, rank, completed))
+            }
+        }
+    }
+
+    /// Ranks still missing from a resume barrier (see
+    /// [`Rendezvous::resume_missing`]).
+    pub fn resume_missing(&self, generation: u64) -> Result<Option<Vec<u64>>> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.resume_missing(generation)),
+            RendezvousClient::Remote(cli) => cli.call_typed(tags::RESUME_MISSING, &generation),
+        }
+    }
+
     /// Register `data_addr` and block until the generation seals, returning
     /// the member's resolved [`RingView`]. Errors if the generation bumps
     /// mid-wait (caller should retry) or `timeout` elapses.
@@ -428,16 +654,7 @@ impl RendezvousClient {
                 }
             }
         };
-        let mut members = Vec::with_capacity(m.members.len());
-        for info in &m.members {
-            members.push(Addr::parse(&info.addr)?);
-        }
-        Ok(RingView {
-            generation,
-            rank: rank as usize,
-            world: members.len(),
-            members,
-        })
+        m.resolve_view(rank as usize)
     }
 }
 
@@ -596,6 +813,94 @@ mod tests {
         let bytes = wire::to_bytes(&m);
         let back: Membership = wire::from_bytes(&bytes).unwrap();
         assert_eq!(m, back);
+    }
+
+    #[test]
+    fn report_dead_heals_with_dense_survivor_ranks() {
+        let rv = Rendezvous::new(3);
+        rv.set_heartbeat_grace(Duration::from_millis(20));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register("inproc://c");
+        assert!(rv.membership().sealed);
+        // Rank 1 dies: survivors re-rank densely, generation bumps, sealed.
+        assert!(rv.report_dead(0, 1));
+        let m = rv.membership();
+        assert_eq!(m.generation, 1);
+        assert!(m.sealed);
+        assert_eq!(m.world, 2);
+        let addrs: Vec<_> = m.members.iter().map(|i| i.addr.as_str()).collect();
+        assert_eq!(addrs, vec!["inproc://a", "inproc://c"]);
+        for (i, info) in m.members.iter().enumerate() {
+            assert_eq!(info.rank, i as u64, "ranks must stay dense");
+        }
+        // Stale report against the old generation is a no-op.
+        assert!(!rv.report_dead(0, 0));
+        assert_eq!(rv.membership().generation, 1);
+    }
+
+    #[test]
+    fn report_dead_rejected_within_heartbeat_grace() {
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_secs(10));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.heartbeat("inproc://b");
+        assert!(!rv.report_dead(0, 1), "fresh heartbeat must veto the report");
+        assert_eq!(rv.membership().generation, 0);
+        // Without a heartbeat on record the report is accepted.
+        assert!(rv.report_dead(0, 0));
+        assert_eq!(rv.membership().generation, 1);
+        // The endpoint-keyed heartbeat still protects b after the heal and
+        // rank renumbering (b is now rank 0 of generation 1).
+        assert!(!rv.report_dead(1, 0), "stale-view member must stay protected");
+    }
+
+    #[test]
+    fn resume_barrier_releases_min_once_all_report() {
+        let rv = Rendezvous::new(3);
+        rv.set_heartbeat_grace(Duration::from_millis(1));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register("inproc://c");
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(rv.report_dead(0, 2));
+        // Two survivors: barrier holds until both report, then min wins.
+        assert_eq!(rv.resume_poll(1, 0, 7), None);
+        assert_eq!(rv.resume_poll(1, 0, 7), None, "re-report is idempotent");
+        assert_eq!(rv.resume_poll(1, 1, 3), Some(3));
+        assert_eq!(rv.resume_poll(1, 0, 7), Some(3), "late re-poll still sees the min");
+        // No barrier for generations that never healed.
+        assert_eq!(rv.resume_poll(0, 0, 0), None);
+    }
+
+    #[test]
+    fn resume_missing_names_unreported_ranks() {
+        let rv = Rendezvous::new(3);
+        rv.set_heartbeat_grace(Duration::from_millis(1));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register("inproc://c");
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(rv.report_dead(0, 0));
+        assert_eq!(rv.resume_missing(1), Some(vec![0, 1]));
+        assert_eq!(rv.resume_poll(1, 1, 9), None);
+        assert_eq!(rv.resume_missing(1), Some(vec![0]));
+        assert_eq!(rv.resume_missing(0), None, "no barrier for unhealed generations");
+    }
+
+    #[test]
+    fn healing_rpc_roundtrip() {
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_millis(1));
+        let srv = rv.serve_rpc("127.0.0.1:0").unwrap();
+        let cli = RendezvousClient::connect(&Addr::Tcp(srv.local_addr())).unwrap();
+        rv.register("tcp://127.0.0.1:7101");
+        rv.register("tcp://127.0.0.1:7102");
+        cli.heartbeat("tcp://127.0.0.1:7101").unwrap();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(cli.report_dead(0, 1).unwrap());
+        assert_eq!(cli.resume_poll(1, 0, 4).unwrap(), Some(4));
     }
 
     #[test]

@@ -172,6 +172,102 @@ fn map_order_is_invariant_to_scheduling() {
     }
 }
 
+/// Ring-topology generations: any interleaving of join/leave/seal/resize/
+/// report_dead/heartbeat yields dense unique ranks, unique endpoints, a
+/// monotonically increasing generation, and seal/world consistency — the
+/// invariants the elastic collectives' healing path leans on.
+#[test]
+fn ring_generations_monotonic_and_ranks_dense_under_random_interleavings() {
+    use fiber::ring::Rendezvous;
+    use std::collections::HashSet;
+
+    for seed in 0..80u64 {
+        let mut rng = Rng::new(seed ^ 0x0516);
+        let rv = Rendezvous::new(1 + rng.below(4));
+        // Zero grace: every report against a sealed ring is accepted, so
+        // the healing transition itself gets exercised deterministically.
+        rv.set_heartbeat_grace(Duration::from_millis(0));
+        let mut endpoint_seq = 0u64;
+        let mut last_generation = 0u64;
+        for step in 0..300 {
+            match rng.below(10) {
+                0..=3 => {
+                    rv.register(&format!("inproc://prop-{seed}-{endpoint_seq}"));
+                    endpoint_seq += 1;
+                }
+                4 => {
+                    let m = rv.membership();
+                    rv.leave(m.generation, 0);
+                }
+                5 => {
+                    rv.resize(1 + rng.below(5));
+                }
+                6..=7 => {
+                    let m = rv.membership();
+                    if !m.members.is_empty() {
+                        let r = rng.below(m.members.len()) as u64;
+                        let dead = m.members[r as usize].addr.clone();
+                        if rv.report_dead(m.generation, r) {
+                            let healed = rv.membership();
+                            assert_eq!(
+                                healed.generation,
+                                m.generation + 1,
+                                "healing bumps exactly once (seed {seed} step {step})"
+                            );
+                            assert_eq!(healed.members.len(), m.members.len() - 1);
+                            assert!(
+                                healed.members.iter().all(|i| i.addr != dead),
+                                "dead endpoint excised (seed {seed} step {step})"
+                            );
+                        }
+                    }
+                }
+                8 => {
+                    let m = rv.membership();
+                    if !m.members.is_empty() {
+                        let addr = &m.members[rng.below(m.members.len())].addr;
+                        rv.heartbeat(addr);
+                    }
+                }
+                _ => {
+                    // Resume polls against arbitrary generations must never
+                    // disturb membership state.
+                    let g = rv.membership().generation;
+                    let _ = rv.resume_poll(g, rng.below(6) as u64, rng.below(100) as u64);
+                }
+            }
+            let m = rv.membership();
+            assert!(
+                m.generation >= last_generation,
+                "generation regressed {} -> {} (seed {seed} step {step})",
+                last_generation,
+                m.generation
+            );
+            last_generation = m.generation;
+            let mut seen = HashSet::new();
+            for (i, info) in m.members.iter().enumerate() {
+                assert_eq!(info.rank, i as u64, "ranks dense (seed {seed} step {step})");
+                assert!(
+                    seen.insert(info.addr.clone()),
+                    "duplicate endpoint (seed {seed} step {step})"
+                );
+            }
+            if m.sealed {
+                assert_eq!(
+                    m.members.len() as u64,
+                    m.world,
+                    "sealed ring world mismatch (seed {seed} step {step})"
+                );
+            } else {
+                assert!(
+                    (m.members.len() as u64) < m.world,
+                    "forming ring at/over world (seed {seed} step {step})"
+                );
+            }
+        }
+    }
+}
+
 /// Wire-codec fuzz: random bytes never panic the decoder, and encode∘decode
 /// is the identity on random valid values.
 #[test]

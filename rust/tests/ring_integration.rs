@@ -1,13 +1,18 @@
 //! Integration tests for the `fiber::ring` collective layer: allreduce
 //! correctness across world sizes 2–16, the decentralized ES update vs the
-//! centralized combine, and generation-bumping dynamic scaling.
+//! centralized combine, generation-bumping dynamic scaling, and the
+//! elastic-collectives chaos paths — kill one member mid-allreduce over
+//! both transports and verify the survivors heal, resume from completed
+//! chunks, and keep producing identical updates.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use fiber::algo::es::{register_es_tasks, EsConfig, EsMaster, EsRingNode};
 use fiber::api::pool::Pool;
+use fiber::comms::Addr;
 use fiber::coordinator::scaling::{Autoscaler, AutoscalePolicy};
-use fiber::ring::{Rendezvous, RingMember};
+use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
 
 /// Run `world` ring members on threads, collecting each member's output.
 fn run_ring<T: Send + 'static>(
@@ -180,6 +185,207 @@ fn ring_world_follows_autoscaler_and_rejoins_across_generations() {
     for (generation, world, v) in out {
         assert_eq!((generation, world, v), (1, 2, 2.0));
     }
+}
+
+/// The chaos worker: joins, configures chaos timeouts, runs one allreduce
+/// in which `victim_rank` dies after completing chunk `kill_chunk`, then —
+/// as a survivor — runs one decentralized ES iteration on the healed ring.
+/// Returns `None` for the victim, `Some((rank, world, generation, buf,
+/// theta))` for survivors.
+#[allow(clippy::type_complexity)]
+fn chaos_member(
+    mut m: RingMember,
+    len: usize,
+    victim_rank: usize,
+    kill_chunk: u64,
+) -> Option<(usize, usize, u64, Vec<f32>, Vec<f32>)> {
+    m.set_chunk_elems(8);
+    m.set_timeout(Duration::from_millis(300));
+    m.set_probe_interval(Duration::from_millis(10));
+    let victim = m.rank() == victim_rank;
+    if victim {
+        m.set_kill_after_chunk(Some(kill_chunk));
+    }
+    let mut buf = member_input(m.rank(), len);
+    match m.allreduce_sum(&mut buf) {
+        Ok(()) => {
+            assert!(!victim, "the victim must not survive its own chaos kill");
+        }
+        Err(e) => {
+            assert!(victim, "survivor failed: {e:#}");
+            assert!(is_chaos_killed(&e), "victim saw a non-chaos fault: {e:#}");
+            return None; // simulate the crash: drop the member, no leave()
+        }
+    }
+    // Acceptance: after healing, EsRingNode still produces a finite,
+    // identical-across-ranks update on the shrunken ring.
+    let cfg = EsConfig {
+        pop: 12,
+        sigma: 0.1,
+        lr: 0.05,
+        table_size: 1 << 12,
+        eval_task: "es.eval_toy".into(),
+        ..Default::default()
+    };
+    let mut node = EsRingNode::new(cfg, vec![0.3f32; 24]);
+    node.iterate(&mut m).unwrap();
+    Some((m.rank(), m.world(), m.generation(), buf, node.theta))
+}
+
+/// Survivor-side checks shared by the inproc and TCP chaos tests.
+fn check_chaos_outcome(
+    mut survivors: Vec<(usize, usize, u64, Vec<f32>, Vec<f32>)>,
+    world: usize,
+    len: usize,
+    victim_rank: usize,
+    kill_chunk: u64,
+) {
+    survivors.sort_by_key(|s| s.0);
+    assert_eq!(survivors.len(), world - 1, "exactly one member died");
+    let full = reference_sum(world, len);
+    let mut partial = vec![0.0f32; len];
+    for r in (0..world).filter(|&r| r != victim_rank) {
+        for (o, v) in partial.iter_mut().zip(member_input(r, len)) {
+            *o += v;
+        }
+    }
+    // Chunks the victim completed before dying keep the full-generation
+    // sum (banked work); later chunks were re-reduced over the survivors.
+    let boundary = ((kill_chunk + 1) * 8) as usize;
+    for (rank, w, generation, buf, theta) in &survivors {
+        assert_eq!(*w, world - 1, "world must shrink to the survivors");
+        assert!(*generation >= 1, "healing must bump the generation");
+        for (i, v) in buf.iter().enumerate() {
+            let want = if i < boundary { full[i] } else { partial[i] };
+            assert!(
+                (v - want).abs() < 1e-4,
+                "rank {rank} elem {i}: got {v}, want {want}"
+            );
+        }
+        assert!(
+            theta.iter().all(|t| t.is_finite()),
+            "post-heal ES update must be finite"
+        );
+    }
+    for s in &survivors[1..] {
+        assert_eq!(s.3, survivors[0].3, "survivors' allreduce buffers diverge");
+        assert_eq!(s.4, survivors[0].4, "survivors' ES updates diverge");
+    }
+}
+
+#[test]
+fn chaos_kill_one_member_mid_allreduce_heals_inproc() {
+    register_es_tasks();
+    let world = 4;
+    let len = 40; // 5 chunks of 8
+    let victim_rank = 2;
+    let kill_chunk = 1u64;
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            std::thread::spawn(move || {
+                let m = RingMember::join_inproc(&rv).unwrap();
+                chaos_member(m, len, victim_rank, kill_chunk)
+            })
+        })
+        .collect();
+    let survivors: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    check_chaos_outcome(survivors, world, len, victim_rank, kill_chunk);
+}
+
+#[test]
+fn chaos_kill_one_member_mid_allreduce_heals_tcp() {
+    register_es_tasks();
+    let world = 3;
+    let len = 32; // 4 chunks of 8
+    let victim_rank = 1;
+    let kill_chunk = 1u64;
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let srv = rv.serve_rpc("127.0.0.1:0").unwrap();
+    let addr = Addr::Tcp(srv.local_addr());
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let m = RingMember::join_addr(&addr).unwrap();
+                chaos_member(m, len, victim_rank, kill_chunk)
+            })
+        })
+        .collect();
+    let survivors: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    check_chaos_outcome(survivors, world, len, victim_rank, kill_chunk);
+}
+
+#[test]
+fn es_ring_training_survives_mid_training_kill_and_reshards() {
+    register_es_tasks();
+    let world = 3;
+    let iters = 4;
+    let kill_iter = 1usize;
+    let cfg = EsConfig {
+        pop: 16,
+        sigma: 0.1,
+        lr: 0.05,
+        table_size: 1 << 12,
+        eval_task: "es.eval_toy".into(),
+        ..Default::default()
+    };
+    let theta0 = vec![0.1f32; 24];
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            let cfg = cfg.clone();
+            let theta0 = theta0.clone();
+            std::thread::spawn(move || {
+                let mut m = RingMember::join_inproc(&rv).unwrap();
+                m.set_chunk_elems(4); // several chunks even for pop-sized buffers
+                m.set_timeout(Duration::from_millis(300));
+                m.set_probe_interval(Duration::from_millis(10));
+                let victim = m.rank() == 2;
+                let mut node = EsRingNode::new(cfg, theta0);
+                node.warm_noise_table(&mut m).unwrap();
+                for i in 0..iters {
+                    if victim && i == kill_iter {
+                        m.set_kill_after_chunk(Some(1));
+                    }
+                    match node.iterate(&mut m) {
+                        Ok(_) => {}
+                        Err(e) => {
+                            assert!(victim && is_chaos_killed(&e), "unexpected: {e:#}");
+                            return None;
+                        }
+                    }
+                }
+                Some((m.rank(), m.world(), m.heal_count(), node.theta))
+            })
+        })
+        .collect();
+    let mut survivors: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    survivors.sort_by_key(|s| s.0);
+    assert_eq!(survivors.len(), 2);
+    for (_, w, heals, theta) in &survivors {
+        assert_eq!(*w, 2, "population re-shards over the survivors");
+        assert!(*heals >= 1, "at least one heal must have happened");
+        assert!(theta.iter().all(|t| t.is_finite()));
+    }
+    assert_eq!(
+        survivors[0].3, survivors[1].3,
+        "replicas must stay bitwise identical through the heal"
+    );
 }
 
 #[test]
