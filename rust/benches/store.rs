@@ -1,0 +1,143 @@
+//! By-value vs pass-by-reference Pool throughput across payload sizes,
+//! plus store-backed broadcast cold vs warm.
+//!
+//! `cargo bench --bench store` (add `-- --quick` to trim the sweep).
+//! Prints benchkit tables and writes machine-readable results to
+//! `BENCH_store.json`.
+//!
+//! The by-value column re-serializes and re-ships the full payload per
+//! task; the by-ref column ships a 24-byte `ObjRef` per task and the
+//! payload once per node — on the thread backend that degenerates to pure
+//! cache hits, which is exactly the point: task cost stops scaling with
+//! payload size. The broadcast series times a 2-node TCP fetch of one
+//! blob cold (one chunked transfer) vs warm (local cache hit), the store
+//! path a rejoining ring member takes instead of a full re-stream.
+
+use std::time::Instant;
+
+use fiber::api::pool::Pool;
+use fiber::benchkit::{measure, Json, Table};
+use fiber::coordinator::register_task;
+use fiber::store::{ObjRef, StoreNode};
+
+fn payload(mb: usize) -> Vec<u8> {
+    (0..mb << 20).map(|i| (i % 253) as u8 ^ mb as u8).collect()
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    register_task("bench.byval_len", |v: Vec<u8>| Ok::<u64, String>(v.len() as u64));
+    register_task("bench.byref_len", |r: ObjRef<Vec<u8>>| {
+        let v: Vec<u8> = r.get().map_err(|e| e.to_string())?;
+        Ok::<u64, String>(v.len() as u64)
+    });
+
+    let node = StoreNode::host(1 << 30);
+    let pool = Pool::builder()
+        .processes(4)
+        .store(node.clone())
+        .build()
+        .expect("pool");
+
+    let payload_mbs: &[usize] = if quick { &[1, 8] } else { &[1, 8, 64] };
+    let samples = if quick { 3 } else { 5 };
+    let mut table = Table::new(
+        "Pool map: by-value vs by-ref (per map wall)",
+        "payload",
+        vec!["tasks".into(), "by-value".into(), "by-ref".into(), "speedup".into()],
+    );
+    let mut records = Vec::new();
+    for &mb in payload_mbs {
+        // Cap queued bytes at ~256 MB so the by-value path stays honest
+        // without exhausting the box.
+        let tasks = (256 / mb).clamp(4, 64);
+        let data = payload(mb);
+        let want = data.len() as u64;
+        let byval = measure(1, samples, || {
+            let out: Vec<u64> = pool
+                .map_chunked("bench.byval_len", (0..tasks).map(|_| data.clone()), 1)
+                .expect("by-value map");
+            assert!(out.iter().all(|&l| l == want));
+        });
+        let r = pool.put_ref(&data).expect("put_ref");
+        let byref = measure(1, samples, || {
+            let out: Vec<u64> = pool
+                .map_chunked("bench.byref_len", (0..tasks).map(|_| r), 1)
+                .expect("by-ref map");
+            assert!(out.iter().all(|&l| l == want));
+        });
+        let speedup = byval.mean() / byref.mean().max(1e-9);
+        println!(
+            "{mb:>3} MB × {tasks:>2} tasks   by-value {:>9.2}ms   by-ref {:>9.2}ms   \
+             {speedup:>5.1}×",
+            byval.mean() * 1e3,
+            byref.mean() * 1e3,
+        );
+        table.add_row(
+            format!("{mb}MB"),
+            vec![
+                Some(tasks as f64),
+                Some(byval.mean()),
+                Some(byref.mean()),
+                Some(speedup),
+            ],
+        );
+        records.push(Json::Obj(vec![
+            ("payload_mb".into(), Json::num(mb as f64)),
+            ("tasks".into(), Json::num(tasks as f64)),
+            ("byval_mean_s".into(), Json::num(byval.mean())),
+            ("byval_std_s".into(), Json::num(byval.std())),
+            ("byref_mean_s".into(), Json::num(byref.mean())),
+            ("byref_std_s".into(), Json::num(byref.std())),
+            ("speedup".into(), Json::num(speedup)),
+        ]));
+    }
+    table.print();
+
+    // Broadcast cold vs warm over a real TCP hop: node A serves the blob,
+    // node B fetches it chunk-by-chunk (cold), then re-reads it (warm).
+    let bcast_mb = if quick { 4 } else { 16 };
+    let blob = payload(bcast_mb);
+    let a = StoreNode::host(1 << 30);
+    let ep = a.serve("127.0.0.1:0").expect("serve");
+    let id = a.put_bytes(&blob).expect("put");
+    let b = StoreNode::connect(&ep, 1 << 30).expect("connect");
+    let t = Instant::now();
+    let fetched = b.get_bytes(id).expect("cold fetch");
+    let cold_s = t.elapsed().as_secs_f64();
+    assert_eq!(fetched.len(), blob.len());
+    let t = Instant::now();
+    let cached = b.get_bytes(id).expect("warm fetch");
+    let warm_s = t.elapsed().as_secs_f64();
+    assert_eq!(cached.len(), blob.len());
+    let (cold_transfers, warm_transfers) = (1u64, b.transfers() - 1);
+    println!(
+        "\nstore broadcast path, {bcast_mb} MB blob over TCP: cold {:.2}ms ({} transfer), \
+         warm {:.3}ms ({} transfers — cache hit)",
+        cold_s * 1e3,
+        cold_transfers,
+        warm_s * 1e3,
+        warm_transfers,
+    );
+
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::str("store")),
+        ("quick".into(), Json::Bool(quick)),
+        ("pool".into(), Json::Arr(records)),
+        (
+            "broadcast".into(),
+            Json::Obj(vec![
+                ("payload_mb".into(), Json::num(bcast_mb as f64)),
+                ("cold_s".into(), Json::num(cold_s)),
+                ("warm_s".into(), Json::num(warm_s)),
+                ("cold_transfers".into(), Json::num(cold_transfers as f64)),
+                ("warm_transfers".into(), Json::num(warm_transfers as f64)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_store.json";
+    match doc.write(path) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

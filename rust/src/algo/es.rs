@@ -20,7 +20,7 @@ use crate::util::Rng;
 use crate::wire;
 
 use super::nn::{Mlp, WALKER_SIZES};
-use super::noise::{shared_table, shared_table_broadcast};
+use super::noise::{shared_table, shared_table_broadcast, shared_table_broadcast_store};
 
 /// ES hyper-parameters.
 #[derive(Clone, Debug)]
@@ -436,6 +436,20 @@ impl EsRingNode {
     /// member must call it before its first [`EsRingNode::iterate`].
     pub fn warm_noise_table(&self, member: &mut RingMember) -> Result<()> {
         shared_table_broadcast(member, self.cfg.noise_seed, self.cfg.table_size)?;
+        Ok(())
+    }
+
+    /// [`EsRingNode::warm_noise_table`] through the distributed object
+    /// store: only a 24-byte content id rides the ring, and members that
+    /// already hold the table blob (post-heal retries, rejoining
+    /// replacements, earlier runs with the same seed) cache-hit instead of
+    /// re-streaming `O(table_size)` floats. Same SPMD contract.
+    pub fn warm_noise_table_store(
+        &self,
+        member: &mut RingMember,
+        node: &crate::store::StoreNode,
+    ) -> Result<()> {
+        shared_table_broadcast_store(member, node, self.cfg.noise_seed, self.cfg.table_size)?;
         Ok(())
     }
 

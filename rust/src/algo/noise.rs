@@ -118,6 +118,36 @@ pub fn shared_table_broadcast(
     Ok(table)
 }
 
+/// [`shared_table_broadcast`] through the distributed object store: the
+/// seed rank publishes the table once ([`crate::store::StoreNode::put_bytes`])
+/// and the ring circulates a 24-byte content id. Members that already hold
+/// the blob — a replica retrying after a heal, a rejoining replacement, or
+/// any node that warmed the same `(seed, size)` before — **cache-hit** and
+/// move no table bytes at all; cold members fetch it chunk-by-chunk from
+/// whichever peers hold it. A collective with the same SPMD contract as
+/// [`shared_table_broadcast`].
+pub fn shared_table_broadcast_store(
+    member: &mut RingMember,
+    node: &crate::store::StoreNode,
+    seed: u64,
+    size: usize,
+) -> Result<Arc<NoiseTable>> {
+    let mut buf = if member.rank() == 0 {
+        shared_table(seed, size).data().to_vec()
+    } else {
+        vec![0.0f32; size]
+    };
+    let id = member.store_broadcast(node, 0, &mut buf)?;
+    // The table must outlive any LRU pressure from rollout payloads.
+    node.pin(id);
+    let mut tables = TABLES.lock().unwrap();
+    let table = tables
+        .entry((seed, size))
+        .or_insert_with(|| Arc::new(NoiseTable::from_data(seed, buf)))
+        .clone();
+    Ok(table)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -185,6 +215,36 @@ mod tests {
         }
         // And the broadcast result landed in the process-wide cache.
         assert_eq!(shared_table(seed, size).slice(17, 64), want);
+    }
+
+    #[test]
+    fn store_backed_table_broadcast_matches_generated() {
+        use crate::ring::Rendezvous;
+        use crate::store::StoreNode;
+        let world = 3;
+        let seed = 987_654u64; // unique: TABLES is process-global
+        let size = 2048usize;
+        // Thread backend: every member shares one node, so the whole warm
+        // phase is local — zero transfers, identical table.
+        let node = StoreNode::host(64 << 20);
+        let rv = Rendezvous::new(world);
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let rv = rv.clone();
+                let node = node.clone();
+                std::thread::spawn(move || {
+                    let mut m = crate::ring::RingMember::join_inproc(&rv).unwrap();
+                    let t = shared_table_broadcast_store(&mut m, &node, seed, size).unwrap();
+                    t.slice(33, 64)
+                })
+            })
+            .collect();
+        let want = NoiseTable::new(seed, size).slice(33, 64);
+        for h in handles {
+            assert_eq!(h.join().unwrap(), want);
+        }
+        assert_eq!(node.transfers(), 0, "a shared node never fetches");
+        assert_eq!(shared_table(seed, size).slice(33, 64), want);
     }
 
     #[test]

@@ -169,6 +169,72 @@ impl PpoTrainer {
         obs: &mut Vec<Vec<f32>>,
         runtime: Option<&Runtime>,
     ) -> Result<PpoIterStats> {
+        let (buf, adv, ret) = self.rollout_phase(vecenv, obs, runtime, None)?;
+        self.run_epochs(&buf, &adv, &ret, |tr, mb| tr.update_minibatch(mb, runtime))
+    }
+
+    /// Data-parallel [`PpoTrainer::train_iteration`] over a ring: the same
+    /// rollout/GAE/epoch schedule, but every minibatch step is a
+    /// ring-averaged [`PpoTrainer::update_minibatch_ring`], so one step
+    /// covers `world × n_envs` environments. Replicas must share the
+    /// config and seed (identical initial parameters and an identical
+    /// minibatch *count* per iteration — the SPMD contract) while driving
+    /// **distinct** environment streams (different [`VecEnv::reset`]
+    /// seeds). The rollout phase heartbeats the ring between environment
+    /// steps so a slow simulation is not mistaken for a dead member, and
+    /// the averaging heals: replicas surviving a mid-collective death
+    /// finish the iteration over the shrunk world.
+    pub fn train_iteration_ring(
+        &mut self,
+        vecenv: &VecEnv,
+        obs: &mut Vec<Vec<f32>>,
+        runtime: Option<&Runtime>,
+        member: &mut crate::ring::RingMember,
+    ) -> Result<PpoIterStats> {
+        let (buf, adv, ret) = self.rollout_phase(vecenv, obs, runtime, Some(&*member))?;
+        self.run_epochs(&buf, &adv, &ret, |tr, mb| tr.update_minibatch_ring(mb, member))
+    }
+
+    /// The epoch/minibatch schedule shared by the single-node and ring
+    /// update loops — one definition, so the two paths cannot silently
+    /// diverge in minibatch count or loss accounting (the SPMD contract
+    /// the ring path depends on).
+    fn run_epochs(
+        &mut self,
+        buf: &RolloutBuf,
+        adv: &[f32],
+        ret: &[f32],
+        mut update: impl FnMut(&mut Self, &MiniBatch) -> Result<(f32, f32, f32)>,
+    ) -> Result<PpoIterStats> {
+        let total = buf.obs.len();
+        let mut idx: Vec<usize> = (0..total).collect();
+        let (mut pi_l, mut v_l, mut ent) = (0.0f32, 0.0f32, 0.0f32);
+        let mut n_mb = 0;
+        for _ in 0..self.cfg.epochs {
+            self.rng.shuffle(&mut idx);
+            for chunk in idx.chunks(self.cfg.minibatch) {
+                let mb = self.gather_minibatch(chunk, buf, adv, ret);
+                let (pl, vl, en) = update(self, &mb)?;
+                pi_l += pl;
+                v_l += vl;
+                ent += en;
+                n_mb += 1;
+            }
+        }
+        Ok(self.finish_iteration(pi_l, v_l, ent, n_mb))
+    }
+
+    /// The environment + GAE phase shared by the single-node and ring
+    /// training loops. `member`, when given, is heartbeated once per
+    /// environment step (rollouts are the long compute phase — exactly the
+    /// [`crate::algo::es::EsRingNode`] cadence).
+    fn rollout_phase(
+        &mut self,
+        vecenv: &VecEnv,
+        obs: &mut Vec<Vec<f32>>,
+        runtime: Option<&Runtime>,
+        member: Option<&crate::ring::RingMember>,
+    ) -> Result<(RolloutBuf, Vec<f32>, Vec<f32>)> {
         let cfg = self.cfg.clone();
         let mut buf = RolloutBuf {
             obs: Vec::with_capacity(cfg.horizon * cfg.n_envs),
@@ -180,6 +246,9 @@ impl PpoTrainer {
         };
         // ---- environment phase ------------------------------------------
         for _ in 0..cfg.horizon {
+            if let Some(m) = member {
+                m.heartbeat_now()?;
+            }
             let (actions, logps, values) = self.act(obs, runtime)?;
             let (next_obs, rewards, dones) = vecenv.step(&actions)?;
             for e in 0..cfg.n_envs {
@@ -215,22 +284,11 @@ impl PpoTrainer {
         let var = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / adv.len() as f32;
         let std = var.sqrt().max(1e-8);
         let adv: Vec<f32> = adv.iter().map(|a| (a - mean) / std).collect();
-        // ---- update epochs -----------------------------------------------
-        let total = buf.obs.len();
-        let mut idx: Vec<usize> = (0..total).collect();
-        let (mut pi_l, mut v_l, mut ent) = (0.0f32, 0.0f32, 0.0f32);
-        let mut n_mb = 0;
-        for _ in 0..cfg.epochs {
-            self.rng.shuffle(&mut idx);
-            for chunk in idx.chunks(cfg.minibatch) {
-                let mb = self.gather_minibatch(chunk, &buf, &adv, &ret);
-                let (pl, vl, en) = self.update_minibatch(&mb, runtime)?;
-                pi_l += pl;
-                v_l += vl;
-                ent += en;
-                n_mb += 1;
-            }
-        }
+        Ok((buf, adv, ret))
+    }
+
+    /// Book-keeping shared by both update loops.
+    fn finish_iteration(&mut self, pi_l: f32, v_l: f32, ent: f32, n_mb: usize) -> PpoIterStats {
         self.iteration += 1;
         let recent: Vec<f32> = self
             .finished_returns
@@ -244,15 +302,15 @@ impl PpoTrainer {
         } else {
             recent.iter().sum::<f32>() / recent.len() as f32
         };
-        Ok(PpoIterStats {
+        PpoIterStats {
             iteration: self.iteration,
-            frames: (cfg.horizon * cfg.n_envs) as u64,
+            frames: (self.cfg.horizon * self.cfg.n_envs) as u64,
             mean_episode_reward: mean_ep,
             episodes: self.finished_returns.len(),
             pi_loss: pi_l / n_mb as f32,
             v_loss: v_l / n_mb as f32,
             entropy: ent / n_mb as f32,
-        })
+        }
     }
 
     /// Build a fixed-size minibatch (padding by re-sampling earlier indices
@@ -758,6 +816,47 @@ mod tests {
         let params: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(params[0], params[1], "replicas must not diverge");
         assert_eq!(params[1], params[2], "replicas must not diverge");
+        assert_ne!(params[0], init, "training must move the parameters");
+    }
+
+    #[test]
+    fn ring_train_iteration_keeps_replicas_identical() {
+        use crate::ring::{Rendezvous, RingMember};
+        // Same config/seed (identical θ₀ and minibatch schedule), distinct
+        // env streams: after ring-averaged iterations the replicas must
+        // hold bitwise-identical parameters.
+        let cfg = PpoConfig {
+            n_envs: 2,
+            horizon: 16,
+            epochs: 2,
+            minibatch: 16,
+            ..Default::default()
+        };
+        let init = PpoTrainer::new(cfg.clone()).net.params;
+        let rv = Rendezvous::new(2);
+        let handles: Vec<_> = (0..2u64)
+            .map(|i| {
+                let rv = rv.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_inproc(&rv).unwrap();
+                    let hub = QueueHub::new();
+                    let be = LocalBackend::new();
+                    let ve = VecEnv::breakout(&be, &hub, cfg.n_envs, 1).unwrap();
+                    let mut tr = PpoTrainer::new(cfg);
+                    let mut obs = ve.reset(100 + i).unwrap();
+                    for _ in 0..2 {
+                        let s = tr.train_iteration_ring(&ve, &mut obs, None, &mut m).unwrap();
+                        assert!(s.pi_loss.is_finite() && s.v_loss.is_finite());
+                        assert_eq!(s.frames, 32);
+                    }
+                    ve.close();
+                    tr.net.params
+                })
+            })
+            .collect();
+        let params: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(params[0], params[1], "ring-trained replicas must not diverge");
         assert_ne!(params[0], init, "training must move the parameters");
     }
 

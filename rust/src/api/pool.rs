@@ -28,6 +28,7 @@ use crate::coordinator::batch::{make_chunks, register_chunk_runner, CHUNK_FN};
 use crate::coordinator::pool_server::{FetchReply, PoolServer, ResultMsg, WorkerId};
 use crate::coordinator::scaling::{Autoscaler, AutoscalePolicy};
 use crate::coordinator::task::{execute_registered, Task, TaskId};
+use crate::store::{ObjRef, StoreNode};
 use crate::wire::{self, Decode, Encode};
 
 /// How a finished map result is delivered.
@@ -133,6 +134,10 @@ struct PoolShared {
     /// Leader RPC address (proc backend); None for thread pools.
     rpc_addr: Option<std::net::SocketAddr>,
     fetch_timeout_ms: u64,
+    /// Object-store node for pass-by-reference payloads ([`ObjRef`]).
+    store: Option<Arc<StoreNode>>,
+    /// The store's served endpoint, handed to proc workers via `--store`.
+    store_addr: Option<String>,
 }
 
 /// Builder for [`Pool`].
@@ -144,6 +149,7 @@ pub struct PoolBuilder {
     max_restarts: usize,
     autoscale: Option<AutoscalePolicy>,
     fetch_timeout_ms: u64,
+    store: Option<Arc<StoreNode>>,
 }
 
 impl Default for PoolBuilder {
@@ -156,6 +162,7 @@ impl Default for PoolBuilder {
             max_restarts: 64,
             autoscale: None,
             fetch_timeout_ms: 200,
+            store: None,
         }
     }
 }
@@ -190,6 +197,18 @@ impl PoolBuilder {
 
     pub fn autoscale(mut self, p: AutoscalePolicy) -> Self {
         self.autoscale = Some(p);
+        self
+    }
+
+    /// Attach an object-store node: task payloads and results can then
+    /// pass [`ObjRef`] handles instead of values. The node is installed as
+    /// this process's global store (what [`ObjRef::get`] resolves through
+    /// in thread workers), and with [`PoolBuilder::proc_workers`] it is
+    /// served over TCP and handed to every worker process via `--store`,
+    /// so a payload crosses to each worker node **once**, not once per
+    /// task.
+    pub fn store(mut self, node: Arc<StoreNode>) -> Self {
+        self.store = Some(node);
         self
     }
 
@@ -230,6 +249,18 @@ impl Pool {
         } else {
             None
         };
+        let store_addr = match (&b.store, b.proc_workers) {
+            (Some(node), true) => Some(node.serve("127.0.0.1:0")?),
+            _ => None,
+        };
+        if let Some(node) = &b.store {
+            if !crate::store::install_node_default(node) {
+                log::warn!(
+                    "pool store node not installed as process-global: a different \
+                     node is already installed (ObjRef::get keeps resolving there)"
+                );
+            }
+        }
         let shared = Arc::new(PoolShared {
             server: server.clone(),
             backend,
@@ -243,6 +274,8 @@ impl Pool {
             max_restarts: b.max_restarts,
             rpc_addr: rpc.as_ref().map(|r| r.local_addr()),
             fetch_timeout_ms: b.fetch_timeout_ms,
+            store: b.store.clone(),
+            store_addr,
         });
         for _ in 0..b.processes {
             spawn_worker(&shared)?;
@@ -410,6 +443,28 @@ impl Pool {
         RawMapHandle { shared: shared_map }.wait()
     }
 
+    /// Store a payload once and get a pass-by-reference handle to map
+    /// over: every task carries 24 bytes instead of the value, the first
+    /// task on each worker node faults the blob in (one transfer per
+    /// node), and every later task there is a local cache hit. Uses the
+    /// pool's store node ([`PoolBuilder::store`]) or the process-global
+    /// one.
+    pub fn put_ref<T: Encode>(&self, v: &T) -> Result<ObjRef<T>> {
+        let node = match &self.shared.store {
+            Some(n) => n.clone(),
+            None => crate::store::node().context(
+                "pool has no store node: pass one through PoolBuilder::store",
+            )?,
+        };
+        let r = node.put(v)?;
+        // Map arguments must outlive LRU churn from concurrent puts (e.g.
+        // tasks storing by-ref results into the same node): hold a
+        // reference so the blob stays eviction-ineligible. Release with
+        // `StoreNode::decref(r.id())` when the handle is retired.
+        node.incref(r.id());
+        Ok(r)
+    }
+
     /// Run one task and wait for its result.
     pub fn apply<I, O>(&self, fn_name: &str, item: I) -> Result<O>
     where
@@ -548,16 +603,18 @@ impl<O: Decode> Iterator for ImapIter<O> {
 fn spawn_worker(shared: &Arc<PoolShared>) -> Result<WorkerId> {
     let wid = WorkerId(shared.next_worker.fetch_add(1, Ordering::Relaxed));
     let spec = if let Some(addr) = shared.rpc_addr {
-        JobSpec::command(
-            format!("fiber-worker-{}", wid.0),
-            vec![
-                "worker".into(),
-                "--leader".into(),
-                addr.to_string(),
-                "--worker".into(),
-                wid.0.to_string(),
-            ],
-        )
+        let mut args = vec![
+            "worker".into(),
+            "--leader".into(),
+            addr.to_string(),
+            "--worker".into(),
+            wid.0.to_string(),
+        ];
+        if let Some(store) = &shared.store_addr {
+            args.push("--store".into());
+            args.push(store.clone());
+        }
+        JobSpec::command(format!("fiber-worker-{}", wid.0), args)
     } else {
         let server = shared.server.clone();
         let timeout = Duration::from_millis(shared.fetch_timeout_ms);
@@ -1002,6 +1059,44 @@ mod tests {
         assert_eq!(out.len(), 5);
         pool.close();
         pool.join();
+    }
+
+    #[test]
+    fn map_over_objref_passes_by_reference() {
+        setup();
+        // A 400 KB payload named by a 24-byte handle in each of 16 tasks.
+        // On the thread backend every resolve is a local store hit — no
+        // transfer ever happens, no matter how many tasks share the blob.
+        register_task("pool.ref_sum", |(r, bias): (ObjRef<Vec<f32>>, f32)| {
+            let v: Vec<f32> = r.get().map_err(|e| e.to_string())?;
+            Ok::<f32, String>(v.iter().sum::<f32>() + bias)
+        });
+        let node = StoreNode::host(64 << 20);
+        let pool = Pool::builder()
+            .processes(4)
+            .store(node.clone())
+            .build()
+            .unwrap();
+        let payload: Vec<f32> = (0..100_000).map(|i| ((i % 7) as f32) * 0.5).collect();
+        let want_sum: f32 = payload.iter().sum();
+        let r = pool.put_ref(&payload).unwrap();
+        let out: Vec<f32> = pool
+            .map("pool.ref_sum", (0..16).map(|i| (r, i as f32)))
+            .unwrap();
+        for (i, v) in out.iter().enumerate() {
+            assert!((v - (want_sum + i as f32)).abs() < 1e-2, "task {i}: {v}");
+        }
+        assert_eq!(node.transfers(), 0, "thread workers resolve locally");
+        assert!(node.local_hits() >= 16, "every task hit the cache");
+        // Results pass by reference too: the task puts, the leader gets.
+        register_task("pool.ref_make", |n: u64| {
+            let v: Vec<u8> = (0..n).map(|i| (i % 251) as u8).collect();
+            ObjRef::put(&v).map_err(|e| e.to_string())
+        });
+        let rr: ObjRef<Vec<u8>> = pool.apply("pool.ref_make", 5000u64).unwrap();
+        let back: Vec<u8> = rr.get().unwrap();
+        assert_eq!(back.len(), 5000);
+        assert_eq!(back[250], 250u8);
     }
 
     #[test]

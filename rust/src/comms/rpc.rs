@@ -134,6 +134,10 @@ struct ClientInner {
 impl RpcClient {
     pub fn connect(addr: SocketAddr) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("rpc connect {addr}"))?;
+        Self::from_stream(stream, addr)
+    }
+
+    fn from_stream(stream: TcpStream, addr: SocketAddr) -> Result<Self> {
         stream.set_nodelay(true)?;
         let reader = stream.try_clone()?;
         Ok(Self {
@@ -143,6 +147,16 @@ impl RpcClient {
             }),
             addr,
         })
+    }
+
+    /// [`RpcClient::connect`] with a bound on the TCP connect itself.
+    /// Callers probing possibly-dead endpoints (the object store walking a
+    /// blob's location list) must fail over quickly rather than sit in the
+    /// OS default connect timeout.
+    pub fn connect_timeout(addr: SocketAddr, timeout: Duration) -> Result<Self> {
+        let stream = TcpStream::connect_timeout(&addr, timeout)
+            .with_context(|| format!("rpc connect {addr} (within {timeout:?})"))?;
+        Self::from_stream(stream, addr)
     }
 
     pub fn addr(&self) -> SocketAddr {

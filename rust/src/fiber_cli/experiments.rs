@@ -22,6 +22,7 @@ use fiber::experiments::{
 };
 use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
 use fiber::runtime::Runtime;
+use fiber::store::StoreNode;
 
 use super::Opts;
 
@@ -159,14 +160,20 @@ fn run_es_replica(
     iters: usize,
     toy: bool,
     kill: Option<(usize, usize, u64)>,
+    store: Option<Arc<StoreNode>>,
     log_every_rank: bool,
 ) -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
     m.set_timeout(replica_timeout(toy));
     let victim = kill.is_some_and(|(r, _, _)| r == m.rank());
     // Warm the table on the default (wide) chunking — the whole point of
     // the broadcast is a handful of big frames — and only then narrow the
-    // chunks so the training collectives expose chaos kill points.
-    node.warm_noise_table(&mut m)?;
+    // chunks so the training collectives expose chaos kill points. The
+    // store-backed path moves only a 24-byte content id over the ring:
+    // replicas that already cache the table blob skip the stream entirely.
+    match &store {
+        Some(sn) => node.warm_noise_table_store(&mut m, sn)?,
+        None => node.warm_noise_table(&mut m)?,
+    }
     if kill.is_some() {
         m.set_chunk_elems(chaos_chunk_elems(node.cfg.pop));
     }
@@ -249,14 +256,21 @@ fn es_decentralized_threads(opts: &Opts, world: usize, iters: usize, kill_rank: 
     let rv = Rendezvous::new(world);
     rv.set_heartbeat_grace(replica_grace(toy));
     let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
+    // `--store true`: warm the noise table through the object store (one
+    // shared node on the thread backend — the broadcast degenerates to a
+    // header exchange plus local cache hits).
+    let store = opts
+        .parse_or("store", false)?
+        .then(|| StoreNode::host(1usize << 30));
     let mut handles = Vec::new();
     for _ in 0..world {
         let rv = rv.clone();
         let replica = es_ring_replica(opts, cfg.clone())?;
+        let store = store.clone();
         handles.push(std::thread::spawn(
             move || -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
                 let m = RingMember::join_inproc(&rv)?;
-                run_es_replica(m, replica, iters, toy, kill, false)
+                run_es_replica(m, replica, iters, toy, kill, store, false)
             },
         ));
     }
@@ -299,6 +313,16 @@ fn es_decentralized_proc(opts: &Opts, world: usize, iters: usize, kill_rank: i64
     rv.set_heartbeat_grace(replica_grace(opts.parse_or("toy", false)?));
     let srv = rv.serve_rpc("127.0.0.1:0")?;
     let rv_addr = format!("tcp://{}", srv.local_addr());
+    // `--store true`: this process hosts the object-store directory; each
+    // es-node child connects its own serving node, so the noise table
+    // streams once per process cold and cache-hits warm.
+    let store_host = if opts.parse_or("store", false)? {
+        let sn = StoreNode::host(1usize << 30);
+        let ep = sn.serve("127.0.0.1:0")?;
+        Some((sn, ep))
+    } else {
+        None
+    };
     let backend = ProcBackend::new()?;
     let forward = [
         "pop", "sigma", "lr", "noise-seed", "table-size", "max-steps", "hardcore", "seed", "toy",
@@ -333,6 +357,9 @@ fn es_decentralized_proc(opts: &Opts, world: usize, iters: usize, kill_rank: i64
                     kill_chunk.to_string(),
                 ]);
             }
+            if let Some((_, ep)) = &store_host {
+                args.extend(["--store".into(), ep.clone()]);
+            }
             backend.submit(JobSpec::command(format!("es-node-{i}"), args))
         })
         .collect::<Result<Vec<_>>>()?;
@@ -360,9 +387,20 @@ pub fn es_node(opts: &Opts) -> Result<()> {
     let toy: bool = opts.parse_or("toy", false)?;
     let cfg = es_cfg_from_opts(opts)?;
     let node = es_ring_replica(opts, cfg)?;
+    // `--store tcp://…` (handed down by the parent): join the object
+    // store with a serving node so this replica's cached blobs are
+    // fetchable by its peers.
+    let store = match opts.get("store") {
+        Some(addr) => {
+            let sn = StoreNode::connect(addr, 1usize << 30).context("join object store")?;
+            sn.serve("127.0.0.1:0").context("serve store node")?;
+            Some(sn)
+        }
+        None => None,
+    };
     let m = RingMember::join_addr(&rv_addr).context("join ring")?;
     let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
-    match run_es_replica(m, node, iters, toy, kill, true)? {
+    match run_es_replica(m, node, iters, toy, kill, store, true)? {
         None => {
             // Skip destructors: a crash does not shut down cleanly.
             std::process::exit(0)
@@ -377,8 +415,14 @@ pub fn es_node(opts: &Opts) -> Result<()> {
     }
 }
 
-/// E3 (real execution): distributed PPO on breakout.
+/// E3 (real execution): distributed PPO on breakout. With
+/// `--decentralized true` the leader-centric path is replaced by
+/// data-parallel ring replicas averaging gradients through
+/// [`PpoTrainer::train_iteration_ring`].
 pub fn ppo(opts: &Opts) -> Result<()> {
+    if opts.parse_or("decentralized", false)? {
+        return ppo_decentralized(opts);
+    }
     let n_envs: usize = opts.parse_or("envs", 16)?;
     let iters: usize = opts.parse_or("iters", 50)?;
     let workers: usize = opts.parse_or("workers", 4)?;
@@ -413,6 +457,143 @@ pub fn ppo(opts: &Opts) -> Result<()> {
         );
     }
     ve.close();
+    Ok(())
+}
+
+/// One decentralized PPO replica's summary: `(rank, generation, world,
+/// heals, θ)`.
+type PpoSurvivor = (usize, u64, usize, u64, Vec<f32>);
+
+/// `fiber-cli ppo --decentralized true [--world N] [--envs N] [--iters N]
+/// [--kill-rank R --kill-iter I --kill-chunk K]` — data-parallel PPO over
+/// ring collectives, mirroring `es --decentralized`. Every replica owns
+/// `--envs` breakout environments (distinct seeds), computes local
+/// clipped-surrogate gradients, and ring-averages them, so one update
+/// covers `world × envs` environments with `O(θ)` traffic per replica.
+/// `--kill-rank` is the same chaos switch: that rank dies mid-allreduce
+/// at iteration I and the survivors heal and keep training in agreement.
+fn ppo_decentralized(opts: &Opts) -> Result<()> {
+    let world: usize = opts.parse_or("world", 4)?;
+    let iters: usize = opts.parse_or("iters", 5)?;
+    let kill_rank: i64 = opts.parse_or("kill-rank", -1i64)?;
+    let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
+    let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
+    anyhow::ensure!(world >= 1, "--world must be >= 1");
+    anyhow::ensure!(
+        kill_rank < world as i64,
+        "--kill-rank {kill_rank} out of range for world {world}"
+    );
+    let cfg = PpoConfig {
+        n_envs: opts.parse_or("envs", 4)?,
+        horizon: opts.parse_or("horizon", 64)?,
+        epochs: opts.parse_or("epochs", 2)?,
+        minibatch: opts.parse_or("minibatch", 64)?,
+        seed: opts.parse_or("seed", 0u64)?,
+        ..Default::default()
+    };
+    println!(
+        "decentralized PPO: {world} ring replicas (threads), {} envs each, {iters} iters{}",
+        cfg.n_envs,
+        if kill_rank >= 0 {
+            format!(" — chaos: kill rank {kill_rank} at iter {kill_iter} chunk {kill_chunk}")
+        } else {
+            String::new()
+        }
+    );
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_secs(5));
+    let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
+    // Narrow the gradient chunks only when chaos is armed (SPMD state), so
+    // `--kill-chunk` has real kill points inside the O(θ) allreduce.
+    let chunk_elems = (fiber::algo::nn::ppo_param_count() / 4).max(1);
+    let mut handles = Vec::new();
+    for _ in 0..world {
+        let rv = rv.clone();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || -> Result<Option<PpoSurvivor>> {
+            let mut m = RingMember::join_inproc(&rv)?;
+            m.set_timeout(Duration::from_secs(10));
+            if kill.is_some() {
+                m.set_chunk_elems(chunk_elems);
+            }
+            let victim = kill.is_some_and(|(r, _, _)| r == m.rank());
+            let hub = QueueHub::new();
+            let backend = LocalBackend::new();
+            let ve = VecEnv::breakout(&backend, &hub, cfg.n_envs, 2)?;
+            let mut tr = PpoTrainer::new(cfg);
+            // Identical parameters everywhere, distinct env streams.
+            let mut obs = ve.reset(1000 + m.rank() as u64)?;
+            for i in 0..iters {
+                if victim && kill.is_some_and(|(_, ki, _)| ki == i) {
+                    m.set_kill_after_chunk(kill.map(|(_, _, kc)| kc));
+                }
+                match tr.train_iteration_ring(&ve, &mut obs, None, &mut m) {
+                    Ok(s) => {
+                        if m.rank() == 0 {
+                            println!(
+                                "rank {}/{} gen {}: iter {:>3}  ep_reward {:>7.2}  \
+                                 pi {:.4}  v {:.4}  H {:.4}",
+                                m.rank(),
+                                m.world(),
+                                m.generation(),
+                                s.iteration,
+                                s.mean_episode_reward,
+                                s.pi_loss,
+                                s.v_loss,
+                                s.entropy,
+                            );
+                        }
+                    }
+                    Err(e) if is_chaos_killed(&e) => {
+                        println!(
+                            "rank {} chaos-killed mid-allreduce (iter {i}) — \
+                             crashing without leave()",
+                            m.rank()
+                        );
+                        ve.close();
+                        return Ok(None);
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            ve.close();
+            Ok(Some((
+                m.rank(),
+                m.generation(),
+                m.world(),
+                m.heal_count(),
+                tr.net.params,
+            )))
+        }));
+    }
+    let mut survivors: Vec<PpoSurvivor> = Vec::new();
+    for h in handles {
+        if let Some(s) = h.join().expect("replica thread")? {
+            survivors.push(s);
+        }
+    }
+    survivors.sort_by_key(|s| s.0);
+    let first = survivors.first().context("no surviving replicas")?;
+    for s in &survivors[1..] {
+        anyhow::ensure!(
+            s.4 == first.4,
+            "replicas diverged: rank {} disagrees with rank {}",
+            s.0,
+            first.0
+        );
+    }
+    anyhow::ensure!(
+        first.4.iter().all(|v| v.is_finite()),
+        "post-heal parameters must be finite"
+    );
+    println!(
+        "{} PPO replicas finished in agreement (generation {}, world {}, {} heal(s)); \
+         θ finite and identical",
+        survivors.len(),
+        first.1,
+        first.2,
+        first.3,
+    );
     Ok(())
 }
 

@@ -108,6 +108,17 @@ pub fn run(args: Vec<String>) -> Result<()> {
 fn worker(opts: &Opts) -> Result<()> {
     let leader: std::net::SocketAddr = opts.require("leader")?.parse()?;
     let worker_id: u64 = opts.require("worker")?.parse()?;
+    if let Some(store) = opts.get("store") {
+        // Join the leader's object store: ObjRef task arguments resolve
+        // through this node (one transfer per payload per worker process,
+        // then cache hits), and serving makes by-reference *results*
+        // fetchable by the leader and by sibling workers.
+        let budget: usize = opts.parse_or("store-budget", 256usize << 20)?;
+        let node = fiber::store::StoreNode::connect(store, budget)
+            .context("connect to object store")?;
+        node.serve("127.0.0.1:0").context("serve worker store node")?;
+        fiber::store::install_node(node);
+    }
     let cli = RpcClient::connect(leader).context("connect to leader")?;
     loop {
         let reply = cli.call(tags::FETCH, &wire::to_bytes(&worker_id))?;
@@ -138,6 +149,7 @@ fn print_help() {
          SUBCOMMANDS:\n\
            worker       worker-process entrypoint (spawned by ProcBackend)\n\
                         --leader <addr> --worker <id>\n\
+                        [--store tcp://addr [--store-budget BYTES]]\n\
            ring         ring-allreduce collective demo\n\
                         [--world N] [--elems N] [--proc true] [--overlap false]\n\
            ring-node    ring-member process entrypoint (spawned by `ring --proc true`)\n\
@@ -147,12 +159,15 @@ fn print_help() {
            es           E2 distributed ES on walker2d\n\
                         [--pop N] [--iters N] [--workers N] [--artifacts DIR]\n\
                         [--decentralized true [--world N] [--proc true]\n\
-                         [--kill-rank R --kill-iter I --kill-chunk K] [--toy true]]\n\
+                         [--kill-rank R --kill-iter I --kill-chunk K] [--toy true]\n\
+                         [--store true]]\n\
            es-node      decentralized-ES replica process entrypoint\n\
-                        --rendezvous <addr> [--iters N]\n\
+                        --rendezvous <addr> [--iters N] [--store tcp://addr]\n\
                         [--kill-rank R --kill-iter I --kill-chunk K]\n\
            ppo          E3 distributed PPO on breakout\n\
                         [--envs N] [--iters N] [--workers N] [--artifacts DIR]\n\
+                        [--decentralized true [--world N]\n\
+                         [--kill-rank R --kill-iter I --kill-chunk K]]\n\
            scaling-sim  E2/E3 virtual-time scaling curves (Fig 3b/3c)\n\
            help         this message"
     );

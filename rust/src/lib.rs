@@ -32,6 +32,20 @@
 //!   collectives. The chunk pipeline is double-buffered so the next chunk's
 //!   traffic is in flight while the current one reduces.
 //!
+//! Fourth building block, beside Pool/Queue/Ring:
+//!
+//! * **Store layer** ([`store`]): a content-addressed, ref-counted
+//!   distributed object store — per-node in-memory [`store::LocalStore`]
+//!   (chunked blobs, LRU eviction under a byte budget, pin/unpin), a
+//!   [`store::Directory`] service mapping `ObjId → locations` (in-process
+//!   or over [`comms::rpc`]), and peer-to-peer chunk fetch with
+//!   single-flight dedup. Pool tasks pass large payloads **by reference**
+//!   ([`store::ObjRef`]): the payload crosses to each worker node once,
+//!   no matter how many tasks name it, and
+//!   [`ring::RingMember::store_broadcast`] lets post-heal and rejoining
+//!   ring members cache-hit a broadcast (e.g. the ES noise table) instead
+//!   of re-streaming it.
+//!
 //! Supporting substrates: [`comms`] (the Nanomsg-substitute message layer),
 //! [`wire`] (binary serialization), [`runtime`] (PJRT execution of
 //! AOT-compiled JAX/Pallas artifacts), [`envs`] (simulators), [`algo`]
@@ -61,6 +75,7 @@ pub mod experiments;
 pub mod metrics;
 pub mod ring;
 pub mod runtime;
+pub mod store;
 pub mod util;
 pub mod wire;
 

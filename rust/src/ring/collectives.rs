@@ -485,6 +485,58 @@ impl RingMember {
         }
     }
 
+    /// Store-backed broadcast: the root publishes the payload into the
+    /// distributed object store and the ring circulates only a 24-byte
+    /// header (content id + length) — via the healing [`RingMember::broadcast`]
+    /// machinery, so a non-root death mid-header still heals. Every other
+    /// member then resolves the blob through its [`crate::store::StoreNode`]:
+    /// a **local cache hit** when it already holds the chunks (post-heal
+    /// retries, rejoining members, repeated tables — the warm path moves
+    /// no payload at all), a peer-to-peer chunk fetch otherwise, and
+    /// concurrent members fetching through one shared node ride a single
+    /// transfer (single-flight dedup). Returns the blob id.
+    ///
+    /// Like every collective this is SPMD: all members call it with the
+    /// same `root` and equal buffer lengths. Members may share one node
+    /// (thread backend) or each own a node wired to a common directory
+    /// (OS-process backend).
+    pub fn store_broadcast(
+        &mut self,
+        node: &crate::store::StoreNode,
+        root: usize,
+        buf: &mut [f32],
+    ) -> Result<crate::store::ObjId> {
+        let n = self.view.world;
+        anyhow::ensure!(root < n, "store_broadcast root {root} out of range (world {n})");
+        if self.view.rank == root {
+            let bytes = f32s_to_bytes(buf);
+            let id = node.put_bytes(&bytes)?;
+            let mut hdr = pack_store_header(id, buf.len() as u64);
+            self.broadcast(root, &mut hdr)?;
+            Ok(id)
+        } else {
+            let mut hdr = [0.0f32; 6];
+            self.broadcast(root, &mut hdr)?;
+            let (id, len) = unpack_store_header(&hdr);
+            anyhow::ensure!(
+                len as usize == buf.len(),
+                "store_broadcast length mismatch: root published {len} elems, \
+                 local buffer holds {}",
+                buf.len()
+            );
+            let bytes = node.get_bytes(id)?;
+            let vals = bytes_to_f32s(&bytes)?;
+            anyhow::ensure!(
+                vals.len() == buf.len(),
+                "store_broadcast blob {id} holds {} elems, want {}",
+                vals.len(),
+                buf.len()
+            );
+            buf.copy_from_slice(&vals);
+            Ok(id)
+        }
+    }
+
     /// Ring all-gather: every member contributes `mine` (equal lengths
     /// across members); returns the world's contributions concatenated in
     /// rank order. Lockstep (non-healing): a dead peer surfaces as a recv
@@ -1067,6 +1119,32 @@ fn msg_count(len: usize, chunk: usize) -> usize {
     }
 }
 
+/// Pack `(ObjId, len)` into 6 f32 lanes, bit-preserving: the header rides
+/// the ordinary f32 broadcast path (`from_bits`/`to_bits` plus the
+/// `to_le_bytes` framing never reinterpret the value arithmetically, so
+/// arbitrary bit patterns — including NaN encodings — survive).
+fn pack_store_header(id: crate::store::ObjId, len: u64) -> [f32; 6] {
+    let b = id.0;
+    let word = |i: usize| f32::from_bits(u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]));
+    [
+        word(0),
+        word(4),
+        word(8),
+        word(12),
+        f32::from_bits((len & 0xFFFF_FFFF) as u32),
+        f32::from_bits((len >> 32) as u32),
+    ]
+}
+
+fn unpack_store_header(h: &[f32; 6]) -> (crate::store::ObjId, u64) {
+    let mut b = [0u8; 16];
+    for (i, w) in h[..4].iter().enumerate() {
+        b[i * 4..(i + 1) * 4].copy_from_slice(&w.to_bits().to_le_bytes());
+    }
+    let len = (h[4].to_bits() as u64) | ((h[5].to_bits() as u64) << 32);
+    (crate::store::ObjId(b), len)
+}
+
 fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
     let mut bytes = Vec::with_capacity(vals.len() * 4);
     for v in vals {
@@ -1413,6 +1491,71 @@ mod tests {
         }
         // Survivors agree bitwise.
         assert_eq!(survivors[0].4, survivors[1].4);
+    }
+
+    #[test]
+    fn store_header_roundtrips_bitwise() {
+        use crate::store::ObjId;
+        for (seed, len) in [
+            (b"a".as_slice(), 0u64),
+            (b"bb".as_slice(), 7),
+            (b"ccc".as_slice(), u64::MAX >> 3),
+        ] {
+            let id = ObjId::of(seed);
+            let h = pack_store_header(id, len);
+            assert_eq!(unpack_store_header(&h), (id, len));
+        }
+    }
+
+    #[test]
+    fn store_broadcast_delivers_then_cache_hits() {
+        use crate::store::StoreNode;
+        // One serving host node (rank 0's) + one connected node per other
+        // member: the cold pass transfers once per non-root node, the warm
+        // pass moves no payload at all.
+        let host = StoreNode::host(64 << 20);
+        let host_ep = host.serve("127.0.0.1:0").unwrap();
+        let rv = Rendezvous::new(3);
+        let want = member_input(0, 500);
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                let rv = rv.clone();
+                let host = host.clone();
+                let host_ep = host_ep.clone();
+                let want = want.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_inproc(&rv).unwrap();
+                    let node = if m.rank() == 0 {
+                        host
+                    } else {
+                        StoreNode::connect(&host_ep, 64 << 20).unwrap()
+                    };
+                    let mut buf = if m.rank() == 0 {
+                        want.clone()
+                    } else {
+                        vec![0.0f32; 500]
+                    };
+                    let id1 = m.store_broadcast(&node, 0, &mut buf).unwrap();
+                    assert_eq!(buf, want);
+                    let cold = node.transfers();
+                    let mut buf2 = if m.rank() == 0 {
+                        want.clone()
+                    } else {
+                        vec![0.0f32; 500]
+                    };
+                    let id2 = m.store_broadcast(&node, 0, &mut buf2).unwrap();
+                    assert_eq!(id1, id2, "content addressing: same payload, same id");
+                    assert_eq!(buf2, want);
+                    assert_eq!(node.transfers(), cold, "warm pass must not re-transfer");
+                    (m.rank(), cold)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, cold) = h.join().unwrap();
+            let expect = u64::from(rank != 0);
+            assert_eq!(cold, expect, "rank {rank}: one cold transfer per non-root node");
+        }
     }
 
     #[test]

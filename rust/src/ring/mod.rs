@@ -28,7 +28,11 @@
 //!   generation bumps, survivors re-rank and resume from the first chunk
 //!   any of them had not completed. The chunk pipeline is double-buffered
 //!   (chunk *k+1*'s traffic in flight while chunk *k* reduces) — see
-//!   [`RingMember::overlap_efficiency`].
+//!   [`RingMember::overlap_efficiency`]. Bulk one-to-all payloads can also
+//!   ride the object store: [`RingMember::store_broadcast`] circulates a
+//!   24-byte content id instead of the payload, so members that already
+//!   hold the blob (post-heal retries, rejoining replacements) cache-hit
+//!   through [`crate::store`] instead of re-streaming.
 //!
 //! ```
 //! use fiber::ring::{Rendezvous, RingMember};

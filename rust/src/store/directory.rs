@@ -1,0 +1,210 @@
+//! The directory service: `ObjId → locations`.
+//!
+//! One [`Directory`] per store deployment maps every published blob to the
+//! endpoints it can be fetched from. The owner of a blob publishes it with
+//! its own endpoint; a node that fetches and caches a blob publishes
+//! itself as an additional location (that is what makes the fetch path
+//! peer-to-peer — later fetchers spread their load over every holder).
+//! Unpublishing the last location **garbage-collects** the entry: a
+//! subsequent lookup errors cleanly instead of returning a dangling id.
+//!
+//! Like [`crate::ring::topology::Rendezvous`], the directory is an
+//! in-process object with an RPC face: a [`DirectoryClient`] either holds
+//! the `Arc` directly (thread backends, tests) or speaks the
+//! `DIR_*` tags of [`super::node::tags`] to whichever [`super::StoreNode`]
+//! hosts the directory (OS-process backends).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::comms::rpc::RpcClient;
+use crate::comms::Addr;
+use crate::wire::{Decode, Encode, Reader, WireError};
+
+use super::local::ObjId;
+use super::node::tags;
+
+/// Everything the directory knows about one blob.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct DirEntry {
+    /// Blob length in bytes (sanity-checked against fetched content).
+    pub len: u64,
+    /// Endpoints (`tcp://…`, or a local-only marker) holding the blob.
+    pub locations: Vec<String>,
+}
+
+impl Encode for DirEntry {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.len.encode(buf);
+        self.locations.encode(buf);
+    }
+}
+
+impl Decode for DirEntry {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(DirEntry {
+            len: u64::decode(r)?,
+            locations: Vec::<String>::decode(r)?,
+        })
+    }
+}
+
+/// The in-process directory state.
+pub struct Directory {
+    inner: Mutex<HashMap<ObjId, DirEntry>>,
+}
+
+impl Directory {
+    pub fn new() -> Arc<Directory> {
+        Arc::new(Directory {
+            inner: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Record `endpoint` as a holder of `id` (idempotent per endpoint).
+    pub fn publish(&self, id: ObjId, len: u64, endpoint: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        let e = inner.entry(id).or_insert_with(|| DirEntry {
+            len,
+            locations: Vec::new(),
+        });
+        if !e.locations.iter().any(|l| l == endpoint) {
+            e.locations.push(endpoint.to_string());
+        }
+    }
+
+    /// Locations of `id`. Errors cleanly for ids the directory does not
+    /// know — never published, or garbage-collected after the last holder
+    /// unpublished.
+    pub fn lookup(&self, id: ObjId) -> Result<DirEntry> {
+        self.inner.lock().unwrap().get(&id).cloned().with_context(|| {
+            format!(
+                "object {id} is unknown to the directory \
+                 (never published, or garbage-collected)"
+            )
+        })
+    }
+
+    /// Remove `endpoint` from `id`'s holders; when the last holder leaves,
+    /// the entry itself is dropped (the GC). Returns holders remaining.
+    pub fn unpublish(&self, id: ObjId, endpoint: &str) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        let remaining = match inner.get_mut(&id) {
+            Some(e) => {
+                e.locations.retain(|l| l != endpoint);
+                e.locations.len()
+            }
+            None => return 0,
+        };
+        if remaining == 0 {
+            inner.remove(&id);
+        }
+        remaining
+    }
+
+    /// Number of known blobs.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// A handle to the deployment's directory: in-process or over RPC.
+pub enum DirectoryClient {
+    /// Shared `Arc` (thread backend, single-process multi-node tests).
+    Local(Arc<Directory>),
+    /// RPC to the [`super::StoreNode`] hosting the directory.
+    Remote(RpcClient),
+}
+
+impl DirectoryClient {
+    pub fn local(dir: Arc<Directory>) -> DirectoryClient {
+        DirectoryClient::Local(dir)
+    }
+
+    /// Connect to a directory host at `tcp://…`.
+    pub fn connect(addr: &Addr) -> Result<DirectoryClient> {
+        match addr {
+            Addr::Tcp(sa) => Ok(DirectoryClient::Remote(RpcClient::connect(*sa)?)),
+            Addr::Inproc(_) => anyhow::bail!(
+                "a remote store directory needs a tcp:// address \
+                 (share the Directory Arc for in-process use)"
+            ),
+        }
+    }
+
+    pub fn publish(&self, id: ObjId, len: u64, endpoint: &str) -> Result<()> {
+        match self {
+            DirectoryClient::Local(d) => {
+                d.publish(id, len, endpoint);
+                Ok(())
+            }
+            DirectoryClient::Remote(cli) => {
+                cli.call_typed(tags::DIR_PUBLISH, &(id, len, endpoint.to_string()))
+            }
+        }
+    }
+
+    pub fn lookup(&self, id: ObjId) -> Result<DirEntry> {
+        match self {
+            DirectoryClient::Local(d) => d.lookup(id),
+            DirectoryClient::Remote(cli) => cli.call_typed(tags::DIR_LOOKUP, &id),
+        }
+    }
+
+    pub fn unpublish(&self, id: ObjId, endpoint: &str) -> Result<u64> {
+        match self {
+            DirectoryClient::Local(d) => Ok(d.unpublish(id, endpoint) as u64),
+            DirectoryClient::Remote(cli) => {
+                cli.call_typed(tags::DIR_UNPUBLISH, &(id, endpoint.to_string()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_lookup_unpublish_gc() {
+        let d = Directory::new();
+        let id = ObjId::of(b"table");
+        d.publish(id, 5, "tcp://10.0.0.1:7000");
+        d.publish(id, 5, "tcp://10.0.0.2:7000");
+        d.publish(id, 5, "tcp://10.0.0.1:7000"); // idempotent
+        let e = d.lookup(id).unwrap();
+        assert_eq!(e.len, 5);
+        assert_eq!(e.locations.len(), 2);
+        assert_eq!(d.unpublish(id, "tcp://10.0.0.2:7000"), 1);
+        assert_eq!(d.unpublish(id, "tcp://10.0.0.1:7000"), 0);
+        // Garbage-collected: the lookup errors cleanly.
+        let err = d.lookup(id).unwrap_err();
+        assert!(err.to_string().contains("garbage-collected"), "{err}");
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn unknown_id_errors_cleanly() {
+        let d = Directory::new();
+        let err = d.lookup(ObjId::of(b"ghost")).unwrap_err();
+        assert!(err.to_string().contains("unknown to the directory"), "{err}");
+        assert_eq!(d.unpublish(ObjId::of(b"ghost"), "tcp://x:1"), 0);
+    }
+
+    #[test]
+    fn dir_entry_roundtrips_wire() {
+        let e = DirEntry {
+            len: 9000,
+            locations: vec!["tcp://a:1".into(), "tcp://b:2".into()],
+        };
+        let bytes = crate::wire::to_bytes(&e);
+        let back: DirEntry = crate::wire::from_bytes(&bytes).unwrap();
+        assert_eq!(e, back);
+    }
+}

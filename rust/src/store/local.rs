@@ -1,0 +1,451 @@
+//! The per-node blob cache: content-addressed, chunked, ref-counted, with
+//! LRU eviction under a byte budget.
+//!
+//! A [`LocalStore`] holds immutable blobs keyed by the hash of their
+//! contents ([`ObjId`]). A blob lives whole behind an `Arc` — a cache hit
+//! is an O(1) refcount bump — while the fixed-size **chunks** the
+//! peer-to-peer fetch protocol moves are cut from it on demand. Blobs are
+//! evicted least-recently-used when the store exceeds its budget. Two mechanisms exempt a blob from
+//! eviction: a non-zero **reference count** (taken while a map or
+//! collective is in flight over the blob) and an explicit **pin** (for
+//! blobs that must survive arbitrarily long, e.g. the ES noise table).
+//! Dropping the last reference makes the blob eviction-*eligible* again;
+//! it is reclaimed lazily, only when the budget demands it.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::wire::{Decode, Encode, Reader, WireError};
+
+/// Content hash identifying a blob (two mixed 64-bit FNV-1a streams).
+/// Identical bytes always map to the same id — `put` is idempotent and a
+/// fetched blob can be verified against the id it was requested under.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ObjId(pub [u8; 16]);
+
+/// splitmix64 finalizer — avalanches the FNV accumulators.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl ObjId {
+    /// Hash `bytes` into an id.
+    pub fn of(bytes: &[u8]) -> ObjId {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut a: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut b: u64 = 0x8422_2325_cbf2_9ce4;
+        for &x in bytes {
+            a = (a ^ x as u64).wrapping_mul(PRIME);
+            b = (b ^ x as u64).wrapping_mul(PRIME).rotate_left(29);
+        }
+        let a = mix64(a ^ bytes.len() as u64);
+        let b = mix64(b ^ a);
+        let mut out = [0u8; 16];
+        out[..8].copy_from_slice(&a.to_le_bytes());
+        out[8..].copy_from_slice(&b.to_le_bytes());
+        ObjId(out)
+    }
+}
+
+impl std::fmt::Display for ObjId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        for b in &self.0 {
+            write!(f, "{b:02x}")?;
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Debug for ObjId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ObjId({self})")
+    }
+}
+
+impl Encode for ObjId {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+    }
+}
+
+impl Decode for ObjId {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(ObjId(<[u8; 16]>::decode(r)?))
+    }
+}
+
+struct Entry {
+    /// The blob, whole, behind an `Arc`: a cache-hit `get` is an O(1)
+    /// refcount bump, not a reassembly copy. Chunks — the p2p transfer
+    /// unit — are cheap slices of this buffer, cut on demand.
+    data: Arc<Vec<u8>>,
+    refs: usize,
+    pinned: bool,
+    touched: u64,
+}
+
+struct Inner {
+    entries: HashMap<ObjId, Entry>,
+    bytes: usize,
+    tick: u64,
+    evictions: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// The in-memory blob store of one node.
+pub struct LocalStore {
+    chunk_size: usize,
+    budget: usize,
+    inner: Mutex<Inner>,
+}
+
+/// Default chunk size: 256 KiB — large enough to amortize per-frame RPC
+/// cost, small enough that many transfers interleave on one connection.
+pub const DEFAULT_CHUNK: usize = 1 << 18;
+
+impl LocalStore {
+    /// A store holding at most ~`budget` payload bytes (soft: blobs that
+    /// are referenced or pinned are never evicted, so the budget can be
+    /// exceeded while they are live).
+    pub fn new(budget: usize) -> LocalStore {
+        Self::with_chunk_size(budget, DEFAULT_CHUNK)
+    }
+
+    /// [`LocalStore::new`] with an explicit chunk size (the p2p transfer
+    /// granularity).
+    pub fn with_chunk_size(budget: usize, chunk_size: usize) -> LocalStore {
+        LocalStore {
+            chunk_size: chunk_size.max(1),
+            budget,
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                bytes: 0,
+                tick: 0,
+                evictions: 0,
+                hits: 0,
+                misses: 0,
+            }),
+        }
+    }
+
+    /// Insert a blob; returns its content id. Idempotent — re-inserting
+    /// identical bytes only refreshes the LRU position. Inserting past the
+    /// budget evicts least-recently-used unpinned zero-ref blobs (never the
+    /// blob just inserted).
+    pub fn insert(&self, bytes: &[u8]) -> ObjId {
+        let id = ObjId::of(bytes);
+        self.insert_arc(id, Arc::new(bytes.to_vec()));
+        id
+    }
+
+    /// [`LocalStore::insert`] with a pre-computed id and an owned buffer
+    /// — no copy, no re-hash. The caller asserts `id == ObjId::of(&data)`;
+    /// the fetch path uses this right after hash-verifying a transfer.
+    pub fn insert_arc(&self, id: ObjId, data: Arc<Vec<u8>>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.get_mut(&id) {
+            e.touched = tick;
+            return;
+        }
+        inner.bytes += data.len();
+        inner.entries.insert(
+            id,
+            Entry {
+                data,
+                refs: 0,
+                pinned: false,
+                touched: tick,
+            },
+        );
+        evict_over_budget(&mut inner, self.budget, Some(id));
+    }
+
+    /// The whole blob (refreshes its LRU position). O(1): hands back a
+    /// clone of the `Arc`, not a copy of the bytes.
+    pub fn get(&self, id: ObjId) -> Option<Arc<Vec<u8>>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let found = inner.entries.get_mut(&id).map(|e| {
+            e.touched = tick;
+            e.data.clone()
+        });
+        match found {
+            Some(out) => {
+                inner.hits += 1;
+                Some(out)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Chunks a blob of `len` bytes occupies at this store's chunk size.
+    fn n_chunks(&self, len: usize) -> usize {
+        if len == 0 {
+            0
+        } else {
+            (len + self.chunk_size - 1) / self.chunk_size
+        }
+    }
+
+    /// `(len, n_chunks, chunk_size)` of a held blob (refreshes LRU).
+    pub fn meta(&self, id: ObjId) -> Option<(u64, u64, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.entries.get_mut(&id).map(|e| {
+            e.touched = tick;
+            (
+                e.data.len() as u64,
+                self.n_chunks(e.data.len()) as u64,
+                self.chunk_size as u64,
+            )
+        })
+    }
+
+    /// One chunk of a held blob, cut on demand (refreshes LRU).
+    pub fn chunk(&self, id: ObjId, idx: usize) -> Option<Vec<u8>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.entries.get_mut(&id).and_then(|e| {
+            e.touched = tick;
+            let len = e.data.len();
+            let lo = idx.checked_mul(self.chunk_size)?;
+            if lo >= len {
+                return None;
+            }
+            let hi = (lo + self.chunk_size).min(len);
+            Some(e.data[lo..hi].to_vec())
+        })
+    }
+
+    pub fn contains(&self, id: ObjId) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(&id)
+    }
+
+    /// Ids of every held blob (used to publish on a late `serve`).
+    pub fn ids(&self) -> Vec<ObjId> {
+        self.inner.lock().unwrap().entries.keys().copied().collect()
+    }
+
+    /// Take a reference: the blob cannot be evicted until the count drops
+    /// back to zero. Returns false if the blob is not held.
+    pub fn incref(&self, id: ObjId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(&id) {
+            Some(e) => {
+                e.refs += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a reference (saturating): at zero the blob becomes
+    /// eviction-eligible again. Returns false if the blob is not held.
+    pub fn decref(&self, id: ObjId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(&id) {
+            Some(e) => {
+                e.refs = e.refs.saturating_sub(1);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Pin: never evict, regardless of budget or refs.
+    pub fn pin(&self, id: ObjId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(&id) {
+            Some(e) => {
+                e.pinned = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Unpin (the blob keeps its LRU position).
+    pub fn unpin(&self, id: ObjId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        match inner.entries.get_mut(&id) {
+            Some(e) => {
+                e.pinned = false;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a blob immediately (refuses pinned *and* referenced blobs —
+    /// refcounts protect in-flight users from explicit removal exactly as
+    /// they gate eviction). Returns whether a blob was removed.
+    pub fn remove(&self, id: ObjId) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let removable =
+            matches!(inner.entries.get(&id), Some(e) if !e.pinned && e.refs == 0);
+        if removable {
+            if let Some(e) = inner.entries.remove(&id) {
+                inner.bytes -= e.data.len();
+            }
+        }
+        removable
+    }
+
+    /// Payload bytes currently held.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// `(hits, misses, evictions)` counters.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.hits, inner.misses, inner.evictions)
+    }
+}
+
+/// Evict least-recently-touched unpinned zero-ref blobs until within
+/// budget or nothing more is evictable. `protect` shields the blob whose
+/// insertion triggered the pass — evicting it would defeat the insert.
+fn evict_over_budget(inner: &mut Inner, budget: usize, protect: Option<ObjId>) {
+    while inner.bytes > budget {
+        let victim = inner
+            .entries
+            .iter()
+            .filter(|(id, e)| Some(**id) != protect && e.refs == 0 && !e.pinned)
+            .min_by_key(|(_, e)| e.touched)
+            .map(|(id, _)| *id);
+        let Some(id) = victim else { return };
+        if let Some(e) = inner.entries.remove(&id) {
+            inner.bytes -= e.data.len();
+            inner.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(tag: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| tag ^ (i % 251) as u8).collect()
+    }
+
+    #[test]
+    fn content_addressing_is_stable_and_collision_shy() {
+        let a = ObjId::of(b"hello");
+        assert_eq!(a, ObjId::of(b"hello"));
+        assert_ne!(a, ObjId::of(b"hello!"));
+        assert_ne!(ObjId::of(b""), ObjId::of(b"\0"));
+        assert_eq!(format!("{a}").len(), 32);
+    }
+
+    #[test]
+    fn insert_get_roundtrip_chunked() {
+        let s = LocalStore::with_chunk_size(1 << 20, 7);
+        let data = blob(3, 1000); // 143 chunks of 7
+        let id = s.insert(&data);
+        assert_eq!(*s.get(id).unwrap(), data);
+        let (len, n_chunks, chunk) = s.meta(id).unwrap();
+        assert_eq!((len, chunk), (1000, 7));
+        assert_eq!(n_chunks, 143);
+        assert_eq!(s.chunk(id, 0).unwrap(), &data[..7]);
+        assert_eq!(s.chunk(id, 142).unwrap(), &data[994..]);
+        assert!(s.chunk(id, 143).is_none());
+        // Idempotent re-insert.
+        assert_eq!(s.insert(&data), id);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), 1000);
+    }
+
+    #[test]
+    fn empty_blob_is_held() {
+        let s = LocalStore::new(1024);
+        let id = s.insert(&[]);
+        assert!(s.get(id).unwrap().is_empty());
+        let (len, n_chunks, _) = s.meta(id).unwrap();
+        assert_eq!((len, n_chunks), (0, 0));
+    }
+
+    #[test]
+    fn lru_evicts_oldest_first() {
+        let s = LocalStore::new(2500);
+        let a = s.insert(&blob(1, 1000));
+        let b = s.insert(&blob(2, 1000));
+        // Touch a so b is now the least recently used.
+        assert!(s.get(a).is_some());
+        let c = s.insert(&blob(3, 1000));
+        assert!(s.contains(a), "recently-touched blob must survive");
+        assert!(!s.contains(b), "LRU blob must be evicted");
+        assert!(s.contains(c));
+        assert!(s.bytes() <= 2500);
+        assert_eq!(s.counters().2, 1);
+    }
+
+    #[test]
+    fn refcount_drop_restores_eviction_eligibility() {
+        let s = LocalStore::new(1500);
+        let a = s.insert(&blob(1, 1000));
+        assert!(s.incref(a));
+        assert!(!s.remove(a), "referenced blobs refuse explicit removal");
+        // Over budget, but a is referenced: it must survive.
+        let b = s.insert(&blob(2, 1000));
+        assert!(s.contains(a), "referenced blob is not evictable");
+        assert!(s.bytes() > s.budget(), "budget is soft while refs are live");
+        // Dropping the last ref makes a eligible; the next insert evicts it.
+        assert!(s.decref(a));
+        let c = s.insert(&blob(3, 1000));
+        assert!(!s.contains(a), "zero-ref LRU blob must now be evicted");
+        assert!(s.contains(b) || s.contains(c));
+    }
+
+    #[test]
+    fn pinned_blobs_are_never_evicted() {
+        let s = LocalStore::new(1500);
+        let a = s.insert(&blob(1, 1000));
+        assert!(s.pin(a));
+        for tag in 2..6 {
+            s.insert(&blob(tag, 1000));
+        }
+        assert!(s.contains(a), "pinned blob must survive any pressure");
+        // Pinned blobs also refuse remove().
+        assert!(!s.remove(a));
+        assert!(s.unpin(a));
+        assert!(s.remove(a));
+        assert!(!s.contains(a));
+    }
+
+    #[test]
+    fn missing_ids_answer_cleanly() {
+        let s = LocalStore::new(1024);
+        let ghost = ObjId::of(b"never inserted");
+        assert!(s.get(ghost).is_none());
+        assert!(s.meta(ghost).is_none());
+        assert!(!s.incref(ghost));
+        assert!(!s.pin(ghost));
+        assert!(!s.remove(ghost));
+        assert_eq!(s.counters().1, 1, "one recorded miss");
+    }
+}

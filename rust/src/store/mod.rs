@@ -1,0 +1,201 @@
+//! `fiber.Store` — the distributed object store (fourth building block,
+//! beside Pool, Queue and Ring).
+//!
+//! Pool and Queue move *tasks by value*: every task argument is serialized
+//! per task and sent per worker, so a map of 1000 rollouts over one 64 MB
+//! parameter vector ships 64 GB. The store kills that overhead the way
+//! Ray's ownership-based object store does for its tasks: a payload is
+//! `put` **once**, named by the hash of its contents ([`ObjId`]), and
+//! tasks carry only a 24-byte [`ObjRef`]. The first task on each node
+//! faults the blob in — a peer-to-peer chunked transfer — and every later
+//! task on that node is a local cache hit, so a payload crosses to a
+//! worker node **once per node, not once per task**.
+//!
+//! Three layers:
+//!
+//! * [`local`] — the per-node [`LocalStore`]: content-addressed chunked
+//!   blobs, LRU eviction under a byte budget, pin/unpin and ref-counts
+//!   (dropping the last ref makes a blob eviction-eligible again).
+//! * [`directory`] — the [`Directory`] service mapping `ObjId →
+//!   locations`, in-process or over [`crate::comms::rpc`]. Unpublishing
+//!   the last location garbage-collects the entry; later lookups error
+//!   cleanly.
+//! * [`node`] — the [`StoreNode`]: local cache + directory client +
+//!   peer-to-peer chunk fetch with **single-flight dedup** (concurrent
+//!   fetchers of one blob share one transfer — see
+//!   [`StoreNode::transfers`]). A fetched copy republishes itself as a
+//!   new location, so fetch capacity grows with every cached copy.
+//!
+//! Integrations: [`crate::api::pool::Pool`] accepts [`ObjRef`] arguments
+//! and results (`PoolBuilder::store` wires worker processes to the
+//! leader's directory), and
+//! [`crate::ring::RingMember::store_broadcast`] publishes a collective's
+//! payload into the store so post-heal and rejoining ring members
+//! cache-hit instead of re-streaming (the ES noise table path —
+//! [`crate::algo::es::EsRingNode::warm_noise_table_store`]).
+
+pub mod directory;
+pub mod local;
+pub mod node;
+
+pub use directory::{DirEntry, Directory, DirectoryClient};
+pub use local::{LocalStore, ObjId, DEFAULT_CHUNK};
+pub use node::{tags, StoreNode, LOCAL_ONLY};
+
+use std::marker::PhantomData;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+use once_cell::sync::Lazy;
+
+use crate::wire::{Decode, Encode, Reader, WireError};
+
+/// The process-wide store node. Task functions run deep inside worker
+/// loops with no way to thread a handle through, so — like the task
+/// registry — the node is process-global: workers install it at startup
+/// (`fiber-cli worker --store …`), thread pools install it through
+/// `PoolBuilder::store`, and [`ObjRef::get`] resolves through it.
+static GLOBAL_NODE: Lazy<Mutex<Option<Arc<StoreNode>>>> = Lazy::new(|| Mutex::new(None));
+
+/// Install (or replace) this process's store node.
+pub fn install_node(node: Arc<StoreNode>) {
+    *GLOBAL_NODE.lock().unwrap() = Some(node);
+}
+
+/// Install `node` only when the slot is empty (or already holds this very
+/// node). Returns false without touching the slot when a *different* node
+/// is installed — implicit installers (pool builders) use this so a
+/// second pool cannot silently rebind every in-flight `ObjRef::get` of
+/// the first to another directory.
+pub fn install_node_default(node: &Arc<StoreNode>) -> bool {
+    let mut g = GLOBAL_NODE.lock().unwrap();
+    match g.as_ref() {
+        None => {
+            *g = Some(node.clone());
+            true
+        }
+        Some(cur) => Arc::ptr_eq(cur, node),
+    }
+}
+
+/// The installed node, if any.
+pub fn installed() -> Option<Arc<StoreNode>> {
+    GLOBAL_NODE.lock().unwrap().clone()
+}
+
+/// The installed node, or a descriptive error.
+pub fn node() -> Result<Arc<StoreNode>> {
+    installed().context(
+        "no store node installed in this process \
+         (fiber::store::install_node, PoolBuilder::store, or fiber-cli worker --store)",
+    )
+}
+
+/// A typed pass-by-reference handle to a stored blob: 24 bytes on the
+/// wire no matter how large the payload. `Copy`, so it can ride in any
+/// number of task payloads for free.
+pub struct ObjRef<T> {
+    id: ObjId,
+    len: u64,
+    _t: PhantomData<fn() -> T>,
+}
+
+impl<T> ObjRef<T> {
+    /// Rebuild a handle from its parts (the wire path and
+    /// [`StoreNode::put`] use this).
+    pub fn from_parts(id: ObjId, len: u64) -> ObjRef<T> {
+        ObjRef {
+            id,
+            len,
+            _t: PhantomData,
+        }
+    }
+
+    pub fn id(&self) -> ObjId {
+        self.id
+    }
+
+    /// Encoded payload length in bytes.
+    pub fn len(&self) -> u64 {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl<T: Encode> ObjRef<T> {
+    /// Store `v` through the process-global node.
+    pub fn put(v: &T) -> Result<ObjRef<T>> {
+        node()?.put(v)
+    }
+}
+
+impl<T: Decode> ObjRef<T> {
+    /// Resolve through the process-global node (local hit or one shared
+    /// peer transfer).
+    pub fn get(&self) -> Result<T> {
+        node()?.get_ref(self)
+    }
+
+    /// Resolve through an explicit node (tests, multi-node simulations).
+    pub fn get_via(&self, node: &StoreNode) -> Result<T> {
+        node.get_ref(self)
+    }
+}
+
+impl<T> Clone for ObjRef<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for ObjRef<T> {}
+
+impl<T> std::fmt::Debug for ObjRef<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "ObjRef({}, {} bytes)", self.id, self.len)
+    }
+}
+
+impl<T> Encode for ObjRef<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.id.encode(buf);
+        self.len.encode(buf);
+    }
+}
+
+impl<T> Decode for ObjRef<T> {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(ObjRef::from_parts(ObjId::decode(r)?, u64::decode(r)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objref_roundtrips_wire() {
+        let r: ObjRef<Vec<f32>> = ObjRef::from_parts(ObjId::of(b"blob"), 4096);
+        let bytes = crate::wire::to_bytes(&r);
+        assert_eq!(bytes.len(), 24, "a handle is 24 bytes on the wire");
+        let back: ObjRef<Vec<f32>> = crate::wire::from_bytes(&bytes).unwrap();
+        assert_eq!(back.id(), r.id());
+        assert_eq!(back.len(), 4096);
+        assert!(!back.is_empty());
+    }
+
+    #[test]
+    fn typed_put_get_via_node() {
+        let node = StoreNode::host(16 << 20);
+        let v: Vec<f32> = (0..5000).map(|i| i as f32 * 0.5).collect();
+        let r = node.put(&v).unwrap();
+        let back: Vec<f32> = r.get_via(&node).unwrap();
+        assert_eq!(back, v);
+        // Identical content → identical handle.
+        let r2 = node.put(&v).unwrap();
+        assert_eq!(r2.id(), r.id());
+    }
+}

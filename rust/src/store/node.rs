@@ -1,0 +1,600 @@
+//! One node's face onto the distributed store: local cache + directory
+//! client + peer-to-peer chunk fetch with single-flight dedup.
+//!
+//! A [`StoreNode`] wraps a [`LocalStore`] and a [`DirectoryClient`].
+//! `put` inserts locally and publishes this node as a location; `get`
+//! returns the local copy when held, otherwise looks the id up in the
+//! directory and streams the blob chunk-by-chunk from a peer — then caches
+//! it and (when this node serves) publishes itself as an extra location,
+//! so the swarm's fetch capacity grows with every copy.
+//!
+//! **Single-flight:** concurrent `get`s of one missing id share a single
+//! transfer. The first caller becomes the flight leader and fetches; the
+//! rest block on the flight and read the cached copy when it lands — the
+//! [`StoreNode::transfers`] counter moves once no matter how many tasks
+//! raced. This is what turns "N tasks over one `ObjRef`" into "one
+//! transfer per node".
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::comms::Addr;
+use crate::wire::{self, Decode, Encode};
+
+use super::directory::{Directory, DirectoryClient};
+use super::local::{LocalStore, ObjId};
+use super::ObjRef;
+
+/// RPC tags of the store protocol (directory plane + blob plane). One
+/// server answers both: whichever node hosts the directory also serves
+/// its blobs over the same socket.
+pub mod tags {
+    pub const DIR_PUBLISH: u32 = 0x5701;
+    pub const DIR_LOOKUP: u32 = 0x5702;
+    pub const DIR_UNPUBLISH: u32 = 0x5703;
+    pub const BLOB_META: u32 = 0x5710;
+    pub const BLOB_CHUNK: u32 = 0x5711;
+}
+
+/// Location-marker prefix for blobs held by a node without a TCP server:
+/// visible in the directory (so last-location GC semantics hold) but
+/// skipped by fetchers. Each node appends a unique suffix — two unserved
+/// holders must not alias to one directory location, or one node's drop
+/// would un-register the other's live copy.
+pub const LOCAL_ONLY: &str = "local://unserved";
+
+static MARKER_SEQ: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_marker() -> String {
+    format!(
+        "{LOCAL_ONLY}-{}-{}",
+        std::process::id(),
+        MARKER_SEQ.fetch_add(1, Ordering::Relaxed)
+    )
+}
+
+/// State of one in-flight fetch that concurrent `get`s share.
+struct Flight {
+    state: Mutex<Option<Result<(), String>>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn new() -> Flight {
+        Flight {
+            state: Mutex::new(None),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn finish(&self, res: Result<(), String>) {
+        *self.state.lock().unwrap() = Some(res);
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        while st.is_none() {
+            st = self.cv.wait(st).unwrap();
+        }
+        match st.as_ref().unwrap() {
+            Ok(()) => Ok(()),
+            Err(e) => Err(anyhow!("single-flight leader failed: {e}")),
+        }
+    }
+}
+
+/// One node of the distributed object store.
+pub struct StoreNode {
+    local: Arc<LocalStore>,
+    dir: DirectoryClient,
+    /// Set when this node hosts the directory state (it then also answers
+    /// `DIR_*` RPC tags on its server).
+    hosted: Option<Arc<Directory>>,
+    server: Mutex<Option<RpcServer>>,
+    endpoint: Mutex<Option<String>>,
+    /// This node's unserved directory marker (unique per node).
+    local_marker: String,
+    peers: Mutex<HashMap<String, Arc<RpcClient>>>,
+    inflight: Mutex<HashMap<ObjId, Arc<Flight>>>,
+    transfers_in: AtomicU64,
+    transfers_out: Arc<AtomicU64>,
+    local_hits: AtomicU64,
+    dedup_waits: AtomicU64,
+}
+
+impl StoreNode {
+    fn with_parts(
+        dir: DirectoryClient,
+        hosted: Option<Arc<Directory>>,
+        budget: usize,
+    ) -> Arc<StoreNode> {
+        Arc::new(StoreNode {
+            local: Arc::new(LocalStore::new(budget)),
+            dir,
+            hosted,
+            server: Mutex::new(None),
+            endpoint: Mutex::new(None),
+            local_marker: fresh_marker(),
+            peers: Mutex::new(HashMap::new()),
+            inflight: Mutex::new(HashMap::new()),
+            transfers_in: AtomicU64::new(0),
+            transfers_out: Arc::new(AtomicU64::new(0)),
+            local_hits: AtomicU64::new(0),
+            dedup_waits: AtomicU64::new(0),
+        })
+    }
+
+    /// A node that hosts a fresh directory (the deployment's first node).
+    pub fn host(budget: usize) -> Arc<StoreNode> {
+        Self::with_directory(Directory::new(), budget)
+    }
+
+    /// A node sharing an in-process [`Directory`] (thread backends and
+    /// single-process multi-node tests).
+    pub fn with_directory(dir: Arc<Directory>, budget: usize) -> Arc<StoreNode> {
+        Self::with_parts(DirectoryClient::local(dir.clone()), Some(dir), budget)
+    }
+
+    /// A node joining an existing deployment: `directory` is the
+    /// `tcp://…` endpoint of the hosting node (e.g. what
+    /// [`StoreNode::serve`] returned there).
+    pub fn connect(directory: &str, budget: usize) -> Result<Arc<StoreNode>> {
+        let addr = Addr::parse(directory)?;
+        Ok(Self::with_parts(DirectoryClient::connect(&addr)?, None, budget))
+    }
+
+    /// Start serving this node's blobs (and, when it hosts the directory,
+    /// the `DIR_*` plane) at `bind`; returns the advertised `tcp://…`
+    /// endpoint. Idempotent — a second call returns the first endpoint.
+    /// Blobs already held become fetchable and are published.
+    pub fn serve(&self, bind: &str) -> Result<String> {
+        {
+            let ep = self.endpoint.lock().unwrap();
+            if let Some(e) = ep.as_ref() {
+                return Ok(e.clone());
+            }
+        }
+        let local = self.local.clone();
+        let hosted = self.hosted.clone();
+        let out = self.transfers_out.clone();
+        let srv = RpcServer::bind(
+            bind,
+            Arc::new(move |tag, payload| {
+                serve_store_req(&local, hosted.as_deref(), &out, tag, payload)
+            }),
+        )?;
+        let ep = format!("tcp://{}", srv.local_addr());
+        *self.server.lock().unwrap() = Some(srv);
+        *self.endpoint.lock().unwrap() = Some(ep.clone());
+        for id in self.local.ids() {
+            if let Some((len, _, _)) = self.local.meta(id) {
+                self.dir.publish(id, len, &ep)?;
+                // Migrate, don't accumulate: the pre-serve marker must go,
+                // or drop_blob's last-location GC never fires.
+                self.dir.unpublish(id, &self.local_marker)?;
+            }
+        }
+        Ok(ep)
+    }
+
+    /// The served `tcp://…` endpoint, if [`StoreNode::serve`] ran.
+    pub fn endpoint(&self) -> Option<String> {
+        self.endpoint.lock().unwrap().clone()
+    }
+
+    /// Store a blob and publish this node as a location. Idempotent for
+    /// identical bytes (content addressing).
+    pub fn put_bytes(&self, bytes: &[u8]) -> Result<ObjId> {
+        let id = self.local.insert(bytes);
+        let ep = self
+            .endpoint()
+            .unwrap_or_else(|| self.local_marker.clone());
+        self.dir.publish(id, bytes.len() as u64, &ep)?;
+        Ok(id)
+    }
+
+    /// Resolve a blob: local cache hit, or a directory lookup plus one
+    /// shared (single-flight) peer-to-peer chunk transfer. The bytes come
+    /// back behind an `Arc` — warm gets are an O(1) refcount bump.
+    pub fn get_bytes(&self, id: ObjId) -> Result<Arc<Vec<u8>>> {
+        if let Some(b) = self.local.get(id) {
+            self.local_hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(b);
+        }
+        loop {
+            let flight = {
+                let mut inflight = self.inflight.lock().unwrap();
+                match inflight.get(&id) {
+                    Some(f) => Some(f.clone()),
+                    None => {
+                        inflight.insert(id, Arc::new(Flight::new()));
+                        None
+                    }
+                }
+            };
+            match flight {
+                None => {
+                    // Flight leader: perform the one transfer.
+                    let res = self.fetch_remote(id);
+                    let f = self
+                        .inflight
+                        .lock()
+                        .unwrap()
+                        .remove(&id)
+                        .expect("flight entry");
+                    f.finish(res.as_ref().map(|_| ()).map_err(|e| format!("{e:#}")));
+                    return res;
+                }
+                Some(f) => {
+                    // Waiter: ride the leader's transfer. A successful
+                    // resolution through the landed copy *is* a local hit
+                    // — only the leader's transfer counts as a transfer.
+                    self.dedup_waits.fetch_add(1, Ordering::Relaxed);
+                    f.wait()?;
+                    if let Some(b) = self.local.get(id) {
+                        self.local_hits.fetch_add(1, Ordering::Relaxed);
+                        return Ok(b);
+                    }
+                    // Evicted between landing and re-read: retry the loop
+                    // (this caller may become the next leader).
+                }
+            }
+        }
+    }
+
+    fn fetch_remote(&self, id: ObjId) -> Result<Arc<Vec<u8>>> {
+        let entry = self.dir.lookup(id)?;
+        let own = self.endpoint();
+        let mut last_err = anyhow!(
+            "object {id}: no fetchable location among {:?}",
+            entry.locations
+        );
+        for loc in &entry.locations {
+            if Some(loc.as_str()) == own.as_deref() || !loc.starts_with("tcp://") {
+                continue;
+            }
+            match self.fetch_from(loc, id, entry.len) {
+                Ok(bytes) => {
+                    // The transfer is already hash-verified; cache the
+                    // very buffer we hand back — no re-hash, no copy.
+                    let data = Arc::new(bytes);
+                    self.local.insert_arc(id, data.clone());
+                    self.transfers_in.fetch_add(1, Ordering::Relaxed);
+                    if let Some(ep) = own.as_deref() {
+                        // Cached copy becomes a new fetchable location.
+                        // Best-effort: the blob is safely cached, so a
+                        // transiently unreachable directory must not fail
+                        // the get (and every single-flight waiter with it).
+                        if let Err(e) = self.dir.publish(id, entry.len, ep) {
+                            log::warn!("store: republish of {id} at {ep} failed: {e:#}");
+                        }
+                    }
+                    return Ok(data);
+                }
+                Err(e) => {
+                    // Drop the (possibly wedged) connection, and evict the
+                    // location from the directory — otherwise every later
+                    // cold fetch re-pays the connect timeout on the same
+                    // dead endpoint. Never evict the *last* location on a
+                    // transport failure: a transient outage of the sole
+                    // holder must not garbage-collect a blob that still
+                    // exists. The exception is an *authoritative* miss —
+                    // the endpoint answered and said it no longer holds
+                    // the blob (e.g. it evicted it) — which is safe to
+                    // unregister unconditionally.
+                    self.peers.lock().unwrap().remove(loc);
+                    let authoritative = format!("{e:#}").contains("is not held by this node");
+                    if authoritative || entry.locations.len() > 1 {
+                        if let Err(ue) = self.dir.unpublish(id, loc) {
+                            log::warn!("store: unpublish of dead {loc} failed: {ue:#}");
+                        }
+                    }
+                    last_err = e.context(format!("fetching {id} from {loc}"));
+                }
+            }
+        }
+        Err(last_err)
+    }
+
+    fn fetch_from(&self, loc: &str, id: ObjId, want_len: u64) -> Result<Vec<u8>> {
+        let cli = self.peer(loc)?;
+        let (len, n_chunks, _chunk_size): (u64, u64, u64) =
+            cli.call_typed(tags::BLOB_META, &id)?;
+        anyhow::ensure!(
+            len == want_len,
+            "peer reports {len} bytes, directory says {want_len}"
+        );
+        let mut out = Vec::with_capacity(len as usize);
+        for i in 0..n_chunks {
+            // The server replies with raw chunk bytes (no wire envelope —
+            // re-encoding a payload-sized buffer would just double-copy),
+            // so read them through `call`, not `call_typed`.
+            let chunk = cli.call(tags::BLOB_CHUNK, &wire::to_bytes(&(id, i)))?;
+            out.extend_from_slice(&chunk);
+        }
+        anyhow::ensure!(
+            out.len() as u64 == len,
+            "reassembled {} bytes, expected {len}",
+            out.len()
+        );
+        anyhow::ensure!(
+            ObjId::of(&out) == id,
+            "content hash mismatch (corrupt transfer)"
+        );
+        Ok(out)
+    }
+
+    fn peer(&self, loc: &str) -> Result<Arc<RpcClient>> {
+        if let Some(c) = self.peers.lock().unwrap().get(loc) {
+            return Ok(c.clone());
+        }
+        let addr = Addr::parse(loc)?;
+        let Addr::Tcp(sa) = addr else {
+            anyhow::bail!("store peer {loc} is not a tcp endpoint");
+        };
+        let cli = Arc::new(RpcClient::connect_timeout(sa, Duration::from_secs(5))?);
+        cli.set_read_timeout(Some(Duration::from_secs(30)))?;
+        self.peers
+            .lock()
+            .unwrap()
+            .insert(loc.to_string(), cli.clone());
+        Ok(cli)
+    }
+
+    /// Typed put: wire-encode `v`, store the bytes, return a pass-by-
+    /// reference handle.
+    pub fn put<T: Encode>(&self, v: &T) -> Result<ObjRef<T>> {
+        let bytes = wire::to_bytes(v);
+        let len = bytes.len() as u64;
+        let id = self.put_bytes(&bytes)?;
+        Ok(ObjRef::from_parts(id, len))
+    }
+
+    /// Typed get: resolve the handle's bytes and decode.
+    pub fn get_ref<T: Decode>(&self, r: &ObjRef<T>) -> Result<T> {
+        let bytes = self.get_bytes(r.id())?;
+        wire::from_bytes(&bytes).map_err(|e| anyhow!("objref decode: {e}"))
+    }
+
+    /// Drop the local copy and unpublish this node; returns locations
+    /// remaining — 0 means the directory entry was garbage-collected and
+    /// future lookups error. Refuses while the blob is pinned or
+    /// referenced (unpublishing a live copy would strand lookups that
+    /// could have been served).
+    pub fn drop_blob(&self, id: ObjId) -> Result<u64> {
+        if !self.local.remove(id) && self.local.contains(id) {
+            anyhow::bail!(
+                "blob {id} is pinned or referenced on this node; \
+                 unpin/decref before dropping"
+            );
+        }
+        let ep = self
+            .endpoint()
+            .unwrap_or_else(|| self.local_marker.clone());
+        self.dir.unpublish(id, &ep)
+    }
+
+    // ---- passthroughs and counters ---------------------------------------
+
+    pub fn contains(&self, id: ObjId) -> bool {
+        self.local.contains(id)
+    }
+
+    pub fn pin(&self, id: ObjId) -> bool {
+        self.local.pin(id)
+    }
+
+    pub fn unpin(&self, id: ObjId) -> bool {
+        self.local.unpin(id)
+    }
+
+    pub fn incref(&self, id: ObjId) -> bool {
+        self.local.incref(id)
+    }
+
+    pub fn decref(&self, id: ObjId) -> bool {
+        self.local.decref(id)
+    }
+
+    /// The underlying cache (tests and eviction tuning).
+    pub fn local(&self) -> &Arc<LocalStore> {
+        &self.local
+    }
+
+    /// The directory this node publishes to.
+    pub fn directory(&self) -> &DirectoryClient {
+        &self.dir
+    }
+
+    /// Remote transfers this node performed (one per blob fetched from a
+    /// peer, no matter how many `get`s shared it).
+    pub fn transfers(&self) -> u64 {
+        self.transfers_in.load(Ordering::Relaxed)
+    }
+
+    /// Blob transfers this node served to peers (counted at the meta
+    /// request that opens each transfer).
+    pub fn serves(&self) -> u64 {
+        self.transfers_out.load(Ordering::Relaxed)
+    }
+
+    /// `get`s answered straight from the local cache.
+    pub fn local_hits(&self) -> u64 {
+        self.local_hits.load(Ordering::Relaxed)
+    }
+
+    /// `get`s that blocked on another caller's in-flight transfer instead
+    /// of starting their own.
+    pub fn dedup_waits(&self) -> u64 {
+        self.dedup_waits.load(Ordering::Relaxed)
+    }
+}
+
+/// The server side of the store protocol (both planes).
+fn serve_store_req(
+    local: &LocalStore,
+    hosted: Option<&Directory>,
+    transfers_out: &AtomicU64,
+    tag: u32,
+    payload: &[u8],
+) -> Result<Vec<u8>, String> {
+    match tag {
+        tags::DIR_PUBLISH => {
+            let d = hosted.ok_or("this store node does not host a directory")?;
+            let (id, len, ep): (ObjId, u64, String) =
+                wire::from_bytes(payload).map_err(|e| e.to_string())?;
+            d.publish(id, len, &ep);
+            Ok(Vec::new())
+        }
+        tags::DIR_LOOKUP => {
+            let d = hosted.ok_or("this store node does not host a directory")?;
+            let id: ObjId = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+            let entry = d.lookup(id).map_err(|e| format!("{e:#}"))?;
+            Ok(wire::to_bytes(&entry))
+        }
+        tags::DIR_UNPUBLISH => {
+            let d = hosted.ok_or("this store node does not host a directory")?;
+            let (id, ep): (ObjId, String) =
+                wire::from_bytes(payload).map_err(|e| e.to_string())?;
+            Ok(wire::to_bytes(&(d.unpublish(id, &ep) as u64)))
+        }
+        tags::BLOB_META => {
+            let id: ObjId = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+            let meta = local
+                .meta(id)
+                .ok_or_else(|| format!("blob {id} is not held by this node"))?;
+            transfers_out.fetch_add(1, Ordering::Relaxed);
+            Ok(wire::to_bytes(&meta))
+        }
+        tags::BLOB_CHUNK => {
+            let (id, idx): (ObjId, u64) =
+                wire::from_bytes(payload).map_err(|e| e.to_string())?;
+            local
+                .chunk(id, idx as usize)
+                .ok_or_else(|| format!("blob {id} has no chunk {idx} on this node"))
+        }
+        other => Err(format!("unknown store tag {other:#x}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(tag: u8, len: usize) -> Vec<u8> {
+        (0..len).map(|i| tag ^ (i % 249) as u8).collect()
+    }
+
+    #[test]
+    fn put_get_local_roundtrip() {
+        let node = StoreNode::host(16 << 20);
+        let data = payload(1, 100_000);
+        let id = node.put_bytes(&data).unwrap();
+        assert_eq!(*node.get_bytes(id).unwrap(), data);
+        assert_eq!(node.transfers(), 0);
+        assert_eq!(node.local_hits(), 1);
+        // Unserved puts are visible in the directory under a node-unique
+        // local-only marker (GC semantics hold without a TCP server, and
+        // two unserved holders never alias to one location).
+        let entry = node.directory().lookup(id).unwrap();
+        assert_eq!(entry.locations.len(), 1);
+        assert!(entry.locations[0].starts_with(LOCAL_ONLY), "{:?}", entry.locations);
+        let other = StoreNode::with_directory(
+            match node.directory() {
+                crate::store::DirectoryClient::Local(d) => d.clone(),
+                _ => unreachable!(),
+            },
+            16 << 20,
+        );
+        other.put_bytes(&data).unwrap();
+        assert_eq!(
+            node.directory().lookup(id).unwrap().locations.len(),
+            2,
+            "two unserved holders are two distinct locations"
+        );
+        // One holder dropping must not GC the other's live registration.
+        assert_eq!(other.drop_blob(id).unwrap(), 1);
+        assert!(node.directory().lookup(id).is_ok());
+    }
+
+    #[test]
+    fn two_nodes_fetch_over_tcp() {
+        let a = StoreNode::host(16 << 20);
+        let ep = a.serve("127.0.0.1:0").unwrap();
+        let data = payload(2, 1_000_000); // ~4 chunks at the default size
+        let id = a.put_bytes(&data).unwrap();
+        let b = StoreNode::connect(&ep, 16 << 20).unwrap();
+        assert!(!b.contains(id));
+        assert_eq!(*b.get_bytes(id).unwrap(), data);
+        assert_eq!(b.transfers(), 1);
+        assert_eq!(a.serves(), 1);
+        // Second get is a pure cache hit.
+        assert_eq!(*b.get_bytes(id).unwrap(), data);
+        assert_eq!(b.transfers(), 1);
+        assert_eq!(b.local_hits(), 1);
+    }
+
+    #[test]
+    fn concurrent_gets_share_one_transfer() {
+        let a = StoreNode::host(16 << 20);
+        let ep = a.serve("127.0.0.1:0").unwrap();
+        let data = payload(3, 2_000_000);
+        let id = a.put_bytes(&data).unwrap();
+        let b = StoreNode::connect(&ep, 16 << 20).unwrap();
+        let threads: Vec<_> = (0..8)
+            .map(|_| {
+                let b = b.clone();
+                std::thread::spawn(move || b.get_bytes(id).unwrap().len())
+            })
+            .collect();
+        for t in threads {
+            assert_eq!(t.join().unwrap(), data.len());
+        }
+        assert_eq!(
+            b.transfers(),
+            1,
+            "eight racing gets must share a single-flight transfer"
+        );
+        assert_eq!(a.serves(), 1, "the serving side saw exactly one transfer");
+    }
+
+    #[test]
+    fn gc_breaks_remote_lookup_cleanly() {
+        let a = StoreNode::host(16 << 20);
+        let ep = a.serve("127.0.0.1:0").unwrap();
+        let id = a.put_bytes(&payload(4, 10_000)).unwrap();
+        let b = StoreNode::connect(&ep, 16 << 20).unwrap();
+        assert_eq!(a.drop_blob(id).unwrap(), 0, "last holder GCs the entry");
+        let err = b.get_bytes(id).unwrap_err();
+        assert!(
+            err.to_string().contains("garbage-collected")
+                || err.to_string().contains("unknown to the directory"),
+            "{err:#}"
+        );
+    }
+
+    #[test]
+    fn fetched_copy_becomes_a_new_location() {
+        let a = StoreNode::host(16 << 20);
+        let ep_a = a.serve("127.0.0.1:0").unwrap();
+        let data = payload(5, 300_000);
+        let id = a.put_bytes(&data).unwrap();
+        // b serves too: after fetching it republishes itself.
+        let b = StoreNode::connect(&ep_a, 16 << 20).unwrap();
+        let ep_b = b.serve("127.0.0.1:0").unwrap();
+        b.get_bytes(id).unwrap();
+        let locs = a.directory().lookup(id).unwrap().locations;
+        assert!(locs.contains(&ep_a) && locs.contains(&ep_b), "{locs:?}");
+        // A third node can now be served by b alone: drop a's copy.
+        a.drop_blob(id).unwrap();
+        let c = StoreNode::connect(&ep_a, 16 << 20).unwrap();
+        assert_eq!(*c.get_bytes(id).unwrap(), data);
+        assert_eq!(b.serves(), 1);
+    }
+}

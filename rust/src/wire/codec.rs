@@ -96,6 +96,23 @@ impl Decode for usize {
     }
 }
 
+// Fixed-size byte arrays (content hashes, digests): no length prefix —
+// the size is part of the type.
+impl<const N: usize> Encode for [u8; N] {
+    #[inline]
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(self);
+    }
+}
+
+impl<const N: usize> Decode for [u8; N] {
+    #[inline]
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        let bytes = r.take(N)?;
+        Ok(bytes.try_into().unwrap())
+    }
+}
+
 impl Encode for bool {
     #[inline]
     fn encode(&self, buf: &mut Vec<u8>) {
@@ -324,6 +341,17 @@ mod tests {
     #[test]
     fn nested_vectors() {
         roundtrip(vec![vec![1u32, 2], vec![], vec![3]]);
+    }
+
+    #[test]
+    fn fixed_byte_arrays_are_raw() {
+        roundtrip([0u8; 0]);
+        roundtrip([7u8, 8, 9]);
+        roundtrip([0xffu8; 16]);
+        // No length prefix: 16 bytes encode to exactly 16 bytes.
+        assert_eq!(to_bytes(&[0xabu8; 16]).len(), 16);
+        let r: Result<[u8; 16], _> = from_bytes(&[0u8; 15]);
+        assert!(matches!(r, Err(WireError::Eof { .. })));
     }
 
     #[test]
