@@ -1,0 +1,62 @@
+//! Population-based training in a few lines: an asynchronous PBT
+//! population of ES trials on cartpole, checkpoints passed by reference
+//! through the object store.
+//!
+//! ```sh
+//! cargo run --release --example pbt
+//! ```
+
+use fiber::api::pool::Pool;
+use fiber::pop::{DispatchMode, EnvKind, PbtAlgo, PbtConfig, PopulationRunner};
+
+fn main() -> fiber::Result<()> {
+    // One process-global store node: trial checkpoints are 24-byte
+    // ObjRefs in every task payload, never θ copies.
+    let store = fiber::store::node_or_host(256 << 20);
+    let pool = Pool::builder().processes(3).store(store.clone()).build()?;
+    let cfg = PbtConfig {
+        algo: PbtAlgo::Es,
+        env: EnvKind::CartPole,
+        pop: 4,
+        slices: 3,
+        iters_per_slice: 1,
+        max_steps: 150,
+        pop_inner: 8,
+        verbose: true,
+        ..Default::default()
+    };
+    let slices = cfg.slices;
+    let mut runner = PopulationRunner::new(cfg, store)?;
+    let report = runner.run(&pool, DispatchMode::Async)?;
+
+    println!("\nfinal population:");
+    for t in runner.trials() {
+        let hp: Vec<String> = t
+            .hparams
+            .0
+            .iter()
+            .map(|h| format!("{}={:.4}", h.name, h.value))
+            .collect();
+        println!(
+            "  {} score {:>7.2} best {:>7.2} clones {} parent {:?}  {}",
+            t.id,
+            t.score,
+            t.best_score,
+            t.clones,
+            t.parent,
+            hp.join(" ")
+        );
+        assert_eq!(t.slices_done, slices, "no trial may lose slices");
+        assert!(runner.leaderboard().best_is_monotone(t.id));
+    }
+    println!(
+        "\nbest {} at {:.2} after {} slices ({} exploit(s), {:.1}s); lineage log has {} events",
+        report.best,
+        report.best_score,
+        report.slices_completed,
+        report.exploits,
+        report.wall_s,
+        runner.leaderboard().events().len()
+    );
+    Ok(())
+}

@@ -1,0 +1,158 @@
+//! Population-dispatch and checkpoint-exploit benchmarks.
+//!
+//! `cargo bench --bench pbt` (add `-- --quick` to trim the sweep).
+//! Prints benchkit tables and writes machine-readable results to
+//! `BENCH_pbt.json`.
+//!
+//! Two claims are measured:
+//!
+//! * **Async ≥ lock-step.** Population throughput (slices/s) of the
+//!   asynchronous dispatcher vs the generational barrier at pop 8 and 32
+//!   over 4 workers, driving a synthetic slice whose duration varies by
+//!   trial — the heterogeneity that stalls a generation barrier behind
+//!   its slowest member while async dispatch keeps every worker busy.
+//! * **Exploit is O(1), not O(θ).** Cloning a checkpoint by `ObjRef` (a
+//!   24-byte handle plus an incref) vs by value (get + copy + re-put) at
+//!   1 MB and 16 MB of θ: the by-ref cost must not scale with θ.
+
+use std::time::{Duration, Instant};
+
+use fiber::benchkit::{measure, Json, Table};
+use fiber::coordinator::register_task;
+use fiber::experiments::timed_pbt;
+use fiber::pop::{DispatchMode, SliceInput, SliceOutput};
+use fiber::store::StoreNode;
+
+/// Synthetic train slice: sleeps a per-trial duration (heterogeneous by
+/// construction) and hands the checkpoint back unchanged.
+const SLEEP_SLICE: &str = "pbt.bench_sleep";
+
+fn register_sleep_slice() {
+    register_task(SLEEP_SLICE, |input: SliceInput| {
+        let ms = 2 + (input.trial % 4) * 3;
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok::<SliceOutput, String>(SliceOutput {
+            trial: input.trial,
+            slice: input.slice,
+            checkpoint: input.checkpoint,
+            // Monotone per trial so lineage invariants hold.
+            reward: input.slice as f32 + input.trial as f32 * 0.01,
+            env_steps: 0,
+            worker: 0,
+        })
+    });
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    register_sleep_slice();
+
+    // ---- async vs lock-step population throughput ----------------------
+    let pops: &[usize] = if quick { &[8] } else { &[8, 32] };
+    let slices = if quick { 3 } else { 4 };
+    let workers = 4;
+    let mut table = Table::new(
+        "PBT dispatch: async vs lock-step slice throughput (4 workers)",
+        "pop",
+        vec!["async slices/s".into(), "lock-step slices/s".into(), "speedup".into()],
+    );
+    table.unit = "";
+    let mut dispatch_records = Vec::new();
+    for &pop in pops {
+        let a = timed_pbt(DispatchMode::Async, pop, workers, slices, Some(SLEEP_SLICE))
+            .expect("async pbt run");
+        let g = timed_pbt(
+            DispatchMode::Generational,
+            pop,
+            workers,
+            slices,
+            Some(SLEEP_SLICE),
+        )
+        .expect("generational pbt run");
+        let speedup = a.slices_per_s / g.slices_per_s.max(1e-9);
+        println!(
+            "pop {pop:>3}: async {:>8.1} slices/s   lock-step {:>8.1} slices/s   {speedup:>5.2}×",
+            a.slices_per_s, g.slices_per_s,
+        );
+        table.add_row(
+            format!("{pop}"),
+            vec![Some(a.slices_per_s), Some(g.slices_per_s), Some(speedup)],
+        );
+        dispatch_records.push(Json::Obj(vec![
+            ("pop".into(), Json::num(pop as f64)),
+            ("workers".into(), Json::num(workers as f64)),
+            ("slices_per_trial".into(), Json::num(slices as f64)),
+            ("async_slices_per_s".into(), Json::num(a.slices_per_s)),
+            ("async_wall_s".into(), Json::num(a.wall_s)),
+            ("lockstep_slices_per_s".into(), Json::num(g.slices_per_s)),
+            ("lockstep_wall_s".into(), Json::num(g.wall_s)),
+            ("speedup".into(), Json::num(speedup)),
+        ]));
+    }
+    table.print();
+
+    // ---- by-ref vs by-value checkpoint exploit cost ---------------------
+    let node = StoreNode::host(1 << 30);
+    let theta_mbs: &[usize] = if quick { &[1] } else { &[1, 16] };
+    let samples = if quick { 20 } else { 50 };
+    let mut exploit_table = Table::new(
+        "Checkpoint exploit: clone by ObjRef vs by value",
+        "θ size",
+        vec!["by-ref".into(), "by-value".into(), "ratio".into()],
+    );
+    let mut exploit_records = Vec::new();
+    for &mb in theta_mbs {
+        let theta: Vec<u8> = (0..mb << 20).map(|i| (i % 251) as u8 ^ mb as u8).collect();
+        let src = node.put(&theta).expect("put θ");
+        node.pin(src.id());
+        // Exploit by reference: what PopulationRunner::exploit_from does —
+        // copy the 24-byte handle and bump the refcount.
+        let byref = measure(2, samples, || {
+            let clone = src;
+            node.incref(clone.id());
+            node.decref(clone.id());
+        });
+        // Exploit by value: fetch θ, copy it (the mutated clone a
+        // value-passing design would ship), and re-put.
+        let mut tweak = 0u8;
+        let byval = measure(1, samples.min(8), || {
+            let bytes = node.get_bytes(src.id()).expect("get θ");
+            let mut copy = bytes.to_vec();
+            tweak = tweak.wrapping_add(1);
+            copy[0] = tweak;
+            node.put_bytes(&copy).expect("re-put θ clone");
+        });
+        let ratio = byval.mean() / byref.mean().max(1e-12);
+        println!(
+            "θ {mb:>2} MB: by-ref {:>9.3}µs   by-value {:>9.2}ms   ({ratio:>9.0}× cheaper by ref)",
+            byref.mean() * 1e6,
+            byval.mean() * 1e3,
+        );
+        exploit_table.add_row(
+            format!("{mb}MB"),
+            vec![Some(byref.mean()), Some(byval.mean()), Some(ratio)],
+        );
+        exploit_records.push(Json::Obj(vec![
+            ("theta_mb".into(), Json::num(mb as f64)),
+            ("byref_mean_s".into(), Json::num(byref.mean())),
+            ("byref_std_s".into(), Json::num(byref.std())),
+            ("byval_mean_s".into(), Json::num(byval.mean())),
+            ("byval_std_s".into(), Json::num(byval.std())),
+            ("ratio".into(), Json::num(ratio)),
+        ]));
+    }
+    exploit_table.print();
+
+    let t0 = Instant::now();
+    let doc = Json::Obj(vec![
+        ("bench".into(), Json::str("pbt")),
+        ("quick".into(), Json::Bool(quick)),
+        ("dispatch".into(), Json::Arr(dispatch_records)),
+        ("exploit".into(), Json::Arr(exploit_records)),
+    ]);
+    let path = "BENCH_pbt.json";
+    match doc.write(path) {
+        Ok(()) => println!("\nwrote {path} ({:.1}ms)", t0.elapsed().as_secs_f64() * 1e3),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
+}

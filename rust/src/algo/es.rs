@@ -208,6 +208,27 @@ impl EsMaster {
         }
     }
 
+    /// Rebuild a master from checkpointed state: `cfg` carries the
+    /// (possibly PBT-mutated) hyper-parameters, `theta`/`adam` resume
+    /// where the previous train slice stopped (see [`crate::pop`]). The
+    /// offset RNG is not part of the state — resumers drive their own
+    /// deterministically-seeded sampler through [`EsMaster::update`].
+    pub fn from_state(cfg: EsConfig, theta: Vec<f32>, adam: Adam) -> Self {
+        let rng = Rng::new(cfg.seed);
+        Self {
+            cfg,
+            theta,
+            adam,
+            rng,
+            iteration: 0,
+        }
+    }
+
+    /// The optimizer state (checkpoint export).
+    pub fn adam(&self) -> &Adam {
+        &self.adam
+    }
+
     /// Run one ES iteration over `pool`. If `runtime` is given and the
     /// population matches the `es_update` artifact, the update runs through
     /// PJRT; otherwise the pure-Rust path is used.

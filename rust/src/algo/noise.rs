@@ -90,6 +90,24 @@ pub fn shared_table(seed: u64, size: usize) -> Arc<NoiseTable> {
         .clone()
 }
 
+/// The cached table for `(seed, size)`, if some earlier caller already
+/// generated or received it — a peek that never pays the generation cost.
+pub fn try_shared_table(seed: u64, size: usize) -> Option<Arc<NoiseTable>> {
+    TABLES.lock().unwrap().get(&(seed, size)).cloned()
+}
+
+/// Install table data received out-of-band — e.g. fetched as one store
+/// blob by a PBT train slice ([`crate::pop`]) — into the process-wide
+/// cache, so subsequent [`shared_table`] calls hit it instead of
+/// regenerating. First writer wins; returns the cached table.
+pub fn install_shared_table(seed: u64, size: usize, data: Vec<f32>) -> Arc<NoiseTable> {
+    let mut tables = TABLES.lock().unwrap();
+    tables
+        .entry((seed, size))
+        .or_insert_with(|| Arc::new(NoiseTable::from_data(seed, data)))
+        .clone()
+}
+
 /// Ring-shared table: rank 0 of the member's generation generates (or
 /// reuses) the table and ring-broadcasts it; every other rank receives it
 /// instead of regenerating, then caches it in the process-wide registry so

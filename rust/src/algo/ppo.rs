@@ -113,6 +113,22 @@ impl PpoTrainer {
         }
     }
 
+    /// Rebuild a trainer from checkpointed state (see [`crate::pop`]):
+    /// `cfg` carries the possibly-mutated hyper-parameters, and
+    /// `params`/`adam` resume the network and optimizer where the
+    /// previous train slice stopped. Episode tracking restarts fresh.
+    pub fn from_state(cfg: PpoConfig, params: Vec<f32>, adam: Adam) -> Self {
+        let mut tr = PpoTrainer::new(cfg);
+        tr.net.params = params;
+        tr.adam = adam;
+        tr
+    }
+
+    /// The optimizer state (checkpoint export).
+    pub fn adam(&self) -> &Adam {
+        &self.adam
+    }
+
     /// Policy forward for a batch of observations → (action, logp, value)
     /// per row. Uses the `ppo_act` artifact when available (padding the
     /// batch to its fixed 256 rows), else the pure-Rust network.

@@ -28,8 +28,50 @@ use crate::coordinator::batch::{make_chunks, register_chunk_runner, CHUNK_FN};
 use crate::coordinator::pool_server::{FetchReply, PoolServer, ResultMsg, WorkerId};
 use crate::coordinator::scaling::{Autoscaler, AutoscalePolicy};
 use crate::coordinator::task::{execute_registered, Task, TaskId};
-use crate::store::{ObjRef, StoreNode};
+use crate::store::{ObjId, ObjRef, StoreNode};
 use crate::wire::{self, Decode, Encode};
+
+/// Name of the auto-ref runner: the worker-side wrapper that resolves an
+/// auto-put payload blob through the process store node and hands the
+/// bytes to the wrapped function (see [`PoolBuilder::auto_put_threshold`]).
+pub const AUTOREF_FN: &str = "fiber.autoref";
+
+/// Register the auto-ref runner (idempotent; pool construction and
+/// `fiber-cli`'s task bootstrap both call it, so thread and OS-process
+/// workers resolve wrapped payloads identically). Registered **raw**: the
+/// inner function's output is already wire-encoded.
+pub fn register_autoref_runner() {
+    crate::coordinator::task::register_task_raw(AUTOREF_FN, |payload| {
+        let (fn_name, id, len): (String, ObjId, u64) =
+            wire::from_bytes(payload).map_err(|e| format!("autoref decode: {e}"))?;
+        let node = crate::store::node().map_err(|e| e.to_string())?;
+        let bytes = node
+            .get_bytes(id)
+            .map_err(|e| format!("autoref fetch of {id}: {e:#}"))?;
+        if bytes.len() as u64 != len {
+            return Err(format!(
+                "autoref blob {id}: {} bytes, expected {len}",
+                bytes.len()
+            ));
+        }
+        execute_registered(&fn_name, &bytes)
+    });
+}
+
+/// The function a task actually runs on the worker, seen through the
+/// transparent auto-ref wrapper — `deliver` needs this to know whether a
+/// result is a chunk batch.
+fn task_runs_chunks(task: &Task) -> bool {
+    if task.fn_name == CHUNK_FN {
+        return true;
+    }
+    if task.fn_name == AUTOREF_FN {
+        if let Ok((inner, _, _)) = wire::from_bytes::<(String, ObjId, u64)>(&task.payload) {
+            return inner == CHUNK_FN;
+        }
+    }
+    false
+}
 
 /// How a finished map result is delivered.
 enum Sink {
@@ -46,6 +88,9 @@ struct MapState {
     sink: Sink,
     error: Option<String>,
     done: bool,
+    /// Blobs auto-put for this map's oversized payloads; dereferenced
+    /// (eviction-eligible again) when the map finishes.
+    auto_refs: Vec<ObjId>,
 }
 
 type SharedMap = Arc<(Mutex<MapState>, Condvar)>;
@@ -138,6 +183,9 @@ struct PoolShared {
     store: Option<Arc<StoreNode>>,
     /// The store's served endpoint, handed to proc workers via `--store`.
     store_addr: Option<String>,
+    /// Auto-put threshold in bytes: task payloads above it are stored and
+    /// passed by reference transparently (None = disabled).
+    auto_put: Option<usize>,
 }
 
 /// Builder for [`Pool`].
@@ -150,6 +198,7 @@ pub struct PoolBuilder {
     autoscale: Option<AutoscalePolicy>,
     fetch_timeout_ms: u64,
     store: Option<Arc<StoreNode>>,
+    auto_put_threshold: Option<usize>,
 }
 
 impl Default for PoolBuilder {
@@ -163,6 +212,7 @@ impl Default for PoolBuilder {
             autoscale: None,
             fetch_timeout_ms: 200,
             store: None,
+            auto_put_threshold: None,
         }
     }
 }
@@ -212,6 +262,20 @@ impl PoolBuilder {
         self
     }
 
+    /// `ObjRef`-aware auto-put: any task payload whose encoded size
+    /// exceeds `bytes` is transparently `put` into the pool's store and
+    /// shipped as a 24-byte reference — the worker-side auto-ref runner
+    /// resolves the blob (one transfer per node, then cache hits) and
+    /// hands the original bytes to the task function, which stays
+    /// completely unaware. Requires [`PoolBuilder::store`]; the blobs are
+    /// referenced for the map's lifetime and released when it finishes.
+    /// Applies to collecting maps (`map`/`map_async`/`apply`); streaming
+    /// `imap_unordered` payloads always ship by value.
+    pub fn auto_put_threshold(mut self, bytes: usize) -> Self {
+        self.auto_put_threshold = Some(bytes);
+        self
+    }
+
     pub fn build(self) -> Result<Pool> {
         Pool::from_builder(self)
     }
@@ -238,6 +302,11 @@ impl Pool {
 
     fn from_builder(b: PoolBuilder) -> Result<Pool> {
         register_chunk_runner();
+        register_autoref_runner();
+        anyhow::ensure!(
+            b.auto_put_threshold.is_none() || b.store.is_some(),
+            "auto_put_threshold needs a store node (PoolBuilder::store)"
+        );
         let backend: Arc<dyn ClusterBackend> = match (&b.backend, b.proc_workers) {
             (Some(be), _) => be.clone(),
             (None, false) => Arc::new(LocalBackend::new()),
@@ -276,6 +345,7 @@ impl Pool {
             fetch_timeout_ms: b.fetch_timeout_ms,
             store: b.store.clone(),
             store_addr,
+            auto_put: b.auto_put_threshold,
         });
         for _ in 0..b.processes {
             spawn_worker(&shared)?;
@@ -374,6 +444,7 @@ impl Pool {
                 },
                 error: None,
                 done: n == 0,
+                auto_refs: Vec::new(),
             }),
             Condvar::new(),
         ));
@@ -407,6 +478,7 @@ impl Pool {
                 sink: Sink::Stream(tx),
                 error: None,
                 done: n == 0,
+                auto_refs: Vec::new(),
             }),
             Condvar::new(),
         ));
@@ -436,6 +508,7 @@ impl Pool {
                 },
                 error: None,
                 done: n == 0,
+                auto_refs: Vec::new(),
             }),
             Condvar::new(),
         ));
@@ -456,13 +529,12 @@ impl Pool {
                 "pool has no store node: pass one through PoolBuilder::store",
             )?,
         };
-        let r = node.put(v)?;
         // Map arguments must outlive LRU churn from concurrent puts (e.g.
-        // tasks storing by-ref results into the same node): hold a
-        // reference so the blob stays eviction-ineligible. Release with
+        // tasks storing by-ref results into the same node): the held put
+        // takes the reference atomically with the insert, so the blob is
+        // never observable at refcount 0. Release with
         // `StoreNode::decref(r.id())` when the handle is retired.
-        node.incref(r.id());
-        Ok(r)
+        node.put_held(v)
     }
 
     /// Run one task and wait for its result.
@@ -490,12 +562,12 @@ impl Pool {
         if enc.is_empty() {
             return Ok(map_id);
         }
-        self.shared.maps.lock().unwrap().insert(map_id, shared_map);
+        let mut tasks: Vec<Task> = Vec::new();
         if chunksize > 1 {
             let mut start = 0u64;
             for chunk in make_chunks(fn_name, enc, chunksize) {
                 let k = chunk.items.len() as u64;
-                self.shared.server.submit(Task {
+                tasks.push(Task {
                     id: TaskId::fresh(),
                     map_id,
                     index: start,
@@ -506,7 +578,7 @@ impl Pool {
             }
         } else {
             for (i, payload) in enc.into_iter().enumerate() {
-                self.shared.server.submit(Task {
+                tasks.push(Task {
                     id: TaskId::fresh(),
                     map_id,
                     index: i as u64,
@@ -515,7 +587,62 @@ impl Pool {
                 });
             }
         }
+        // Auto-put applies to collecting maps only: their blobs are
+        // released in deliver()'s finished block, which streaming maps
+        // (imap_unordered) never reach on success — wrapping those would
+        // hold the references forever, so their payloads ship by value.
+        let streaming = matches!(shared_map.0.lock().unwrap().sink, Sink::Stream(_));
+        if !streaming {
+            let auto_refs = self.auto_put_wrap(&mut tasks)?;
+            if !auto_refs.is_empty() {
+                shared_map.0.lock().unwrap().auto_refs = auto_refs;
+            }
+        }
+        self.shared.maps.lock().unwrap().insert(map_id, shared_map);
+        for t in tasks {
+            self.shared.server.submit(t);
+        }
         Ok(map_id)
+    }
+
+    /// Transparent pass-by-reference for oversized payloads: each task
+    /// whose encoded payload exceeds the configured threshold is `put`
+    /// into the pool's store once and rewritten as an [`AUTOREF_FN`] task
+    /// naming the blob — 24 bytes of handle plus the wrapped function's
+    /// name cross the wire, the first task on each worker node faults the
+    /// blob in, and every later one is a cache hit. Returns the blob ids
+    /// (referenced here; released when the map finishes).
+    fn auto_put_wrap(&self, tasks: &mut [Task]) -> Result<Vec<ObjId>> {
+        let (Some(threshold), Some(node)) = (self.shared.auto_put, self.shared.store.as_ref())
+        else {
+            return Ok(Vec::new());
+        };
+        let mut refs = Vec::new();
+        for t in tasks.iter_mut() {
+            if t.payload.len() <= threshold {
+                continue;
+            }
+            let len = t.payload.len() as u64;
+            // Held put: inserted and referenced atomically, so a racing
+            // over-budget insert can never evict the payload before its
+            // tasks resolve it. Released when the map finishes.
+            let id = match node.put_bytes_held(&t.payload) {
+                Ok(id) => id,
+                Err(e) => {
+                    // The map will never run: release the blobs already
+                    // referenced for it, or they stay eviction-ineligible
+                    // forever.
+                    for id in refs {
+                        node.decref(id);
+                    }
+                    return Err(e).context("auto-put payload");
+                }
+            };
+            refs.push(id);
+            let inner = std::mem::replace(&mut t.fn_name, AUTOREF_FN.to_string());
+            t.payload = wire::to_bytes(&(inner, id, len));
+        }
+        Ok(refs)
     }
 
     /// Dynamically resize the pool (the paper's dynamic scaling).
@@ -640,6 +767,7 @@ fn worker_loop_inproc(
     timeout: Duration,
     token: &crate::cluster::CancelToken,
 ) {
+    crate::coordinator::task::set_current_worker(wid.0);
     loop {
         if token.is_cancelled() {
             return;
@@ -689,8 +817,9 @@ fn deliver(shared: &Arc<PoolShared>, msg: ResultMsg) {
             true
         }
         Ok(bytes) => {
-            // A chunk task's output is Vec<Vec<u8>> starting at task.index.
-            let outputs: Vec<(u64, Vec<u8>)> = if msg.task.fn_name == CHUNK_FN {
+            // A chunk task's output is Vec<Vec<u8>> starting at task.index
+            // (auto-ref wrapping is transparent: look through it).
+            let outputs: Vec<(u64, Vec<u8>)> = if task_runs_chunks(&msg.task) {
                 match wire::from_bytes::<Vec<Vec<u8>>>(&bytes) {
                     Ok(outs) => outs
                         .into_iter()
@@ -737,11 +866,19 @@ fn deliver(shared: &Arc<PoolShared>, msg: ResultMsg) {
     };
     if finished {
         st.done = true;
+        let auto_refs = std::mem::take(&mut st.auto_refs);
         if let Sink::Stream(tx) = &st.sink {
             tx.close();
         }
         cv.notify_all();
         drop(st);
+        // Auto-put payload blobs are done travelling: release them so the
+        // LRU may reclaim the bytes.
+        if let Some(node) = &shared.store {
+            for id in auto_refs {
+                node.decref(id);
+            }
+        }
         shared.maps.lock().unwrap().remove(&msg.task.map_id);
     }
 }
@@ -1071,7 +1208,10 @@ mod tests {
             let v: Vec<f32> = r.get().map_err(|e| e.to_string())?;
             Ok::<f32, String>(v.iter().sum::<f32>() + bias)
         });
-        let node = StoreNode::host(64 << 20);
+        // The process-global slot is shared across this binary's tests:
+        // resolve and install through it so parallel tests agree on one
+        // node instead of racing installs.
+        let node = crate::store::node_or_host(64 << 20);
         let pool = Pool::builder()
             .processes(4)
             .store(node.clone())
@@ -1097,6 +1237,54 @@ mod tests {
         let back: Vec<u8> = rr.get().unwrap();
         assert_eq!(back.len(), 5000);
         assert_eq!(back[250], 250u8);
+    }
+
+    #[test]
+    fn auto_put_threshold_wraps_large_payloads_transparently() {
+        setup();
+        register_task("pool.autoput_len", |v: Vec<u8>| Ok::<u64, String>(v.len() as u64));
+        let node = crate::store::node_or_host(64 << 20);
+        let pool = Pool::builder()
+            .processes(3)
+            .store(node.clone())
+            .auto_put_threshold(4 << 10)
+            .build()
+            .unwrap();
+        let hits_before = node.local_hits();
+        let big = vec![7u8; 100_000];
+        let out: Vec<u64> = pool
+            .map("pool.autoput_len", (0..12).map(|_| big.clone()))
+            .unwrap();
+        assert_eq!(out, vec![100_000u64; 12]);
+        // The task function received the original bytes without knowing
+        // about the wrapping, and every resolve was a local store hit
+        // (thread workers share the leader's node — no transfer at all).
+        assert!(
+            node.local_hits() >= hits_before + 12,
+            "every wrapped task must resolve the blob through the store"
+        );
+        assert_eq!(node.transfers(), 0);
+        // Payloads at or below the threshold stay by-value.
+        let out: Vec<u64> = pool
+            .map("pool.autoput_len", (0..4).map(|_| vec![1u8; 16]))
+            .unwrap();
+        assert_eq!(out, vec![16u64; 4]);
+        // Chunked maps wrap whole chunk payloads and still unpack into
+        // the right result slots.
+        let out: Vec<u64> = pool
+            .map_chunked("pool.autoput_len", (0..10).map(|_| big.clone()), 3)
+            .unwrap();
+        assert_eq!(out, vec![100_000u64; 10]);
+    }
+
+    #[test]
+    fn auto_put_without_store_is_a_build_error() {
+        let err = Pool::builder()
+            .processes(1)
+            .auto_put_threshold(1024)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("store"), "{err}");
     }
 
     #[test]

@@ -82,6 +82,38 @@ where
     REGISTRY.lock().unwrap().insert(name.to_string(), wrapped);
 }
 
+/// Register a **raw** task function: payload bytes in, already-encoded
+/// output bytes out, with no typed wrapping on either side. Wrapper
+/// runners that re-dispatch to an inner registered function use this —
+/// the inner function's output is already wire-encoded, and wrapping it
+/// again would double-encode (the chunk runner avoids this by declaring
+/// `Vec<Vec<u8>>`; pass-through wrappers like the pool's auto-ref runner
+/// cannot, because the inner output type is unknown to them).
+pub fn register_task_raw<F>(name: &str, f: F)
+where
+    F: Fn(&[u8]) -> Result<Vec<u8>, String> + Send + Sync + 'static,
+{
+    REGISTRY.lock().unwrap().insert(name.to_string(), Arc::new(f));
+}
+
+thread_local! {
+    /// Pool worker id executing on this thread (0 = not a worker thread).
+    static CURRENT_WORKER: std::cell::Cell<u64> = const { std::cell::Cell::new(0) };
+}
+
+/// Mark this thread as the execution thread of pool worker `id`. Both
+/// worker loops (in-process threads and `fiber-cli worker` processes) call
+/// this before their first fetch, so task functions can observe which
+/// worker is running them (chaos injection, observability).
+pub fn set_current_worker(id: u64) {
+    CURRENT_WORKER.with(|c| c.set(id));
+}
+
+/// The pool worker id executing on this thread (0 when not on a worker).
+pub fn current_worker() -> u64 {
+    CURRENT_WORKER.with(|c| c.get())
+}
+
 /// Execute a registered function on raw payload bytes.
 pub fn execute_registered(fn_name: &str, payload: &[u8]) -> Result<Vec<u8>, String> {
     let f = {

@@ -69,7 +69,8 @@ impl ActionSpec {
 }
 
 /// Roll out `policy` for at most `max_steps`, returning (total reward, steps).
-pub fn rollout<E: Env>(
+/// `?Sized`: callers may hold the environment as a `Box<dyn Env>`.
+pub fn rollout<E: Env + ?Sized>(
     env: &mut E,
     seed: u64,
     max_steps: usize,

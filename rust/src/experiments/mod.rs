@@ -6,10 +6,12 @@
 
 pub mod dynamic;
 pub mod overhead;
+pub mod pbt;
 pub mod ring;
 pub mod scaling;
 
 pub use dynamic::dynamic_scaling_experiment;
 pub use overhead::{calibrate_fiber_dispatch_ns, overhead_experiment, OverheadConfig};
+pub use pbt::{pbt_figure, timed_pbt, PbtTiming};
 pub use ring::{ring_collectives_figure, timed_allreduce, RingTiming};
 pub use scaling::{es_scaling_figure, ppo_scaling_figure, ScalingConfig};

@@ -1,0 +1,112 @@
+//! The PBT dashboard panel: asynchronous vs lock-step population
+//! dispatch on a small ES/cartpole population — wall time, slice
+//! throughput, and the population best/mean reward the run ended on.
+//! The timing harness ([`timed_pbt`]) is shared with `benches/pbt.rs`,
+//! which persists the full sweep (pop 8/32, plus by-ref vs by-value
+//! exploit cost) to `BENCH_pbt.json` — panel and bench measure the same
+//! orchestration paths.
+
+use anyhow::Result;
+
+use crate::api::pool::Pool;
+use crate::benchkit::Table;
+use crate::pop::{DispatchMode, EnvKind, PbtAlgo, PbtConfig, PopulationRunner};
+
+/// Result of one timed population run.
+pub struct PbtTiming {
+    pub wall_s: f64,
+    pub slices_per_s: f64,
+    pub best: f32,
+    pub mean: f32,
+    pub exploits: usize,
+}
+
+/// Run one small ES/cartpole population to completion under `mode` and
+/// time it. `slice_task` lets benches substitute a synthetic slice (to
+/// time pure dispatch); `None` runs the real ES backend.
+pub fn timed_pbt(
+    mode: DispatchMode,
+    pop: usize,
+    workers: usize,
+    slices: usize,
+    slice_task: Option<&str>,
+) -> Result<PbtTiming> {
+    let store = crate::store::node_or_host(256 << 20);
+    let pool = Pool::builder()
+        .processes(workers)
+        .store(store.clone())
+        .build()?;
+    let mut cfg = PbtConfig {
+        algo: PbtAlgo::Es,
+        env: EnvKind::CartPole,
+        pop,
+        slices,
+        iters_per_slice: 1,
+        max_steps: 100,
+        pop_inner: 8,
+        seed: 40 + pop as u64,
+        ..Default::default()
+    };
+    if let Some(task) = slice_task {
+        cfg.slice_task = task.to_string();
+    }
+    let mut runner = PopulationRunner::new(cfg, store)?;
+    let report = runner.run(&pool, mode)?;
+    Ok(PbtTiming {
+        wall_s: report.wall_s,
+        slices_per_s: report.slices_completed as f64 / report.wall_s.max(1e-9),
+        best: report.best_score,
+        mean: report.mean_score,
+        exploits: report.exploits,
+    })
+}
+
+/// The dashboard table: async vs generational dispatch of the same
+/// population budget — wall time, slices/s, and where the population
+/// reward landed.
+pub fn pbt_figure() -> Result<Table> {
+    let mut table = Table::new(
+        "PBT (ES/cartpole, pop 6 × 3 slices over 3 workers): async vs lock-step",
+        "dispatch",
+        vec![
+            "wall s".into(),
+            "slices/s".into(),
+            "best reward".into(),
+            "mean reward".into(),
+        ],
+    );
+    // Mixed units per column: suppress the global seconds suffix.
+    table.unit = "";
+    for (label, mode) in [
+        ("async", DispatchMode::Async),
+        ("generational", DispatchMode::Generational),
+    ] {
+        let t = timed_pbt(mode, 6, 3, 3, None)?;
+        table.add_row(
+            label,
+            vec![
+                Some(t.wall_s),
+                Some(t.slices_per_s),
+                Some(t.best as f64),
+                Some(t.mean as f64),
+            ],
+        );
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_pbt_completes_in_both_modes() {
+        for mode in [DispatchMode::Async, DispatchMode::Generational] {
+            let t = timed_pbt(mode, 4, 2, 2, None).unwrap();
+            assert!(t.wall_s > 0.0);
+            assert!(t.slices_per_s > 0.0);
+            assert!(t.best.is_finite() && t.best > 0.0, "{mode:?}: {}", t.best);
+            assert!(t.mean.is_finite());
+        }
+    }
+}

@@ -17,8 +17,8 @@ use fiber::cluster::{ClusterBackend, JobHandle, JobSpec, JobStatus, LocalBackend
 use fiber::comms::Addr;
 use fiber::experiments::{
     calibrate_fiber_dispatch_ns, dynamic_scaling_experiment, es_scaling_figure,
-    overhead_experiment, ppo_scaling_figure, ring_collectives_figure, OverheadConfig,
-    ScalingConfig,
+    overhead_experiment, pbt_figure, ppo_scaling_figure, ring_collectives_figure,
+    OverheadConfig, ScalingConfig,
 };
 use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
 use fiber::runtime::Runtime;
@@ -618,6 +618,10 @@ pub fn scaling_sim(opts: &Opts) -> Result<()> {
     // beside the scaling curves (full sweep: `cargo bench --bench
     // ring_allreduce`, which persists BENCH_ring.json).
     ring_collectives_figure()?.print();
+    // Population layer: async vs lock-step PBT dispatch (full sweep with
+    // pop 8/32 and exploit costs: `cargo bench --bench pbt`, which
+    // persists BENCH_pbt.json).
+    pbt_figure()?.print();
     Ok(())
 }
 

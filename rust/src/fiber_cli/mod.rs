@@ -19,6 +19,7 @@ use fiber::wire;
 
 mod demo;
 mod experiments;
+mod pbt;
 mod ring;
 
 /// Parse `--key value` style options.
@@ -79,7 +80,9 @@ impl Opts {
 pub fn register_all_tasks() {
     register_es_tasks();
     register_bench_tasks();
+    fiber::pop::register_pbt_tasks();
     fiber::coordinator::batch::register_chunk_runner();
+    fiber::api::pool::register_autoref_runner();
 }
 
 pub fn run(args: Vec<String>) -> Result<()> {
@@ -95,6 +98,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "es" => experiments::es(&opts),
         "es-node" => experiments::es_node(&opts),
         "ppo" => experiments::ppo(&opts),
+        "pbt" => pbt::pbt(&opts),
         "scaling-sim" => experiments::scaling_sim(&opts),
         "help" | "--help" | "-h" => {
             print_help();
@@ -108,6 +112,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
 fn worker(opts: &Opts) -> Result<()> {
     let leader: std::net::SocketAddr = opts.require("leader")?.parse()?;
     let worker_id: u64 = opts.require("worker")?.parse()?;
+    fiber::coordinator::task::set_current_worker(worker_id);
     if let Some(store) = opts.get("store") {
         // Join the leader's object store: ObjRef task arguments resolve
         // through this node (one transfer per payload per worker process,
@@ -168,6 +173,10 @@ fn print_help() {
                         [--envs N] [--iters N] [--workers N] [--artifacts DIR]\n\
                         [--decentralized true [--world N]\n\
                          [--kill-rank R --kill-iter I --kill-chunk K]]\n\
+           pbt          population-based training over Pool workers\n\
+                        --algo {{es,ppo}} [--env {{cartpole,walker2d}}] [--pop N]\n\
+                        [--workers W] [--slices N] [--iters N] [--proc true]\n\
+                        [--sync true] [--quantile Q] [--kill-rank R]\n\
            scaling-sim  E2/E3 virtual-time scaling curves (Fig 3b/3c)\n\
            help         this message"
     );

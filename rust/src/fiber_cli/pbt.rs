@@ -1,0 +1,155 @@
+//! `fiber-cli pbt` — the population-based-training driver.
+//!
+//! Runs an asynchronous PBT population over Pool workers (threads by
+//! default, `--proc true` for `fiber-cli worker` OS processes wired to
+//! the leader's object store). `--kill-rank R` is the chaos switch: the
+//! pool worker with that rank dies mid-slice, the pool heals, the slice
+//! is requeued with the same checkpoint reference, and the run must end
+//! with every trial lineage intact.
+
+use anyhow::{Context, Result};
+
+use fiber::api::pool::Pool;
+use fiber::pop::{
+    DispatchMode, EnvKind, LineageEventKind, PbtAlgo, PbtConfig, PopulationRunner,
+};
+
+use super::Opts;
+
+/// `fiber-cli pbt --algo {es,ppo} --pop N --workers W [--env cartpole]
+/// [--slices N] [--iters N] [--proc true] [--sync true] [--kill-rank R]`
+pub fn pbt(opts: &Opts) -> Result<()> {
+    let algo = PbtAlgo::parse(opts.get_or("algo", "es"))?;
+    let env = EnvKind::parse(opts.get_or("env", "cartpole"))?;
+    let pop: usize = opts.parse_or("pop", 8)?;
+    let workers: usize = opts.parse_or("workers", 4)?;
+    let slices: usize = opts.parse_or("slices", 4)?;
+    let proc_mode: bool = opts.parse_or("proc", false)?;
+    let sync: bool = opts.parse_or("sync", false)?;
+    let kill_rank: i64 = opts.parse_or("kill-rank", -1i64)?;
+    anyhow::ensure!(
+        kill_rank < workers as i64,
+        "--kill-rank {kill_rank} out of range for {workers} workers"
+    );
+    // Only the worker whose id matches the kill target can die, so the
+    // queue must be deep enough that every worker (the victim included)
+    // is guaranteed to fetch an armed slice.
+    anyhow::ensure!(
+        kill_rank < 0 || pop >= workers,
+        "--kill-rank needs --pop >= --workers ({pop} < {workers}): with fewer armed \
+         slices than workers the victim may never fetch one"
+    );
+    let cfg = PbtConfig {
+        algo,
+        env,
+        pop,
+        slices,
+        iters_per_slice: opts.parse_or("iters", 2)?,
+        max_steps: opts.parse_or("max-steps", 200)?,
+        pop_inner: opts.parse_or("pop-inner", 16)?,
+        horizon: opts.parse_or("horizon", 64)?,
+        quantile: opts.parse_or("quantile", 0.25)?,
+        seed: opts.parse_or("seed", 7u64)?,
+        // Worker ids are 1-based; rank R is the (R+1)-th spawned worker.
+        kill_worker: if kill_rank >= 0 { kill_rank as u64 + 1 } else { 0 },
+        store_noise_table: algo == PbtAlgo::Es,
+        verbose: true,
+        ..Default::default()
+    };
+    let mode = if sync {
+        DispatchMode::Generational
+    } else {
+        DispatchMode::Async
+    };
+    println!(
+        "pbt: {algo:?} on {env:?} — pop {pop} × {slices} slices, {workers} {} workers, \
+         {mode:?} dispatch{}",
+        if proc_mode { "OS-process" } else { "thread" },
+        if kill_rank >= 0 {
+            format!(" — chaos: kill worker rank {kill_rank} mid-slice")
+        } else {
+            String::new()
+        }
+    );
+    // One process-global store node: checkpoints pass by reference, and
+    // with --proc true every worker process joins it over TCP.
+    let store = fiber::store::node_or_host(1 << 30);
+    let pool = Pool::builder()
+        .processes(workers)
+        .proc_workers(proc_mode)
+        .store(store.clone())
+        .build()
+        .context("build pool")?;
+    let mut runner = PopulationRunner::new(cfg, store)?;
+    let report = runner.run(&pool, mode)?;
+
+    // Final standings.
+    let mut rows: Vec<_> = runner.trials().iter().collect();
+    rows.sort_by(|a, b| {
+        b.best_score
+            .partial_cmp(&a.best_score)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    println!("\ntrial | score    | best     | slices | clones | parent | hparams");
+    for t in &rows {
+        let hp: Vec<String> = t
+            .hparams
+            .0
+            .iter()
+            .map(|h| format!("{}={:.4}", h.name, h.value))
+            .collect();
+        println!(
+            "{:>5} | {:>8.2} | {:>8.2} | {:>6} | {:>6} | {:>6} | {}",
+            t.id.to_string(),
+            t.score,
+            t.best_score,
+            t.slices_done,
+            t.clones,
+            t.parent.map(|p| p.to_string()).unwrap_or_else(|| "-".into()),
+            hp.join(" ")
+        );
+    }
+
+    // Lineage integrity: the acceptance bar for the chaos path.
+    for t in runner.trials() {
+        anyhow::ensure!(
+            t.slices_done == slices,
+            "trial {} lost slices: {}/{slices}",
+            t.id,
+            t.slices_done
+        );
+        anyhow::ensure!(
+            runner.leaderboard().best_is_monotone(t.id),
+            "trial {} best-reward regressed in its lineage",
+            t.id
+        );
+    }
+    let exploits = runner
+        .leaderboard()
+        .events()
+        .iter()
+        .filter(|e| matches!(e.kind, LineageEventKind::Clone { .. }))
+        .count();
+    if kill_rank >= 0 {
+        anyhow::ensure!(
+            pool.restarts() >= 1,
+            "chaos was armed but no worker died"
+        );
+        let (_, _, requeued) = pool.counters();
+        anyhow::ensure!(
+            requeued >= 1,
+            "the killed worker's slice must have been requeued, not dropped"
+        );
+        println!(
+            "\nchaos: worker rank {kill_rank} died mid-slice; pool healed \
+             ({} restart(s), {requeued} task(s) requeued) and no trial was lost",
+            pool.restarts()
+        );
+    }
+    println!(
+        "\nall {pop} trial lineages intact: best {} at {:.2} (population mean {:.2}), \
+         {} slices, {exploits} exploit(s) in {:.1}s",
+        report.best, report.best_score, report.mean_score, report.slices_completed, report.wall_s
+    );
+    Ok(())
+}

@@ -46,6 +46,22 @@
 //!   ring members cache-hit a broadcast (e.g. the ES noise table) instead
 //!   of re-streaming it.
 //!
+//! Fifth, the **population layer** — the workload the paper's title
+//! promises:
+//!
+//! * **Pop layer** ([`pop`]): an asynchronous population-based-training
+//!   orchestrator. A population of [`pop::Trial`]s (hyper-parameters + a
+//!   model checkpoint held as a reference-counted [`store::ObjRef`]) runs
+//!   fixed-budget train slices as Pool tasks with **no generation
+//!   barrier** — each trial re-dispatches the moment its slice returns —
+//!   and truncation-selection exploit/explore clones checkpoints by
+//!   24-byte reference through the store. Two trial backends (ES and
+//!   PPO over [`envs::cartpole`] / [`envs::walker2d`]) prove the
+//!   subsystem algorithm-generic; a [`pop::Leaderboard`] logs every
+//!   slice/clone/mutation for post-hoc lineage analysis. A killed worker
+//!   mid-slice heals through the pending table: the slice is requeued
+//!   with the same checkpoint reference, so no trial is ever lost.
+//!
 //! Supporting substrates: [`comms`] (the Nanomsg-substitute message layer),
 //! [`wire`] (binary serialization), [`runtime`] (PJRT execution of
 //! AOT-compiled JAX/Pallas artifacts), [`envs`] (simulators), [`algo`]
@@ -73,6 +89,7 @@ pub mod coordinator;
 pub mod envs;
 pub mod experiments;
 pub mod metrics;
+pub mod pop;
 pub mod ring;
 pub mod runtime;
 pub mod store;

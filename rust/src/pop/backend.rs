@@ -1,0 +1,832 @@
+//! Trial backends: the worker-side train slices.
+//!
+//! A PBT population is algorithm-generic by construction: the runner only
+//! ever dispatches `pbt.slice` tasks carrying a checkpoint [`ObjRef`], a
+//! hyper-parameter list and a fixed iteration budget, and collects a new
+//! checkpoint reference plus an evaluation reward. Two backends prove the
+//! genericity from day one:
+//!
+//! * **ES trials** wrap [`EsMaster`]: the slice evaluates one inner
+//!   mirrored-sampling population locally (rollouts over
+//!   [`crate::envs::cartpole`] or [`crate::envs::walker2d`]) and applies
+//!   the master's Adam update; `lr` and `sigma` are the mutable
+//!   hyper-parameters. The shared noise table is reused across the whole
+//!   population — per process via [`shared_table`], and across *nodes* as
+//!   one pinned store blob ([`put_noise_table`]) so a worker node faults
+//!   it in once instead of regenerating it per process.
+//! * **PPO trials** wrap [`PpoTrainer`]: the slice collects an on-policy
+//!   rollout from a handful of in-process environments, runs the
+//!   clipped-surrogate epochs, and scores the result with greedy
+//!   episodes; `lr`, `clip` and `ent_coef` are the mutable
+//!   hyper-parameters. Both simulators drive the fixed 32-obs/4-action
+//!   PPO network through a thin pad/adapter.
+//!
+//! Checkpoints are opaque wire blobs (θ + Adam moments + iteration),
+//! `put` into the store by the worker that produced them and named by a
+//! 24-byte handle from then on.
+
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+use once_cell::sync::Lazy;
+
+use crate::algo::es::{Adam, EsConfig, EsMaster};
+use crate::algo::nn::{
+    param_count, ppo_param_count, Mlp, PpoNet, PPO_ACTIONS, PPO_TRUNK, WALKER_SIZES,
+};
+use crate::algo::noise::{install_shared_table, shared_table, try_shared_table, NoiseTable};
+use crate::algo::ppo::{gae, MiniBatch, PpoConfig, PpoTrainer};
+use crate::coordinator::register_task;
+use crate::coordinator::task::current_worker;
+use crate::envs::{rollout, Action, CartPole, Env, Walker2d};
+use crate::store::{self, ObjId, ObjRef, StoreNode};
+use crate::util::Rng;
+use crate::wire::{Decode, Encode, Reader, WireError};
+
+use super::trial::{Hparam, Hparams};
+
+/// Name the runner dispatches train slices under.
+pub const SLICE_TASK: &str = "pbt.slice";
+
+/// Seed and size of the population-shared ES noise table (64 Ki floats —
+/// one 256 KB blob per node when store-warmed).
+pub const PBT_NOISE_SEED: u64 = 2026;
+pub const PBT_TABLE: usize = 1 << 16;
+
+/// Which algorithm a trial trains.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PbtAlgo {
+    Es,
+    Ppo,
+}
+
+impl PbtAlgo {
+    pub fn parse(s: &str) -> Result<PbtAlgo> {
+        match s {
+            "es" => Ok(PbtAlgo::Es),
+            "ppo" => Ok(PbtAlgo::Ppo),
+            other => Err(anyhow!("unknown algo {other:?} (es|ppo)")),
+        }
+    }
+
+    pub fn tag(self) -> u8 {
+        match self {
+            PbtAlgo::Es => 0,
+            PbtAlgo::Ppo => 1,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<PbtAlgo> {
+        match t {
+            0 => Ok(PbtAlgo::Es),
+            1 => Ok(PbtAlgo::Ppo),
+            other => Err(anyhow!("bad algo tag {other}")),
+        }
+    }
+}
+
+/// Which simulator a trial trains on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnvKind {
+    CartPole,
+    Walker2d,
+}
+
+impl EnvKind {
+    pub fn parse(s: &str) -> Result<EnvKind> {
+        match s {
+            "cartpole" => Ok(EnvKind::CartPole),
+            "walker2d" | "walker" => Ok(EnvKind::Walker2d),
+            other => Err(anyhow!("unknown env {other:?} (cartpole|walker2d)")),
+        }
+    }
+
+    pub fn tag(self) -> u8 {
+        match self {
+            EnvKind::CartPole => 0,
+            EnvKind::Walker2d => 1,
+        }
+    }
+
+    pub fn from_tag(t: u8) -> Result<EnvKind> {
+        match t {
+            0 => Ok(EnvKind::CartPole),
+            1 => Ok(EnvKind::Walker2d),
+            other => Err(anyhow!("bad env tag {other}")),
+        }
+    }
+
+    fn make(self, seed: u64) -> Box<dyn Env> {
+        match self {
+            EnvKind::CartPole => Box::new(CartPole::new()),
+            EnvKind::Walker2d => Box::new(Walker2d::flat(seed)),
+        }
+    }
+}
+
+/// The default hyper-parameters of each backend, with PBT search ranges.
+pub fn default_hparams(algo: PbtAlgo) -> Hparams {
+    match algo {
+        PbtAlgo::Es => Hparams(vec![
+            Hparam { name: "lr", value: 0.02, min: 1e-3, max: 0.2 },
+            Hparam { name: "sigma", value: 0.05, min: 0.01, max: 0.5 },
+        ]),
+        PbtAlgo::Ppo => Hparams(vec![
+            Hparam { name: "lr", value: 2.5e-4, min: 1e-5, max: 1e-2 },
+            Hparam { name: "clip", value: 0.1, min: 0.02, max: 0.5 },
+            Hparam { name: "ent_coef", value: 0.01, min: 1e-4, max: 0.1 },
+        ]),
+    }
+}
+
+fn hp(hparams: &[(String, f32)], name: &str, default: f32) -> f32 {
+    hparams
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| *v)
+        .unwrap_or(default)
+}
+
+/// Payload of one `pbt.slice` task.
+#[derive(Clone, Debug)]
+pub struct SliceInput {
+    pub trial: u64,
+    /// The trial's slice index (deterministic seeding).
+    pub slice: u64,
+    pub algo: u8,
+    pub env: u8,
+    pub seed: u64,
+    /// Train iterations inside the slice (the fixed budget).
+    pub iters: u64,
+    /// Episode step cap per rollout.
+    pub max_steps: u64,
+    /// ES: inner mirrored population per update (even). PPO: unused.
+    pub pop_inner: u64,
+    /// PPO: rollout horizon per iteration. ES: unused.
+    pub horizon: u64,
+    pub hparams: Vec<(String, f32)>,
+    pub checkpoint: ObjRef<Vec<u8>>,
+    /// ES: the shared noise table as a store blob (cold nodes fault it in
+    /// once; everyone else cache-hits the process table registry).
+    pub table: Option<ObjRef<Vec<f32>>>,
+    /// Chaos switch: the pool worker with this id dies (panics) the
+    /// moment it picks the slice up — the pending table must requeue the
+    /// slice and the trial's checkpoint ref must survive. 0 disarms
+    /// (worker ids start at 1).
+    pub kill_worker: u64,
+}
+
+impl Encode for SliceInput {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.trial.encode(buf);
+        self.slice.encode(buf);
+        self.algo.encode(buf);
+        self.env.encode(buf);
+        self.seed.encode(buf);
+        self.iters.encode(buf);
+        self.max_steps.encode(buf);
+        self.pop_inner.encode(buf);
+        self.horizon.encode(buf);
+        self.hparams.encode(buf);
+        self.checkpoint.encode(buf);
+        self.table.encode(buf);
+        self.kill_worker.encode(buf);
+    }
+}
+
+impl Decode for SliceInput {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(SliceInput {
+            trial: u64::decode(r)?,
+            slice: u64::decode(r)?,
+            algo: u8::decode(r)?,
+            env: u8::decode(r)?,
+            seed: u64::decode(r)?,
+            iters: u64::decode(r)?,
+            max_steps: u64::decode(r)?,
+            pop_inner: u64::decode(r)?,
+            horizon: u64::decode(r)?,
+            hparams: Vec::<(String, f32)>::decode(r)?,
+            checkpoint: ObjRef::<Vec<u8>>::decode(r)?,
+            table: Option::<ObjRef<Vec<f32>>>::decode(r)?,
+            kill_worker: u64::decode(r)?,
+        })
+    }
+}
+
+/// Result of one train slice.
+#[derive(Clone, Debug)]
+pub struct SliceOutput {
+    pub trial: u64,
+    pub slice: u64,
+    /// The post-slice checkpoint, stored by the worker that produced it.
+    pub checkpoint: ObjRef<Vec<u8>>,
+    /// Greedy-evaluation reward of the updated parameters.
+    pub reward: f32,
+    pub env_steps: u64,
+    /// Worker that ran the slice (observability).
+    pub worker: u64,
+}
+
+impl Encode for SliceOutput {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.trial.encode(buf);
+        self.slice.encode(buf);
+        self.checkpoint.encode(buf);
+        self.reward.encode(buf);
+        self.env_steps.encode(buf);
+        self.worker.encode(buf);
+    }
+}
+
+impl Decode for SliceOutput {
+    fn decode(r: &mut Reader<'_>) -> Result<Self, WireError> {
+        Ok(SliceOutput {
+            trial: u64::decode(r)?,
+            slice: u64::decode(r)?,
+            checkpoint: ObjRef::<Vec<u8>>::decode(r)?,
+            reward: f32::decode(r)?,
+            env_steps: u64::decode(r)?,
+            worker: u64::decode(r)?,
+        })
+    }
+}
+
+/// Register the worker-side PBT slice task (idempotent; part of
+/// `fiber-cli`'s task bootstrap so OS-process workers serve it too).
+pub fn register_pbt_tasks() {
+    register_task(SLICE_TASK, |input: SliceInput| {
+        run_slice(&input).map_err(|e| format!("{e:#}"))
+    });
+}
+
+/// Checkpoint handoff ledger: blob ids this process stored with a held
+/// put ([`StoreNode::put_held`]) whose reference it has not yet
+/// released. The held reference guarantees a fresh checkpoint survives
+/// until the leader replicates it; once a *later* slice arrives whose
+/// input names that very checkpoint, the dispatch itself proves the
+/// leader replicated it (the runner replicates before re-dispatching),
+/// so the handoff reference is no longer load-bearing and is released.
+/// Checkpoints whose successor slice ran on a different node keep their
+/// handoff ref until this node exits — bounded by the run, and a
+/// ROADMAP follow-up (distributed checkpoint GC) for long-lived workers.
+static HANDOFFS: Lazy<Mutex<HashSet<ObjId>>> = Lazy::new(|| Mutex::new(HashSet::new()));
+
+fn record_handoff(id: ObjId) {
+    HANDOFFS.lock().unwrap().insert(id);
+}
+
+fn release_delivered_handoff(input: &SliceInput) -> Result<()> {
+    let id = input.checkpoint.id();
+    if HANDOFFS.lock().unwrap().remove(&id) {
+        store::node()?.decref(id);
+    }
+    Ok(())
+}
+
+/// Execute one slice in-process (thread workers, tests, and the proc
+/// worker loop all come through here).
+pub fn run_slice(input: &SliceInput) -> Result<SliceOutput> {
+    if input.kill_worker != 0 && current_worker() == input.kill_worker {
+        // Simulated mid-slice crash: the panic unwinds out of the worker
+        // loop (threads) or the worker process (proc backend), the
+        // supervisor heals the pool, and the pending table re-dispatches
+        // this very task — checkpoint ref included, so the trial is
+        // never lost.
+        panic!("pbt chaos: worker {} killed mid-slice", input.kill_worker);
+    }
+    release_delivered_handoff(input)?;
+    match PbtAlgo::from_tag(input.algo)? {
+        PbtAlgo::Es => es_slice(input),
+        PbtAlgo::Ppo => ppo_slice(input),
+    }
+}
+
+// ---- checkpoints ---------------------------------------------------------
+
+fn encode_checkpoint(params: &[f32], adam: &Adam, iteration: u64) -> Vec<u8> {
+    crate::wire::to_bytes(&(
+        params.to_vec(),
+        adam.m.clone(),
+        adam.v.clone(),
+        adam.t as u64,
+        iteration,
+    ))
+}
+
+fn decode_checkpoint(bytes: &[u8]) -> Result<(Vec<f32>, Adam, u64)> {
+    let (params, m, v, t, iteration): (Vec<f32>, Vec<f32>, Vec<f32>, u64, u64) =
+        crate::wire::from_bytes(bytes).map_err(|e| anyhow!("checkpoint decode: {e}"))?;
+    anyhow::ensure!(
+        m.len() == params.len() && v.len() == params.len(),
+        "checkpoint moment shapes disagree with θ"
+    );
+    let mut adam = Adam::new(params.len());
+    adam.m = m;
+    adam.v = v;
+    adam.t = t as u32;
+    Ok((params, adam, iteration))
+}
+
+/// Build a fresh trial checkpoint (leader-side, at population init).
+pub fn init_checkpoint(algo: PbtAlgo, env: EnvKind, seed: u64) -> Vec<u8> {
+    match algo {
+        PbtAlgo::Es => {
+            let mut rng = Rng::new(seed);
+            let net = Mlp::init(&es_sizes(env), &mut rng);
+            let adam = Adam::new(net.n_params());
+            encode_checkpoint(&net.params, &adam, 0)
+        }
+        PbtAlgo::Ppo => {
+            let tr = PpoTrainer::new(PpoConfig { seed, ..Default::default() });
+            let adam = Adam::new(tr.net.n_params());
+            encode_checkpoint(&tr.net.params, &adam, 0)
+        }
+    }
+}
+
+/// Publish the population's shared noise table as one pinned store blob:
+/// remote worker nodes fault it in once per node and install it into the
+/// process table registry instead of regenerating it per process.
+pub fn put_noise_table(node: &StoreNode) -> Result<ObjRef<Vec<f32>>> {
+    let table = shared_table(PBT_NOISE_SEED, PBT_TABLE);
+    // Held put, then pin, then drop the temporary reference: the blob is
+    // never observable unprotected between insert and pin.
+    let r = node.put_held(&table.data().to_vec())?;
+    node.pin(r.id());
+    node.decref(r.id());
+    Ok(r)
+}
+
+fn resolve_table(table_ref: Option<ObjRef<Vec<f32>>>) -> Result<std::sync::Arc<NoiseTable>> {
+    match table_ref {
+        None => Ok(shared_table(PBT_NOISE_SEED, PBT_TABLE)),
+        Some(tref) => match try_shared_table(PBT_NOISE_SEED, PBT_TABLE) {
+            Some(t) => Ok(t),
+            None => {
+                let data: Vec<f32> = tref.get()?;
+                anyhow::ensure!(data.len() == PBT_TABLE, "noise table blob size");
+                Ok(install_shared_table(PBT_NOISE_SEED, PBT_TABLE, data))
+            }
+        },
+    }
+}
+
+// ---- ES backend ----------------------------------------------------------
+
+fn es_sizes(env: EnvKind) -> Vec<usize> {
+    match env {
+        // 4 → 16 → 1, tanh: one continuous push in [-1, 1].
+        EnvKind::CartPole => vec![4, 16, 1],
+        EnvKind::Walker2d => WALKER_SIZES.to_vec(),
+    }
+}
+
+fn es_action(env: EnvKind, out: &[f32]) -> Action {
+    match env {
+        EnvKind::CartPole => Action::Continuous(vec![out[0]]),
+        EnvKind::Walker2d => Action::Continuous(out.to_vec()),
+    }
+}
+
+fn es_eval(env: EnvKind, policy: &Mlp, seed: u64, max_steps: usize) -> (f32, usize) {
+    let mut e = env.make(seed);
+    rollout(&mut *e, seed, max_steps, |obs| es_action(env, &policy.forward(obs)))
+}
+
+/// One ES train slice: `iters` mirrored-sampling updates of an
+/// [`EsMaster`] restored from the checkpoint, followed by a deterministic
+/// greedy evaluation of the updated θ.
+fn es_slice(input: &SliceInput) -> Result<SliceOutput> {
+    let env = EnvKind::from_tag(input.env)?;
+    let bytes = input.checkpoint.get()?;
+    let (theta, adam, iteration) = decode_checkpoint(&bytes)?;
+    let sizes = es_sizes(env);
+    anyhow::ensure!(
+        theta.len() == param_count(&sizes),
+        "es checkpoint is {} params, {env:?} policy needs {}",
+        theta.len(),
+        param_count(&sizes)
+    );
+    anyhow::ensure!(
+        input.pop_inner >= 2 && input.pop_inner % 2 == 0,
+        "pop_inner must be even and >= 2"
+    );
+    let cfg = EsConfig {
+        pop: input.pop_inner as usize,
+        sigma: hp(&input.hparams, "sigma", 0.05),
+        lr: hp(&input.hparams, "lr", 0.02),
+        noise_seed: PBT_NOISE_SEED,
+        table_size: PBT_TABLE,
+        max_steps: input.max_steps as usize,
+        hardcore: false,
+        seed: input.seed,
+        eval_task: String::new(),
+    };
+    let mut master = EsMaster::from_state(cfg, theta, adam);
+    let table = resolve_table(input.table)?;
+    let dim = master.theta.len();
+    // Deterministic per (trial, resume point): a requeued slice replays
+    // the exact same offsets and env seeds.
+    let mut rng = Rng::new(
+        input
+            .seed
+            .wrapping_add(input.trial.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            ^ (iteration << 1),
+    );
+    let mut env_steps = 0u64;
+    for _ in 0..input.iters {
+        let half = master.cfg.pop / 2;
+        let offsets: Vec<u64> = (0..half)
+            .map(|_| table.sample_offset(&mut rng, dim) as u64)
+            .collect();
+        let mut rewards = Vec::with_capacity(half * 2);
+        for &off in &offsets {
+            for sign in [1.0f32, -1.0] {
+                let mut noise = table.slice(off as usize, dim);
+                for n in noise.iter_mut() {
+                    *n *= sign;
+                }
+                let policy = Mlp { sizes: sizes.clone(), params: master.theta.clone() }
+                    .perturbed(&noise, master.cfg.sigma);
+                let env_seed = rng.next_u64() % 1_000_000;
+                let (r, steps) = es_eval(env, &policy, env_seed, master.cfg.max_steps);
+                rewards.push(r);
+                env_steps += steps as u64;
+            }
+        }
+        master.update(&offsets, &rewards, None)?;
+    }
+    // The PBT score: the unperturbed updated policy on fixed seeds.
+    let policy = Mlp { sizes, params: master.theta.clone() };
+    let mut total = 0.0f32;
+    for k in 0..3u64 {
+        let (r, steps) = es_eval(env, &policy, 10_000 + k, master.cfg.max_steps);
+        total += r;
+        env_steps += steps as u64;
+    }
+    let ck = encode_checkpoint(&master.theta, master.adam(), iteration + input.iters);
+    let node = store::node()?;
+    // Held put: the handoff reference keeps LRU pressure from evicting
+    // the only copy before the leader replicates it; released by a later
+    // slice resuming from this checkpoint (see HANDOFFS).
+    let checkpoint = node.put_held(&ck)?;
+    record_handoff(checkpoint.id());
+    Ok(SliceOutput {
+        trial: input.trial,
+        slice: input.slice,
+        checkpoint,
+        reward: total / 3.0,
+        env_steps,
+        worker: current_worker(),
+    })
+}
+
+// ---- PPO backend ---------------------------------------------------------
+
+/// Bang-bang torque patterns mapping the 4 discrete PPO actions onto the
+/// walker's 4 continuous joints.
+const TORQUE_PATTERNS: [[f32; 4]; 4] = [
+    [0.8, -0.4, -0.4, 0.8],
+    [-0.4, 0.8, 0.8, -0.4],
+    [0.5, 0.5, -0.5, -0.5],
+    [-0.6, -0.6, 0.6, 0.6],
+];
+
+/// Pad an environment observation to the PPO network's fixed 32 inputs.
+fn ppo_obs(obs: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; PPO_TRUNK[0]];
+    let n = obs.len().min(PPO_TRUNK[0]);
+    out[..n].copy_from_slice(&obs[..n]);
+    out
+}
+
+fn ppo_action(env: EnvKind, a: usize) -> Action {
+    match env {
+        EnvKind::CartPole => Action::Discrete(a & 1),
+        EnvKind::Walker2d => Action::Continuous(TORQUE_PATTERNS[a % PPO_ACTIONS].to_vec()),
+    }
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Greedy episodes with the current policy head — the PBT score.
+fn ppo_greedy_eval(env: EnvKind, net: &PpoNet, max_steps: usize) -> (f32, u64) {
+    let mut total = 0.0f32;
+    let mut env_steps = 0u64;
+    for k in 0..2u64 {
+        let seed = 90_000 + k;
+        let mut e = env.make(seed);
+        let mut obs = ppo_obs(&e.reset(seed));
+        for _ in 0..max_steps {
+            let (logits, _) = net.forward(&obs);
+            let sr = e.step(&ppo_action(env, argmax(&logits)));
+            total += sr.reward;
+            env_steps += 1;
+            if sr.done {
+                break;
+            }
+            obs = ppo_obs(&sr.obs);
+        }
+    }
+    (total / 2.0, env_steps)
+}
+
+/// One PPO train slice: `iters` × (on-policy rollout of `horizon` steps
+/// over a few in-process environments → GAE → clipped-surrogate epochs),
+/// with a [`PpoTrainer`] restored from the checkpoint.
+fn ppo_slice(input: &SliceInput) -> Result<SliceOutput> {
+    let env_kind = EnvKind::from_tag(input.env)?;
+    let bytes = input.checkpoint.get()?;
+    let (params, adam, iteration) = decode_checkpoint(&bytes)?;
+    let n_envs = 4usize;
+    let horizon = (input.horizon as usize).max(8);
+    let max_steps = input.max_steps as usize;
+    let cfg = PpoConfig {
+        n_envs,
+        horizon,
+        epochs: 2,
+        minibatch: 32,
+        lr: hp(&input.hparams, "lr", 2.5e-4),
+        clip: hp(&input.hparams, "clip", 0.1),
+        ent_coef: hp(&input.hparams, "ent_coef", 0.01),
+        seed: input
+            .seed
+            .wrapping_add(input.trial.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            ^ iteration,
+        ..Default::default()
+    };
+    anyhow::ensure!(
+        params.len() == ppo_param_count(),
+        "ppo checkpoint is {} params, the network needs {}",
+        params.len(),
+        ppo_param_count()
+    );
+    let mut tr = PpoTrainer::from_state(cfg.clone(), params, adam);
+    let mut rng = Rng::new(cfg.seed ^ 0xFACE);
+    let mut envs: Vec<Box<dyn Env>> = (0..n_envs)
+        .map(|e| env_kind.make(cfg.seed.wrapping_add(e as u64)))
+        .collect();
+    let mut obs: Vec<Vec<f32>> = envs
+        .iter_mut()
+        .enumerate()
+        .map(|(e, env)| ppo_obs(&env.reset(cfg.seed.wrapping_add(e as u64))))
+        .collect();
+    let mut ep_len = vec![0usize; n_envs];
+    let mut env_steps = 0u64;
+    for _ in 0..input.iters {
+        let mut b_obs: Vec<Vec<f32>> = Vec::with_capacity(horizon * n_envs);
+        let mut b_actions = Vec::with_capacity(horizon * n_envs);
+        let mut b_logps = Vec::with_capacity(horizon * n_envs);
+        let mut b_values = Vec::with_capacity(horizon * n_envs);
+        let mut b_rewards = Vec::with_capacity(horizon * n_envs);
+        let mut b_dones = Vec::with_capacity(horizon * n_envs);
+        for _t in 0..horizon {
+            let (actions, logps, values) = tr.act(&obs, None)?;
+            for e in 0..n_envs {
+                let sr = envs[e].step(&ppo_action(env_kind, actions[e]));
+                ep_len[e] += 1;
+                env_steps += 1;
+                let done = sr.done || ep_len[e] >= max_steps;
+                b_obs.push(obs[e].clone());
+                b_actions.push(actions[e] as i32);
+                b_logps.push(logps[e]);
+                b_values.push(values[e]);
+                b_rewards.push(sr.reward);
+                b_dones.push(u8::from(done));
+                if done {
+                    ep_len[e] = 0;
+                    obs[e] = ppo_obs(&envs[e].reset(rng.next_u64() % 1_000_000));
+                } else {
+                    obs[e] = ppo_obs(&sr.obs);
+                }
+            }
+        }
+        let (_, _, last_values) = tr.act(&obs, None)?;
+        let (adv, ret) = gae(
+            &b_rewards, &b_values, &b_dones, &last_values, n_envs, horizon, cfg.gamma, cfg.lam,
+        );
+        let mean = adv.iter().sum::<f32>() / adv.len() as f32;
+        let var = adv.iter().map(|a| (a - mean) * (a - mean)).sum::<f32>() / adv.len() as f32;
+        let std = var.sqrt().max(1e-8);
+        let adv: Vec<f32> = adv.iter().map(|a| (a - mean) / std).collect();
+        let total = b_obs.len();
+        let mut idx: Vec<usize> = (0..total).collect();
+        for _ in 0..cfg.epochs {
+            rng.shuffle(&mut idx);
+            for chunk in idx.chunks(cfg.minibatch) {
+                let b = cfg.minibatch;
+                let mut mb = MiniBatch {
+                    obs: Vec::with_capacity(b * PPO_TRUNK[0]),
+                    actions: Vec::with_capacity(b),
+                    old_logp: Vec::with_capacity(b),
+                    adv: Vec::with_capacity(b),
+                    ret: Vec::with_capacity(b),
+                };
+                for k in 0..b {
+                    // Pad short tails by cycling the chunk.
+                    let i = chunk[k % chunk.len()];
+                    mb.obs.extend(&b_obs[i]);
+                    mb.actions.push(b_actions[i]);
+                    mb.old_logp.push(b_logps[i]);
+                    mb.adv.push(adv[i]);
+                    mb.ret.push(ret[i]);
+                }
+                tr.update_minibatch(&mb, None)?;
+            }
+        }
+    }
+    let (reward, eval_steps) = ppo_greedy_eval(env_kind, &tr.net, max_steps);
+    let ck = encode_checkpoint(&tr.net.params, tr.adam(), iteration + input.iters);
+    let node = store::node()?;
+    // Held put — see es_slice / HANDOFFS for the reference lifecycle.
+    let checkpoint = node.put_held(&ck)?;
+    record_handoff(checkpoint.id());
+    Ok(SliceOutput {
+        trial: input.trial,
+        slice: input.slice,
+        checkpoint,
+        reward,
+        env_steps: env_steps + eval_steps,
+        worker: current_worker(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_payloads_roundtrip_wire() {
+        let input = SliceInput {
+            trial: 3,
+            slice: 2,
+            algo: PbtAlgo::Ppo.tag(),
+            env: EnvKind::Walker2d.tag(),
+            seed: 99,
+            iters: 4,
+            max_steps: 200,
+            pop_inner: 8,
+            horizon: 64,
+            hparams: vec![("lr".into(), 0.01), ("clip".into(), 0.2)],
+            checkpoint: ObjRef::from_parts(crate::store::ObjId::of(b"ck"), 123),
+            table: Some(ObjRef::from_parts(crate::store::ObjId::of(b"tbl"), 77)),
+            kill_worker: 0,
+        };
+        let bytes = crate::wire::to_bytes(&input);
+        let back: SliceInput = crate::wire::from_bytes(&bytes).unwrap();
+        assert_eq!(back.trial, 3);
+        assert_eq!(back.hparams, input.hparams);
+        assert_eq!(back.checkpoint.id(), input.checkpoint.id());
+        assert_eq!(back.table.unwrap().len(), 77);
+
+        let out = SliceOutput {
+            trial: 3,
+            slice: 2,
+            checkpoint: ObjRef::from_parts(crate::store::ObjId::of(b"ck2"), 55),
+            reward: 12.5,
+            env_steps: 4096,
+            worker: 2,
+        };
+        let bytes = crate::wire::to_bytes(&out);
+        let back: SliceOutput = crate::wire::from_bytes(&bytes).unwrap();
+        assert_eq!(back.reward, 12.5);
+        assert_eq!(back.env_steps, 4096);
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_with_optimizer_state() {
+        let mut adam = Adam::new(4);
+        adam.m = vec![0.1, 0.2, 0.3, 0.4];
+        adam.v = vec![1.0, 2.0, 3.0, 4.0];
+        adam.t = 17;
+        let ck = encode_checkpoint(&[9.0, 8.0, 7.0, 6.0], &adam, 5);
+        let (params, adam2, iter) = decode_checkpoint(&ck).unwrap();
+        assert_eq!(params, vec![9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(adam2.m, adam.m);
+        assert_eq!(adam2.v, adam.v);
+        assert_eq!(adam2.t, 17);
+        assert_eq!(iter, 5);
+        // Shape mismatches are rejected, not mis-stepped.
+        let bad = crate::wire::to_bytes(&(
+            vec![1.0f32; 4],
+            vec![0.0f32; 3],
+            vec![0.0f32; 4],
+            0u64,
+            0u64,
+        ));
+        assert!(decode_checkpoint(&bad).is_err());
+    }
+
+    #[test]
+    fn es_slice_runs_and_scores_on_cartpole() {
+        let node = crate::store::node_or_host(256 << 20);
+        register_pbt_tasks();
+        let ck = init_checkpoint(PbtAlgo::Es, EnvKind::CartPole, 11);
+        let r = node.put(&ck).unwrap();
+        let input = SliceInput {
+            trial: 0,
+            slice: 0,
+            algo: PbtAlgo::Es.tag(),
+            env: EnvKind::CartPole.tag(),
+            seed: 11,
+            iters: 1,
+            max_steps: 100,
+            pop_inner: 8,
+            horizon: 0,
+            hparams: default_hparams(PbtAlgo::Es).to_wire(),
+            checkpoint: r,
+            table: None,
+            kill_worker: 0,
+        };
+        let out = run_slice(&input).unwrap();
+        assert!(out.reward.is_finite() && out.reward > 0.0);
+        assert!(out.env_steps > 0);
+        assert_ne!(out.checkpoint.id(), r.id(), "training must move θ");
+        // Deterministic: the same input replays to the same checkpoint
+        // (what makes a requeued chaos slice harmless).
+        let out2 = run_slice(&input).unwrap();
+        assert_eq!(out2.checkpoint.id(), out.checkpoint.id());
+        assert_eq!(out2.reward, out.reward);
+    }
+
+    #[test]
+    fn ppo_slice_runs_and_scores_on_cartpole() {
+        let node = crate::store::node_or_host(256 << 20);
+        register_pbt_tasks();
+        let ck = init_checkpoint(PbtAlgo::Ppo, EnvKind::CartPole, 21);
+        let r = node.put(&ck).unwrap();
+        let input = SliceInput {
+            trial: 1,
+            slice: 0,
+            algo: PbtAlgo::Ppo.tag(),
+            env: EnvKind::CartPole.tag(),
+            seed: 21,
+            iters: 1,
+            max_steps: 120,
+            pop_inner: 0,
+            horizon: 32,
+            hparams: default_hparams(PbtAlgo::Ppo).to_wire(),
+            checkpoint: r,
+            table: None,
+            kill_worker: 0,
+        };
+        let out = run_slice(&input).unwrap();
+        assert!(out.reward.is_finite() && out.reward > 0.0);
+        assert_ne!(out.checkpoint.id(), r.id(), "training must move θ");
+        let (params, _, iter) = decode_checkpoint(&out.checkpoint.get().unwrap()).unwrap();
+        assert_eq!(iter, 1);
+        assert!(params.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn walker_backends_accept_both_algos() {
+        let node = crate::store::node_or_host(256 << 20);
+        register_pbt_tasks();
+        for algo in [PbtAlgo::Es, PbtAlgo::Ppo] {
+            let ck = init_checkpoint(algo, EnvKind::Walker2d, 31);
+            let r = node.put(&ck).unwrap();
+            let input = SliceInput {
+                trial: 2,
+                slice: 0,
+                algo: algo.tag(),
+                env: EnvKind::Walker2d.tag(),
+                seed: 31,
+                iters: 1,
+                max_steps: 60,
+                pop_inner: 4,
+                horizon: 16,
+                hparams: default_hparams(algo).to_wire(),
+                checkpoint: r,
+                table: None,
+                kill_worker: 0,
+            };
+            let out = run_slice(&input).unwrap();
+            assert!(out.reward.is_finite(), "{algo:?} on walker2d");
+        }
+    }
+
+    #[test]
+    fn ppo_env_adapters_pad_and_map() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.3, 0.2]), 1);
+        assert_eq!(ppo_action(EnvKind::CartPole, 3), Action::Discrete(1));
+        assert_eq!(ppo_action(EnvKind::CartPole, 2), Action::Discrete(0));
+        match ppo_action(EnvKind::Walker2d, 1) {
+            Action::Continuous(t) => assert_eq!(t.len(), 4),
+            other => panic!("walker actions are torque vectors, got {other:?}"),
+        }
+        let padded = ppo_obs(&[1.0, 2.0]);
+        assert_eq!(padded.len(), PPO_TRUNK[0]);
+        assert_eq!(&padded[..2], &[1.0, 2.0]);
+        assert!(padded[2..].iter().all(|&x| x == 0.0));
+    }
+}

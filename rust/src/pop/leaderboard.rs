@@ -1,0 +1,150 @@
+//! Post-hoc analysis: the population leaderboard and per-trial lineage
+//! log.
+//!
+//! Every slice completion, exploit (checkpoint clone) and explore
+//! (hyper-parameter mutation) appends a [`LineageEvent`]; the population
+//! best/mean series is sampled on the same cadence. Together they answer
+//! the questions PBT papers plot: who descended from whom, when each
+//! trial's hyper-parameters jumped, and how the population front moved
+//! over wall-clock time.
+
+use super::trial::TrialId;
+
+/// What happened at one lineage step.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LineageEventKind {
+    /// The trial entered the population.
+    Init,
+    /// A train slice completed with this evaluation reward.
+    Slice { reward: f32 },
+    /// Exploit: the trial adopted `parent`'s checkpoint — a 24-byte
+    /// `ObjRef` clone, not a θ copy.
+    Clone { parent: TrialId },
+    /// Explore: the trial's hyper-parameters were perturbed/resampled.
+    Explore,
+}
+
+/// One entry in the lineage log.
+#[derive(Clone, Debug)]
+pub struct LineageEvent {
+    pub trial: TrialId,
+    /// Slices the trial had completed when the event fired.
+    pub slice: usize,
+    /// Wall-clock seconds since the run started.
+    pub t_s: f64,
+    pub kind: LineageEventKind,
+    /// The trial's best slice reward so far (monotone per lineage).
+    pub best_so_far: f32,
+}
+
+/// The run-wide event log plus the sampled population series.
+#[derive(Clone, Debug, Default)]
+pub struct Leaderboard {
+    events: Vec<LineageEvent>,
+    /// `(t_s, best, mean)` over trials with at least one score, sampled
+    /// at every slice completion.
+    series: Vec<(f64, f32, f32)>,
+}
+
+impl Leaderboard {
+    pub fn new() -> Leaderboard {
+        Leaderboard::default()
+    }
+
+    pub fn record(&mut self, event: LineageEvent) {
+        self.events.push(event);
+    }
+
+    pub fn record_population(&mut self, t_s: f64, best: f32, mean: f32) {
+        self.series.push((t_s, best, mean));
+    }
+
+    pub fn events(&self) -> &[LineageEvent] {
+        &self.events
+    }
+
+    /// The best-vs-mean population reward series over wall clock.
+    pub fn series(&self) -> &[(f64, f32, f32)] {
+        &self.series
+    }
+
+    /// All events of one trial, in order.
+    pub fn lineage(&self, trial: TrialId) -> Vec<&LineageEvent> {
+        self.events.iter().filter(|e| e.trial == trial).collect()
+    }
+
+    /// Exploits recorded for `trial` (clone events, with their sources).
+    pub fn parents(&self, trial: TrialId) -> Vec<TrialId> {
+        self.lineage(trial)
+            .into_iter()
+            .filter_map(|e| match e.kind {
+                LineageEventKind::Clone { parent } => Some(parent),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The lineage invariant: a trial's recorded best-so-far never
+    /// decreases (exploits adopt weights, not history — the trial's own
+    /// achieved rewards only accumulate).
+    pub fn best_is_monotone(&self, trial: TrialId) -> bool {
+        let mut last = f32::NEG_INFINITY;
+        for e in self.lineage(trial) {
+            if e.best_so_far < last {
+                return false;
+            }
+            last = e.best_so_far;
+        }
+        true
+    }
+
+    /// Slice completions recorded for `trial`.
+    pub fn slices(&self, trial: TrialId) -> usize {
+        self.lineage(trial)
+            .iter()
+            .filter(|e| matches!(e.kind, LineageEventKind::Slice { .. }))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(trial: u64, slice: usize, kind: LineageEventKind, best: f32) -> LineageEvent {
+        LineageEvent {
+            trial: TrialId(trial),
+            slice,
+            t_s: slice as f64,
+            kind,
+            best_so_far: best,
+        }
+    }
+
+    #[test]
+    fn lineage_filters_and_counts_per_trial() {
+        let mut b = Leaderboard::new();
+        b.record(ev(0, 0, LineageEventKind::Init, f32::NEG_INFINITY));
+        b.record(ev(1, 0, LineageEventKind::Init, f32::NEG_INFINITY));
+        b.record(ev(0, 1, LineageEventKind::Slice { reward: 2.0 }, 2.0));
+        b.record(ev(1, 1, LineageEventKind::Slice { reward: 5.0 }, 5.0));
+        b.record(ev(0, 1, LineageEventKind::Clone { parent: TrialId(1) }, 2.0));
+        b.record(ev(0, 1, LineageEventKind::Explore, 2.0));
+        b.record(ev(0, 2, LineageEventKind::Slice { reward: 6.0 }, 6.0));
+        assert_eq!(b.lineage(TrialId(0)).len(), 5);
+        assert_eq!(b.slices(TrialId(0)), 2);
+        assert_eq!(b.slices(TrialId(1)), 1);
+        assert_eq!(b.parents(TrialId(0)), vec![TrialId(1)]);
+        assert!(b.parents(TrialId(1)).is_empty());
+        assert!(b.best_is_monotone(TrialId(0)));
+        assert!(b.best_is_monotone(TrialId(1)));
+    }
+
+    #[test]
+    fn monotone_check_catches_regressions() {
+        let mut b = Leaderboard::new();
+        b.record(ev(3, 1, LineageEventKind::Slice { reward: 4.0 }, 4.0));
+        b.record(ev(3, 2, LineageEventKind::Slice { reward: 1.0 }, 3.0));
+        assert!(!b.best_is_monotone(TrialId(3)), "best-so-far fell: 4 → 3");
+    }
+}

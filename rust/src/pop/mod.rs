@@ -1,0 +1,49 @@
+//! `fiber::pop` — the population-based-training orchestrator (the
+//! population layer the paper's title promises).
+//!
+//! PBT (Jaderberg et al. 2017) trains a *population* of trials
+//! concurrently, periodically replacing the worst performers with
+//! perturbed clones of the best. This module is the first subsystem that
+//! stresses all four building blocks at once:
+//!
+//! * **Pool** runs the train slices: each [`Trial`]'s fixed-budget slice
+//!   is an ordinary task, so worker failures heal through the pending
+//!   table — a killed worker's slice is requeued with the same
+//!   checkpoint reference and the trial is never lost.
+//! * **Store** holds the checkpoints: a trial's model is a
+//!   reference-held [`crate::store::ObjRef`] (held puts on the producer,
+//!   leader-side refcounts — never evictable while a trial names it), so
+//!   the exploit step (bottom-q% cloning a top-q% model) copies a
+//!   24-byte handle instead of θ, and the shared ES noise table
+//!   circulates as one pinned blob per node.
+//! * **Envs** ([`crate::envs::cartpole`], [`crate::envs::walker2d`])
+//!   provide the simulators; **algo** provides the two trial backends —
+//!   ES slices wrapping [`crate::algo::es::EsMaster`] (mutable `lr`,
+//!   `sigma`) and PPO slices wrapping [`crate::algo::ppo::PpoTrainer`]
+//!   (mutable `lr`, `clip`, `ent_coef`).
+//!
+//! Dispatch is **asynchronous** by default: there is no generation
+//! barrier — a trial re-enters the queue the moment its slice returns,
+//! with exploit/explore decided against the population's current scores,
+//! so heterogeneous slice durations never serialize the population
+//! (compare [`DispatchMode::Generational`], the lock-step baseline the
+//! `pbt_figure` panel and `benches/pbt.rs` measure against). The
+//! [`Leaderboard`] records every slice, clone and mutation for post-hoc
+//! lineage analysis.
+//!
+//! Surface: `fiber-cli pbt --algo {es,ppo} --pop N --workers W [--proc
+//! true] [--kill-rank R]`, `examples/pbt.rs`, and
+//! `experiments::pbt_figure`.
+
+pub mod backend;
+pub mod leaderboard;
+pub mod runner;
+pub mod trial;
+
+pub use backend::{
+    default_hparams, init_checkpoint, put_noise_table, register_pbt_tasks, run_slice, EnvKind,
+    PbtAlgo, SliceInput, SliceOutput, SLICE_TASK,
+};
+pub use leaderboard::{Leaderboard, LineageEvent, LineageEventKind};
+pub use runner::{DispatchMode, PbtConfig, PbtReport, PopulationRunner};
+pub use trial::{truncation_split, Hparam, Hparams, Trial, TrialId};

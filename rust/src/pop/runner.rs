@@ -1,0 +1,530 @@
+//! The population orchestrator: asynchronous PBT over Pool workers.
+//!
+//! The runner owns the trials and a store node. Each trial repeatedly
+//! runs a fixed-budget **train slice** as a pool task; in the default
+//! [`DispatchMode::Async`] there is **no generation barrier** — the
+//! moment a trial's slice returns, the runner applies truncation-selection
+//! exploit/explore against the population's *current* scores and
+//! re-dispatches the trial, so fast trials never idle behind slow ones.
+//! [`DispatchMode::Generational`] is the lock-step baseline the
+//! `pbt_figure` panel and `benches/pbt.rs` compare against.
+//!
+//! Exploit is a store operation: the bottom-q trial adopts a top-q
+//! trial's checkpoint by copying its 24-byte [`ObjRef`] and bumping a
+//! refcount — θ itself never moves. The leader also faults every
+//! completed checkpoint into its own node, so a worker crash can never
+//! take the only copy of a trial's lineage with it.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::api::pool::{MapHandle, Pool};
+use crate::store::{ObjId, ObjRef, StoreNode};
+use crate::util::Rng;
+
+use super::backend::{
+    self, default_hparams, register_pbt_tasks, EnvKind, PbtAlgo, SliceInput, SliceOutput,
+    SLICE_TASK,
+};
+use super::leaderboard::{Leaderboard, LineageEvent, LineageEventKind};
+use super::trial::{truncation_split, Trial, TrialId};
+
+/// Population-level configuration.
+#[derive(Clone, Debug)]
+pub struct PbtConfig {
+    pub algo: PbtAlgo,
+    pub env: EnvKind,
+    /// Population size (>= 2).
+    pub pop: usize,
+    /// Train slices each trial must complete.
+    pub slices: usize,
+    /// Train iterations inside one slice (the fixed budget).
+    pub iters_per_slice: usize,
+    /// Episode step cap per rollout.
+    pub max_steps: usize,
+    /// ES inner mirrored population per update (even).
+    pub pop_inner: usize,
+    /// PPO rollout horizon per iteration.
+    pub horizon: usize,
+    /// Truncation quantile: the bottom q clone a top-q checkpoint.
+    pub quantile: f32,
+    pub seed: u64,
+    /// Chaos: pool worker id to kill mid-slice (0 = disarmed). Stays
+    /// armed on every dispatch until the pool reports a restart.
+    pub kill_worker: u64,
+    /// ES: circulate the shared noise table as one store blob.
+    pub store_noise_table: bool,
+    /// Task name to dispatch (`pbt.slice`; benches substitute a
+    /// synthetic slice to time pure dispatch).
+    pub slice_task: String,
+    /// Print a progress line per slice completion.
+    pub verbose: bool,
+}
+
+impl Default for PbtConfig {
+    fn default() -> Self {
+        Self {
+            algo: PbtAlgo::Es,
+            env: EnvKind::CartPole,
+            pop: 8,
+            slices: 4,
+            iters_per_slice: 2,
+            max_steps: 200,
+            pop_inner: 16,
+            horizon: 64,
+            quantile: 0.25,
+            seed: 7,
+            kill_worker: 0,
+            store_noise_table: false,
+            slice_task: SLICE_TASK.to_string(),
+            verbose: false,
+        }
+    }
+}
+
+/// How slices are scheduled.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DispatchMode {
+    /// Barrier-free: re-dispatch each trial the moment its slice returns.
+    Async,
+    /// Lock-step generations (the baseline PBT loop).
+    Generational,
+}
+
+/// Result of a population run.
+#[derive(Clone, Debug)]
+pub struct PbtReport {
+    pub best: TrialId,
+    pub best_score: f32,
+    pub mean_score: f32,
+    pub slices_completed: usize,
+    pub exploits: usize,
+    pub wall_s: f64,
+}
+
+/// The PBT orchestrator.
+pub struct PopulationRunner {
+    cfg: PbtConfig,
+    store: Arc<StoreNode>,
+    trials: Vec<Trial>,
+    rng: Rng,
+    board: Leaderboard,
+    table_ref: Option<ObjRef<Vec<f32>>>,
+    exploits: usize,
+    t0: Instant,
+}
+
+impl PopulationRunner {
+    /// Build the initial population: per-trial random hyper-parameters
+    /// (log-uniform over each range) and per-trial initial checkpoints,
+    /// `put` into `store` and referenced for their lifetime as a trial's
+    /// current checkpoint.
+    pub fn new(cfg: PbtConfig, store: Arc<StoreNode>) -> Result<PopulationRunner> {
+        anyhow::ensure!(cfg.pop >= 2, "a population needs at least 2 trials");
+        anyhow::ensure!(cfg.slices >= 1, "each trial needs at least 1 slice");
+        register_pbt_tasks();
+        let mut rng = Rng::new(cfg.seed ^ 0x0b57);
+        let mut trials = Vec::with_capacity(cfg.pop);
+        let mut board = Leaderboard::new();
+        for i in 0..cfg.pop {
+            let mut hparams = default_hparams(cfg.algo);
+            hparams.resample(&mut rng);
+            let ck = backend::init_checkpoint(
+                cfg.algo,
+                cfg.env,
+                cfg.seed.wrapping_add(i as u64 * 7919),
+            );
+            // Held put: stored and referenced atomically — this very
+            // reference is the leader's hold on the trial's current
+            // checkpoint (released when the trial moves off it).
+            let checkpoint = store.put_held(&ck)?;
+            let id = TrialId(i as u64);
+            trials.push(Trial {
+                id,
+                hparams,
+                checkpoint,
+                score: f32::NEG_INFINITY,
+                best_score: f32::NEG_INFINITY,
+                slices_done: 0,
+                parent: None,
+                clones: 0,
+            });
+            board.record(LineageEvent {
+                trial: id,
+                slice: 0,
+                t_s: 0.0,
+                kind: LineageEventKind::Init,
+                best_so_far: f32::NEG_INFINITY,
+            });
+        }
+        let table_ref = if cfg.store_noise_table && cfg.algo == PbtAlgo::Es {
+            Some(backend::put_noise_table(&store)?)
+        } else {
+            None
+        };
+        Ok(PopulationRunner {
+            cfg,
+            store,
+            trials,
+            rng,
+            board,
+            table_ref,
+            exploits: 0,
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn trials(&self) -> &[Trial] {
+        &self.trials
+    }
+
+    pub fn leaderboard(&self) -> &Leaderboard {
+        &self.board
+    }
+
+    pub fn exploits(&self) -> usize {
+        self.exploits
+    }
+
+    /// Drive the population until every trial completed its slices.
+    pub fn run(&mut self, pool: &Pool, mode: DispatchMode) -> Result<PbtReport> {
+        self.t0 = Instant::now();
+        match mode {
+            DispatchMode::Async => self.run_async(pool)?,
+            DispatchMode::Generational => self.run_generational(pool)?,
+        }
+        Ok(self.report())
+    }
+
+    fn run_async(&mut self, pool: &Pool) -> Result<()> {
+        let mut inflight: HashMap<TrialId, MapHandle<SliceOutput>> = HashMap::new();
+        for idx in 0..self.trials.len() {
+            let id = self.trials[idx].id;
+            inflight.insert(id, self.dispatch(pool, idx)?);
+        }
+        while !inflight.is_empty() {
+            let ready: Vec<TrialId> = inflight
+                .iter()
+                .filter(|(_, h)| h.ready())
+                .map(|(id, _)| *id)
+                .collect();
+            if ready.is_empty() {
+                // Poll, don't block: MapHandle has no wait-any primitive.
+                // 1 ms bounds the re-dispatch latency well below any real
+                // slice duration; a pool-level completion channel would
+                // remove the poll entirely (ROADMAP follow-up).
+                std::thread::sleep(Duration::from_millis(1));
+                continue;
+            }
+            for id in ready {
+                let handle = inflight.remove(&id).expect("in-flight handle");
+                let out = handle
+                    .wait()
+                    .with_context(|| format!("pbt slice of {id}"))?
+                    .pop()
+                    .context("empty slice result")?;
+                let idx = self.trial_index(id);
+                self.complete(idx, out)?;
+                // No barrier: exploit against the scores of *right now*,
+                // then put the trial straight back to work.
+                if self.trials[idx].slices_done < self.cfg.slices {
+                    self.exploit_explore(idx)?;
+                    inflight.insert(id, self.dispatch(pool, idx)?);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn run_generational(&mut self, pool: &Pool) -> Result<()> {
+        for gen in 0..self.cfg.slices {
+            let mut handles: Vec<(usize, MapHandle<SliceOutput>)> =
+                Vec::with_capacity(self.trials.len());
+            for idx in 0..self.trials.len() {
+                handles.push((idx, self.dispatch(pool, idx)?));
+            }
+            for (idx, handle) in handles {
+                let out = handle
+                    .wait()
+                    .with_context(|| format!("pbt slice of {}", self.trials[idx].id))?
+                    .pop()
+                    .context("empty slice result")?;
+                self.complete(idx, out)?;
+            }
+            if gen + 1 == self.cfg.slices {
+                break;
+            }
+            // Exploit/explore at the generation barrier, on one snapshot
+            // of the scores.
+            let scores: Vec<(TrialId, f32)> =
+                self.trials.iter().map(|t| (t.id, t.score)).collect();
+            let (bottom, top) = truncation_split(&scores, self.cfg.quantile);
+            for id in bottom {
+                let idx = self.trial_index(id);
+                self.exploit_from(idx, &top)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn dispatch(&mut self, pool: &Pool, idx: usize) -> Result<MapHandle<SliceOutput>> {
+        let t = &self.trials[idx];
+        // Chaos stays armed on every dispatch until the pool has actually
+        // replaced a worker. Only the worker whose id matches the target
+        // dies, so the caller must keep at least `workers` slices in
+        // flight (pop >= workers — the CLI enforces this) for the victim
+        // to be guaranteed to fetch an armed one.
+        let kill_worker = if self.cfg.kill_worker != 0 && pool.restarts() == 0 {
+            self.cfg.kill_worker
+        } else {
+            0
+        };
+        let input = SliceInput {
+            trial: t.id.0,
+            slice: t.slices_done as u64,
+            algo: self.cfg.algo.tag(),
+            env: self.cfg.env.tag(),
+            seed: self.cfg.seed,
+            iters: self.cfg.iters_per_slice as u64,
+            max_steps: self.cfg.max_steps as u64,
+            pop_inner: self.cfg.pop_inner as u64,
+            horizon: self.cfg.horizon as u64,
+            hparams: t.hparams.to_wire(),
+            checkpoint: t.checkpoint,
+            table: self.table_ref,
+            kill_worker,
+        };
+        pool.map_async_chunked(&self.cfg.slice_task, std::iter::once(input), 1)
+    }
+
+    /// Fold a finished slice into the trial: adopt the new checkpoint
+    /// (replicated onto the leader's node so no worker crash can strand
+    /// the lineage), update scores, and log the event.
+    fn complete(&mut self, idx: usize, out: SliceOutput) -> Result<()> {
+        // Replicate onto the leader's node and take the leader's own
+        // reference. The producer's handoff reference stays until a later
+        // slice resumes from this checkpoint (the worker-side ledger —
+        // see `pop::backend`'s HANDOFFS), so no copy is ever observable
+        // at refcount 0 while a trial names it. Echo slices (synthetic
+        // benches return their input checkpoint unchanged) are naturally
+        // balanced: one incref here, one decref in release(old) below.
+        self.store
+            .get_bytes(out.checkpoint.id())
+            .with_context(|| format!("replicate checkpoint of trial {}", out.trial))?;
+        self.store.incref(out.checkpoint.id());
+        let old = self.trials[idx].checkpoint.id();
+        self.release(old);
+        let t = &mut self.trials[idx];
+        t.checkpoint = out.checkpoint;
+        t.score = out.reward;
+        t.best_score = t.best_score.max(out.reward);
+        t.slices_done += 1;
+        let (id, slice, best) = (t.id, t.slices_done, t.best_score);
+        let t_s = self.t0.elapsed().as_secs_f64();
+        self.board.record(LineageEvent {
+            trial: id,
+            slice,
+            t_s,
+            kind: LineageEventKind::Slice { reward: out.reward },
+            best_so_far: best,
+        });
+        let scored: Vec<f32> = self
+            .trials
+            .iter()
+            .filter(|t| t.slices_done > 0)
+            .map(|t| t.score)
+            .collect();
+        let pop_best = scored.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let pop_mean = scored.iter().sum::<f32>() / scored.len() as f32;
+        self.board.record_population(t_s, pop_best, pop_mean);
+        if self.cfg.verbose {
+            println!(
+                "[{t_s:7.2}s] {id} slice {slice}/{}  reward {:>9.2}  best {best:>9.2}  \
+                 (worker {})",
+                self.cfg.slices, out.reward, out.worker
+            );
+        }
+        Ok(())
+    }
+
+    /// Truncation selection for the trial that just finished a slice: if
+    /// it ranks in the bottom quantile of the currently-scored
+    /// population, exploit a top-quantile trial.
+    fn exploit_explore(&mut self, idx: usize) -> Result<()> {
+        let scores: Vec<(TrialId, f32)> = self
+            .trials
+            .iter()
+            .filter(|t| t.slices_done > 0)
+            .map(|t| (t.id, t.score))
+            .collect();
+        if scores.len() < 2 {
+            return Ok(());
+        }
+        let (bottom, top) = truncation_split(&scores, self.cfg.quantile);
+        if !bottom.contains(&self.trials[idx].id) {
+            return Ok(());
+        }
+        self.exploit_from(idx, &top)
+    }
+
+    /// Exploit: adopt a uniformly-chosen source's checkpoint (24-byte
+    /// `ObjRef` clone + incref — θ never moves) and hyper-parameters,
+    /// then explore by perturbing the copied hyper-parameters.
+    pub(crate) fn exploit_from(&mut self, idx: usize, top: &[TrialId]) -> Result<()> {
+        if top.is_empty() {
+            return Ok(());
+        }
+        let src_id = top[self.rng.below(top.len())];
+        if src_id == self.trials[idx].id {
+            return Ok(());
+        }
+        let src = &self.trials[self.trial_index(src_id)];
+        let (src_ck, src_hp, src_score) = (src.checkpoint, src.hparams.clone(), src.score);
+        self.store.incref(src_ck.id());
+        let old = self.trials[idx].checkpoint.id();
+        self.release(old);
+        let t = &mut self.trials[idx];
+        t.checkpoint = src_ck;
+        t.hparams = src_hp;
+        t.parent = Some(src_id);
+        t.clones += 1;
+        t.score = src_score;
+        let (id, slice, best) = (t.id, t.slices_done, t.best_score);
+        let t_s = self.t0.elapsed().as_secs_f64();
+        self.board.record(LineageEvent {
+            trial: id,
+            slice,
+            t_s,
+            kind: LineageEventKind::Clone { parent: src_id },
+            best_so_far: best,
+        });
+        self.trials[idx].hparams.perturb(&mut self.rng);
+        self.board.record(LineageEvent {
+            trial: id,
+            slice,
+            t_s,
+            kind: LineageEventKind::Explore,
+            best_so_far: best,
+        });
+        self.exploits += 1;
+        if self.cfg.verbose {
+            println!("[{t_s:7.2}s] {id} exploits {src_id} (clone by ref) and explores");
+        }
+        Ok(())
+    }
+
+    /// Drop the runner's reference to a checkpoint blob (it may then be
+    /// LRU-evicted once nothing else references it).
+    fn release(&self, id: ObjId) {
+        self.store.decref(id);
+    }
+
+    fn trial_index(&self, id: TrialId) -> usize {
+        // Ids equal positions by construction (new() assigns TrialId(i)
+        // and the population is never reordered or resized).
+        debug_assert_eq!(self.trials[id.0 as usize].id, id);
+        id.0 as usize
+    }
+
+    fn report(&self) -> PbtReport {
+        let best = self
+            .trials
+            .iter()
+            .max_by(|a, b| {
+                a.best_score
+                    .partial_cmp(&b.best_score)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .expect("non-empty population");
+        let mean = self.trials.iter().map(|t| t.score).sum::<f32>() / self.trials.len() as f32;
+        PbtReport {
+            best: best.id,
+            best_score: best.best_score,
+            mean_score: mean,
+            slices_completed: self.trials.iter().map(|t| t.slices_done).sum(),
+            exploits: self.exploits,
+            wall_s: self.t0.elapsed().as_secs_f64(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> PbtConfig {
+        PbtConfig {
+            pop: 4,
+            slices: 2,
+            iters_per_slice: 1,
+            max_steps: 60,
+            pop_inner: 4,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exploit_clones_checkpoint_by_reference() {
+        let store = crate::store::node_or_host(256 << 20);
+        let mut runner = PopulationRunner::new(tiny_cfg(), store).unwrap();
+        // Fabricate scores: trial 0 is the straggler, 3 the front-runner.
+        for (i, t) in runner.trials.iter_mut().enumerate() {
+            t.score = i as f32;
+            t.slices_done = 1;
+        }
+        let src_ck = runner.trials[3].checkpoint;
+        let src_hp = runner.trials[3].hparams.clone();
+        runner.exploit_from(0, &[TrialId(3)]).unwrap();
+        let t = &runner.trials[0];
+        assert_eq!(
+            t.checkpoint.id(),
+            src_ck.id(),
+            "exploit must adopt the source handle, not copy θ"
+        );
+        assert_eq!(t.parent, Some(TrialId(3)));
+        assert_eq!(t.clones, 1);
+        assert_eq!(t.score, 3.0, "the trial now *is* the source model");
+        // Explore perturbed the copied hyper-parameters within range.
+        for (h, s) in t.hparams.0.iter().zip(&src_hp.0) {
+            assert!(h.value >= h.min && h.value <= h.max);
+            let _ = s;
+        }
+        assert_eq!(runner.exploits(), 1);
+        let parents = runner.leaderboard().parents(TrialId(0));
+        assert_eq!(parents, vec![TrialId(3)]);
+    }
+
+    #[test]
+    fn exploit_decisions_are_deterministic_for_a_seed() {
+        let decide = |seed| {
+            let store = crate::store::node_or_host(256 << 20);
+            let cfg = PbtConfig { seed, ..tiny_cfg() };
+            let mut runner = PopulationRunner::new(cfg, store).unwrap();
+            for (i, t) in runner.trials.iter_mut().enumerate() {
+                t.score = (i % 3) as f32;
+                t.slices_done = 1;
+            }
+            runner
+                .exploit_from(0, &[TrialId(1), TrialId(2), TrialId(3)])
+                .unwrap();
+            (
+                runner.trials[0].parent,
+                runner.trials[0].hparams.to_wire(),
+            )
+        };
+        assert_eq!(decide(11), decide(11), "same seed, same clone + mutation");
+    }
+
+    #[test]
+    fn self_exploit_is_a_no_op() {
+        let store = crate::store::node_or_host(256 << 20);
+        let mut runner = PopulationRunner::new(tiny_cfg(), store).unwrap();
+        let before = runner.trials[2].checkpoint.id();
+        runner.exploit_from(2, &[TrialId(2)]).unwrap();
+        assert_eq!(runner.trials[2].checkpoint.id(), before);
+        assert_eq!(runner.exploits(), 0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Trials: one member of a PBT population — a mutable hyper-parameter
+//! set plus a model checkpoint held **by reference** in the object store.
+//!
+//! A trial's checkpoint is an [`ObjRef`], so the exploit step — the
+//! bottom of the population adopting a top performer's weights — copies a
+//! 24-byte handle and bumps a refcount, never θ itself. Lineage fields
+//! (`parent`, `clones`) plus the [`super::Leaderboard`] event log make
+//! every trial's ancestry reconstructible post-hoc.
+
+use crate::store::ObjRef;
+use crate::util::Rng;
+
+/// Population-unique trial identity. Stable across exploit/explore: a
+/// trial keeps its id when it clones another trial's checkpoint — the
+/// lineage log records the adoption instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TrialId(pub u64);
+
+impl std::fmt::Display for TrialId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "T{}", self.0)
+    }
+}
+
+/// One mutable hyper-parameter with its search range (`min > 0`: ranges
+/// are sampled log-uniformly).
+#[derive(Clone, Debug)]
+pub struct Hparam {
+    pub name: &'static str,
+    pub value: f32,
+    pub min: f32,
+    pub max: f32,
+}
+
+/// A trial's hyper-parameter set.
+#[derive(Clone, Debug, Default)]
+pub struct Hparams(pub Vec<Hparam>);
+
+impl Hparams {
+    pub fn get(&self, name: &str) -> Option<f32> {
+        self.0.iter().find(|h| h.name == name).map(|h| h.value)
+    }
+
+    /// Log-uniform resample of every parameter (initial diversity).
+    pub fn resample(&mut self, rng: &mut Rng) {
+        for h in &mut self.0 {
+            h.value = log_uniform(rng, h.min, h.max);
+        }
+    }
+
+    /// PBT explore with an explicit resample probability: each parameter
+    /// is multiplied by 0.8 or 1.25 (coin flip), except with probability
+    /// `resample_p` it is freshly log-uniform resampled; always clamped
+    /// to its range. [`Hparams::perturb`] fixes `resample_p` at the
+    /// standard 25%.
+    pub fn perturb_with(&mut self, rng: &mut Rng, resample_p: f64) {
+        for h in &mut self.0 {
+            if rng.chance(resample_p) {
+                h.value = log_uniform(rng, h.min, h.max);
+            } else {
+                h.value *= if rng.chance(0.5) { 1.25 } else { 0.8 };
+            }
+            h.value = h.value.clamp(h.min, h.max);
+        }
+    }
+
+    /// The standard PBT explore step (Jaderberg et al. 2017).
+    pub fn perturb(&mut self, rng: &mut Rng) {
+        self.perturb_with(rng, 0.25);
+    }
+
+    /// The wire shape carried in slice payloads.
+    pub fn to_wire(&self) -> Vec<(String, f32)> {
+        self.0.iter().map(|h| (h.name.to_string(), h.value)).collect()
+    }
+}
+
+fn log_uniform(rng: &mut Rng, min: f32, max: f32) -> f32 {
+    debug_assert!(min > 0.0 && max >= min, "log-uniform needs 0 < min <= max");
+    let (lo, hi) = (min.ln() as f64, max.ln() as f64);
+    rng.range_f64(lo, hi).exp() as f32
+}
+
+/// One population member, leader-side.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    pub id: TrialId,
+    pub hparams: Hparams,
+    /// The latest checkpoint, by reference: exploiting it onto another
+    /// trial copies 24 bytes, not θ.
+    pub checkpoint: ObjRef<Vec<u8>>,
+    /// Evaluation reward of the latest completed slice.
+    pub score: f32,
+    /// Best slice reward this trial ever evaluated to (monotone — the
+    /// lineage invariant the chaos tests assert).
+    pub best_score: f32,
+    /// Train slices completed.
+    pub slices_done: usize,
+    /// Trial whose checkpoint this one last cloned (exploit lineage).
+    pub parent: Option<TrialId>,
+    /// Exploits survived (clone depth in the lineage forest).
+    pub clones: u64,
+}
+
+/// Truncation selection: rank the population by score and return
+/// `(bottom, top)` — the bottom ⌈q·n⌉ trial ids (exploit targets, they
+/// clone) and the top ⌈q·n⌉ (exploit sources). Deterministic: score ties
+/// break by trial id, and `k` is clamped so bottom and top never overlap.
+pub fn truncation_split(scores: &[(TrialId, f32)], q: f32) -> (Vec<TrialId>, Vec<TrialId>) {
+    let n = scores.len();
+    if n < 2 {
+        return (Vec::new(), Vec::new());
+    }
+    let k = ((n as f32 * q).ceil() as usize).clamp(1, n / 2);
+    let mut order: Vec<(TrialId, f32)> = scores.to_vec();
+    order.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.0.cmp(&b.0))
+    });
+    let bottom = order[..k].iter().map(|x| x.0).collect();
+    let top = order[n - k..].iter().map(|x| x.0).collect();
+    (bottom, top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(xs: &[u64]) -> Vec<TrialId> {
+        xs.iter().map(|&i| TrialId(i)).collect()
+    }
+
+    #[test]
+    fn truncation_split_picks_extremes_deterministically() {
+        let scores: Vec<(TrialId, f32)> = vec![
+            (TrialId(0), 5.0),
+            (TrialId(1), 1.0),
+            (TrialId(2), 9.0),
+            (TrialId(3), 3.0),
+        ];
+        let (bottom, top) = truncation_split(&scores, 0.25);
+        assert_eq!(bottom, ids(&[1]));
+        assert_eq!(top, ids(&[2]));
+        let (bottom, top) = truncation_split(&scores, 0.5);
+        assert_eq!(bottom, ids(&[1, 3]));
+        assert_eq!(top, ids(&[0, 2]));
+    }
+
+    #[test]
+    fn truncation_split_breaks_ties_by_id_and_never_overlaps() {
+        let scores: Vec<(TrialId, f32)> =
+            (0..5).map(|i| (TrialId(i), 1.0)).collect();
+        let (bottom, top) = truncation_split(&scores, 0.9); // clamped to n/2
+        assert_eq!(bottom, ids(&[0, 1]));
+        assert_eq!(top, ids(&[3, 4]));
+        for b in &bottom {
+            assert!(!top.contains(b), "bottom and top must be disjoint");
+        }
+        // Degenerate populations select nothing.
+        assert_eq!(truncation_split(&scores[..1], 0.5), (vec![], vec![]));
+    }
+
+    fn lr_sigma() -> Hparams {
+        Hparams(vec![
+            Hparam { name: "lr", value: 0.02, min: 1e-3, max: 0.2 },
+            Hparam { name: "sigma", value: 0.05, min: 0.01, max: 0.5 },
+        ])
+    }
+
+    #[test]
+    fn perturb_without_resample_multiplies_by_known_factors() {
+        let mut hp = lr_sigma();
+        let before: Vec<f32> = hp.0.iter().map(|h| h.value).collect();
+        let mut rng = Rng::new(42);
+        hp.perturb_with(&mut rng, 0.0);
+        for (h, b) in hp.0.iter().zip(&before) {
+            let factor = h.value / b;
+            assert!(
+                (factor - 1.25).abs() < 1e-5 || (factor - 0.8).abs() < 1e-5,
+                "{}: factor {factor}",
+                h.name
+            );
+        }
+    }
+
+    #[test]
+    fn perturb_is_deterministic_and_stays_in_range() {
+        let run = |seed| {
+            let mut hp = lr_sigma();
+            let mut rng = Rng::new(seed);
+            for _ in 0..50 {
+                hp.perturb(&mut rng);
+            }
+            hp.0.iter().map(|h| h.value).collect::<Vec<f32>>()
+        };
+        assert_eq!(run(7), run(7), "same seed, same mutation trajectory");
+        assert_ne!(run(7), run(8));
+        let mut hp = lr_sigma();
+        let mut rng = Rng::new(3);
+        for _ in 0..200 {
+            hp.perturb(&mut rng);
+            for h in &hp.0 {
+                assert!(h.value >= h.min && h.value <= h.max, "{h:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn resample_covers_the_range_log_uniformly() {
+        let mut hp = lr_sigma();
+        let mut rng = Rng::new(5);
+        let mut lrs = Vec::new();
+        for _ in 0..200 {
+            hp.resample(&mut rng);
+            lrs.push(hp.get("lr").unwrap());
+        }
+        assert!(lrs.iter().all(|&v| (1e-3..=0.2).contains(&v)));
+        // Log-uniform: a decent fraction lands below the geometric mean.
+        let below = lrs.iter().filter(|&&v| v < 0.0141).count();
+        assert!(below > 60 && below < 140, "{below} of 200 below geo-mean");
+    }
+}

@@ -93,6 +93,8 @@ struct Inner {
     evictions: u64,
     hits: u64,
     misses: u64,
+    /// Ids evicted by LRU pressure, awaiting [`LocalStore::drain_evicted`].
+    evicted_log: Vec<ObjId>,
 }
 
 /// The in-memory blob store of one node.
@@ -127,6 +129,7 @@ impl LocalStore {
                 evictions: 0,
                 hits: 0,
                 misses: 0,
+                evicted_log: Vec::new(),
             }),
         }
     }
@@ -138,6 +141,37 @@ impl LocalStore {
     pub fn insert(&self, bytes: &[u8]) -> ObjId {
         let id = ObjId::of(bytes);
         self.insert_arc(id, Arc::new(bytes.to_vec()));
+        id
+    }
+
+    /// [`LocalStore::insert`] that also takes a reference on the blob,
+    /// **atomically** — there is no instant where the inserted blob sits
+    /// at refcount 0, so a concurrent over-budget insert can never evict
+    /// it between "stored" and "referenced". Producers handing a blob to
+    /// a consumer on another node use this (e.g. PBT checkpoints: the
+    /// worker holds the handoff reference until its store dies, which is
+    /// what guarantees the leader's later fetch finds the bytes).
+    pub fn insert_held(&self, bytes: &[u8]) -> ObjId {
+        let id = ObjId::of(bytes);
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.entries.get_mut(&id) {
+            e.touched = tick;
+            e.refs += 1;
+            return id;
+        }
+        inner.bytes += bytes.len();
+        inner.entries.insert(
+            id,
+            Entry {
+                data: Arc::new(bytes.to_vec()),
+                refs: 1,
+                pinned: false,
+                touched: tick,
+            },
+        );
+        evict_over_budget(&mut inner, self.budget, Some(id));
         id
     }
 
@@ -324,6 +358,14 @@ impl LocalStore {
         let inner = self.inner.lock().unwrap();
         (inner.hits, inner.misses, inner.evictions)
     }
+
+    /// Ids evicted by LRU pressure since the last drain. [`super::StoreNode`]
+    /// drains this after every insert to **push** an eviction straight to
+    /// the directory (eager unpublish) instead of leaving the stale
+    /// location to be discovered by a fetcher's authoritative miss.
+    pub fn drain_evicted(&self) -> Vec<ObjId> {
+        std::mem::take(&mut self.inner.lock().unwrap().evicted_log)
+    }
 }
 
 /// Evict least-recently-touched unpinned zero-ref blobs until within
@@ -341,6 +383,7 @@ fn evict_over_budget(inner: &mut Inner, budget: usize, protect: Option<ObjId>) {
         if let Some(e) = inner.entries.remove(&id) {
             inner.bytes -= e.data.len();
             inner.evictions += 1;
+            inner.evicted_log.push(id);
         }
     }
 }

@@ -91,6 +91,18 @@ pub fn node() -> Result<Arc<StoreNode>> {
     )
 }
 
+/// The process-global node, hosting a fresh one (directory included, with
+/// `budget` bytes of cache) when the slot is empty. The idiom for
+/// single-process surfaces — CLI drivers, dashboard panels, benches,
+/// examples — whose worker tasks resolve `ObjRef`s through the global
+/// slot: every caller in the process shares one node, so no later
+/// `install_node_default` can be silently outvoted. Atomic: two racing
+/// callers get the same node.
+pub fn node_or_host(budget: usize) -> Arc<StoreNode> {
+    let mut g = GLOBAL_NODE.lock().unwrap();
+    g.get_or_insert_with(|| StoreNode::host(budget)).clone()
+}
+
 /// A typed pass-by-reference handle to a stored blob: 24 bytes on the
 /// wire no matter how large the payload. `Copy`, so it can ride in any
 /// number of task payloads for free.

@@ -192,11 +192,58 @@ impl StoreNode {
     /// identical bytes (content addressing).
     pub fn put_bytes(&self, bytes: &[u8]) -> Result<ObjId> {
         let id = self.local.insert(bytes);
+        self.flush_evictions();
         let ep = self
             .endpoint()
             .unwrap_or_else(|| self.local_marker.clone());
         self.dir.publish(id, bytes.len() as u64, &ep)?;
         Ok(id)
+    }
+
+    /// [`StoreNode::put_bytes`] that atomically takes a reference on the
+    /// stored blob ([`LocalStore::insert_held`]): the blob is never
+    /// observable at refcount 0, so concurrent inserts under byte
+    /// pressure cannot evict it before its consumer arrives. The
+    /// reference is deliberately held for the life of this node (the
+    /// producer-side handoff guarantee); callers that want reclamation
+    /// must [`StoreNode::decref`] when the handoff is complete.
+    pub fn put_bytes_held(&self, bytes: &[u8]) -> Result<ObjId> {
+        let id = self.local.insert_held(bytes);
+        self.flush_evictions();
+        let ep = self
+            .endpoint()
+            .unwrap_or_else(|| self.local_marker.clone());
+        self.dir.publish(id, bytes.len() as u64, &ep)?;
+        Ok(id)
+    }
+
+    /// Typed [`StoreNode::put_bytes_held`].
+    pub fn put_held<T: Encode>(&self, v: &T) -> Result<ObjRef<T>> {
+        let bytes = wire::to_bytes(v);
+        let len = bytes.len() as u64;
+        let id = self.put_bytes_held(&bytes)?;
+        Ok(ObjRef::from_parts(id, len))
+    }
+
+    /// Push-style eviction→directory notification: every insert may have
+    /// LRU-evicted blobs, and a holder that silently dropped its copy is a
+    /// dead location every cold fetcher would otherwise pay a round trip
+    /// (up to the authoritative "not held" answer) to discover. Unpublish
+    /// eagerly instead. Best-effort: a transiently unreachable directory
+    /// leaves the stale location to the lazy authoritative-miss path.
+    fn flush_evictions(&self) {
+        let evicted = self.local.drain_evicted();
+        if evicted.is_empty() {
+            return;
+        }
+        let ep = self
+            .endpoint()
+            .unwrap_or_else(|| self.local_marker.clone());
+        for id in evicted {
+            if let Err(e) = self.dir.unpublish(id, &ep) {
+                log::warn!("store: eager unpublish of evicted {id} failed: {e:#}");
+            }
+        }
     }
 
     /// Resolve a blob: local cache hit, or a directory lookup plus one
@@ -265,6 +312,7 @@ impl StoreNode {
                     // very buffer we hand back — no re-hash, no copy.
                     let data = Arc::new(bytes);
                     self.local.insert_arc(id, data.clone());
+                    self.flush_evictions();
                     self.transfers_in.fetch_add(1, Ordering::Relaxed);
                     if let Some(ep) = own.as_deref() {
                         // Cached copy becomes a new fetchable location.
@@ -577,6 +625,35 @@ mod tests {
                 || err.to_string().contains("unknown to the directory"),
             "{err:#}"
         );
+    }
+
+    #[test]
+    fn eviction_eagerly_unpublishes_location() {
+        // Regression: a holder that LRU-evicts a blob must push the
+        // unpublish to the directory immediately, not wait for some
+        // fetcher's authoritative miss. A's budget fits one blob; B caches
+        // X; evicting X on A must leave B as the only listed location, so
+        // a later fetcher never even tries the dead copy.
+        let a = StoreNode::host(1_200_000);
+        let ep_a = a.serve("127.0.0.1:0").unwrap();
+        let data = payload(6, 1_000_000);
+        let x = a.put_bytes(&data).unwrap();
+        let b = StoreNode::connect(&ep_a, 16 << 20).unwrap();
+        let ep_b = b.serve("127.0.0.1:0").unwrap();
+        assert_eq!(*b.get_bytes(x).unwrap(), data);
+        assert_eq!(a.serves(), 1);
+        // Insert past A's budget: X is the LRU victim.
+        let _y = a.put_bytes(&payload(7, 1_100_000)).unwrap();
+        assert!(!a.contains(x), "X must be evicted from A");
+        let locs = a.directory().lookup(x).unwrap().locations;
+        assert_eq!(locs, vec![ep_b], "A must unpublish itself eagerly");
+        // A third node resolves X straight through the surviving location
+        // — no dead-location failover against A.
+        let c = StoreNode::connect(&ep_a, 16 << 20).unwrap();
+        assert_eq!(*c.get_bytes(x).unwrap(), data);
+        assert_eq!(c.transfers(), 1);
+        assert_eq!(a.serves(), 1, "A must not have been asked again");
+        assert_eq!(b.serves(), 1, "C fetched from B");
     }
 
     #[test]

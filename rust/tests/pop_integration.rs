@@ -1,0 +1,168 @@
+//! Cross-layer integration tests for `fiber::pop`: full populations over
+//! real Pool workers with store-backed checkpoints, including the chaos
+//! path — a worker killed mid-slice must cost the population nothing.
+//!
+//! Every test shares the process-global store node (`node_or_host`), so
+//! parallel tests never race installs of different nodes.
+
+use fiber::api::pool::Pool;
+use fiber::pop::{
+    DispatchMode, EnvKind, LineageEventKind, PbtAlgo, PbtConfig, PopulationRunner,
+};
+use fiber::store::StoreNode;
+use std::sync::Arc;
+
+fn store() -> Arc<StoreNode> {
+    fiber::store::node_or_host(1 << 30)
+}
+
+fn quick_cfg(algo: PbtAlgo, seed: u64) -> PbtConfig {
+    PbtConfig {
+        algo,
+        env: EnvKind::CartPole,
+        pop: 6,
+        slices: 3,
+        iters_per_slice: 1,
+        max_steps: 100,
+        pop_inner: 8,
+        horizon: 24,
+        seed,
+        ..Default::default()
+    }
+}
+
+fn assert_population_intact(runner: &PopulationRunner, slices: usize) {
+    for t in runner.trials() {
+        assert_eq!(
+            t.slices_done, slices,
+            "trial {} lost slices: {}/{slices}",
+            t.id, t.slices_done
+        );
+        assert!(t.best_score.is_finite(), "trial {} never scored", t.id);
+        assert!(
+            runner.leaderboard().best_is_monotone(t.id),
+            "trial {} best-reward regressed in its lineage",
+            t.id
+        );
+        assert_eq!(
+            runner.leaderboard().slices(t.id),
+            slices,
+            "trial {} lineage log disagrees with its slice count",
+            t.id
+        );
+    }
+}
+
+/// **Acceptance:** an async ES population completes every lineage, logs
+/// every slice, and exploits clone checkpoints by reference.
+#[test]
+fn async_es_population_completes_all_lineages() {
+    let cfg = quick_cfg(PbtAlgo::Es, 71);
+    let slices = cfg.slices;
+    let pool = Pool::builder()
+        .processes(3)
+        .store(store())
+        .build()
+        .unwrap();
+    let mut runner = PopulationRunner::new(cfg, store()).unwrap();
+    let report = runner.run(&pool, DispatchMode::Async).unwrap();
+    assert_eq!(report.slices_completed, 6 * slices);
+    assert!(report.best_score > 0.0, "cartpole rewards survival");
+    assert_population_intact(&runner, slices);
+    // Clone events (if any fired) must name a real parent and carry a
+    // matching Explore mutation.
+    let clones: Vec<_> = runner
+        .leaderboard()
+        .events()
+        .iter()
+        .filter(|e| matches!(e.kind, LineageEventKind::Clone { .. }))
+        .collect();
+    let explores = runner
+        .leaderboard()
+        .events()
+        .iter()
+        .filter(|e| matches!(e.kind, LineageEventKind::Explore))
+        .count();
+    assert_eq!(clones.len(), explores, "every exploit explores");
+    assert_eq!(clones.len(), runner.exploits());
+    for c in clones {
+        if let LineageEventKind::Clone { parent } = c.kind {
+            assert!(runner.trials().iter().any(|t| t.id == parent));
+            assert_ne!(parent, c.trial, "no self-cloning");
+        }
+    }
+}
+
+/// **Acceptance (chaos):** kill one Pool worker mid-slice; the pending
+/// table requeues the slice, the supervisor replaces the worker, and the
+/// population completes with no trial lost and best-reward monotone per
+/// trial lineage.
+#[test]
+fn chaos_kill_worker_mid_slice_loses_no_trial() {
+    let mut cfg = quick_cfg(PbtAlgo::Es, 72);
+    cfg.kill_worker = 2; // some worker will fetch an armed slice and die
+    let slices = cfg.slices;
+    let pool = Pool::builder()
+        .processes(3)
+        .store(store())
+        .build()
+        .unwrap();
+    let mut runner = PopulationRunner::new(cfg, store()).unwrap();
+    let report = runner.run(&pool, DispatchMode::Async).unwrap();
+    assert!(
+        pool.restarts() >= 1,
+        "the armed worker must have died and been replaced"
+    );
+    let (_, _, requeued) = pool.counters();
+    assert!(requeued >= 1, "the killed slice must have been requeued");
+    assert_eq!(report.slices_completed, 6 * slices, "no trial lost");
+    assert_population_intact(&runner, slices);
+}
+
+/// A PPO population (lr/clip/entropy as mutable hyper-parameters) runs
+/// through the same orchestrator unchanged — the backend genericity the
+/// subsystem promises.
+#[test]
+fn async_ppo_population_completes() {
+    let mut cfg = quick_cfg(PbtAlgo::Ppo, 73);
+    cfg.pop = 4;
+    cfg.slices = 2;
+    let slices = cfg.slices;
+    let pool = Pool::builder()
+        .processes(2)
+        .store(store())
+        .build()
+        .unwrap();
+    let mut runner = PopulationRunner::new(cfg, store()).unwrap();
+    let report = runner.run(&pool, DispatchMode::Async).unwrap();
+    assert_eq!(report.slices_completed, 4 * slices);
+    assert!(report.best_score > 0.0);
+    assert_population_intact(&runner, slices);
+    for t in runner.trials() {
+        for h in &t.hparams.0 {
+            assert!(
+                h.value >= h.min && h.value <= h.max,
+                "mutated hparam out of range: {h:?}"
+            );
+        }
+    }
+}
+
+/// Lock-step generational dispatch drives the same trials to the same
+/// completion contract (the baseline the figure/bench compare against).
+#[test]
+fn generational_dispatch_completes() {
+    let mut cfg = quick_cfg(PbtAlgo::Es, 74);
+    cfg.pop = 4;
+    cfg.slices = 2;
+    let slices = cfg.slices;
+    let pool = Pool::builder()
+        .processes(2)
+        .store(store())
+        .build()
+        .unwrap();
+    let mut runner = PopulationRunner::new(cfg, store()).unwrap();
+    let report = runner.run(&pool, DispatchMode::Generational).unwrap();
+    assert_eq!(report.slices_completed, 4 * slices);
+    assert_population_intact(&runner, slices);
+}

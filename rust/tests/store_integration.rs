@@ -2,13 +2,21 @@
 //! Pool maps over a 2-node TCP store deployment, and the store-backed ring
 //! broadcast's warm path across a heal.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 use fiber::api::pool::Pool;
 use fiber::coordinator::register_task;
 use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
 use fiber::store::{self, ObjRef, StoreNode};
+
+/// The process-global store slot is one per process; tests that install
+/// their own node serialize on this lock so they cannot stomp each other.
+static GLOBAL_SLOT: Mutex<()> = Mutex::new(());
+
+fn global_slot() -> MutexGuard<'static, ()> {
+    GLOBAL_SLOT.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// ≥ 1 MB of deterministic, content-varied floats.
 fn big_payload(tag: u32) -> Vec<f32> {
@@ -28,6 +36,7 @@ fn big_payload(tag: u32) -> Vec<f32> {
 /// fetches all cross real TCP sockets.
 #[test]
 fn pool_map_by_ref_transfers_once_per_node() {
+    let _slot = global_slot();
     let node_a = StoreNode::host(256 << 20);
     let ep_a = node_a.serve("127.0.0.1:0").unwrap();
     let node_b = StoreNode::connect(&ep_a, 256 << 20).unwrap();
@@ -75,6 +84,65 @@ fn pool_map_by_ref_transfers_once_per_node() {
         .unwrap();
     assert_eq!(out2.len(), 4);
     assert_eq!(node_b.transfers(), 1, "warm maps must not re-transfer");
+}
+
+/// **Satellite acceptance:** `ObjRef`-aware auto-put in `Pool::map` — a
+/// map whose by-value arguments exceed the pool's size threshold ships
+/// 24-byte references transparently. Node A is the leader's store; node B
+/// is the worker node (the process-global slot). Sixteen tasks over one
+/// identical ~1.2 MB argument hash to one content-addressed blob, so the
+/// payload crosses the TCP hop to the worker node exactly **once**, and
+/// the task function — written against plain `Vec<f32>` — never learns
+/// the wrapping happened.
+#[test]
+fn auto_put_map_transfers_once_per_node() {
+    let _slot = global_slot();
+    let node_a = StoreNode::host(256 << 20);
+    let ep_a = node_a.serve("127.0.0.1:0").unwrap();
+    let node_b = StoreNode::connect(&ep_a, 256 << 20).unwrap();
+    store::install_node(node_b.clone());
+
+    register_task("storeit.autoput_sum", |v: Vec<f32>| {
+        Ok::<f32, String>(v.iter().sum())
+    });
+
+    let payload = big_payload(21);
+    assert!(payload.len() * 4 >= 1 << 20, "payload must be ≥ 1 MB");
+    let want: f32 = payload.iter().sum();
+
+    let pool = Pool::builder()
+        .processes(4)
+        .store(node_a.clone())
+        .auto_put_threshold(64 << 10)
+        .build()
+        .unwrap();
+    let transfers_before = node_b.transfers();
+    let n_tasks = 16;
+    let out: Vec<f32> = pool
+        .map("storeit.autoput_sum", (0..n_tasks).map(|_| payload.clone()))
+        .unwrap();
+    assert_eq!(out.len(), n_tasks);
+    for (k, s) in out.iter().enumerate() {
+        assert!((s - want).abs() < 1.0, "task {k}: sum {s} vs {want}");
+    }
+    assert_eq!(
+        node_b.transfers() - transfers_before,
+        1,
+        "the auto-put payload must cross to the worker node exactly once"
+    );
+
+    // The auto-put blob is released when the map finishes: the leader's
+    // copy becomes removable (refcount back to zero). The release runs
+    // just after the map's waiters wake, so poll briefly.
+    let id = fiber::store::ObjId::of(&fiber::wire::to_bytes(&payload));
+    let t0 = std::time::Instant::now();
+    while !node_a.local().remove(id) {
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "auto-put blob must become removable after the map completes"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
 }
 
 /// **Acceptance:** `store_broadcast`'s warm path cache-hits after a heal.
