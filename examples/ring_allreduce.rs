@@ -11,9 +11,13 @@
 //! contrasts the per-member traffic with the naive gather-broadcast
 //! leader hotspot, then demonstrates a generation bump (the ring scales
 //! from 4 members down to 3 and re-rendezvouses — the collective version
-//! of `Pool::resize` dynamic scaling), and finally **failure healing**:
-//! one member is chaos-killed mid-allreduce and the survivors excise it,
-//! re-rank, and resume from their last completed chunk.
+//! of `Pool::resize` dynamic scaling), then **failure healing**: one
+//! member is chaos-killed mid-allreduce and the survivors excise it,
+//! re-rank, and resume from their last completed chunk. The final act is
+//! **auto-grow**: the same chaos kill, but with a standby member in the
+//! ring's spare pool — the heal drains it back in, the collective resumes
+//! over the re-grown (original-size) world, and the rejoiner relays the
+//! resumed chunks as a neutral participant.
 
 use std::time::Duration;
 
@@ -126,5 +130,72 @@ fn main() -> anyhow::Result<()> {
         );
     }
     assert_eq!(survivors[0].3, survivors[1].3, "survivors agree bitwise");
+
+    // Auto-grow: the same kill, but a spare is standing by. The heal
+    // drains it into the new generation, so the world shrinks 3 → 2 and
+    // grows straight back to 3 inside the same collective: survivors keep
+    // banked chunks (3-way sum) and re-reduce the rest (2-way sum + the
+    // rejoiner's zeros), while the rejoiner ends ranked and warm for the
+    // next op.
+    println!("\nchaos with a spare: kill → heal → auto-grow back to world 3…");
+    let rv = Rendezvous::new(3);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let spare_rv = rv.clone();
+    let spare = std::thread::spawn(move || {
+        let mut m = RingMember::join_spare_inproc(&spare_rv, Duration::from_secs(10)).unwrap();
+        m.set_chunk_elems(8);
+        m.set_timeout(Duration::from_millis(250));
+        m.set_probe_interval(Duration::from_millis(10));
+        let cold = m.cold_op().cloned().expect("drained mid-op");
+        let mut buf = vec![0.0f32; cold.op.elems as usize];
+        m.allreduce_sum(&mut buf).unwrap();
+        (m.rank(), m.world(), m.generation())
+    });
+    while rv.spares().is_empty() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let handles: Vec<_> = (0..3)
+        .map(|_| {
+            let rv = rv.clone();
+            std::thread::spawn(move || {
+                let mut m = RingMember::join_inproc(&rv).unwrap();
+                m.set_chunk_elems(8);
+                m.set_timeout(Duration::from_millis(250));
+                m.set_probe_interval(Duration::from_millis(10));
+                if m.rank() == 2 {
+                    m.set_kill_after_chunk(Some(1));
+                }
+                let mut buf = vec![(m.rank() + 1) as f32; 32];
+                match m.allreduce_sum(&mut buf) {
+                    Ok(()) => Some((m.rank(), m.world(), m.generation(), buf)),
+                    Err(e) => {
+                        assert!(is_chaos_killed(&e));
+                        None
+                    }
+                }
+            })
+        })
+        .collect();
+    let survivors: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    let (s_rank, s_world, s_gen) = spare.join().unwrap();
+    assert_eq!(survivors.len(), 2);
+    for (rank, world, generation, buf) in &survivors {
+        assert_eq!(*world, 3, "the spare restored the original world size");
+        // Banked chunks keep the 3-way sum; resumed chunks hold the
+        // survivors' 2-way sum (the rejoiner contributed zeros).
+        assert_eq!(&buf[..16], &[6.0f32; 16][..]);
+        assert_eq!(&buf[16..], &[3.0f32; 16][..]);
+        println!(
+            "survivor rank {rank}: world {world}, generation {generation} — \
+             collective resumed over the re-grown ring"
+        );
+    }
+    println!(
+        "rejoiner: rank {s_rank}/{s_world}, generation {s_gen} — drafted from the \
+         spare pool mid-collective, ready for the next op"
+    );
     Ok(())
 }

@@ -155,4 +155,26 @@ fn main() {
         Ok(()) => println!("\nwrote {path} ({:.1}ms)", t0.elapsed().as_secs_f64() * 1e3),
         Err(e) => eprintln!("failed to write {path}: {e}"),
     }
+
+    // A small real population run to materialise the lineage artifact
+    // (per-trial hyper-parameter schedules) beside the BENCH file.
+    let store = fiber::store::node_or_host(256 << 20);
+    let cfg = fiber::pop::PbtConfig {
+        pop: 6,
+        slices: 3,
+        slice_task: SLEEP_SLICE.to_string(),
+        ..Default::default()
+    };
+    let pool = fiber::api::pool::Pool::builder()
+        .processes(4)
+        .store(store.clone())
+        .build()
+        .expect("lineage pool");
+    let mut runner =
+        fiber::pop::PopulationRunner::new(cfg, store).expect("lineage runner");
+    runner.run(&pool, DispatchMode::Async).expect("lineage run");
+    match runner.leaderboard().export("pbt_lineage.json") {
+        Ok(()) => println!("wrote pbt_lineage.json (per-trial hyper-parameter schedules)"),
+        Err(e) => eprintln!("failed to write pbt_lineage.json: {e}"),
+    }
 }

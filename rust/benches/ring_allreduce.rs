@@ -210,7 +210,7 @@ fn main() {
     // Kill-one-member recovery: the wall time of a single allreduce during
     // which one rank dies and the survivors heal + resume (shared harness
     // with the `scaling-sim` dashboard panel).
-    let recovery = timed_allreduce(4, 64 * 1024, true, true).expect("recovery run");
+    let recovery = timed_allreduce(4, 64 * 1024, true, true, 0).expect("recovery run");
     let (recovery_s, healed_world, heals) =
         (recovery.wall_s, recovery.world_after, recovery.heals);
     println!(
@@ -218,6 +218,18 @@ fn main() {
          {:.1}ms wall including detection + heal ({} heal)",
         recovery_s * 1e3,
         heals,
+    );
+
+    // Kill-and-regrow: the same chaos kill, but with a spare standing by —
+    // the heal drains it back in and the collective resumes over the
+    // re-grown (original-size) world, still inside one op's wall time.
+    let regrow = timed_allreduce(4, 64 * 1024, true, true, 1).expect("regrow run");
+    println!(
+        "kill-and-regrow (world 4 → {} via spare pool, 256KB payload): \
+         {:.1}ms wall including detection + heal + auto-grow ({} heal)",
+        regrow.world_after,
+        regrow.wall_s * 1e3,
+        regrow.heals,
     );
 
     let doc = Json::Obj(vec![
@@ -233,6 +245,18 @@ fn main() {
                 ("kill_after_chunk".into(), Json::num(1.0)),
                 ("recovery_wall_s".into(), Json::num(recovery_s)),
                 ("heals".into(), Json::num(heals as f64)),
+            ]),
+        ),
+        (
+            "regrow".into(),
+            Json::Obj(vec![
+                ("world".into(), Json::num(4.0)),
+                ("spares".into(), Json::num(1.0)),
+                ("regrown_world".into(), Json::num(regrow.world_after as f64)),
+                ("elems".into(), Json::num(65536.0)),
+                ("kill_after_chunk".into(), Json::num(1.0)),
+                ("recovery_wall_s".into(), Json::num(regrow.wall_s)),
+                ("heals".into(), Json::num(regrow.heals as f64)),
             ]),
         ),
     ]);

@@ -8,19 +8,26 @@
 //! with a bit-equivalent pure-Rust fallback used by tests and odd pop
 //! sizes.
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::api::pool::Pool;
 use crate::coordinator::task::execute_registered;
 use crate::coordinator::register_task;
 use crate::envs::{rollout, Action, Walker2d};
+use crate::ring::collectives::{
+    bytes_to_f32s, objid_from_lanes, objid_to_lanes, unpack_store_header,
+};
 use crate::ring::RingMember;
 use crate::runtime::{HostTensor, Runtime};
+use crate::store::{ObjId, StoreNode};
 use crate::util::Rng;
 use crate::wire;
 
 use super::nn::{Mlp, WALKER_SIZES};
-use super::noise::{shared_table, shared_table_broadcast, shared_table_broadcast_store};
+use super::noise::{
+    install_shared_table, shared_table, shared_table_broadcast, shared_table_broadcast_store,
+    try_shared_table,
+};
 
 /// ES hyper-parameters.
 #[derive(Clone, Debug)]
@@ -375,6 +382,84 @@ impl EsMaster {
     }
 }
 
+/// Ring **op notes** — the ES program counter attached to collectives via
+/// [`RingMember::set_op_note`]. When a heal drains a spare mid-iteration,
+/// the note rides the resume barrier and tells the rejoiner which phase of
+/// the iteration it is relaying, hence which collectives remain before the
+/// survivors broadcast the state sync (see
+/// [`EsRingNode::join_ring_as_spare`]).
+pub mod notes {
+    /// The one-off noise-table warm-up broadcast (full stream or 6-lane
+    /// store header).
+    pub const WARM: u64 = 1;
+    /// The per-iteration `O(pop)` rewards (+ step limbs) allreduce.
+    pub const REWARDS: u64 = 2;
+    /// The per-iteration `O(θ)` gradient allreduce.
+    pub const GRAD: u64 = 3;
+    /// The post-grow state-sync broadcast from rank 0.
+    pub const SYNC: u64 = 4;
+}
+
+/// Lanes of the ES post-grow state-sync broadcast: the shared
+/// θ/optimizer/RNG prefix ([`opt_sync_len`]) plus the noise-table blob id
+/// (4) — every non-f32 field packed bit-preserving into f32 lanes (ring
+/// broadcasts copy bits, they never do arithmetic on them).
+pub fn sync_len(dim: usize) -> usize {
+    opt_sync_len(dim) + 4
+}
+
+/// Pack a `u64` into two bit-preserving f32 lanes (lo, hi). Ring
+/// broadcasts copy lane bits verbatim, so this round-trips exactly —
+/// shared by the ES and PPO state-sync codecs.
+pub(crate) fn push_bits_u64(buf: &mut Vec<f32>, v: u64) {
+    buf.push(f32::from_bits((v & 0xFFFF_FFFF) as u32));
+    buf.push(f32::from_bits((v >> 32) as u32));
+}
+
+/// Inverse of [`push_bits_u64`]: read a `u64` from two f32 lanes.
+pub(crate) fn read_bits_u64(lanes: &[f32]) -> u64 {
+    (lanes[0].to_bits() as u64) | ((lanes[1].to_bits() as u64) << 32)
+}
+
+/// Lanes of the θ/optimizer/RNG sync prefix shared by the ES and PPO
+/// post-grow state syncs: θ, Adam `m`/`v` (3·dim), Adam `t` (1),
+/// iteration (2) and the xoshiro state (8).
+pub(crate) fn opt_sync_len(dim: usize) -> usize {
+    3 * dim + 11
+}
+
+/// Pack the shared sync prefix (see [`opt_sync_len`] for the layout).
+pub(crate) fn pack_opt_sync(theta: &[f32], adam: &Adam, iteration: u64, rng: &Rng) -> Vec<f32> {
+    let mut buf = Vec::with_capacity(opt_sync_len(theta.len()) + 4);
+    buf.extend_from_slice(theta);
+    buf.extend_from_slice(&adam.m);
+    buf.extend_from_slice(&adam.v);
+    buf.push(f32::from_bits(adam.t));
+    push_bits_u64(&mut buf, iteration);
+    for s in rng.state() {
+        push_bits_u64(&mut buf, s);
+    }
+    buf
+}
+
+/// Inverse of [`pack_opt_sync`]: install θ and the optimizer moments in
+/// place and return `(iteration, rng)`. `buf` must hold exactly the
+/// prefix ([`opt_sync_len`] of `theta.len()`).
+pub(crate) fn apply_opt_sync(buf: &[f32], theta: &mut [f32], adam: &mut Adam) -> (u64, Rng) {
+    let dim = theta.len();
+    theta.copy_from_slice(&buf[..dim]);
+    adam.m.copy_from_slice(&buf[dim..2 * dim]);
+    adam.v.copy_from_slice(&buf[2 * dim..3 * dim]);
+    let tail = &buf[3 * dim..];
+    adam.t = tail[0].to_bits();
+    let iteration = read_bits_u64(&tail[1..3]);
+    let mut state = [0u64; 4];
+    for (i, s) in state.iter_mut().enumerate() {
+        *s = read_bits_u64(&tail[3 + 2 * i..5 + 2 * i]);
+    }
+    (iteration, Rng::from_state(state))
+}
+
 /// Balanced contiguous shard of `n_items` across `world` ranks:
 /// `(start, end)` with every shard within one item of the others.
 pub fn shard_range(n_items: usize, world: usize, rank: usize) -> (usize, usize) {
@@ -415,6 +500,10 @@ pub struct EsRingNode {
     adam: Adam,
     rng: Rng,
     iteration: usize,
+    /// Content id of the noise-table blob when it was warmed through the
+    /// object store — handed to rejoiners in the state sync so they
+    /// recover the table as a cache hit, never a re-stream.
+    table_id: Option<ObjId>,
 }
 
 impl EsRingNode {
@@ -428,6 +517,7 @@ impl EsRingNode {
             adam: Adam::new(dim),
             rng,
             iteration: 0,
+            table_id: None,
         }
     }
 
@@ -444,6 +534,7 @@ impl EsRingNode {
             adam: Adam::new(dim),
             rng,
             iteration: 0,
+            table_id: None,
         }
     }
 
@@ -455,7 +546,8 @@ impl EsRingNode {
     /// to the other members, instead of every process regenerating it —
     /// the start-up saving grows with the table size. A collective: every
     /// member must call it before its first [`EsRingNode::iterate`].
-    pub fn warm_noise_table(&self, member: &mut RingMember) -> Result<()> {
+    pub fn warm_noise_table(&mut self, member: &mut RingMember) -> Result<()> {
+        member.set_op_note(notes::WARM);
         shared_table_broadcast(member, self.cfg.noise_seed, self.cfg.table_size)?;
         Ok(())
     }
@@ -466,11 +558,14 @@ impl EsRingNode {
     /// replacements, earlier runs with the same seed) cache-hit instead of
     /// re-streaming `O(table_size)` floats. Same SPMD contract.
     pub fn warm_noise_table_store(
-        &self,
+        &mut self,
         member: &mut RingMember,
-        node: &crate::store::StoreNode,
+        node: &StoreNode,
     ) -> Result<()> {
-        shared_table_broadcast_store(member, node, self.cfg.noise_seed, self.cfg.table_size)?;
+        member.set_op_note(notes::WARM);
+        let (_, id) =
+            shared_table_broadcast_store(member, node, self.cfg.noise_seed, self.cfg.table_size)?;
+        self.table_id = Some(id);
         Ok(())
     }
 
@@ -481,6 +576,11 @@ impl EsRingNode {
     /// [`EsMaster`] update on the same seed to within float summation
     /// order (tolerance-tested in `rust/tests/ring_integration.rs`).
     pub fn iterate(&mut self, member: &mut RingMember) -> Result<EsIterStats> {
+        // The generation this iteration's shared state belongs to: members
+        // drained in *during* the iteration (joined > g0) are cold — they
+        // relay collectives but own no shard until the end-of-iteration
+        // state sync warms them.
+        let g0 = member.generation();
         let half = self.cfg.pop / 2;
         // Odd pop: the last slot is never evaluated, exactly like
         // EsMaster (which builds 2·half eval inputs but scales by pop).
@@ -538,6 +638,7 @@ impl EsRingNode {
             ((local_steps >> 16) & 0xFFFF) as f32,
             ((local_steps >> 32) & 0xFFFF) as f32,
         ]);
+        member.set_op_note(notes::REWARDS);
         member.allreduce_sum(&mut rewards)?;
         let limb2 = rewards.pop().expect("step limb") as u64;
         let limb1 = rewards.pop().expect("step limb") as u64;
@@ -549,8 +650,12 @@ impl EsRingNode {
         // The shard is re-read *after* the reward collective: if the ring
         // healed mid-allreduce, the survivors re-shard the whole
         // population among themselves so the dead rank's pairs are not
-        // dropped from the gradient.
-        let (pair_lo, pair_hi) = shard_range(half, member.world(), member.rank());
+        // dropped from the gradient. Sharding is over the **warm** members
+        // only — a spare drained in mid-iteration (heal auto-grow) holds
+        // no θ/RNG state yet, so it relays zeros while the warm prefix
+        // (heals keep survivors in the low ranks) covers the population.
+        let n_warm = member.view().warm_count(g0);
+        let (pair_lo, pair_hi) = shard_range(half, n_warm, member.rank());
         let ranks = centered_ranks(&rewards);
         let mut grad = vec![0.0f32; dim];
         for k in pair_lo..pair_hi {
@@ -560,6 +665,7 @@ impl EsRingNode {
                 *g += w * n;
             }
         }
+        member.set_op_note(notes::GRAD);
         member.allreduce_sum(&mut grad)?;
         let scale = -1.0 / (self.cfg.pop as f32 * self.cfg.sigma);
         for g in grad.iter_mut() {
@@ -571,6 +677,18 @@ impl EsRingNode {
         self.theta = theta;
 
         self.iteration += 1;
+
+        // Anyone drained in during this iteration is cold: rank 0 (always
+        // warm — survivors keep the rank prefix) broadcasts the full
+        // post-update state so the rejoiner continues bitwise-identical
+        // from the next iteration. Warm non-roots receive and discard —
+        // they already hold exactly these values.
+        if member.view().warm_count(g0) < member.world() {
+            member.set_op_note(notes::SYNC);
+            let mut sync = self.pack_sync();
+            member.broadcast(0, &mut sync)?;
+        }
+
         let mean = rewards.iter().sum::<f32>() / rewards.len() as f32;
         let max = rewards.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         Ok(EsIterStats {
@@ -580,6 +698,187 @@ impl EsRingNode {
             total_env_steps: total_steps,
             grad_norm,
         })
+    }
+
+    // ---- spare rejoin -----------------------------------------------------
+
+    /// Pack this replica's full iteration state into f32 lanes for the
+    /// post-grow sync broadcast (see [`sync_len`] for the layout): the
+    /// shared prefix plus the noise-table blob id.
+    fn pack_sync(&self) -> Vec<f32> {
+        let dim = self.theta.len();
+        let mut buf = pack_opt_sync(&self.theta, &self.adam, self.iteration as u64, &self.rng);
+        let id = self.table_id.unwrap_or(ObjId([0u8; 16]));
+        buf.extend_from_slice(&objid_to_lanes(id));
+        debug_assert_eq!(buf.len(), sync_len(dim));
+        buf
+    }
+
+    /// Install a received sync buffer: θ, optimizer, iteration, RNG stream
+    /// and — when the survivors warmed their table through the store — the
+    /// noise-table blob, recovered via `node` as a **cache hit** (the blob
+    /// was already replicated when the original broadcast ran; a shared
+    /// node moves nothing at all). Falls back to counter-based
+    /// regeneration when no store is reachable.
+    fn apply_sync(&mut self, buf: &[f32], node: Option<&StoreNode>) -> Result<()> {
+        let dim = self.theta.len();
+        anyhow::ensure!(
+            buf.len() == sync_len(dim),
+            "es sync buffer holds {} lanes, want {}",
+            buf.len(),
+            sync_len(dim)
+        );
+        let (iteration, rng) =
+            apply_opt_sync(&buf[..opt_sync_len(dim)], &mut self.theta, &mut self.adam);
+        self.iteration = iteration as usize;
+        self.rng = rng;
+        let id = objid_from_lanes(&buf[opt_sync_len(dim)..]);
+        if id != ObjId([0u8; 16]) {
+            self.install_table_from_store(id, node);
+        }
+        Ok(())
+    }
+
+    /// Best-effort table recovery from the store (cache hit on a shared or
+    /// pre-warmed node). On any miss the table is simply regenerated
+    /// lazily by the first `shared_table` caller — correct either way.
+    fn install_table_from_store(&mut self, id: ObjId, node: Option<&StoreNode>) {
+        if try_shared_table(self.cfg.noise_seed, self.cfg.table_size).is_some() {
+            self.table_id = Some(id);
+            return;
+        }
+        let Some(node) = node else { return };
+        if let Ok(bytes) = node.get_bytes(id) {
+            if let Ok(data) = bytes_to_f32s(&bytes) {
+                if data.len() == self.cfg.table_size {
+                    install_shared_table(self.cfg.noise_seed, self.cfg.table_size, data);
+                    node.pin(id);
+                    self.table_id = Some(id);
+                }
+            }
+        }
+    }
+
+    /// Receive the survivors' state-sync broadcast (rank 0 is always warm).
+    fn recv_sync(&mut self, member: &mut RingMember, node: Option<&StoreNode>) -> Result<()> {
+        member.set_op_note(notes::SYNC);
+        let mut buf = vec![0.0f32; sync_len(self.theta.len())];
+        member.broadcast(0, &mut buf)?;
+        self.apply_sync(&buf, node)
+    }
+
+    /// Drive a **drained spare** from cold admission to a warm replica.
+    ///
+    /// `self` must be constructed exactly like the founding replicas (same
+    /// `cfg`, same initial θ — the SPMD contract), and `member` must come
+    /// from [`RingMember::join_spare_with`] with the ring's
+    /// `set_chunk_elems`/`set_timeout` already applied. The driver reads
+    /// the interrupted op's note (see [`notes`]) and mirrors the
+    /// survivors' program from that point:
+    ///
+    /// * drained during the **warm-up broadcast** — relay it, install the
+    ///   table (store header → blob cache hit through `node`), and return:
+    ///   training has not started, so the initial state is already shared;
+    /// * drained during the **rewards allreduce** — relay it with zero
+    ///   contributions, relay the gradient allreduce, then receive the
+    ///   state sync;
+    /// * drained during the **gradient allreduce** — relay it, then
+    ///   receive the state sync;
+    /// * drained during a **state sync** — receive it (only if admitted
+    ///   before its first chunk; a partial sync is unrecoverable and
+    ///   errors, telling the caller to re-register as a spare).
+    ///
+    /// Returns the warmed `(replica, member)`; continue training with
+    /// `for _ in replica.iteration()..iters { replica.iterate(&mut m)? }`.
+    pub fn join_ring_as_spare(
+        mut self,
+        mut member: RingMember,
+        node: Option<&StoreNode>,
+    ) -> Result<(EsRingNode, RingMember)> {
+        let dim = self.theta.len();
+        let n_evals = (self.cfg.pop / 2) * 2;
+        let cold = member
+            .cold_op()
+            .cloned()
+            .context("member was not drained from the spare pool (no cold op)")?;
+        match cold.op.note {
+            notes::WARM => {
+                let root = member
+                    .view()
+                    .rank_of_endpoint(&cold.op.root)
+                    .context("warm-up root left the ring")?;
+                let n = cold.op.elems as usize;
+                member.set_op_note(notes::WARM);
+                let mut buf = vec![0.0f32; n];
+                member.broadcast(root, &mut buf)?;
+                if n == 6 && cold.resume_chunk == 0 {
+                    // Store-backed warm-up: the 6-lane header names the
+                    // table blob; resolve it as a cache hit.
+                    let hdr: [f32; 6] = buf.as_slice().try_into().expect("6 lanes");
+                    let (id, len) = unpack_store_header(&hdr);
+                    if len as usize == self.cfg.table_size {
+                        self.install_table_from_store(id, node);
+                    }
+                } else if n == self.cfg.table_size && cold.resume_chunk == 0 {
+                    install_shared_table(self.cfg.noise_seed, n, buf);
+                }
+                // Drained before training started: the initial state is
+                // already identical everywhere — nothing to sync.
+                Ok((self, member))
+            }
+            notes::REWARDS => {
+                anyhow::ensure!(
+                    cold.op.elems as usize == n_evals + 3,
+                    "rewards relay length mismatch: the ring reduces {} elems but this \
+                     replica's pop {} implies {} (rewards + 3 step limbs) — cfg.pop \
+                     must match the founding replicas",
+                    cold.op.elems,
+                    self.cfg.pop,
+                    n_evals + 3
+                );
+                member.set_op_note(notes::REWARDS);
+                let mut rewards = vec![0.0f32; n_evals + 3];
+                member.allreduce_sum(&mut rewards)?;
+                member.set_op_note(notes::GRAD);
+                let mut grad = vec![0.0f32; dim];
+                member.allreduce_sum(&mut grad)?;
+                self.recv_sync(&mut member, node)?;
+                Ok((self, member))
+            }
+            notes::GRAD => {
+                anyhow::ensure!(
+                    cold.op.elems as usize == dim,
+                    "gradient relay length mismatch: ring reduces {} elems, θ here is {dim}",
+                    cold.op.elems
+                );
+                member.set_op_note(notes::GRAD);
+                let mut grad = vec![0.0f32; dim];
+                member.allreduce_sum(&mut grad)?;
+                self.recv_sync(&mut member, node)?;
+                Ok((self, member))
+            }
+            notes::SYNC => {
+                anyhow::ensure!(
+                    cold.resume_chunk == 0,
+                    "drained mid-sync after chunk {} — a partial state sync is \
+                     unrecoverable; re-register as a spare",
+                    cold.resume_chunk
+                );
+                let root = member
+                    .view()
+                    .rank_of_endpoint(&cold.op.root)
+                    .context("sync root left the ring")?;
+                member.set_op_note(notes::SYNC);
+                let mut buf = vec![0.0f32; sync_len(dim)];
+                member.broadcast(root, &mut buf)?;
+                self.apply_sync(&buf, node)?;
+                Ok((self, member))
+            }
+            other => anyhow::bail!(
+                "spare drained into op note {other}: this ring is not running \
+                 decentralized ES (or the victims' program is from a newer protocol)"
+            ),
+        }
     }
 }
 

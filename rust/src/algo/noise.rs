@@ -143,13 +143,15 @@ pub fn shared_table_broadcast(
 /// any node that warmed the same `(seed, size)` before — **cache-hit** and
 /// move no table bytes at all; cold members fetch it chunk-by-chunk from
 /// whichever peers hold it. A collective with the same SPMD contract as
-/// [`shared_table_broadcast`].
+/// [`shared_table_broadcast`]. Returns the table plus the blob's content
+/// id, which callers hand to late rejoiners through the ring state sync
+/// so they too recover the table as a store cache hit.
 pub fn shared_table_broadcast_store(
     member: &mut RingMember,
     node: &crate::store::StoreNode,
     seed: u64,
     size: usize,
-) -> Result<Arc<NoiseTable>> {
+) -> Result<(Arc<NoiseTable>, crate::store::ObjId)> {
     let mut buf = if member.rank() == 0 {
         shared_table(seed, size).data().to_vec()
     } else {
@@ -163,7 +165,7 @@ pub fn shared_table_broadcast_store(
         .entry((seed, size))
         .or_insert_with(|| Arc::new(NoiseTable::from_data(seed, buf)))
         .clone();
-    Ok(table)
+    Ok((table, id))
 }
 
 #[cfg(test)]
@@ -252,7 +254,10 @@ mod tests {
                 let node = node.clone();
                 std::thread::spawn(move || {
                     let mut m = crate::ring::RingMember::join_inproc(&rv).unwrap();
-                    let t = shared_table_broadcast_store(&mut m, &node, seed, size).unwrap();
+                    let (t, id) =
+                        shared_table_broadcast_store(&mut m, &node, seed, size).unwrap();
+                    let bytes = crate::ring::collectives::f32s_to_bytes(t.data());
+                    assert_eq!(id, crate::store::ObjId::of(&bytes));
                     t.slice(33, 64)
                 })
             })

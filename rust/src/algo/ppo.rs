@@ -13,12 +13,33 @@ use anyhow::Result;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::Rng;
 
-use super::es::Adam;
+use super::es::{apply_opt_sync, opt_sync_len, pack_opt_sync, Adam};
 use super::nn::{log_softmax, ppo_param_count, sample_logits, PpoNet, PPO_ACTIONS, PPO_TRUNK};
 use super::vec_env::VecEnv;
 
 /// The artifact's fixed batch row count (ppo_act and ppo_update).
 pub const ARTIFACT_BATCH: usize = 256;
+
+/// Ring **op notes** for the data-parallel path (see
+/// [`crate::ring::RingMember::set_op_note`]), kept disjoint from the ES
+/// notes (which live below `1 << 32`). A gradient note carries the number
+/// of minibatch averages still to come in its low bits, so a spare
+/// drained mid-epoch knows exactly how many collectives to relay before
+/// the state sync.
+pub mod ring_notes {
+    /// One minibatch gradient average; `| remaining` (averages left after
+    /// this one, `< 2^32`).
+    pub const GRAD: u64 = 1 << 32;
+    /// The post-grow state-sync broadcast from rank 0.
+    pub const SYNC: u64 = 2 << 32;
+}
+
+/// Lanes of the PPO post-grow state sync: exactly the θ/optimizer/RNG
+/// prefix shared with the ES sync codec
+/// ([`crate::algo::es::EsRingNode::join_ring_as_spare`]'s counterpart).
+pub fn ring_sync_len(dim: usize) -> usize {
+    opt_sync_len(dim)
+}
 
 /// PPO hyper-parameters (OpenAI Baselines defaults, scaled down).
 #[derive(Clone, Debug)]
@@ -186,7 +207,7 @@ impl PpoTrainer {
         runtime: Option<&Runtime>,
     ) -> Result<PpoIterStats> {
         let (buf, adv, ret) = self.rollout_phase(vecenv, obs, runtime, None)?;
-        self.run_epochs(&buf, &adv, &ret, |tr, mb| tr.update_minibatch(mb, runtime))
+        self.run_epochs(&buf, &adv, &ret, |tr, mb, _, _| tr.update_minibatch(mb, runtime))
     }
 
     /// Data-parallel [`PpoTrainer::train_iteration`] over a ring: the same
@@ -207,30 +228,47 @@ impl PpoTrainer {
         runtime: Option<&Runtime>,
         member: &mut crate::ring::RingMember,
     ) -> Result<PpoIterStats> {
+        // State shared as of this generation: members drained in later
+        // (a heal's auto-grow) are cold until the end-of-iteration sync.
+        let g0 = member.generation();
         let (buf, adv, ret) = self.rollout_phase(vecenv, obs, runtime, Some(&*member))?;
-        self.run_epochs(&buf, &adv, &ret, |tr, mb| tr.update_minibatch_ring(mb, member))
+        let stats = self.run_epochs(&buf, &adv, &ret, |tr, mb, k, n_total| {
+            // Program counter for cold rejoiners: how many gradient
+            // averages remain after this one, then the sync (if any).
+            member.set_op_note(ring_notes::GRAD | (n_total - 1 - k) as u64);
+            tr.update_minibatch_ring_at(mb, member, g0)
+        })?;
+        if member.view().warm_count(g0) < member.world() {
+            member.set_op_note(ring_notes::SYNC);
+            let mut sync = self.pack_ring_sync();
+            member.broadcast(0, &mut sync)?;
+        }
+        Ok(stats)
     }
 
     /// The epoch/minibatch schedule shared by the single-node and ring
     /// update loops — one definition, so the two paths cannot silently
     /// diverge in minibatch count or loss accounting (the SPMD contract
-    /// the ring path depends on).
+    /// the ring path depends on). The callback also receives the
+    /// minibatch ordinal and the iteration's total minibatch count (the
+    /// ring path's rejoin program counter).
     fn run_epochs(
         &mut self,
         buf: &RolloutBuf,
         adv: &[f32],
         ret: &[f32],
-        mut update: impl FnMut(&mut Self, &MiniBatch) -> Result<(f32, f32, f32)>,
+        mut update: impl FnMut(&mut Self, &MiniBatch, usize, usize) -> Result<(f32, f32, f32)>,
     ) -> Result<PpoIterStats> {
         let total = buf.obs.len();
         let mut idx: Vec<usize> = (0..total).collect();
+        let n_total = self.cfg.epochs * total.div_ceil(self.cfg.minibatch);
         let (mut pi_l, mut v_l, mut ent) = (0.0f32, 0.0f32, 0.0f32);
         let mut n_mb = 0;
         for _ in 0..self.cfg.epochs {
             self.rng.shuffle(&mut idx);
             for chunk in idx.chunks(self.cfg.minibatch) {
                 let mb = self.gather_minibatch(chunk, buf, adv, ret);
-                let (pl, vl, en) = update(self, &mb)?;
+                let (pl, vl, en) = update(self, &mb, n_mb, n_total)?;
                 pi_l += pl;
                 v_l += vl;
                 ent += en;
@@ -426,23 +464,47 @@ impl PpoTrainer {
     /// seed) and call this in lockstep; the averaged losses are returned.
     ///
     /// Resume-aware: the allreduce heals, and the averaging divisor is the
-    /// world size read **after** the sum — a mid-collective heal averages
-    /// over the surviving replicas (identically on every rank), so the
-    /// minibatch work re-shards over the survivors instead of wedging.
-    /// Chunks summed before the heal keep the dead replica's banked
-    /// gradient contribution.
+    /// **warm** member count read after the sum — a mid-collective heal
+    /// averages over the surviving replicas (identically on every rank),
+    /// so the minibatch work re-shards over the survivors instead of
+    /// wedging; a spare drained in by the heal (auto-grow) relays zero
+    /// gradients and is excluded from the divisor until the
+    /// end-of-iteration state sync warms it. Chunks summed before the
+    /// heal keep the dead replica's banked gradient contribution.
     pub fn update_minibatch_ring(
         &mut self,
         mb: &MiniBatch,
         member: &mut crate::ring::RingMember,
     ) -> Result<(f32, f32, f32)> {
+        let g0 = member.generation();
+        self.update_minibatch_ring_at(mb, member, g0)
+    }
+
+    /// [`PpoTrainer::update_minibatch_ring`] with an explicit warm
+    /// generation: members that joined after `g0` are treated as cold
+    /// relays (zero contribution, excluded from the divisor).
+    /// [`PpoTrainer::train_iteration_ring`] passes the *iteration's*
+    /// start generation so a rejoiner drained mid-epoch stays excluded
+    /// for every remaining minibatch of that iteration, not just the
+    /// interrupted one.
+    pub fn update_minibatch_ring_at(
+        &mut self,
+        mb: &MiniBatch,
+        member: &mut crate::ring::RingMember,
+        g0: u64,
+    ) -> Result<(f32, f32, f32)> {
         let (mut grad, pi_loss, v_loss, entropy) = self.minibatch_grad(mb);
         // Piggyback the three loss scalars on the gradient buffer so one
         // collective covers both (same trick as EsRingNode's step counts).
         grad.extend_from_slice(&[pi_loss, v_loss, entropy]);
-        // allreduce_mean divides by the world size read *after* the sum,
-        // which is what makes the averaging survivor-correct post-heal.
-        member.allreduce_mean(&mut grad)?;
+        member.allreduce_sum(&mut grad)?;
+        // Average over the replicas that actually contributed: the warm
+        // members of the generation this minibatch started in (equal to
+        // the whole post-heal world unless a spare was drained in).
+        let inv = 1.0 / member.view().warm_count(g0).max(1) as f32;
+        for v in grad.iter_mut() {
+            *v *= inv;
+        }
         let entropy = grad.pop().expect("loss slot");
         let v_loss = grad.pop().expect("loss slot");
         let pi_loss = grad.pop().expect("loss slot");
@@ -451,6 +513,99 @@ impl PpoTrainer {
         self.adam.step(&mut params, &grad, lr);
         self.net.params = params;
         Ok((pi_loss, v_loss, entropy))
+    }
+
+    // ---- spare rejoin (data-parallel ring) -------------------------------
+
+    /// Pack θ + optimizer + iteration + RNG stream into f32 lanes for the
+    /// post-grow state sync (the codec shared with the ES sync prefix).
+    fn pack_ring_sync(&self) -> Vec<f32> {
+        let buf = pack_opt_sync(&self.net.params, &self.adam, self.iteration as u64, &self.rng);
+        debug_assert_eq!(buf.len(), ring_sync_len(self.net.n_params()));
+        buf
+    }
+
+    fn apply_ring_sync(&mut self, buf: &[f32]) -> Result<()> {
+        let dim = self.net.n_params();
+        anyhow::ensure!(
+            buf.len() == ring_sync_len(dim),
+            "ppo sync buffer holds {} lanes, want {}",
+            buf.len(),
+            ring_sync_len(dim)
+        );
+        let (iteration, rng) = apply_opt_sync(buf, &mut self.net.params, &mut self.adam);
+        self.iteration = iteration as usize;
+        self.rng = rng;
+        Ok(())
+    }
+
+    /// Drive a **drained spare** (see [`crate::ring::spare`]) from cold
+    /// admission to a warm data-parallel replica. `self` must be
+    /// constructed like the founding replicas (same `cfg`/seed) and
+    /// `member` must come from
+    /// [`crate::ring::RingMember::join_spare_with`], already configured
+    /// with the ring's SPMD chunking/timeouts. The interrupted op's note
+    /// says how many minibatch gradient averages remain this iteration;
+    /// the driver relays them all with zero contributions, receives the
+    /// state-sync broadcast, and returns the warmed trainer — continue
+    /// with `train_iteration_ring` from [`PpoTrainer::iteration`]
+    /// (rejoiners drive their own fresh environments; env streams are
+    /// per-rank by design).
+    pub fn join_ring_as_spare(
+        mut self,
+        mut member: crate::ring::RingMember,
+    ) -> Result<(PpoTrainer, crate::ring::RingMember)> {
+        use anyhow::Context;
+        let dim = self.net.n_params();
+        let cold = member
+            .cold_op()
+            .cloned()
+            .context("member was not drained from the spare pool (no cold op)")?;
+        if cold.op.note >= ring_notes::GRAD && cold.op.note < ring_notes::SYNC {
+            let mut remaining = (cold.op.note - ring_notes::GRAD) as usize;
+            anyhow::ensure!(
+                cold.op.elems as usize == dim + 3,
+                "gradient relay length mismatch: ring reduces {} elems, \
+                 θ here is {dim} (+3 losses)",
+                cold.op.elems
+            );
+            member.set_op_note(cold.op.note);
+            let mut grad = vec![0.0f32; dim + 3];
+            member.allreduce_sum(&mut grad)?;
+            while remaining > 0 {
+                remaining -= 1;
+                member.set_op_note(ring_notes::GRAD | remaining as u64);
+                let mut grad = vec![0.0f32; dim + 3];
+                member.allreduce_sum(&mut grad)?;
+            }
+        } else if cold.op.note == ring_notes::SYNC {
+            anyhow::ensure!(
+                cold.resume_chunk == 0,
+                "drained mid-sync after chunk {} — a partial state sync is unrecoverable",
+                cold.resume_chunk
+            );
+        } else {
+            anyhow::bail!(
+                "spare drained into op note {}: this ring is not running data-parallel PPO",
+                cold.op.note
+            );
+        }
+        // Receive the survivors' state sync. In the mid-sync case the
+        // broadcast call below adopts the cold op directly (same kind and
+        // length); otherwise it is the next collective in sequence.
+        let root = if cold.op.note == ring_notes::SYNC {
+            member
+                .view()
+                .rank_of_endpoint(&cold.op.root)
+                .context("sync root left the ring")?
+        } else {
+            0 // rank 0 is always warm: heals keep survivors in the prefix
+        };
+        member.set_op_note(ring_notes::SYNC);
+        let mut sync = vec![0.0f32; ring_sync_len(dim)];
+        member.broadcast(root, &mut sync)?;
+        self.apply_ring_sync(&sync)?;
+        Ok((self, member))
     }
 
     /// The clipped-surrogate gradient and losses for one minibatch,
@@ -874,6 +1029,100 @@ mod tests {
         let params: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(params[0], params[1], "ring-trained replicas must not diverge");
         assert_ne!(params[0], init, "training must move the parameters");
+    }
+
+    #[test]
+    fn ring_training_autogrows_with_spare_and_rejoiner_converges() {
+        use crate::ring::{is_chaos_killed, Rendezvous, RingMember};
+        use std::time::Duration;
+        // World 2 + 1 spare: rank 1 dies mid-minibatch-average at
+        // iteration 1; the heal drains the spare, the epoch schedule
+        // resumes over the grown world (rejoiner relaying zeros), the
+        // survivor syncs state, and the final iteration trains the
+        // survivor and the rejoiner to bitwise-identical parameters.
+        let cfg = PpoConfig {
+            n_envs: 2,
+            horizon: 8,
+            epochs: 2,
+            minibatch: 16,
+            ..Default::default()
+        };
+        let iters = 3usize;
+        let chunk = (ppo_param_count() / 4).max(1);
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_millis(40));
+        let spare_rv = rv.clone();
+        let spare_cfg = cfg.clone();
+        let spare = std::thread::spawn(move || {
+            let mut m =
+                RingMember::join_spare_inproc(&spare_rv, Duration::from_secs(20)).unwrap();
+            m.set_chunk_elems(chunk);
+            m.set_timeout(Duration::from_millis(400));
+            m.set_probe_interval(Duration::from_millis(10));
+            let tr = PpoTrainer::new(spare_cfg.clone());
+            let (mut tr, mut m) = tr.join_ring_as_spare(m).unwrap();
+            let hub = QueueHub::new();
+            let be = LocalBackend::new();
+            let ve = VecEnv::breakout(&be, &hub, spare_cfg.n_envs, 1).unwrap();
+            let mut obs = ve.reset(777).unwrap();
+            for _ in tr.iteration()..iters {
+                tr.train_iteration_ring(&ve, &mut obs, None, &mut m).unwrap();
+            }
+            ve.close();
+            (m.rank(), m.world(), tr.net.params)
+        });
+        while rv.spares().is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let handles: Vec<_> = (0..2u64)
+            .map(|i| {
+                let rv = rv.clone();
+                let cfg = cfg.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_inproc(&rv).unwrap();
+                    m.set_chunk_elems(chunk);
+                    m.set_timeout(Duration::from_millis(400));
+                    m.set_probe_interval(Duration::from_millis(10));
+                    let victim = m.rank() == 1;
+                    let hub = QueueHub::new();
+                    let be = LocalBackend::new();
+                    let ve = VecEnv::breakout(&be, &hub, cfg.n_envs, 1).unwrap();
+                    let mut tr = PpoTrainer::new(cfg);
+                    let mut obs = ve.reset(100 + i).unwrap();
+                    for it in 0..iters {
+                        if victim && it == 1 {
+                            m.set_kill_after_chunk(Some(1));
+                        }
+                        match tr.train_iteration_ring(&ve, &mut obs, None, &mut m) {
+                            Ok(_) => {}
+                            Err(e) => {
+                                assert!(victim && is_chaos_killed(&e), "{e:#}");
+                                ve.close();
+                                return None;
+                            }
+                        }
+                    }
+                    ve.close();
+                    Some((m.rank(), m.world(), tr.net.params))
+                })
+            })
+            .collect();
+        let survivors: Vec<_> = handles
+            .into_iter()
+            .filter_map(|h| h.join().unwrap())
+            .collect();
+        assert_eq!(survivors.len(), 1, "exactly the victim died");
+        let (s_rank, s_world, s_params) = &survivors[0];
+        assert_eq!(*s_rank, 0);
+        assert_eq!(*s_world, 2, "auto-grow restored the world");
+        let (r_rank, r_world, r_params) = spare.join().unwrap();
+        assert_eq!(r_rank, 1, "rejoiner takes the appended rank");
+        assert_eq!(r_world, 2);
+        assert_eq!(
+            s_params, &r_params,
+            "post-sync training must keep survivor and rejoiner bitwise identical"
+        );
+        assert!(s_params.iter().all(|p| p.is_finite()));
     }
 
     #[test]

@@ -183,6 +183,180 @@ impl Json {
     pub fn write(&self, path: &str) -> std::io::Result<()> {
         std::fs::write(path, self.render() + "\n")
     }
+
+    /// Field lookup on an object (`None` on missing keys or non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// Element lookup on an array.
+    pub fn at(&self, index: usize) -> Option<&Json> {
+        match self {
+            Json::Arr(items) => items.get(index),
+            _ => None,
+        }
+    }
+
+    /// Parse JSON text back into a [`Json`] value — the inverse of
+    /// [`Json::render`], so bench records and lineage exports round-trip
+    /// without serde. `null` parses as a non-finite number (the renderer
+    /// writes non-finite numbers as `null`, so the pair stays stable).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing data at byte {pos}"));
+        }
+        Ok(v)
+    }
+}
+
+fn skip_ws(b: &[u8], i: &mut usize) {
+    while *i < b.len() && matches!(b[*i], b' ' | b'\t' | b'\n' | b'\r') {
+        *i += 1;
+    }
+}
+
+fn expect(b: &[u8], i: &mut usize, lit: &str) -> Result<(), String> {
+    if b[*i..].starts_with(lit.as_bytes()) {
+        *i += lit.len();
+        Ok(())
+    } else {
+        Err(format!("expected {lit:?} at byte {i}", i = *i))
+    }
+}
+
+fn parse_value(b: &[u8], i: &mut usize) -> Result<Json, String> {
+    skip_ws(b, i);
+    match b.get(*i) {
+        None => Err("unexpected end of input".into()),
+        Some(b't') => expect(b, i, "true").map(|()| Json::Bool(true)),
+        Some(b'f') => expect(b, i, "false").map(|()| Json::Bool(false)),
+        Some(b'n') => expect(b, i, "null").map(|()| Json::Num(f64::NAN)),
+        Some(b'"') => parse_string(b, i).map(Json::Str),
+        Some(b'[') => {
+            *i += 1;
+            let mut items = Vec::new();
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b']') {
+                *i += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, i)?);
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b',') => *i += 1,
+                    Some(b']') => {
+                        *i += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected ',' or ']' at byte {i}", i = *i)),
+                }
+            }
+        }
+        Some(b'{') => {
+            *i += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, i);
+            if b.get(*i) == Some(&b'}') {
+                *i += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, i);
+                let key = parse_string(b, i)?;
+                skip_ws(b, i);
+                expect(b, i, ":")?;
+                let value = parse_value(b, i)?;
+                fields.push((key, value));
+                skip_ws(b, i);
+                match b.get(*i) {
+                    Some(b',') => *i += 1,
+                    Some(b'}') => {
+                        *i += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected ',' or '}}' at byte {i}", i = *i)),
+                }
+            }
+        }
+        Some(_) => {
+            // Number: consume the maximal number-shaped span and let the
+            // std parser judge it.
+            let start = *i;
+            while *i < b.len()
+                && matches!(b[*i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *i += 1;
+            }
+            let s = std::str::from_utf8(&b[start..*i]).map_err(|e| e.to_string())?;
+            s.parse::<f64>()
+                .map(Json::Num)
+                .map_err(|e| format!("bad number {s:?} at byte {start}: {e}"))
+        }
+    }
+}
+
+fn parse_string(b: &[u8], i: &mut usize) -> Result<String, String> {
+    if b.get(*i) != Some(&b'"') {
+        return Err(format!("expected string at byte {i}", i = *i));
+    }
+    *i += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*i) {
+            None => return Err("unterminated string".into()),
+            Some(b'"') => {
+                *i += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *i += 1;
+                match b.get(*i) {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let hex = b
+                            .get(*i + 1..*i + 5)
+                            .ok_or("truncated \\u escape")?;
+                        let code = u32::from_str_radix(
+                            std::str::from_utf8(hex).map_err(|e| e.to_string())?,
+                            16,
+                        )
+                        .map_err(|e| e.to_string())?;
+                        out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        *i += 4;
+                    }
+                    other => return Err(format!("bad escape {other:?}")),
+                }
+                *i += 1;
+            }
+            Some(&c) => {
+                // Multi-byte UTF-8 sequences pass through unchanged.
+                let len = match c {
+                    0x00..=0x7F => 1,
+                    0xC0..=0xDF => 2,
+                    0xE0..=0xEF => 3,
+                    _ => 4,
+                };
+                let chunk = b.get(*i..*i + len).ok_or("truncated utf-8")?;
+                out.push_str(std::str::from_utf8(chunk).map_err(|e| e.to_string())?);
+                *i += len;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -229,5 +403,35 @@ mod tests {
             s,
             r#"{"name":"ring \"allreduce\"\n","world":4,"ok":true,"xs":[1.5,null]}"#
         );
+    }
+
+    #[test]
+    fn json_parse_roundtrips_render() {
+        let j = Json::Obj(vec![
+            ("label".into(), Json::str("kill → heal\t\"grow\"")),
+            ("n".into(), Json::num(-12.25)),
+            ("big".into(), Json::num(3.5e9)),
+            ("flag".into(), Json::Bool(false)),
+            (
+                "rows".into(),
+                Json::Arr(vec![
+                    Json::Obj(vec![("t".into(), Json::num(0.5))]),
+                    Json::Arr(vec![]),
+                    Json::Obj(vec![]),
+                    Json::Num(f64::NEG_INFINITY), // renders as null
+                ]),
+            ),
+        ]);
+        let rendered = j.render();
+        let back = Json::parse(&rendered).unwrap();
+        assert_eq!(back.render(), rendered, "parse ∘ render must be identity");
+        // Structured access survives the round trip.
+        assert!(matches!(back.get("n"), Some(Json::Num(x)) if *x == -12.25));
+        assert!(matches!(back.get("rows").and_then(|r| r.at(0)).and_then(|o| o.get("t")),
+            Some(Json::Num(x)) if *x == 0.5));
+        // Whitespace-tolerant; trailing garbage rejected.
+        assert!(Json::parse(" { \"a\" : [ 1 , 2 ] } ").is_ok());
+        assert!(Json::parse("{}g").is_err());
+        assert!(Json::parse("{").is_err());
     }
 }

@@ -27,16 +27,52 @@ pub struct RingTiming {
 /// One timed allreduce over `world` thread members, split into 8 chunks so
 /// the overlap pipeline and the chunk-resume machinery are both exercised.
 /// With `kill_one`, the highest rank dies after completing chunk 1 and the
-/// survivors' heal + resume time is what gets measured.
+/// survivors' heal + resume time is what gets measured. With `spares > 0`
+/// (requires `kill_one`), that many standby members wait in the spare
+/// pool, the heal drains them back in, and the timed collective resumes
+/// over the **re-grown** world — `world_after` comes back equal to
+/// `world`, proving kill → heal → auto-grow inside one op's wall time.
 pub fn timed_allreduce(
     world: usize,
     elems: usize,
     overlap: bool,
     kill_one: bool,
+    spares: usize,
 ) -> Result<RingTiming> {
+    anyhow::ensure!(
+        spares == 0 || kill_one,
+        "spares are only drained by a heal here: pass kill_one with spares"
+    );
     let rv = Rendezvous::new(world);
     rv.set_heartbeat_grace(Duration::from_millis(40));
     let victim_rank = world - 1;
+    let spare_handles: Vec<_> = (0..spares)
+        .map(|_| {
+            let rv = rv.clone();
+            std::thread::spawn(move || -> Result<Option<(f64, usize, u64)>> {
+                let mut m = RingMember::join_spare_inproc(&rv, Duration::from_secs(10))?;
+                m.set_timeout(Duration::from_millis(250));
+                m.set_probe_interval(Duration::from_millis(10));
+                m.set_overlap(overlap);
+                m.set_chunk_elems((elems / 8).max(1));
+                let cold = m.cold_op().cloned().expect("spare drained mid-op");
+                let mut buf = vec![0.0f32; cold.op.elems as usize];
+                m.allreduce_sum(&mut buf)?;
+                // The rejoiner's clock starts at admission; the survivors'
+                // wall time is the recovery figure. Report the grown world.
+                Ok(Some((0.0, m.world(), m.heal_count())))
+            })
+        })
+        .collect();
+    let gate = Instant::now() + Duration::from_secs(10);
+    while rv.spares().len() < spares {
+        anyhow::ensure!(
+            Instant::now() < gate,
+            "spare registration timed out: {}/{spares} pending after 10s",
+            rv.spares().len()
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
     let handles: Vec<_> = (0..world)
         .map(|_| {
             let rv = rv.clone();
@@ -74,10 +110,10 @@ pub fn timed_allreduce(
         world_after: 0,
         heals: 0,
     };
-    for h in handles {
+    for h in handles.into_iter().chain(spare_handles) {
         if let Some((secs, w, heals)) = h.join().expect("ring timing thread")? {
             timing.wall_s = timing.wall_s.max(secs);
-            timing.world_after = w;
+            timing.world_after = timing.world_after.max(w);
             timing.heals = timing.heals.max(heals);
         }
     }
@@ -85,26 +121,35 @@ pub fn timed_allreduce(
 }
 
 /// The dashboard table: per world size, overlap-on vs overlap-off wall
-/// time for a 256 KB allreduce, and the wall time of the same collective
-/// when one member is killed mid-flight (heal + resume included).
+/// time for a 256 KB allreduce, the wall time of the same collective when
+/// one member is killed mid-flight (heal + resume included), and the same
+/// kill with a spare standing by (heal + auto-grow back to the original
+/// world + resume).
 pub fn ring_collectives_figure() -> Result<Table> {
     let elems = 64 * 1024; // 256 KB of f32
     let mut table = Table::new(
-        "Ring allreduce (256KB): overlap vs lockstep, kill-one recovery",
+        "Ring allreduce (256KB): overlap vs lockstep, kill-one recovery, kill+regrow",
         "world",
         vec![
             "overlap on".into(),
             "overlap off".into(),
             "kill-one recovery".into(),
+            "kill+regrow".into(),
         ],
     );
     for world in [2usize, 4] {
-        let on = timed_allreduce(world, elems, true, false)?;
-        let off = timed_allreduce(world, elems, false, false)?;
-        let recovery = timed_allreduce(world, elems, true, true)?;
+        let on = timed_allreduce(world, elems, true, false, 0)?;
+        let off = timed_allreduce(world, elems, false, false, 0)?;
+        let recovery = timed_allreduce(world, elems, true, true, 0)?;
+        let regrow = timed_allreduce(world, elems, true, true, 1)?;
         table.add_row(
             format!("{world}"),
-            vec![Some(on.wall_s), Some(off.wall_s), Some(recovery.wall_s)],
+            vec![
+                Some(on.wall_s),
+                Some(off.wall_s),
+                Some(recovery.wall_s),
+                Some(regrow.wall_s),
+            ],
         );
     }
     Ok(table)
@@ -116,8 +161,16 @@ mod tests {
 
     #[test]
     fn chaos_timing_reports_heal_and_shrunk_world() {
-        let t = timed_allreduce(3, 1024, true, true).unwrap();
+        let t = timed_allreduce(3, 1024, true, true, 0).unwrap();
         assert_eq!(t.world_after, 2);
+        assert!(t.heals >= 1);
+        assert!(t.wall_s > 0.0);
+    }
+
+    #[test]
+    fn chaos_timing_with_spare_regrows_to_original_world() {
+        let t = timed_allreduce(3, 1024, true, true, 1).unwrap();
+        assert_eq!(t.world_after, 3, "the drained spare restores the world");
         assert!(t.heals >= 1);
         assert!(t.wall_s > 0.0);
     }
@@ -127,7 +180,7 @@ mod tests {
         let t = ring_collectives_figure().unwrap();
         assert_eq!(t.rows.len(), 2);
         for (label, cells) in &t.rows {
-            assert_eq!(cells.len(), 3, "row {label}");
+            assert_eq!(cells.len(), 4, "row {label}");
             assert!(cells.iter().all(|c| c.is_some()), "row {label} has gaps");
         }
     }

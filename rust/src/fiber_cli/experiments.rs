@@ -4,7 +4,7 @@
 //! kills a rank mid-allreduce to demo pool-style healing live.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -150,9 +150,11 @@ fn chaos_chunk_elems(pop: usize) -> usize {
 /// One decentralized replica's run, shared by the thread path and the
 /// `es-node` process path so the two backends cannot drift. `kill` is the
 /// chaos switch `(rank, iter, chunk)` handed to *every* replica; the one
-/// whose joined ring rank matches plays the victim. Returns `None` when
-/// this replica died (simulated crash — caller drops/exits without
-/// `leave()`), else `(rank, generation, world, heals, θ)`.
+/// whose joined ring rank matches plays the victim. `grow_after` makes
+/// rank 0 request an explicit spare-pool drain after that iteration (the
+/// no-chaos way to demo auto-grow). Returns `None` when this replica died
+/// (simulated crash — caller drops/exits without `leave()`), else
+/// `(rank, generation, world, heals, θ)`.
 #[allow(clippy::type_complexity)]
 fn run_es_replica(
     mut m: RingMember,
@@ -160,6 +162,7 @@ fn run_es_replica(
     iters: usize,
     toy: bool,
     kill: Option<(usize, usize, u64)>,
+    grow_after: Option<usize>,
     store: Option<Arc<StoreNode>>,
     log_every_rank: bool,
 ) -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
@@ -197,6 +200,12 @@ fn run_es_replica(
                         s.grad_norm,
                     );
                 }
+                if grow_after == Some(i) && m.rank() == 0 && m.request_grow()? {
+                    println!(
+                        "rank 0 requested an explicit grow after iter {i}: spares drain \
+                         into the next generation"
+                    );
+                }
             }
             Err(e) if is_chaos_killed(&e) => {
                 println!(
@@ -217,45 +226,132 @@ fn run_es_replica(
     )))
 }
 
+/// A standby replica's run: blocks in the spare pool until a heal (or an
+/// explicit grow) drafts it, relays the interrupted collective, syncs
+/// state from the survivors, then trains the remaining iterations as a
+/// full member. Same return contract as [`run_es_replica`]; `None` when
+/// the admission window expired without a draft.
+#[allow(clippy::type_complexity)]
+fn run_es_spare(
+    m: Result<RingMember>,
+    node: EsRingNode,
+    iters: usize,
+    toy: bool,
+    chaos: bool,
+    store: Option<Arc<StoreNode>>,
+) -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
+    let mut m = match m {
+        Ok(m) => m,
+        Err(e) => {
+            println!("spare was never drafted: {e:#}");
+            return Ok(None);
+        }
+    };
+    m.set_timeout(replica_timeout(toy));
+    if chaos {
+        // SPMD: match the survivors' chaos-narrowed chunking before the
+        // first (adopted) collective.
+        m.set_chunk_elems(chaos_chunk_elems(node.cfg.pop));
+    }
+    let (mut node, mut m) = node.join_ring_as_spare(m, store.as_deref())?;
+    println!(
+        "spare drafted as rank {}/{} (gen {}): state synced, resuming at iter {}",
+        m.rank(),
+        m.world(),
+        m.generation(),
+        node.iteration(),
+    );
+    for _ in node.iteration()..iters {
+        node.iterate(&mut m)?;
+    }
+    Ok(Some((
+        m.rank(),
+        m.generation(),
+        m.world(),
+        m.heal_count(),
+        node.theta,
+    )))
+}
+
+/// How long a standby replica waits to be drafted before giving up.
+fn spare_admission(iters: usize, toy: bool) -> Duration {
+    replica_timeout(toy) * (iters as u32 + 2)
+}
+
+/// Block until `count` spares are pending at the rendezvous — bounded, so
+/// a spare that dies before registering turns into a clean error instead
+/// of a silent hang.
+fn await_spare_registration(rv: &Arc<Rendezvous>, count: usize) -> Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while rv.spares().len() < count {
+        anyhow::ensure!(
+            Instant::now() < deadline,
+            "only {}/{count} spare(s) registered within 30s — a standby \
+             replica failed to start",
+            rv.spares().len()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    Ok(())
+}
+
 /// `fiber-cli es --decentralized true [--world N] [--iters N] [--proc true]
-/// [--kill-rank R --kill-iter I --kill-chunk K] [--toy true]` — leaderless
-/// ES over ring collectives. `--kill-rank` is the chaos switch: that rank
-/// dies mid-allreduce at iteration I and the survivors heal, re-shard the
-/// population, and keep training.
+/// [--kill-rank R --kill-iter I --kill-chunk K] [--spares N [--grow-iter I]]
+/// [--toy true]` — leaderless ES over ring collectives. `--kill-rank` is
+/// the chaos switch: that rank dies mid-allreduce at iteration I, the
+/// survivors heal, and — with `--spares` — the pool drains a standby
+/// replica back in, restoring the original world (kill → heal → auto-grow
+/// → identical θ including the rejoiner). Without a kill, `--spares`
+/// drafts through an explicit grow request after `--grow-iter`.
 fn es_decentralized(opts: &Opts) -> Result<()> {
     let world: usize = opts.parse_or("world", 4)?;
     let iters: usize = opts.parse_or("iters", 10)?;
     let proc_mode: bool = opts.parse_or("proc", false)?;
     let kill_rank: i64 = opts.parse_or("kill-rank", -1i64)?;
+    let spares: usize = opts.parse_or("spares", 0)?;
     anyhow::ensure!(world >= 1, "--world must be >= 1");
     anyhow::ensure!(
         kill_rank < world as i64,
         "--kill-rank {kill_rank} out of range for world {world}"
     );
     if proc_mode {
-        es_decentralized_proc(opts, world, iters, kill_rank)
+        es_decentralized_proc(opts, world, iters, kill_rank, spares)
     } else {
-        es_decentralized_threads(opts, world, iters, kill_rank)
+        es_decentralized_threads(opts, world, iters, kill_rank, spares)
     }
 }
 
-fn es_decentralized_threads(opts: &Opts, world: usize, iters: usize, kill_rank: i64) -> Result<()> {
+fn es_decentralized_threads(
+    opts: &Opts,
+    world: usize,
+    iters: usize,
+    kill_rank: i64,
+    spares: usize,
+) -> Result<()> {
     let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
     let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
     let toy: bool = opts.parse_or("toy", false)?;
     let cfg = es_cfg_from_opts(opts)?;
     println!(
-        "decentralized ES: {world} ring replicas (threads), pop {}, {iters} iters{}",
+        "decentralized ES: {world} ring replicas (threads), pop {}, {iters} iters{}{}",
         cfg.pop,
         if kill_rank >= 0 {
             format!(" — chaos: kill rank {kill_rank} at iter {kill_iter} chunk {kill_chunk}")
         } else {
             String::new()
-        }
+        },
+        if spares > 0 {
+            format!(" — {spares} spare(s) standing by")
+        } else {
+            String::new()
+        },
     );
     let rv = Rendezvous::new(world);
     rv.set_heartbeat_grace(replica_grace(toy));
     let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
+    // Without a kill there is no heal to drain the pool, so rank 0 issues
+    // an explicit grow request after --grow-iter instead.
+    let grow_after = (spares > 0 && kill.is_none()).then_some(opts.parse_or("grow-iter", 0)?);
     // `--store true`: warm the noise table through the object store (one
     // shared node on the thread backend — the broadcast degenerates to a
     // header exchange plus local cache hits).
@@ -263,6 +359,21 @@ fn es_decentralized_threads(opts: &Opts, world: usize, iters: usize, kill_rank: 
         .parse_or("store", false)?
         .then(|| StoreNode::host(1usize << 30));
     let mut handles = Vec::new();
+    for _ in 0..spares {
+        let rv = rv.clone();
+        let replica = es_ring_replica(opts, cfg.clone())?;
+        let store = store.clone();
+        let admission = spare_admission(iters, toy);
+        handles.push(std::thread::spawn(
+            move || -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
+                let m = RingMember::join_spare_inproc(&rv, admission);
+                run_es_spare(m, replica, iters, toy, kill.is_some(), store)
+            },
+        ));
+    }
+    // Gate: pending spares must be registered before the ring can heal or
+    // grow into them.
+    await_spare_registration(&rv, spares)?;
     for _ in 0..world {
         let rv = rv.clone();
         let replica = es_ring_replica(opts, cfg.clone())?;
@@ -270,7 +381,7 @@ fn es_decentralized_threads(opts: &Opts, world: usize, iters: usize, kill_rank: 
         handles.push(std::thread::spawn(
             move || -> Result<Option<(usize, u64, usize, u64, Vec<f32>)>> {
                 let m = RingMember::join_inproc(&rv)?;
-                run_es_replica(m, replica, iters, toy, kill, store, false)
+                run_es_replica(m, replica, iters, toy, kill, grow_after, store, false)
             },
         ));
     }
@@ -305,10 +416,23 @@ fn es_decentralized_threads(opts: &Opts, world: usize, iters: usize, kill_rank: 
     Ok(())
 }
 
-fn es_decentralized_proc(opts: &Opts, world: usize, iters: usize, kill_rank: i64) -> Result<()> {
+fn es_decentralized_proc(
+    opts: &Opts,
+    world: usize,
+    iters: usize,
+    kill_rank: i64,
+    spares: usize,
+) -> Result<()> {
     let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
     let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
-    println!("decentralized ES: {world} es-node OS processes over TCP rendezvous");
+    println!(
+        "decentralized ES: {world} es-node OS processes over TCP rendezvous{}",
+        if spares > 0 {
+            format!(" + {spares} spare es-node(s)")
+        } else {
+            String::new()
+        }
+    );
     let rv = Rendezvous::new(world);
     rv.set_heartbeat_grace(replica_grace(opts.parse_or("toy", false)?));
     let srv = rv.serve_rpc("127.0.0.1:0")?;
@@ -328,42 +452,61 @@ fn es_decentralized_proc(opts: &Opts, world: usize, iters: usize, kill_rank: i64
         "pop", "sigma", "lr", "noise-seed", "table-size", "max-steps", "hardcore", "seed", "toy",
         "dim",
     ];
-    let handles: Vec<_> = (0..world)
-        .map(|i| {
-            let mut args = vec![
-                "es-node".to_string(),
-                "--rendezvous".into(),
-                rv_addr.clone(),
-                "--iters".into(),
-                iters.to_string(),
-            ];
-            for key in forward {
-                if let Some(v) = opts.get(key) {
-                    args.push(format!("--{key}"));
-                    args.push(v.to_string());
-                }
+    let grow_iter_armed = spares > 0 && kill_rank < 0;
+    let mk_args = |spare: bool| {
+        let mut args = vec![
+            "es-node".to_string(),
+            "--rendezvous".into(),
+            rv_addr.clone(),
+            "--iters".into(),
+            iters.to_string(),
+        ];
+        for key in forward {
+            if let Some(v) = opts.get(key) {
+                args.push(format!("--{key}"));
+                args.push(v.to_string());
             }
-            if kill_rank >= 0 {
-                // Ring ranks are assigned by registration order, not spawn
-                // order, so every child gets the chaos flags and compares
-                // against the rank it actually receives — same contract as
-                // the thread backend.
-                args.extend([
-                    "--kill-rank".into(),
-                    kill_rank.to_string(),
-                    "--kill-iter".into(),
-                    kill_iter.to_string(),
-                    "--kill-chunk".into(),
-                    kill_chunk.to_string(),
-                ]);
-            }
-            if let Some((_, ep)) = &store_host {
-                args.extend(["--store".into(), ep.clone()]);
-            }
-            backend.submit(JobSpec::command(format!("es-node-{i}"), args))
-        })
+        }
+        if spare {
+            args.extend(["--spare".into(), "true".into()]);
+        }
+        if kill_rank >= 0 {
+            // Ring ranks are assigned by registration order, not spawn
+            // order, so every child gets the chaos flags and compares
+            // against the rank it actually receives — same contract as
+            // the thread backend. Spares learn whether chaos is armed so
+            // they match the chaos-narrowed chunking.
+            args.extend([
+                "--kill-rank".into(),
+                kill_rank.to_string(),
+                "--kill-iter".into(),
+                kill_iter.to_string(),
+                "--kill-chunk".into(),
+                kill_chunk.to_string(),
+            ]);
+        }
+        if grow_iter_armed && !spare {
+            // No chaos: rank 0 drafts the spares through an explicit grow.
+            args.extend([
+                "--grow-iter".into(),
+                opts.get_or("grow-iter", "0").to_string(),
+            ]);
+        }
+        if let Some((_, ep)) = &store_host {
+            args.extend(["--store".into(), ep.clone()]);
+        }
+        args
+    };
+    // Spares first, and gated: the pool must be populated before a heal
+    // (or the explicit grow) can drain it.
+    let spare_handles: Vec<_> = (0..spares)
+        .map(|i| backend.submit(JobSpec::command(format!("es-spare-{i}"), mk_args(true))))
         .collect::<Result<Vec<_>>>()?;
-    for h in handles {
+    await_spare_registration(&rv, spares)?;
+    let handles: Vec<_> = (0..world)
+        .map(|i| backend.submit(JobSpec::command(format!("es-node-{i}"), mk_args(false))))
+        .collect::<Result<Vec<_>>>()?;
+    for h in handles.into_iter().chain(spare_handles) {
         match h.wait() {
             JobStatus::Succeeded => {}
             other => anyhow::bail!("es-node child ended {other:?}"),
@@ -374,17 +517,23 @@ fn es_decentralized_proc(opts: &Opts, world: usize, iters: usize, kill_rank: i64
 }
 
 /// `fiber-cli es-node --rendezvous tcp://… [--iters N] [--kill-rank R
-/// --kill-iter I --kill-chunk K] [--toy true]` — one OS-process
-/// decentralized-ES replica (spawned by `es --decentralized true --proc
-/// true`). Every replica receives the same chaos flags and the one whose
-/// **joined ring rank** matches `--kill-rank` plays the victim.
+/// --kill-iter I --kill-chunk K] [--spare true] [--grow-iter I]
+/// [--toy true]` — one OS-process decentralized-ES replica (spawned by
+/// `es --decentralized true --proc true`). Every replica receives the
+/// same chaos flags and the one whose **joined ring rank** matches
+/// `--kill-rank` plays the victim. With `--spare true` the process stands
+/// by in the spare pool instead of joining the founding ring, and trains
+/// the remaining iterations once a heal (or a peer's `--grow-iter` grow
+/// request) drafts it.
 pub fn es_node(opts: &Opts) -> Result<()> {
     let rv_addr = Addr::parse(opts.require("rendezvous")?)?;
     let iters: usize = opts.parse_or("iters", 10)?;
     let kill_rank: i64 = opts.parse_or("kill-rank", -1i64)?;
     let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
     let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
+    let grow_iter: i64 = opts.parse_or("grow-iter", -1i64)?;
     let toy: bool = opts.parse_or("toy", false)?;
+    let spare: bool = opts.parse_or("spare", false)?;
     let cfg = es_cfg_from_opts(opts)?;
     let node = es_ring_replica(opts, cfg)?;
     // `--store tcp://…` (handed down by the parent): join the object
@@ -398,9 +547,23 @@ pub fn es_node(opts: &Opts) -> Result<()> {
         }
         None => None,
     };
-    let m = RingMember::join_addr(&rv_addr).context("join ring")?;
     let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
-    match run_es_replica(m, node, iters, toy, kill, store, true)? {
+    if spare {
+        let m = RingMember::join_spare_addr(&rv_addr, spare_admission(iters, toy));
+        return match run_es_spare(m, node, iters, toy, kill.is_some(), store)? {
+            None => Ok(()), // never drafted: stood down cleanly
+            Some((rank, generation, world, heals, _theta)) => {
+                println!(
+                    "es-node (ex-spare) rank {rank}/{world} done: generation {generation}, \
+                     {heals} heal(s) survived"
+                );
+                Ok(())
+            }
+        };
+    }
+    let m = RingMember::join_addr(&rv_addr).context("join ring")?;
+    let grow_after = (grow_iter >= 0).then_some(grow_iter as usize);
+    match run_es_replica(m, node, iters, toy, kill, grow_after, store, true)? {
         None => {
             // Skip destructors: a crash does not shut down cleanly.
             std::process::exit(0)
@@ -465,19 +628,23 @@ pub fn ppo(opts: &Opts) -> Result<()> {
 type PpoSurvivor = (usize, u64, usize, u64, Vec<f32>);
 
 /// `fiber-cli ppo --decentralized true [--world N] [--envs N] [--iters N]
-/// [--kill-rank R --kill-iter I --kill-chunk K]` — data-parallel PPO over
-/// ring collectives, mirroring `es --decentralized`. Every replica owns
-/// `--envs` breakout environments (distinct seeds), computes local
-/// clipped-surrogate gradients, and ring-averages them, so one update
-/// covers `world × envs` environments with `O(θ)` traffic per replica.
+/// [--kill-rank R --kill-iter I --kill-chunk K] [--spares N
+/// [--grow-iter I]]` — data-parallel PPO over ring collectives, mirroring
+/// `es --decentralized`. Every replica owns `--envs` breakout
+/// environments (distinct seeds), computes local clipped-surrogate
+/// gradients, and ring-averages them, so one update covers
+/// `world × envs` environments with `O(θ)` traffic per replica.
 /// `--kill-rank` is the same chaos switch: that rank dies mid-allreduce
-/// at iteration I and the survivors heal and keep training in agreement.
+/// at iteration I, the survivors heal — and with `--spares`, the pool
+/// drains a standby replica back in (kill → heal → auto-grow → identical
+/// θ including the rejoiner).
 fn ppo_decentralized(opts: &Opts) -> Result<()> {
     let world: usize = opts.parse_or("world", 4)?;
     let iters: usize = opts.parse_or("iters", 5)?;
     let kill_rank: i64 = opts.parse_or("kill-rank", -1i64)?;
     let kill_iter: usize = opts.parse_or("kill-iter", 1)?;
     let kill_chunk: u64 = opts.parse_or("kill-chunk", 0u64)?;
+    let spares: usize = opts.parse_or("spares", 0)?;
     anyhow::ensure!(world >= 1, "--world must be >= 1");
     anyhow::ensure!(
         kill_rank < world as i64,
@@ -503,10 +670,58 @@ fn ppo_decentralized(opts: &Opts) -> Result<()> {
     let rv = Rendezvous::new(world);
     rv.set_heartbeat_grace(Duration::from_secs(5));
     let kill = (kill_rank >= 0).then_some((kill_rank as usize, kill_iter, kill_chunk));
+    let grow_after = (spares > 0 && kill.is_none()).then_some(opts.parse_or("grow-iter", 0)?);
     // Narrow the gradient chunks only when chaos is armed (SPMD state), so
     // `--kill-chunk` has real kill points inside the O(θ) allreduce.
     let chunk_elems = (fiber::algo::nn::ppo_param_count() / 4).max(1);
     let mut handles = Vec::new();
+    for s in 0..spares {
+        let rv = rv.clone();
+        let cfg = cfg.clone();
+        let chaos = kill.is_some();
+        handles.push(std::thread::spawn(move || -> Result<Option<PpoSurvivor>> {
+            let m = match RingMember::join_spare_inproc(
+                &rv,
+                Duration::from_secs(10 * (iters as u64 + 2)),
+            ) {
+                Ok(m) => m,
+                Err(e) => {
+                    println!("ppo spare was never drafted: {e:#}");
+                    return Ok(None);
+                }
+            };
+            let mut m = m;
+            m.set_timeout(Duration::from_secs(10));
+            if chaos {
+                m.set_chunk_elems(chunk_elems);
+            }
+            let tr = PpoTrainer::new(cfg.clone());
+            let (mut tr, mut m) = tr.join_ring_as_spare(m)?;
+            println!(
+                "ppo spare drafted as rank {}/{} (gen {}): resuming at iter {}",
+                m.rank(),
+                m.world(),
+                m.generation(),
+                tr.iteration(),
+            );
+            let hub = QueueHub::new();
+            let backend = LocalBackend::new();
+            let ve = VecEnv::breakout(&backend, &hub, cfg.n_envs, 2)?;
+            let mut obs = ve.reset(2000 + s as u64)?;
+            for _ in tr.iteration()..iters {
+                tr.train_iteration_ring(&ve, &mut obs, None, &mut m)?;
+            }
+            ve.close();
+            Ok(Some((
+                m.rank(),
+                m.generation(),
+                m.world(),
+                m.heal_count(),
+                tr.net.params,
+            )))
+        }));
+    }
+    await_spare_registration(&rv, spares)?;
     for _ in 0..world {
         let rv = rv.clone();
         let cfg = cfg.clone();
@@ -541,6 +756,12 @@ fn ppo_decentralized(opts: &Opts) -> Result<()> {
                                 s.pi_loss,
                                 s.v_loss,
                                 s.entropy,
+                            );
+                        }
+                        if grow_after == Some(i) && m.rank() == 0 && m.request_grow()? {
+                            println!(
+                                "rank 0 requested an explicit grow after iter {i}: \
+                                 spares drain into the next generation"
                             );
                         }
                     }

@@ -165,14 +165,16 @@ fn print_help() {
                         [--pop N] [--iters N] [--workers N] [--artifacts DIR]\n\
                         [--decentralized true [--world N] [--proc true]\n\
                          [--kill-rank R --kill-iter I --kill-chunk K] [--toy true]\n\
-                         [--store true]]\n\
+                         [--spares N [--grow-iter I]] [--store true]]\n\
            es-node      decentralized-ES replica process entrypoint\n\
                         --rendezvous <addr> [--iters N] [--store tcp://addr]\n\
                         [--kill-rank R --kill-iter I --kill-chunk K]\n\
+                        [--spare true] [--grow-iter I]\n\
            ppo          E3 distributed PPO on breakout\n\
                         [--envs N] [--iters N] [--workers N] [--artifacts DIR]\n\
                         [--decentralized true [--world N]\n\
-                         [--kill-rank R --kill-iter I --kill-chunk K]]\n\
+                         [--kill-rank R --kill-iter I --kill-chunk K]\n\
+                         [--spares N [--grow-iter I]]]\n\
            pbt          population-based training over Pool workers\n\
                         --algo {{es,ppo}} [--env {{cartpole,walker2d}}] [--pop N]\n\
                         [--workers W] [--slices N] [--iters N] [--proc true]\n\

@@ -151,5 +151,13 @@ pub fn pbt(opts: &Opts) -> Result<()> {
          {} slices, {exploits} exploit(s) in {:.1}s",
         report.best, report.best_score, report.mean_score, report.slices_completed, report.wall_s
     );
+
+    // Post-hoc artifact: the full lineage log — every slice, clone and
+    // mutation with per-event hyper-parameter snapshots — beside the
+    // BENCH files, ready for schedule plots.
+    match runner.leaderboard().export("pbt_lineage.json") {
+        Ok(()) => println!("wrote pbt_lineage.json (per-trial hyper-parameter schedules)"),
+        Err(e) => eprintln!("failed to write pbt_lineage.json: {e}"),
+    }
     Ok(())
 }

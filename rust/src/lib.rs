@@ -30,7 +30,17 @@
 //!   the survivors re-rank and resume from the first chunk any of them had
 //!   not completed — the paper's pending-table failure story applied to
 //!   collectives. The chunk pipeline is double-buffered so the next chunk's
-//!   traffic is in flight while the current one reduces.
+//!   traffic is in flight while the current one reduces. And since the
+//!   auto-grow change the elasticity runs both ways: standby members wait
+//!   in a [`ring::spare`] pool, every heal (or an explicit
+//!   [`ring::Rendezvous::grow`]) drains them into the new sealed
+//!   generation, and the drained member adopts the in-flight collective
+//!   through the same resume min-barrier — kill → heal → auto-grow back
+//!   to the original world, inside one op. Algorithm drivers re-shard
+//!   upward and state-sync the rejoiner
+//!   ([`algo::es::EsRingNode::join_ring_as_spare`],
+//!   [`algo::ppo::PpoTrainer::join_ring_as_spare`]), re-warming bulk
+//!   tables through the store as cache hits.
 //!
 //! Fourth building block, beside Pool/Queue/Ring:
 //!

@@ -2,11 +2,18 @@
 //! log.
 //!
 //! Every slice completion, exploit (checkpoint clone) and explore
-//! (hyper-parameter mutation) appends a [`LineageEvent`]; the population
+//! (hyper-parameter mutation) appends a [`LineageEvent`] — including a
+//! snapshot of the trial's hyper-parameters, so the full per-trial
+//! **hyper-parameter schedule** is reconstructible; the population
 //! best/mean series is sampled on the same cadence. Together they answer
 //! the questions PBT papers plot: who descended from whom, when each
 //! trial's hyper-parameters jumped, and how the population front moved
-//! over wall-clock time.
+//! over wall-clock time. [`Leaderboard::export`] dumps the whole log as
+//! `pbt_lineage.json` next to the BENCH files (see `fiber-cli pbt` and
+//! `benches/pbt.rs`), round-trippable through
+//! [`crate::benchkit::Json::parse`].
+
+use crate::benchkit::Json;
 
 use super::trial::TrialId;
 
@@ -35,6 +42,10 @@ pub struct LineageEvent {
     pub kind: LineageEventKind,
     /// The trial's best slice reward so far (monotone per lineage).
     pub best_so_far: f32,
+    /// Snapshot of the trial's hyper-parameters at this event (post-clone
+    /// for exploits, post-perturbation for explores) — consecutive
+    /// snapshots of one trial are its hyper-parameter schedule.
+    pub hparams: Vec<(String, f32)>,
 }
 
 /// The run-wide event log plus the sampled population series.
@@ -105,6 +116,80 @@ impl Leaderboard {
             .filter(|e| matches!(e.kind, LineageEventKind::Slice { .. }))
             .count()
     }
+
+    /// The hyper-parameter schedule of `trial`: `(t_s, hparams)` per
+    /// recorded event, in order — the thing PBT papers plot per lineage.
+    pub fn hparam_schedule(&self, trial: TrialId) -> Vec<(f64, Vec<(String, f32)>)> {
+        self.lineage(trial)
+            .into_iter()
+            .map(|e| (e.t_s, e.hparams.clone()))
+            .collect()
+    }
+
+    /// The whole log — events (with per-event hyper-parameter snapshots)
+    /// and the sampled population series — as a [`Json`] document.
+    /// Non-finite rewards (a trial before its first score) render as
+    /// `null`, matching the renderer's convention.
+    pub fn to_json(&self) -> Json {
+        let events = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut fields = vec![
+                    ("trial".to_string(), Json::num(e.trial.0 as f64)),
+                    ("slice".to_string(), Json::num(e.slice as f64)),
+                    ("t_s".to_string(), Json::num(e.t_s)),
+                ];
+                match &e.kind {
+                    LineageEventKind::Init => {
+                        fields.push(("kind".into(), Json::str("init")));
+                    }
+                    LineageEventKind::Slice { reward } => {
+                        fields.push(("kind".into(), Json::str("slice")));
+                        fields.push(("reward".into(), Json::num(*reward as f64)));
+                    }
+                    LineageEventKind::Clone { parent } => {
+                        fields.push(("kind".into(), Json::str("clone")));
+                        fields.push(("parent".into(), Json::num(parent.0 as f64)));
+                    }
+                    LineageEventKind::Explore => {
+                        fields.push(("kind".into(), Json::str("explore")));
+                    }
+                }
+                fields.push(("best".into(), Json::num(e.best_so_far as f64)));
+                fields.push((
+                    "hparams".into(),
+                    Json::Obj(
+                        e.hparams
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                            .collect(),
+                    ),
+                ));
+                Json::Obj(fields)
+            })
+            .collect();
+        let series = self
+            .series
+            .iter()
+            .map(|(t, best, mean)| {
+                Json::Obj(vec![
+                    ("t_s".into(), Json::num(*t)),
+                    ("best".into(), Json::num(*best as f64)),
+                    ("mean".into(), Json::num(*mean as f64)),
+                ])
+            })
+            .collect();
+        Json::Obj(vec![
+            ("events".into(), Json::Arr(events)),
+            ("series".into(), Json::Arr(series)),
+        ])
+    }
+
+    /// Write the lineage log as JSON (the `pbt_lineage.json` artifact).
+    pub fn export(&self, path: &str) -> std::io::Result<()> {
+        self.to_json().write(path)
+    }
 }
 
 #[cfg(test)]
@@ -118,6 +203,7 @@ mod tests {
             t_s: slice as f64,
             kind,
             best_so_far: best,
+            hparams: vec![("lr".into(), 0.01 * (slice + 1) as f32)],
         }
     }
 
@@ -146,5 +232,51 @@ mod tests {
         b.record(ev(3, 1, LineageEventKind::Slice { reward: 4.0 }, 4.0));
         b.record(ev(3, 2, LineageEventKind::Slice { reward: 1.0 }, 3.0));
         assert!(!b.best_is_monotone(TrialId(3)), "best-so-far fell: 4 → 3");
+    }
+
+    #[test]
+    fn lineage_export_roundtrips_through_json() {
+        use crate::benchkit::Json;
+        let mut b = Leaderboard::new();
+        b.record(ev(0, 0, LineageEventKind::Init, f32::NEG_INFINITY));
+        b.record(ev(0, 1, LineageEventKind::Slice { reward: 2.5 }, 2.5));
+        b.record(ev(0, 1, LineageEventKind::Clone { parent: TrialId(1) }, 2.5));
+        b.record(ev(0, 1, LineageEventKind::Explore, 2.5));
+        b.record(ev(1, 1, LineageEventKind::Slice { reward: 7.0 }, 7.0));
+        b.record_population(1.0, 7.0, 4.75);
+        let doc = b.to_json();
+        let rendered = doc.render();
+        let back = Json::parse(&rendered).expect("export must be valid JSON");
+        assert_eq!(back.render(), rendered, "parse ∘ render must be identity");
+        // The per-trial hyper-parameter schedule survives the round trip.
+        let events = back.get("events").expect("events array");
+        let schedule: Vec<f64> = (0..4)
+            .map(|i| {
+                let e = events.at(i).unwrap();
+                assert!(matches!(e.get("trial"), Some(Json::Num(t)) if *t == 0.0));
+                match e.get("hparams").and_then(|h| h.get("lr")) {
+                    Some(Json::Num(v)) => *v,
+                    other => panic!("missing lr in event {i}: {other:?}"),
+                }
+            })
+            .collect();
+        let want: Vec<f64> = b
+            .hparam_schedule(TrialId(0))
+            .iter()
+            .map(|(_, hp)| hp[0].1 as f64)
+            .collect();
+        for (got, want) in schedule.iter().zip(&want) {
+            assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        }
+        // Kinds and parents decode structurally.
+        assert!(matches!(events.at(2).unwrap().get("kind"), Some(Json::Str(s)) if s == "clone"));
+        assert!(matches!(events.at(2).unwrap().get("parent"), Some(Json::Num(p)) if *p == 1.0));
+        // The pre-score -inf best rendered as null and parsed as non-finite.
+        assert!(matches!(events.at(0).unwrap().get("best"), Some(Json::Num(x)) if !x.is_finite()));
+        // Series survives too.
+        assert!(matches!(
+            back.get("series").and_then(|s| s.at(0)).and_then(|r| r.get("mean")),
+            Some(Json::Num(m)) if (*m - 4.75).abs() < 1e-9
+        ));
     }
 }

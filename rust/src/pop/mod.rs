@@ -33,7 +33,36 @@
 //!
 //! Surface: `fiber-cli pbt --algo {es,ppo} --pop N --workers W [--proc
 //! true] [--kill-rank R]`, `examples/pbt.rs`, and
-//! `experiments::pbt_figure`.
+//! `experiments::pbt_figure`. The [`Leaderboard`] exports the full
+//! lineage log — per-trial hyper-parameter schedules included — as
+//! `pbt_lineage.json`.
+//!
+//! # Examples
+//!
+//! ```
+//! use fiber::api::pool::Pool;
+//! use fiber::pop::{DispatchMode, PbtConfig, PopulationRunner};
+//!
+//! // A tiny async population: 2 ES-on-cartpole trials, 1 slice each.
+//! let store = fiber::store::node_or_host(64 << 20);
+//! let pool = Pool::builder()
+//!     .processes(2)
+//!     .store(store.clone())
+//!     .build()
+//!     .unwrap();
+//! let cfg = PbtConfig {
+//!     pop: 2,
+//!     slices: 1,
+//!     iters_per_slice: 1,
+//!     max_steps: 40,
+//!     pop_inner: 4,
+//!     ..Default::default()
+//! };
+//! let mut runner = PopulationRunner::new(cfg, store).unwrap();
+//! let report = runner.run(&pool, DispatchMode::Async).unwrap();
+//! assert_eq!(report.slices_completed, 2);
+//! assert!(runner.leaderboard().events().len() >= 4); // 2 inits + 2 slices
+//! ```
 
 pub mod backend;
 pub mod leaderboard;

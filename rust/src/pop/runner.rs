@@ -142,6 +142,7 @@ impl PopulationRunner {
             // checkpoint (released when the trial moves off it).
             let checkpoint = store.put_held(&ck)?;
             let id = TrialId(i as u64);
+            let hp_snapshot = hparams.to_wire();
             trials.push(Trial {
                 id,
                 hparams,
@@ -158,6 +159,7 @@ impl PopulationRunner {
                 t_s: 0.0,
                 kind: LineageEventKind::Init,
                 best_so_far: f32::NEG_INFINITY,
+                hparams: hp_snapshot,
             });
         }
         let table_ref = if cfg.store_noise_table && cfg.algo == PbtAlgo::Es {
@@ -323,6 +325,7 @@ impl PopulationRunner {
         t.best_score = t.best_score.max(out.reward);
         t.slices_done += 1;
         let (id, slice, best) = (t.id, t.slices_done, t.best_score);
+        let hp_snapshot = t.hparams.to_wire();
         let t_s = self.t0.elapsed().as_secs_f64();
         self.board.record(LineageEvent {
             trial: id,
@@ -330,6 +333,7 @@ impl PopulationRunner {
             t_s,
             kind: LineageEventKind::Slice { reward: out.reward },
             best_so_far: best,
+            hparams: hp_snapshot,
         });
         let scored: Vec<f32> = self
             .trials
@@ -393,6 +397,7 @@ impl PopulationRunner {
         t.clones += 1;
         t.score = src_score;
         let (id, slice, best) = (t.id, t.slices_done, t.best_score);
+        let adopted = t.hparams.to_wire();
         let t_s = self.t0.elapsed().as_secs_f64();
         self.board.record(LineageEvent {
             trial: id,
@@ -400,6 +405,7 @@ impl PopulationRunner {
             t_s,
             kind: LineageEventKind::Clone { parent: src_id },
             best_so_far: best,
+            hparams: adopted,
         });
         self.trials[idx].hparams.perturb(&mut self.rng);
         self.board.record(LineageEvent {
@@ -408,6 +414,7 @@ impl PopulationRunner {
             t_s,
             kind: LineageEventKind::Explore,
             best_so_far: best,
+            hparams: self.trials[idx].hparams.to_wire(),
         });
         self.exploits += 1;
         if self.cfg.verbose {

@@ -61,6 +61,7 @@ use crate::comms::rpc::{RpcClient, RpcServer};
 use crate::comms::Addr;
 use crate::wire;
 
+use super::spare::{ColdStart, OpDesc, KIND_ALLREDUCE, KIND_BROADCAST};
 use super::topology::{Rendezvous, RendezvousClient, RingView};
 
 /// RPC tag carrying one data-plane message on TCP endpoints.
@@ -212,6 +213,13 @@ pub struct RingMember {
     peers: HashMap<usize, PeerTx>,
     stash: VecDeque<Msg>,
     op_seq: u64,
+    /// Set on a member drained from the spare pool; consumed by its first
+    /// collective call, which adopts the interrupted op instead of
+    /// starting a fresh one.
+    cold_start: Option<ColdStart>,
+    /// Algorithm-level program counter attached to collectives (carried
+    /// through the resume barrier for cold rejoiners).
+    op_note: u64,
     chunk_elems: usize,
     timeout: Duration,
     probe: Duration,
@@ -251,8 +259,10 @@ impl RingMember {
         Self::join_with(RendezvousClient::connect(addr)?, transport)
     }
 
-    /// Join with explicit rendezvous client + data transport.
-    pub fn join_with(rendezvous: RendezvousClient, transport: Transport) -> Result<RingMember> {
+    /// Build a data-plane endpoint for `transport`: the advertised
+    /// endpoint string, the local receive side, and (TCP only) the
+    /// serving RPC server. Shared by ranked joins and spare joins.
+    fn make_endpoint(transport: Transport) -> Result<(String, Receiver<Msg>, Option<RpcServer>)> {
         let (tx, rx) = chan::unbounded::<Msg>();
         let (endpoint, server) = match transport {
             Transport::Inproc => {
@@ -275,16 +285,25 @@ impl RingMember {
                 (format!("tcp://{}", srv.local_addr()), Some(srv))
             }
         };
-        let view = match rendezvous.join(&endpoint, Duration::from_secs(30)) {
-            Ok(v) => v,
-            Err(e) => {
-                if let Some(name) = endpoint.strip_prefix("inproc://") {
-                    INPROC_EP.lock().unwrap().remove(name);
-                }
-                return Err(e);
-            }
-        };
-        Ok(RingMember {
+        Ok((endpoint, rx, server))
+    }
+
+    fn drop_endpoint(endpoint: &str) {
+        if let Some(name) = endpoint.strip_prefix("inproc://") {
+            INPROC_EP.lock().unwrap().remove(name);
+        }
+    }
+
+    fn from_parts(
+        view: RingView,
+        rendezvous: RendezvousClient,
+        endpoint: String,
+        rx: Receiver<Msg>,
+        server: Option<RpcServer>,
+        cold_start: Option<ColdStart>,
+    ) -> RingMember {
+        let op_seq = cold_start.as_ref().map_or(0, |c| c.op.op_seq);
+        RingMember {
             view,
             rendezvous,
             endpoint,
@@ -292,7 +311,9 @@ impl RingMember {
             _server: server,
             peers: HashMap::new(),
             stash: VecDeque::new(),
-            op_seq: 0,
+            op_seq,
+            cold_start,
+            op_note: 0,
             chunk_elems: 1 << 15, // 128 KiB frames
             timeout: Duration::from_secs(30),
             probe: Duration::from_millis(25),
@@ -303,7 +324,177 @@ impl RingMember {
             steps_overlapped: 0,
             heals: 0,
             kill_after_chunk: None,
-        })
+        }
+    }
+
+    /// Join with explicit rendezvous client + data transport.
+    pub fn join_with(rendezvous: RendezvousClient, transport: Transport) -> Result<RingMember> {
+        let (endpoint, rx, server) = Self::make_endpoint(transport)?;
+        let view = match rendezvous.join(&endpoint, Duration::from_secs(30)) {
+            Ok(v) => v,
+            Err(e) => {
+                Self::drop_endpoint(&endpoint);
+                return Err(e);
+            }
+        };
+        Ok(Self::from_parts(view, rendezvous, endpoint, rx, server, None))
+    }
+
+    /// Stand by in the **spare pool** until a heal (or an explicit
+    /// [`RingMember::request_grow`]) drains this member into a sealed
+    /// generation, then return it as a ranked — but **cold** — member.
+    /// Blocks up to `admission`, heartbeating while pending (a silent
+    /// spare is excised from the pool); on timeout the spare withdraws
+    /// and errors.
+    ///
+    /// The returned member holds a [`ColdStart`] (see
+    /// [`RingMember::cold_op`]): its first collective call must match the
+    /// interrupted op's kind and length — it adopts the survivors' op
+    /// sequence and resumes at the min-barrier chunk, contributing the
+    /// op's identity element. Configure `set_chunk_elems`/`set_timeout`
+    /// to the ring's SPMD values **before** that first call. Algorithm
+    /// drivers ([`crate::algo::es::EsRingNode::join_ring_as_spare`]) wrap
+    /// this with the relay-then-state-sync protocol.
+    pub fn join_spare_with(
+        rendezvous: RendezvousClient,
+        transport: Transport,
+        admission: Duration,
+    ) -> Result<RingMember> {
+        let (endpoint, rx, server) = Self::make_endpoint(transport)?;
+        if let Err(e) = rendezvous.register_spare(&endpoint) {
+            Self::drop_endpoint(&endpoint);
+            return Err(e);
+        }
+        let deadline = Instant::now() + admission;
+        // (generation, rank, resolved view) once a seal drafts us. The
+        // membership snapshot is only re-fetched when the heartbeat's
+        // returned generation moves — steady-state pending costs one
+        // control-plane call per slice, not three.
+        let mut drafted: Option<(u64, usize, RingView)> = None;
+        // Set at the first draft: bounds the post-draft adoption wait and
+        // arms the missing-reporter accusations (a required survivor that
+        // dies before reporting must be excised, not waited on forever).
+        let mut drafted_at: Option<Instant> = None;
+        let fail = |endpoint: &str, e: anyhow::Error| {
+            Self::drop_endpoint(endpoint);
+            Err(e)
+        };
+        loop {
+            // Heartbeat every poll slice: a pending spare that goes
+            // silent past the grace window is excised from the pool.
+            let gen_now = match rendezvous.heartbeat(&endpoint) {
+                Ok(g) => g,
+                Err(e) => return fail(&endpoint, e),
+            };
+            if drafted.as_ref().map(|(g, _, _)| *g) != Some(gen_now) {
+                drafted = None;
+                drafted_at = None;
+                let m = match rendezvous.membership() {
+                    Ok(m) => m,
+                    Err(e) => return fail(&endpoint, e),
+                };
+                if m.sealed && m.generation == gen_now {
+                    if let Some(idx) = m.members.iter().position(|i| i.addr == endpoint) {
+                        match m.resolve_view(idx) {
+                            Ok(view) => {
+                                // Fresh draft (possibly a re-draft into a
+                                // newer generation): the adoption clocks
+                                // start from here.
+                                drafted = Some((gen_now, idx, view));
+                                drafted_at = Some(Instant::now());
+                            }
+                            Err(e) => return fail(&endpoint, e),
+                        }
+                    }
+                }
+            }
+            if let Some((g, idx, view)) = &drafted {
+                let since_draft = drafted_at.unwrap_or_else(Instant::now);
+                // Drafted. The survivors' resume barrier tells us where
+                // the interrupted collective resumes and what it is (and
+                // the observe promotes us to a participant).
+                match rendezvous.resume_observe(*g, *idx as u64) {
+                    Ok(Some((resume_chunk, op))) => {
+                        let cold = ColdStart { resume_chunk, op };
+                        return Ok(Self::from_parts(
+                            view.clone(),
+                            rendezvous,
+                            endpoint,
+                            rx,
+                            server,
+                            Some(cold),
+                        ));
+                    }
+                    Ok(None) => {
+                        // A required reporter that died before reporting
+                        // would stall this barrier forever: past a grace
+                        // period, accuse the missing ranks (the heartbeat
+                        // veto shields anyone actually alive; an accepted
+                        // report heals the ring and this loop re-syncs).
+                        if since_draft.elapsed() > Duration::from_secs(5) {
+                            let missing = match rendezvous.resume_missing(*g) {
+                                Ok(m) => m,
+                                Err(e) => return fail(&endpoint, e),
+                            };
+                            for rank in missing.unwrap_or_default() {
+                                if rank == *idx as u64 {
+                                    continue;
+                                }
+                                match rendezvous.report_dead(*g, rank) {
+                                    Ok(true) => break,
+                                    Ok(false) => {}
+                                    Err(e) => return fail(&endpoint, e),
+                                }
+                            }
+                        }
+                        if since_draft.elapsed() > admission {
+                            Self::drop_endpoint(&endpoint);
+                            anyhow::bail!(
+                                "spare at {endpoint} was drafted into generation {g} but \
+                                 the admission barrier never completed within {admission:?} \
+                                 (the survivors died or went silent); the ring will excise \
+                                 this seat on its next heal"
+                            );
+                        }
+                    }
+                    Err(e) => return fail(&endpoint, e),
+                }
+            } else if Instant::now() >= deadline {
+                // Never drafted: withdraw cleanly. (Once drafted we hold a
+                // rank in a sealed generation and MUST see the admission
+                // through — abandoning would leave a ghost member the
+                // survivors pay a heal cycle to excise — so the deadline
+                // only applies while still pending.)
+                let _ = rendezvous.deregister_spare(&endpoint);
+                Self::drop_endpoint(&endpoint);
+                anyhow::bail!(
+                    "spare at {endpoint} was never drafted within {admission:?} \
+                     (no heal or grow drained the spare pool)"
+                );
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+
+    /// [`RingMember::join_spare_with`] through an in-process rendezvous
+    /// (thread backend).
+    pub fn join_spare_inproc(rv: &Arc<Rendezvous>, admission: Duration) -> Result<RingMember> {
+        Self::join_spare_with(
+            RendezvousClient::local(rv.clone()),
+            Transport::Inproc,
+            admission,
+        )
+    }
+
+    /// [`RingMember::join_spare_with`] against a rendezvous at `addr`,
+    /// exposing a TCP data endpoint when the rendezvous is remote (same
+    /// bind rules as [`RingMember::join_addr`]).
+    pub fn join_spare_addr(addr: &Addr, admission: Duration) -> Result<RingMember> {
+        let transport = match addr {
+            Addr::Inproc(_) => Transport::Inproc,
+            Addr::Tcp(_) => Transport::TcpBind("127.0.0.1:0".into()),
+        };
+        Self::join_spare_with(RendezvousClient::connect(addr)?, transport, admission)
     }
 
     pub fn rank(&self) -> usize {
@@ -393,6 +584,69 @@ impl RingMember {
             .leave(self.view.generation, self.view.rank as u64)
     }
 
+    /// Attach an algorithm-level **op note** (a program counter) to the
+    /// collectives that follow. The note travels through the resume
+    /// min-barrier when a heal interrupts a collective, so a spare drained
+    /// into the healed generation learns *which* step of the algorithm's
+    /// iteration it is relaying — e.g. [`crate::algo::es`]'s
+    /// rewards/gradient/sync phases. Purely advisory for warm members.
+    pub fn set_op_note(&mut self, note: u64) {
+        self.op_note = note;
+    }
+
+    /// The interrupted op a freshly drained spare must adopt, if any —
+    /// `Some` from [`RingMember::join_spare_with`] until the first
+    /// matching collective call consumes it.
+    pub fn cold_op(&self) -> Option<&ColdStart> {
+        self.cold_start.as_ref()
+    }
+
+    /// Ask the rendezvous to drain the spare pool into a grown sealed
+    /// generation (see [`super::topology::Rendezvous::grow`]). Call
+    /// between collectives; every member's next collective adopts the
+    /// grown world through the ordinary heal/resume machinery. Returns
+    /// `false` when no live spare is pending or this member's view is
+    /// already stale.
+    pub fn request_grow(&self) -> Result<bool> {
+        self.rendezvous.grow(self.view.generation)
+    }
+
+    /// Describe the collective this member is currently driving, for the
+    /// resume barrier.
+    fn op_desc(&self, kind: u8, elems: usize, root: String) -> OpDesc {
+        OpDesc {
+            op_seq: self.op_seq,
+            kind,
+            elems: elems as u64,
+            root,
+            note: self.op_note,
+        }
+    }
+
+    /// Begin a collective: adopt the pending [`ColdStart`] when this is a
+    /// drained spare's first call (aligning the op sequence with the
+    /// survivors and resuming at the min-barrier chunk), else allocate the
+    /// next op in sequence and start at chunk 0.
+    fn begin_op(&mut self, kind: u8, elems: usize) -> Result<(u64, usize)> {
+        if let Some(cold) = self.cold_start.as_ref() {
+            // Validate before consuming, so a driver that called the
+            // wrong collective can recover: the adoption state survives
+            // the error and the correct call still adopts.
+            anyhow::ensure!(
+                cold.op.kind == kind && cold.op.elems as usize == elems,
+                "cold join mismatch: drained into op (kind {}, {} elems) but the first \
+                 collective call is (kind {kind}, {elems} elems) — the spare must mirror \
+                 the survivors' program (see ring::spare)",
+                cold.op.kind,
+                cold.op.elems,
+            );
+            let cold = self.cold_start.take().expect("checked above");
+            self.op_seq = cold.op.op_seq;
+            return Ok((cold.op.op_seq << 24, cold.resume_chunk as usize));
+        }
+        Ok((self.next_op(), 0))
+    }
+
     // ---- collectives -----------------------------------------------------
 
     /// In-place elementwise sum across all members: chunked ring allreduce
@@ -403,15 +657,19 @@ impl RingMember {
     /// generation's sum (banked work); resumed chunks hold the sum over
     /// the survivors only.
     pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
-        if self.view.world == 1 {
+        if self.view.world == 1 && self.heartbeat()? <= self.view.generation {
+            // Sole member, no membership change pending: the sum of one.
+            // (The heartbeat probe is what lets a world-1 ring adopt an
+            // explicit grow: with the generation bumped we fall through
+            // and the first drive's heal drafts the spares in.)
             return Ok(());
         }
-        let op = self.next_op();
+        let (op, resume_at) = self.begin_op(KIND_ALLREDUCE, buf.len())?;
         let chunks = chunk_ranges(buf.len(), self.chunk_elems);
         self.ensure_tag_capacity(chunks.len())?;
         let snapshot = buf.to_vec();
-        let mut start = 0usize;
-        let mut completed = 0usize;
+        let mut start = resume_at;
+        let mut completed = resume_at;
         loop {
             match self.drive_allreduce(op, buf, &chunks, start, &mut completed) {
                 Ok(()) => return Ok(()),
@@ -419,7 +677,25 @@ impl RingMember {
                     if !is_heal_needed(&e) {
                         return Err(e);
                     }
-                    let resume = self.heal_and_sync(completed as u64)? as usize;
+                    let desc = self.op_desc(KIND_ALLREDUCE, buf.len(), String::new());
+                    let (resume_op, resume) = self.heal_and_sync(completed as u64, &desc)?;
+                    if resume_op > desc.op_seq {
+                        // The membership changed on a collective boundary
+                        // (e.g. an explicit grow) after this op finished:
+                        // peers already moved on to a later op. Only a
+                        // locally complete op may take this exit — a
+                        // member genuinely stranded mid-op cannot resume
+                        // a collective the ring has left behind.
+                        anyhow::ensure!(
+                            completed == chunks.len(),
+                            "ring resumed op {resume_op} but this member is mid-op {} \
+                             ({completed}/{} chunks) — boundary-skewed, not resumable",
+                            desc.op_seq,
+                            chunks.len()
+                        );
+                        return Ok(());
+                    }
+                    let resume = resume as usize;
                     // Unfinished chunks roll back to the pre-collective
                     // input and re-reduce over the survivors.
                     for &(lo, hi) in chunks.iter().skip(resume) {
@@ -454,15 +730,16 @@ impl RingMember {
     pub fn broadcast(&mut self, root: usize, buf: &mut [f32]) -> Result<()> {
         let n = self.view.world;
         anyhow::ensure!(root < n, "broadcast root {root} out of range (world {n})");
-        if n == 1 {
+        if n == 1 && self.heartbeat()? <= self.view.generation {
+            // Sole member and no pending grow (see allreduce_sum).
             return Ok(());
         }
         let root_addr = self.view.members[root].clone();
-        let op = self.next_op();
+        let (op, resume_at) = self.begin_op(KIND_BROADCAST, buf.len())?;
         let chunks = chunk_ranges(buf.len(), self.chunk_elems);
         self.ensure_tag_capacity(chunks.len())?;
-        let mut start = 0usize;
-        let mut completed = 0usize;
+        let mut start = resume_at;
+        let mut completed = resume_at;
         loop {
             let root_now = self
                 .view
@@ -470,16 +747,29 @@ impl RingMember {
                 .iter()
                 .position(|a| *a == root_addr)
                 .context("broadcast root died; its buffer is unrecoverable")?;
-            if self.view.world == 1 {
-                return Ok(()); // sole survivor is the root itself
-            }
+            // (A post-heal world of 1 — the sole survivor is the root
+            // itself — is handled by drive_broadcast's n == 1 branch.)
             match self.drive_broadcast(op, root_now, buf, &chunks, start, &mut completed) {
                 Ok(()) => return Ok(()),
                 Err(e) => {
                     if !is_heal_needed(&e) {
                         return Err(e);
                     }
-                    start = self.heal_and_sync(completed as u64)? as usize;
+                    let desc = self.op_desc(KIND_BROADCAST, buf.len(), root_addr.to_string());
+                    let (resume_op, resume) = self.heal_and_sync(completed as u64, &desc)?;
+                    if resume_op > desc.op_seq {
+                        // Boundary bump after this broadcast completed:
+                        // peers are in a later op (see allreduce_sum).
+                        anyhow::ensure!(
+                            completed == chunks.len(),
+                            "ring resumed op {resume_op} but this member is mid-op {} \
+                             ({completed}/{} chunks) — boundary-skewed, not resumable",
+                            desc.op_seq,
+                            chunks.len()
+                        );
+                        return Ok(());
+                    }
+                    start = resume as usize;
                 }
             }
         }
@@ -539,9 +829,28 @@ impl RingMember {
 
     /// Ring all-gather: every member contributes `mine` (equal lengths
     /// across members); returns the world's contributions concatenated in
-    /// rank order. Lockstep (non-healing): a dead peer surfaces as a recv
-    /// timeout error — slot semantics under a shrunk world are ambiguous,
-    /// so this collective fails fast instead of resuming.
+    /// rank order.
+    ///
+    /// # Fail-fast semantics (deliberately non-healing)
+    ///
+    /// Unlike [`RingMember::allreduce_sum`]/[`RingMember::broadcast`],
+    /// this collective does **not** resume across a heal, because its
+    /// result shape is rank-indexed: if the world shrinks from `n` to
+    /// `n-1` mid-gather, there is no coherent answer for the dead rank's
+    /// slot — survivors that already banked it would disagree with
+    /// survivors that did not, and downstream code indexing `out[r*len..]`
+    /// by old ranks would silently read the wrong member's data. Instead:
+    ///
+    /// * a dead peer surfaces as a recv-timeout **error** (`ring recv
+    ///   timed out waiting for rank …`);
+    /// * a generation bump started by another member surfaces as `ring
+    ///   healed to a new generation mid-collective; this collective is
+    ///   not resumable`.
+    ///
+    /// Callers that need healing semantics should restructure the
+    /// exchange as a sum with disjoint slots (the
+    /// [`crate::algo::es::EsRingNode`] reward vector does exactly this)
+    /// or re-run the gather on the healed generation from scratch.
     pub fn all_gather(&mut self, mine: &[f32]) -> Result<Vec<f32>> {
         let n = self.view.world;
         let len = mine.len();
@@ -568,8 +877,17 @@ impl RingMember {
     /// The leader-centric baseline: every member ships its full buffer to
     /// `root`, which sums and ships the result back — `O(n·θ)` at the root.
     /// Same result as [`RingMember::allreduce_sum`] up to summation order;
-    /// exists as the comparison target for `benches/ring_allreduce.rs`
-    /// (lockstep, non-healing).
+    /// exists as the comparison target for `benches/ring_allreduce.rs`.
+    ///
+    /// # Fail-fast semantics (deliberately non-healing)
+    ///
+    /// Lockstep, like [`RingMember::all_gather`], and for the same reason
+    /// with one more: the root is a single point of failure holding the
+    /// only partial sum, so there is no survivor set that could resume the
+    /// reduction. A dead peer (or root) surfaces as a recv-timeout error
+    /// and a concurrent heal as a `not resumable` error — the baseline
+    /// stays a faithful model of the leader-centric architecture it
+    /// benchmarks, including its fragility.
     pub fn gather_broadcast_sum(&mut self, root: usize, buf: &mut [f32]) -> Result<()> {
         let n = self.view.world;
         anyhow::ensure!(root < n, "root {root} out of range (world {n})");
@@ -618,14 +936,18 @@ impl RingMember {
         let n = self.view.world;
         *completed = start;
         if n == 1 {
+            // A sole member banks everything — but must still notice a
+            // generation bump (explicit grow), or a world-1 ring could
+            // never adopt its drafted spares.
             *completed = chunks.len();
+            self.heartbeat_check(false)?;
             return Ok(());
         }
         let plan = allreduce_plan(n, self.view.rank);
         let spc = plan.len() as u64;
         let right = self.view.right();
         let left = self.view.left();
-        self.heartbeat_check()?;
+        self.heartbeat_check(false)?;
         let window = if self.overlap { 2 } else { 1 };
         let mut active: VecDeque<ChunkRun> = VecDeque::new();
         let mut next_chunk = start;
@@ -684,7 +1006,7 @@ impl RingMember {
             while active.front().is_some_and(|r| r.step == plan.len()) {
                 let run = active.pop_front().unwrap();
                 *completed += 1;
-                self.heartbeat_check()?;
+                self.heartbeat_check(true)?;
                 if self.kill_after_chunk == Some(run.chunk as u64) {
                     return Err(RingError::ChaosKilled.into());
                 }
@@ -707,13 +1029,15 @@ impl RingMember {
         let n = self.view.world;
         *completed = start;
         if n == 1 {
+            // See drive_allreduce: bank all, but notice a pending grow.
             *completed = chunks.len();
+            self.heartbeat_check(false)?;
             return Ok(());
         }
         let right = self.view.right();
         let left = self.view.left();
         let rank = self.view.rank;
-        self.heartbeat_check()?;
+        self.heartbeat_check(false)?;
         for ci in start..chunks.len() {
             let (lo, hi) = chunks[ci];
             let tag = op | ci as u64;
@@ -735,7 +1059,7 @@ impl RingMember {
                 }
             }
             *completed += 1;
-            self.heartbeat_check()?;
+            self.heartbeat_check(true)?;
             if self.kill_after_chunk == Some(ci as u64) {
                 return Err(RingError::ChaosKilled.into());
             }
@@ -765,8 +1089,20 @@ impl RingMember {
     /// is how a member that never blocks in a collective — a broadcast
     /// root is pure-send — still observes a downstream death in bounded
     /// time: the per-chunk heartbeat carries the bumped generation back.
-    fn heartbeat_check(&self) -> Result<()> {
+    ///
+    /// With `mid_op` set, a bump that only **added** members (an explicit
+    /// spare-pool grow — see [`RingMember::growth_only`]) is deferred:
+    /// every participant of the in-flight op is still present, so the op
+    /// completes over the old topology and all members adopt the grown
+    /// generation together at their next op start. Without the deferral,
+    /// a grow racing one member's final chunks would put that member and
+    /// its peers into *different* ops at the resume barrier. A bump that
+    /// excised anyone is a heal and interrupts immediately either way.
+    fn heartbeat_check(&self, mid_op: bool) -> Result<()> {
         if self.heartbeat()? > self.view.generation {
+            if mid_op && self.growth_only()? {
+                return Ok(());
+            }
             return Err(RingError::HealNeeded.into());
         }
         Ok(())
@@ -776,11 +1112,30 @@ impl RingMember {
         Ok(self.heartbeat()? > self.view.generation)
     }
 
+    /// True when the rendezvous' current membership still ranks every
+    /// endpoint of this member's view — the generation bump only *grew*
+    /// the ring (nobody excised). Used to defer explicit grows to op
+    /// boundaries.
+    fn growth_only(&self) -> Result<bool> {
+        let m = self.rendezvous.membership()?;
+        if !m.sealed {
+            return Ok(false);
+        }
+        Ok(self.view.members.iter().all(|a| {
+            let s = a.to_string();
+            m.members.iter().any(|i| i.addr == s)
+        }))
+    }
+
     /// Adopt the healed generation (same endpoint, new rank/world), purge
-    /// stale state, and run the resume min-barrier. Returns the chunk index
-    /// the collective resumes from. Loops if yet another member dies while
-    /// the barrier is forming.
-    fn heal_and_sync(&mut self, completed: u64) -> Result<u64> {
+    /// stale state, and run the resume min-barrier, reporting `desc` (the
+    /// in-flight op) so drained spares can adopt it. Returns
+    /// `(resume_op_seq, resume_chunk)` — the most-advanced op reported
+    /// into the barrier and the chunk it resumes from (callers whose own
+    /// op is behind `resume_op_seq` were superseded at a boundary and must
+    /// not roll back). Loops if yet another member dies while the barrier
+    /// is forming.
+    fn heal_and_sync(&mut self, completed: u64, desc: &OpDesc) -> Result<(u64, u64)> {
         loop {
             let deadline = Instant::now() + self.timeout;
             let view = loop {
@@ -807,7 +1162,7 @@ impl RingMember {
             self.peers.clear();
             self.stash.retain(|m| m.1 >= new_gen);
             self.heals += 1;
-            self.heartbeat_check()?;
+            self.heartbeat_check(false)?;
             // The resume barrier can wait on survivors that are deep in a
             // compute phase (e.g. ES rollouts) and have not touched the
             // ring yet, so its budget is far larger than one peer wait.
@@ -818,11 +1173,11 @@ impl RingMember {
             let accuse_after = Instant::now() + self.timeout * 5;
             let mut healed_again = false;
             loop {
-                if let Some(min) =
+                if let Some(resume) =
                     self.rendezvous
-                        .resume_poll(new_gen, self.view.rank as u64, completed)?
+                        .resume_poll(new_gen, self.view.rank as u64, completed, desc)?
                 {
-                    return Ok(min);
+                    return Ok(resume);
                 }
                 if self.heartbeat()? > new_gen {
                     healed_again = true; // another death while re-forming
@@ -971,7 +1326,9 @@ impl RingMember {
             if self.rendezvous.report_dead(self.view.generation, to as u64)? {
                 return Err(RingError::HealNeeded.into());
             }
-            if self.generation_bumped()? {
+            // A growth-only bump is not a heal (see heartbeat_check): keep
+            // retrying the report until the dead peer's grace expires.
+            if self.generation_bumped()? && !self.growth_only()? {
                 return Err(RingError::HealNeeded.into());
             }
             if Instant::now() >= deadline {
@@ -1028,7 +1385,10 @@ impl RingMember {
                 }
                 Err(chan::RecvError::Timeout) => {
                     // One control-plane call per slice: heartbeat + bump check.
-                    if self.generation_bumped()? {
+                    // A growth-only bump (explicit grow) is deferred to the
+                    // op boundary: the sender is still ranked and still in
+                    // this op, so its traffic is coming — keep waiting.
+                    if self.generation_bumped()? && !self.growth_only()? {
                         match mode {
                             RecvMode::Heal => return Err(RingError::HealNeeded.into()),
                             RecvMode::Fail => anyhow::bail!(
@@ -1046,7 +1406,7 @@ impl RingMember {
                                 {
                                     return Err(RingError::HealNeeded.into());
                                 }
-                                if self.generation_bumped()? {
+                                if self.generation_bumped()? && !self.growth_only()? {
                                     return Err(RingError::HealNeeded.into());
                                 }
                                 // Rejected (the peer heartbeated): extend
@@ -1119,33 +1479,47 @@ fn msg_count(len: usize, chunk: usize) -> usize {
     }
 }
 
-/// Pack `(ObjId, len)` into 6 f32 lanes, bit-preserving: the header rides
-/// the ordinary f32 broadcast path (`from_bits`/`to_bits` plus the
-/// `to_le_bytes` framing never reinterpret the value arithmetically, so
-/// arbitrary bit patterns — including NaN encodings — survive).
-fn pack_store_header(id: crate::store::ObjId, len: u64) -> [f32; 6] {
+/// A 16-byte [`crate::store::ObjId`] as 4 bit-preserving f32 lanes —
+/// `from_bits`/`to_bits` plus the `to_le_bytes` framing never reinterpret
+/// the value arithmetically, so arbitrary bit patterns (including NaN
+/// encodings) survive any f32 broadcast path. Shared by the store-header
+/// broadcast and the algorithm state-sync codecs.
+pub(crate) fn objid_to_lanes(id: crate::store::ObjId) -> [f32; 4] {
     let b = id.0;
     let word = |i: usize| f32::from_bits(u32::from_le_bytes([b[i], b[i + 1], b[i + 2], b[i + 3]]));
+    [word(0), word(4), word(8), word(12)]
+}
+
+/// Inverse of [`objid_to_lanes`].
+pub(crate) fn objid_from_lanes(lanes: &[f32]) -> crate::store::ObjId {
+    let mut b = [0u8; 16];
+    for (i, w) in lanes[..4].iter().enumerate() {
+        b[i * 4..(i + 1) * 4].copy_from_slice(&w.to_bits().to_le_bytes());
+    }
+    crate::store::ObjId(b)
+}
+
+/// Pack `(ObjId, len)` into 6 f32 lanes, bit-preserving: the header rides
+/// the ordinary f32 broadcast path.
+pub(crate) fn pack_store_header(id: crate::store::ObjId, len: u64) -> [f32; 6] {
+    let [a, b, c, d] = objid_to_lanes(id);
     [
-        word(0),
-        word(4),
-        word(8),
-        word(12),
+        a,
+        b,
+        c,
+        d,
         f32::from_bits((len & 0xFFFF_FFFF) as u32),
         f32::from_bits((len >> 32) as u32),
     ]
 }
 
-fn unpack_store_header(h: &[f32; 6]) -> (crate::store::ObjId, u64) {
-    let mut b = [0u8; 16];
-    for (i, w) in h[..4].iter().enumerate() {
-        b[i * 4..(i + 1) * 4].copy_from_slice(&w.to_bits().to_le_bytes());
-    }
+pub(crate) fn unpack_store_header(h: &[f32; 6]) -> (crate::store::ObjId, u64) {
+    let id = objid_from_lanes(&h[..4]);
     let len = (h[4].to_bits() as u64) | ((h[5].to_bits() as u64) << 32);
-    (crate::store::ObjId(b), len)
+    (id, len)
 }
 
-fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+pub(crate) fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
     let mut bytes = Vec::with_capacity(vals.len() * 4);
     for v in vals {
         bytes.extend_from_slice(&v.to_le_bytes());
@@ -1153,7 +1527,7 @@ fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
     bytes
 }
 
-fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+pub(crate) fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
     anyhow::ensure!(
         bytes.len() % 4 == 0,
         "ring payload of {} bytes is not a whole number of f32s",
@@ -1491,6 +1865,99 @@ mod tests {
         }
         // Survivors agree bitwise.
         assert_eq!(survivors[0].4, survivors[1].4);
+    }
+
+    #[test]
+    fn kill_with_spare_heals_and_autogrows_mid_allreduce() {
+        // World 3 + 1 spare, 4 chunks of 8; rank 2 dies after chunk 1.
+        // The heal drains the spare: world returns to 3, the collective
+        // resumes via the min-barrier with the rejoiner relaying zeros.
+        // Survivors: chunks 0–1 keep the 3-way sum (banked), chunks 2–3
+        // re-reduce over the two survivors (+ the rejoiner's zeros).
+        let world = 3;
+        let len = 32;
+        let rv = Rendezvous::new(world);
+        rv.set_heartbeat_grace(Duration::from_millis(40));
+        let spare_rv = rv.clone();
+        let spare = std::thread::spawn(move || {
+            let mut m =
+                RingMember::join_spare_inproc(&spare_rv, Duration::from_secs(10)).unwrap();
+            m.set_chunk_elems(8);
+            m.set_timeout(Duration::from_millis(250));
+            m.set_probe_interval(Duration::from_millis(10));
+            let cold = m.cold_op().cloned().expect("drained mid-op");
+            assert_eq!(cold.op.kind, KIND_ALLREDUCE);
+            assert_eq!(cold.op.elems as usize, len);
+            assert!(cold.resume_chunk >= 1, "min-barrier must bank completed chunks");
+            let mut buf = vec![0.0f32; len];
+            m.allreduce_sum(&mut buf).unwrap();
+            (m.rank(), m.world(), m.generation(), cold.resume_chunk, buf)
+        });
+        // Gate: the spare must be pending before the chaos kill can heal,
+        // or the drain finds an empty pool and the spare is never drafted.
+        while rv.spares().is_empty() {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let handles: Vec<_> = (0..world)
+            .map(|_| {
+                let rv = rv.clone();
+                std::thread::spawn(move || {
+                    let mut m = RingMember::join_inproc(&rv).unwrap();
+                    m.set_chunk_elems(8);
+                    m.set_timeout(Duration::from_millis(250));
+                    m.set_probe_interval(Duration::from_millis(10));
+                    let victim = m.rank() == 2;
+                    if victim {
+                        m.set_kill_after_chunk(Some(1));
+                    }
+                    let mut buf = member_input(m.rank(), len);
+                    match m.allreduce_sum(&mut buf) {
+                        Ok(()) => Some((m.rank(), m.world(), m.generation(), buf)),
+                        Err(e) => {
+                            assert!(victim && is_chaos_killed(&e), "{e:#}");
+                            None
+                        }
+                    }
+                })
+            })
+            .collect();
+        let mut survivors: Vec<_> = handles
+            .into_iter()
+            .filter_map(|h| h.join().unwrap())
+            .collect();
+        survivors.sort_by_key(|s| s.0);
+        assert_eq!(survivors.len(), 2);
+        let full = reference_sum(3, len);
+        let mut partial = vec![0.0f32; len];
+        for r in [0usize, 1] {
+            for (o, v) in partial.iter_mut().zip(member_input(r, len)) {
+                *o += v;
+            }
+        }
+        let (s_rank, s_world, s_gen, resume_chunk, s_buf) = spare.join().unwrap();
+        assert_eq!(s_rank, 2, "the rejoiner takes the appended rank");
+        assert_eq!(s_world, 3, "auto-grow restores the original world size");
+        assert_eq!(s_gen, 1);
+        let boundary = (resume_chunk * 8) as usize;
+        for (rank, w, generation, buf) in &survivors {
+            assert_eq!(*w, 3, "survivors see the grown world too");
+            assert_eq!(*generation, 1);
+            for (i, v) in buf.iter().enumerate() {
+                let want = if i < boundary { full[i] } else { partial[i] };
+                assert!(
+                    (v - want).abs() < 1e-5,
+                    "rank {rank} elem {i}: got {v}, want {want}"
+                );
+            }
+        }
+        assert_eq!(survivors[0].3, survivors[1].3, "survivors agree bitwise");
+        // The rejoiner's resumed chunks hold the survivors' sum (its own
+        // contribution was the identity element); banked chunks stay cold
+        // (zeros — it never saw them).
+        for (i, v) in s_buf.iter().enumerate() {
+            let want = if i < boundary { 0.0 } else { partial[i] };
+            assert!((v - want).abs() < 1e-5, "rejoiner elem {i}: got {v}, want {want}");
+        }
     }
 
     #[test]

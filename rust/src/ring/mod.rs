@@ -8,7 +8,7 @@
 //! per node — each member sends and receives `2·(n-1)/n · θ` elements no
 //! matter how large the world grows.
 //!
-//! Two layers:
+//! Three layers:
 //!
 //! * [`topology`] — the rendezvous service. Members register, receive a
 //!   stable **rank** and the full ring membership for the current
@@ -18,6 +18,16 @@
 //!   heartbeat while they wait; `report_dead` heals a sealed generation by
 //!   re-ranking the survivors, and the `resume_poll` min-barrier lets them
 //!   agree where an interrupted collective resumes.
+//! * [`spare`] — the **auto-grow** half of elasticity. Standby members
+//!   register as pending spares (pool-style); every heal — and any
+//!   explicit [`topology::Rendezvous::grow`] — drains the live spares
+//!   into the new sealed generation after the survivors, and the drained
+//!   member adopts the in-flight collective through the same min-barrier
+//!   (resuming as a neutral relay), so a kill → heal → auto-grow cycle
+//!   returns the ring to its original world without restarting the
+//!   collective. Cold rejoiners are brought up to algorithm state by
+//!   their driver (e.g. [`crate::algo::es::EsRingNode::join_ring_as_spare`]),
+//!   re-warming bulk tables through the object store as cache hits.
 //! * [`collectives`] — chunked ring allreduce (reduce-scatter + all-gather),
 //!   broadcast and all-gather over `f32` buffers, framed with
 //!   [`crate::wire`] and working identically over `inproc://` channels
@@ -55,9 +65,11 @@
 //! ```
 
 pub mod collectives;
+pub mod spare;
 pub mod topology;
 
 pub use collectives::{
-    allreduce_plan, is_chaos_killed, CollectiveStep, RingError, RingMember, StepPhase,
+    allreduce_plan, is_chaos_killed, CollectiveStep, RingError, RingMember, StepPhase, Transport,
 };
+pub use spare::{ColdStart, OpDesc};
 pub use topology::{MemberInfo, Rendezvous, RendezvousClient, RingView};

@@ -1,0 +1,387 @@
+//! The spare pool: standby members that let a healed ring **grow back**.
+//!
+//! Healing ([`super::topology::Rendezvous::report_dead`]) only shrinks a
+//! ring: the dead member is excised and the survivors re-rank into a
+//! smaller sealed generation. The spare pool closes the other half of the
+//! elasticity loop. A standby process registers as a **spare** — pending,
+//! not ranked, exactly like a pool worker sitting in the coordinator's
+//! pending table — and heartbeats while it waits. When the ring next
+//! changes membership (a heal, or an explicit
+//! [`super::topology::Rendezvous::grow`] request), the rendezvous *drains*
+//! the live spares into the new sealed generation: survivors keep their
+//! relative order in the low ranks, drained spares are appended after
+//! them, and the generation seals immediately.
+//!
+//! ## Rejoining an in-flight collective
+//!
+//! The subtle part is that a heal usually happens **mid-collective**. The
+//! survivors agree where to resume through the `resume_poll` min-barrier;
+//! with spares in play, each survivor's barrier report also carries an
+//! [`OpDesc`] describing the interrupted operation — its op-sequence
+//! number, collective kind, buffer length, broadcast root and the
+//! caller-supplied *op note* (an algorithm-level program counter, see
+//! [`super::RingMember::set_op_note`]). The barrier is **op-aware**: it
+//! releases the most-advanced reported op and the minimum completed
+//! chunk among the members driving it, so a membership change landing
+//! exactly on a collective boundary (an explicit grow racing one
+//! member's final bookkeeping, say) tells the member that already
+//! finished the superseded op to move on rather than rolling it back
+//! into an op its peers have left. The drained spare reads the completed
+//! barrier through `resume_observe` — which also promotes it from
+//! *observer* to *participant*, so later heals wait for its report — and
+//! receives a [`ColdStart`]: the chunk index the collective resumes from
+//! plus the `OpDesc`. Its first matching collective call adopts the op
+//! (same message tags as the survivors, resuming at the barrier minimum)
+//! and participates as a **neutral relay** — it contributes the op's
+//! identity element (zeros for a sum, pass-through for a broadcast), so
+//! the survivors' results are exactly what a plain heal would have
+//! produced, while the ring topology already includes the rejoiner.
+//!
+//! A freshly drained member is **cold**: its local output for chunks the
+//! survivors had already banked is unset, and it holds none of the
+//! algorithm's iteration state. Warm-up is the algorithm layer's job —
+//! [`crate::algo::es::EsRingNode::join_ring_as_spare`] relays the
+//! interrupted op, follows the survivors through the rest of the
+//! iteration (steered by the op note), and then receives a state-sync
+//! broadcast; the ES noise table is recovered through the object store as
+//! a cache hit ([`crate::store`]), never a re-stream.
+//!
+//! ```
+//! use std::time::Duration;
+//! use fiber::ring::{Rendezvous, RingMember};
+//!
+//! // A 2-ring forms; a spare stands by; rank 0 requests an explicit grow.
+//! let rv = Rendezvous::inproc("spare-doc", 2);
+//! rv.set_heartbeat_grace(Duration::from_millis(50));
+//! let spare_rv = rv.clone();
+//! let standby = std::thread::spawn(move || {
+//!     let mut m = RingMember::join_spare_inproc(&spare_rv, Duration::from_secs(10)).unwrap();
+//!     // Admitted mid-op: relay the collective the survivors are running.
+//!     let cold = m.cold_op().cloned().unwrap();
+//!     let mut buf = vec![0.0f32; cold.op.elems as usize];
+//!     m.allreduce_sum(&mut buf).unwrap();
+//!     m.world()
+//! });
+//! let members: Vec<_> = (0..2)
+//!     .map(|_| {
+//!         let rv = rv.clone();
+//!         std::thread::spawn(move || {
+//!             let mut m = RingMember::join_inproc(&rv).unwrap();
+//!             if m.rank() == 0 {
+//!                 // Collective-boundary grow: drafts the pending spare.
+//!                 while !m.request_grow().unwrap() {
+//!                     std::thread::sleep(Duration::from_millis(2));
+//!                 }
+//!             }
+//!             let mut buf = vec![1.0f32; 64];
+//!             m.allreduce_sum(&mut buf).unwrap();
+//!             (m.world(), buf[0])
+//!         })
+//!     })
+//!     .collect();
+//! for t in members {
+//!     let (world, v) = t.join().unwrap();
+//!     assert_eq!(world, 3, "the ring grew back");
+//!     assert_eq!(v, 2.0, "spare contributed the sum's identity element");
+//! }
+//! assert_eq!(standby.join().unwrap(), 3);
+//! Rendezvous::unpublish("spare-doc");
+//! ```
+
+use crate::wire::{self, Decode, Encode};
+
+/// [`OpDesc::kind`] for a chunked ring allreduce.
+pub const KIND_ALLREDUCE: u8 = 0;
+/// [`OpDesc::kind`] for a pipelined ring broadcast.
+pub const KIND_BROADCAST: u8 = 1;
+
+/// Description of an in-flight collective, carried through the resume
+/// min-barrier so a drained spare can adopt it (same message tags, same
+/// chunk plan) instead of wedging the survivors' resumed traffic.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct OpDesc {
+    /// The survivors' op-sequence number for the interrupted collective.
+    /// The rejoiner aligns its own sequence to this, so every later
+    /// collective also agrees on message tags.
+    pub op_seq: u64,
+    /// [`KIND_ALLREDUCE`] or [`KIND_BROADCAST`].
+    pub kind: u8,
+    /// Buffer length of the collective, in `f32` elements. The rejoiner's
+    /// first collective call must match it exactly (SPMD).
+    pub elems: u64,
+    /// Root data endpoint for a broadcast (empty for allreduce). Endpoint,
+    /// not rank: ranks renumber across heals, endpoints do not.
+    pub root: String,
+    /// The algorithm-level program counter the survivors attached via
+    /// [`super::RingMember::set_op_note`] — e.g. which phase of an ES
+    /// iteration (or which minibatch of a PPO epoch schedule) the
+    /// interrupted collective belongs to, so the rejoiner knows which
+    /// collectives remain before the state sync.
+    pub note: u64,
+}
+
+impl Encode for OpDesc {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.op_seq.encode(buf);
+        self.kind.encode(buf);
+        self.elems.encode(buf);
+        self.root.encode(buf);
+        self.note.encode(buf);
+    }
+}
+
+impl Decode for OpDesc {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(OpDesc {
+            op_seq: u64::decode(r)?,
+            kind: u8::decode(r)?,
+            elems: u64::decode(r)?,
+            root: String::decode(r)?,
+            note: u64::decode(r)?,
+        })
+    }
+}
+
+/// What a drained spare learns from the completed resume barrier: the
+/// chunk index the interrupted collective resumes from (the survivors'
+/// minimum) and the [`OpDesc`] to adopt. Held by the member until its
+/// first collective call consumes it (see
+/// [`super::RingMember::cold_op`]).
+#[derive(Clone, Debug)]
+pub struct ColdStart {
+    /// First chunk the resumed collective will execute. Chunks below this
+    /// index were banked by the survivors; the rejoiner's local buffer
+    /// for them is left untouched (unset — cold).
+    pub resume_chunk: u64,
+    /// The interrupted operation.
+    pub op: OpDesc,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ring::topology::Rendezvous;
+    use std::time::Duration;
+
+    #[test]
+    fn opdesc_roundtrips_wire() {
+        let d = OpDesc {
+            op_seq: 17,
+            kind: KIND_BROADCAST,
+            elems: 4096,
+            root: "tcp://127.0.0.1:9000".into(),
+            note: 0xA5,
+        };
+        let bytes = wire::to_bytes(&d);
+        let back: OpDesc = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(back, d);
+    }
+
+    // ---- the spare-registration table ----------------------------------
+
+    #[test]
+    fn spare_joins_mid_generation_and_stays_pending_until_next_seal() {
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_millis(30));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        assert!(rv.membership().sealed);
+        // A spare registering against a sealed generation does NOT bump it.
+        rv.register_spare("inproc://s");
+        let m = rv.membership();
+        assert_eq!(m.generation, 0, "spare registration must not re-rendezvous");
+        assert_eq!(m.members.len(), 2);
+        assert_eq!(rv.spares(), vec!["inproc://s".to_string()]);
+        // The next seal — here a heal — drains it in, appended after the
+        // survivors, stamped with the generation it entered.
+        std::thread::sleep(Duration::from_millis(40));
+        rv.heartbeat("inproc://s");
+        assert!(rv.report_dead(0, 0));
+        let m = rv.membership();
+        assert_eq!(m.generation, 1);
+        assert!(m.sealed);
+        let addrs: Vec<_> = m.members.iter().map(|i| i.addr.as_str()).collect();
+        assert_eq!(addrs, vec!["inproc://b", "inproc://s"]);
+        assert_eq!(m.members[0].since, 0, "survivors keep their entry generation");
+        assert_eq!(
+            m.members[1].since,
+            1,
+            "the drained spare is stamped with the healed generation"
+        );
+        assert!(rv.spares().is_empty(), "drained spares leave the pending table");
+    }
+
+    #[test]
+    fn stale_spare_is_excised_without_a_generation_bump() {
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_millis(20));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register_spare("inproc://dead");
+        rv.register_spare("inproc://live");
+        std::thread::sleep(Duration::from_millis(30));
+        rv.heartbeat("inproc://live"); // only one spare is still breathing
+        let before = rv.membership().generation;
+        assert_eq!(rv.spares(), vec!["inproc://live".to_string()]);
+        assert_eq!(
+            rv.membership().generation,
+            before,
+            "pruning a dead spare must not re-rendezvous the ring"
+        );
+        // An explicit grow drafts only the live spare.
+        assert!(rv.grow(before));
+        let m = rv.membership();
+        let addrs: Vec<_> = m.members.iter().map(|i| i.addr.as_str()).collect();
+        assert_eq!(addrs, vec!["inproc://a", "inproc://b", "inproc://live"]);
+    }
+
+    #[test]
+    fn grow_with_no_live_spares_is_a_no_op() {
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_millis(20));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        assert!(!rv.grow(0), "no spares: nothing to grow into");
+        rv.register_spare("inproc://stale");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!rv.grow(0), "a stale spare must not be drafted");
+        assert_eq!(rv.membership().generation, 0);
+        // Stale reports against the wrong generation are rejected too.
+        assert!(!rv.grow(7));
+    }
+
+    #[test]
+    fn grow_opens_a_resume_barrier_for_the_pre_grow_members() {
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_millis(30));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register_spare("inproc://s");
+        rv.heartbeat("inproc://s");
+        assert!(rv.grow(0));
+        let m = rv.membership();
+        assert_eq!((m.generation, m.members.len()), (1, 3));
+        // The two pre-grow members report (completed = 0 at an op start);
+        // the spare observes without reporting.
+        let desc = OpDesc {
+            op_seq: 3,
+            kind: KIND_ALLREDUCE,
+            elems: 64,
+            ..OpDesc::default()
+        };
+        assert_eq!(rv.resume_observe(1, 2), None, "barrier must wait for the members");
+        assert_eq!(rv.resume_poll(1, 0, 0, &desc), None);
+        assert_eq!(rv.resume_poll(1, 1, 0, &desc), Some((3, 0)));
+        let (min, op) = rv
+            .resume_observe(1, 2)
+            .expect("observer sees the completed barrier");
+        assert_eq!(min, 0);
+        assert_eq!(op, desc);
+    }
+
+    #[test]
+    fn heal_barrier_carries_the_interrupted_op_to_the_observer() {
+        let rv = Rendezvous::new(3);
+        rv.set_heartbeat_grace(Duration::from_millis(1));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register("inproc://c");
+        rv.register_spare("inproc://s");
+        std::thread::sleep(Duration::from_millis(5));
+        rv.heartbeat("inproc://s");
+        assert!(rv.report_dead(0, 2));
+        assert_eq!(rv.membership().members.len(), 3, "healed straight back to world 3");
+        let desc = OpDesc {
+            op_seq: 9,
+            kind: KIND_ALLREDUCE,
+            elems: 35,
+            note: 2,
+            ..OpDesc::default()
+        };
+        // Only the two *survivors* report; the drained spare observes.
+        assert_eq!(rv.resume_poll(1, 0, 4, &desc), None);
+        assert_eq!(rv.resume_observe(1, 2), None);
+        assert_eq!(rv.resume_poll(1, 1, 2, &desc), Some((9, 2)));
+        assert_eq!(rv.resume_observe(1, 2), Some((2, desc)));
+    }
+
+    #[test]
+    fn boundary_skewed_barrier_resumes_the_most_advanced_op() {
+        // An explicit grow can land between two collectives: one member
+        // observes the bump at the *tail* of op N (fully complete), the
+        // other at the *start* of op N+1. The barrier must release the
+        // most-advanced op — never roll the finished member back into an
+        // op its peer has left behind.
+        let rv = Rendezvous::new(2);
+        rv.set_heartbeat_grace(Duration::from_millis(30));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register_spare("inproc://s");
+        rv.heartbeat("inproc://s");
+        assert!(rv.grow(0));
+        let done_n = OpDesc {
+            op_seq: 4,
+            kind: KIND_ALLREDUCE,
+            elems: 32,
+            ..OpDesc::default()
+        };
+        let starting_n1 = OpDesc {
+            op_seq: 5,
+            kind: KIND_ALLREDUCE,
+            elems: 48,
+            ..OpDesc::default()
+        };
+        // Rank 1 finished op 4 (all 8 chunks); rank 0 is entering op 5.
+        assert_eq!(rv.resume_poll(1, 1, 8, &done_n), None);
+        let got = rv.resume_poll(1, 0, 0, &starting_n1);
+        assert_eq!(got, Some((5, 0)), "resume must name op 5 at chunk 0");
+        // The observer adopts the op-5 descriptor, not the stale op 4.
+        assert_eq!(rv.resume_observe(1, 2), Some((0, starting_n1)));
+    }
+
+    #[test]
+    fn second_heal_does_not_require_a_report_from_a_still_observing_spare() {
+        // Regression: a spare drained at generation 1 that has not yet
+        // adopted (its admission barrier is still forming) must not be a
+        // required reporter of a generation-2 barrier — it has nothing to
+        // report and would deadlock every survivor.
+        let rv = Rendezvous::new(3);
+        rv.set_heartbeat_grace(Duration::from_millis(1));
+        rv.register("inproc://a");
+        rv.register("inproc://b");
+        rv.register("inproc://c");
+        rv.register_spare("inproc://s");
+        std::thread::sleep(Duration::from_millis(5));
+        rv.heartbeat("inproc://s");
+        assert!(rv.report_dead(0, 2)); // gen 1: [a, b, s]; s observing
+        // Before the gen-1 barrier completes, b dies too.
+        rv.heartbeat("inproc://s");
+        assert!(rv.report_dead(1, 1)); // gen 2: [a, s]
+        let desc = OpDesc {
+            op_seq: 7,
+            kind: KIND_ALLREDUCE,
+            elems: 16,
+            ..OpDesc::default()
+        };
+        // The sole participating survivor completes the barrier alone.
+        assert_eq!(
+            rv.resume_poll(2, 0, 3, &desc),
+            Some((7, 3)),
+            "the still-observing spare must not block the barrier"
+        );
+        // The spare observes gen 2 and is promoted to a participant…
+        assert_eq!(rv.resume_observe(2, 1), Some((3, desc.clone())));
+        // …so a third heal *does* require its report.
+        rv.register_spare("inproc://t");
+        rv.heartbeat("inproc://t");
+        assert!(rv.report_dead(2, 0)); // gen 3: [s, t]; t observing
+        let d3 = OpDesc {
+            op_seq: 8,
+            kind: KIND_ALLREDUCE,
+            elems: 16,
+            ..OpDesc::default()
+        };
+        assert_eq!(rv.resume_missing(3), Some(vec![0]), "s (now rank 0) must report");
+        assert_eq!(rv.resume_poll(3, 0, 1, &d3), Some((8, 1)));
+    }
+}

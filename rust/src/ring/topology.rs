@@ -22,6 +22,17 @@
 //! interrupted collective through the [`Rendezvous::resume_poll`]
 //! min-barrier: each reports how many chunks it completed, and everyone
 //! resumes from the minimum.
+//!
+//! Since the auto-grow change the shrink is no longer one-way. Standby
+//! members register into a **spare pool** ([`Rendezvous::register_spare`],
+//! pending and heartbeating, exactly like pool workers in the
+//! coordinator's pending table) and every membership change that seals a
+//! new generation — a heal, or an explicit [`Rendezvous::grow`] — drains
+//! the live spares in after the survivors, stamped with the generation
+//! they entered ([`MemberInfo::since`]). The survivors' resume reports
+//! carry an [`super::spare::OpDesc`] so the drained spare can adopt the
+//! in-flight collective through [`Rendezvous::resume_observe`]; see
+//! [`super::spare`] for the full rejoin story.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -34,6 +45,8 @@ use crate::comms::rpc::{RpcClient, RpcServer};
 use crate::comms::Addr;
 use crate::wire::{self, Decode, Encode};
 
+use super::spare::OpDesc;
+
 /// RPC tags for the rendezvous protocol.
 pub mod tags {
     pub const REGISTER: u32 = 1;
@@ -44,6 +57,10 @@ pub mod tags {
     pub const REPORT_DEAD: u32 = 6;
     pub const RESUME: u32 = 7;
     pub const RESUME_MISSING: u32 = 8;
+    pub const REGISTER_SPARE: u32 = 9;
+    pub const DEREGISTER_SPARE: u32 = 10;
+    pub const GROW: u32 = 11;
+    pub const RESUME_OBSERVE: u32 = 12;
 }
 
 /// One registered member as seen by the rendezvous.
@@ -53,12 +70,19 @@ pub struct MemberInfo {
     pub rank: u64,
     /// The member's data-plane endpoint (`inproc://…` or `tcp://…`).
     pub addr: String,
+    /// Generation at which this member entered the ring's lineage: its
+    /// registration generation for founding members, the healed/grown
+    /// generation for drained spares. Survivors keep their stamp across
+    /// heals, which is how algorithms tell warm members (shared iteration
+    /// state) from cold rejoiners — see [`super::RingView::warm_count`].
+    pub since: u64,
 }
 
 impl Encode for MemberInfo {
     fn encode(&self, buf: &mut Vec<u8>) {
         self.rank.encode(buf);
         self.addr.encode(buf);
+        self.since.encode(buf);
     }
 }
 
@@ -67,6 +91,7 @@ impl Decode for MemberInfo {
         Ok(MemberInfo {
             rank: u64::decode(r)?,
             addr: String::decode(r)?,
+            since: u64::decode(r)?,
         })
     }
 }
@@ -113,14 +138,17 @@ impl Membership {
     /// by the initial join and by mid-collective healing.
     pub fn resolve_view(&self, rank: usize) -> Result<RingView> {
         let mut members = Vec::with_capacity(self.members.len());
+        let mut joined = Vec::with_capacity(self.members.len());
         for info in &self.members {
             members.push(Addr::parse(&info.addr)?);
+            joined.push(info.since);
         }
         Ok(RingView {
             generation: self.generation,
             rank,
             world: members.len(),
             members,
+            joined,
         })
     }
 }
@@ -133,6 +161,8 @@ pub struct RingView {
     pub world: usize,
     /// Data-plane endpoints indexed by rank.
     pub members: Vec<Addr>,
+    /// Per-rank entry generation ([`MemberInfo::since`]), indexed by rank.
+    pub joined: Vec<u64>,
 }
 
 impl RingView {
@@ -145,42 +175,166 @@ impl RingView {
     pub fn left(&self) -> usize {
         (self.rank + self.world - 1) % self.world
     }
+
+    /// Members that entered the ring at or before `generation` — the
+    /// **warm** members, which share whatever iteration state existed at
+    /// that generation. Heals keep survivors in their old relative order
+    /// and append drained spares after them, so the warm members always
+    /// occupy the rank prefix `0..warm_count` and rank 0 is always warm.
+    /// Algorithms shard work over this count after a mid-iteration grow
+    /// (cold rejoiners relay collectives but own no shard until synced).
+    pub fn warm_count(&self, generation: u64) -> usize {
+        self.joined.iter().filter(|&&j| j <= generation).count()
+    }
+
+    /// The rank currently holding `endpoint`, if any — the way a cold
+    /// rejoiner turns an [`super::spare::OpDesc::root`] endpoint back into
+    /// a rank of its own (post-grow) generation.
+    pub fn rank_of_endpoint(&self, endpoint: &str) -> Option<usize> {
+        let addr = Addr::parse(endpoint).ok()?;
+        self.members.iter().position(|a| *a == addr)
+    }
 }
 
-/// The per-healed-generation resume barrier: every survivor reports its
-/// completed-chunk count; the minimum is released once all have reported.
+/// The per-healed-generation resume barrier: every **participating**
+/// survivor reports its completed-chunk count plus the op-sequence number
+/// of the collective it was driving; the barrier releases once every
+/// required rank has reported. The release value is op-aware: it is the
+/// minimum completed count **among the reports of the most-advanced op**
+/// — a member that had already finished the superseded op (a membership
+/// bump landing exactly on a collective boundary, e.g. an explicit grow)
+/// reports the older op as fully complete and is told to move on rather
+/// than rolled back into a collective its peers have left behind.
 struct ResumeState {
-    expected: usize,
-    reports: HashMap<u64, u64>,
+    /// Ranks whose report the barrier waits for: the members that were
+    /// already participating in collectives when the generation sealed.
+    /// Freshly drained spares are *observers* — they adopt through
+    /// [`Rendezvous::resume_observe`] instead of reporting.
+    required: Vec<u64>,
+    /// rank → (completed chunks, op-sequence number of the reporter's
+    /// in-flight collective).
+    reports: HashMap<u64, (u64, u64)>,
+    /// The descriptor of the most-advanced reported op.
+    op: Option<OpDesc>,
+}
+
+/// `(resume_op_seq, resume_chunk)` once `st` is complete: the
+/// most-advanced reported op and the minimum completed count among the
+/// members driving *that* op.
+fn barrier_result(st: &ResumeState) -> Option<(u64, u64)> {
+    if st.required.iter().any(|r| !st.reports.contains_key(r)) {
+        return None;
+    }
+    let max_seq = st.reports.values().map(|&(_, s)| s).max()?;
+    let min = st
+        .reports
+        .values()
+        .filter(|&&(_, s)| s == max_seq)
+        .map(|&(c, _)| c)
+        .min()?;
+    Some((max_seq, min))
+}
+
+/// One ranked seat of a generation: the endpoint, the generation at
+/// which the member entered the lineage (see [`MemberInfo::since`]), and
+/// whether it is still an **observer** — a drained spare that has not yet
+/// adopted the in-flight op through `resume_observe`. Observers are
+/// excluded from resume barriers' required-reporter sets (they have
+/// nothing to report and would deadlock a barrier opened by a second
+/// membership change during their admission window).
+#[derive(Clone)]
+struct Seat {
+    addr: String,
+    since: u64,
+    observer: bool,
 }
 
 struct RvInner {
     world: usize,
     generation: u64,
     sealed: bool,
-    members: Vec<String>,
+    members: Vec<Seat>,
     /// `(generation, members)` of the last sealed generation, kept across a
     /// late-join bump (see [`Membership::last_sealed`]).
-    last_sealed: Option<(u64, Vec<String>)>,
+    last_sealed: Option<(u64, Vec<Seat>)>,
+    /// Standby members awaiting a heal or an explicit grow, in
+    /// registration order. Pending — never ranked until drained.
+    spares: Vec<String>,
     /// Last heartbeat per data-plane endpoint. Keyed by endpoint — not by
     /// (generation, rank) — so a live member that has not yet noticed a
     /// heal (its view still names the old generation) keeps its liveness
-    /// protection while ranks renumber around it.
+    /// protection while ranks renumber around it. Spares heartbeat here
+    /// too while pending.
     heartbeats: HashMap<String, Instant>,
     /// A `report_dead` against a rank that heartbeated within this window
-    /// is rejected — protects live-but-slow members from eviction.
+    /// is rejected — protects live-but-slow members from eviction. The
+    /// same window decides whether a pending spare is still draftable.
     grace: Duration,
     /// Resume barriers for healed generations, keyed by generation.
     resume: HashMap<u64, ResumeState>,
 }
 
-fn member_infos(members: &[String]) -> Vec<MemberInfo> {
+impl RvInner {
+    /// Drop pending spares whose heartbeat went stale (died while
+    /// pending): excised from the table without a generation bump.
+    fn prune_spares(&mut self) {
+        let grace = self.grace;
+        let heartbeats = &self.heartbeats;
+        self.spares
+            .retain(|a| heartbeats.get(a).is_some_and(|t| t.elapsed() < grace));
+    }
+
+    /// Take every live pending spare (pruning the stale ones first).
+    fn drain_live_spares(&mut self) -> Vec<String> {
+        self.prune_spares();
+        std::mem::take(&mut self.spares)
+    }
+
+    /// Seal the (already bumped) current generation after a membership
+    /// change: surviving seats keep their order, live pending spares
+    /// drain in after them as observers, and a resume barrier opens
+    /// requiring a report from every member that was already
+    /// participating in collectives. Shared by the heal
+    /// ([`Rendezvous::report_dead`]) and the explicit
+    /// [`Rendezvous::grow`], so the two seal paths cannot drift.
+    fn seal_grown(&mut self) {
+        let sealed_gen = self.generation;
+        let required: Vec<u64> = self
+            .members
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.observer)
+            .map(|(i, _)| i as u64)
+            .collect();
+        for addr in self.drain_live_spares() {
+            self.members.push(Seat {
+                addr,
+                since: sealed_gen,
+                observer: true,
+            });
+        }
+        self.sealed = true;
+        self.world = self.members.len();
+        self.resume.retain(|g, _| g + 8 > sealed_gen);
+        self.resume.insert(
+            sealed_gen,
+            ResumeState {
+                required,
+                reports: HashMap::new(),
+                op: None,
+            },
+        );
+    }
+}
+
+fn member_infos(members: &[Seat]) -> Vec<MemberInfo> {
     members
         .iter()
         .enumerate()
-        .map(|(i, a)| MemberInfo {
+        .map(|(i, s)| MemberInfo {
             rank: i as u64,
-            addr: a.clone(),
+            addr: s.addr.clone(),
+            since: s.since,
         })
         .collect()
 }
@@ -204,6 +358,7 @@ impl Rendezvous {
                 sealed: false,
                 members: Vec::new(),
                 last_sealed: None,
+                spares: Vec::new(),
                 heartbeats: HashMap::new(),
                 grace: Duration::from_millis(150),
                 resume: HashMap::new(),
@@ -253,7 +408,12 @@ impl Rendezvous {
             // heartbeats are endpoint-keyed and deliberately survive the
             // bump: the archived generation's members are still live.
         }
-        inner.members.push(data_addr.to_string());
+        let since = inner.generation;
+        inner.members.push(Seat {
+            addr: data_addr.to_string(),
+            since,
+            observer: false,
+        });
         let rank = (inner.members.len() - 1) as u64;
         if inner.members.len() >= inner.world {
             inner.sealed = true;
@@ -292,7 +452,10 @@ impl Rendezvous {
             // A departure invalidates old rings outright — no archived
             // snapshot may resurrect a generation missing a member.
             inner.last_sealed = None;
-            inner.heartbeats.clear();
+            // Pending spares outlive the departure (they were never part
+            // of the ring); keep their liveness records too.
+            let spares = inner.spares.clone();
+            inner.heartbeats.retain(|a, _| spares.contains(a));
             drop(inner);
             self.changed.notify_all();
         }
@@ -307,7 +470,8 @@ impl Rendezvous {
         inner.sealed = false;
         inner.members.clear();
         inner.last_sealed = None;
-        inner.heartbeats.clear();
+        let spares = inner.spares.clone();
+        inner.heartbeats.retain(|a, _| spares.contains(a));
         drop(inner);
         self.changed.notify_all();
     }
@@ -330,12 +494,14 @@ impl Rendezvous {
     /// Accuse `rank` of `generation` of being dead. Returns `true` when the
     /// accusation is accepted and the ring **healed**: the survivors of the
     /// sealed generation are re-ranked (densely, in their old rank order)
-    /// into a new generation that seals immediately, and a resume barrier
-    /// is opened for it (see [`Rendezvous::resume_poll`]). Returns `false`
-    /// when the report is stale (generation already moved on), the ring is
-    /// not sealed, the rank is out of range, or the accused heartbeated
-    /// within the grace window — in the last case the reporter should keep
-    /// waiting and retry.
+    /// into a new generation that seals immediately, any live pending
+    /// spares are **drained in after them** (auto-grow — stamped with the
+    /// healed generation, see [`MemberInfo::since`]), and a resume barrier
+    /// is opened for the survivors (see [`Rendezvous::resume_poll`]).
+    /// Returns `false` when the report is stale (generation already moved
+    /// on), the ring is not sealed, the rank is out of range, or the
+    /// accused heartbeated within the grace window — in the last case the
+    /// reporter should keep waiting and retry.
     pub fn report_dead(&self, generation: u64, rank: u64) -> bool {
         let mut inner = self.inner.lock().unwrap();
         if inner.generation != generation || !inner.sealed {
@@ -344,7 +510,7 @@ impl Rendezvous {
         if rank as usize >= inner.members.len() {
             return false;
         }
-        if let Some(seen) = inner.heartbeats.get(&inner.members[rank as usize]) {
+        if let Some(seen) = inner.heartbeats.get(&inner.members[rank as usize].addr) {
             if seen.elapsed() < inner.grace {
                 return false; // alive by heartbeat — reject the accusation
             }
@@ -353,62 +519,175 @@ impl Rendezvous {
         inner.generation += 1;
         // The dead generation must not be resurrected from the archive.
         inner.last_sealed = None;
-        // Drop liveness records for endpoints no longer in the ring (the
-        // dead member's among them); survivors' records stay valid.
-        let live: Vec<String> = inner.members.clone();
-        inner.heartbeats.retain(|addr, _| live.contains(addr));
-        let expected = inner.members.len();
-        if expected == 0 {
-            // The sole member died: nothing survives to resume. The next
-            // generation forms from scratch (world unchanged).
+        if inner.members.is_empty() {
+            // The sole member died: nothing survives to resume (and no
+            // one a drained spare could sync state from). The next
+            // generation forms from scratch (world unchanged); spares
+            // stay pending.
             inner.sealed = false;
         } else {
-            inner.sealed = true;
-            inner.world = expected;
-            let healed = inner.generation;
-            inner.resume.retain(|g, _| g + 8 > healed);
-            inner.resume.insert(
-                healed,
-                ResumeState {
-                    expected,
-                    reports: HashMap::new(),
-                },
-            );
+            // Auto-grow: the healed generation seals with the survivors
+            // in the low ranks and every live pending spare appended.
+            // Only the participating survivors report into the resume
+            // barrier — rejoiners (this heal's and any still-observing
+            // earlier drainee's) adopt through `resume_observe`.
+            inner.seal_grown();
         }
+        // Drop liveness records for endpoints neither ranked nor pending
+        // (the dead member's among them); survivors' records stay valid.
+        let live: Vec<String> = inner
+            .members
+            .iter()
+            .map(|s| s.addr.clone())
+            .chain(inner.spares.iter().cloned())
+            .collect();
+        inner.heartbeats.retain(|addr, _| live.contains(addr));
         drop(inner);
         self.changed.notify_all();
         true
     }
 
-    /// The healed-generation resume barrier. Each survivor of `generation`
-    /// reports the number of collective chunks it had fully completed when
-    /// the failure hit; once every survivor has reported, everyone receives
-    /// the **minimum** — the chunk index the collective resumes from.
-    /// Returns `None` while reports are still outstanding (poll again) or
-    /// when `generation` has no open barrier. Re-reports from the same rank
-    /// overwrite idempotently.
-    pub fn resume_poll(&self, generation: u64, rank: u64, completed: u64) -> Option<u64> {
+    /// Register a standby member into the spare pool: pending, unranked,
+    /// and drafted into the next sealed generation — the next heal, or an
+    /// explicit [`Rendezvous::grow`]. The spare must keep heartbeating its
+    /// endpoint while pending; a spare silent past the grace window is
+    /// excised from the pool without any generation bump. Registering is
+    /// idempotent per endpoint and never disturbs the current generation.
+    /// Returns the current generation.
+    pub fn register_spare(&self, data_addr: &str) -> u64 {
         let mut inner = self.inner.lock().unwrap();
-        let st = inner.resume.get_mut(&generation)?;
-        st.reports.insert(rank, completed);
-        if st.reports.len() >= st.expected {
-            st.reports.values().min().copied()
-        } else {
-            None
+        if !inner.spares.iter().any(|a| a == data_addr)
+            && !inner.members.iter().any(|s| s.addr == data_addr)
+        {
+            inner.spares.push(data_addr.to_string());
         }
+        inner
+            .heartbeats
+            .insert(data_addr.to_string(), Instant::now());
+        inner.generation
     }
 
-    /// Ranks of `generation` that have not reported into its resume
-    /// barrier yet — `None` when the generation has no open barrier.
-    /// Lets barrier waiters accuse a member that died *between* the first
-    /// death and the barrier (a second simultaneous failure) instead of
-    /// waiting on a corpse forever.
+    /// Withdraw a pending spare (e.g. its admission wait timed out). A
+    /// no-op if the endpoint was already drained or never registered.
+    pub fn deregister_spare(&self, data_addr: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.spares.retain(|a| a != data_addr);
+        inner.heartbeats.remove(data_addr);
+    }
+
+    /// The live pending spares, in registration order. Prunes (excises)
+    /// spares whose heartbeat went stale — a spare dying while pending
+    /// never bumps the generation, it just vanishes from the pool.
+    pub fn spares(&self) -> Vec<String> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.prune_spares();
+        inner.spares.clone()
+    }
+
+    /// Explicitly grow the sealed generation `generation` by draining the
+    /// live pending spares into a new, immediately-sealed generation
+    /// (members keep their ranks, spares append after them). Opens a
+    /// resume barrier for the pre-grow members: their next collective
+    /// heals into the grown generation and reports `completed = 0`, so
+    /// the rejoiners adopt it from chunk 0 via the same min-barrier
+    /// machinery a failure heal uses. Returns `false` when the request is
+    /// stale, the generation is unsealed, or no live spare is pending.
+    ///
+    /// A **collective-boundary** operation: callers should be between
+    /// collectives (any member's next collective performs the adoption) —
+    /// typically rank 0 calls [`super::RingMember::request_grow`] between
+    /// iterations.
+    pub fn grow(&self, generation: u64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.generation != generation || !inner.sealed {
+            return false;
+        }
+        inner.prune_spares();
+        if inner.spares.is_empty() {
+            return false;
+        }
+        inner.generation += 1;
+        inner.last_sealed = None;
+        inner.seal_grown();
+        drop(inner);
+        self.changed.notify_all();
+        true
+    }
+
+    /// The healed-generation resume barrier. Each participating survivor
+    /// of `generation` reports the number of collective chunks it had
+    /// fully completed when the membership changed, plus the [`OpDesc`] of
+    /// the collective it was driving; once every required rank has
+    /// reported, everyone receives **`(resume_op_seq, resume_chunk)`** —
+    /// the most-advanced reported op and the minimum completed count among
+    /// the members driving it. A member whose own op sequence is behind
+    /// `resume_op_seq` learns that its collective was superseded at a
+    /// boundary (it must be locally complete — see
+    /// `RingMember::allreduce_sum`'s boundary handling) instead of being
+    /// rolled back into an op its peers have already left. Returns `None`
+    /// while reports are outstanding (poll again) or when `generation` has
+    /// no open barrier. Re-reports from the same rank overwrite
+    /// idempotently.
+    pub fn resume_poll(
+        &self,
+        generation: u64,
+        rank: u64,
+        completed: u64,
+        op: &OpDesc,
+    ) -> Option<(u64, u64)> {
+        let mut inner = self.inner.lock().unwrap();
+        let st = inner.resume.get_mut(&generation)?;
+        st.reports.insert(rank, (completed, op.op_seq));
+        let replace = match &st.op {
+            Some(cur) => op.op_seq > cur.op_seq,
+            None => true,
+        };
+        if replace {
+            st.op = Some(op.clone());
+        }
+        barrier_result(st)
+    }
+
+    /// Read `generation`'s resume barrier without reporting into it — the
+    /// drained spare's side of the handshake. `rank` is the observer's own
+    /// rank. Returns the resume chunk and the most-advanced collective's
+    /// [`OpDesc`] once every required survivor has reported; `None` while
+    /// the barrier is still forming, when the generation has no open
+    /// barrier, or when the generation has already been superseded (the
+    /// observer must re-sync and observe the *current* generation's
+    /// barrier instead — adopting a superseded op would desynchronize
+    /// it). A successful observe also **promotes the observer to a
+    /// participant**: it now holds the op to adopt, so any later heal's
+    /// barrier must require its report.
+    pub fn resume_observe(&self, generation: u64, rank: u64) -> Option<(u64, OpDesc)> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.generation != generation {
+            return None;
+        }
+        let (min, op) = {
+            let st = inner.resume.get(&generation)?;
+            let (_, min) = barrier_result(st)?;
+            (min, st.op.clone()?)
+        };
+        if let Some(seat) = inner.members.get_mut(rank as usize) {
+            seat.observer = false;
+        }
+        Some((min, op))
+    }
+
+    /// Required ranks of `generation` that have not reported into its
+    /// resume barrier yet — `None` when the generation has no open
+    /// barrier. Lets barrier waiters accuse a member that died *between*
+    /// the first death and the barrier (a second simultaneous failure)
+    /// instead of waiting on a corpse forever.
     pub fn resume_missing(&self, generation: u64) -> Option<Vec<u64>> {
         let inner = self.inner.lock().unwrap();
         let st = inner.resume.get(&generation)?;
         Some(
-            (0..st.expected as u64)
+            st.required
+                .iter()
                 .filter(|r| !st.reports.contains_key(r))
+                .copied()
                 .collect(),
         )
     }
@@ -489,13 +768,31 @@ impl Rendezvous {
                     Ok(wire::to_bytes(&rv.report_dead(generation, rank)))
                 }
                 tags::RESUME => {
-                    let (generation, rank, completed): (u64, u64, u64) =
+                    let (generation, rank, completed, op): (u64, u64, u64, OpDesc) =
                         wire::from_bytes(payload).map_err(|e| e.to_string())?;
-                    Ok(wire::to_bytes(&rv.resume_poll(generation, rank, completed)))
+                    Ok(wire::to_bytes(&rv.resume_poll(generation, rank, completed, &op)))
                 }
                 tags::RESUME_MISSING => {
                     let generation: u64 = wire::from_bytes(payload).map_err(|e| e.to_string())?;
                     Ok(wire::to_bytes(&rv.resume_missing(generation)))
+                }
+                tags::RESUME_OBSERVE => {
+                    let (generation, rank): (u64, u64) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.resume_observe(generation, rank)))
+                }
+                tags::REGISTER_SPARE => {
+                    let addr: String = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.register_spare(&addr)))
+                }
+                tags::DEREGISTER_SPARE => {
+                    let addr: String = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    rv.deregister_spare(&addr);
+                    Ok(Vec::new())
+                }
+                tags::GROW => {
+                    let generation: u64 = wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    Ok(wire::to_bytes(&rv.grow(generation)))
                 }
                 t => Err(format!("bad rendezvous rpc tag {t}")),
             }),
@@ -593,12 +890,60 @@ impl RendezvousClient {
 
     /// Poll the healed-generation resume barrier (see
     /// [`Rendezvous::resume_poll`]).
-    pub fn resume_poll(&self, generation: u64, rank: u64, completed: u64) -> Result<Option<u64>> {
+    pub fn resume_poll(
+        &self,
+        generation: u64,
+        rank: u64,
+        completed: u64,
+        op: &OpDesc,
+    ) -> Result<Option<(u64, u64)>> {
         match self {
-            RendezvousClient::Local(rv) => Ok(rv.resume_poll(generation, rank, completed)),
+            RendezvousClient::Local(rv) => Ok(rv.resume_poll(generation, rank, completed, op)),
             RendezvousClient::Remote(cli) => {
-                cli.call_typed(tags::RESUME, &(generation, rank, completed))
+                cli.call_typed(tags::RESUME, &(generation, rank, completed, op.clone()))
             }
+        }
+    }
+
+    /// Observe a resume barrier without reporting (see
+    /// [`Rendezvous::resume_observe`]).
+    pub fn resume_observe(&self, generation: u64, rank: u64) -> Result<Option<(u64, OpDesc)>> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.resume_observe(generation, rank)),
+            RendezvousClient::Remote(cli) => {
+                cli.call_typed(tags::RESUME_OBSERVE, &(generation, rank))
+            }
+        }
+    }
+
+    /// Enter the spare pool (see [`Rendezvous::register_spare`]).
+    pub fn register_spare(&self, data_addr: &str) -> Result<u64> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.register_spare(data_addr)),
+            RendezvousClient::Remote(cli) => {
+                cli.call_typed(tags::REGISTER_SPARE, &data_addr.to_string())
+            }
+        }
+    }
+
+    /// Withdraw from the spare pool (see [`Rendezvous::deregister_spare`]).
+    pub fn deregister_spare(&self, data_addr: &str) -> Result<()> {
+        match self {
+            RendezvousClient::Local(rv) => {
+                rv.deregister_spare(data_addr);
+                Ok(())
+            }
+            RendezvousClient::Remote(cli) => {
+                cli.call_typed(tags::DEREGISTER_SPARE, &data_addr.to_string())
+            }
+        }
+    }
+
+    /// Request an explicit grow (see [`Rendezvous::grow`]).
+    pub fn grow(&self, generation: u64) -> Result<bool> {
+        match self {
+            RendezvousClient::Local(rv) => Ok(rv.grow(generation)),
+            RendezvousClient::Remote(cli) => cli.call_typed(tags::GROW, &generation),
         }
     }
 
@@ -796,10 +1141,12 @@ mod tests {
                 MemberInfo {
                     rank: 0,
                     addr: "tcp://127.0.0.1:9000".into(),
+                    since: 0,
                 },
                 MemberInfo {
                     rank: 1,
                     addr: "inproc://x".into(),
+                    since: 3,
                 },
             ],
             last_sealed: Some((
@@ -807,6 +1154,7 @@ mod tests {
                 vec![MemberInfo {
                     rank: 0,
                     addr: "tcp://127.0.0.1:8000".into(),
+                    since: 1,
                 }],
             )),
         };
@@ -865,13 +1213,21 @@ mod tests {
         rv.register("inproc://c");
         std::thread::sleep(Duration::from_millis(5));
         assert!(rv.report_dead(0, 2));
+        let op = OpDesc {
+            op_seq: 2,
+            ..OpDesc::default()
+        };
         // Two survivors: barrier holds until both report, then min wins.
-        assert_eq!(rv.resume_poll(1, 0, 7), None);
-        assert_eq!(rv.resume_poll(1, 0, 7), None, "re-report is idempotent");
-        assert_eq!(rv.resume_poll(1, 1, 3), Some(3));
-        assert_eq!(rv.resume_poll(1, 0, 7), Some(3), "late re-poll still sees the min");
+        assert_eq!(rv.resume_poll(1, 0, 7, &op), None);
+        assert_eq!(rv.resume_poll(1, 0, 7, &op), None, "re-report is idempotent");
+        assert_eq!(rv.resume_poll(1, 1, 3, &op), Some((2, 3)));
+        assert_eq!(
+            rv.resume_poll(1, 0, 7, &op),
+            Some((2, 3)),
+            "late re-poll still sees the min"
+        );
         // No barrier for generations that never healed.
-        assert_eq!(rv.resume_poll(0, 0, 0), None);
+        assert_eq!(rv.resume_poll(0, 0, 0, &op), None);
     }
 
     #[test]
@@ -884,7 +1240,7 @@ mod tests {
         std::thread::sleep(Duration::from_millis(5));
         assert!(rv.report_dead(0, 0));
         assert_eq!(rv.resume_missing(1), Some(vec![0, 1]));
-        assert_eq!(rv.resume_poll(1, 1, 9), None);
+        assert_eq!(rv.resume_poll(1, 1, 9, &OpDesc::default()), None);
         assert_eq!(rv.resume_missing(1), Some(vec![0]));
         assert_eq!(rv.resume_missing(0), None, "no barrier for unhealed generations");
     }
@@ -900,7 +1256,19 @@ mod tests {
         cli.heartbeat("tcp://127.0.0.1:7101").unwrap();
         std::thread::sleep(Duration::from_millis(5));
         assert!(cli.report_dead(0, 1).unwrap());
-        assert_eq!(cli.resume_poll(1, 0, 4).unwrap(), Some(4));
+        let op = OpDesc {
+            op_seq: 5,
+            kind: 0,
+            elems: 12,
+            ..OpDesc::default()
+        };
+        assert_eq!(cli.resume_poll(1, 0, 4, &op).unwrap(), Some((5, 4)));
+        assert_eq!(cli.resume_observe(1, 0).unwrap(), Some((4, op)));
+        // Spare verbs over RPC: register, list through a grow, deregister.
+        assert_eq!(cli.register_spare("tcp://127.0.0.1:7103").unwrap(), 1);
+        assert!(cli.grow(1).unwrap());
+        assert_eq!(rv.membership().members.len(), 2);
+        cli.deregister_spare("tcp://127.0.0.1:7104").unwrap(); // no-op
     }
 
     #[test]

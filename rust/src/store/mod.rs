@@ -32,7 +32,27 @@
 //! [`crate::ring::RingMember::store_broadcast`] publishes a collective's
 //! payload into the store so post-heal and rejoining ring members
 //! cache-hit instead of re-streaming (the ES noise table path —
-//! [`crate::algo::es::EsRingNode::warm_noise_table_store`]).
+//! [`crate::algo::es::EsRingNode::warm_noise_table_store`]; the
+//! auto-grow rejoiner recovers the same blob as a cache hit through the
+//! post-grow state sync).
+//!
+//! # Examples
+//!
+//! ```
+//! use fiber::store::StoreNode;
+//!
+//! // Host a node (directory included) and pass a payload by reference.
+//! let node = StoreNode::host(16 << 20);
+//! let payload: Vec<f32> = (0..10_000).map(|i| i as f32 * 0.5).collect();
+//! let r = node.put(&payload).unwrap();
+//! assert_eq!(fiber::wire::to_bytes(&r).len(), 24, "a handle is 24 bytes");
+//! // Resolving through the owning node is a pure cache hit:
+//! let back: Vec<f32> = r.get_via(&node).unwrap();
+//! assert_eq!(back, payload);
+//! assert_eq!(node.transfers(), 0, "no peer transfer was needed");
+//! // Content addressing: an identical payload maps to the same id.
+//! assert_eq!(node.put(&payload).unwrap().id(), r.id());
+//! ```
 
 pub mod directory;
 pub mod local;

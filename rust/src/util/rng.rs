@@ -43,6 +43,19 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// The raw generator state, for checkpointing and state sync (a ring
+    /// rejoiner must continue the exact stream the survivors are on — see
+    /// [`crate::algo::es::EsRingNode::join_ring_as_spare`]).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from [`Rng::state`] — the continuation of that
+    /// exact stream.
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Next raw 64 bits (xoshiro256++).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {

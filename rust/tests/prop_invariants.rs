@@ -190,7 +190,7 @@ fn ring_generations_monotonic_and_ranks_dense_under_random_interleavings() {
         let mut endpoint_seq = 0u64;
         let mut last_generation = 0u64;
         for step in 0..300 {
-            match rng.below(10) {
+            match rng.below(11) {
                 0..=3 => {
                     rv.register(&format!("inproc://prop-{seed}-{endpoint_seq}"));
                     endpoint_seq += 1;
@@ -229,11 +229,34 @@ fn ring_generations_monotonic_and_ranks_dense_under_random_interleavings() {
                         rv.heartbeat(addr);
                     }
                 }
+                9 => {
+                    // Spare registration never disturbs the membership or
+                    // the generation — and under the zero grace window
+                    // every pending spare is immediately stale, so the
+                    // prune path runs constantly and heals must still
+                    // shrink by exactly one (stale spares are never
+                    // drafted).
+                    let before = rv.membership();
+                    rv.register_spare(&format!("inproc://prop-spare-{seed}-{endpoint_seq}"));
+                    endpoint_seq += 1;
+                    let after = rv.membership();
+                    assert_eq!(after.generation, before.generation);
+                    assert_eq!(after.members.len(), before.members.len());
+                    assert!(
+                        rv.spares().is_empty(),
+                        "zero grace: pending spares prune as stale (seed {seed} step {step})"
+                    );
+                }
                 _ => {
                     // Resume polls against arbitrary generations must never
                     // disturb membership state.
                     let g = rv.membership().generation;
-                    let _ = rv.resume_poll(g, rng.below(6) as u64, rng.below(100) as u64);
+                    let _ = rv.resume_poll(
+                        g,
+                        rng.below(6) as u64,
+                        rng.below(100) as u64,
+                        &fiber::ring::OpDesc::default(),
+                    );
                 }
             }
             let m = rv.membership();

@@ -3,7 +3,11 @@
 //! centralized combine, generation-bumping dynamic scaling, and the
 //! elastic-collectives chaos paths — kill one member mid-allreduce over
 //! both transports and verify the survivors heal, resume from completed
-//! chunks, and keep producing identical updates.
+//! chunks, and keep producing identical updates. The auto-grow acceptance
+//! tests add a spare to the chaos runs: kill → heal → the spare drains in
+//! → the collective resumes over the re-grown world → ES θ ends identical
+//! on every post-grow member, with the rejoiner recovering the noise
+//! table as a store cache hit (no extra transfers).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -13,6 +17,7 @@ use fiber::api::pool::Pool;
 use fiber::comms::Addr;
 use fiber::coordinator::scaling::{Autoscaler, AutoscalePolicy};
 use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
+use fiber::store::StoreNode;
 
 /// Run `world` ring members on threads, collecting each member's output.
 fn run_ring<T: Send + 'static>(
@@ -386,6 +391,232 @@ fn es_ring_training_survives_mid_training_kill_and_reshards() {
         survivors[0].3, survivors[1].3,
         "replicas must stay bitwise identical through the heal"
     );
+}
+
+/// Shared ES config for the auto-grow chaos runs (toy objective: fast,
+/// deterministic, exercises every collective the walker path uses).
+fn grow_cfg() -> EsConfig {
+    EsConfig {
+        pop: 12,
+        sigma: 0.1,
+        lr: 0.05,
+        table_size: 1 << 12,
+        eval_task: "es.eval_toy".into(),
+        ..Default::default()
+    }
+}
+
+/// One warm replica of the auto-grow chaos run: warms the table through
+/// the store, then trains `iters` iterations with rank `victim_rank`
+/// chaos-killed at `kill_iter`. Returns `None` for the victim.
+#[allow(clippy::type_complexity)]
+fn grow_member(
+    mut m: RingMember,
+    node: Arc<StoreNode>,
+    iters: usize,
+    victim_rank: usize,
+    kill_iter: usize,
+) -> Option<(usize, usize, u64, u64, Vec<f32>)> {
+    m.set_chunk_elems(4);
+    m.set_timeout(Duration::from_millis(400));
+    m.set_probe_interval(Duration::from_millis(10));
+    let mut es = EsRingNode::new(grow_cfg(), vec![0.1f32; 24]);
+    es.warm_noise_table_store(&mut m, &node).unwrap();
+    let victim = m.rank() == victim_rank;
+    for i in 0..iters {
+        if victim && i == kill_iter {
+            m.set_kill_after_chunk(Some(1));
+        }
+        match es.iterate(&mut m) {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(victim && is_chaos_killed(&e), "unexpected fault: {e:#}");
+                return None; // simulated crash: no leave()
+            }
+        }
+    }
+    Some((m.rank(), m.world(), m.generation(), m.heal_count(), es.theta))
+}
+
+/// The standby replica: waits in the spare pool, relays the interrupted
+/// collective once drafted, syncs state, and trains the remaining
+/// iterations as a full member.
+fn grow_spare(
+    m: RingMember,
+    node: Arc<StoreNode>,
+    iters: usize,
+) -> (usize, usize, u64, u64, Vec<f32>) {
+    let mut m = m;
+    m.set_timeout(Duration::from_millis(400));
+    m.set_chunk_elems(4);
+    let es = EsRingNode::new(grow_cfg(), vec![0.1f32; 24]);
+    let (mut es, mut m) = es.join_ring_as_spare(m, Some(&node)).unwrap();
+    for _ in es.iteration()..iters {
+        es.iterate(&mut m).unwrap();
+    }
+    (m.rank(), m.world(), m.generation(), m.heal_count(), es.theta)
+}
+
+/// Post-run checks shared by the inproc and TCP auto-grow tests.
+fn check_grow_outcome(mut members: Vec<(usize, usize, u64, u64, Vec<f32>)>, world: usize) {
+    members.sort_by_key(|s| s.0);
+    assert_eq!(
+        members.len(),
+        world,
+        "survivors + rejoiner must restore the original world size"
+    );
+    for (rank, w, generation, _heals, theta) in &members {
+        assert_eq!(*w, world, "rank {rank}: world must have grown back");
+        assert!(*generation >= 1, "healing/growing bumps the generation");
+        assert!(theta.iter().all(|t| t.is_finite()), "rank {rank}: θ not finite");
+    }
+    let reference = &members[0].4;
+    for (rank, _, _, _, theta) in &members[1..] {
+        assert_eq!(
+            theta, reference,
+            "rank {rank}: post-grow members must hold bitwise-identical θ \
+             (the rejoiner included)"
+        );
+    }
+    assert_eq!(
+        members.last().unwrap().0,
+        world - 1,
+        "the rejoiner takes the appended rank"
+    );
+}
+
+#[test]
+fn chaos_kill_with_spare_autogrows_and_converges_inproc() {
+    register_es_tasks();
+    let world = 3;
+    let iters = 4;
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    // One shared store node (thread backend): the warm broadcast is a
+    // header exchange plus cache hits, and the rejoiner's table recovery
+    // is a cache hit too — the transfer counter must never move.
+    let node = StoreNode::host(64 << 20);
+    let spare_rv = rv.clone();
+    let spare_node = node.clone();
+    let spare = std::thread::spawn(move || {
+        let m = RingMember::join_spare_inproc(&spare_rv, Duration::from_secs(20)).unwrap();
+        grow_spare(m, spare_node, iters)
+    });
+    while rv.spares().is_empty() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            let node = node.clone();
+            std::thread::spawn(move || {
+                let m = RingMember::join_inproc(&rv).unwrap();
+                grow_member(m, node, iters, 2, 1)
+            })
+        })
+        .collect();
+    let mut members: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    members.push(spare.join().unwrap());
+    check_grow_outcome(members, world);
+    assert_eq!(
+        node.transfers(),
+        0,
+        "shared node: warm-up and rejoin must both be cache hits — the \
+         noise table is never re-streamed"
+    );
+}
+
+#[test]
+fn chaos_kill_with_spare_autogrows_and_converges_tcp() {
+    register_es_tasks();
+    let world = 3;
+    let iters = 4;
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let srv = rv.serve_rpc("127.0.0.1:0").unwrap();
+    let addr = Addr::Tcp(srv.local_addr());
+    let node = StoreNode::host(64 << 20);
+    let spare_addr = addr.clone();
+    let spare_node = node.clone();
+    let spare = std::thread::spawn(move || {
+        let m = RingMember::join_spare_addr(&spare_addr, Duration::from_secs(20)).unwrap();
+        grow_spare(m, spare_node, iters)
+    });
+    while rv.spares().is_empty() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let transfers_before = node.transfers();
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let addr = addr.clone();
+            let node = node.clone();
+            std::thread::spawn(move || {
+                let m = RingMember::join_addr(&addr).unwrap();
+                grow_member(m, node, iters, 1, 1)
+            })
+        })
+        .collect();
+    let mut members: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    members.push(spare.join().unwrap());
+    check_grow_outcome(members, world);
+    assert_eq!(
+        node.transfers(),
+        transfers_before,
+        "rejoin over TCP endpoints must not re-stream the table either \
+         (shared node: pure cache hits)"
+    );
+}
+
+#[test]
+fn explicit_grow_drafts_spare_at_iteration_boundary() {
+    register_es_tasks();
+    let world = 2;
+    let iters = 3;
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let node = StoreNode::host(64 << 20);
+    let spare_rv = rv.clone();
+    let spare_node = node.clone();
+    let spare = std::thread::spawn(move || {
+        let m = RingMember::join_spare_inproc(&spare_rv, Duration::from_secs(20)).unwrap();
+        grow_spare(m, spare_node, iters)
+    });
+    while rv.spares().is_empty() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            let node = node.clone();
+            std::thread::spawn(move || {
+                let mut m = RingMember::join_inproc(&rv).unwrap();
+                m.set_chunk_elems(4);
+                m.set_timeout(Duration::from_millis(400));
+                m.set_probe_interval(Duration::from_millis(10));
+                let mut es = EsRingNode::new(grow_cfg(), vec![0.1f32; 24]);
+                es.warm_noise_table_store(&mut m, &node).unwrap();
+                for i in 0..iters {
+                    es.iterate(&mut m).unwrap();
+                    // Collective-boundary grow after the first iteration:
+                    // the next collective drafts the spare via the same
+                    // min-barrier machinery a failure heal uses.
+                    if i == 0 && m.rank() == 0 {
+                        assert!(m.request_grow().unwrap(), "a live spare must be drafted");
+                    }
+                }
+                (m.rank(), m.world(), m.generation(), m.heal_count(), es.theta)
+            })
+        })
+        .collect();
+    let mut members: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    members.push(spare.join().unwrap());
+    check_grow_outcome(members, world + 1);
 }
 
 #[test]
