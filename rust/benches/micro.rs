@@ -112,6 +112,7 @@ fn main() {
                         id: TaskId(i),
                         map_id: 0,
                         index: i,
+                        span: 0,
                         fn_name: String::new(),
                         payload: vec![],
                     },

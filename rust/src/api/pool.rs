@@ -128,6 +128,27 @@ impl<O: Decode> MapHandle<O> {
     pub fn ready(&self) -> bool {
         self.shared.0.lock().unwrap().done
     }
+
+    /// Block until the map finishes or `timeout` elapses; returns whether
+    /// it finished. Condvar-backed — callers multiplexing several handles
+    /// (e.g. [`crate::pop`]'s runner) sleep here instead of spin-polling,
+    /// and wake the moment the collector delivers the final result.
+    pub fn ready_timeout(&self, timeout: Duration) -> bool {
+        let (lock, cv) = &*self.shared;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = lock.lock().unwrap();
+        while !st.done {
+            let Some(left) = deadline.checked_duration_since(std::time::Instant::now()) else {
+                return false;
+            };
+            let (next, res) = cv.wait_timeout(st, left).unwrap();
+            st = next;
+            if res.timed_out() && !st.done {
+                return false;
+            }
+        }
+        true
+    }
 }
 
 /// Handle to an in-flight raw-bytes map (payloads already encoded by the
@@ -562,6 +583,18 @@ impl Pool {
         if enc.is_empty() {
             return Ok(map_id);
         }
+        // The dispatch span parents under the submitting scope (a PBT
+        // slice, a user thread) and its id rides every task envelope, so
+        // worker-side run spans — possibly in another process — chain back
+        // to this call site.
+        let dispatch = crate::trace::Span::begin("pool.dispatch")
+            .arg("map_id", map_id as i64)
+            .arg("tasks", enc.len() as i64);
+        let task_span = if dispatch.id() != 0 {
+            dispatch.id()
+        } else {
+            crate::trace::current_span()
+        };
         let mut tasks: Vec<Task> = Vec::new();
         if chunksize > 1 {
             let mut start = 0u64;
@@ -571,6 +604,7 @@ impl Pool {
                     id: TaskId::fresh(),
                     map_id,
                     index: start,
+                    span: task_span,
                     fn_name: CHUNK_FN.to_string(),
                     payload: wire::to_bytes(&chunk),
                 });
@@ -582,6 +616,7 @@ impl Pool {
                     id: TaskId::fresh(),
                     map_id,
                     index: i as u64,
+                    span: task_span,
                     fn_name: fn_name.to_string(),
                     payload,
                 });
@@ -774,7 +809,16 @@ fn worker_loop_inproc(
         }
         match server.fetch(wid, timeout) {
             FetchReply::Task(task) => {
-                let result = execute_registered(&task.fn_name, &task.payload);
+                // The run span parents under the span id the envelope
+                // carried from the submitting scope — the causal link from
+                // a map call to its execution site.
+                let run = crate::trace::Span::begin_child("pool.run", task.span)
+                    .arg("worker", wid.0 as i64)
+                    .arg("index", task.index as i64);
+                let result = crate::trace::with_span(run.id(), || {
+                    execute_registered(&task.fn_name, &task.payload)
+                });
+                drop(run);
                 server.put_result(task.id, result);
             }
             FetchReply::Wait => continue,
@@ -936,6 +980,10 @@ fn heal(shared: &Arc<PoolShared>) {
     for wid in failed {
         let requeued = shared.server.fail_worker(wid);
         log::warn!("worker {wid:?} failed; resubmitted {requeued} task(s)");
+        crate::trace::instant(
+            "pool.restart",
+            &[("worker", wid.0 as i64), ("requeued", requeued as i64)],
+        );
         if shared.stop.load(Ordering::SeqCst) || shared.server.is_closed() {
             continue;
         }

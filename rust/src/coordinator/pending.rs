@@ -101,6 +101,7 @@ mod tests {
             id: TaskId(id),
             map_id: 0,
             index: id,
+            span: 0,
             fn_name: "t".into(),
             payload: vec![],
         }

@@ -83,6 +83,9 @@ pub struct PoolServer {
     task_ready: Condvar,
     results_tx: Sender<ResultMsg>,
     results_rx: Receiver<ResultMsg>,
+    /// `pool.queue.depth` gauge, cached so queue mutations do not take the
+    /// metrics-registry lock.
+    queue_depth: Arc<crate::metrics::Gauge>,
 }
 
 impl Default for PoolServer {
@@ -104,6 +107,7 @@ impl PoolServer {
             task_ready: Condvar::new(),
             results_tx,
             results_rx,
+            queue_depth: crate::metrics::gauge("pool.queue.depth"),
         }
     }
 
@@ -111,6 +115,7 @@ impl PoolServer {
     pub fn submit(&self, task: Task) {
         let mut inner = self.inner.lock().unwrap();
         inner.queue.push_back(task);
+        self.queue_depth.set(inner.queue.len() as i64);
         drop(inner);
         self.task_ready.notify_one();
     }
@@ -124,6 +129,7 @@ impl PoolServer {
         for t in tasks.into_iter().rev() {
             inner.queue.push_front(t);
         }
+        self.queue_depth.set(inner.queue.len() as i64);
         drop(inner);
         self.task_ready.notify_all();
     }
@@ -138,6 +144,7 @@ impl PoolServer {
                 return FetchReply::Retire;
             }
             if let Some(task) = inner.queue.pop_front() {
+                self.queue_depth.set(inner.queue.len() as i64);
                 inner.pending.insert(worker, task.clone());
                 return FetchReply::Task(task);
             }
@@ -175,6 +182,7 @@ impl PoolServer {
         for t in tasks.into_iter().rev() {
             inner.queue.push_front(t);
         }
+        self.queue_depth.set(inner.queue.len() as i64);
         drop(inner);
         if n > 0 {
             self.task_ready.notify_all();
@@ -258,6 +266,7 @@ mod tests {
             id: TaskId(id),
             map_id: 1,
             index: id,
+            span: 0,
             fn_name: "f".into(),
             payload: vec![id as u8],
         }

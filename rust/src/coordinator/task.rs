@@ -34,6 +34,11 @@ pub struct Task {
     pub map_id: u64,
     /// Index of this task's result within its map call.
     pub index: u64,
+    /// Causal trace-span id of the submitting scope (0 = untraced). Rides
+    /// the envelope to the worker, where the task's run span parents under
+    /// it — how a PBT slice's span reaches its worker-side execution
+    /// across a process boundary ([`crate::trace`]).
+    pub span: u64,
     pub fn_name: String,
     pub payload: Vec<u8>,
 }
@@ -43,6 +48,7 @@ impl Encode for Task {
         self.id.0.encode(buf);
         self.map_id.encode(buf);
         self.index.encode(buf);
+        self.span.encode(buf);
         self.fn_name.encode(buf);
         self.payload.encode(buf);
     }
@@ -54,6 +60,7 @@ impl Decode for Task {
             id: TaskId(u64::decode(r)?),
             map_id: u64::decode(r)?,
             index: u64::decode(r)?,
+            span: u64::decode(r)?,
             fn_name: String::decode(r)?,
             payload: Vec::<u8>::decode(r)?,
         })
@@ -170,6 +177,7 @@ mod tests {
             id: TaskId(5),
             map_id: 2,
             index: 9,
+            span: 42,
             fn_name: "f".into(),
             payload: vec![1, 2, 3],
         };

@@ -89,7 +89,17 @@ pub fn run(args: Vec<String>) -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let opts = Opts::parse(args.get(1..).unwrap_or(&[]))?;
     register_all_tasks();
-    match cmd {
+    // `--trace <file>` works on every subcommand: enable the journal
+    // before dispatch, export after. Thread-backed runs (the default)
+    // record every layer in this one process; proc-backed workers keep
+    // tracing disabled in their own processes (their leader-side spans —
+    // dispatch, queue, collect — still land in the trace).
+    let trace_out = opts.get("trace").map(str::to_string);
+    if trace_out.is_some() {
+        fiber::trace::global().set_node_name("leader");
+        fiber::trace::set_enabled(true);
+    }
+    let result = match cmd {
         "worker" => worker(&opts),
         "ring" => ring::ring_demo(&opts),
         "ring-node" => ring::ring_node(&opts),
@@ -100,12 +110,45 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "ppo" => experiments::ppo(&opts),
         "pbt" => pbt::pbt(&opts),
         "scaling-sim" => experiments::scaling_sim(&opts),
+        "trace-view" => trace_view(&opts),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
         }
         other => bail!("unknown subcommand {other:?} (see `fiber-cli help`)"),
+    };
+    if let Some(path) = &trace_out {
+        fiber::trace::set_enabled(false);
+        write_trace(path)?;
     }
+    result
+}
+
+/// Drain the process journal and export it to `path`: replayable JSONL
+/// when the extension is `.jsonl`, Chrome trace-event JSON (Perfetto /
+/// `chrome://tracing`-loadable) otherwise. Prints the per-span-kind
+/// summary table either way.
+fn write_trace(path: &str) -> Result<()> {
+    let mut collector = fiber::trace::collect::Collector::new();
+    collector.add_global();
+    let dump = collector.drain();
+    if path.ends_with(".jsonl") {
+        fiber::trace::export::write_jsonl(path, &dump)?;
+    } else {
+        fiber::trace::export::write_chrome(path, &dump)?;
+    }
+    fiber::trace::export::summary(&dump).print();
+    println!("trace written to {path}");
+    Ok(())
+}
+
+/// Summarize a previously written trace file (either export format):
+/// per-span-kind count and latency quantiles.
+fn trace_view(opts: &Opts) -> Result<()> {
+    let path = opts.require("input")?;
+    let dump = fiber::trace::export::read_trace(path)?;
+    fiber::trace::export::summary(&dump).print();
+    Ok(())
 }
 
 /// The job-backed worker process loop (proc backend).
@@ -131,7 +174,16 @@ fn worker(opts: &Opts) -> Result<()> {
             wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("fetch decode: {e}"))?;
         match fetched {
             FetchReply::Task(task) => {
-                let result = execute_registered(&task.fn_name, &task.payload);
+                // Mirror of the in-process worker loop: the run span
+                // parents under the span id the envelope carried from the
+                // leader (recorded only if this process enables tracing).
+                let run = fiber::trace::Span::begin_child("pool.run", task.span)
+                    .arg("worker", worker_id as i64)
+                    .arg("index", task.index as i64);
+                let result = fiber::trace::with_span(run.id(), || {
+                    execute_registered(&task.fn_name, &task.payload)
+                });
+                drop(run);
                 cli.call(
                     tags::PUT,
                     &wire::to_bytes(&(worker_id, task.id.0, result)),
@@ -180,6 +232,13 @@ fn print_help() {
                         [--workers W] [--slices N] [--iters N] [--proc true]\n\
                         [--sync true] [--quantile Q] [--kill-rank R]\n\
            scaling-sim  E2/E3 virtual-time scaling curves (Fig 3b/3c)\n\
-           help         this message"
+           trace-view   summarize a recorded trace (per-span-kind count/p50/p99)\n\
+                        --input <file>\n\
+           help         this message\n\
+         \n\
+         GLOBAL OPTIONS:\n\
+           --trace FILE record causally-linked trace events and export on exit:\n\
+                        Chrome trace-event JSON (open in Perfetto), or replayable\n\
+                        JSONL when FILE ends in .jsonl (see docs/trace_schema.md)"
     );
 }

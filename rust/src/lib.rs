@@ -72,6 +72,19 @@
 //!   mid-slice heals through the pending table: the slice is requeued
 //!   with the same checkpoint reference, so no trial is ever lost.
 //!
+//! Cross-cutting the four blocks is the **observability layer**:
+//!
+//! * **Trace layer** ([`trace`]): causally-linked event tracing — every
+//!   Pool dispatch/run, ring chunk/heal/resume/adopt, store put/fetch and
+//!   pop slice/exploit records into a bounded per-node [`trace::Journal`]
+//!   (one relaxed-atomic check per site when disabled), span ids ride the
+//!   task envelopes so parent/child links cross machines, a leader-side
+//!   [`trace::collect::Collector`] drains journals (in-proc `Arc` or
+//!   [`comms::rpc`] with clock-offset alignment), and exporters render
+//!   Chrome trace-event JSON for Perfetto plus replayable JSONL — the
+//!   record half of future record/replay. `--trace <file>` on the CLI
+//!   drivers captures a run; `fiber-cli trace-view` summarizes one.
+//!
 //! Supporting substrates: [`comms`] (the Nanomsg-substitute message layer),
 //! [`wire`] (binary serialization), [`runtime`] (PJRT execution of
 //! AOT-compiled JAX/Pallas artifacts), [`envs`] (simulators), [`algo`]
@@ -103,6 +116,7 @@ pub mod pop;
 pub mod ring;
 pub mod runtime;
 pub mod store;
+pub mod trace;
 pub mod util;
 pub mod wire;
 

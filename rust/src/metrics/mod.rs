@@ -4,12 +4,22 @@
 //! — the observability a production coordinator needs.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use once_cell::sync::Lazy;
 
 use crate::util::Histogram;
+
+/// Recover a guard from a poisoned mutex. Metrics are observability, not
+/// invariants: a thread that panicked while holding a metrics lock left a
+/// histogram mid-update at worst, and that must not cascade a panic into
+/// every later `dump()` on an unrelated thread.
+fn unpoison<T>(
+    r: Result<MutexGuard<'_, T>, std::sync::PoisonError<MutexGuard<'_, T>>>,
+) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(|e| e.into_inner())
+}
 
 /// A monotonically-increasing counter.
 #[derive(Default)]
@@ -31,6 +41,31 @@ impl Counter {
     }
 }
 
+/// A settable instantaneous level (queue depth, in-flight slices): unlike
+/// a [`Counter`] it can go down.
+#[derive(Default)]
+pub struct Gauge {
+    value: AtomicI64,
+}
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: i64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, n: i64) {
+        self.value.fetch_sub(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
 /// A latency recorder (log-bucketed histogram under a mutex).
 #[derive(Default)]
 pub struct Latency {
@@ -39,7 +74,7 @@ pub struct Latency {
 
 impl Latency {
     pub fn record_ns(&self, ns: u64) {
-        self.hist.lock().unwrap().record_ns(ns);
+        unpoison(self.hist.lock()).record_ns(ns);
     }
 
     pub fn record(&self, d: std::time::Duration) {
@@ -47,7 +82,7 @@ impl Latency {
     }
 
     pub fn snapshot(&self) -> (u64, f64, u64, u64) {
-        let h = self.hist.lock().unwrap();
+        let h = unpoison(self.hist.lock());
         (h.count(), h.mean_ns(), h.quantile_ns(0.5), h.quantile_ns(0.99))
     }
 }
@@ -55,6 +90,7 @@ impl Latency {
 #[derive(Default)]
 struct Registry {
     counters: BTreeMap<String, Arc<Counter>>,
+    gauges: BTreeMap<String, Arc<Gauge>>,
     latencies: BTreeMap<String, Arc<Latency>>,
 }
 
@@ -62,10 +98,17 @@ static REGISTRY: Lazy<Mutex<Registry>> = Lazy::new(|| Mutex::new(Registry::defau
 
 /// Get-or-create a named counter.
 pub fn counter(name: &str) -> Arc<Counter> {
-    REGISTRY
-        .lock()
-        .unwrap()
+    unpoison(REGISTRY.lock())
         .counters
+        .entry(name.to_string())
+        .or_default()
+        .clone()
+}
+
+/// Get-or-create a named gauge.
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    unpoison(REGISTRY.lock())
+        .gauges
         .entry(name.to_string())
         .or_default()
         .clone()
@@ -73,9 +116,7 @@ pub fn counter(name: &str) -> Arc<Counter> {
 
 /// Get-or-create a named latency recorder.
 pub fn latency(name: &str) -> Arc<Latency> {
-    REGISTRY
-        .lock()
-        .unwrap()
+    unpoison(REGISTRY.lock())
         .latencies
         .entry(name.to_string())
         .or_default()
@@ -84,10 +125,13 @@ pub fn latency(name: &str) -> Arc<Latency> {
 
 /// Render all metrics as `name value` lines (Prometheus-flavoured).
 pub fn dump() -> String {
-    let reg = REGISTRY.lock().unwrap();
+    let reg = unpoison(REGISTRY.lock());
     let mut out = String::new();
     for (name, c) in &reg.counters {
         out += &format!("{name} {}\n", c.get());
+    }
+    for (name, g) in &reg.gauges {
+        out += &format!("{name} {}\n", g.get());
     }
     for (name, l) in &reg.latencies {
         let (n, mean, p50, p99) = l.snapshot();
@@ -127,5 +171,35 @@ mod tests {
         counter("test.m.dumpme").inc();
         let d = dump();
         assert!(d.contains("test.m.dumpme 1"));
+    }
+
+    #[test]
+    fn gauges_move_both_ways_and_share() {
+        let g = gauge("test.m.gauge");
+        g.set(10);
+        gauge("test.m.gauge").add(5);
+        g.sub(12);
+        assert_eq!(g.get(), 3);
+        assert!(dump().contains("test.m.gauge 3"));
+        g.set(-4);
+        assert_eq!(g.get(), -4, "gauges may go negative");
+    }
+
+    #[test]
+    fn poisoned_latency_lock_recovers() {
+        let l = latency("test.m.poison");
+        l.record_ns(1_000);
+        // Poison the histogram mutex by panicking while holding it.
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = l2.hist.lock().unwrap();
+            panic!("poison the metrics lock");
+        })
+        .join();
+        // Recording and snapshotting must keep working afterwards.
+        l.record_ns(2_000);
+        let (n, _, _, _) = l.snapshot();
+        assert_eq!(n, 2);
+        assert!(dump().contains("test.m.poison_count 2"));
     }
 }

@@ -85,6 +85,12 @@ impl Default for PbtConfig {
     }
 }
 
+/// How long the async runner's completion poll sleeps when nothing is
+/// ready: the upper bound on re-dispatch latency when the condvar wait
+/// misses (the wait itself wakes early on completion). The actual waits
+/// land in the `pop.poll.wait` latency metric.
+const POLL_INTERVAL: Duration = Duration::from_millis(5);
+
 /// How slices are scheduled.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DispatchMode {
@@ -115,6 +121,12 @@ pub struct PopulationRunner {
     table_ref: Option<ObjRef<Vec<f32>>>,
     exploits: usize,
     t0: Instant,
+    /// Detached per-slice trace spans: begun at dispatch, ended (recorded
+    /// with their full dispatch→fold duration) when the result folds in.
+    slice_spans: HashMap<TrialId, crate::trace::Span>,
+    /// Cached gauge of dispatched-but-unfolded slices (cached so the hot
+    /// dispatch path skips the metrics-registry lock).
+    inflight_gauge: Arc<crate::metrics::Gauge>,
 }
 
 impl PopulationRunner {
@@ -176,6 +188,8 @@ impl PopulationRunner {
             table_ref,
             exploits: 0,
             t0: Instant::now(),
+            slice_spans: HashMap::new(),
+            inflight_gauge: crate::metrics::gauge("pop.inflight"),
         })
     }
 
@@ -214,11 +228,22 @@ impl PopulationRunner {
                 .map(|(id, _)| *id)
                 .collect();
             if ready.is_empty() {
-                // Poll, don't block: MapHandle has no wait-any primitive.
-                // 1 ms bounds the re-dispatch latency well below any real
-                // slice duration; a pool-level completion channel would
-                // remove the poll entirely (ROADMAP follow-up).
-                std::thread::sleep(Duration::from_millis(1));
+                // Condvar-backed wait on one in-flight handle: wakes the
+                // moment that slice completes (completions of the others
+                // are caught by the next scan), or after the poll timeout.
+                // An event-driven wait-any over all handles would remove
+                // the timeout entirely (ROADMAP follow-up). The observed
+                // wait is recorded, so the re-dispatch latency this poll
+                // bounds is measurable, not guessed.
+                let t_wait = Instant::now();
+                match inflight.values().next() {
+                    Some(h) => {
+                        let _ = h.ready_timeout(POLL_INTERVAL);
+                    }
+                    None => std::thread::sleep(POLL_INTERVAL),
+                }
+                crate::metrics::latency("pop.poll.wait")
+                    .record_ns(t_wait.elapsed().as_nanos() as u64);
                 continue;
             }
             for id in ready {
@@ -299,13 +324,35 @@ impl PopulationRunner {
             table: self.table_ref,
             kill_worker,
         };
-        pool.map_async_chunked(&self.cfg.slice_task, std::iter::once(input), 1)
+        let trial_id = t.id;
+        // The slice span is detached — it begins here and ends on another
+        // turn of the loop, when complete() folds the result in. Wrapping
+        // the submission makes it the ambient parent, so the Pool's
+        // dispatch span (and through the task envelope, the worker-side
+        // run span and any store fetches the slice performs) all chain
+        // under this trial's slice.
+        let span = crate::trace::Span::begin_detached("pop.slice", crate::trace::current_span())
+            .arg("trial", trial_id.0 as i64)
+            .arg("slice", self.trials[idx].slices_done as i64);
+        let t_dispatch = Instant::now();
+        let handle = crate::trace::with_span(span.id(), || {
+            pool.map_async_chunked(&self.cfg.slice_task, std::iter::once(input), 1)
+        })?;
+        crate::metrics::latency("pop.dispatch.latency")
+            .record_ns(t_dispatch.elapsed().as_nanos() as u64);
+        self.slice_spans.insert(trial_id, span);
+        self.inflight_gauge.add(1);
+        Ok(handle)
     }
 
     /// Fold a finished slice into the trial: adopt the new checkpoint
     /// (replicated onto the leader's node so no worker crash can strand
     /// the lineage), update scores, and log the event.
     fn complete(&mut self, idx: usize, out: SliceOutput) -> Result<()> {
+        // Close this trial's detached slice span: its recorded duration is
+        // the full dispatch→fold latency, fed to `metrics::latency` too.
+        self.slice_spans.remove(&TrialId(out.trial));
+        self.inflight_gauge.sub(1);
         // Replicate onto the leader's node and take the leader's own
         // reference. The producer's handoff reference stays until a later
         // slice resumes from this checkpoint (the worker-side ledger —
@@ -407,7 +454,21 @@ impl PopulationRunner {
             best_so_far: best,
             hparams: adopted,
         });
+        // Trace events carry the same lineage ids the Leaderboard logs,
+        // so a trace join on `trial`/`parent` lines up with the lineage.
+        crate::trace::instant(
+            "pop.exploit",
+            &[
+                ("trial", id.0 as i64),
+                ("parent", src_id.0 as i64),
+                ("slice", slice as i64),
+            ],
+        );
         self.trials[idx].hparams.perturb(&mut self.rng);
+        crate::trace::instant(
+            "pop.mutate",
+            &[("trial", id.0 as i64), ("slice", slice as i64)],
+        );
         self.board.record(LineageEvent {
             trial: id,
             slice,

@@ -608,7 +608,11 @@ impl RingMember {
     /// `false` when no live spare is pending or this member's view is
     /// already stale.
     pub fn request_grow(&self) -> Result<bool> {
-        self.rendezvous.grow(self.view.generation)
+        let grew = self.rendezvous.grow(self.view.generation)?;
+        if grew {
+            crate::trace::instant("ring.grow", &[("gen", self.view.generation as i64)]);
+        }
+        Ok(grew)
     }
 
     /// Describe the collective this member is currently driving, for the
@@ -642,6 +646,18 @@ impl RingMember {
             );
             let cold = self.cold_start.take().expect("checked above");
             self.op_seq = cold.op.op_seq;
+            // The adoption event names the interrupted op — the causal
+            // join between this rejoiner's timeline and the op it rode
+            // through the heal.
+            crate::trace::instant(
+                "ring.adopt",
+                &[
+                    ("op_seq", cold.op.op_seq as i64),
+                    ("kind", cold.op.kind as i64),
+                    ("resume_chunk", cold.resume_chunk as i64),
+                    ("note", cold.op.note as i64),
+                ],
+            );
             return Ok((cold.op.op_seq << 24, cold.resume_chunk as usize));
         }
         Ok((self.next_op(), 0))
@@ -664,6 +680,10 @@ impl RingMember {
             // and the first drive's heal drafts the spares in.)
             return Ok(());
         }
+        let _op_span = crate::trace::Span::begin("ring.allreduce")
+            .arg("elems", buf.len() as i64)
+            .arg("gen", self.view.generation as i64)
+            .arg("rank", self.view.rank as i64);
         let (op, resume_at) = self.begin_op(KIND_ALLREDUCE, buf.len())?;
         let chunks = chunk_ranges(buf.len(), self.chunk_elems);
         self.ensure_tag_capacity(chunks.len())?;
@@ -735,6 +755,10 @@ impl RingMember {
             return Ok(());
         }
         let root_addr = self.view.members[root].clone();
+        let _op_span = crate::trace::Span::begin("ring.broadcast")
+            .arg("elems", buf.len() as i64)
+            .arg("gen", self.view.generation as i64)
+            .arg("root", root as i64);
         let (op, resume_at) = self.begin_op(KIND_BROADCAST, buf.len())?;
         let chunks = chunk_ranges(buf.len(), self.chunk_elems);
         self.ensure_tag_capacity(chunks.len())?;
@@ -974,6 +998,14 @@ impl RingMember {
                 let tag = op | (run.chunk as u64 * spc + run.step as u64);
                 let payload = f32s_to_bytes(&buf[lo + slo..lo + shi]);
                 self.send_msg_healing(right, tag, payload)?;
+                crate::trace::instant(
+                    "ring.chunk.send",
+                    &[
+                        ("chunk", run.chunk as i64),
+                        ("step", run.step as i64),
+                        ("elems", (shi - slo) as i64),
+                    ],
+                );
             }
             // Receive half, oldest chunk first.
             for i in 0..active.len() {
@@ -996,8 +1028,18 @@ impl RingMember {
                         for (d, v) in dst.iter_mut().zip(&incoming) {
                             *d += *v;
                         }
+                        crate::trace::instant(
+                            "ring.chunk.reduce",
+                            &[("chunk", run.chunk as i64), ("step", run.step as i64)],
+                        );
                     }
-                    StepPhase::AllGather => dst.copy_from_slice(&incoming),
+                    StepPhase::AllGather => {
+                        dst.copy_from_slice(&incoming);
+                        crate::trace::instant(
+                            "ring.chunk.recv",
+                            &[("chunk", run.chunk as i64), ("step", run.step as i64)],
+                        );
+                    }
                 }
                 active[i].step += 1;
             }
@@ -1044,6 +1086,10 @@ impl RingMember {
             if rank == root {
                 let payload = f32s_to_bytes(&buf[lo..hi]);
                 self.send_msg_healing(right, tag, payload)?;
+                crate::trace::instant(
+                    "ring.chunk.send",
+                    &[("chunk", ci as i64), ("elems", (hi - lo) as i64)],
+                );
             } else {
                 let bytes = self.recv_data(left, tag, RecvMode::Heal)?;
                 let vals = bytes_to_f32s(&bytes)?;
@@ -1054,6 +1100,10 @@ impl RingMember {
                     hi - lo
                 );
                 buf[lo..hi].copy_from_slice(&vals);
+                crate::trace::instant(
+                    "ring.chunk.recv",
+                    &[("chunk", ci as i64), ("elems", (hi - lo) as i64)],
+                );
                 if right != root {
                     self.send_msg_healing(right, tag, bytes)?;
                 }
@@ -1136,6 +1186,14 @@ impl RingMember {
     /// not roll back). Loops if yet another member dies while the barrier
     /// is forming.
     fn heal_and_sync(&mut self, completed: u64, desc: &OpDesc) -> Result<(u64, u64)> {
+        // The heal span covers re-rendezvous + resume barrier; the resume
+        // event is recorded **under** it, so the trace shows which heal a
+        // resume belongs to even when several heals stack up.
+        let heal = crate::trace::Span::begin("ring.heal")
+            .arg("from_gen", self.view.generation as i64)
+            .arg("op_seq", desc.op_seq as i64)
+            .arg("completed", completed as i64);
+        let heal_id = heal.id();
         loop {
             let deadline = Instant::now() + self.timeout;
             let view = loop {
@@ -1177,6 +1235,15 @@ impl RingMember {
                     self.rendezvous
                         .resume_poll(new_gen, self.view.rank as u64, completed, desc)?
                 {
+                    crate::trace::instant_under(
+                        "ring.resume",
+                        heal_id,
+                        &[
+                            ("op_seq", resume.0 as i64),
+                            ("chunk", resume.1 as i64),
+                            ("gen", new_gen as i64),
+                        ],
+                    );
                     return Ok(resume);
                 }
                 if self.heartbeat()? > new_gen {

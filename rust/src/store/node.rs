@@ -50,6 +50,12 @@ pub const LOCAL_ONLY: &str = "local://unserved";
 
 static MARKER_SEQ: AtomicU64 = AtomicU64::new(1);
 
+/// Fold an [`ObjId`] into the i64 a trace arg carries (first 8 of its 16
+/// hash bytes — plenty to correlate events on one blob within a trace).
+fn trace_obj(id: ObjId) -> i64 {
+    i64::from_le_bytes(id.0[..8].try_into().expect("8 bytes"))
+}
+
 fn fresh_marker() -> String {
     format!(
         "{LOCAL_ONLY}-{}-{}",
@@ -192,6 +198,9 @@ impl StoreNode {
     /// identical bytes (content addressing).
     pub fn put_bytes(&self, bytes: &[u8]) -> Result<ObjId> {
         let id = self.local.insert(bytes);
+        let _put = crate::trace::Span::begin("store.put")
+            .arg("obj", trace_obj(id))
+            .arg("len", bytes.len() as i64);
         self.flush_evictions();
         let ep = self
             .endpoint()
@@ -209,6 +218,9 @@ impl StoreNode {
     /// must [`StoreNode::decref`] when the handoff is complete.
     pub fn put_bytes_held(&self, bytes: &[u8]) -> Result<ObjId> {
         let id = self.local.insert_held(bytes);
+        let _put = crate::trace::Span::begin("store.put")
+            .arg("obj", trace_obj(id))
+            .arg("len", bytes.len() as i64);
         self.flush_evictions();
         let ep = self
             .endpoint()
@@ -240,6 +252,7 @@ impl StoreNode {
             .endpoint()
             .unwrap_or_else(|| self.local_marker.clone());
         for id in evicted {
+            crate::trace::instant("store.evict", &[("obj", trace_obj(id))]);
             if let Err(e) = self.dir.unpublish(id, &ep) {
                 log::warn!("store: eager unpublish of evicted {id} failed: {e:#}");
             }
@@ -252,6 +265,10 @@ impl StoreNode {
     pub fn get_bytes(&self, id: ObjId) -> Result<Arc<Vec<u8>>> {
         if let Some(b) = self.local.get(id) {
             self.local_hits.fetch_add(1, Ordering::Relaxed);
+            crate::trace::instant(
+                "store.hit",
+                &[("obj", trace_obj(id)), ("len", b.len() as i64)],
+            );
             return Ok(b);
         }
         loop {
@@ -268,7 +285,11 @@ impl StoreNode {
             match flight {
                 None => {
                     // Flight leader: perform the one transfer.
-                    let res = self.fetch_remote(id);
+                    let fetch = crate::trace::Span::begin("store.fetch")
+                        .arg("obj", trace_obj(id));
+                    let res =
+                        crate::trace::with_span(fetch.id(), || self.fetch_remote(id));
+                    drop(fetch);
                     let f = self
                         .inflight
                         .lock()
@@ -283,7 +304,11 @@ impl StoreNode {
                     // resolution through the landed copy *is* a local hit
                     // — only the leader's transfer counts as a transfer.
                     self.dedup_waits.fetch_add(1, Ordering::Relaxed);
-                    f.wait()?;
+                    let waited = crate::trace::Span::begin("store.wait")
+                        .arg("obj", trace_obj(id));
+                    let outcome = f.wait();
+                    drop(waited);
+                    outcome?;
                     if let Some(b) = self.local.get(id) {
                         self.local_hits.fetch_add(1, Ordering::Relaxed);
                         return Ok(b);

@@ -1,0 +1,288 @@
+//! Leader-side aggregation: drain every node's [`Journal`] into one
+//! leader-clock timeline.
+//!
+//! Two source kinds, mirroring the Pool's two backends:
+//!
+//! * **Local** — an `Arc<Journal>` shared in-process (the thread backend
+//!   and the leader's own journal). Draining is a lock-and-take; clocks
+//!   trivially agree because there is only one.
+//! * **Remote** — a TCP node serving its journal via [`serve_journal`]
+//!   over [`crate::comms::rpc`]. Monotonic clocks of different processes
+//!   have unrelated epochs, so admission performs an NTP-style midpoint
+//!   probe: the leader notes its own clock `t0`, asks the remote for its
+//!   clock reading `r`, notes `t1` on reply, and estimates
+//!   `offset = (t0 + t1)/2 − r` — the remote's reading is assumed to
+//!   happen at the RPC midpoint. The probe repeats a few times and keeps
+//!   the minimum-RTT estimate (least queueing noise). Drained remote
+//!   timestamps are re-based by that offset.
+
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::wire;
+
+use super::{Journal, TraceEvent};
+
+/// RPC tags of the journal-drain protocol.
+pub mod tags {
+    /// Request: empty. Reply: `u64` — the node's journal clock, ns.
+    pub const CLOCK: u32 = 1;
+    /// Request: empty. Reply: `(String, Vec<TraceEvent>, u64)` — node
+    /// name, buffered events (journal is emptied), dropped count.
+    pub const DRAIN: u32 = 2;
+}
+
+/// Serve `journal` for remote collection. Bind with port 0 for an
+/// ephemeral port; hand `local_addr()` to the leader's
+/// [`Collector::add_remote`].
+pub fn serve_journal(journal: Arc<Journal>, bind: &str) -> Result<RpcServer> {
+    RpcServer::bind(
+        bind,
+        Arc::new(move |tag, _payload| match tag {
+            tags::CLOCK => Ok(wire::to_bytes(&journal.now_ns())),
+            tags::DRAIN => {
+                let (events, dropped) = journal.drain();
+                Ok(wire::to_bytes(&(journal.node_name(), events, dropped)))
+            }
+            other => Err(format!("unknown trace rpc tag {other}")),
+        }),
+    )
+}
+
+enum Source {
+    Local {
+        journal: Arc<Journal>,
+    },
+    Remote {
+        name: String,
+        cli: RpcClient,
+        /// Added to remote timestamps to express them on the reference
+        /// (leader) clock. Signed: the remote may have booted first.
+        offset_ns: i64,
+    },
+}
+
+/// Everything one collection pass produced: per-node events re-based onto
+/// the leader clock and merged in timestamp order, plus the total dropped
+/// count (the honesty figure every summary must carry).
+pub struct TraceDump {
+    /// `(node, event)` pairs, sorted by aligned `ts_ns`.
+    pub events: Vec<(String, TraceEvent)>,
+    pub dropped: u64,
+}
+
+impl TraceDump {
+    /// Events with a given name (span kind), in time order.
+    pub fn named(&self, name: &str) -> Vec<&TraceEvent> {
+        self.events
+            .iter()
+            .filter(|(_, e)| e.name == name)
+            .map(|(_, e)| e)
+            .collect()
+    }
+
+    /// The event that owns span id `id`, if collected.
+    pub fn span(&self, id: u64) -> Option<&TraceEvent> {
+        self.events.iter().map(|(_, e)| e).find(|e| e.span == id)
+    }
+}
+
+/// The leader-side drain: registered sources are polled by [`Collector::drain`].
+#[derive(Default)]
+pub struct Collector {
+    sources: Vec<Source>,
+    /// The clock every timestamp is re-based onto (the leader's own
+    /// journal, which is also usually one of the sources).
+    reference: Option<Arc<Journal>>,
+}
+
+impl Collector {
+    pub fn new() -> Collector {
+        Collector::default()
+    }
+
+    /// Add an in-process journal (Arc fast path — no copy until drain).
+    /// The first local journal becomes the reference clock.
+    pub fn add_local(&mut self, journal: Arc<Journal>) {
+        if self.reference.is_none() {
+            self.reference = Some(journal.clone());
+        }
+        self.sources.push(Source::Local { journal });
+    }
+
+    /// Convenience: add this process's global journal.
+    pub fn add_global(&mut self) {
+        self.add_local(super::global());
+    }
+
+    /// Connect to a remote [`serve_journal`] endpoint and estimate its
+    /// clock offset by RPC-midpoint probing.
+    pub fn add_remote(&mut self, addr: SocketAddr) -> Result<()> {
+        let reference = match &self.reference {
+            Some(j) => j.clone(),
+            None => {
+                let j = super::global();
+                self.reference = Some(j.clone());
+                j
+            }
+        };
+        let cli = RpcClient::connect(addr).context("trace collector connect")?;
+        let mut best_rtt = u64::MAX;
+        let mut offset_ns = 0i64;
+        for _ in 0..5 {
+            let t0 = reference.now_ns();
+            let reply = cli.call(tags::CLOCK, &[]).context("trace clock probe")?;
+            let t1 = reference.now_ns();
+            let remote: u64 =
+                wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("clock decode: {e}"))?;
+            let rtt = t1.saturating_sub(t0);
+            if rtt < best_rtt {
+                best_rtt = rtt;
+                let midpoint = (t0 / 2) + (t1 / 2);
+                offset_ns = midpoint as i64 - remote as i64;
+            }
+        }
+        let name = format!("{addr}");
+        self.sources.push(Source::Remote {
+            name,
+            cli,
+            offset_ns,
+        });
+        Ok(())
+    }
+
+    /// Number of registered sources.
+    pub fn sources(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Drain every source, align clocks, and merge into one timeline. A
+    /// remote that died since admission contributes nothing (its events
+    /// are lost with it — the trace reports what was observable).
+    pub fn drain(&mut self) -> TraceDump {
+        let mut out: Vec<(String, TraceEvent)> = Vec::new();
+        let mut dropped = 0u64;
+        for src in &self.sources {
+            match src {
+                Source::Local { journal } => {
+                    let (events, d) = journal.drain();
+                    let node = journal.node_name();
+                    dropped += d;
+                    out.extend(events.into_iter().map(|e| (node.clone(), e)));
+                }
+                Source::Remote {
+                    name,
+                    cli,
+                    offset_ns,
+                } => {
+                    let Ok(reply) = cli.call(tags::DRAIN, &[]) else {
+                        continue;
+                    };
+                    let Ok((node, events, d)) =
+                        wire::from_bytes::<(String, Vec<TraceEvent>, u64)>(&reply)
+                    else {
+                        continue;
+                    };
+                    dropped += d;
+                    let node = if node.is_empty() { name.clone() } else { node };
+                    out.extend(events.into_iter().map(|mut e| {
+                        e.ts_ns = (e.ts_ns as i64).saturating_add(*offset_ns).max(0) as u64;
+                        (node.clone(), e)
+                    }));
+                }
+            }
+        }
+        out.sort_by_key(|(_, e)| e.ts_ns);
+        TraceDump {
+            events: out,
+            dropped,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(ts: u64, span: u64, name: &str) -> TraceEvent {
+        TraceEvent {
+            ts_ns: ts,
+            dur_ns: 10,
+            span,
+            parent: 0,
+            tid: 1,
+            name: name.into(),
+            args: vec![],
+        }
+    }
+
+    #[test]
+    fn local_drain_merges_in_time_order() {
+        let a = Journal::with_capacity(16);
+        let b = Journal::with_capacity(16);
+        a.set_node_name("a");
+        b.set_node_name("b");
+        a.record(ev(50, 1, "x"));
+        b.record(ev(20, 2, "y"));
+        let mut c = Collector::new();
+        c.add_local(a);
+        c.add_local(b);
+        let dump = c.drain();
+        assert_eq!(dump.events.len(), 2);
+        assert_eq!(dump.events[0].0, "b");
+        assert_eq!(dump.events[1].0, "a");
+        assert_eq!(dump.dropped, 0);
+        assert_eq!(dump.named("x").len(), 1);
+        assert!(dump.span(2).is_some());
+    }
+
+    #[test]
+    fn remote_drain_aligns_clocks() {
+        // The reference journal and the "remote" journal are created at
+        // different instants, so their raw clocks disagree by however long
+        // the sleep below lasts; midpoint alignment must absorb it.
+        let reference = Journal::with_capacity(16);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        let remote = Journal::with_capacity(16);
+        remote.set_node_name("worker-1");
+        let srv = serve_journal(remote.clone(), "127.0.0.1:0").unwrap();
+
+        let mut c = Collector::new();
+        c.add_local(reference.clone());
+        c.add_remote(srv.local_addr()).unwrap();
+        assert_eq!(c.sources(), 2);
+
+        // Two "simultaneous" events, one on each clock.
+        reference.record(ev(reference.now_ns(), 1, "ref"));
+        remote.record(ev(remote.now_ns(), 2, "rem"));
+        let dump = c.drain();
+        assert_eq!(dump.events.len(), 2);
+        let ref_ts = dump.named("ref")[0].ts_ns as i64;
+        let rem_ts = dump.named("rem")[0].ts_ns as i64;
+        // Raw clocks differ by >= 30ms; aligned clocks must agree to well
+        // under that (loopback RTT noise, give it 10ms of slack).
+        assert!(
+            (ref_ts - rem_ts).abs() < 10_000_000,
+            "aligned skew {} ns",
+            ref_ts - rem_ts
+        );
+        assert_eq!(dump.named("rem")[0].span, 2);
+        assert!(dump.events.iter().any(|(n, _)| n == "worker-1"));
+    }
+
+    #[test]
+    fn dead_remote_is_skipped() {
+        let remote = Journal::with_capacity(16);
+        let srv = serve_journal(remote, "127.0.0.1:0").unwrap();
+        let mut c = Collector::new();
+        c.add_local(Journal::with_capacity(4));
+        c.add_remote(srv.local_addr()).unwrap();
+        drop(srv);
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let dump = c.drain();
+        assert_eq!(dump.events.len(), 0, "dead remote contributes nothing");
+    }
+}

@@ -1,0 +1,373 @@
+//! Trace exporters: Chrome trace-event JSON (Perfetto /
+//! `chrome://tracing`), replayable JSONL (`docs/trace_schema.md`), and the
+//! per-span-kind latency summary behind `fiber-cli trace-view`.
+//!
+//! The Chrome format is the *viewing* artifact; JSONL is the *replay*
+//! artifact — one self-contained event object per line, append-friendly
+//! and streamable, intended as the record side of the ROADMAP's
+//! trace-driven cluster-simulation item. Both carry the span/parent ids,
+//! so causality survives export and re-import.
+
+use anyhow::{Context, Result};
+
+use crate::benchkit::{Json, Table};
+use crate::util::Histogram;
+
+use super::collect::TraceDump;
+use super::TraceEvent;
+
+/// Stable small integer per node name (Chrome `pid`).
+fn node_ids(dump: &TraceDump) -> Vec<String> {
+    let mut nodes: Vec<String> = Vec::new();
+    for (node, _) in &dump.events {
+        if !nodes.contains(node) {
+            nodes.push(node.clone());
+        }
+    }
+    nodes
+}
+
+fn args_json(ev: &TraceEvent) -> Json {
+    let mut fields: Vec<(String, Json)> = vec![
+        ("span".into(), Json::num(ev.span as f64)),
+        ("parent".into(), Json::num(ev.parent as f64)),
+    ];
+    for (k, v) in &ev.args {
+        fields.push((k.clone(), Json::num(*v as f64)));
+    }
+    Json::Obj(fields)
+}
+
+/// Render a [`TraceDump`] as a Chrome trace-event JSON document:
+/// `{"traceEvents":[...]}` with complete (`"X"`) events for spans and
+/// instant (`"i"`) events for point events; one `pid` per node, one `tid`
+/// per recording thread, span/parent ids carried in `args`.
+pub fn chrome_json(dump: &TraceDump) -> Json {
+    let nodes = node_ids(dump);
+    let mut events: Vec<Json> = Vec::new();
+    // Metadata: name the process lanes after the nodes they came from.
+    for (pid, node) in nodes.iter().enumerate() {
+        events.push(Json::Obj(vec![
+            ("name".into(), Json::str("process_name")),
+            ("ph".into(), Json::str("M")),
+            ("pid".into(), Json::num(pid as f64)),
+            ("tid".into(), Json::num(0.0)),
+            (
+                "args".into(),
+                Json::Obj(vec![("name".into(), Json::str(node.clone()))]),
+            ),
+        ]));
+    }
+    for (node, ev) in &dump.events {
+        let pid = nodes.iter().position(|n| n == node).unwrap_or(0);
+        let mut fields: Vec<(String, Json)> = vec![
+            ("name".into(), Json::str(ev.name.clone())),
+            ("cat".into(), Json::str("fiber")),
+            (
+                "ph".into(),
+                Json::str(if ev.dur_ns == 0 { "i" } else { "X" }),
+            ),
+            // Chrome timestamps are microseconds (fractional ok).
+            ("ts".into(), Json::num(ev.ts_ns as f64 / 1000.0)),
+        ];
+        if ev.dur_ns == 0 {
+            // Instant scope: thread.
+            fields.push(("s".into(), Json::str("t")));
+        } else {
+            fields.push(("dur".into(), Json::num(ev.dur_ns as f64 / 1000.0)));
+        }
+        fields.push(("pid".into(), Json::num(pid as f64)));
+        fields.push(("tid".into(), Json::num(ev.tid as f64)));
+        fields.push(("args".into(), args_json(ev)));
+        events.push(Json::Obj(fields));
+    }
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(events)),
+        ("displayTimeUnit".into(), Json::str("ms")),
+        ("dropped".into(), Json::num(dump.dropped as f64)),
+    ])
+}
+
+/// Write the Chrome trace-event document to `path`.
+pub fn write_chrome(path: &str, dump: &TraceDump) -> Result<()> {
+    chrome_json(dump)
+        .write(path)
+        .with_context(|| format!("write trace {path}"))
+}
+
+fn jsonl_line(node: &str, ev: &TraceEvent) -> String {
+    let mut args: Vec<(String, Json)> = Vec::new();
+    for (k, v) in &ev.args {
+        args.push((k.clone(), Json::num(*v as f64)));
+    }
+    Json::Obj(vec![
+        ("node".into(), Json::str(node)),
+        ("ts_ns".into(), Json::num(ev.ts_ns as f64)),
+        ("dur_ns".into(), Json::num(ev.dur_ns as f64)),
+        ("span".into(), Json::num(ev.span as f64)),
+        ("parent".into(), Json::num(ev.parent as f64)),
+        ("tid".into(), Json::num(ev.tid as f64)),
+        ("name".into(), Json::str(ev.name.clone())),
+        ("args".into(), Json::Obj(args)),
+    ])
+    .render()
+}
+
+/// Write the replayable JSONL stream (one event object per line, time
+/// order; schema in `docs/trace_schema.md`).
+pub fn write_jsonl(path: &str, dump: &TraceDump) -> Result<()> {
+    let mut out = String::new();
+    for (node, ev) in &dump.events {
+        out.push_str(&jsonl_line(node, ev));
+        out.push('\n');
+    }
+    std::fs::write(path, out).with_context(|| format!("write trace {path}"))
+}
+
+fn num_u64(j: Option<&Json>) -> u64 {
+    match j {
+        Some(Json::Num(x)) if x.is_finite() && *x >= 0.0 => *x as u64,
+        _ => 0,
+    }
+}
+
+fn str_of(j: Option<&Json>) -> String {
+    match j {
+        Some(Json::Str(s)) => s.clone(),
+        _ => String::new(),
+    }
+}
+
+fn event_from_obj(obj: &Json, chrome: bool) -> Option<(String, TraceEvent)> {
+    let name = str_of(obj.get("name"));
+    if name.is_empty() {
+        return None;
+    }
+    let args: Vec<(String, i64)> = match obj.get("args") {
+        Some(Json::Obj(fields)) => fields
+            .iter()
+            .filter(|(k, _)| !chrome || (k != "span" && k != "parent"))
+            .filter_map(|(k, v)| match v {
+                Json::Num(x) if x.is_finite() => Some((k.clone(), *x as i64)),
+                _ => None,
+            })
+            .collect(),
+        _ => Vec::new(),
+    };
+    let (ts_ns, dur_ns, span, parent, node) = if chrome {
+        if str_of(obj.get("ph")) == "M" {
+            return None; // metadata, not an event
+        }
+        let a = obj.get("args");
+        (
+            (num_u64(obj.get("ts")) as f64 * 1000.0) as u64,
+            (num_u64(obj.get("dur")) as f64 * 1000.0) as u64,
+            num_u64(a.and_then(|a| a.get("span"))),
+            num_u64(a.and_then(|a| a.get("parent"))),
+            format!("pid-{}", num_u64(obj.get("pid"))),
+        )
+    } else {
+        (
+            num_u64(obj.get("ts_ns")),
+            num_u64(obj.get("dur_ns")),
+            num_u64(obj.get("span")),
+            num_u64(obj.get("parent")),
+            str_of(obj.get("node")),
+        )
+    };
+    Some((
+        node,
+        TraceEvent {
+            ts_ns,
+            dur_ns,
+            span,
+            parent,
+            tid: num_u64(obj.get("tid")) as u32,
+            name,
+            args,
+        },
+    ))
+}
+
+/// Load a trace file written by [`write_chrome`] or [`write_jsonl`] back
+/// into a [`TraceDump`] (format sniffed from the content). This is what
+/// `fiber-cli trace-view` summarizes, and what a future replay harness
+/// will consume.
+pub fn read_trace(path: &str) -> Result<TraceDump> {
+    let text = std::fs::read_to_string(path).with_context(|| format!("read trace {path}"))?;
+    let trimmed = text.trim_start();
+    let mut events: Vec<(String, TraceEvent)> = Vec::new();
+    let mut dropped = 0u64;
+    if trimmed.starts_with('{') && !trimmed.contains('\n') || trimmed.starts_with("{\"traceEvents\"") {
+        // Chrome document: one object with a traceEvents array.
+        let doc = Json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("trace json parse: {e}"))?;
+        dropped = num_u64(doc.get("dropped"));
+        if let Some(Json::Arr(items)) = doc.get("traceEvents") {
+            for item in items {
+                if let Some(pair) = event_from_obj(item, true) {
+                    events.push(pair);
+                }
+            }
+        }
+    } else {
+        // JSONL: one object per line.
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let obj =
+                Json::parse(line).map_err(|e| anyhow::anyhow!("trace jsonl parse: {e}"))?;
+            if let Some(pair) = event_from_obj(&obj, false) {
+                events.push(pair);
+            }
+        }
+    }
+    events.sort_by_key(|(_, e)| e.ts_ns);
+    Ok(TraceDump { events, dropped })
+}
+
+/// Per-span-kind latency summary: count, p50/p99/mean duration in µs
+/// (instants report count only). Rows sorted by name.
+pub fn summary(dump: &TraceDump) -> Table {
+    let mut kinds: Vec<(String, u64, Histogram)> = Vec::new();
+    for (_, ev) in &dump.events {
+        let entry = match kinds.iter_mut().find(|(n, _, _)| *n == ev.name) {
+            Some(e) => e,
+            None => {
+                kinds.push((ev.name.clone(), 0, Histogram::new()));
+                kinds.last_mut().unwrap()
+            }
+        };
+        entry.1 += 1;
+        if ev.dur_ns > 0 {
+            entry.2.record_ns(ev.dur_ns);
+        }
+    }
+    kinds.sort_by(|a, b| a.0.cmp(&b.0));
+    let mut t = Table::new(
+        format!(
+            "trace summary — {} events, {} dropped",
+            dump.events.len(),
+            dump.dropped
+        ),
+        "span kind",
+        vec![
+            "count".into(),
+            "p50 µs".into(),
+            "p99 µs".into(),
+            "mean µs".into(),
+        ],
+    );
+    t.unit = "";
+    for (name, count, hist) in &kinds {
+        let spans = hist.count() > 0;
+        t.add_row(
+            name.clone(),
+            vec![
+                Some(*count as f64),
+                spans.then(|| hist.quantile_ns(0.5) as f64 / 1000.0),
+                spans.then(|| hist.quantile_ns(0.99) as f64 / 1000.0),
+                spans.then(|| hist.mean_ns() / 1000.0),
+            ],
+        );
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dump() -> TraceDump {
+        let mk = |ts, dur, span, parent, name: &str, args: Vec<(String, i64)>| TraceEvent {
+            ts_ns: ts,
+            dur_ns: dur,
+            span,
+            parent,
+            tid: 1,
+            name: name.into(),
+            args,
+        };
+        TraceDump {
+            events: vec![
+                (
+                    "leader".into(),
+                    mk(1000, 5000, 2, 0, "ring.allreduce", vec![("gen".into(), 1)]),
+                ),
+                ("leader".into(), mk(2000, 0, 3, 2, "ring.resume", vec![])),
+                (
+                    "worker".into(),
+                    mk(2500, 800, 4, 2, "store.fetch", vec![("bytes".into(), 64)]),
+                ),
+            ],
+            dropped: 7,
+        }
+    }
+
+    #[test]
+    fn chrome_json_is_valid_and_typed() {
+        let d = dump();
+        let doc = chrome_json(&d);
+        let text = doc.render();
+        let back = Json::parse(&text).expect("chrome trace must be valid JSON");
+        let evs = back.get("traceEvents").expect("traceEvents array");
+        // 2 process_name metadata records + 3 events.
+        assert!(matches!(evs, Json::Arr(v) if v.len() == 5));
+        // The span event is a complete ("X") event with µs units.
+        let x = evs.at(2).unwrap();
+        assert!(matches!(x.get("ph"), Some(Json::Str(s)) if s == "X"));
+        assert!(matches!(x.get("ts"), Some(Json::Num(v)) if *v == 1.0));
+        assert!(matches!(x.get("dur"), Some(Json::Num(v)) if *v == 5.0));
+        // The instant keeps its parent link in args.
+        let i = evs.at(3).unwrap();
+        assert!(matches!(i.get("ph"), Some(Json::Str(s)) if s == "i"));
+        assert!(
+            matches!(i.get("args").and_then(|a| a.get("parent")), Some(Json::Num(v)) if *v == 2.0)
+        );
+        assert!(matches!(back.get("dropped"), Some(Json::Num(v)) if *v == 7.0));
+    }
+
+    #[test]
+    fn jsonl_roundtrips_through_read_trace() {
+        let d = dump();
+        let path = std::env::temp_dir().join("fiber_trace_test.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        write_jsonl(&path, &d).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.events.len(), 3);
+        assert_eq!(back.events[0].0, "leader");
+        assert_eq!(back.events[2].1.name, "store.fetch");
+        assert_eq!(back.events[2].1.parent, 2);
+        assert_eq!(back.events[2].1.arg("bytes"), Some(64));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chrome_roundtrips_through_read_trace() {
+        let d = dump();
+        let path = std::env::temp_dir().join("fiber_trace_test.json");
+        let path = path.to_str().unwrap().to_string();
+        write_chrome(&path, &d).unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.events.len(), 3, "metadata records are not events");
+        assert_eq!(back.dropped, 7);
+        let heal = back
+            .events
+            .iter()
+            .find(|(_, e)| e.name == "ring.resume")
+            .unwrap();
+        assert_eq!(heal.1.parent, 2, "causal links survive chrome export");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn summary_counts_and_quantiles() {
+        let t = summary(&dump());
+        let s = t.render();
+        assert!(s.contains("ring.allreduce"), "{s}");
+        assert!(s.contains("ring.resume"), "{s}");
+        assert!(s.contains("dropped"), "{s}");
+    }
+}

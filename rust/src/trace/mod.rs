@@ -1,0 +1,532 @@
+//! `fiber::trace` — causally-linked event tracing across the four building
+//! blocks (Pool, ring, store, pop).
+//!
+//! The [`metrics`](crate::metrics) registry answers *how much* (counts,
+//! latency quantiles); this module answers *what happened, in what order,
+//! and because of what*. Every instrumented site records a [`TraceEvent`]
+//! into a per-node bounded [`Journal`]: a **span** (an interval with a
+//! duration) or an **instant** (a point event), each carrying a span id
+//! and a *parent* span id. Parent links are how causality crosses layers
+//! and machines: a PBT slice's span parents the worker-side run span
+//! (the id rides the Pool task envelope), the run span parents the store
+//! checkpoint fetch it triggers, and a ring heal span parents the resume
+//! event of the collective it interrupted.
+//!
+//! Design points, in the order the issue demands them:
+//!
+//! * **Near-zero cost when disabled.** Every site starts with a single
+//!   relaxed atomic load ([`enabled`]); when it is false no allocation,
+//!   no lock, and no timestamp is taken. Tracing is off by default and
+//!   switched on by `--trace` (or [`set_enabled`]).
+//! * **Lossy under pressure.** A [`Journal`] holds a bounded deque; when
+//!   full, new events are counted in an explicit `dropped` counter rather
+//!   than blocking the hot path or growing without bound.
+//! * **Aggregation.** A leader-side [`collect::Collector`] drains journals
+//!   — in-process via `Arc` sharing, remote over [`crate::comms::rpc`]
+//!   with RPC-midpoint clock-offset alignment — into one leader-clock
+//!   timeline.
+//! * **Export.** [`export`] renders Chrome trace-event JSON (loadable in
+//!   Perfetto / `chrome://tracing`) and a replayable JSONL stream
+//!   (documented in `docs/trace_schema.md`) — the record side of the
+//!   ROADMAP's trace-driven cluster-simulation item.
+//!
+//! Span durations are also fed into [`crate::metrics::latency`] under the
+//! span name, so `metrics::dump()` stays the cheap aggregate view of the
+//! same instrumentation.
+
+pub mod collect;
+pub mod export;
+
+use std::cell::{Cell, RefCell};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+use once_cell::sync::Lazy;
+
+use crate::wire::{self, Decode, Encode};
+
+/// Master switch. Off by default; every instrumented site checks this with
+/// one relaxed atomic load before doing any other work.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is tracing globally enabled? This is the per-site fast-path check.
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn tracing on or off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Span-id allocator. Seeded with (the low 20 bits of) the OS pid in bits
+/// 32..52 so ids from different worker processes cannot collide when a
+/// [`collect::Collector`] merges their journals, while every id stays
+/// below 2^53 — exactly representable as a JSON number, so span/parent
+/// links survive the Chrome/JSONL exporters bit-for-bit.
+static NEXT_SPAN: Lazy<AtomicU64> =
+    Lazy::new(|| AtomicU64::new((((std::process::id() as u64) & 0xF_FFFF) << 32) | 1));
+
+/// Allocate a fresh process-unique (and, via the pid bits, cluster-unique)
+/// span id. 0 is reserved for "no span".
+pub fn fresh_span_id() -> u64 {
+    NEXT_SPAN.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Compact per-thread lane ids for the exporters (Chrome `tid`). Assigned
+/// lazily on a thread's first recorded event.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static THREAD_TID: Cell<u32> = const { Cell::new(0) };
+    /// Stack of span ids active on this thread; the top is the causal
+    /// parent for any event recorded here ([`current_span`]).
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+fn thread_tid() -> u32 {
+    THREAD_TID.with(|t| {
+        let mut id = t.get();
+        if id == 0 {
+            id = NEXT_TID.fetch_add(1, Ordering::Relaxed) as u32;
+            t.set(id);
+        }
+        id
+    })
+}
+
+/// The span id events on this thread parent under (0 = no active span).
+pub fn current_span() -> u64 {
+    SPAN_STACK.with(|s| s.borrow().last().copied().unwrap_or(0))
+}
+
+fn stack_push(id: u64) {
+    SPAN_STACK.with(|s| s.borrow_mut().push(id));
+}
+
+/// Remove `id` from this thread's stack wherever it is (defensive: guards
+/// dropped out of order must not corrupt an unrelated span's parentage).
+fn stack_remove(id: u64) {
+    SPAN_STACK.with(|s| {
+        let mut v = s.borrow_mut();
+        if let Some(pos) = v.iter().rposition(|&x| x == id) {
+            v.remove(pos);
+        }
+    });
+}
+
+/// Run `f` with `span` as this thread's current span, so every event `f`
+/// records parents under it. This is how a causal id crosses an API
+/// boundary without threading it through every signature — e.g. the pop
+/// runner wraps its Pool submission so the task envelope captures the
+/// slice span.
+pub fn with_span<R>(span: u64, f: impl FnOnce() -> R) -> R {
+    if span == 0 {
+        return f();
+    }
+    stack_push(span);
+    let r = f();
+    stack_remove(span);
+    r
+}
+
+/// One recorded event. `dur_ns == 0` marks an instant (point event);
+/// otherwise the event is a completed span starting at `ts_ns`.
+///
+/// Timestamps are nanoseconds on the recording journal's monotonic clock
+/// (its creation `Instant`); the [`collect::Collector`] re-bases remote
+/// timestamps onto the leader's clock before export.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceEvent {
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    /// This event's own span id (instants get a fresh id too, so they are
+    /// addressable as causes).
+    pub span: u64,
+    /// Causal parent span id (0 = root).
+    pub parent: u64,
+    /// Recording thread's compact lane id (exporter `tid`).
+    pub tid: u32,
+    /// Span kind, dot-namespaced by layer: `pool.run`, `ring.heal`,
+    /// `store.fetch`, `pop.slice`, …
+    pub name: String,
+    /// Small typed payload: named integer arguments (ranks, generations,
+    /// op sequence numbers, byte counts, trial ids).
+    pub args: Vec<(String, i64)>,
+}
+
+impl TraceEvent {
+    /// Look up an argument by name.
+    pub fn arg(&self, name: &str) -> Option<i64> {
+        self.args.iter().find(|(k, _)| k == name).map(|(_, v)| *v)
+    }
+}
+
+impl Encode for TraceEvent {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.ts_ns.encode(buf);
+        self.dur_ns.encode(buf);
+        self.span.encode(buf);
+        self.parent.encode(buf);
+        self.tid.encode(buf);
+        self.name.encode(buf);
+        self.args.encode(buf);
+    }
+}
+
+impl Decode for TraceEvent {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(TraceEvent {
+            ts_ns: u64::decode(r)?,
+            dur_ns: u64::decode(r)?,
+            span: u64::decode(r)?,
+            parent: u64::decode(r)?,
+            tid: u32::decode(r)?,
+            name: String::decode(r)?,
+            args: Vec::<(String, i64)>::decode(r)?,
+        })
+    }
+}
+
+struct JournalInner {
+    events: VecDeque<TraceEvent>,
+    dropped: u64,
+}
+
+/// A bounded per-node event buffer. Recording is one mutex push; when the
+/// buffer is full the event is dropped and counted — the tracing layer
+/// must never stall a collective or a task to preserve its own data.
+pub struct Journal {
+    node: Mutex<String>,
+    epoch: Instant,
+    cap: usize,
+    inner: Mutex<JournalInner>,
+}
+
+fn unpoison<T>(r: Result<MutexGuard<'_, T>, std::sync::PoisonError<MutexGuard<'_, T>>>) -> MutexGuard<'_, T> {
+    r.unwrap_or_else(|e| e.into_inner())
+}
+
+impl Journal {
+    /// A journal holding at most `cap` events.
+    pub fn with_capacity(cap: usize) -> Arc<Journal> {
+        Arc::new(Journal {
+            node: Mutex::new(format!("pid-{}", std::process::id())),
+            epoch: Instant::now(),
+            cap: cap.max(1),
+            inner: Mutex::new(JournalInner {
+                events: VecDeque::new(),
+                dropped: 0,
+            }),
+        })
+    }
+
+    /// Nanoseconds since this journal's epoch (monotonic).
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// The node label stamped on drained events (defaults to `pid-<pid>`).
+    pub fn node_name(&self) -> String {
+        unpoison(self.node.lock()).clone()
+    }
+
+    pub fn set_node_name(&self, name: &str) {
+        *unpoison(self.node.lock()) = name.to_string();
+    }
+
+    /// Append an event; lossy when full.
+    pub fn record(&self, ev: TraceEvent) {
+        let mut inner = unpoison(self.inner.lock());
+        if inner.events.len() >= self.cap {
+            inner.dropped += 1;
+        } else {
+            inner.events.push_back(ev);
+        }
+    }
+
+    /// Events currently buffered.
+    pub fn len(&self) -> usize {
+        unpoison(self.inner.lock()).events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Events dropped because the buffer was full.
+    pub fn dropped(&self) -> u64 {
+        unpoison(self.inner.lock()).dropped
+    }
+
+    /// Take every buffered event (and the running dropped count). The
+    /// journal keeps recording; drain is incremental by construction.
+    pub fn drain(&self) -> (Vec<TraceEvent>, u64) {
+        let mut inner = unpoison(self.inner.lock());
+        (inner.events.drain(..).collect(), inner.dropped)
+    }
+}
+
+/// The process-global journal every instrumented site records into.
+/// Default capacity: 64Ki events (a chaos demo run is a few thousand).
+static GLOBAL: Lazy<Arc<Journal>> = Lazy::new(|| Journal::with_capacity(1 << 16));
+
+/// The process-global journal (what `--trace` drains and exports).
+pub fn global() -> Arc<Journal> {
+    GLOBAL.clone()
+}
+
+/// Record an instant (point) event under this thread's current span.
+pub fn instant(name: &'static str, args: &[(&str, i64)]) {
+    if !enabled() {
+        return;
+    }
+    instant_under(name, current_span(), args);
+}
+
+/// Record an instant event under an explicit parent span — how lifecycle
+/// events are pinned to a span that lives across scopes (a ring resume
+/// event under the heal span that made it necessary).
+pub fn instant_under(name: &'static str, parent: u64, args: &[(&str, i64)]) {
+    if !enabled() {
+        return;
+    }
+    let j = global();
+    j.record(TraceEvent {
+        ts_ns: j.now_ns(),
+        dur_ns: 0,
+        span: fresh_span_id(),
+        parent,
+        tid: thread_tid(),
+        name: name.to_string(),
+        args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+    });
+}
+
+/// A RAII span: created at a site, recorded (with duration) on drop. A
+/// disabled-trace span is inert — construction is the single relaxed
+/// atomic check, and drop is one branch on a plain field.
+pub struct Span {
+    id: u64, // 0 = tracing was disabled at begin
+    parent: u64,
+    start_ns: u64,
+    name: &'static str,
+    args: Vec<(String, i64)>,
+    on_stack: bool,
+}
+
+impl Span {
+    /// Begin a span parented under this thread's current span, and make it
+    /// the current span until dropped (on this thread).
+    pub fn begin(name: &'static str) -> Span {
+        if !enabled() {
+            return Span::inert(name);
+        }
+        Span::begin_child(name, current_span())
+    }
+
+    /// Begin a span under an explicit parent (a span id that arrived over
+    /// the wire, e.g. from a Pool task envelope). Current-span scoped like
+    /// [`Span::begin`].
+    pub fn begin_child(name: &'static str, parent: u64) -> Span {
+        if !enabled() {
+            return Span::inert(name);
+        }
+        let id = fresh_span_id();
+        stack_push(id);
+        Span {
+            id,
+            parent,
+            start_ns: global().now_ns(),
+            name,
+            args: Vec::new(),
+            on_stack: true,
+        }
+    }
+
+    /// Begin a span **not** tied to this thread's span stack, so it can be
+    /// stored in a table and ended on a different thread (a pop slice span
+    /// begun at dispatch and ended at completion).
+    pub fn begin_detached(name: &'static str, parent: u64) -> Span {
+        if !enabled() {
+            return Span::inert(name);
+        }
+        Span {
+            id: fresh_span_id(),
+            parent,
+            start_ns: global().now_ns(),
+            name,
+            args: Vec::new(),
+            on_stack: false,
+        }
+    }
+
+    fn inert(name: &'static str) -> Span {
+        Span {
+            id: 0,
+            parent: 0,
+            start_ns: 0,
+            name,
+            args: Vec::new(),
+            on_stack: false,
+        }
+    }
+
+    /// This span's id (0 when tracing was disabled at begin) — what gets
+    /// piggybacked on envelopes so remote work can parent under it.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Attach a named integer argument (builder style).
+    pub fn arg(mut self, key: &str, value: i64) -> Span {
+        self.add_arg(key, value);
+        self
+    }
+
+    /// Attach a named integer argument.
+    pub fn add_arg(&mut self, key: &str, value: i64) {
+        if self.id != 0 {
+            self.args.push((key.to_string(), value));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.id == 0 {
+            return;
+        }
+        if self.on_stack {
+            stack_remove(self.id);
+        }
+        let j = global();
+        let dur_ns = j.now_ns().saturating_sub(self.start_ns);
+        j.record(TraceEvent {
+            ts_ns: self.start_ns,
+            dur_ns: dur_ns.max(1), // a span is never an instant
+            span: self.id,
+            parent: self.parent,
+            tid: thread_tid(),
+            name: self.name.to_string(),
+            args: std::mem::take(&mut self.args),
+        });
+        // The aggregate view rides the same instrumentation.
+        crate::metrics::latency(self.name).record_ns(dur_ns.max(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Trace unit tests mutate the process-global enabled flag and
+    /// journal; serialize them so parallel test threads cannot interleave.
+    pub(crate) static TEST_GUARD: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn journal_is_bounded_and_counts_drops() {
+        let j = Journal::with_capacity(2);
+        for i in 0..5 {
+            j.record(TraceEvent {
+                ts_ns: i,
+                dur_ns: 0,
+                span: i,
+                parent: 0,
+                tid: 1,
+                name: "x".into(),
+                args: vec![],
+            });
+        }
+        assert_eq!(j.len(), 2);
+        assert_eq!(j.dropped(), 3);
+        let (evs, dropped) = j.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(dropped, 3);
+        assert!(j.is_empty());
+    }
+
+    #[test]
+    fn event_roundtrips_wire() {
+        let ev = TraceEvent {
+            ts_ns: 123,
+            dur_ns: 456,
+            span: 7,
+            parent: 3,
+            tid: 2,
+            name: "ring.heal".into(),
+            args: vec![("gen".into(), 4), ("rank".into(), -1)],
+        };
+        let bytes = wire::to_bytes(&ev);
+        let back: TraceEvent = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(ev, back);
+        assert_eq!(back.arg("gen"), Some(4));
+        assert_eq!(back.arg("nope"), None);
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let _g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        let before = global().len();
+        {
+            let _s = Span::begin("test.trace.off").arg("k", 1);
+            instant("test.trace.off.i", &[("a", 2)]);
+        }
+        assert_eq!(global().len(), before, "disabled tracing must not record");
+    }
+
+    #[test]
+    fn spans_nest_and_parent_causally() {
+        let _g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        global().drain();
+        let outer_id;
+        {
+            let outer = Span::begin("test.trace.outer");
+            outer_id = outer.id();
+            assert_ne!(outer_id, 0);
+            assert_eq!(current_span(), outer_id);
+            {
+                let inner = Span::begin("test.trace.inner");
+                assert_eq!(current_span(), inner.id());
+                instant("test.trace.mark", &[("v", 9)]);
+            }
+            assert_eq!(current_span(), outer_id);
+        }
+        set_enabled(false);
+        let (evs, _) = global().drain();
+        let outer = evs.iter().find(|e| e.name == "test.trace.outer").unwrap();
+        let inner = evs.iter().find(|e| e.name == "test.trace.inner").unwrap();
+        let mark = evs.iter().find(|e| e.name == "test.trace.mark").unwrap();
+        assert_eq!(inner.parent, outer.span);
+        assert_eq!(mark.parent, inner.span);
+        assert_eq!(outer.span, outer_id);
+        assert!(inner.dur_ns >= 1);
+        assert_eq!(mark.dur_ns, 0);
+    }
+
+    #[test]
+    fn with_span_sets_ambient_parent_and_detached_ends_anywhere() {
+        let _g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(true);
+        global().drain();
+        let detached = Span::begin_detached("test.trace.detached", 0);
+        let id = detached.id();
+        with_span(id, || {
+            instant("test.trace.under", &[]);
+            assert_eq!(current_span(), id);
+        });
+        assert_eq!(current_span(), 0);
+        // End the detached span on another thread.
+        std::thread::spawn(move || drop(detached)).join().unwrap();
+        set_enabled(false);
+        let (evs, _) = global().drain();
+        let under = evs.iter().find(|e| e.name == "test.trace.under").unwrap();
+        assert_eq!(under.parent, id);
+        assert!(evs.iter().any(|e| e.name == "test.trace.detached" && e.span == id));
+    }
+}

@@ -212,4 +212,113 @@ mod tests {
         assert!(p50 >= 500_000 / 2 && p50 <= 2_000_000, "p50 {p50}");
         assert!(h.mean_ns() > 400_000.0 && h.mean_ns() < 600_000.0);
     }
+
+    #[test]
+    fn histogram_empty_is_all_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), 0, "empty histogram quantile q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_single_record_brackets_every_quantile() {
+        let mut h = Histogram::new();
+        h.record_ns(1_500); // bucket [1024, 2048)
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.mean_ns(), 1_500.0);
+        // Every positive quantile of a single sample lands in its bucket:
+        // the reported value is the bucket's upper bound.
+        for q in [0.01, 0.5, 1.0] {
+            let v = h.quantile_ns(q);
+            assert_eq!(v, 2048, "q={q} must report the sample's bucket");
+        }
+        // q=0 targets rank ceil(0)=0, which the first (empty) bucket
+        // already satisfies — it reports the histogram floor, not the
+        // sample. Documented quirk of the log-bucket approximation.
+        assert_eq!(h.quantile_ns(0.0), 2);
+    }
+
+    #[test]
+    fn histogram_extreme_quantiles_bracket_extremes() {
+        let mut h = Histogram::new();
+        h.record_ns(0); // clamps to the >=1ns bucket
+        h.record_ns(1);
+        h.record_ns(1u64 << 30);
+        // q=0 still targets the first occupied bucket (ceil(0)=0 means the
+        // first bucket with any mass satisfies acc >= 0).
+        assert!(h.quantile_ns(0.0) <= 2);
+        // q=1 must bracket the maximum from above.
+        assert!(h.quantile_ns(1.0) >= (1u64 << 30), "p100 below the max");
+        assert!(h.quantile_ns(1.0) <= (1u64 << 31), "p100 bucket too wide");
+    }
+
+    /// Property: for any split point and any of several deterministic
+    /// value streams, merging per-shard Welford accumulators must agree
+    /// with the single-pass accumulator within fp tolerance — the
+    /// guarantee the trace summaries and bench tables lean on.
+    #[test]
+    fn welford_merge_property_matches_single_pass() {
+        // Deterministic pseudo-random stream (no rand crate offline).
+        let mut state = 0x2545F4914F6CDD1Du64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            // Mix of magnitudes, signs and repeats.
+            ((state % 2_000_003) as f64 - 1_000_000.0) / 97.0
+        };
+        for n in [1usize, 2, 3, 10, 257] {
+            let xs: Vec<f64> = (0..n).map(|_| next()).collect();
+            let mut single = Welford::new();
+            for &x in &xs {
+                single.add(x);
+            }
+            for split in [0, 1, n / 3, n / 2, n.saturating_sub(1), n] {
+                let (lo, hi) = xs.split_at(split);
+                let mut a = Welford::new();
+                let mut b = Welford::new();
+                for &x in lo {
+                    a.add(x);
+                }
+                for &x in hi {
+                    b.add(x);
+                }
+                a.merge(&b);
+                assert_eq!(a.count(), single.count());
+                let tol = 1e-9 * (1.0 + single.mean().abs());
+                assert!(
+                    (a.mean() - single.mean()).abs() < tol,
+                    "mean diverged at n={n} split={split}: {} vs {}",
+                    a.mean(),
+                    single.mean()
+                );
+                let vtol = 1e-8 * (1.0 + single.var().abs());
+                assert!(
+                    (a.var() - single.var()).abs() < vtol,
+                    "var diverged at n={n} split={split}: {} vs {}",
+                    a.var(),
+                    single.var()
+                );
+                assert_eq!(a.min(), single.min());
+                assert_eq!(a.max(), single.max());
+            }
+        }
+    }
+
+    #[test]
+    fn welford_merge_with_empty_is_identity() {
+        let mut a = Welford::new();
+        a.add(2.0);
+        a.add(4.0);
+        let before = (a.count(), a.mean(), a.var());
+        a.merge(&Welford::new());
+        assert_eq!((a.count(), a.mean(), a.var()), before);
+        let mut empty = Welford::new();
+        empty.merge(&a);
+        assert_eq!(empty.count(), 2);
+        assert_eq!(empty.mean(), 3.0);
+    }
 }

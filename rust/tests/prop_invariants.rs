@@ -24,6 +24,7 @@ fn mk_task(i: u64) -> Task {
         id: TaskId::fresh(),
         map_id: 1,
         index: i,
+        span: 0,
         fn_name: "prop".into(),
         payload: vec![i as u8],
     }

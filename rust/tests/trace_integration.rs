@@ -1,0 +1,248 @@
+//! Integration tests for `fiber::trace`: causal links across layers.
+//!
+//! Two end-to-end scenarios:
+//!
+//! * **Pool** — a root span wrapped around `Pool::map` must flow through
+//!   the task envelope: the leader-side `pool.dispatch` span parents under
+//!   the root, and every worker-side `pool.run` span parents under the
+//!   dispatch. With tracing disabled the same run records nothing.
+//! * **Ring chaos + auto-grow** — the issue's acceptance scenario: kill a
+//!   member mid-allreduce with a spare standing by, and the recorded
+//!   trace must show `ring.heal` spans whose ids parent the `ring.resume`
+//!   instants, plus the rejoiner's `ring.adopt` instant carrying the
+//!   interrupted op's sequence number. The dump must also survive a
+//!   Chrome trace-event export/import round trip with those links intact.
+//!
+//! Tracing state (the enabled flag and the process-global journal) is
+//! process-wide, so the tests here serialize on a local mutex.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use fiber::algo::es::{register_es_tasks, EsConfig, EsRingNode};
+use fiber::api::pool::Pool;
+use fiber::benchkit::Json;
+use fiber::coordinator::register_task;
+use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
+use fiber::store::StoreNode;
+use fiber::trace;
+use fiber::trace::collect::Collector;
+use fiber::trace::export;
+
+/// Serialize tests that flip the process-global tracing switch.
+static TRACE_GUARD: Mutex<()> = Mutex::new(());
+
+fn drain_global() -> fiber::trace::collect::TraceDump {
+    let mut c = Collector::new();
+    c.add_global();
+    c.drain()
+}
+
+#[test]
+fn pool_map_links_root_to_dispatch_to_worker_run() {
+    let _g = TRACE_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    register_task("tr.double", |x: i64| Ok::<i64, String>(x * 2));
+    let pool = Pool::new(2).unwrap();
+
+    // Disabled baseline: the identical run must record nothing.
+    trace::set_enabled(false);
+    drain_global();
+    let out: Vec<i64> = pool.map("tr.double", 0..16i64).unwrap();
+    assert_eq!(out[7], 14);
+    assert_eq!(
+        trace::global().len(),
+        0,
+        "disabled tracing must record zero events"
+    );
+
+    trace::set_enabled(true);
+    let root = trace::Span::begin_detached("test.root", 0);
+    let root_id = root.id();
+    assert_ne!(root_id, 0);
+    let out: Vec<i64> =
+        trace::with_span(root_id, || pool.map("tr.double", 0..16i64)).unwrap();
+    assert_eq!(out[9], 18);
+    drop(root);
+    trace::set_enabled(false);
+    let dump = drain_global();
+
+    // Exactly one dispatch for the map, parented under the caller's span.
+    let dispatches = dump.named("pool.dispatch");
+    assert_eq!(dispatches.len(), 1, "one submit_map, one dispatch span");
+    let dispatch = dispatches[0];
+    assert_eq!(
+        dispatch.parent, root_id,
+        "pool.dispatch must parent under the span wrapping the submit"
+    );
+    assert_eq!(dispatch.arg("tasks"), Some(16));
+
+    // Every worker-side run rides the envelope back to the dispatch.
+    let runs = dump.named("pool.run");
+    assert_eq!(runs.len(), 16, "one run span per task envelope");
+    for run in &runs {
+        assert_eq!(
+            run.parent, dispatch.span,
+            "pool.run must parent under pool.dispatch via Task.span"
+        );
+        assert!(run.arg("worker").is_some());
+    }
+}
+
+/// Shared ES config for the chaos run (toy objective: fast and
+/// deterministic; mirrors the auto-grow tests in `ring_integration.rs`).
+fn grow_cfg() -> EsConfig {
+    EsConfig {
+        pop: 12,
+        sigma: 0.1,
+        lr: 0.05,
+        table_size: 1 << 12,
+        eval_task: "es.eval_toy".into(),
+        ..Default::default()
+    }
+}
+
+/// One replica: warms the table through the store, then trains with rank
+/// `victim_rank` chaos-killed at `kill_iter`. Returns `None` for the
+/// victim (simulated crash: no `leave()`).
+fn chaos_replica(
+    mut m: RingMember,
+    node: Arc<StoreNode>,
+    iters: usize,
+    victim_rank: usize,
+    kill_iter: usize,
+) -> Option<(usize, usize)> {
+    m.set_chunk_elems(4);
+    m.set_timeout(Duration::from_millis(400));
+    m.set_probe_interval(Duration::from_millis(10));
+    let mut es = EsRingNode::new(grow_cfg(), vec![0.1f32; 24]);
+    es.warm_noise_table_store(&mut m, &node).unwrap();
+    let victim = m.rank() == victim_rank;
+    for i in 0..iters {
+        if victim && i == kill_iter {
+            m.set_kill_after_chunk(Some(1));
+        }
+        match es.iterate(&mut m) {
+            Ok(_) => {}
+            Err(e) => {
+                assert!(victim && is_chaos_killed(&e), "unexpected fault: {e:#}");
+                return None;
+            }
+        }
+    }
+    Some((m.rank(), m.world()))
+}
+
+#[test]
+fn chaos_heal_and_autogrow_record_causally_linked_spans() {
+    let _g = TRACE_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    register_es_tasks();
+    let world = 3;
+    let iters = 4;
+    let victim_rank = 2;
+    let kill_iter = 1;
+
+    trace::set_enabled(false);
+    drain_global();
+    trace::global().set_node_name("leader");
+    trace::set_enabled(true);
+
+    let rv = Rendezvous::new(world);
+    rv.set_heartbeat_grace(Duration::from_millis(40));
+    let node = StoreNode::host(64 << 20);
+    let spare_rv = rv.clone();
+    let spare_node = node.clone();
+    let spare = std::thread::spawn(move || {
+        let mut m =
+            RingMember::join_spare_inproc(&spare_rv, Duration::from_secs(20)).unwrap();
+        m.set_timeout(Duration::from_millis(400));
+        m.set_chunk_elems(4);
+        let es = EsRingNode::new(grow_cfg(), vec![0.1f32; 24]);
+        let (mut es, mut m) = es.join_ring_as_spare(m, Some(&spare_node)).unwrap();
+        for _ in es.iteration()..iters {
+            es.iterate(&mut m).unwrap();
+        }
+        (m.rank(), m.world())
+    });
+    while rv.spares().is_empty() {
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let handles: Vec<_> = (0..world)
+        .map(|_| {
+            let rv = rv.clone();
+            let node = node.clone();
+            std::thread::spawn(move || {
+                let m = RingMember::join_inproc(&rv).unwrap();
+                chaos_replica(m, node, iters, victim_rank, kill_iter)
+            })
+        })
+        .collect();
+    let survivors: Vec<_> = handles
+        .into_iter()
+        .filter_map(|h| h.join().unwrap())
+        .collect();
+    let rejoiner = spare.join().unwrap();
+    trace::set_enabled(false);
+    let dump = drain_global();
+
+    assert_eq!(survivors.len(), world - 1, "exactly one member died");
+    assert_eq!(rejoiner.1, world, "the spare grew the world back");
+
+    // The kill produced at least one heal span, and every resume instant
+    // parents under a heal span (the heal *caused* the resume).
+    let heals = dump.named("ring.heal");
+    assert!(!heals.is_empty(), "chaos kill must record a ring.heal span");
+    let resumes = dump.named("ring.resume");
+    assert!(!resumes.is_empty(), "healed collective must record ring.resume");
+    for resume in &resumes {
+        assert_ne!(resume.parent, 0, "ring.resume must have a causal parent");
+        let parent = dump
+            .span(resume.parent)
+            .expect("ring.resume parent span must be in the dump");
+        assert_eq!(
+            parent.name, "ring.heal",
+            "ring.resume must parent under the heal that caused it"
+        );
+    }
+
+    // The rejoiner's adoption references the interrupted op: its op_seq
+    // matches a heal span's, and it knows where the collective resumes.
+    let adopts = dump.named("ring.adopt");
+    assert!(!adopts.is_empty(), "the drafted spare must record ring.adopt");
+    let adopt = adopts[0];
+    let op_seq = adopt.arg("op_seq").expect("ring.adopt carries op_seq");
+    assert!(adopt.arg("resume_chunk").is_some());
+    assert!(
+        heals.iter().any(|h| h.arg("op_seq") == Some(op_seq)),
+        "adopted op_seq {op_seq} must match an interrupted op's heal span"
+    );
+
+    // The op spans themselves are present with their arguments.
+    let allreduces = dump.named("ring.allreduce");
+    assert!(!allreduces.is_empty());
+    assert!(allreduces.iter().all(|a| a.arg("gen").is_some()));
+
+    // Chrome export: the file is valid trace-event JSON and the causal
+    // links survive the round trip.
+    let path = std::env::temp_dir().join(format!(
+        "fiber_trace_integration_{}.json",
+        std::process::id()
+    ));
+    let path = path.to_str().unwrap().to_string();
+    export::write_chrome(&path, &dump).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = Json::parse(text.trim()).expect("trace file must be valid JSON");
+    assert!(
+        matches!(doc.get("traceEvents"), Some(Json::Arr(_))),
+        "chrome document must carry a traceEvents array"
+    );
+    let back = export::read_trace(&path).unwrap();
+    assert_eq!(back.events.len(), dump.events.len());
+    let back_resume = back.named("ring.resume")[0];
+    assert!(
+        back.named("ring.heal")
+            .iter()
+            .any(|h| h.span == back_resume.parent),
+        "heal → resume link must survive the chrome round trip"
+    );
+    let _ = std::fs::remove_file(&path);
+}
