@@ -2,8 +2,8 @@
 //!
 //! `cargo bench --bench micro`. Rows: in-proc queue throughput, RPC
 //! round-trip latency, pipe round-trip, manager KV ops, pool map overhead
-//! per task, pending-table ops, PJRT execute latency (when artifacts are
-//! built).
+//! per task, reduce-kernel throughput, pending-table ops, PJRT execute
+//! latency (when artifacts are built).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -98,6 +98,28 @@ fn main() {
             pool.map_raw_chunked("bench.echo", items.clone(), 64).unwrap();
         });
         t.add_row("pool map (chunksize 64)", vec![Some(stats.mean() / n as f64)]);
+    }
+
+    // Reduce kernels (the ring collectives' inner loops), per element.
+    {
+        use fiber::ring::kernels;
+        let n = 1 << 20;
+        let src: Vec<f32> = (0..n).map(|i| (i % 1003) as f32 * 1e-3).collect();
+        let mut dst: Vec<f32> = (0..n).map(|i| (i % 997) as f32 * 1e-3).collect();
+        let stats = measure(1, 5, || {
+            kernels::scalar::add_assign(&mut dst, &src);
+            assert!(dst[0].is_finite());
+        });
+        t.add_row("reduce add (scalar)", vec![Some(stats.mean() / n as f64)]);
+        let stats = measure(1, 5, || {
+            kernels::add_assign(&mut dst, &src);
+            assert!(dst[0].is_finite());
+        });
+        t.add_row("reduce add (vectorized)", vec![Some(stats.mean() / n as f64)]);
+        let stats = measure(1, 5, || {
+            assert!(kernels::sum_squares(&src).is_finite());
+        });
+        t.add_row("sum_squares (vectorized)", vec![Some(stats.mean() / n as f64)]);
     }
 
     // Pending table ops.

@@ -1,6 +1,7 @@
 //! Ring allreduce vs naive gather-broadcast across payload sizes and world
-//! sizes, plus the elastic-collectives series: overlap-on vs overlap-off
-//! wall time and kill-one-member recovery time.
+//! sizes, plus the elastic-collectives series (overlap-on vs overlap-off
+//! wall time, kill-one-member recovery time) and the scalar-vs-vectorized
+//! reduce-kernel throughput series.
 //!
 //! `cargo bench --bench ring_allreduce` (add `-- --quick` to trim the
 //! sweep). Prints benchkit tables and writes machine-readable results to
@@ -21,7 +22,7 @@ use std::time::Instant;
 
 use fiber::benchkit::{Json, Table};
 use fiber::experiments::timed_allreduce;
-use fiber::ring::{Rendezvous, RingMember};
+use fiber::ring::{kernels, Rendezvous, RingMember};
 use fiber::util::Welford;
 
 struct ConfigResult {
@@ -232,10 +233,66 @@ fn main() {
         regrow.heals,
     );
 
+    // Scalar vs vectorized reduce kernel: the elementwise-sum inner loop
+    // every reduce-scatter step runs, timed in isolation over a
+    // gradient-sized buffer. The vectorized column is the chunked
+    // `ring::kernels` form (explicit std::simd under `--features simd`);
+    // the scalar column is the naive zip loop it replaced. Welford's
+    // batch fold consumes each result so the loops cannot be
+    // dead-code-eliminated.
+    let kernel_elems: usize = if quick { 1 << 20 } else { 4 << 20 };
+    let kernel_reps = if quick { 20 } else { 50 };
+    let src: Vec<f32> = (0..kernel_elems).map(|i| (i % 1003) as f32 * 1e-3).collect();
+    let time_kernel = |vectorized: bool| {
+        let mut dst: Vec<f32> = (0..kernel_elems).map(|i| (i % 997) as f32 * 1e-3).collect();
+        let mut sink = Welford::new();
+        let t = Instant::now();
+        for _ in 0..kernel_reps {
+            if vectorized {
+                kernels::add_assign(&mut dst, &src);
+            } else {
+                kernels::scalar::add_assign(&mut dst, &src);
+            }
+            sink.add_slice_f32(&dst[..64]);
+        }
+        let wall = t.elapsed().as_secs_f64();
+        assert!(sink.count() > 0 && sink.mean().is_finite());
+        wall / kernel_reps as f64
+    };
+    let scalar_s = time_kernel(false);
+    let vector_s = time_kernel(true);
+    let kernel_speedup = scalar_s / vector_s.max(1e-12);
+    let gb = |per_op: f64| (kernel_elems * 4) as f64 / per_op / 1e9;
+    println!(
+        "\nreduce kernel add_assign, {} elems: scalar {:.3}ms ({:.1} GB/s), \
+         vectorized {:.3}ms ({:.1} GB/s), {kernel_speedup:.2}×",
+        kernel_elems,
+        scalar_s * 1e3,
+        gb(scalar_s),
+        vector_s * 1e3,
+        gb(vector_s),
+    );
+
     let doc = Json::Obj(vec![
         ("bench".into(), Json::str("ring_allreduce")),
         ("quick".into(), Json::Bool(quick)),
         ("configs".into(), Json::Arr(records)),
+        (
+            "reduce_kernel".into(),
+            Json::Obj(vec![
+                ("elems".into(), Json::num(kernel_elems as f64)),
+                ("reps".into(), Json::num(kernel_reps as f64)),
+                ("scalar_mean_s".into(), Json::num(scalar_s)),
+                ("vectorized_mean_s".into(), Json::num(vector_s)),
+                ("scalar_gb_per_s".into(), Json::num(gb(scalar_s))),
+                ("vectorized_gb_per_s".into(), Json::num(gb(vector_s))),
+                ("speedup".into(), Json::num(kernel_speedup)),
+                (
+                    "simd_feature".into(),
+                    Json::Bool(cfg!(feature = "simd")),
+                ),
+            ]),
+        ),
         (
             "recovery".into(),
             Json::Obj(vec![

@@ -11,7 +11,10 @@
 //! cache hits, which is exactly the point: task cost stops scaling with
 //! payload size. The broadcast series times a 2-node TCP fetch of one
 //! blob cold (one chunked transfer) vs warm (local cache hit), the store
-//! path a rejoining ring member takes instead of a full re-stream.
+//! path a rejoining ring member takes instead of a full re-stream. The
+//! cold-fetch series compares the serial per-chunk BLOB_META+BLOB_CHUNK
+//! ladder against the streaming BLOB_GET hot path (one request, all
+//! chunks pipelined on one connection).
 
 use std::time::Instant;
 
@@ -120,10 +123,51 @@ fn main() {
         warm_transfers,
     );
 
+    // Serial vs pipelined cold fetch: the same multi-MB blob pulled over
+    // TCP through the per-chunk BLOB_META+BLOB_CHUNK ladder vs the
+    // streaming BLOB_GET verb (one request, all chunks back-to-back on
+    // one connection). Fresh fetcher node per sample so every fetch is
+    // cold; the serving node stays warm throughout.
+    let fetch_mb = if quick { 4 } else { 16 };
+    let fetch_blob = payload(fetch_mb);
+    let srv = StoreNode::host(1 << 30);
+    let srv_ep = srv.serve("127.0.0.1:0").expect("serve");
+    let fetch_id = srv.put_bytes(&fetch_blob).expect("put");
+    let fetch_samples = if quick { 3 } else { 5 };
+    let cold_fetch = |pipelined: bool| {
+        measure(1, fetch_samples, || {
+            let fetcher = StoreNode::connect(&srv_ep, 1 << 30).expect("connect");
+            fetcher.set_pipelined_fetch(pipelined);
+            let got = fetcher.get_bytes(fetch_id).expect("cold fetch");
+            assert_eq!(got.len(), fetch_blob.len());
+            assert_eq!(fetcher.transfers(), 1);
+        })
+    };
+    let serial = cold_fetch(false);
+    let pipelined = cold_fetch(true);
+    let fetch_speedup = serial.mean() / pipelined.mean().max(1e-9);
+    println!(
+        "\ncold fetch, {fetch_mb} MB blob over TCP: serial {:.2}ms, pipelined {:.2}ms \
+         ({fetch_speedup:.2}× — one streaming connection vs per-chunk round trips)",
+        serial.mean() * 1e3,
+        pipelined.mean() * 1e3,
+    );
+
     let doc = Json::Obj(vec![
         ("bench".into(), Json::str("store")),
         ("quick".into(), Json::Bool(quick)),
         ("pool".into(), Json::Arr(records)),
+        (
+            "cold_fetch".into(),
+            Json::Obj(vec![
+                ("payload_mb".into(), Json::num(fetch_mb as f64)),
+                ("serial_mean_s".into(), Json::num(serial.mean())),
+                ("serial_std_s".into(), Json::num(serial.std())),
+                ("pipelined_mean_s".into(), Json::num(pipelined.mean())),
+                ("pipelined_std_s".into(), Json::num(pipelined.std())),
+                ("speedup".into(), Json::num(fetch_speedup)),
+            ]),
+        ),
         (
             "broadcast".into(),
             Json::Obj(vec![

@@ -17,6 +17,7 @@ use crate::envs::{rollout, Action, Walker2d};
 use crate::ring::collectives::{
     bytes_to_f32s, objid_from_lanes, objid_to_lanes, unpack_store_header,
 };
+use crate::ring::kernels;
 use crate::ring::RingMember;
 use crate::runtime::{HostTensor, Runtime};
 use crate::store::{ObjId, StoreNode};
@@ -364,17 +365,11 @@ impl EsMaster {
         let e = self.noise_matrix(offsets);
         let mut grad = vec![0.0f32; dim];
         for (k, &w) in ranks.iter().enumerate() {
-            let row = &e[k * dim..(k + 1) * dim];
-            for (g, &n) in grad.iter_mut().zip(row) {
-                *g += w * n;
-            }
+            kernels::axpy(&mut grad, w, &e[k * dim..(k + 1) * dim]);
         }
         // Gradient *ascent* on reward → descent on -reward.
-        let scale = -1.0 / (pop as f32 * self.cfg.sigma);
-        for g in grad.iter_mut() {
-            *g *= scale;
-        }
-        let norm = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+        kernels::scale(&mut grad, -1.0 / (pop as f32 * self.cfg.sigma));
+        let norm = kernels::sum_squares(&grad).sqrt() as f32;
         let mut theta = std::mem::take(&mut self.theta);
         self.adam.step(&mut theta, &grad, self.cfg.lr);
         self.theta = theta;
@@ -661,17 +656,12 @@ impl EsRingNode {
         for k in pair_lo..pair_hi {
             let row = table.slice(offsets[k] as usize, dim);
             let w = ranks[2 * k] - ranks[2 * k + 1]; // mirrored pair: +n, -n
-            for (g, &n) in grad.iter_mut().zip(&row) {
-                *g += w * n;
-            }
+            kernels::axpy(&mut grad, w, &row);
         }
         member.set_op_note(notes::GRAD);
         member.allreduce_sum(&mut grad)?;
-        let scale = -1.0 / (self.cfg.pop as f32 * self.cfg.sigma);
-        for g in grad.iter_mut() {
-            *g *= scale;
-        }
-        let grad_norm = grad.iter().map(|g| g * g).sum::<f32>().sqrt();
+        kernels::scale(&mut grad, -1.0 / (self.cfg.pop as f32 * self.cfg.sigma));
+        let grad_norm = kernels::sum_squares(&grad).sqrt() as f32;
         let mut theta = std::mem::take(&mut self.theta);
         self.adam.step(&mut theta, &grad, self.cfg.lr);
         self.theta = theta;

@@ -502,9 +502,7 @@ impl PpoTrainer {
         // members of the generation this minibatch started in (equal to
         // the whole post-heal world unless a spare was drained in).
         let inv = 1.0 / member.view().warm_count(g0).max(1) as f32;
-        for v in grad.iter_mut() {
-            *v *= inv;
-        }
+        crate::ring::kernels::scale(&mut grad, inv);
         let entropy = grad.pop().expect("loss slot");
         let v_loss = grad.pop().expect("loss slot");
         let pi_loss = grad.pop().expect("loss slot");

@@ -50,6 +50,27 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, FrameError> {
     Ok(payload)
 }
 
+/// Read one frame straight into `buf` — the allocation-free mirror of
+/// [`read_frame`] for receivers that pre-sized a destination from protocol
+/// metadata (the streaming blob fetch reads each chunk into its final
+/// slice of one big buffer). Returns the payload length. A frame larger
+/// than `buf` is a protocol violation and errors `TooBig` without
+/// consuming the payload, so the connection must be discarded.
+pub fn read_frame_into<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<usize, FrameError> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Err(FrameError::Eof),
+        Err(e) => return Err(e.into()),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > MAX_FRAME || len > buf.len() {
+        return Err(FrameError::TooBig(len));
+    }
+    r.read_exact(&mut buf[..len])?;
+    Ok(len)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -90,6 +111,28 @@ mod tests {
         buf.extend_from_slice(&(u32::MAX).to_le_bytes());
         let mut cur = std::io::Cursor::new(buf);
         assert!(matches!(read_frame(&mut cur), Err(FrameError::TooBig(_))));
+    }
+
+    #[test]
+    fn read_into_fills_prefix_and_rejects_oversize() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abc").unwrap();
+        write_frame(&mut buf, b"toolong").unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        let mut dst = [0u8; 5];
+        assert_eq!(read_frame_into(&mut cur, &mut dst).unwrap(), 3);
+        assert_eq!(&dst[..3], b"abc");
+        // 7-byte frame into a 5-byte buffer: protocol violation.
+        assert!(matches!(
+            read_frame_into(&mut cur, &mut dst),
+            Err(FrameError::TooBig(7))
+        ));
+        // Clean close at a boundary is Eof, same as read_frame.
+        let mut empty = std::io::Cursor::new(Vec::new());
+        assert!(matches!(
+            read_frame_into(&mut empty, &mut dst),
+            Err(FrameError::Eof)
+        ));
     }
 
     #[test]

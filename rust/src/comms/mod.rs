@@ -21,8 +21,8 @@ pub mod frame;
 pub mod rpc;
 
 pub use chan::{bounded, unbounded, Receiver, RecvError, SendError, Sender};
-pub use frame::{read_frame, write_frame, FrameError, MAX_FRAME};
-pub use rpc::{RpcClient, RpcServer};
+pub use frame::{read_frame, read_frame_into, write_frame, FrameError, MAX_FRAME};
+pub use rpc::{coded_err, RemoteError, RpcClient, RpcServer, StreamReply};
 
 use std::net::SocketAddr;
 

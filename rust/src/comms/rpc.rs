@@ -18,11 +18,85 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
-use crate::comms::frame::{read_frame, write_frame, FrameError};
+use crate::comms::frame::{read_frame, read_frame_into, write_frame, FrameError};
 use crate::wire;
 
 /// Handler invoked per request: `(tag, payload) -> Result<reply, error-msg>`.
 pub type Handler = Arc<dyn Fn(u32, &[u8]) -> Result<Vec<u8>, String> + Send + Sync>;
+
+/// An error a server handler raised, as seen by the calling client. The
+/// reply wire format carries only a `String`, so machine-readable codes
+/// travel as a parseable prefix (see [`coded_err`]); `call` strips the
+/// prefix back out and exposes it here. Callers branch on [`RemoteError::code`]
+/// instead of substring-matching the human text — `anyhow` chains preserve
+/// this type, so `err.downcast_ref::<RemoteError>()` (or walking
+/// `err.chain()`) recovers it.
+#[derive(Debug, Clone, thiserror::Error)]
+#[error("rpc remote error: {msg}")]
+pub struct RemoteError {
+    /// Protocol-defined error code, when the handler attached one.
+    pub code: Option<u32>,
+    /// Human-readable message (code prefix already stripped).
+    pub msg: String,
+}
+
+/// Prefix marking a coded error message: `"[e#{code}] {msg}"`.
+const CODE_PREFIX: &str = "[e#";
+
+/// Format a handler error that carries a machine-readable `code` across
+/// the string-typed reply channel. The peer's `call` parses it back into
+/// a [`RemoteError`] with `code: Some(code)`.
+pub fn coded_err(code: u32, msg: impl std::fmt::Display) -> String {
+    format!("{CODE_PREFIX}{code}] {msg}")
+}
+
+impl RemoteError {
+    /// Parse a wire error string, splitting off a [`coded_err`] prefix.
+    fn parse(wire_msg: String) -> RemoteError {
+        if let Some(rest) = wire_msg.strip_prefix(CODE_PREFIX) {
+            if let Some((num, msg)) = rest.split_once("] ") {
+                if let Ok(code) = num.parse::<u32>() {
+                    return RemoteError {
+                        code: Some(code),
+                        msg: msg.to_string(),
+                    };
+                }
+            }
+        }
+        RemoteError {
+            code: None,
+            msg: wire_msg,
+        }
+    }
+}
+
+/// A streaming reply (see [`RpcServer::bind_streaming`]): the `header`
+/// travels as the ordinary reply frame; when it is `Ok`, `body` then emits
+/// zero or more **raw** frames back-to-back on the same connection. The
+/// in-flight window is bounded by the socket send buffer — the server's
+/// blocking writes stall when the reader lags, so a slow client applies
+/// backpressure instead of ballooning server memory.
+pub struct StreamReply {
+    pub header: Result<Vec<u8>, String>,
+    #[allow(clippy::type_complexity)]
+    pub body: Option<
+        Box<dyn FnOnce(&mut dyn FnMut(&[u8]) -> Result<(), FrameError>) -> Result<(), FrameError> + Send>,
+    >,
+}
+
+impl StreamReply {
+    /// A header-only error reply (no body frames follow).
+    pub fn err(msg: String) -> StreamReply {
+        StreamReply {
+            header: Err(msg),
+            body: None,
+        }
+    }
+}
+
+/// Handler for streaming verbs: return `None` to decline the tag (the
+/// ordinary [`Handler`] then serves it), `Some` to take over the reply.
+pub type StreamHandler = Arc<dyn Fn(u32, &[u8]) -> Option<StreamReply> + Send + Sync>;
 
 /// A TCP request/reply server.
 pub struct RpcServer {
@@ -36,6 +110,19 @@ impl RpcServer {
     /// Bind and serve. Use port 0 for an ephemeral port; read it back with
     /// [`RpcServer::local_addr`].
     pub fn bind(bind_addr: &str, handler: Handler) -> Result<Self> {
+        Self::bind_streaming(bind_addr, handler, Arc::new(|_, _| None))
+    }
+
+    /// [`RpcServer::bind`] with a [`StreamHandler`] consulted first for
+    /// every request: a `Some` reply writes the header frame and then the
+    /// body's raw frames pipelined on the same connection (the client
+    /// reads them with [`RpcClient::call_streamed`]); `None` falls through
+    /// to the ordinary call/response `handler`.
+    pub fn bind_streaming(
+        bind_addr: &str,
+        handler: Handler,
+        stream_handler: StreamHandler,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(bind_addr).context("rpc bind")?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
@@ -56,10 +143,11 @@ impl RpcServer {
                             conns.lock().unwrap().push(clone);
                         }
                         let handler = handler.clone();
+                        let stream_handler = stream_handler.clone();
                         let stop2 = stop.clone();
                         let _ = std::thread::Builder::new()
                             .name("rpc-conn".into())
-                            .spawn(move || serve_conn(stream, handler, stop2));
+                            .spawn(move || serve_conn(stream, handler, stream_handler, stop2));
                     }
                 })?
         };
@@ -73,6 +161,13 @@ impl RpcServer {
 
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Connections accepted over this server's lifetime (they are tracked
+    /// for shutdown and never forgotten). Tests use this to prove a whole
+    /// blob streamed over **one** connection rather than per-chunk dials.
+    pub fn connections(&self) -> usize {
+        self.conns.lock().unwrap().len()
     }
 
     /// Stop accepting and tear down existing connections.
@@ -95,7 +190,12 @@ impl Drop for RpcServer {
     }
 }
 
-fn serve_conn(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) {
+fn serve_conn(
+    stream: TcpStream,
+    handler: Handler,
+    stream_handler: StreamHandler,
+    stop: Arc<AtomicBool>,
+) {
     let mut reader = stream.try_clone().expect("clone stream");
     let mut writer = BufWriter::new(stream);
     loop {
@@ -111,6 +211,25 @@ fn serve_conn(stream: TcpStream, handler: Handler, stop: Arc<AtomicBool>) {
             return; // corrupt
         }
         let tag = u32::from_le_bytes(req[..4].try_into().unwrap());
+        if let Some(sr) = stream_handler(tag, &req[4..]) {
+            let ok = sr.header.is_ok();
+            let buf = wire::to_bytes(&sr.header);
+            if write_frame(&mut writer, &buf).is_err() {
+                return;
+            }
+            // Body frames follow the header only on success — an error
+            // header leaves the connection at a clean request boundary.
+            if ok {
+                if let Some(body) = sr.body {
+                    let mut emit =
+                        |payload: &[u8]| write_frame(&mut writer, payload);
+                    if body(&mut emit).is_err() {
+                        return;
+                    }
+                }
+            }
+            continue;
+        }
         let reply: Result<Vec<u8>, String> = handler(tag, &req[4..]);
         let buf = wire::to_bytes(&reply);
         if write_frame(&mut writer, &buf).is_err() {
@@ -177,7 +296,9 @@ impl RpcClient {
         Ok(())
     }
 
-    /// Issue a request and wait for the reply.
+    /// Issue a request and wait for the reply. A remote handler error
+    /// comes back as a typed [`RemoteError`] in the chain (carrying its
+    /// code when the handler used [`coded_err`]).
     pub fn call(&self, tag: u32, payload: &[u8]) -> Result<Vec<u8>> {
         let mut inner = self.inner.lock().unwrap();
         let mut req = Vec::with_capacity(4 + payload.len());
@@ -187,7 +308,35 @@ impl RpcClient {
         let reply = read_frame(&mut inner.reader).context("rpc recv")?;
         let result: Result<Vec<u8>, String> =
             wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("rpc decode: {e}"))?;
-        result.map_err(|e| anyhow::anyhow!("rpc remote error: {e}"))
+        result.map_err(|e| anyhow::Error::new(RemoteError::parse(e)))
+    }
+
+    /// Issue a request whose reply is a header frame followed by pipelined
+    /// raw body frames (a [`StreamReply`] on the server side). Holds the
+    /// connection exclusively for the whole stream; `f` receives the
+    /// decoded `Ok` header and a [`FrameStream`] to pull body frames from.
+    /// An `Err` header returns a [`RemoteError`] without invoking `f` (no
+    /// body frames follow an error). If `f` fails mid-stream the
+    /// connection holds unread frames and must be discarded — callers that
+    /// cache clients (the store's peer map) drop the client on any error.
+    pub fn call_streamed<T>(
+        &self,
+        tag: u32,
+        payload: &[u8],
+        f: impl FnOnce(&[u8], &mut FrameStream<'_>) -> Result<T>,
+    ) -> Result<T> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut req = Vec::with_capacity(4 + payload.len());
+        req.extend_from_slice(&tag.to_le_bytes());
+        req.extend_from_slice(payload);
+        write_frame(&mut inner.writer, &req).context("rpc send")?;
+        let reply = read_frame(&mut inner.reader).context("rpc recv")?;
+        let header: Result<Vec<u8>, String> =
+            wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("rpc decode: {e}"))?;
+        let header = header.map_err(|e| anyhow::Error::new(RemoteError::parse(e)))?;
+        f(&header, &mut FrameStream {
+            reader: &mut inner.reader,
+        })
     }
 
     /// Typed convenience: encode `req`, decode the reply.
@@ -198,6 +347,21 @@ impl RpcClient {
     ) -> Result<Resp> {
         let reply = self.call(tag, &wire::to_bytes(req))?;
         wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("rpc reply decode: {e}"))
+    }
+}
+
+/// The body half of a streamed reply, handed to the `call_streamed`
+/// closure: pulls raw frames off the (exclusively held) connection.
+pub struct FrameStream<'a> {
+    reader: &'a mut TcpStream,
+}
+
+impl FrameStream<'_> {
+    /// Read the next body frame into `buf` (no allocation); returns its
+    /// length. Frames larger than `buf` error — the caller sized `buf`
+    /// from the header, so an oversize frame is a protocol violation.
+    pub fn next_into(&mut self, buf: &mut [u8]) -> Result<usize> {
+        read_frame_into(self.reader, buf).context("rpc stream recv")
     }
 }
 
@@ -297,6 +461,83 @@ mod tests {
         assert!(cli.call(1, b"x").is_err());
         assert!(t.elapsed() < std::time::Duration::from_millis(400));
         hold.join().unwrap();
+    }
+
+    /// A streaming server: tag 1 streams `count` frames of `frame_len`
+    /// bytes (both read from the request), tag 2 declines (falls through
+    /// to the plain handler), tag 3 errors with a code.
+    fn stream_server() -> RpcServer {
+        RpcServer::bind_streaming(
+            "127.0.0.1:0",
+            Arc::new(|tag, _| Ok(tag.to_le_bytes().to_vec())),
+            Arc::new(|tag, payload| match tag {
+                1 => {
+                    let count = payload[0] as usize;
+                    let frame_len = payload[1] as usize;
+                    Some(StreamReply {
+                        header: Ok((count as u32).to_le_bytes().to_vec()),
+                        body: Some(Box::new(move |emit| {
+                            for i in 0..count {
+                                emit(&vec![i as u8; frame_len])?;
+                            }
+                            Ok(())
+                        })),
+                    })
+                }
+                3 => Some(StreamReply::err(coded_err(42, "not here"))),
+                _ => None,
+            }),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn streamed_reply_pipelines_frames() {
+        let srv = stream_server();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        let frames = cli
+            .call_streamed(1, &[4, 9], |header, stream| {
+                let n = u32::from_le_bytes(header.try_into().unwrap());
+                let mut got = Vec::new();
+                let mut buf = [0u8; 16];
+                for _ in 0..n {
+                    let len = stream.next_into(&mut buf)?;
+                    got.push(buf[..len].to_vec());
+                }
+                Ok(got)
+            })
+            .unwrap();
+        assert_eq!(frames.len(), 4);
+        for (i, f) in frames.iter().enumerate() {
+            assert_eq!(f, &vec![i as u8; 9]);
+        }
+        // The connection is clean after a fully-drained stream: an
+        // ordinary call on the same client still works.
+        assert_eq!(cli.call(7, b"").unwrap(), 7u32.to_le_bytes().to_vec());
+        // Declined tags fall through to the plain handler.
+        assert_eq!(cli.call(2, b"").unwrap(), 2u32.to_le_bytes().to_vec());
+        assert_eq!(srv.connections(), 1, "everything rode one connection");
+    }
+
+    #[test]
+    fn coded_error_roundtrips_typed() {
+        let srv = stream_server();
+        let cli = RpcClient::connect(srv.local_addr()).unwrap();
+        let err = cli
+            .call_streamed(3, b"", |_h, _s| Ok(()))
+            .unwrap_err();
+        let remote = err
+            .downcast_ref::<RemoteError>()
+            .expect("RemoteError in chain");
+        assert_eq!(remote.code, Some(42));
+        assert_eq!(remote.msg, "not here");
+        // Uncoded errors parse with code: None and keep their text.
+        let plain = RemoteError::parse("boom".into());
+        assert_eq!(plain.code, None);
+        assert_eq!(plain.msg, "boom");
+        // Malformed prefixes degrade to uncoded, never panic.
+        let odd = RemoteError::parse("[e#zzz] x".into());
+        assert_eq!(odd.code, None);
     }
 
     #[test]

@@ -164,6 +164,13 @@ fn worker(opts: &Opts) -> Result<()> {
         let budget: usize = opts.parse_or("store-budget", 256usize << 20)?;
         let node = fiber::store::StoreNode::connect(store, budget)
             .context("connect to object store")?;
+        if let Some(dir) = opts.get("spill-dir") {
+            // Over-budget LRU victims spill to disk instead of evicting,
+            // and fault back in (hash-verified) on the next access.
+            node.local()
+                .set_spill_dir(Some(dir.into()))
+                .with_context(|| format!("create spill dir {dir}"))?;
+        }
         node.serve("127.0.0.1:0").context("serve worker store node")?;
         fiber::store::install_node(node);
     }
@@ -206,7 +213,7 @@ fn print_help() {
          SUBCOMMANDS:\n\
            worker       worker-process entrypoint (spawned by ProcBackend)\n\
                         --leader <addr> --worker <id>\n\
-                        [--store tcp://addr [--store-budget BYTES]]\n\
+                        [--store tcp://addr [--store-budget BYTES] [--spill-dir DIR]]\n\
            ring         ring-allreduce collective demo\n\
                         [--world N] [--elems N] [--proc true] [--overlap false]\n\
            ring-node    ring-member process entrypoint (spawned by `ring --proc true`)\n\

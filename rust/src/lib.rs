@@ -1,3 +1,5 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # fiber-rs
 //!
 //! A Rust reproduction of **Fiber** (Zhi, Wang, Clune, Stanley, 2020): a

@@ -61,6 +61,7 @@ use crate::comms::rpc::{RpcClient, RpcServer};
 use crate::comms::Addr;
 use crate::wire;
 
+use super::kernels;
 use super::spare::{ColdStart, OpDesc, KIND_ALLREDUCE, KIND_BROADCAST};
 use super::topology::{Rendezvous, RendezvousClient, RingView};
 
@@ -230,6 +231,10 @@ pub struct RingMember {
     steps_overlapped: u64,
     heals: u64,
     kill_after_chunk: Option<u64>,
+    /// Double-buffered receive scratch: collective steps alternate between
+    /// the two halves (`step & 1`), so decoding a peer's frame reuses a
+    /// warm allocation instead of growing a fresh `Vec<f32>` per step.
+    scratch: [Vec<f32>; 2],
 }
 
 impl RingMember {
@@ -324,6 +329,7 @@ impl RingMember {
             steps_overlapped: 0,
             heals: 0,
             kill_after_chunk: None,
+            scratch: [Vec::new(), Vec::new()],
         }
     }
 
@@ -735,10 +741,7 @@ impl RingMember {
     /// heal averages over the surviving replicas.
     pub fn allreduce_mean(&mut self, buf: &mut [f32]) -> Result<()> {
         self.allreduce_sum(buf)?;
-        let inv = 1.0 / self.view.world as f32;
-        for v in buf.iter_mut() {
-            *v *= inv;
-        }
+        kernels::scale(buf, 1.0 / self.view.world as f32);
         Ok(())
     }
 
@@ -925,9 +928,7 @@ impl RingMember {
                     continue;
                 }
                 let incoming = self.recv_elems(other, op, buf.len())?;
-                for (d, v) in buf.iter_mut().zip(&incoming) {
-                    *d += *v;
-                }
+                kernels::add_assign(buf, &incoming);
             }
             for other in 0..n {
                 if other == root {
@@ -1015,7 +1016,13 @@ impl RingMember {
                 let (rlo, rhi) = seg_bounds(hi - lo, n, st.recv_seg);
                 let tag = op | (run.chunk as u64 * spc + run.step as u64);
                 let bytes = self.recv_data(left, tag, RecvMode::Heal)?;
-                let incoming = bytes_to_f32s(&bytes)?;
+                // Decode into one half of the double-buffered scratch pair:
+                // with two chunks in flight, alternating steps reuse two
+                // warm allocations instead of growing a fresh Vec each step.
+                // (An early error return leaves the taken half empty — the
+                // heal path just re-warms it.)
+                let mut incoming = std::mem::take(&mut self.scratch[run.step & 1]);
+                bytes_to_f32s_into(&bytes, &mut incoming)?;
                 anyhow::ensure!(
                     incoming.len() == rhi - rlo,
                     "ring step payload mismatch from rank {left}: got {}, want {}",
@@ -1025,9 +1032,7 @@ impl RingMember {
                 let dst = &mut buf[lo + rlo..lo + rhi];
                 match st.phase {
                     StepPhase::ReduceScatter => {
-                        for (d, v) in dst.iter_mut().zip(&incoming) {
-                            *d += *v;
-                        }
+                        kernels::add_assign(dst, &incoming);
                         crate::trace::instant(
                             "ring.chunk.reduce",
                             &[("chunk", run.chunk as i64), ("step", run.step as i64)],
@@ -1041,6 +1046,7 @@ impl RingMember {
                         );
                     }
                 }
+                self.scratch[run.step & 1] = incoming;
                 active[i].step += 1;
             }
             // Retire finished chunks in admission order (keeps `completed`
@@ -1604,6 +1610,25 @@ pub(crate) fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect())
+}
+
+/// [`bytes_to_f32s`] into a reused buffer: `out` is cleared and refilled,
+/// so a warm `Vec` decodes with zero allocation. The step-machine hot loop
+/// uses this with [`RingMember`]'s double-buffered scratch pair.
+pub(crate) fn bytes_to_f32s_into(bytes: &[u8], out: &mut Vec<f32>) -> Result<()> {
+    anyhow::ensure!(
+        bytes.len() % 4 == 0,
+        "ring payload of {} bytes is not a whole number of f32s",
+        bytes.len()
+    );
+    out.clear();
+    out.reserve(bytes.len() / 4);
+    out.extend(
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+    );
+    Ok(())
 }
 
 #[cfg(test)]

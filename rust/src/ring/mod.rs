@@ -28,6 +28,11 @@
 //!   collective. Cold rejoiners are brought up to algorithm state by
 //!   their driver (e.g. [`crate::algo::es::EsRingNode::join_ring_as_spare`]),
 //!   re-warming bulk tables through the object store as cache hits.
+//! * [`kernels`] — the vectorized elementwise loops (`add_assign`,
+//!   `scale`, `axpy`, …) under every reduce: fixed-width chunked slices
+//!   the autovectorizer turns into packed SIMD, with an explicit
+//!   `std::simd` variant behind the nightly-only `simd` feature and the
+//!   naive scalar forms kept as the measured baseline.
 //! * [`collectives`] — chunked ring allreduce (reduce-scatter + all-gather),
 //!   broadcast and all-gather over `f32` buffers, framed with
 //!   [`crate::wire`] and working identically over `inproc://` channels
@@ -65,6 +70,7 @@
 //! ```
 
 pub mod collectives;
+pub mod kernels;
 pub mod spare;
 pub mod topology;
 

@@ -33,15 +33,52 @@ fn mix64(mut z: u64) -> u64 {
 impl ObjId {
     /// Hash `bytes` into an id.
     pub fn of(bytes: &[u8]) -> ObjId {
+        let mut h = ObjHasher::new();
+        h.update(bytes);
+        h.finish()
+    }
+}
+
+/// Incremental [`ObjId`] hasher: feed byte runs with [`ObjHasher::update`]
+/// in any split and [`ObjHasher::finish`] yields exactly [`ObjId::of`] of
+/// the concatenation. The streaming fetch hashes each chunk while it is
+/// still hot in cache instead of re-walking the reassembled buffer.
+pub struct ObjHasher {
+    a: u64,
+    b: u64,
+    len: u64,
+}
+
+impl Default for ObjHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ObjHasher {
+    pub fn new() -> ObjHasher {
+        ObjHasher {
+            a: 0xcbf2_9ce4_8422_2325,
+            b: 0x8422_2325_cbf2_9ce4,
+            len: 0,
+        }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
         const PRIME: u64 = 0x0000_0100_0000_01b3;
-        let mut a: u64 = 0xcbf2_9ce4_8422_2325;
-        let mut b: u64 = 0x8422_2325_cbf2_9ce4;
+        let (mut a, mut b) = (self.a, self.b);
         for &x in bytes {
             a = (a ^ x as u64).wrapping_mul(PRIME);
             b = (b ^ x as u64).wrapping_mul(PRIME).rotate_left(29);
         }
-        let a = mix64(a ^ bytes.len() as u64);
-        let b = mix64(b ^ a);
+        self.a = a;
+        self.b = b;
+        self.len += bytes.len() as u64;
+    }
+
+    pub fn finish(self) -> ObjId {
+        let a = mix64(self.a ^ self.len);
+        let b = mix64(self.b ^ a);
         let mut out = [0u8; 16];
         out[..8].copy_from_slice(&a.to_le_bytes());
         out[8..].copy_from_slice(&b.to_le_bytes());
@@ -76,11 +113,28 @@ impl Decode for ObjId {
     }
 }
 
-struct Entry {
-    /// The blob, whole, behind an `Arc`: a cache-hit `get` is an O(1)
+/// Where a blob's bytes live right now.
+enum Payload {
+    /// In memory, whole, behind an `Arc`: a cache-hit `get` is an O(1)
     /// refcount bump, not a reassembly copy. Chunks — the p2p transfer
     /// unit — are cheap slices of this buffer, cut on demand.
-    data: Arc<Vec<u8>>,
+    Mem(Arc<Vec<u8>>),
+    /// Evicted to `<spill_dir>/<id>.blob` under byte pressure; still
+    /// published and servable, transparently faulted back on access.
+    Spilled { len: usize },
+}
+
+impl Payload {
+    fn len(&self) -> usize {
+        match self {
+            Payload::Mem(d) => d.len(),
+            Payload::Spilled { len } => *len,
+        }
+    }
+}
+
+struct Entry {
+    data: Payload,
     refs: usize,
     pinned: bool,
     touched: u64,
@@ -88,13 +142,22 @@ struct Entry {
 
 struct Inner {
     entries: HashMap<ObjId, Entry>,
+    /// **In-memory** payload bytes — spilled blobs cost disk, not budget.
     bytes: usize,
     tick: u64,
     evictions: u64,
     hits: u64,
     misses: u64,
+    /// When set, LRU victims are written here instead of dropped.
+    spill_dir: Option<std::path::PathBuf>,
+    spills: u64,
+    spill_faults: u64,
     /// Ids evicted by LRU pressure, awaiting [`LocalStore::drain_evicted`].
     evicted_log: Vec<ObjId>,
+}
+
+fn spill_path(dir: &std::path::Path, id: ObjId) -> std::path::PathBuf {
+    dir.join(format!("{id}.blob"))
 }
 
 /// The in-memory blob store of one node.
@@ -129,6 +192,9 @@ impl LocalStore {
                 evictions: 0,
                 hits: 0,
                 misses: 0,
+                spill_dir: None,
+                spills: 0,
+                spill_faults: 0,
                 evicted_log: Vec::new(),
             }),
         }
@@ -153,25 +219,7 @@ impl LocalStore {
     /// what guarantees the leader's later fetch finds the bytes).
     pub fn insert_held(&self, bytes: &[u8]) -> ObjId {
         let id = ObjId::of(bytes);
-        let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        if let Some(e) = inner.entries.get_mut(&id) {
-            e.touched = tick;
-            e.refs += 1;
-            return id;
-        }
-        inner.bytes += bytes.len();
-        inner.entries.insert(
-            id,
-            Entry {
-                data: Arc::new(bytes.to_vec()),
-                refs: 1,
-                pinned: false,
-                touched: tick,
-            },
-        );
-        evict_over_budget(&mut inner, self.budget, Some(id));
+        self.insert_payload(id, Arc::new(bytes.to_vec()), true);
         id
     }
 
@@ -179,19 +227,49 @@ impl LocalStore {
     /// — no copy, no re-hash. The caller asserts `id == ObjId::of(&data)`;
     /// the fetch path uses this right after hash-verifying a transfer.
     pub fn insert_arc(&self, id: ObjId, data: Arc<Vec<u8>>) {
+        self.insert_payload(id, data, false);
+    }
+
+    /// Shared insert core: store `data` under `id`, refresh an existing
+    /// entry, or — when the existing entry is spilled — re-materialize it
+    /// in place (the caller holds the bytes anyway, so this is cheaper
+    /// than a later disk fault). `add_ref` is the insert_held atomic
+    /// reference.
+    fn insert_payload(&self, id: ObjId, data: Arc<Vec<u8>>, add_ref: bool) {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
+        let len = data.len();
+        let mut data = Some(data);
+        let mut exists = false;
+        let mut rematerialized = false;
         if let Some(e) = inner.entries.get_mut(&id) {
+            exists = true;
             e.touched = tick;
+            if add_ref {
+                e.refs += 1;
+            }
+            if matches!(e.data, Payload::Spilled { .. }) {
+                e.data = Payload::Mem(data.take().expect("payload"));
+                rematerialized = true;
+            }
+        }
+        if exists {
+            if rematerialized {
+                if let Some(dir) = inner.spill_dir.clone() {
+                    let _ = std::fs::remove_file(spill_path(&dir, id));
+                }
+                inner.bytes += len;
+                evict_over_budget(&mut inner, self.budget, Some(id));
+            }
             return;
         }
-        inner.bytes += data.len();
+        inner.bytes += len;
         inner.entries.insert(
             id,
             Entry {
-                data,
-                refs: 0,
+                data: Payload::Mem(data.take().expect("payload")),
+                refs: usize::from(add_ref),
                 pinned: false,
                 touched: tick,
             },
@@ -199,17 +277,33 @@ impl LocalStore {
         evict_over_budget(&mut inner, self.budget, Some(id));
     }
 
-    /// The whole blob (refreshes its LRU position). O(1): hands back a
-    /// clone of the `Arc`, not a copy of the bytes.
+    /// The whole blob (refreshes its LRU position). O(1) for resident
+    /// blobs: hands back a clone of the `Arc`, not a copy of the bytes.
+    /// A spilled blob is faulted back from disk (hash-verified) first.
     pub fn get(&self, id: ObjId) -> Option<Arc<Vec<u8>>> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        let found = inner.entries.get_mut(&id).map(|e| {
-            e.touched = tick;
-            e.data.clone()
-        });
-        match found {
+        let found = match inner.entries.get_mut(&id) {
+            Some(e) => {
+                e.touched = tick;
+                match &e.data {
+                    Payload::Mem(d) => Some(d.clone()),
+                    Payload::Spilled { .. } => None, // fault below
+                }
+            }
+            None => {
+                inner.misses += 1;
+                return None;
+            }
+        };
+        if let Some(out) = found {
+            inner.hits += 1;
+            return Some(out);
+        }
+        // The disk read happens under the lock: simple and correct, and
+        // still far cheaper than the alternative (a peer re-fetch).
+        match fault_in(&mut inner, self.budget, id) {
             Some(out) => {
                 inner.hits += 1;
                 Some(out)
@@ -230,36 +324,55 @@ impl LocalStore {
         }
     }
 
+    /// The p2p transfer granularity of this store.
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
     /// `(len, n_chunks, chunk_size)` of a held blob (refreshes LRU).
+    /// Answered without faulting — a spilled blob's metadata is free.
     pub fn meta(&self, id: ObjId) -> Option<(u64, u64, u64)> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
         inner.entries.get_mut(&id).map(|e| {
             e.touched = tick;
+            let len = e.data.len();
             (
-                e.data.len() as u64,
-                self.n_chunks(e.data.len()) as u64,
+                len as u64,
+                self.n_chunks(len) as u64,
                 self.chunk_size as u64,
             )
         })
     }
 
-    /// One chunk of a held blob, cut on demand (refreshes LRU).
+    /// One chunk of a held blob, cut on demand (refreshes LRU; faults a
+    /// spilled blob back in).
     pub fn chunk(&self, id: ObjId, idx: usize) -> Option<Vec<u8>> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        inner.entries.get_mut(&id).and_then(|e| {
-            e.touched = tick;
-            let len = e.data.len();
-            let lo = idx.checked_mul(self.chunk_size)?;
-            if lo >= len {
-                return None;
+        let resident = match inner.entries.get_mut(&id) {
+            None => return None,
+            Some(e) => {
+                e.touched = tick;
+                match &e.data {
+                    Payload::Mem(d) => Some(d.clone()),
+                    Payload::Spilled { .. } => None,
+                }
             }
-            let hi = (lo + self.chunk_size).min(len);
-            Some(e.data[lo..hi].to_vec())
-        })
+        };
+        let data = match resident {
+            Some(d) => d,
+            None => fault_in(&mut inner, self.budget, id)?,
+        };
+        let len = data.len();
+        let lo = idx.checked_mul(self.chunk_size)?;
+        if lo >= len {
+            return None;
+        }
+        let hi = (lo + self.chunk_size).min(len);
+        Some(data[lo..hi].to_vec())
     }
 
     pub fn contains(&self, id: ObjId) -> bool {
@@ -330,15 +443,53 @@ impl LocalStore {
             matches!(inner.entries.get(&id), Some(e) if !e.pinned && e.refs == 0);
         if removable {
             if let Some(e) = inner.entries.remove(&id) {
-                inner.bytes -= e.data.len();
+                match e.data {
+                    Payload::Mem(d) => inner.bytes -= d.len(),
+                    Payload::Spilled { .. } => {
+                        if let Some(dir) = inner.spill_dir.clone() {
+                            let _ = std::fs::remove_file(spill_path(&dir, id));
+                        }
+                    }
+                }
             }
         }
         removable
     }
 
-    /// Payload bytes currently held.
+    /// **In-memory** payload bytes currently held (spilled blobs cost
+    /// disk, not budget).
     pub fn bytes(&self) -> usize {
         self.inner.lock().unwrap().bytes
+    }
+
+    /// Configure an eviction **spill directory**: LRU victims are written
+    /// to `<dir>/<id>.blob` instead of dropped, stay published/servable,
+    /// and fault back into memory on access. Creates the directory.
+    /// Passing `None` disables spilling; blobs already on disk become
+    /// unreachable and read as plain evictions on next access.
+    pub fn set_spill_dir(&self, dir: Option<std::path::PathBuf>) -> std::io::Result<()> {
+        if let Some(d) = &dir {
+            std::fs::create_dir_all(d)?;
+        }
+        self.inner.lock().unwrap().spill_dir = dir;
+        Ok(())
+    }
+
+    /// `(spills, spill_faults)`: victims written to disk, blobs read back.
+    pub fn spill_counters(&self) -> (u64, u64) {
+        let inner = self.inner.lock().unwrap();
+        (inner.spills, inner.spill_faults)
+    }
+
+    /// Blobs currently resident on disk rather than in memory.
+    pub fn spilled(&self) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .values()
+            .filter(|e| matches!(e.data, Payload::Spilled { .. }))
+            .count()
     }
 
     pub fn budget(&self) -> usize {
@@ -368,22 +519,112 @@ impl LocalStore {
     }
 }
 
-/// Evict least-recently-touched unpinned zero-ref blobs until within
-/// budget or nothing more is evictable. `protect` shields the blob whose
-/// insertion triggered the pass — evicting it would defeat the insert.
+/// Evict least-recently-touched unpinned zero-ref **resident** blobs
+/// until within budget or nothing more is evictable. `protect` shields
+/// the blob whose insertion triggered the pass — evicting it would defeat
+/// the insert. With a spill directory configured, victims are written to
+/// disk (entry kept, still published) instead of dropped; only a failed
+/// spill write degrades to a plain eviction.
 fn evict_over_budget(inner: &mut Inner, budget: usize, protect: Option<ObjId>) {
     while inner.bytes > budget {
         let victim = inner
             .entries
             .iter()
-            .filter(|(id, e)| Some(**id) != protect && e.refs == 0 && !e.pinned)
+            .filter(|(id, e)| {
+                Some(**id) != protect
+                    && e.refs == 0
+                    && !e.pinned
+                    && matches!(e.data, Payload::Mem(_))
+            })
             .min_by_key(|(_, e)| e.touched)
             .map(|(id, _)| *id);
         let Some(id) = victim else { return };
+        if let Some(dir) = inner.spill_dir.clone() {
+            let spilled_len = {
+                let e = inner.entries.get_mut(&id).expect("victim entry");
+                let Payload::Mem(data) = &e.data else {
+                    unreachable!("victims are resident")
+                };
+                let len = data.len();
+                match std::fs::write(spill_path(&dir, id), data.as_slice()) {
+                    Ok(()) => {
+                        e.data = Payload::Spilled { len };
+                        Some(len)
+                    }
+                    Err(err) => {
+                        log::warn!("store: spill of {id} failed ({err}); evicting instead");
+                        None
+                    }
+                }
+            };
+            if let Some(len) = spilled_len {
+                inner.bytes -= len;
+                inner.spills += 1;
+                continue;
+            }
+        }
         if let Some(e) = inner.entries.remove(&id) {
             inner.bytes -= e.data.len();
             inner.evictions += 1;
             inner.evicted_log.push(id);
+        }
+    }
+}
+
+/// Read a spilled blob back into memory: hash-verify, re-instate
+/// `Payload::Mem`, delete the spill file, and re-run eviction (making
+/// room for the faulted blob may spill something else). A missing or
+/// corrupt spill file demotes the entry to a plain eviction (logged for
+/// eager unpublish) and reads as a miss.
+fn fault_in(inner: &mut Inner, budget: usize, id: ObjId) -> Option<Arc<Vec<u8>>> {
+    match inner.entries.get(&id)?.data {
+        Payload::Spilled { .. } => {}
+        Payload::Mem(ref d) => return Some(d.clone()),
+    }
+    let want_len = inner.entries.get(&id)?.data.len();
+    let dir = inner.spill_dir.clone();
+    let path = dir.as_deref().map(|d| spill_path(d, id));
+    let bytes = path.as_ref().and_then(|p| std::fs::read(p).ok());
+    let ok = bytes
+        .as_ref()
+        .is_some_and(|b| b.len() == want_len && ObjId::of(b) == id);
+    if !ok {
+        // Unreachable bytes (dir unset, file vanished, or contents rotted):
+        // the blob is simply gone — same outcome as an eviction.
+        log::warn!("store: spill file for {id} missing or corrupt; dropping entry");
+        inner.entries.remove(&id);
+        inner.evictions += 1;
+        inner.evicted_log.push(id);
+        if let Some(p) = path {
+            let _ = std::fs::remove_file(p);
+        }
+        return None;
+    }
+    let data = Arc::new(bytes.expect("verified above"));
+    let len = data.len();
+    if let Some(e) = inner.entries.get_mut(&id) {
+        e.data = Payload::Mem(data.clone());
+    }
+    inner.bytes += len;
+    inner.spill_faults += 1;
+    if let Some(p) = path {
+        let _ = std::fs::remove_file(p);
+    }
+    evict_over_budget(inner, budget, Some(id));
+    Some(data)
+}
+
+impl Drop for LocalStore {
+    /// Best-effort hygiene: a dying store takes its spill files with it
+    /// (they are useless without the entry map that indexes them).
+    fn drop(&mut self) {
+        let inner = self.inner.get_mut().expect("store lock poisoned");
+        if let Some(dir) = &inner.spill_dir {
+            for (id, e) in &inner.entries {
+                if matches!(e.data, Payload::Spilled { .. }) {
+                    let _ = std::fs::remove_file(spill_path(dir, *id));
+                }
+            }
         }
     }
 }
@@ -478,6 +719,120 @@ mod tests {
         assert!(s.unpin(a));
         assert!(s.remove(a));
         assert!(!s.contains(a));
+    }
+
+    #[test]
+    fn incremental_hasher_matches_one_shot() {
+        let data = blob(9, 10_000);
+        let whole = ObjId::of(&data);
+        for split in [0usize, 1, 17, 4096, 9_999, 10_000] {
+            let mut h = ObjHasher::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finish(), whole, "split at {split}");
+        }
+        // Many tiny updates agree too (chunked streaming).
+        let mut h = ObjHasher::new();
+        for c in data.chunks(313) {
+            h.update(c);
+        }
+        assert_eq!(h.finish(), whole);
+        assert_eq!(ObjHasher::new().finish(), ObjId::of(b""));
+    }
+
+    fn temp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "fiber-spill-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn spill_round_trip_faults_back_verified() {
+        let dir = temp_dir("roundtrip");
+        let s = LocalStore::new(2500);
+        s.set_spill_dir(Some(dir.clone())).unwrap();
+        let a = s.insert(&blob(1, 1000));
+        let b = s.insert(&blob(2, 1000));
+        s.get(a).unwrap(); // b becomes LRU
+        let c = s.insert(&blob(3, 1000));
+        // b was spilled, not dropped: still held, zero evictions pushed.
+        assert!(s.contains(b), "spilled blob still answers contains()");
+        assert_eq!(s.spilled(), 1);
+        assert_eq!(s.spill_counters().0, 1);
+        assert!(s.drain_evicted().is_empty(), "spill is not an eviction");
+        assert!(s.bytes() <= 2500, "spilled bytes left the budget");
+        let on_disk: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(on_disk.len(), 1, "one spill file");
+        // Metadata answers without faulting.
+        assert_eq!(s.meta(b).unwrap().0, 1000);
+        assert_eq!(s.spill_counters().1, 0, "meta must not fault");
+        // get() faults it back in, hash-verified; the file is reclaimed
+        // and something else spills to make room.
+        assert_eq!(*s.get(b).unwrap(), blob(2, 1000));
+        assert_eq!(s.spill_counters().1, 1);
+        assert!(s.contains(a) && s.contains(b) && s.contains(c));
+        assert!(s.bytes() <= 2500);
+        drop(s);
+        // Drop hygiene: a dying store removes its spill files.
+        let leftover = std::fs::read_dir(&dir)
+            .map(|d| d.count())
+            .unwrap_or(0);
+        assert_eq!(leftover, 0, "spill files cleaned up on drop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_file_reads_as_eviction() {
+        let dir = temp_dir("corrupt");
+        let s = LocalStore::new(1500);
+        s.set_spill_dir(Some(dir.clone())).unwrap();
+        let a = s.insert(&blob(4, 1000));
+        let _b = s.insert(&blob(5, 1000)); // spills a
+        assert_eq!(s.spilled(), 1);
+        let path = std::fs::read_dir(&dir).unwrap().next().unwrap().unwrap().path();
+        std::fs::write(&path, b"rotten").unwrap();
+        assert!(s.get(a).is_none(), "corrupt spill must read as a miss");
+        assert!(!s.contains(a));
+        assert_eq!(s.drain_evicted(), vec![a], "logged for eager unpublish");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spilled_chunks_serve_after_fault() {
+        let dir = temp_dir("chunks");
+        let s = LocalStore::with_chunk_size(1500, 256);
+        s.set_spill_dir(Some(dir.clone())).unwrap();
+        let data = blob(6, 1000);
+        let a = s.insert(&data);
+        let _b = s.insert(&blob(7, 1000)); // spills a
+        assert_eq!(s.spilled(), 1);
+        // chunk() transparently faults the blob back.
+        assert_eq!(s.chunk(a, 0).unwrap(), &data[..256]);
+        assert_eq!(s.chunk(a, 3).unwrap(), &data[768..]);
+        assert_eq!(s.spill_counters().1, 1, "one fault served both chunks");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reinsert_rematerializes_spilled_blob() {
+        let dir = temp_dir("reinsert");
+        let s = LocalStore::new(1500);
+        s.set_spill_dir(Some(dir.clone())).unwrap();
+        let data = blob(8, 1000);
+        let a = s.insert(&data);
+        let _b = s.insert(&blob(9, 1000)); // spills a
+        assert_eq!(s.spilled(), 1);
+        // Re-inserting identical bytes promotes the entry back to memory
+        // without a disk read (and reclaims the spill file).
+        assert_eq!(s.insert(&data), a);
+        assert_eq!(s.spilled(), 1, "something else spilled to make room");
+        assert_eq!(s.spill_counters().1, 0, "no disk fault needed");
+        assert_eq!(*s.get(a).unwrap(), data);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

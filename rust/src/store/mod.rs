@@ -59,8 +59,8 @@ pub mod local;
 pub mod node;
 
 pub use directory::{DirEntry, Directory, DirectoryClient};
-pub use local::{LocalStore, ObjId, DEFAULT_CHUNK};
-pub use node::{tags, StoreNode, LOCAL_ONLY};
+pub use local::{LocalStore, ObjHasher, ObjId, DEFAULT_CHUNK};
+pub use node::{codes, tags, StoreNode, LOCAL_ONLY};
 
 use std::marker::PhantomData;
 use std::sync::{Arc, Mutex};

@@ -4,9 +4,11 @@
 //! A [`StoreNode`] wraps a [`LocalStore`] and a [`DirectoryClient`].
 //! `put` inserts locally and publishes this node as a location; `get`
 //! returns the local copy when held, otherwise looks the id up in the
-//! directory and streams the blob chunk-by-chunk from a peer — then caches
-//! it and (when this node serves) publishes itself as an extra location,
-//! so the swarm's fetch capacity grows with every copy.
+//! directory and streams the blob from a peer over one pipelined
+//! `BLOB_GET` transfer (header + all chunk frames back-to-back on a
+//! single connection) — then caches it and (when this node serves)
+//! publishes itself as an extra location, so the swarm's fetch capacity
+//! grows with every copy.
 //!
 //! **Single-flight:** concurrent `get`s of one missing id share a single
 //! transfer. The first caller becomes the flight leader and fetches; the
@@ -16,18 +18,18 @@
 //! transfer per node".
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::comms::rpc::{coded_err, RemoteError, RpcClient, RpcServer, StreamReply};
 use crate::comms::Addr;
 use crate::wire::{self, Decode, Encode};
 
 use super::directory::{Directory, DirectoryClient};
-use super::local::{LocalStore, ObjId};
+use super::local::{LocalStore, ObjHasher, ObjId};
 use super::ObjRef;
 
 /// RPC tags of the store protocol (directory plane + blob plane). One
@@ -39,6 +41,20 @@ pub mod tags {
     pub const DIR_UNPUBLISH: u32 = 0x5703;
     pub const BLOB_META: u32 = 0x5710;
     pub const BLOB_CHUNK: u32 = 0x5711;
+    /// Streaming fetch: one request, a `(len, n_chunks, chunk_size)`
+    /// header reply, then `n_chunks` raw chunk frames pipelined
+    /// back-to-back on the same connection.
+    pub const BLOB_GET: u32 = 0x5712;
+}
+
+/// Machine-readable error codes the store protocol carries over the RPC
+/// boundary (via [`crate::comms::rpc::coded_err`]). Fetchers branch on
+/// these instead of substring-matching error prose.
+pub mod codes {
+    /// Authoritative miss: the peer answered and does not hold the blob
+    /// (it evicted it, or never had it). Safe to unpublish the location
+    /// unconditionally — unlike a transport failure.
+    pub const NOT_HELD: u32 = 0x404;
 }
 
 /// Location-marker prefix for blobs held by a node without a TCP server:
@@ -112,6 +128,11 @@ pub struct StoreNode {
     transfers_out: Arc<AtomicU64>,
     local_hits: AtomicU64,
     dedup_waits: AtomicU64,
+    /// Cold fetches use the streaming `BLOB_GET` verb (default). Cleared
+    /// only by benches/tests to measure the serial per-chunk baseline.
+    pipelined: AtomicBool,
+    /// Chunk frames received over streaming fetches.
+    chunks_in: AtomicU64,
 }
 
 impl StoreNode {
@@ -133,6 +154,8 @@ impl StoreNode {
             transfers_out: Arc::new(AtomicU64::new(0)),
             local_hits: AtomicU64::new(0),
             dedup_waits: AtomicU64::new(0),
+            pipelined: AtomicBool::new(true),
+            chunks_in: AtomicU64::new(0),
         })
     }
 
@@ -169,10 +192,15 @@ impl StoreNode {
         let local = self.local.clone();
         let hosted = self.hosted.clone();
         let out = self.transfers_out.clone();
-        let srv = RpcServer::bind(
+        let stream_local = self.local.clone();
+        let stream_out = self.transfers_out.clone();
+        let srv = RpcServer::bind_streaming(
             bind,
             Arc::new(move |tag, payload| {
                 serve_store_req(&local, hosted.as_deref(), &out, tag, payload)
+            }),
+            Arc::new(move |tag, payload| {
+                serve_blob_stream(&stream_local, &stream_out, tag, payload)
             }),
         )?;
         let ep = format!("tcp://{}", srv.local_addr());
@@ -285,10 +313,12 @@ impl StoreNode {
             match flight {
                 None => {
                     // Flight leader: perform the one transfer.
-                    let fetch = crate::trace::Span::begin("store.fetch")
+                    let mut fetch = crate::trace::Span::begin("store.fetch")
                         .arg("obj", trace_obj(id));
-                    let res =
-                        crate::trace::with_span(fetch.id(), || self.fetch_remote(id));
+                    let fetch_id = fetch.id();
+                    let res = crate::trace::with_span(fetch_id, || {
+                        self.fetch_remote(id, &mut fetch)
+                    });
                     drop(fetch);
                     let f = self
                         .inflight
@@ -320,9 +350,14 @@ impl StoreNode {
         }
     }
 
-    fn fetch_remote(&self, id: ObjId) -> Result<Arc<Vec<u8>>> {
+    fn fetch_remote(
+        &self,
+        id: ObjId,
+        span: &mut crate::trace::Span,
+    ) -> Result<Arc<Vec<u8>>> {
         let entry = self.dir.lookup(id)?;
         let own = self.endpoint();
+        let pipelined = self.pipelined.load(Ordering::Relaxed);
         let mut last_err = anyhow!(
             "object {id}: no fetchable location among {:?}",
             entry.locations
@@ -331,8 +366,11 @@ impl StoreNode {
             if Some(loc.as_str()) == own.as_deref() || !loc.starts_with("tcp://") {
                 continue;
             }
-            match self.fetch_from(loc, id, entry.len) {
-                Ok(bytes) => {
+            match self.fetch_from(loc, id, entry.len, pipelined) {
+                Ok((bytes, chunks)) => {
+                    span.add_arg("bytes", bytes.len() as i64);
+                    span.add_arg("chunks", chunks as i64);
+                    span.add_arg("pipelined", i64::from(pipelined));
                     // The transfer is already hash-verified; cache the
                     // very buffer we hand back — no re-hash, no copy.
                     let data = Arc::new(bytes);
@@ -351,18 +389,21 @@ impl StoreNode {
                     return Ok(data);
                 }
                 Err(e) => {
-                    // Drop the (possibly wedged) connection, and evict the
-                    // location from the directory — otherwise every later
-                    // cold fetch re-pays the connect timeout on the same
-                    // dead endpoint. Never evict the *last* location on a
-                    // transport failure: a transient outage of the sole
-                    // holder must not garbage-collect a blob that still
-                    // exists. The exception is an *authoritative* miss —
-                    // the endpoint answered and said it no longer holds
-                    // the blob (e.g. it evicted it) — which is safe to
-                    // unregister unconditionally.
+                    // Drop the (possibly wedged or mid-stream-poisoned)
+                    // connection, and evict the location from the
+                    // directory — otherwise every later cold fetch re-pays
+                    // the connect timeout on the same dead endpoint. Never
+                    // evict the *last* location on a transport failure: a
+                    // transient outage of the sole holder must not
+                    // garbage-collect a blob that still exists. The
+                    // exception is an *authoritative* miss — the endpoint
+                    // answered with [`codes::NOT_HELD`] (it evicted the
+                    // blob) — which is safe to unregister unconditionally.
                     self.peers.lock().unwrap().remove(loc);
-                    let authoritative = format!("{e:#}").contains("is not held by this node");
+                    let authoritative = e
+                        .chain()
+                        .filter_map(|c| c.downcast_ref::<RemoteError>())
+                        .any(|re| re.code == Some(codes::NOT_HELD));
                     if authoritative || entry.locations.len() > 1 {
                         if let Err(ue) = self.dir.unpublish(id, loc) {
                             log::warn!("store: unpublish of dead {loc} failed: {ue:#}");
@@ -375,13 +416,99 @@ impl StoreNode {
         Err(last_err)
     }
 
-    fn fetch_from(&self, loc: &str, id: ObjId, want_len: u64) -> Result<Vec<u8>> {
+    /// One transfer from one location; returns the verified bytes and the
+    /// chunk count moved. `pipelined` picks the streaming `BLOB_GET` verb
+    /// (one request, all chunks back-to-back on the connection) over the
+    /// serial per-chunk `BLOB_META`+`BLOB_CHUNK` baseline.
+    fn fetch_from(
+        &self,
+        loc: &str,
+        id: ObjId,
+        want_len: u64,
+        pipelined: bool,
+    ) -> Result<(Vec<u8>, u64)> {
         let cli = self.peer(loc)?;
+        if pipelined {
+            self.fetch_streamed(&cli, id, want_len)
+        } else {
+            self.fetch_serial(&cli, id, want_len)
+        }
+    }
+
+    /// Streaming fetch: decode the header, pre-size **one** buffer, read
+    /// every chunk frame straight into its final slice (no per-chunk
+    /// `Vec`, no `extend_from_slice` re-copy), hashing incrementally as
+    /// chunks land.
+    fn fetch_streamed(
+        &self,
+        cli: &RpcClient,
+        id: ObjId,
+        want_len: u64,
+    ) -> Result<(Vec<u8>, u64)> {
+        cli.call_streamed(tags::BLOB_GET, &wire::to_bytes(&id), |header, frames| {
+            let (len, n_chunks, chunk_size): (u64, u64, u64) =
+                wire::from_bytes(header).map_err(|e| anyhow!("blob_get header decode: {e}"))?;
+            anyhow::ensure!(
+                len == want_len,
+                "peer reports {len} bytes, directory says {want_len}"
+            );
+            anyhow::ensure!(
+                len == 0 || (n_chunks > 0 && chunk_size > 0),
+                "peer reports {n_chunks} chunks of {chunk_size} bytes for a \
+                 {len}-byte blob"
+            );
+            anyhow::ensure!(
+                len <= n_chunks.saturating_mul(chunk_size.max(1)),
+                "peer chunk plan ({n_chunks} × {chunk_size}) cannot cover {len} bytes"
+            );
+            let mut out = vec![0u8; len as usize];
+            let mut hasher = ObjHasher::new();
+            let mut filled = 0usize;
+            for i in 0..n_chunks {
+                let lo = filled;
+                let hi = (lo + chunk_size as usize).min(out.len());
+                anyhow::ensure!(lo < hi, "peer streams more chunks than bytes");
+                let got = frames.next_into(&mut out[lo..hi])?;
+                anyhow::ensure!(
+                    got == hi - lo,
+                    "chunk {i}: got {got} bytes, want {}",
+                    hi - lo
+                );
+                hasher.update(&out[lo..hi]);
+                filled = hi;
+            }
+            anyhow::ensure!(
+                filled == out.len(),
+                "streamed {filled} bytes, expected {len}"
+            );
+            anyhow::ensure!(
+                hasher.finish() == id,
+                "content hash mismatch (corrupt transfer)"
+            );
+            self.chunks_in.fetch_add(n_chunks, Ordering::Relaxed);
+            Ok((out, n_chunks))
+        })
+    }
+
+    /// Serial per-chunk baseline: one RPC round trip per chunk. Kept as
+    /// the measured comparison point for `benches/store.rs`.
+    fn fetch_serial(
+        &self,
+        cli: &RpcClient,
+        id: ObjId,
+        want_len: u64,
+    ) -> Result<(Vec<u8>, u64)> {
         let (len, n_chunks, _chunk_size): (u64, u64, u64) =
             cli.call_typed(tags::BLOB_META, &id)?;
         anyhow::ensure!(
             len == want_len,
             "peer reports {len} bytes, directory says {want_len}"
+        );
+        // Fail fast on an impossible chunk plan instead of reassembling
+        // an empty buffer and only noticing at the length check.
+        anyhow::ensure!(
+            len == 0 || n_chunks > 0,
+            "peer reports 0 chunks for a {len}-byte blob"
         );
         let mut out = Vec::with_capacity(len as usize);
         for i in 0..n_chunks {
@@ -400,7 +527,7 @@ impl StoreNode {
             ObjId::of(&out) == id,
             "content hash mismatch (corrupt transfer)"
         );
-        Ok(out)
+        Ok((out, n_chunks))
     }
 
     fn peer(&self, loc: &str) -> Result<Arc<RpcClient>> {
@@ -491,10 +618,28 @@ impl StoreNode {
         self.transfers_in.load(Ordering::Relaxed)
     }
 
-    /// Blob transfers this node served to peers (counted at the meta
-    /// request that opens each transfer).
+    /// Blob transfers this node served to peers (counted at the request
+    /// that opens each transfer: `BLOB_GET` for streaming fetchers,
+    /// `BLOB_META` for the serial baseline).
     pub fn serves(&self) -> u64 {
         self.transfers_out.load(Ordering::Relaxed)
+    }
+
+    /// Chunk frames received over streaming (`BLOB_GET`) fetches.
+    pub fn pipelined_chunks(&self) -> u64 {
+        self.chunks_in.load(Ordering::Relaxed)
+    }
+
+    /// Toggle the streaming fetch path (on by default). Benches clear it
+    /// to measure the serial per-chunk baseline.
+    pub fn set_pipelined_fetch(&self, on: bool) {
+        self.pipelined.store(on, Ordering::Relaxed);
+    }
+
+    /// Connections this node's server has accepted (None before `serve`).
+    /// Tests use it to prove a whole blob moved over one connection.
+    pub fn served_connections(&self) -> Option<usize> {
+        self.server.lock().unwrap().as_ref().map(|s| s.connections())
     }
 
     /// `get`s answered straight from the local cache.
@@ -541,7 +686,7 @@ fn serve_store_req(
             let id: ObjId = wire::from_bytes(payload).map_err(|e| e.to_string())?;
             let meta = local
                 .meta(id)
-                .ok_or_else(|| format!("blob {id} is not held by this node"))?;
+                .ok_or_else(|| coded_err(codes::NOT_HELD, format!("blob {id} is not held by this node")))?;
             transfers_out.fetch_add(1, Ordering::Relaxed);
             Ok(wire::to_bytes(&meta))
         }
@@ -554,6 +699,54 @@ fn serve_store_req(
         }
         other => Err(format!("unknown store tag {other:#x}")),
     }
+}
+
+/// The streaming half of the blob plane: `BLOB_GET` answers with a
+/// `(len, n_chunks, chunk_size)` header and then writes every chunk
+/// back-to-back on the connection. Chunks are sliced on demand from the
+/// blob's `Arc` — zero re-copy on the serving side — and the blocking
+/// socket writes bound the in-flight window at the send-buffer size, so
+/// a slow reader stalls the stream instead of ballooning server memory.
+/// Returns `None` for every other tag (the call/response handler serves
+/// them).
+fn serve_blob_stream(
+    local: &Arc<LocalStore>,
+    transfers_out: &AtomicU64,
+    tag: u32,
+    payload: &[u8],
+) -> Option<StreamReply> {
+    if tag != tags::BLOB_GET {
+        return None;
+    }
+    let id: ObjId = match wire::from_bytes(payload) {
+        Ok(id) => id,
+        Err(e) => return Some(StreamReply::err(e.to_string())),
+    };
+    // `get` (not `meta`) so a spilled blob is faulted back in before the
+    // header promises its chunks.
+    let Some(data) = local.get(id) else {
+        return Some(StreamReply::err(coded_err(
+            codes::NOT_HELD,
+            format!("blob {id} is not held by this node"),
+        )));
+    };
+    transfers_out.fetch_add(1, Ordering::Relaxed);
+    let chunk_size = local.chunk_size();
+    let n_chunks = if data.is_empty() {
+        0u64
+    } else {
+        data.len().div_ceil(chunk_size) as u64
+    };
+    let header = wire::to_bytes(&(data.len() as u64, n_chunks, chunk_size as u64));
+    Some(StreamReply {
+        header: Ok(header),
+        body: Some(Box::new(move |emit| {
+            for chunk in data.chunks(chunk_size) {
+                emit(chunk)?;
+            }
+            Ok(())
+        })),
+    })
 }
 
 #[cfg(test)]
@@ -635,6 +828,86 @@ mod tests {
             "eight racing gets must share a single-flight transfer"
         );
         assert_eq!(a.serves(), 1, "the serving side saw exactly one transfer");
+    }
+
+    #[test]
+    fn serial_fallback_path_still_fetches() {
+        let a = StoreNode::host(16 << 20);
+        let ep = a.serve("127.0.0.1:0").unwrap();
+        let data = payload(8, 700_000); // 3 chunks at the default size
+        let id = a.put_bytes(&data).unwrap();
+        let b = StoreNode::connect(&ep, 16 << 20).unwrap();
+        b.set_pipelined_fetch(false);
+        assert_eq!(*b.get_bytes(id).unwrap(), data);
+        assert_eq!(b.transfers(), 1);
+        assert_eq!(b.pipelined_chunks(), 0, "serial path moves no stream frames");
+        assert_eq!(a.serves(), 1);
+    }
+
+    #[test]
+    fn streamed_fetch_counts_chunk_frames() {
+        let a = StoreNode::host(16 << 20);
+        let ep = a.serve("127.0.0.1:0").unwrap();
+        let data = payload(9, 1_000_000); // 4 chunks of 256 KiB
+        let id = a.put_bytes(&data).unwrap();
+        let b = StoreNode::connect(&ep, 16 << 20).unwrap();
+        assert_eq!(*b.get_bytes(id).unwrap(), data);
+        assert_eq!(b.transfers(), 1);
+        assert_eq!(b.pipelined_chunks(), 4, "4 chunk frames in one stream");
+        assert_eq!(a.serves(), 1);
+    }
+
+    #[test]
+    fn authoritative_miss_is_typed_not_string_matched() {
+        // A location that answers but does not hold the blob must be
+        // unpublished via the NOT_HELD error code — even when it is the
+        // *only* location (authoritative misses GC unconditionally,
+        // unlike transport failures).
+        let a = StoreNode::host(16 << 20);
+        let ep_a = a.serve("127.0.0.1:0").unwrap();
+        // A ghost id the directory lists at A, which never held it.
+        let ghost = ObjId::of(b"never stored anywhere");
+        a.directory().publish(ghost, 22, &ep_a).unwrap();
+        let b = StoreNode::connect(&ep_a, 16 << 20).unwrap();
+        let err = b.get_bytes(ghost).unwrap_err();
+        assert!(err.to_string().contains("fetching"), "{err:#}");
+        // The dead location was unregistered despite being the last one:
+        // the directory entry is now garbage-collected.
+        let lookup = b.directory().lookup(ghost).unwrap_err().to_string();
+        assert!(
+            lookup.contains("garbage-collected") || lookup.contains("unknown"),
+            "{lookup}"
+        );
+    }
+
+    #[test]
+    fn spilled_blob_streams_to_peers() {
+        // A holder that spilled a blob to disk still serves it: the
+        // BLOB_GET handler faults it back in transparently.
+        let dir = std::env::temp_dir().join(format!(
+            "fiber-node-spill-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let a = StoreNode::host(1_200_000);
+        a.local().set_spill_dir(Some(dir.clone())).unwrap();
+        let ep = a.serve("127.0.0.1:0").unwrap();
+        let data = payload(10, 1_000_000);
+        let id = a.put_bytes(&data).unwrap();
+        // Push A over budget: the blob spills instead of dropping, so the
+        // location stays published.
+        let _other = a.put_bytes(&payload(11, 1_100_000)).unwrap();
+        assert_eq!(a.local().spilled(), 1, "victim spilled, not dropped");
+        assert!(a.contains(id), "spilled blob still held");
+        assert_eq!(
+            a.directory().lookup(id).unwrap().locations,
+            vec![ep.clone()],
+            "spill must not unpublish"
+        );
+        let b = StoreNode::connect(&ep, 16 << 20).unwrap();
+        assert_eq!(*b.get_bytes(id).unwrap(), data, "faulted back and served");
+        assert_eq!(a.local().spill_counters().1, 1, "one disk fault");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -59,6 +59,25 @@ impl Welford {
         self.max
     }
 
+    /// Fold a whole `f32` batch in at once: the slice is reduced by the
+    /// vectorized [`crate::ring::kernels::slice_stats`] kernel and merged
+    /// as one Chan-style partial — `n` lanes of SIMD arithmetic instead of
+    /// `n` scalar [`Welford::add`] calls. Equivalent to adding every
+    /// element (same guarantee [`Welford::merge`] gives for shards).
+    pub fn add_slice_f32(&mut self, xs: &[f32]) {
+        let Some(s) = crate::ring::kernels::slice_stats(xs) else {
+            return;
+        };
+        let batch = Welford {
+            n: s.n,
+            mean: s.mean,
+            m2: s.m2,
+            min: s.min,
+            max: s.max,
+        };
+        self.merge(&batch);
+    }
+
     pub fn merge(&mut self, other: &Welford) {
         if other.n == 0 {
             return;
@@ -306,6 +325,28 @@ mod tests {
                 assert_eq!(a.max(), single.max());
             }
         }
+    }
+
+    #[test]
+    fn welford_add_slice_matches_scalar_adds() {
+        let xs: Vec<f32> = (0..1001).map(|i| ((i * 37) % 501) as f32 - 250.0).collect();
+        let mut batch = Welford::new();
+        batch.add_slice_f32(&xs);
+        let mut scalar = Welford::new();
+        for &x in &xs {
+            scalar.add(x as f64);
+        }
+        assert_eq!(batch.count(), scalar.count());
+        assert!((batch.mean() - scalar.mean()).abs() < 1e-9 * (1.0 + scalar.mean().abs()));
+        assert!((batch.var() - scalar.var()).abs() < 1e-7 * (1.0 + scalar.var().abs()));
+        assert_eq!(batch.min(), scalar.min());
+        assert_eq!(batch.max(), scalar.max());
+        // Batches compose with prior scalar state, and empties are no-ops.
+        let mut mixed = Welford::new();
+        mixed.add(5.0);
+        mixed.add_slice_f32(&[]);
+        mixed.add_slice_f32(&xs);
+        assert_eq!(mixed.count(), 1 + xs.len() as u64);
     }
 
     #[test]

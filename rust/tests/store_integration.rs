@@ -6,9 +6,11 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Duration;
 
 use fiber::api::pool::Pool;
+use fiber::comms::{read_frame, write_frame};
 use fiber::coordinator::register_task;
 use fiber::ring::{is_chaos_killed, Rendezvous, RingMember};
-use fiber::store::{self, ObjRef, StoreNode};
+use fiber::store::{self, ObjId, ObjRef, StoreNode, DEFAULT_CHUNK};
+use fiber::wire;
 
 /// The process-global store slot is one per process; tests that install
 /// their own node serialize on this lock so they cannot stomp each other.
@@ -235,6 +237,105 @@ fn store_broadcast_cache_hits_after_heal() {
         "host served {} transfers for {} cold fetchers",
         host.serves(),
         world - 1
+    );
+}
+
+/// **Acceptance (streaming hot path):** a multi-MB cold fetch moves the
+/// whole blob as one pipelined transfer — a single `BLOB_GET` request
+/// answered by every chunk frame back-to-back on **one** connection — not
+/// a per-chunk call/response ladder, while all the store semantics
+/// (transfer counters, republish-as-new-location) hold.
+#[test]
+fn cold_fetch_streams_on_one_connection() {
+    let node_a = StoreNode::host(256 << 20);
+    let ep_a = node_a.serve("127.0.0.1:0").unwrap();
+    let data: Vec<u8> = (0..4 << 20).map(|i: u32| (i % 251) as u8).collect();
+    let n_chunks = (data.len() as u64).div_ceil(DEFAULT_CHUNK as u64);
+    assert!(n_chunks >= 16, "payload must span many chunks");
+    let id = node_a.put_bytes(&data).unwrap();
+
+    let node_b = StoreNode::connect(&ep_a, 256 << 20).unwrap();
+    node_b.serve("127.0.0.1:0").unwrap();
+    let got = node_b.get_bytes(id).unwrap();
+    assert_eq!(*got, data);
+
+    assert_eq!(node_b.transfers(), 1);
+    assert_eq!(node_a.serves(), 1);
+    assert_eq!(
+        node_b.pipelined_chunks(),
+        n_chunks,
+        "every chunk must arrive as a pipelined stream frame"
+    );
+    // Node A accepted exactly two connections: node B's directory client
+    // and node B's blob peer. A per-chunk dialing regression (or a serial
+    // fallback) would show up as more.
+    assert_eq!(
+        node_a.served_connections(),
+        Some(2),
+        "the whole blob must ride one blob connection (plus the directory client)"
+    );
+    // The fetched copy republished: node B is now a second location.
+    let entry = node_a.directory().lookup(id).unwrap();
+    assert_eq!(entry.locations.len(), 2, "{:?}", entry.locations);
+}
+
+/// **Acceptance (mid-stream failover):** a peer that dies mid-stream —
+/// header plus one chunk frame, then the connection drops — must not fail
+/// the fetch. The fetcher abandons the poisoned connection, unpublishes
+/// the dead location (more than one exists) and completes from the next
+/// one, hash-verified.
+#[test]
+fn mid_stream_peer_death_falls_back_to_next_location() {
+    let node_a = StoreNode::host(256 << 20);
+    let ep_a = node_a.serve("127.0.0.1:0").unwrap();
+    let data: Vec<u8> = (0..2 << 20).map(|i: u32| (i % 239) as u8).collect();
+    let id = ObjId::of(&data);
+    let len = data.len() as u64;
+
+    // A stub "holder" speaking just enough of the streaming protocol to
+    // die convincingly: it reads the BLOB_GET request, answers the header
+    // and ONE chunk frame, then drops the connection mid-stream.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let stub_ep = format!("tcp://{}", listener.local_addr().unwrap());
+    let first_chunk: Vec<u8> = data[..DEFAULT_CHUNK].to_vec();
+    let stub = std::thread::spawn(move || {
+        let (conn, _) = listener.accept().unwrap();
+        let mut reader = conn.try_clone().unwrap();
+        let req = read_frame(&mut reader).unwrap();
+        assert_eq!(
+            u32::from_le_bytes(req[..4].try_into().unwrap()),
+            fiber::store::tags::BLOB_GET,
+            "streaming fetch must open with BLOB_GET"
+        );
+        let n_chunks = len.div_ceil(DEFAULT_CHUNK as u64);
+        let header: Result<Vec<u8>, String> =
+            Ok(wire::to_bytes(&(len, n_chunks, DEFAULT_CHUNK as u64)));
+        let mut writer = conn;
+        write_frame(&mut writer, &wire::to_bytes(&header)).unwrap();
+        write_frame(&mut writer, &first_chunk).unwrap();
+        // Mid-stream death: the remaining chunk frames never arrive.
+        drop(writer);
+    });
+
+    // Publish the stub FIRST (locations keep push order) so the fetcher
+    // tries it before the real holder.
+    node_a.directory().publish(id, len, &stub_ep).unwrap();
+    let real_id = node_a.put_bytes(&data).unwrap();
+    assert_eq!(real_id, id);
+
+    let node_b = StoreNode::connect(&ep_a, 256 << 20).unwrap();
+    let got = node_b.get_bytes(id).unwrap();
+    assert_eq!(*got, data, "failover fetch must deliver verified bytes");
+    assert_eq!(node_b.transfers(), 1);
+    stub.join().unwrap();
+
+    // The dead location was evicted from the directory; the real holder
+    // remains (node B is unserved, so it does not republish).
+    let entry = node_a.directory().lookup(id).unwrap();
+    assert!(
+        !entry.locations.contains(&stub_ep),
+        "mid-stream-dead location must be unpublished: {:?}",
+        entry.locations
     );
 }
 
