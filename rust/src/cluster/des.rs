@@ -87,6 +87,18 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|Reverse(e)| e.at)
     }
 
+    /// Advance the clock to `t` without processing events, clamped so it
+    /// never moves past a pending event (drain those first — see
+    /// [`super::simk8s::SimCluster::advance_to`]). A `t` in the past is a
+    /// no-op; returns the resulting time. This is how an external
+    /// time-driver (the trace replay harness) keeps one shared clock with
+    /// the pod machinery instead of running a second timeline.
+    pub fn advance_to(&mut self, t: SimTime) -> SimTime {
+        let cap = self.peek_time().unwrap_or(SimTime::MAX);
+        self.now = self.now.max(t.min(cap));
+        self.now
+    }
+
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -131,6 +143,16 @@ mod tests {
         q.pop();
         q.push_at(50, ()); // in the past → fires at now=100
         assert_eq!(q.pop(), Some((100, ())));
+    }
+
+    #[test]
+    fn advance_to_moves_the_idle_clock_but_not_past_events() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        assert_eq!(q.advance_to(500), 500);
+        q.push_at(600, "e");
+        assert_eq!(q.advance_to(1000), 600, "clamped to the pending event");
+        assert_eq!(q.pop(), Some((600, "e")));
+        assert_eq!(q.advance_to(100), 600, "the past is a no-op");
     }
 
     #[test]

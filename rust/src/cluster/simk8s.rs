@@ -266,6 +266,14 @@ impl SimCluster {
         self.pods.values().filter(|p| !p.phase.is_terminal()).count()
     }
 
+    /// Drain events up to `t`, then advance the idle clock to `t` (clamped
+    /// to any still-pending event). The trace replay driver uses this to
+    /// keep collective-phase arithmetic and pod lifecycle on one timeline.
+    pub fn advance_to(&mut self, t: SimTime) -> SimTime {
+        self.run_until(t);
+        self.queue.advance_to(t)
+    }
+
     /// Process events until the queue is empty or `until` is reached.
     /// Returns the final virtual time.
     pub fn run_until(&mut self, until: SimTime) -> SimTime {
@@ -390,6 +398,631 @@ impl SimCluster {
             pod,
             phase,
         });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scenario replay: re-drive a recorded chaos schedule against virtual pods.
+// ---------------------------------------------------------------------------
+
+use anyhow::Result;
+
+use crate::trace::replay::{Calibration, ChaosEvent, ChaosKind, Scenario};
+use crate::trace::TraceEvent;
+
+/// The checkpoint ObjId every replayed run shares (`store.put` once on the
+/// leader, one cold `store.fetch` per node, `store.hit` afterwards).
+const CKPT_OBJ: i64 = 1;
+
+/// Counters summarizing one replay run.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayStats {
+    /// Members alive when the run ended (adopted spares and grows included).
+    pub members_final: usize,
+    /// Every pod ever submitted (members, spares, respawns, grows).
+    pub pods: usize,
+    pub kills: usize,
+    /// `ring.heal` spans emitted across all survivors and chaos batches.
+    pub heals: usize,
+    /// Grow joins + partition rejoins.
+    pub grows: usize,
+    pub events: usize,
+    /// Final virtual time of the run.
+    pub final_ns: u64,
+}
+
+/// What a replay produces: the synthesized per-node event stream (unsorted;
+/// [`crate::trace::replay::replay`] time-sorts it into a `TraceDump`) and
+/// the run counters.
+pub struct ReplayOutcome {
+    pub events: Vec<(String, TraceEvent)>,
+    pub stats: ReplayStats,
+}
+
+/// One simulated ring member / spare, pinned to a service pod.
+struct SimNode {
+    name: String,
+    pod: PodId,
+    /// Has this node cold-fetched the checkpoint? Later accesses must be
+    /// `store.hit`s or the emitted trace violates `store.fetch-once`.
+    fetched: bool,
+    /// One-iteration compute slowdown: `(iter, factor)`.
+    straggle: Option<(usize, f64)>,
+    /// Partitioned through (exclusive) this iteration; 0 = connected.
+    partitioned_until: usize,
+    /// Earliest virtual time this node can start a task (pod boot / adopt).
+    ready_at: SimTime,
+    /// Killed nodes stay in the member list (stable indices) but inert.
+    dead: bool,
+}
+
+/// A `pool.run` emitted during the current iteration.
+struct RunRec {
+    mi: usize,
+    task_idx: usize,
+    span: u64,
+    start: SimTime,
+    dur: u64,
+}
+
+impl RunRec {
+    fn end(&self) -> SimTime {
+        self.start + self.dur
+    }
+}
+
+/// Re-drives a [`Scenario`] against [`SimCluster`] pods on the shared
+/// virtual clock, synthesizing the causally-linked trace the equivalent
+/// real run would have recorded. The driver's contract — enforced by the
+/// `trace::replay` tests and the CI replay smoke — is that its output
+/// passes every invariant in [`crate::trace::check`]:
+///
+/// * a killed member's in-flight spans die with its journal (nothing may
+///   dangle on them), survivors heal and `ring.resume` under their heal
+///   span, a spare `ring.adopt`s naming the interrupted `op_seq`, the
+///   leader `pool.restart`s the victim's task, and the rerun reuses the
+///   dispatch envelope and task index;
+/// * every node cold-fetches the checkpoint exactly once — partition
+///   rejoiners `store.hit`, they do not re-fetch;
+/// * the single held `store.put` is `store.release`d at the end, keeping
+///   refcounts balanced.
+pub struct ReplayDriver {
+    sc: Scenario,
+    cal: Calibration,
+    cluster: SimCluster,
+    rng: Rng,
+    members: Vec<SimNode>,
+    spares: Vec<SimNode>,
+    events: Vec<(String, TraceEvent)>,
+    stats: ReplayStats,
+    next_span: u64,
+    next_node: usize,
+    gen: i64,
+}
+
+impl ReplayDriver {
+    pub fn new(sc: Scenario, cal: Calibration) -> ReplayDriver {
+        let kills = sc
+            .events
+            .iter()
+            .filter(|e| matches!(e.kind, ChaosKind::Kill { .. }))
+            .count();
+        let grows: usize = sc
+            .events
+            .iter()
+            .map(|e| match e.kind {
+                ChaosKind::Grow { count } => count,
+                _ => 0,
+            })
+            .sum();
+        // Two 1-core service pods per simulated 2-core host; capacity for
+        // every pod the schedule can ever create, so nothing queues.
+        let capacity = sc.nodes + sc.spares + kills + grows;
+        let cfg = SimClusterConfig {
+            nodes: vec![NodeSpec::cpu_only(2, 4000); capacity.div_ceil(2)],
+            schedule_latency_ns: 2_000_000,
+            start_latency_ns: 50_000_000,
+            failure_rate_per_s: 0.0,
+            seed: sc.seed,
+        };
+        let rng = Rng::new(sc.seed ^ 0x5250_4c59);
+        ReplayDriver {
+            sc,
+            cal,
+            cluster: SimCluster::new(cfg),
+            rng,
+            members: Vec::new(),
+            spares: Vec::new(),
+            events: Vec::new(),
+            stats: ReplayStats::default(),
+            next_span: 0,
+            next_node: 0,
+            gen: 0,
+        }
+    }
+
+    fn span_id(&mut self) -> u64 {
+        self.next_span += 1;
+        self.next_span
+    }
+
+    fn jitter(&mut self, mean: u64) -> u64 {
+        self.rng.exponential(mean.max(1) as f64) as u64
+    }
+
+    fn emit(
+        &mut self,
+        node: &str,
+        ts: SimTime,
+        dur: u64,
+        span: u64,
+        parent: u64,
+        name: &str,
+        args: &[(&str, i64)],
+    ) {
+        self.events.push((
+            node.to_string(),
+            TraceEvent {
+                ts_ns: ts,
+                dur_ns: dur,
+                span,
+                parent,
+                tid: 1,
+                name: name.to_string(),
+                args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+            },
+        ));
+    }
+
+    /// Submit a fresh 1-core service pod; `ready_at` is filled in by the
+    /// caller once the cluster has processed its boot.
+    fn spawn_node(&mut self) -> SimNode {
+        let name = format!("sim-{}", self.next_node);
+        self.next_node += 1;
+        self.stats.pods += 1;
+        let pod = self.cluster.submit(PodSpec {
+            name: name.clone(),
+            resources: Resources {
+                cpu_milli: 1000,
+                mem_mb: 100,
+                gpu: 0,
+            },
+            duration_ns: None,
+        });
+        SimNode {
+            name,
+            pod,
+            fetched: false,
+            straggle: None,
+            partitioned_until: 0,
+            ready_at: 0,
+            dead: false,
+        }
+    }
+
+    /// Resolve a scenario rank to a member index: alive, never the leader,
+    /// and (when `need_active`) not partitioned. `None` when no member
+    /// qualifies — that chaos event is skipped rather than misfiring.
+    fn resolve_rank(&self, rank: usize, iter: usize, need_active: bool) -> Option<usize> {
+        let candidates: Vec<usize> = (1..self.members.len())
+            .filter(|&i| {
+                let m = &self.members[i];
+                !m.dead && (!need_active || m.partitioned_until <= iter)
+            })
+            .collect();
+        if candidates.is_empty() {
+            return None;
+        }
+        Some(candidates[rank % candidates.len()])
+    }
+
+    pub fn run(mut self) -> Result<ReplayOutcome> {
+        // Boot the initial fleet: members + warm spares.
+        for _ in 0..self.sc.nodes {
+            let n = self.spawn_node();
+            self.members.push(n);
+        }
+        for _ in 0..self.sc.spares {
+            let n = self.spawn_node();
+            self.spares.push(n);
+        }
+        self.cluster.run_to_quiescence();
+        for list in [&mut self.members, &mut self.spares] {
+            for n in list.iter_mut() {
+                n.ready_at = self.cluster.started_at(n.pod).unwrap_or(0);
+            }
+        }
+        let t0 = self.cluster.now();
+
+        // The leader seeds the shared checkpoint: one held put; everyone
+        // else cold-fetches it inside their first task.
+        let leader = self.members[0].name.clone();
+        let put = self.span_id();
+        let elems = self.sc.elems as i64;
+        self.emit(
+            &leader,
+            t0,
+            self.cal.put_ns.max(1),
+            put,
+            0,
+            "store.put",
+            &[("obj", CKPT_OBJ), ("held", 1), ("len", elems * 8)],
+        );
+        self.members[0].fetched = true; // the put leaves the blob local
+
+        let mut t = t0 + self.cal.put_ns + 10_000;
+        for iter in 0..self.sc.iters {
+            t = self.run_iter(iter, t)?;
+        }
+
+        // End of run: drop the held checkpoint reference.
+        let rel = self.span_id();
+        self.emit(&leader, t, 0, rel, 0, "store.release", &[("obj", CKPT_OBJ)]);
+        self.cluster.advance_to(t);
+
+        self.stats.members_final = self.members.iter().filter(|m| !m.dead).count();
+        self.stats.events = self.events.len();
+        self.stats.final_ns = self.cluster.now();
+        Ok(ReplayOutcome {
+            events: self.events,
+            stats: self.stats,
+        })
+    }
+
+    fn run_iter(&mut self, iter: usize, t0: SimTime) -> Result<SimTime> {
+        let leader = self.members[0].name.clone();
+        let scheduled: Vec<ChaosEvent> = self
+            .sc
+            .events
+            .iter()
+            .filter(|e| e.at_iter == iter)
+            .cloned()
+            .collect();
+
+        // -- iteration-start chaos: stragglers, partitions, grows --------
+        let mut partition_started = false;
+        for ev in &scheduled {
+            match ev.kind {
+                ChaosKind::Straggle { rank, factor } => {
+                    if let Some(mi) = self.resolve_rank(rank, iter, true) {
+                        self.members[mi].straggle = Some((iter, factor));
+                    }
+                }
+                ChaosKind::Partition { rank, iters } => {
+                    if let Some(mi) = self.resolve_rank(rank, iter, true) {
+                        self.members[mi].partitioned_until = iter + iters;
+                        partition_started = true;
+                    }
+                }
+                ChaosKind::Grow { count } => {
+                    self.cluster.advance_to(t0);
+                    let mut joined = Vec::with_capacity(count);
+                    for _ in 0..count {
+                        joined.push(self.spawn_node());
+                    }
+                    self.cluster.run_to_quiescence();
+                    self.gen += 1;
+                    for mut n in joined {
+                        let join_ts =
+                            self.cluster.started_at(n.pod).unwrap_or(t0).max(t0);
+                        n.ready_at = join_ts;
+                        n.fetched = false;
+                        let s = self.span_id();
+                        let rank = self.members.len() as i64;
+                        let gen = self.gen;
+                        self.emit(
+                            &n.name,
+                            join_ts,
+                            0,
+                            s,
+                            0,
+                            "ring.grow",
+                            &[("gen", gen), ("rank", rank)],
+                        );
+                        self.members.push(n);
+                        self.stats.grows += 1;
+                    }
+                }
+                ChaosKind::Kill { .. } => {} // lands mid-compute, below
+            }
+        }
+        // Partition rejoins re-enter through the regrow path. (At iter 0
+        // `partitioned_until == 0` means "never partitioned", hence the
+        // `iter > 0` guard.)
+        let rejoiners: Vec<String> = self
+            .members
+            .iter()
+            .filter(|m| !m.dead && iter > 0 && m.partitioned_until == iter)
+            .map(|m| m.name.clone())
+            .collect();
+        if !rejoiners.is_empty() {
+            self.gen += 1;
+            for name in rejoiners {
+                let s = self.span_id();
+                let gen = self.gen;
+                self.emit(&name, t0, 0, s, 0, "ring.grow", &[("gen", gen), ("rejoin", 1)]);
+                self.stats.grows += 1;
+            }
+        }
+
+        // -- dispatch: one slice of work, one task per connected member --
+        let active: Vec<usize> = (0..self.members.len())
+            .filter(|&i| !self.members[i].dead && self.members[i].partitioned_until <= iter)
+            .collect();
+        let slice_span = self.span_id();
+        let dispatch_span = self.span_id();
+        let d_ts = t0 + 10_000;
+        let d_dur = self.cal.dispatch_ns.max(1);
+        self.emit(
+            &leader,
+            d_ts,
+            d_dur,
+            dispatch_span,
+            slice_span,
+            "pool.dispatch",
+            &[("map_id", iter as i64), ("tasks", active.len() as i64)],
+        );
+        let d_end = d_ts + d_dur;
+
+        let mut runs: Vec<RunRec> = Vec::with_capacity(active.len());
+        for (task_idx, &mi) in active.iter().enumerate() {
+            let rec = self.emit_run(mi, task_idx, iter, d_end, dispatch_span);
+            runs.push(rec);
+        }
+
+        // -- mid-compute kills: journal loss, heal, adopt, requeue -------
+        for ev in &scheduled {
+            let ChaosKind::Kill { rank } = ev.kind else { continue };
+            let Some(vi) = self.resolve_rank(rank, iter, true) else { continue };
+            let Some(pos) = runs.iter().position(|r| r.mi == vi) else { continue };
+            let victim_run = runs.remove(pos);
+            let t_kill = victim_run.start + victim_run.dur * 2 / 5;
+            // The victim's journal dies with it: every span it recorded
+            // this iteration vanishes before any collector can drain it.
+            let lost: Vec<u64> = self
+                .events
+                .iter()
+                .filter(|(n, e)| *n == self.members[vi].name && e.ts_ns >= t0)
+                .map(|(_, e)| e.span)
+                .collect();
+            self.events.retain(|(_, e)| !lost.contains(&e.span));
+            self.members[vi].dead = true;
+            self.stats.kills += 1;
+
+            // Pod teardown + elastic respawn of the spare pool.
+            self.cluster.advance_to(t_kill);
+            self.cluster.terminate(self.members[vi].pod);
+            let mut respawn = self.spawn_node();
+            self.cluster.run_to_quiescence();
+            respawn.ready_at = self.cluster.started_at(respawn.pod).unwrap_or(t_kill);
+            self.spares.push(respawn);
+
+            // Every survivor heals and resumes under its own heal span.
+            let from_gen = self.gen;
+            self.gen += 1;
+            let mut heal_end_max = t_kill;
+            let survivor_names: Vec<String> =
+                runs.iter().map(|r| self.members[r.mi].name.clone()).collect();
+            let completed = survivor_names.len() as i64;
+            for name in survivor_names {
+                let h = self.span_id();
+                let h_ts = t_kill + 500_000 + self.jitter(100_000);
+                let h_dur = self.cal.heal_ns.max(1) + self.jitter(self.cal.heal_ns / 10);
+                let gen = self.gen;
+                self.emit(
+                    &name,
+                    h_ts,
+                    h_dur,
+                    h,
+                    0,
+                    "ring.heal",
+                    &[("from_gen", from_gen), ("op_seq", iter as i64), ("completed", completed)],
+                );
+                let r = self.span_id();
+                self.emit(
+                    &name,
+                    h_ts + h_dur,
+                    0,
+                    r,
+                    h,
+                    "ring.resume",
+                    &[("op_seq", iter as i64), ("chunk", 0), ("gen", gen)],
+                );
+                heal_end_max = heal_end_max.max(h_ts + h_dur);
+                self.stats.heals += 1;
+            }
+
+            // A warm spare adopts the vacant slot and reruns the task.
+            if !self.spares.is_empty() {
+                let mut sp = self.spares.remove(0);
+                let adopt_ts = heal_end_max.max(sp.ready_at) + 200_000;
+                let a = self.span_id();
+                let gen = self.gen;
+                let sp_name = sp.name.clone();
+                self.emit(
+                    &sp_name,
+                    adopt_ts,
+                    0,
+                    a,
+                    0,
+                    "ring.adopt",
+                    &[("op_seq", iter as i64), ("kind", 1), ("resume_chunk", 0), ("gen", gen)],
+                );
+                sp.ready_at = adopt_ts;
+                sp.fetched = false;
+                let new_mi = self.members.len();
+                self.members.push(sp);
+                let rs = self.span_id();
+                let victim_rank = vi as i64;
+                self.emit(
+                    &leader,
+                    t_kill + self.cal.rpc_ns,
+                    0,
+                    rs,
+                    0,
+                    "pool.restart",
+                    &[("worker", victim_rank), ("requeued", 1)],
+                );
+                let rerun =
+                    self.emit_run(new_mi, victim_run.task_idx, iter, adopt_ts, dispatch_span);
+                runs.push(rerun);
+            } else {
+                // No spare left: the ring shrinks and the leader reruns
+                // the orphaned task itself after its own slice.
+                let rs = self.span_id();
+                let victim_rank = vi as i64;
+                self.emit(
+                    &leader,
+                    t_kill + self.cal.rpc_ns,
+                    0,
+                    rs,
+                    0,
+                    "pool.restart",
+                    &[("worker", victim_rank), ("requeued", 1)],
+                );
+                let after = runs.iter().find(|r| r.mi == 0).map_or(heal_end_max, RunRec::end);
+                let rerun = self.emit_run(
+                    0,
+                    victim_run.task_idx,
+                    iter,
+                    after.max(heal_end_max),
+                    dispatch_span,
+                );
+                runs.push(rerun);
+            }
+        }
+
+        // -- collective: a barrier allreduce on every member's run tail --
+        // A partition starting this iteration is detected when the op
+        // starts: every participant heals (shrink, no adopt) first.
+        let mut entries: Vec<(usize, SimTime, u64)> = Vec::with_capacity(runs.len());
+        if partition_started {
+            let from_gen = self.gen;
+            self.gen += 1;
+            for r in &runs {
+                let h = self.span_id();
+                let h_ts = r.end() + 5_000;
+                let h_dur = self.cal.heal_ns.max(1) + self.jitter(self.cal.heal_ns / 10);
+                let name = self.members[r.mi].name.clone();
+                let completed = runs.len() as i64;
+                let gen = self.gen;
+                self.emit(
+                    &name,
+                    h_ts,
+                    h_dur,
+                    h,
+                    0,
+                    "ring.heal",
+                    &[("from_gen", from_gen), ("op_seq", iter as i64), ("completed", completed)],
+                );
+                let rr = self.span_id();
+                self.emit(
+                    &name,
+                    h_ts + h_dur,
+                    0,
+                    rr,
+                    h,
+                    "ring.resume",
+                    &[("op_seq", iter as i64), ("chunk", 0), ("gen", gen)],
+                );
+                entries.push((r.mi, h_ts + h_dur + 5_000, r.span));
+                self.stats.heals += 1;
+            }
+        } else {
+            for r in &runs {
+                entries.push((r.mi, r.end() + 5_000, r.span));
+            }
+        }
+        let coll_start_max = entries.iter().map(|&(_, ts, _)| ts).max().unwrap_or(t0);
+        let coll_end = coll_start_max + self.cal.allreduce_ns.max(1);
+        for (mi, ts, run_span) in entries {
+            let a = self.span_id();
+            let name = self.members[mi].name.clone();
+            let gen = self.gen;
+            self.emit(
+                &name,
+                ts,
+                coll_end - ts,
+                a,
+                run_span,
+                "ring.allreduce",
+                &[("elems", self.sc.elems as i64), ("op_seq", iter as i64), ("gen", gen)],
+            );
+        }
+
+        // -- close the slice over the whole iteration --------------------
+        let t_end = coll_end + 10_000;
+        self.emit(
+            &leader,
+            t0,
+            t_end - t0,
+            slice_span,
+            0,
+            "pop.slice",
+            &[("trial", 0), ("slice", iter as i64), ("ckpt", CKPT_OBJ)],
+        );
+        self.cluster.advance_to(t_end);
+        Ok(t_end + 10_000)
+    }
+
+    /// Emit one `pool.run` under the dispatch envelope, with the member's
+    /// checkpoint access inside it: a cold `store.fetch` on first touch, a
+    /// `store.hit` afterwards.
+    fn emit_run(
+        &mut self,
+        mi: usize,
+        task_idx: usize,
+        iter: usize,
+        earliest: SimTime,
+        dispatch_span: u64,
+    ) -> RunRec {
+        let span = self.span_id();
+        let m = &self.members[mi];
+        let name = m.name.clone();
+        let ready_at = m.ready_at;
+        let factor = match m.straggle {
+            Some((it, f)) if it == iter => f,
+            _ => 1.0,
+        };
+        let cold = !m.fetched;
+        let start = earliest.max(ready_at) + self.jitter(self.cal.rpc_ns);
+        let mut dur =
+            (self.cal.pool_run_ns as f64 * factor) as u64 + self.jitter(self.cal.pool_run_ns / 10);
+        if cold {
+            dur += self.cal.fetch_ns;
+        }
+        dur = dur.max(1);
+        self.emit(
+            &name,
+            start,
+            dur,
+            span,
+            dispatch_span,
+            "pool.run",
+            &[("worker", mi as i64), ("index", task_idx as i64)],
+        );
+        let s = self.span_id();
+        if cold {
+            self.emit(
+                &name,
+                start + 1_000,
+                self.cal.fetch_ns.max(1),
+                s,
+                span,
+                "store.fetch",
+                &[("obj", CKPT_OBJ)],
+            );
+            self.members[mi].fetched = true;
+        } else {
+            self.emit(&name, start + 1_000, 0, s, span, "store.hit", &[("obj", CKPT_OBJ)]);
+        }
+        RunRec {
+            mi,
+            task_idx,
+            span,
+            start,
+            dur,
+        }
     }
 }
 

@@ -89,12 +89,18 @@ pub fn run(args: Vec<String>) -> Result<()> {
     let cmd = args.first().map(String::as_str).unwrap_or("help");
     let opts = Opts::parse(args.get(1..).unwrap_or(&[]))?;
     register_all_tasks();
-    // `--trace <file>` works on every subcommand: enable the journal
-    // before dispatch, export after. Thread-backed runs (the default)
-    // record every layer in this one process; proc-backed workers keep
-    // tracing disabled in their own processes (their leader-side spans —
-    // dispatch, queue, collect — still land in the trace).
-    let trace_out = opts.get("trace").map(str::to_string);
+    // `--trace <file>` works on every *recording* subcommand: enable the
+    // journal before dispatch, export after. Thread-backed runs (the
+    // default) record every layer in this one process; proc-backed workers
+    // keep tracing disabled in their own processes (their leader-side
+    // spans — dispatch, queue, collect — still land in the trace). The
+    // read-side commands are excluded: `trace-view`/`trace-check` consume
+    // traces, and `replay` reuses `--trace` as the *output* path for the
+    // trace it synthesizes.
+    let trace_out = match cmd {
+        "trace-view" | "trace-check" | "replay" => None,
+        _ => opts.get("trace").map(str::to_string),
+    };
     if trace_out.is_some() {
         fiber::trace::global().set_node_name("leader");
         fiber::trace::set_enabled(true);
@@ -111,6 +117,8 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "pbt" => pbt::pbt(&opts),
         "scaling-sim" => experiments::scaling_sim(&opts),
         "trace-view" => trace_view(&opts),
+        "trace-check" => trace_check(&opts),
+        "replay" => replay(&opts),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
@@ -120,6 +128,13 @@ pub fn run(args: Vec<String>) -> Result<()> {
     if let Some(path) = &trace_out {
         fiber::trace::set_enabled(false);
         write_trace(path)?;
+    }
+    // `--metrics-file <file>` on any subcommand: drop a Prometheus
+    // text-exposition snapshot of the run's counters/gauges/latencies.
+    if let Some(path) = opts.get("metrics-file") {
+        std::fs::write(path, fiber::metrics::export_prometheus())
+            .with_context(|| format!("write metrics {path}"))?;
+        println!("metrics written to {path}");
     }
     result
 }
@@ -137,17 +152,133 @@ fn write_trace(path: &str) -> Result<()> {
     } else {
         fiber::trace::export::write_chrome(path, &dump)?;
     }
+    warn_lossy(&dump);
     fiber::trace::export::summary(&dump).print();
     println!("trace written to {path}");
     Ok(())
 }
 
+/// Print the explicit lossy-trace warning when bounded journals dropped
+/// events: every view/audit of such a trace is analyzing a hole-y record,
+/// and the reader must know before trusting gaps in it.
+fn warn_lossy(dump: &fiber::trace::collect::TraceDump) {
+    if dump.dropped > 0 {
+        eprintln!(
+            "warning: LOSSY TRACE — {} event(s) dropped by bounded journals; \
+             causal links may dangle and gaps may be recording loss, not idleness \
+             (raise the journal capacity to record more)",
+            dump.dropped
+        );
+    }
+}
+
 /// Summarize a previously written trace file (either export format):
-/// per-span-kind count and latency quantiles.
+/// per-span-kind count and latency quantiles. `--critical-path true` adds
+/// the longest causal chain with per-span-kind attribution plus per-node
+/// busy/idle occupancy; `--folded FILE` writes flamegraph folded stacks.
 fn trace_view(opts: &Opts) -> Result<()> {
     let path = opts.require("input")?;
     let dump = fiber::trace::export::read_trace(path)?;
+    warn_lossy(&dump);
     fiber::trace::export::summary(&dump).print();
+    if opts.parse_or("critical-path", false)? {
+        match fiber::trace::analyze::critical_path(&dump) {
+            Some(cp) => {
+                fiber::trace::analyze::critical_path_table(&cp).print();
+                fiber::trace::analyze::busy_idle(&dump).print();
+            }
+            None => println!("no spans — critical path is empty"),
+        }
+    }
+    if let Some(out) = opts.get("folded") {
+        fiber::trace::export::write_folded(out, &dump)?;
+        println!("folded stacks written to {out}");
+    }
+    Ok(())
+}
+
+/// Audit a recorded trace against the causal invariant catalog
+/// (`fiber::trace::check`; the catalog is documented in
+/// `docs/trace_schema.md`). Exits non-zero when any invariant is violated,
+/// so CI can pipe chaos runs straight through it.
+fn trace_check(opts: &Opts) -> Result<()> {
+    let path = opts.require("input")?;
+    let dump = fiber::trace::export::read_trace(path)?;
+    warn_lossy(&dump);
+    let cfg = fiber::trace::check::CheckOptions {
+        skew_ns: opts.parse_or(
+            "skew-ns",
+            fiber::trace::check::CheckOptions::default().skew_ns,
+        )?,
+    };
+    let report = fiber::trace::check::check_with(&dump, path, &cfg);
+    print!("{}", report.render());
+    if !report.ok() {
+        bail!(
+            "trace audit failed: {} invariant violation(s)",
+            report.violations.len()
+        );
+    }
+    Ok(())
+}
+
+/// Re-drive a recorded chaos schedule against simulated nodes on the
+/// virtual clock: load a scenario file (`docs/trace_schema.md`), replay it
+/// at `--nodes N` (default: the scenario's own size), audit the synthesized
+/// trace, and optionally export it with `--trace FILE`.
+fn replay(opts: &Opts) -> Result<()> {
+    let path = opts.require("scenario")?;
+    let mut sc = fiber::trace::replay::Scenario::load(path)?;
+    if let Some(n) = opts.get("nodes") {
+        sc.nodes = n.parse().map_err(|e| anyhow::anyhow!("--nodes {n:?}: {e}"))?;
+        if sc.nodes < 2 {
+            bail!("--nodes must be >= 2");
+        }
+    }
+    // Span durations come from defaults, or from a recorded trace's
+    // measured means so the replayed timeline matches the real cluster.
+    let cal = match opts.get("calibrate-from") {
+        Some(p) => fiber::trace::replay::Calibration::from_dump(
+            &fiber::trace::export::read_trace(p)?,
+        ),
+        None => fiber::trace::replay::Calibration::default(),
+    };
+    println!(
+        "replaying scenario {:?}: {} nodes, {} spares, {} iters, {} chaos event(s)",
+        sc.name,
+        sc.nodes,
+        sc.spares,
+        sc.iters,
+        sc.events.len()
+    );
+    let (dump, stats) = fiber::trace::replay::replay(&sc, &cal)?;
+    println!(
+        "replay done at t={:.1} ms virtual: {} events, {} pods, {} kill(s), \
+         {} heal(s), {} grow(s), {} members at end",
+        stats.final_ns as f64 / 1e6,
+        stats.events,
+        stats.pods,
+        stats.kills,
+        stats.heals,
+        stats.grows,
+        stats.members_final
+    );
+    if let Some(out) = opts.get("trace") {
+        if out.ends_with(".jsonl") {
+            fiber::trace::export::write_jsonl(out, &dump)?;
+        } else {
+            fiber::trace::export::write_chrome(out, &dump)?;
+        }
+        println!("replayed trace written to {out}");
+    }
+    let report = fiber::trace::check::check(&dump, &format!("replay({})", sc.name));
+    print!("{}", report.render());
+    if !report.ok() {
+        bail!(
+            "replayed trace failed its own audit: {} violation(s)",
+            report.violations.len()
+        );
+    }
     Ok(())
 }
 
@@ -240,12 +371,22 @@ fn print_help() {
                         [--sync true] [--quantile Q] [--kill-rank R]\n\
            scaling-sim  E2/E3 virtual-time scaling curves (Fig 3b/3c)\n\
            trace-view   summarize a recorded trace (per-span-kind count/p50/p99)\n\
-                        --input <file>\n\
+                        --input <file> [--critical-path true] [--folded FILE]\n\
+           trace-check  audit a recorded trace against the causal invariant\n\
+                        catalog (docs/trace_schema.md); non-zero exit on violation\n\
+                        --input <file> [--skew-ns N]\n\
+           replay       re-drive a chaos scenario on simulated nodes (virtual\n\
+                        clock), audit the synthesized trace, optionally export it\n\
+                        --scenario <file> [--nodes N] [--trace FILE]\n\
+                        [--calibrate-from RECORDED_TRACE]\n\
            help         this message\n\
          \n\
          GLOBAL OPTIONS:\n\
            --trace FILE record causally-linked trace events and export on exit:\n\
                         Chrome trace-event JSON (open in Perfetto), or replayable\n\
-                        JSONL when FILE ends in .jsonl (see docs/trace_schema.md)"
+                        JSONL when FILE ends in .jsonl (see docs/trace_schema.md)\n\
+           --metrics-file FILE\n\
+                        write a Prometheus text-exposition snapshot of the run's\n\
+                        counters/gauges/latency summaries on exit"
     );
 }

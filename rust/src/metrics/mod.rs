@@ -143,6 +143,53 @@ pub fn dump() -> String {
     out
 }
 
+/// Sanitize a metric name into the Prometheus exposition charset
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`): every other character becomes `_`.
+/// Fiber's dotted names (`pool.restarts`) come out underscored.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c.is_ascii_alphabetic()
+            || c == '_'
+            || c == ':'
+            || (i > 0 && c.is_ascii_digit());
+        out.push(if ok { c } else { '_' });
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Render every registered metric in the Prometheus text exposition
+/// format: `# TYPE` headers, counters and gauges as plain samples, and
+/// each latency recorder as a summary — `quantile="0.5"` / `"0.99"`
+/// sample lines plus `_sum` (mean × count, the histogram does not keep an
+/// exact sum) and `_count`. `fiber-cli --metrics-file FILE` writes this
+/// on exit so any run can drop a scrape-ready snapshot next to its trace.
+pub fn export_prometheus() -> String {
+    let reg = unpoison(REGISTRY.lock());
+    let mut out = String::new();
+    for (name, c) in &reg.counters {
+        let n = prom_name(name);
+        out += &format!("# TYPE {n} counter\n{n} {}\n", c.get());
+    }
+    for (name, g) in &reg.gauges {
+        let n = prom_name(name);
+        out += &format!("# TYPE {n} gauge\n{n} {}\n", g.get());
+    }
+    for (name, l) in &reg.latencies {
+        let n = format!("{}_ns", prom_name(name));
+        let (count, mean, p50, p99) = l.snapshot();
+        out += &format!("# TYPE {n} summary\n");
+        out += &format!("{n}{{quantile=\"0.5\"}} {p50}\n");
+        out += &format!("{n}{{quantile=\"0.99\"}} {p99}\n");
+        out += &format!("{n}_sum {:.0}\n", mean * count as f64);
+        out += &format!("{n}_count {count}\n");
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +230,33 @@ mod tests {
         assert!(dump().contains("test.m.gauge 3"));
         g.set(-4);
         assert_eq!(g.get(), -4, "gauges may go negative");
+    }
+
+    #[test]
+    fn prometheus_export_types_and_sanitizes() {
+        counter("test.prom.hits").add(3);
+        gauge("test.prom.depth").set(-2);
+        let l = latency("test.prom.lat");
+        l.record_ns(1_000);
+        l.record_ns(3_000);
+        let text = export_prometheus();
+        assert!(text.contains("# TYPE test_prom_hits counter"), "{text}");
+        assert!(text.contains("test_prom_hits 3"), "{text}");
+        assert!(text.contains("# TYPE test_prom_depth gauge"), "{text}");
+        assert!(text.contains("test_prom_depth -2"), "{text}");
+        assert!(text.contains("# TYPE test_prom_lat_ns summary"), "{text}");
+        assert!(text.contains("test_prom_lat_ns{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("test_prom_lat_ns{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("test_prom_lat_ns_count 2"), "{text}");
+        assert!(text.contains("test_prom_lat_ns_sum"), "{text}");
+    }
+
+    #[test]
+    fn prom_name_keeps_legal_chars() {
+        assert_eq!(prom_name("pool.restarts"), "pool_restarts");
+        assert_eq!(prom_name("ring:gen2"), "ring:gen2");
+        assert_eq!(prom_name("9lives"), "_lives");
+        assert_eq!(prom_name(""), "_");
     }
 
     #[test]

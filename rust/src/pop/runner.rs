@@ -331,9 +331,13 @@ impl PopulationRunner {
         // dispatch span (and through the task envelope, the worker-side
         // run span and any store fetches the slice performs) all chain
         // under this trial's slice.
+        // The ckpt arg is the audit hook for `trace::check`'s
+        // `pop.slice-ckpt` invariant: a chaos-requeued slice must carry
+        // the same checkpoint ref as its first dispatch.
         let span = crate::trace::Span::begin_detached("pop.slice", crate::trace::current_span())
             .arg("trial", trial_id.0 as i64)
-            .arg("slice", self.trials[idx].slices_done as i64);
+            .arg("slice", self.trials[idx].slices_done as i64)
+            .arg("ckpt", crate::store::trace_obj(self.trials[idx].checkpoint.id()));
         let t_dispatch = Instant::now();
         let handle = crate::trace::with_span(span.id(), || {
             pool.map_async_chunked(&self.cfg.slice_task, std::iter::once(input), 1)

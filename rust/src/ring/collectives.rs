@@ -662,6 +662,7 @@ impl RingMember {
                     ("kind", cold.op.kind as i64),
                     ("resume_chunk", cold.resume_chunk as i64),
                     ("note", cold.op.note as i64),
+                    ("gen", self.view.generation as i64),
                 ],
             );
             return Ok((cold.op.op_seq << 24, cold.resume_chunk as usize));

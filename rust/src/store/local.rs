@@ -397,16 +397,20 @@ impl LocalStore {
         }
     }
 
-    /// Drop a reference (saturating): at zero the blob becomes
-    /// eviction-eligible again. Returns false if the blob is not held.
+    /// Drop a reference: at zero the blob becomes eviction-eligible again.
+    /// Returns true only when an outstanding reference was actually
+    /// dropped — false for unknown blobs *and* for blobs already at zero,
+    /// so the `store.release` instants [`crate::store::StoreNode::decref`]
+    /// records stay balanced against held puts/increfs (`trace::check`'s
+    /// refcount invariant audits exactly that ledger).
     pub fn decref(&self, id: ObjId) -> bool {
         let mut inner = self.inner.lock().unwrap();
         match inner.entries.get_mut(&id) {
-            Some(e) => {
-                e.refs = e.refs.saturating_sub(1);
+            Some(e) if e.refs > 0 => {
+                e.refs -= 1;
                 true
             }
-            None => false,
+            _ => false,
         }
     }
 

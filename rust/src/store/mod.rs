@@ -60,7 +60,7 @@ pub mod node;
 
 pub use directory::{DirEntry, Directory, DirectoryClient};
 pub use local::{LocalStore, ObjHasher, ObjId, DEFAULT_CHUNK};
-pub use node::{codes, tags, StoreNode, LOCAL_ONLY};
+pub use node::{codes, tags, trace_obj, StoreNode, LOCAL_ONLY};
 
 use std::marker::PhantomData;
 use std::sync::{Arc, Mutex};

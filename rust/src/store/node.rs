@@ -68,7 +68,9 @@ static MARKER_SEQ: AtomicU64 = AtomicU64::new(1);
 
 /// Fold an [`ObjId`] into the i64 a trace arg carries (first 8 of its 16
 /// hash bytes — plenty to correlate events on one blob within a trace).
-fn trace_obj(id: ObjId) -> i64 {
+/// Public so the pop runner can stamp the checkpoint ref on `pop.slice`
+/// spans in the same coordinate space (`trace::check` matches them by it).
+pub fn trace_obj(id: ObjId) -> i64 {
     i64::from_le_bytes(id.0[..8].try_into().expect("8 bytes"))
 }
 
@@ -246,9 +248,12 @@ impl StoreNode {
     /// must [`StoreNode::decref`] when the handoff is complete.
     pub fn put_bytes_held(&self, bytes: &[u8]) -> Result<ObjId> {
         let id = self.local.insert_held(bytes);
+        // The `held` arg is what `trace::check` balances refcounts against:
+        // a held put opens a reference that a `store.release` must close.
         let _put = crate::trace::Span::begin("store.put")
             .arg("obj", trace_obj(id))
-            .arg("len", bytes.len() as i64);
+            .arg("len", bytes.len() as i64)
+            .arg("held", 1);
         self.flush_evictions();
         let ep = self
             .endpoint()
@@ -595,11 +600,21 @@ impl StoreNode {
     }
 
     pub fn incref(&self, id: ObjId) -> bool {
-        self.local.incref(id)
+        let took = self.local.incref(id);
+        if took {
+            // Recorded only on success so `trace::check`'s refcount walk
+            // (held puts + increfs − releases ≥ 0) mirrors reality.
+            crate::trace::instant("store.incref", &[("obj", trace_obj(id))]);
+        }
+        took
     }
 
     pub fn decref(&self, id: ObjId) -> bool {
-        self.local.decref(id)
+        let dropped = self.local.decref(id);
+        if dropped {
+            crate::trace::instant("store.release", &[("obj", trace_obj(id))]);
+        }
+        dropped
     }
 
     /// The underlying cache (tests and eviction tuning).

@@ -1,6 +1,7 @@
 //! Trace exporters: Chrome trace-event JSON (Perfetto /
-//! `chrome://tracing`), replayable JSONL (`docs/trace_schema.md`), and the
-//! per-span-kind latency summary behind `fiber-cli trace-view`.
+//! `chrome://tracing`), replayable JSONL (`docs/trace_schema.md`),
+//! folded-stack flamegraph lines, and the per-span-kind latency summary
+//! behind `fiber-cli trace-view`.
 //!
 //! The Chrome format is the *viewing* artifact; JSONL is the *replay*
 //! artifact — one self-contained event object per line, append-friendly
@@ -114,13 +115,25 @@ fn jsonl_line(node: &str, ev: &TraceEvent) -> String {
 }
 
 /// Write the replayable JSONL stream (one event object per line, time
-/// order; schema in `docs/trace_schema.md`).
+/// order; schema in `docs/trace_schema.md`), closed by a metadata footer
+/// line carrying the journals' `dropped` counter. The footer goes *last*
+/// so an event's 1-based line number equals its ordinal in the time-sorted
+/// dump — which is exactly the `file:line` coordinate
+/// [`super::check`] findings point at.
 pub fn write_jsonl(path: &str, dump: &TraceDump) -> Result<()> {
     let mut out = String::new();
     for (node, ev) in &dump.events {
         out.push_str(&jsonl_line(node, ev));
         out.push('\n');
     }
+    out.push_str(
+        &Json::Obj(vec![
+            ("fiber_trace_meta".into(), Json::num(1.0)),
+            ("dropped".into(), Json::num(dump.dropped as f64)),
+        ])
+        .render(),
+    );
+    out.push('\n');
     std::fs::write(path, out).with_context(|| format!("write trace {path}"))
 }
 
@@ -128,6 +141,13 @@ fn num_u64(j: Option<&Json>) -> u64 {
     match j {
         Some(Json::Num(x)) if x.is_finite() && *x >= 0.0 => *x as u64,
         _ => 0,
+    }
+}
+
+fn num_f64(j: Option<&Json>) -> f64 {
+    match j {
+        Some(Json::Num(x)) if x.is_finite() && *x >= 0.0 => *x,
+        _ => 0.0,
     }
 }
 
@@ -159,9 +179,12 @@ fn event_from_obj(obj: &Json, chrome: bool) -> Option<(String, TraceEvent)> {
             return None; // metadata, not an event
         }
         let a = obj.get("args");
+        // Chrome timestamps are fractional microseconds; parse as f64 and
+        // round, or sub-µs spans would truncate to 0-dur instants and the
+        // invariant checker would flag them as never-ending spans.
         (
-            (num_u64(obj.get("ts")) as f64 * 1000.0) as u64,
-            (num_u64(obj.get("dur")) as f64 * 1000.0) as u64,
+            (num_f64(obj.get("ts")) * 1000.0).round() as u64,
+            (num_f64(obj.get("dur")) * 1000.0).round() as u64,
             num_u64(a.and_then(|a| a.get("span"))),
             num_u64(a.and_then(|a| a.get("parent"))),
             format!("pid-{}", num_u64(obj.get("pid"))),
@@ -219,6 +242,12 @@ pub fn read_trace(path: &str) -> Result<TraceDump> {
             }
             let obj =
                 Json::parse(line).map_err(|e| anyhow::anyhow!("trace jsonl parse: {e}"))?;
+            if obj.get("fiber_trace_meta").is_some() {
+                // Footer line written by `write_jsonl` — carries the
+                // journals' dropped counter, not an event.
+                dropped = num_u64(obj.get("dropped"));
+                continue;
+            }
             if let Some(pair) = event_from_obj(&obj, false) {
                 events.push(pair);
             }
@@ -226,6 +255,15 @@ pub fn read_trace(path: &str) -> Result<TraceDump> {
     }
     events.sort_by_key(|(_, e)| e.ts_ns);
     Ok(TraceDump { events, dropped })
+}
+
+/// Write the folded-stack (flamegraph) rendering of `dump` to `path`:
+/// one `frame;frame;frame weight` line per causal stack, weights in µs of
+/// exclusive time — ready for `flamegraph.pl` / `inferno-flamegraph` or
+/// speedscope's "folded" importer. See [`super::analyze::folded_stacks`].
+pub fn write_folded(path: &str, dump: &TraceDump) -> Result<()> {
+    std::fs::write(path, super::analyze::folded_stacks(dump))
+        .with_context(|| format!("write folded stacks {path}"))
 }
 
 /// Per-span-kind latency summary: count, p50/p99/mean duration in µs
@@ -336,11 +374,45 @@ mod tests {
         let path = path.to_str().unwrap().to_string();
         write_jsonl(&path, &d).unwrap();
         let back = read_trace(&path).unwrap();
-        assert_eq!(back.events.len(), 3);
+        assert_eq!(back.events.len(), 3, "the meta footer is not an event");
+        assert_eq!(back.dropped, 7, "the meta footer carries dropped");
         assert_eq!(back.events[0].0, "leader");
         assert_eq!(back.events[2].1.name, "store.fetch");
         assert_eq!(back.events[2].1.parent, 2);
         assert_eq!(back.events[2].1.arg("bytes"), Some(64));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn chrome_read_keeps_submicrosecond_durations() {
+        // A 800 ns span exports as dur=0.8 µs; reading it back must not
+        // truncate to a 0-dur instant (which the checker would flag as a
+        // span that never ends).
+        let d = dump();
+        let path = std::env::temp_dir().join("fiber_trace_test_subus.json");
+        let path = path.to_str().unwrap().to_string();
+        write_chrome(&path, &d).unwrap();
+        let back = read_trace(&path).unwrap();
+        let fetch = back
+            .events
+            .iter()
+            .find(|(_, e)| e.name == "store.fetch")
+            .unwrap();
+        assert_eq!(fetch.1.dur_ns, 800, "fractional µs survive the round trip");
+        assert_eq!(fetch.1.ts_ns, 2500);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn folded_output_writes_stack_lines() {
+        let d = dump();
+        let path = std::env::temp_dir().join("fiber_trace_test.folded");
+        let path = path.to_str().unwrap().to_string();
+        write_folded(&path, &d).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        // 5000 ns allreduce minus the 800 ns nested fetch → 4 µs exclusive;
+        // the fetch itself is sub-µs so its own line rounds away.
+        assert_eq!(text.trim(), "ring.allreduce 4", "{text}");
         let _ = std::fs::remove_file(&path);
     }
 

@@ -29,13 +29,22 @@
 //!   Perfetto / `chrome://tracing`) and a replayable JSONL stream
 //!   (documented in `docs/trace_schema.md`) — the record side of the
 //!   ROADMAP's trace-driven cluster-simulation item.
+//! * **Audit, analytics, replay.** [`check`] is the causal invariant
+//!   engine behind `fiber-cli trace-check`; [`analyze`] extracts the
+//!   critical path, per-node busy/idle series and folded flamegraph
+//!   stacks; [`replay`] re-drives scenario-composed chaos schedules
+//!   against [`crate::cluster::simk8s`] pods on the virtual clock and
+//!   emits a fresh trace that must itself pass [`check`].
 //!
 //! Span durations are also fed into [`crate::metrics::latency`] under the
 //! span name, so `metrics::dump()` stays the cheap aggregate view of the
 //! same instrumentation.
 
+pub mod analyze;
+pub mod check;
 pub mod collect;
 pub mod export;
+pub mod replay;
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;

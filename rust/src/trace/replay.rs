@@ -1,0 +1,427 @@
+//! `fiber::trace::replay` — scenario-driven chaos replay on the virtual
+//! clock.
+//!
+//! The record side ([`super::export`]) turns a chaos run into a JSONL
+//! artifact; this module is the re-drive side, the simkube idiom from the
+//! ROADMAP: a **scenario file** (JSON, [`crate::benchkit::Json`] — no
+//! serde) composes a chaos schedule — node churn, stragglers, partitions,
+//! spare drain/regrow storms — and a **calibration** (per-span-kind mean
+//! durations, either defaults or measured from a recorded trace via
+//! [`Calibration::from_dump`]) sets the service times. The
+//! [`crate::cluster::simk8s::ReplayDriver`] re-drives the schedule against
+//! simulated pods on the [`crate::cluster::des`] virtual clock at 1000+
+//! nodes and emits a fresh [`TraceDump`] that must itself pass
+//! [`super::check`] — which is the point: every elasticity claim becomes a
+//! checkable artifact, reproducible in CI without hardware.
+//!
+//! Scenario schema (documented in `docs/trace_schema.md`):
+//!
+//! ```json
+//! {"name":"churn_storm","nodes":1000,"spares":8,"iters":8,
+//!  "elems":65536,"seed":7,"events":[
+//!    {"at_iter":1,"kind":"kill","rank":17},
+//!    {"at_iter":2,"kind":"straggle","rank":5,"factor":4.0},
+//!    {"at_iter":3,"kind":"partition","rank":9,"iters":2},
+//!    {"at_iter":5,"kind":"grow","count":4}]}
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::benchkit::Json;
+
+use super::collect::TraceDump;
+
+/// One scheduled chaos injection.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChaosKind {
+    /// Kill the member at `rank` mid-compute: its journal (and in-flight
+    /// spans) die with it, survivors heal, a spare adopts, the task is
+    /// requeued, and a replacement pod regrows the spare pool.
+    Kill { rank: usize },
+    /// Multiply the member's compute time by `factor` for one iteration.
+    Straggle { rank: usize, factor: f64 },
+    /// Disconnect the member for `iters` iterations: the ring shrink-heals
+    /// around it, and on rejoin it re-enters via the regrow path (its
+    /// cached checkpoint must *hit*, not re-fetch — `store.fetch-once`).
+    Partition { rank: usize, iters: usize },
+    /// `count` fresh nodes join the ring (elastic grow).
+    Grow { count: usize },
+}
+
+/// A chaos injection pinned to an iteration of the replayed run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosEvent {
+    pub at_iter: usize,
+    pub kind: ChaosKind,
+}
+
+/// A replayable chaos schedule. Ranks index the *current* member list at
+/// apply time (mod its length); rank 0 — the leader — is never targeted
+/// (targets resolving to 0 shift to 1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Ring members at start (≥ 2; the CLI `--nodes` flag overrides this).
+    pub nodes: usize,
+    /// Warm spare nodes available for adoption.
+    pub spares: usize,
+    pub iters: usize,
+    /// Gradient elements per collective (scales nothing today but is
+    /// recorded in the trace args for cross-run comparison).
+    pub elems: usize,
+    pub seed: u64,
+    pub events: Vec<ChaosEvent>,
+}
+
+fn get_u(j: &Json, key: &str) -> Option<u64> {
+    match j.get(key) {
+        Some(Json::Num(x)) if x.is_finite() && *x >= 0.0 => Some(*x as u64),
+        _ => None,
+    }
+}
+
+fn get_f(j: &Json, key: &str) -> Option<f64> {
+    match j.get(key) {
+        Some(Json::Num(x)) if x.is_finite() => Some(*x),
+        _ => None,
+    }
+}
+
+fn get_s(j: &Json, key: &str) -> Option<String> {
+    match j.get(key) {
+        Some(Json::Str(s)) => Some(s.clone()),
+        _ => None,
+    }
+}
+
+impl ChaosEvent {
+    fn to_json(&self) -> Json {
+        let mut f: Vec<(String, Json)> = vec![("at_iter".into(), Json::num(self.at_iter as f64))];
+        match &self.kind {
+            ChaosKind::Kill { rank } => {
+                f.push(("kind".into(), Json::str("kill")));
+                f.push(("rank".into(), Json::num(*rank as f64)));
+            }
+            ChaosKind::Straggle { rank, factor } => {
+                f.push(("kind".into(), Json::str("straggle")));
+                f.push(("rank".into(), Json::num(*rank as f64)));
+                f.push(("factor".into(), Json::num(*factor)));
+            }
+            ChaosKind::Partition { rank, iters } => {
+                f.push(("kind".into(), Json::str("partition")));
+                f.push(("rank".into(), Json::num(*rank as f64)));
+                f.push(("iters".into(), Json::num(*iters as f64)));
+            }
+            ChaosKind::Grow { count } => {
+                f.push(("kind".into(), Json::str("grow")));
+                f.push(("count".into(), Json::num(*count as f64)));
+            }
+        }
+        Json::Obj(f)
+    }
+
+    fn from_json(j: &Json) -> Result<ChaosEvent> {
+        let at_iter = get_u(j, "at_iter").context("chaos event: missing at_iter")? as usize;
+        let kind = get_s(j, "kind").context("chaos event: missing kind")?;
+        let rank = || get_u(j, "rank").map(|r| r as usize).context("chaos event: missing rank");
+        let kind = match kind.as_str() {
+            "kill" => ChaosKind::Kill { rank: rank()? },
+            "straggle" => ChaosKind::Straggle {
+                rank: rank()?,
+                factor: get_f(j, "factor").unwrap_or(2.0).max(1.0),
+            },
+            "partition" => ChaosKind::Partition {
+                rank: rank()?,
+                iters: get_u(j, "iters").unwrap_or(1).max(1) as usize,
+            },
+            "grow" => ChaosKind::Grow {
+                count: get_u(j, "count").unwrap_or(1).max(1) as usize,
+            },
+            other => bail!("chaos event: unknown kind {other:?} (kill|straggle|partition|grow)"),
+        };
+        Ok(ChaosEvent { at_iter, kind })
+    }
+}
+
+impl Scenario {
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("name".into(), Json::str(self.name.clone())),
+            ("nodes".into(), Json::num(self.nodes as f64)),
+            ("spares".into(), Json::num(self.spares as f64)),
+            ("iters".into(), Json::num(self.iters as f64)),
+            ("elems".into(), Json::num(self.elems as f64)),
+            ("seed".into(), Json::num(self.seed as f64)),
+            (
+                "events".into(),
+                Json::Arr(self.events.iter().map(ChaosEvent::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Scenario> {
+        let nodes = get_u(j, "nodes").context("scenario: missing nodes")? as usize;
+        let iters = get_u(j, "iters").context("scenario: missing iters")? as usize;
+        if nodes < 2 {
+            bail!("scenario: nodes must be >= 2 (a ring needs members), got {nodes}");
+        }
+        if iters < 1 {
+            bail!("scenario: iters must be >= 1");
+        }
+        let mut events = Vec::new();
+        if let Some(Json::Arr(items)) = j.get("events") {
+            for (i, item) in items.iter().enumerate() {
+                let ev =
+                    ChaosEvent::from_json(item).with_context(|| format!("scenario events[{i}]"))?;
+                if ev.at_iter >= iters {
+                    bail!("scenario events[{i}]: at_iter {} >= iters {iters}", ev.at_iter);
+                }
+                events.push(ev);
+            }
+        }
+        Ok(Scenario {
+            name: get_s(j, "name").unwrap_or_else(|| "unnamed".into()),
+            nodes,
+            spares: get_u(j, "spares").unwrap_or(0) as usize,
+            iters,
+            elems: get_u(j, "elems").unwrap_or(1024) as usize,
+            seed: get_u(j, "seed").unwrap_or(0),
+            events,
+        })
+    }
+
+    /// Parse a scenario file.
+    pub fn load(path: &str) -> Result<Scenario> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("read scenario {path}"))?;
+        let j = Json::parse(text.trim())
+            .map_err(|e| anyhow::anyhow!("scenario {path}: json parse: {e}"))?;
+        Scenario::from_json(&j).with_context(|| format!("scenario {path}"))
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        self.to_json().write(path).with_context(|| format!("write scenario {path}"))
+    }
+}
+
+/// Per-span-kind mean service times driving the replay's virtual-time
+/// arithmetic. Defaults model the toy ES chaos demo; calibrating from a
+/// recorded trace ([`Calibration::from_dump`]) is what couples a *record*
+/// to its *re-drive*.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub pool_run_ns: u64,
+    pub allreduce_ns: u64,
+    pub heal_ns: u64,
+    pub fetch_ns: u64,
+    pub put_ns: u64,
+    pub dispatch_ns: u64,
+    /// One-way envelope/RPC latency between leader and members.
+    pub rpc_ns: u64,
+}
+
+impl Default for Calibration {
+    fn default() -> Self {
+        Calibration {
+            pool_run_ns: 20_000_000,
+            allreduce_ns: 8_000_000,
+            heal_ns: 3_000_000,
+            fetch_ns: 2_000_000,
+            put_ns: 1_000_000,
+            dispatch_ns: 300_000,
+            rpc_ns: 200_000,
+        }
+    }
+}
+
+impl Calibration {
+    /// Mean span durations from a recorded dump; kinds absent from the
+    /// recording keep their defaults.
+    pub fn from_dump(dump: &TraceDump) -> Calibration {
+        let mut c = Calibration::default();
+        let mean = |name: &str| {
+            let mut sum = 0u64;
+            let mut n = 0u64;
+            for (_, ev) in &dump.events {
+                if ev.name == name && ev.dur_ns > 0 {
+                    sum += ev.dur_ns;
+                    n += 1;
+                }
+            }
+            (n > 0).then(|| sum / n)
+        };
+        if let Some(v) = mean("pool.run") {
+            c.pool_run_ns = v;
+        }
+        if let Some(v) = mean("ring.allreduce") {
+            c.allreduce_ns = v;
+        }
+        if let Some(v) = mean("ring.heal") {
+            c.heal_ns = v;
+        }
+        if let Some(v) = mean("store.fetch") {
+            c.fetch_ns = v;
+        }
+        if let Some(v) = mean("store.put") {
+            c.put_ns = v;
+        }
+        if let Some(v) = mean("pool.dispatch") {
+            c.dispatch_ns = v;
+        }
+        c
+    }
+}
+
+/// Re-drive `scenario` on the virtual clock and return the synthesized
+/// trace (time-sorted, loss-free) plus the driver's run statistics. The
+/// emitted dump is expected to pass [`super::check::check`] — the
+/// integration tests and the CI replay smoke both enforce that.
+pub fn replay(
+    scenario: &Scenario,
+    cal: &Calibration,
+) -> Result<(TraceDump, crate::cluster::simk8s::ReplayStats)> {
+    let driver = crate::cluster::simk8s::ReplayDriver::new(scenario.clone(), cal.clone());
+    let outcome = driver.run()?;
+    let mut events = outcome.events;
+    events.sort_by_key(|(_, e)| e.ts_ns);
+    Ok((TraceDump { events, dropped: 0 }, outcome.stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::check::check;
+
+    fn storm() -> Scenario {
+        Scenario {
+            name: "test_storm".into(),
+            nodes: 8,
+            spares: 2,
+            iters: 5,
+            elems: 1024,
+            seed: 3,
+            events: vec![
+                ChaosEvent { at_iter: 1, kind: ChaosKind::Kill { rank: 2 } },
+                ChaosEvent {
+                    at_iter: 2,
+                    kind: ChaosKind::Straggle { rank: 3, factor: 4.0 },
+                },
+                ChaosEvent {
+                    at_iter: 2,
+                    kind: ChaosKind::Partition { rank: 4, iters: 1 },
+                },
+                ChaosEvent { at_iter: 3, kind: ChaosKind::Grow { count: 2 } },
+            ],
+        }
+    }
+
+    #[test]
+    fn scenario_roundtrips_through_json() {
+        let sc = storm();
+        let text = sc.to_json().render();
+        let back = Scenario::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, sc);
+    }
+
+    #[test]
+    fn scenario_rejects_garbage() {
+        let bad = Json::parse(r#"{"name":"x","nodes":1,"iters":3,"events":[]}"#).unwrap();
+        assert!(Scenario::from_json(&bad).is_err(), "nodes < 2");
+        let bad =
+            Json::parse(r#"{"nodes":4,"iters":3,"events":[{"at_iter":9,"kind":"kill","rank":1}]}"#)
+                .unwrap();
+        assert!(Scenario::from_json(&bad).is_err(), "at_iter out of range");
+        let bad =
+            Json::parse(r#"{"nodes":4,"iters":3,"events":[{"at_iter":0,"kind":"meteor"}]}"#)
+                .unwrap();
+        assert!(Scenario::from_json(&bad).is_err(), "unknown kind");
+    }
+
+    #[test]
+    fn calibration_reads_means_from_a_dump() {
+        use crate::trace::TraceEvent;
+        let mk = |dur, name: &str| TraceEvent {
+            ts_ns: 0,
+            dur_ns: dur,
+            span: 1,
+            parent: 0,
+            tid: 1,
+            name: name.into(),
+            args: vec![],
+        };
+        let dump = TraceDump {
+            events: vec![
+                ("a".into(), mk(10, "pool.run")),
+                ("a".into(), mk(30, "pool.run")),
+                ("a".into(), mk(50, "ring.heal")),
+            ],
+            dropped: 0,
+        };
+        let c = Calibration::from_dump(&dump);
+        assert_eq!(c.pool_run_ns, 20);
+        assert_eq!(c.heal_ns, 50);
+        assert_eq!(c.fetch_ns, Calibration::default().fetch_ns, "absent kinds keep defaults");
+    }
+
+    #[test]
+    fn replayed_storm_passes_the_invariant_checker() {
+        let (dump, stats) = replay(&storm(), &Calibration::default()).unwrap();
+        let rep = check(&dump, "replay");
+        assert!(rep.ok(), "replayed trace must audit clean:\n{}", rep.render());
+        assert_eq!(dump.dropped, 0);
+        assert!(stats.kills == 1 && stats.grows >= 1, "{stats:?}");
+        let has = |name: &str| dump.events.iter().any(|(_, e)| e.name == name);
+        for kind in [
+            "pop.slice",
+            "pool.dispatch",
+            "pool.run",
+            "pool.restart",
+            "ring.allreduce",
+            "ring.heal",
+            "ring.resume",
+            "ring.adopt",
+            "ring.grow",
+            "store.put",
+            "store.fetch",
+            "store.hit",
+            "store.release",
+        ] {
+            assert!(has(kind), "replay must emit {kind}");
+        }
+        // Virtual time moved, and the straggled iteration is the longest.
+        assert!(stats.final_ns > 0);
+    }
+
+    #[test]
+    fn replay_scales_to_a_thousand_nodes() {
+        let sc = Scenario {
+            name: "wide".into(),
+            nodes: 1000,
+            spares: 4,
+            iters: 3,
+            elems: 65536,
+            seed: 11,
+            events: vec![
+                ChaosEvent { at_iter: 1, kind: ChaosKind::Kill { rank: 500 } },
+                ChaosEvent { at_iter: 2, kind: ChaosKind::Grow { count: 8 } },
+            ],
+        };
+        let (dump, stats) = replay(&sc, &Calibration::default()).unwrap();
+        assert!(stats.members_final >= 1001, "{stats:?}");
+        assert!(dump.events.len() > 6000, "got {}", dump.events.len());
+        let rep = check(&dump, "wide");
+        assert!(rep.ok(), "{}", rep.render());
+    }
+
+    #[test]
+    fn replay_is_deterministic_for_a_seed() {
+        let run = || {
+            let (dump, _) = replay(&storm(), &Calibration::default()).unwrap();
+            dump.events
+                .iter()
+                .map(|(n, e)| (n.clone(), e.ts_ns, e.span, e.name.clone()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

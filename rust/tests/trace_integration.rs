@@ -221,6 +221,16 @@ fn chaos_heal_and_autogrow_record_causally_linked_spans() {
     assert!(!allreduces.is_empty());
     assert!(allreduces.iter().all(|a| a.arg("gen").is_some()));
 
+    // The acceptance bar: the recorded chaos run passes the full causal
+    // invariant audit — nothing dangles, every resume has its heal, the
+    // adopt names a healed op, refcounts balance.
+    let report = fiber::trace::check::check(&dump, "chaos-run");
+    assert!(
+        report.ok(),
+        "a healthy chaos run must pass trace-check:\n{}",
+        report.render()
+    );
+
     // Chrome export: the file is valid trace-event JSON and the causal
     // links survive the round trip.
     let path = std::env::temp_dir().join(format!(
@@ -243,6 +253,77 @@ fn chaos_heal_and_autogrow_record_causally_linked_spans() {
             .iter()
             .any(|h| h.span == back_resume.parent),
         "heal → resume link must survive the chrome round trip"
+    );
+    let _ = std::fs::remove_file(&path);
+}
+
+/// The bundled 1000-node scenario (the one CI replays) must parse, survive
+/// a save/load round trip, replay deterministically, and synthesize a
+/// trace that passes its own audit — including after a JSONL export/import
+/// round trip (the exact artifact `fiber-cli replay --trace OUT` +
+/// `trace-check --input OUT` exercises).
+#[test]
+fn bundled_scenario_replays_and_audits_clean() {
+    use fiber::trace::replay::{replay, Calibration, Scenario};
+
+    let sc = Scenario::load("scenarios/churn_storm.json").unwrap();
+    assert_eq!(sc.nodes, 1000);
+    assert!(!sc.events.is_empty());
+
+    // Save/load round trip preserves the schedule exactly.
+    let sc_path = std::env::temp_dir().join(format!(
+        "fiber_scenario_rt_{}.json",
+        std::process::id()
+    ));
+    let sc_path = sc_path.to_str().unwrap().to_string();
+    sc.save(&sc_path).unwrap();
+    assert_eq!(Scenario::load(&sc_path).unwrap(), sc);
+    let _ = std::fs::remove_file(&sc_path);
+
+    let cal = Calibration::default();
+    let (dump, stats) = replay(&sc, &cal).unwrap();
+    assert!(stats.kills >= 1, "the storm schedules kills");
+    assert!(stats.grows >= 1, "the storm schedules growth");
+    assert!(
+        stats.members_final > 1000,
+        "grows outnumber kills+spares in this schedule; got {}",
+        stats.members_final
+    );
+    let report = fiber::trace::check::check(&dump, "replay");
+    assert!(
+        report.ok(),
+        "the synthesized trace must pass its own audit:\n{}",
+        report.render()
+    );
+
+    // Determinism: same scenario + seed → identical trace.
+    let (dump2, _) = replay(&sc, &cal).unwrap();
+    assert_eq!(dump.events.len(), dump2.events.len());
+    assert!(
+        dump.events
+            .iter()
+            .zip(&dump2.events)
+            .all(|((n1, e1), (n2, e2))| n1 == n2
+                && e1.ts_ns == e2.ts_ns
+                && e1.span == e2.span
+                && e1.name == e2.name),
+        "replay must be deterministic"
+    );
+
+    // The exported artifact stays auditable: JSONL round trip, then check.
+    let path = std::env::temp_dir().join(format!(
+        "fiber_replay_trace_{}.jsonl",
+        std::process::id()
+    ));
+    let path = path.to_str().unwrap().to_string();
+    export::write_jsonl(&path, &dump).unwrap();
+    let back = export::read_trace(&path).unwrap();
+    assert_eq!(back.events.len(), dump.events.len());
+    let report = fiber::trace::check::check(&back, &path);
+    assert!(
+        report.ok(),
+        "audit must still pass after the JSONL round trip:\n{}",
+        report.render()
     );
     let _ = std::fs::remove_file(&path);
 }
