@@ -122,6 +122,41 @@ fn main() {
         t.add_row("sum_squares (vectorized)", vec![Some(stats.mean() / n as f64)]);
     }
 
+    // Incremental trace drain: the cost of one cursor-based pull of a
+    // 4096-event window plus the health-model fold — what the live
+    // streamer pays per cadence tick (amortized per event).
+    {
+        use fiber::trace::live::Health;
+        use fiber::trace::{Journal, TraceEvent};
+        let journal = Journal::with_capacity(1 << 13);
+        journal.set_node_name("bench");
+        let n = 4_096u64;
+        let mut health = Health::new(3);
+        let mut cursor = 0u64;
+        let stats = measure(1, 3, || {
+            for i in 0..n {
+                journal.record(TraceEvent {
+                    ts_ns: i * 1_000,
+                    dur_ns: 500,
+                    span: i + 1,
+                    parent: 0,
+                    tid: 1,
+                    name: "pool.run".to_string(),
+                    args: vec![("worker".to_string(), (i % 8) as i64)],
+                });
+            }
+            let (events, next, _dropped) = journal.drain_since(cursor);
+            cursor = next;
+            let batch: Vec<(String, TraceEvent)> = events
+                .into_iter()
+                .map(|e| ("bench".to_string(), e))
+                .collect();
+            health.observe(&batch);
+            assert_eq!(batch.len(), n as usize);
+        });
+        t.add_row("live drain+health fold", vec![Some(stats.mean() / n as f64)]);
+    }
+
     // Pending table ops.
     {
         let n = 100_000u64;

@@ -450,7 +450,7 @@ fn es_decentralized_proc(
     let backend = ProcBackend::new()?;
     let forward = [
         "pop", "sigma", "lr", "noise-seed", "table-size", "max-steps", "hardcore", "seed", "toy",
-        "dim",
+        "dim", "crash-dir", "flight",
     ];
     let grow_iter_armed = spares > 0 && kill_rank < 0;
     let mk_args = |spare: bool| {
@@ -565,7 +565,11 @@ pub fn es_node(opts: &Opts) -> Result<()> {
     let grow_after = (grow_iter >= 0).then_some(grow_iter as usize);
     match run_es_replica(m, node, iters, toy, kill, grow_after, store, true)? {
         None => {
-            // Skip destructors: a crash does not shut down cleanly.
+            // The victim's last act: dump the crash flight recorder (the
+            // ring of events leading up to the simulated crash) exactly
+            // like a real panic hook would, then skip destructors — a
+            // crash does not shut down cleanly.
+            fiber::trace::live::crash_dump_now("chaos kill");
             std::process::exit(0)
         }
         Some((rank, generation, world, heals, _theta)) => {

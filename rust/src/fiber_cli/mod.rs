@@ -21,6 +21,7 @@ mod demo;
 mod experiments;
 mod pbt;
 mod ring;
+mod top;
 
 /// Parse `--key value` style options.
 pub(crate) struct Opts {
@@ -97,13 +98,50 @@ pub fn run(args: Vec<String>) -> Result<()> {
     // read-side commands are excluded: `trace-view`/`trace-check` consume
     // traces, and `replay` reuses `--trace` as the *output* path for the
     // trace it synthesizes.
-    let trace_out = match cmd {
-        "trace-view" | "trace-check" | "replay" => None,
-        _ => opts.get("trace").map(str::to_string),
+    let read_side = matches!(
+        cmd,
+        "trace-view" | "trace-check" | "replay" | "top" | "help" | "--help" | "-h"
+    );
+    let trace_out = if read_side {
+        None
+    } else {
+        opts.get("trace").map(str::to_string)
     };
-    if trace_out.is_some() {
+    // `--live DIR` streams the journal to rotating on-disk JSONL segments
+    // *during* the run (`fiber::trace::live`): a run killed mid-flight
+    // leaves everything already drained, and `--serve-top ADDR` exposes
+    // the live health model to `fiber-cli top --connect`.
+    let live_dir = if read_side {
+        None
+    } else {
+        opts.get("live").map(str::to_string)
+    };
+    if trace_out.is_some() || live_dir.is_some() {
         fiber::trace::global().set_node_name("leader");
         fiber::trace::set_enabled(true);
+    }
+    // The crash flight recorder is on by default for every recording
+    // command (`--flight false` opts out): a bounded in-memory ring whose
+    // only cost is the ring itself, dumped to `fiber-crash-<pid>.jsonl`
+    // on panic or simulated fatal error (`--crash-dir` overrides where).
+    if !read_side && opts.parse_or("flight", true)? {
+        fiber::trace::set_flight_enabled(true);
+        fiber::trace::live::install_crash_hook();
+        if let Some(dir) = opts.get("crash-dir") {
+            fiber::trace::live::set_crash_dir(std::path::Path::new(dir));
+        }
+    }
+    let mut streamer = None;
+    if let Some(dir) = &live_dir {
+        let mut collector = fiber::trace::collect::Collector::new();
+        collector.add_global();
+        let mut cfg =
+            fiber::trace::live::StreamerConfig::to_dir(std::path::Path::new(dir));
+        cfg.interval = Duration::from_millis(opts.parse_or("live-interval-ms", 200u64)?);
+        cfg.serve = opts.get("serve-top").map(str::to_string);
+        cfg.metrics_file = opts.get("metrics-file").map(str::to_string);
+        cfg.straggler_k = opts.parse_or("straggler-k", 3u64)?;
+        streamer = Some(fiber::trace::live::Streamer::start(collector, cfg)?);
     }
     let result = match cmd {
         "worker" => worker(&opts),
@@ -119,18 +157,43 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "trace-view" => trace_view(&opts),
         "trace-check" => trace_check(&opts),
         "replay" => replay(&opts),
+        "top" => top::top(&opts),
         "help" | "--help" | "-h" => {
             print_help();
             Ok(())
         }
         other => bail!("unknown subcommand {other:?} (see `fiber-cli help`)"),
     };
-    if let Some(path) = &trace_out {
-        fiber::trace::set_enabled(false);
+    fiber::trace::set_enabled(false);
+    if let Some(s) = streamer {
+        // Final incremental drain + segment footer, then the end-of-run
+        // health readout the live `top` view was showing.
+        let snap = s.stop()?;
+        print!("{}", snap.render());
+        println!(
+            "live trace segments in {}/",
+            live_dir.as_deref().unwrap_or(".")
+        );
+        if let Some(path) = &trace_out {
+            // `--trace` + `--live` compose: reassemble the segment stream
+            // into the single requested file.
+            let dump =
+                fiber::trace::export::read_trace(live_dir.as_deref().unwrap_or("."))?;
+            if path.ends_with(".jsonl") {
+                fiber::trace::export::write_jsonl(path, &dump)?;
+            } else {
+                fiber::trace::export::write_chrome(path, &dump)?;
+            }
+            warn_lossy(&dump);
+            fiber::trace::export::summary(&dump).print();
+            println!("trace written to {path}");
+        }
+    } else if let Some(path) = &trace_out {
         write_trace(path)?;
     }
     // `--metrics-file <file>` on any subcommand: drop a Prometheus
-    // text-exposition snapshot of the run's counters/gauges/latencies.
+    // text-exposition snapshot of the run's counters/gauges/latencies
+    // (with `--live` it is also rewritten on every streamer tick).
     if let Some(path) = opts.get("metrics-file") {
         std::fs::write(path, fiber::metrics::export_prometheus())
             .with_context(|| format!("write metrics {path}"))?;
@@ -379,14 +442,32 @@ fn print_help() {
                         clock), audit the synthesized trace, optionally export it\n\
                         --scenario <file> [--nodes N] [--trace FILE]\n\
                         [--calibrate-from RECORDED_TRACE]\n\
+           top          cluster health readout: node liveness, pool throughput,\n\
+                        ring op/chunk progress, store hit-rate, pop leaderboard,\n\
+                        straggler flags\n\
+                        --connect ADDR (live, from a run with --serve-top) |\n\
+                        --input FILE_OR_DIR (offline, incl. --live segment dirs)\n\
+                        [--once] [--interval-ms MS] [--straggler-k K]\n\
            help         this message\n\
          \n\
          GLOBAL OPTIONS:\n\
            --trace FILE record causally-linked trace events and export on exit:\n\
                         Chrome trace-event JSON (open in Perfetto), or replayable\n\
                         JSONL when FILE ends in .jsonl (see docs/trace_schema.md)\n\
+           --live DIR   stream the journal to rotating JSONL segments in DIR\n\
+                        *during* the run (kill-safe; trace-view/trace-check/top\n\
+                        accept the directory) [--live-interval-ms MS]\n\
+                        [--serve-top ADDR serve live health for `top --connect`]\n\
+                        [--straggler-k K flag spans over K x rolling p99]\n\
+           --flight BOOL\n\
+                        crash flight recorder (default true on recording\n\
+                        commands): keeps the last {} events in memory and dumps\n\
+                        fiber-crash-<pid>.jsonl on panic/fatal error\n\
+                        [--crash-dir DIR]\n\
            --metrics-file FILE\n\
                         write a Prometheus text-exposition snapshot of the run's\n\
-                        counters/gauges/latency summaries on exit"
+                        counters/gauges/latency summaries on exit (with --live:\n\
+                        rewritten on every streamer tick)",
+        fiber::trace::FLIGHT_CAP
     );
 }

@@ -1,0 +1,59 @@
+//! `fiber-cli top` — the cluster health readout.
+//!
+//! Two sources, one renderer ([`fiber::trace::live::HealthSnapshot`]):
+//!
+//! * `--connect ADDR` pulls live snapshots from a run started with
+//!   `--serve-top ADDR` (node liveness, pool throughput/queue depth, ring
+//!   op/chunk progress, store hit-rate, pop leaderboard, straggler flags).
+//!   Default is a refreshing view; `--once` prints a single plain-text
+//!   snapshot — the CI mode.
+//! * `--input FILE_OR_DIR` replays a recorded trace (a JSONL file or a
+//!   live segment directory) through the same [`fiber::trace::live::Health`]
+//!   model offline: the readout a live `top` would have shown at the end
+//!   of that run.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use fiber::trace::live::{fetch_snapshot, health_from_dump, HealthSnapshot};
+
+use super::Opts;
+
+pub fn top(opts: &Opts) -> Result<()> {
+    let once = opts.parse_or("once", false)?;
+    let interval = Duration::from_millis(opts.parse_or("interval-ms", 1000u64)?);
+    let k: u64 = opts.parse_or("straggler-k", 3)?;
+    match (opts.get("connect"), opts.get("input")) {
+        (Some(_), Some(_)) => bail!("--connect and --input are mutually exclusive"),
+        (None, None) => bail!("top needs --connect ADDR (live) or --input FILE_OR_DIR (offline)"),
+        (None, Some(path)) => {
+            // Offline: fold the whole recorded stream through the health
+            // model. Gauge-backed fields (queue depth, store bytes) read
+            // this process's registry and render as zero.
+            let dump = fiber::trace::export::read_trace(path)?;
+            let health = health_from_dump(&dump, k);
+            print!("{}", health.snapshot().render());
+            if dump.crash {
+                println!("(crash flight-recorder window — counts cover the last moments only)");
+            }
+            Ok(())
+        }
+        (Some(addr), None) => {
+            let addr: std::net::SocketAddr = addr
+                .parse()
+                .with_context(|| format!("--connect {addr:?} is not host:port"))?;
+            loop {
+                let snap: HealthSnapshot = fetch_snapshot(addr)?;
+                if once {
+                    print!("{}", snap.render());
+                    return Ok(());
+                }
+                // Refreshing view: clear, home, redraw.
+                print!("\x1b[2J\x1b[H{}", snap.render());
+                println!("(refreshing every {} ms — ctrl-c to quit)", interval.as_millis());
+                std::thread::sleep(interval);
+            }
+        }
+    }
+}

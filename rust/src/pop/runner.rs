@@ -386,6 +386,17 @@ impl PopulationRunner {
             best_so_far: best,
             hparams: hp_snapshot,
         });
+        // Scores feed the live leaderboard (`fiber-cli top`'s POP
+        // section); milli-units keep the integer-only trace arg schema.
+        crate::trace::instant(
+            "pop.score",
+            &[
+                ("trial", out.trial as i64),
+                ("slice", slice as i64),
+                ("reward_milli", (out.reward as f64 * 1000.0) as i64),
+                ("best_milli", (best as f64 * 1000.0) as i64),
+            ],
+        );
         let scored: Vec<f32> = self
             .trials
             .iter()

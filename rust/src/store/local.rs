@@ -165,6 +165,11 @@ pub struct LocalStore {
     chunk_size: usize,
     budget: usize,
     inner: Mutex<Inner>,
+    /// Mirrors `Inner::bytes` into the process-wide `store.bytes` gauge so
+    /// `fiber-cli top` and the Prometheus export see cache residency
+    /// without locking the store. One store per process in production;
+    /// with several (tests), last writer wins.
+    m_bytes: Arc<crate::metrics::Gauge>,
 }
 
 /// Default chunk size: 256 KiB — large enough to amortize per-frame RPC
@@ -185,6 +190,7 @@ impl LocalStore {
         LocalStore {
             chunk_size: chunk_size.max(1),
             budget,
+            m_bytes: crate::metrics::gauge("store.bytes"),
             inner: Mutex::new(Inner {
                 entries: HashMap::new(),
                 bytes: 0,
@@ -261,6 +267,7 @@ impl LocalStore {
                 }
                 inner.bytes += len;
                 evict_over_budget(&mut inner, self.budget, Some(id));
+                self.m_bytes.set(inner.bytes as i64);
             }
             return;
         }
@@ -275,6 +282,7 @@ impl LocalStore {
             },
         );
         evict_over_budget(&mut inner, self.budget, Some(id));
+        self.m_bytes.set(inner.bytes as i64);
     }
 
     /// The whole blob (refreshes its LRU position). O(1) for resident
@@ -303,7 +311,9 @@ impl LocalStore {
         }
         // The disk read happens under the lock: simple and correct, and
         // still far cheaper than the alternative (a peer re-fetch).
-        match fault_in(&mut inner, self.budget, id) {
+        let out = fault_in(&mut inner, self.budget, id);
+        self.m_bytes.set(inner.bytes as i64);
+        match out {
             Some(out) => {
                 inner.hits += 1;
                 Some(out)
@@ -364,7 +374,11 @@ impl LocalStore {
         };
         let data = match resident {
             Some(d) => d,
-            None => fault_in(&mut inner, self.budget, id)?,
+            None => {
+                let faulted = fault_in(&mut inner, self.budget, id);
+                self.m_bytes.set(inner.bytes as i64);
+                faulted?
+            }
         };
         let len = data.len();
         let lo = idx.checked_mul(self.chunk_size)?;
@@ -456,6 +470,7 @@ impl LocalStore {
                     }
                 }
             }
+            self.m_bytes.set(inner.bytes as i64);
         }
         removable
     }

@@ -130,6 +130,11 @@ pub struct StoreNode {
     transfers_out: Arc<AtomicU64>,
     local_hits: AtomicU64,
     dedup_waits: AtomicU64,
+    /// Process-wide cache-effectiveness counters (`store.hit` /
+    /// `store.fetch`), cached so the hot get path skips the registry
+    /// lock. `fiber-cli top` and the Prometheus export read these.
+    m_hits: Arc<crate::metrics::Counter>,
+    m_fetches: Arc<crate::metrics::Counter>,
     /// Cold fetches use the streaming `BLOB_GET` verb (default). Cleared
     /// only by benches/tests to measure the serial per-chunk baseline.
     pipelined: AtomicBool,
@@ -156,6 +161,8 @@ impl StoreNode {
             transfers_out: Arc::new(AtomicU64::new(0)),
             local_hits: AtomicU64::new(0),
             dedup_waits: AtomicU64::new(0),
+            m_hits: crate::metrics::counter("store.hit"),
+            m_fetches: crate::metrics::counter("store.fetch"),
             pipelined: AtomicBool::new(true),
             chunks_in: AtomicU64::new(0),
         })
@@ -298,6 +305,7 @@ impl StoreNode {
     pub fn get_bytes(&self, id: ObjId) -> Result<Arc<Vec<u8>>> {
         if let Some(b) = self.local.get(id) {
             self.local_hits.fetch_add(1, Ordering::Relaxed);
+            self.m_hits.inc();
             crate::trace::instant(
                 "store.hit",
                 &[("obj", trace_obj(id)), ("len", b.len() as i64)],
@@ -318,6 +326,7 @@ impl StoreNode {
             match flight {
                 None => {
                     // Flight leader: perform the one transfer.
+                    self.m_fetches.inc();
                     let mut fetch = crate::trace::Span::begin("store.fetch")
                         .arg("obj", trace_obj(id));
                     let fetch_id = fetch.id();
@@ -346,6 +355,7 @@ impl StoreNode {
                     outcome?;
                     if let Some(b) = self.local.get(id) {
                         self.local_hits.fetch_add(1, Ordering::Relaxed);
+                        self.m_hits.inc();
                         return Ok(b);
                     }
                     // Evicted between landing and re-read: retry the loop

@@ -315,6 +315,7 @@ mod tests {
                 ("w2".into(), ev(1_200_000, 2_000_000, 5, 1, "pool.run")),
             ],
             dropped: 0,
+            crash: false,
         }
     }
 
@@ -337,7 +338,7 @@ mod tests {
 
     #[test]
     fn critical_path_of_empty_dump_is_none() {
-        let d = TraceDump { events: vec![], dropped: 0 };
+        let d = TraceDump::new(vec![], 0);
         assert!(critical_path(&d).is_none());
     }
 
@@ -351,6 +352,7 @@ mod tests {
                 ("n".into(), ev(30, 5, 3, 0, "c")),
             ],
             dropped: 0,
+            crash: false,
         };
         let t = busy_idle(&d).render();
         // busy = 20ns union, window 35ns, idle 15ns, max gap 15ns — all
@@ -369,6 +371,7 @@ mod tests {
                 ("n".into(), ev(1_000_000, 4_000_000, 2, 1, "inner")),
             ],
             dropped: 0,
+            crash: false,
         };
         let folded = folded_stacks(&d);
         let lines: Vec<&str> = folded.lines().collect();
@@ -380,6 +383,7 @@ mod tests {
         let d = TraceDump {
             events: vec![("n".into(), ev(0, 2_000_000, 7, 999, "lonely"))],
             dropped: 1,
+            crash: false,
         };
         assert_eq!(folded_stacks(&d), "lonely 2000\n");
     }

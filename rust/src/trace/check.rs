@@ -103,6 +103,9 @@ pub struct CheckReport {
     pub source: String,
     pub events: usize,
     pub dropped: u64,
+    /// The dump was a crash flight-recorder window; whole-run invariants
+    /// were skipped (see [`check_with`]).
+    pub crash: bool,
     pub violations: Vec<Finding>,
     pub warnings: Vec<Finding>,
 }
@@ -161,6 +164,12 @@ impl CheckReport {
         for f in &self.warnings {
             out.push_str(&format!("  warning   {}\n", f.render()));
         }
+        if self.crash {
+            out.push_str(
+                "  CRASH WINDOW: this is a flight-recorder dump (the last moments \
+                 before a panic/fatal error); whole-run invariants were not audited\n",
+            );
+        }
         if self.dropped > 0 {
             out.push_str(&format!(
                 "  LOSSY TRACE: {} event(s) were dropped by bounded journals — \
@@ -183,9 +192,13 @@ pub fn check_with(dump: &TraceDump, source: &str, opts: &CheckOptions) -> CheckR
         source: source.to_string(),
         events: dump.events.len(),
         dropped: dump.dropped,
+        crash: dump.crash,
         ..CheckReport::default()
     };
-    let lossy = dump.dropped > 0;
+    // A crash dump is a bounded *suffix* of the run (the flight-recorder
+    // window): everything before it is missing by construction, so it is
+    // audited as lossy even when nothing was dropped inside the window.
+    let lossy = dump.dropped > 0 || dump.crash;
     let at = |i: usize| format!("{source}:{}", i + 1);
 
     // ---- structural: span-id index, uniqueness, orphan parents --------
@@ -331,6 +344,26 @@ pub fn check_with(dump: &TraceDump, source: &str, opts: &CheckOptions) -> CheckR
                 ),
             }
         }
+    }
+
+    // A crash window stops here: the structural and ring-linkage checks
+    // above are valid on any suffix (linkage already downgraded via
+    // `lossy`), but the remaining families count events across the whole
+    // run (puts vs releases, fetches vs evictions, dispatches vs runs,
+    // first-dispatch checkpoints) and would report phantom violations when
+    // the balancing half predates the flight-recorder window.
+    if dump.crash {
+        rep.warning(
+            "crash",
+            format!("{source}:0"),
+            "-",
+            0,
+            "crash flight-recorder window: whole-run invariants (store.fetch-once, \
+             store.refcount, pool.rerun-restart, pool.dispatch-run, pop.slice-ckpt) \
+             not audited — history before the window is missing by construction"
+                .to_string(),
+        );
+        return rep;
     }
 
     // ---- store: transfer conservation + refcount balance -------------
@@ -521,10 +554,10 @@ mod tests {
     }
 
     fn dump(events: Vec<(&str, TraceEvent)>) -> TraceDump {
-        TraceDump {
-            events: events.into_iter().map(|(n, e)| (n.to_string(), e)).collect(),
-            dropped: 0,
-        }
+        TraceDump::new(
+            events.into_iter().map(|(n, e)| (n.to_string(), e)).collect(),
+            0,
+        )
     }
 
     /// A small healthy trace: slice → dispatch → run → fetch, heal →
@@ -692,6 +725,40 @@ mod tests {
         let rep2 = check_with(&d2, "t.jsonl", &CheckOptions { skew_ns: 5 });
         assert!(rep2.violations.iter().all(|f| f.invariant != "monotone-ts"), "{}", rep2.render());
         assert!(rep2.warnings.iter().any(|f| f.invariant == "monotone-ts"));
+    }
+
+    #[test]
+    fn crash_window_relaxes_whole_run_invariants() {
+        // A flight-recorder window that caught only the *tail* of the run:
+        // a release whose put predates the window, a fetch whose first
+        // fetch predates it, and an instant parented under a span that was
+        // still open (never recorded) when the process died. As a normal
+        // dump this fails three ways; as a crash window it must pass with
+        // warnings only.
+        let mut d = dump(vec![
+            ("w1", ev(100, 0, 40, 777, "trace.crash", &[("reason", 1)])),
+            ("w1", ev(10, 0, 41, 0, "store.release", &[("obj", 5)])),
+            ("w1", ev(20, 80, 42, 0, "store.fetch", &[("obj", 6)])),
+            ("w1", ev(30, 60, 43, 0, "store.fetch", &[("obj", 6)])),
+        ]);
+        d.events.sort_by_key(|(_, e)| e.ts_ns);
+        let rep = check(&d, "normal.jsonl");
+        assert!(!rep.ok(), "as a normal dump this trace is broken");
+        d.crash = true;
+        let rep = check(&d, "fiber-crash-1.jsonl");
+        assert!(rep.ok(), "{}", rep.render());
+        assert!(rep.warnings.iter().any(|f| f.invariant == "crash"));
+        assert!(
+            rep.warnings.iter().any(|f| f.invariant == "parent-exists"),
+            "linkage findings downgrade, not vanish: {}",
+            rep.render()
+        );
+        let text = rep.render();
+        assert!(text.contains("CRASH WINDOW"), "{text}");
+        // Structural self-contained invariants still fail a crash dump.
+        d.events.push(("w1".into(), ev(40, 0, 41, 0, "pop.mutate", &[])));
+        let rep2 = check(&d, "fiber-crash-1.jsonl");
+        assert!(rep2.violations.iter().any(|f| f.invariant == "span-unique"));
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub mod tags {
     /// Request: empty. Reply: `(String, Vec<TraceEvent>, u64)` — node
     /// name, buffered events (journal is emptied), dropped count.
     pub const DRAIN: u32 = 2;
+    /// Request: `u64` — the caller's cursor (acknowledges every event with
+    /// a smaller sequence). Reply: `(String, Vec<TraceEvent>, u64, u64)` —
+    /// node name, unacknowledged events (at-least-once: they stay buffered
+    /// until a later cursor acks them), next cursor, dropped count.
+    pub const DRAIN_SINCE: u32 = 3;
 }
 
 /// Serve `journal` for remote collection. Bind with port 0 for an
@@ -41,11 +46,17 @@ pub mod tags {
 pub fn serve_journal(journal: Arc<Journal>, bind: &str) -> Result<RpcServer> {
     RpcServer::bind(
         bind,
-        Arc::new(move |tag, _payload| match tag {
+        Arc::new(move |tag, payload| match tag {
             tags::CLOCK => Ok(wire::to_bytes(&journal.now_ns())),
             tags::DRAIN => {
                 let (events, dropped) = journal.drain();
                 Ok(wire::to_bytes(&(journal.node_name(), events, dropped)))
+            }
+            tags::DRAIN_SINCE => {
+                let cursor: u64 =
+                    wire::from_bytes(payload).map_err(|e| format!("cursor decode: {e}"))?;
+                let (events, next, dropped) = journal.drain_since(cursor);
+                Ok(wire::to_bytes(&(journal.node_name(), events, next, dropped)))
             }
             other => Err(format!("unknown trace rpc tag {other}")),
         }),
@@ -55,15 +66,27 @@ pub fn serve_journal(journal: Arc<Journal>, bind: &str) -> Result<RpcServer> {
 enum Source {
     Local {
         journal: Arc<Journal>,
+        /// Incremental-drain cursor ([`Journal::drain_since`] semantics).
+        cursor: u64,
     },
     Remote {
         name: String,
         cli: RpcClient,
         /// Added to remote timestamps to express them on the reference
         /// (leader) clock. Signed: the remote may have booted first.
+        /// Re-probed (EWMA-smoothed) on every incremental drain so clock
+        /// *drift* — not just epoch skew — stays corrected on long runs.
         offset_ns: i64,
+        /// Incremental-drain cursor acknowledged to the remote.
+        cursor: u64,
     },
 }
+
+/// EWMA weight (3/10) applied to fresh offset probes during incremental
+/// drains: heavy enough to track real drift within a few cadence ticks,
+/// light enough that one queueing-noise outlier cannot yank the timeline.
+const OFFSET_EWMA_NUM: i64 = 3;
+const OFFSET_EWMA_DEN: i64 = 10;
 
 /// Everything one collection pass produced: per-node events re-based onto
 /// the leader clock and merged in timestamp order, plus the total dropped
@@ -72,9 +95,22 @@ pub struct TraceDump {
     /// `(node, event)` pairs, sorted by aligned `ts_ns`.
     pub events: Vec<(String, TraceEvent)>,
     pub dropped: u64,
+    /// True when this dump is a crash flight-recorder window: a bounded
+    /// suffix of the run, so whole-run invariants cannot be audited
+    /// ([`super::check`] relaxes them).
+    pub crash: bool,
 }
 
 impl TraceDump {
+    /// A normal (non-crash) dump.
+    pub fn new(events: Vec<(String, TraceEvent)>, dropped: u64) -> TraceDump {
+        TraceDump {
+            events,
+            dropped,
+            crash: false,
+        }
+    }
+
     /// Events with a given name (span kind), in time order.
     pub fn named(&self, name: &str) -> Vec<&TraceEvent> {
         self.events
@@ -110,7 +146,7 @@ impl Collector {
         if self.reference.is_none() {
             self.reference = Some(journal.clone());
         }
-        self.sources.push(Source::Local { journal });
+        self.sources.push(Source::Local { journal, cursor: 0 });
     }
 
     /// Convenience: add this process's global journal.
@@ -130,26 +166,13 @@ impl Collector {
             }
         };
         let cli = RpcClient::connect(addr).context("trace collector connect")?;
-        let mut best_rtt = u64::MAX;
-        let mut offset_ns = 0i64;
-        for _ in 0..5 {
-            let t0 = reference.now_ns();
-            let reply = cli.call(tags::CLOCK, &[]).context("trace clock probe")?;
-            let t1 = reference.now_ns();
-            let remote: u64 =
-                wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("clock decode: {e}"))?;
-            let rtt = t1.saturating_sub(t0);
-            if rtt < best_rtt {
-                best_rtt = rtt;
-                let midpoint = (t0 / 2) + (t1 / 2);
-                offset_ns = midpoint as i64 - remote as i64;
-            }
-        }
+        let offset_ns = probe_offset(&reference, &cli, 5)?;
         let name = format!("{addr}");
         self.sources.push(Source::Remote {
             name,
             cli,
             offset_ns,
+            cursor: 0,
         });
         Ok(())
     }
@@ -157,6 +180,15 @@ impl Collector {
     /// Number of registered sources.
     pub fn sources(&self) -> usize {
         self.sources.len()
+    }
+
+    /// Current clock-offset estimate for remote source `idx` (test and
+    /// diagnostics hook; `None` for local sources).
+    pub fn offset_ns(&self, idx: usize) -> Option<i64> {
+        match self.sources.get(idx)? {
+            Source::Local { .. } => None,
+            Source::Remote { offset_ns, .. } => Some(*offset_ns),
+        }
     }
 
     /// Drain every source, align clocks, and merge into one timeline. A
@@ -167,7 +199,7 @@ impl Collector {
         let mut dropped = 0u64;
         for src in &self.sources {
             match src {
-                Source::Local { journal } => {
+                Source::Local { journal, .. } => {
                     let (events, d) = journal.drain();
                     let node = journal.node_name();
                     dropped += d;
@@ -177,6 +209,7 @@ impl Collector {
                     name,
                     cli,
                     offset_ns,
+                    ..
                 } => {
                     let Ok(reply) = cli.call(tags::DRAIN, &[]) else {
                         continue;
@@ -196,11 +229,94 @@ impl Collector {
             }
         }
         out.sort_by_key(|(_, e)| e.ts_ns);
-        TraceDump {
-            events: out,
-            dropped,
+        TraceDump::new(out, dropped)
+    }
+
+    /// Incremental pull: collect only what arrived since the previous
+    /// call, acknowledging consumed events via per-source cursors. This is
+    /// the live-streaming path — call it on a cadence (the
+    /// [`super::live::Streamer`] does) and the run's telemetry lands on
+    /// disk *while it runs* instead of at exit.
+    ///
+    /// Remote clocks are **re-probed on every pull** and blended into the
+    /// running offset with an EWMA, so drift between the leader's and a
+    /// worker's monotonic clock is corrected continuously instead of being
+    /// frozen at admission time. An unreachable remote contributes nothing
+    /// this round and — because its cursor is unchanged — re-delivers the
+    /// same window once it comes back.
+    ///
+    /// `dropped` in the returned dump is the *cumulative* per-journal drop
+    /// count, same as [`Collector::drain`]; segment writers turn it into
+    /// per-segment deltas.
+    pub fn drain_incremental(&mut self) -> TraceDump {
+        let reference = self.reference.clone();
+        let mut out: Vec<(String, TraceEvent)> = Vec::new();
+        let mut dropped = 0u64;
+        for src in &mut self.sources {
+            match src {
+                Source::Local { journal, cursor } => {
+                    let (events, next, d) = journal.drain_since(*cursor);
+                    *cursor = next;
+                    dropped += d;
+                    let node = journal.node_name();
+                    out.extend(events.into_iter().map(|e| (node.clone(), e)));
+                }
+                Source::Remote {
+                    name,
+                    cli,
+                    offset_ns,
+                    cursor,
+                } => {
+                    // Re-align first: two quick probes, EWMA-blended, so a
+                    // drifting remote clock stays pinned to the reference.
+                    if let Some(reference) = &reference {
+                        if let Ok(fresh) = probe_offset(reference, cli, 2) {
+                            *offset_ns += (fresh - *offset_ns) * OFFSET_EWMA_NUM / OFFSET_EWMA_DEN;
+                        }
+                    }
+                    let Ok(reply) = cli.call(tags::DRAIN_SINCE, &wire::to_bytes(cursor)) else {
+                        continue; // cursor unchanged: retry next cadence
+                    };
+                    let Ok((node, events, next, d)) =
+                        wire::from_bytes::<(String, Vec<TraceEvent>, u64, u64)>(&reply)
+                    else {
+                        continue;
+                    };
+                    *cursor = next;
+                    dropped += d;
+                    let node = if node.is_empty() { name.clone() } else { node };
+                    out.extend(events.into_iter().map(|mut e| {
+                        e.ts_ns = (e.ts_ns as i64).saturating_add(*offset_ns).max(0) as u64;
+                        (node.clone(), e)
+                    }));
+                }
+            }
+        }
+        out.sort_by_key(|(_, e)| e.ts_ns);
+        TraceDump::new(out, dropped)
+    }
+}
+
+/// One NTP-style offset estimate: `probes` round trips, keep the
+/// minimum-RTT midpoint (least queueing noise). Returns the amount to add
+/// to remote timestamps to express them on the reference clock.
+fn probe_offset(reference: &Journal, cli: &RpcClient, probes: usize) -> Result<i64> {
+    let mut best_rtt = u64::MAX;
+    let mut offset_ns = 0i64;
+    for _ in 0..probes {
+        let t0 = reference.now_ns();
+        let reply = cli.call(tags::CLOCK, &[]).context("trace clock probe")?;
+        let t1 = reference.now_ns();
+        let remote: u64 =
+            wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("clock decode: {e}"))?;
+        let rtt = t1.saturating_sub(t0);
+        if rtt < best_rtt {
+            best_rtt = rtt;
+            let midpoint = (t0 / 2) + (t1 / 2);
+            offset_ns = midpoint as i64 - remote as i64;
         }
     }
+    Ok(offset_ns)
 }
 
 #[cfg(test)]
@@ -271,6 +387,102 @@ mod tests {
         );
         assert_eq!(dump.named("rem")[0].span, 2);
         assert!(dump.events.iter().any(|(n, _)| n == "worker-1"));
+    }
+
+    #[test]
+    fn incremental_drain_is_exactly_once_across_pulls() {
+        let a = Journal::with_capacity(16);
+        a.set_node_name("a");
+        let remote = Journal::with_capacity(16);
+        remote.set_node_name("worker-1");
+        let srv = serve_journal(remote.clone(), "127.0.0.1:0").unwrap();
+
+        let mut c = Collector::new();
+        c.add_local(a.clone());
+        c.add_remote(srv.local_addr()).unwrap();
+
+        a.record(ev(10, 1, "x"));
+        remote.record(ev(10, 2, "y"));
+        let first = c.drain_incremental();
+        assert_eq!(first.events.len(), 2);
+
+        // Nothing new → nothing re-delivered (cursors acknowledged).
+        let idle = c.drain_incremental();
+        assert_eq!(idle.events.len(), 0, "acked events must not re-appear");
+
+        a.record(ev(20, 3, "x"));
+        remote.record(ev(20, 4, "y"));
+        let second = c.drain_incremental();
+        assert_eq!(second.events.len(), 2);
+        assert!(second.events.iter().any(|(_, e)| e.span == 3));
+        assert!(second.events.iter().any(|(_, e)| e.span == 4));
+    }
+
+    #[test]
+    fn incremental_drain_tracks_drifting_remote_clock() {
+        // Synthetic remote whose clock runs 25% fast on top of a 50 ms
+        // epoch skew: skew(t) = 50ms + t/4 on the reference timeline. A
+        // collector that probes the offset once at admission (the old
+        // behavior) accumulates t/4 of alignment error; per-drain EWMA
+        // re-probing must keep the aligned error a small fraction of that.
+        let reference = Journal::with_capacity(64);
+        let refc = reference.clone();
+        let srv = RpcServer::bind(
+            "127.0.0.1:0",
+            Arc::new(move |tag, payload| {
+                let t = refc.now_ns();
+                let remote_now = t + 50_000_000 + t / 4;
+                match tag {
+                    tags::CLOCK => Ok(wire::to_bytes(&remote_now)),
+                    tags::DRAIN_SINCE => {
+                        let cursor: u64 =
+                            wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                        // One fresh instant stamped "now" on the drifting clock.
+                        let e = TraceEvent {
+                            ts_ns: remote_now,
+                            dur_ns: 0,
+                            span: cursor + 1,
+                            parent: 0,
+                            tid: 1,
+                            name: "drift.tick".into(),
+                            args: vec![],
+                        };
+                        Ok(wire::to_bytes(&(
+                            "drifty".to_string(),
+                            vec![e],
+                            cursor + 1,
+                            0u64,
+                        )))
+                    }
+                    other => Err(format!("unknown tag {other}")),
+                }
+            }),
+        )
+        .unwrap();
+
+        let mut c = Collector::new();
+        c.add_local(reference.clone());
+        c.add_remote(srv.local_addr()).unwrap();
+
+        let mut worst_err = 0i64;
+        for _ in 0..8 {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            let dump = c.drain_incremental();
+            let now = reference.now_ns() as i64;
+            for e in dump.named("drift.tick") {
+                worst_err = worst_err.max((e.ts_ns as i64 - now).abs());
+            }
+        }
+        let accumulated_drift = (reference.now_ns() / 4) as i64;
+        assert!(
+            accumulated_drift > 25_000_000,
+            "test must run long enough for drift to matter; got {accumulated_drift} ns"
+        );
+        assert!(
+            worst_err < 25_000_000,
+            "EWMA re-probe must bound aligned error well below the \
+             {accumulated_drift} ns a frozen offset would accumulate; worst {worst_err} ns"
+        );
     }
 
     #[test]

@@ -96,7 +96,7 @@ pub fn write_chrome(path: &str, dump: &TraceDump) -> Result<()> {
         .with_context(|| format!("write trace {path}"))
 }
 
-fn jsonl_line(node: &str, ev: &TraceEvent) -> String {
+pub(crate) fn jsonl_line(node: &str, ev: &TraceEvent) -> String {
     let mut args: Vec<(String, Json)> = Vec::new();
     for (k, v) in &ev.args {
         args.push((k.clone(), Json::num(*v as f64)));
@@ -126,15 +126,23 @@ pub fn write_jsonl(path: &str, dump: &TraceDump) -> Result<()> {
         out.push_str(&jsonl_line(node, ev));
         out.push('\n');
     }
-    out.push_str(
-        &Json::Obj(vec![
-            ("fiber_trace_meta".into(), Json::num(1.0)),
-            ("dropped".into(), Json::num(dump.dropped as f64)),
-        ])
-        .render(),
-    );
+    out.push_str(&meta_footer(dump.dropped, dump.crash));
     out.push('\n');
     std::fs::write(path, out).with_context(|| format!("write trace {path}"))
+}
+
+/// The JSONL metadata footer line. `crash` marks a flight-recorder crash
+/// window (a bounded suffix of the run — [`super::check`] relaxes
+/// whole-run invariants when it sees this).
+pub(crate) fn meta_footer(dropped: u64, crash: bool) -> String {
+    let mut fields = vec![
+        ("fiber_trace_meta".to_string(), Json::num(1.0)),
+        ("dropped".to_string(), Json::num(dropped as f64)),
+    ];
+    if crash {
+        fields.push(("crash".to_string(), Json::num(1.0)));
+    }
+    Json::Obj(fields).render()
 }
 
 fn num_u64(j: Option<&Json>) -> u64 {
@@ -212,15 +220,66 @@ fn event_from_obj(obj: &Json, chrome: bool) -> Option<(String, TraceEvent)> {
     ))
 }
 
-/// Load a trace file written by [`write_chrome`] or [`write_jsonl`] back
-/// into a [`TraceDump`] (format sniffed from the content). This is what
-/// `fiber-cli trace-view` summarizes, and what a future replay harness
-/// will consume.
+/// One parsed JSONL text: events plus whatever the footer(s) carried.
+struct JsonlParse {
+    events: Vec<(String, TraceEvent)>,
+    dropped: u64,
+    crash: bool,
+}
+
+/// Parse JSONL trace text. With `lenient_tail`, an unparseable *final*
+/// non-empty line is discarded instead of failing the read — a process
+/// killed mid-append (SIGKILL during a live-segment write) leaves exactly
+/// one truncated trailing line, and losing that one event must not make
+/// the surviving history unreadable.
+fn parse_jsonl(text: &str, lenient_tail: bool) -> Result<JsonlParse> {
+    let lines: Vec<&str> = text
+        .lines()
+        .map(|l| l.trim())
+        .filter(|l| !l.is_empty())
+        .collect();
+    let mut out = JsonlParse {
+        events: Vec::new(),
+        dropped: 0,
+        crash: false,
+    };
+    for (i, line) in lines.iter().enumerate() {
+        let obj = match Json::parse(line) {
+            Ok(o) => o,
+            Err(e) if lenient_tail && i + 1 == lines.len() => {
+                let _ = e; // torn tail from a kill mid-write: drop it
+                break;
+            }
+            Err(e) => return Err(anyhow::anyhow!("trace jsonl parse: {e}")),
+        };
+        if obj.get("fiber_trace_meta").is_some() {
+            // Footer line written by `write_jsonl` / the segment writer —
+            // carries the dropped counter (and crash marker), not an event.
+            out.dropped += num_u64(obj.get("dropped"));
+            out.crash |= num_u64(obj.get("crash")) != 0;
+            continue;
+        }
+        if let Some(pair) = event_from_obj(&obj, false) {
+            out.events.push(pair);
+        }
+    }
+    Ok(out)
+}
+
+/// Load a trace back into a [`TraceDump`]. `path` may be a file written by
+/// [`write_chrome`] or [`write_jsonl`] (format sniffed from the content),
+/// or a **live-segment directory** produced by a `--live` run — see
+/// [`read_trace_dir`]. This is what `fiber-cli trace-view` summarizes and
+/// `trace-check` audits.
 pub fn read_trace(path: &str) -> Result<TraceDump> {
+    if std::fs::metadata(path).map(|m| m.is_dir()).unwrap_or(false) {
+        return read_trace_dir(path);
+    }
     let text = std::fs::read_to_string(path).with_context(|| format!("read trace {path}"))?;
     let trimmed = text.trim_start();
     let mut events: Vec<(String, TraceEvent)> = Vec::new();
     let mut dropped = 0u64;
+    let mut crash = false;
     if trimmed.starts_with('{') && !trimmed.contains('\n') || trimmed.starts_with("{\"traceEvents\"") {
         // Chrome document: one object with a traceEvents array.
         let doc = Json::parse(text.trim())
@@ -234,27 +293,65 @@ pub fn read_trace(path: &str) -> Result<TraceDump> {
             }
         }
     } else {
-        // JSONL: one object per line.
-        for line in text.lines() {
-            let line = line.trim();
-            if line.is_empty() {
-                continue;
-            }
-            let obj =
-                Json::parse(line).map_err(|e| anyhow::anyhow!("trace jsonl parse: {e}"))?;
-            if obj.get("fiber_trace_meta").is_some() {
-                // Footer line written by `write_jsonl` — carries the
-                // journals' dropped counter, not an event.
-                dropped = num_u64(obj.get("dropped"));
-                continue;
-            }
-            if let Some(pair) = event_from_obj(&obj, false) {
-                events.push(pair);
-            }
-        }
+        let parsed = parse_jsonl(&text, false)?;
+        events = parsed.events;
+        dropped = parsed.dropped;
+        crash = parsed.crash;
     }
     events.sort_by_key(|(_, e)| e.ts_ns);
-    Ok(TraceDump { events, dropped })
+    Ok(TraceDump {
+        events,
+        dropped,
+        crash,
+    })
+}
+
+/// Load a live-segment directory (`segment-0000.jsonl`, `segment-0001.jsonl`,
+/// …) written by [`super::live::SegmentWriter`] and merge it into one
+/// [`TraceDump`], exactly as if the run had exported a single file:
+///
+/// * segments are read in name order (zero-padded rotation indices sort
+///   lexicographically);
+/// * each segment's footer carries its *delta* of the dropped counter, so
+///   summing them reconstructs the run total without double counting;
+/// * the **last** segment tolerates a torn final line and a missing footer
+///   — that is precisely what a SIGKILL mid-run leaves behind, and the
+///   surviving segments 0..N−1 must still audit cleanly.
+pub fn read_trace_dir(dir: &str) -> Result<TraceDump> {
+    let mut paths: Vec<std::path::PathBuf> = std::fs::read_dir(dir)
+        .with_context(|| format!("read trace dir {dir}"))?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .map(|n| n.starts_with("segment-") && n.ends_with(".jsonl"))
+                .unwrap_or(false)
+        })
+        .collect();
+    paths.sort();
+    if paths.is_empty() {
+        anyhow::bail!("no segment-*.jsonl files in {dir}");
+    }
+    let mut events: Vec<(String, TraceEvent)> = Vec::new();
+    let mut dropped = 0u64;
+    let mut crash = false;
+    let last = paths.len() - 1;
+    for (i, p) in paths.iter().enumerate() {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("read trace segment {}", p.display()))?;
+        let parsed = parse_jsonl(&text, i == last)
+            .with_context(|| format!("segment {}", p.display()))?;
+        events.extend(parsed.events);
+        dropped += parsed.dropped;
+        crash |= parsed.crash;
+    }
+    events.sort_by_key(|(_, e)| e.ts_ns);
+    Ok(TraceDump {
+        events,
+        dropped,
+        crash,
+    })
 }
 
 /// Write the folded-stack (flamegraph) rendering of `dump` to `path`:
@@ -341,6 +438,7 @@ mod tests {
                 ),
             ],
             dropped: 7,
+            crash: false,
         }
     }
 
@@ -432,6 +530,64 @@ mod tests {
             .unwrap();
         assert_eq!(heal.1.parent, 2, "causal links survive chrome export");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn crash_footer_roundtrips() {
+        let mut d = dump();
+        d.crash = true;
+        let path = std::env::temp_dir().join("fiber_trace_test_crash.jsonl");
+        let path = path.to_str().unwrap().to_string();
+        write_jsonl(&path, &d).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"crash\""), "{text}");
+        let back = read_trace(&path).unwrap();
+        assert!(back.crash, "crash marker survives the round trip");
+        assert_eq!(back.dropped, 7);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn segment_dir_merges_sums_deltas_and_tolerates_torn_tail() {
+        let d = dump();
+        let dir = std::env::temp_dir().join("fiber_trace_test_segdir");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // Segment 0: first two events, dropped delta 3.
+        let mut seg0 = String::new();
+        for (node, ev) in &d.events[..2] {
+            seg0.push_str(&jsonl_line(node, ev));
+            seg0.push('\n');
+        }
+        seg0.push_str(&meta_footer(3, false));
+        seg0.push('\n');
+        std::fs::write(dir.join("segment-0000.jsonl"), seg0).unwrap();
+        // Segment 1: last event, dropped delta 4, then a torn half-line and
+        // no footer — what a SIGKILL mid-append leaves behind.
+        let mut seg1 = String::new();
+        seg1.push_str(&jsonl_line(&d.events[2].0, &d.events[2].1));
+        seg1.push('\n');
+        seg1.push_str(&meta_footer(4, false));
+        seg1.push('\n');
+        seg1.push_str("{\"node\":\"worker\",\"ts_ns\":99");
+        std::fs::write(dir.join("segment-0001.jsonl"), seg1).unwrap();
+        // An unrelated file in the directory is ignored.
+        std::fs::write(dir.join("notes.txt"), "not a segment").unwrap();
+
+        let back = read_trace(dir.to_str().unwrap()).unwrap();
+        assert_eq!(back.events.len(), 3, "all segments merged, torn tail dropped");
+        assert_eq!(back.dropped, 7, "per-segment deltas sum to the run total");
+        assert!(!back.crash);
+        assert_eq!(back.events[2].1.name, "store.fetch");
+        // A torn line anywhere *except* the final segment's tail is still
+        // an error — silent mid-run corruption must not pass.
+        std::fs::write(
+            dir.join("segment-0000.jsonl"),
+            "{\"node\":\"worker\",\"ts_ns\":99",
+        )
+        .unwrap();
+        assert!(read_trace(dir.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,1234 @@
+//! `fiber::trace::live` — the streaming observability plane.
+//!
+//! Everything in [`super::export`] is post-hoc: journals drain once, at
+//! exit, so a hung collective or a SIGKILLed leader yields zero telemetry
+//! exactly when it matters most. This module makes the same journals
+//! *stream*:
+//!
+//! * [`SegmentWriter`] appends each incremental drain to rotating on-disk
+//!   JSONL **segments** (`segment-0000.jsonl`, …). A run killed at
+//!   iteration N leaves segments 0..N−1 intact — and
+//!   [`super::export::read_trace`] accepts the segment directory wherever
+//!   it accepts a file, so `trace-view`/`trace-check` audit partial runs.
+//! * [`Health`] folds the event stream into an online model: per-node
+//!   liveness, pool throughput and queue depth, ring generation and
+//!   in-flight op/chunk progress, store hit-rate and resident bytes, the
+//!   pop leaderboard, and **online straggler detection** against rolling
+//!   per-span-kind p50/p99 baselines (flagged spans are also emitted back
+//!   into the trace as `trace.straggler` instants, parented under the
+//!   offending span).
+//! * [`Streamer`] runs the drain→segment→health loop on a background
+//!   cadence, optionally re-exporting [`crate::metrics::export_prometheus`]
+//!   snapshots and serving [`HealthSnapshot`]s over RPC for
+//!   `fiber-cli top --connect`.
+//! * [`install_crash_hook`] / [`crash_dump_now`] dump the
+//!   [`super::FlightRecorder`]'s last window to `fiber-crash-<pid>.jsonl`
+//!   on panic or fatal error, with the panicking span marked by a
+//!   `trace.crash` instant. Crash dumps carry the `crash` footer marker so
+//!   [`super::check`] audits them as the bounded suffixes they are.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::Write as _;
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::comms::rpc::{RpcClient, RpcServer};
+use crate::wire::{self, Decode, Encode};
+
+use super::collect::{Collector, TraceDump};
+use super::TraceEvent;
+
+// ---------------------------------------------------------------------------
+// Segment writer
+// ---------------------------------------------------------------------------
+
+/// Default events per segment before rotation.
+pub const SEGMENT_EVENTS: usize = 4096;
+
+/// Appends incremental drains to rotating JSONL segment files. Each closed
+/// segment ends with a metadata footer whose `dropped` field is the
+/// *delta* of the journals' cumulative dropped counter since the previous
+/// segment — so a reader summing footers across a directory reconstructs
+/// the run total without double counting ([`super::export::read_trace_dir`]).
+///
+/// Appends go straight to the file (no userspace buffering): a SIGKILL
+/// costs at most one torn trailing line, which the directory reader
+/// tolerates on the final segment.
+pub struct SegmentWriter {
+    dir: PathBuf,
+    max_events: usize,
+    seg_index: u32,
+    in_current: usize,
+    current: Option<std::fs::File>,
+    /// Cumulative dropped count already attributed to closed segments.
+    dropped_base: u64,
+    /// Latest cumulative dropped count observed (for the final footer).
+    last_dropped: u64,
+}
+
+impl SegmentWriter {
+    /// Create (or reuse) `dir` and start writing at `segment-0000.jsonl`.
+    pub fn new(dir: &Path, max_events: usize) -> Result<SegmentWriter> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create live trace dir {}", dir.display()))?;
+        Ok(SegmentWriter {
+            dir: dir.to_path_buf(),
+            max_events: max_events.max(1),
+            seg_index: 0,
+            in_current: 0,
+            current: None,
+            dropped_base: 0,
+            last_dropped: 0,
+        })
+    }
+
+    fn segment_path(&self, index: u32) -> PathBuf {
+        self.dir.join(format!("segment-{index:04}.jsonl"))
+    }
+
+    fn open_current(&mut self) -> Result<&mut std::fs::File> {
+        if self.current.is_none() {
+            let path = self.segment_path(self.seg_index);
+            let f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(&path)
+                .with_context(|| format!("open trace segment {}", path.display()))?;
+            self.current = Some(f);
+            self.in_current = 0;
+        }
+        Ok(self.current.as_mut().unwrap())
+    }
+
+    /// Close the current segment: write its dropped-*delta* footer and
+    /// advance the rotation index.
+    fn close_current(&mut self) -> Result<()> {
+        if let Some(mut f) = self.current.take() {
+            let delta = self.last_dropped.saturating_sub(self.dropped_base);
+            self.dropped_base = self.last_dropped;
+            let footer = super::export::meta_footer(delta, false);
+            f.write_all(footer.as_bytes())
+                .and_then(|()| f.write_all(b"\n"))
+                .with_context(|| {
+                    format!("write footer to {}", self.segment_path(self.seg_index).display())
+                })?;
+            self.seg_index += 1;
+            self.in_current = 0;
+        }
+        Ok(())
+    }
+
+    /// Append one incremental drain. `dump.dropped` must be the journals'
+    /// *cumulative* dropped count (what [`Collector::drain_incremental`]
+    /// returns); the writer converts it to per-segment deltas itself.
+    pub fn append(&mut self, dump: &TraceDump) -> Result<()> {
+        self.last_dropped = self.last_dropped.max(dump.dropped);
+        let mut i = 0;
+        while i < dump.events.len() {
+            let room = self.max_events - self.in_current.min(self.max_events);
+            if room == 0 {
+                self.close_current()?;
+                continue;
+            }
+            let take = room.min(dump.events.len() - i);
+            let mut buf = String::new();
+            for (node, ev) in &dump.events[i..i + take] {
+                buf.push_str(&super::export::jsonl_line(node, ev));
+                buf.push('\n');
+            }
+            let seg = self.seg_index;
+            let f = self.open_current()?;
+            f.write_all(buf.as_bytes())
+                .with_context(|| format!("append to segment {seg}"))?;
+            self.in_current += take;
+            i += take;
+        }
+        Ok(())
+    }
+
+    /// Seal the stream: footer the current segment (creating an empty
+    /// footer-only segment if nothing was ever written, so the directory
+    /// is always readable).
+    pub fn finish(&mut self) -> Result<()> {
+        self.open_current()?;
+        self.close_current()
+    }
+
+    /// Segments fully written so far (excluding the open one).
+    pub fn segments_closed(&self) -> u32 {
+        self.seg_index
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Health model
+// ---------------------------------------------------------------------------
+
+/// Rolling per-span-kind duration window for online quantile baselines.
+struct Baseline {
+    window: VecDeque<u64>,
+    cap: usize,
+}
+
+impl Baseline {
+    fn new(cap: usize) -> Baseline {
+        Baseline {
+            window: VecDeque::new(),
+            cap,
+        }
+    }
+
+    fn push(&mut self, dur_ns: u64) {
+        if self.window.len() >= self.cap {
+            self.window.pop_front();
+        }
+        self.window.push_back(dur_ns);
+    }
+
+    fn quantile(&self, q: f64) -> u64 {
+        if self.window.is_empty() {
+            return 0;
+        }
+        let mut v: Vec<u64> = self.window.iter().copied().collect();
+        v.sort_unstable();
+        let rank = ((q * (v.len() - 1) as f64).round() as usize).min(v.len() - 1);
+        v[rank]
+    }
+}
+
+struct NodeState {
+    last_ts_ns: u64,
+    events: u64,
+    stragglers: u64,
+}
+
+/// Per-node liveness in a [`HealthSnapshot`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct NodeHealth {
+    pub name: String,
+    /// Leader-clock timestamp of the node's most recent event — the
+    /// heartbeat; `snapshot.now_ns - last_ts_ns` is the liveness age.
+    pub last_ts_ns: u64,
+    pub events: u64,
+    pub stragglers: u64,
+}
+
+impl Encode for NodeHealth {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.name.encode(buf);
+        self.last_ts_ns.encode(buf);
+        self.events.encode(buf);
+        self.stragglers.encode(buf);
+    }
+}
+
+impl Decode for NodeHealth {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(NodeHealth {
+            name: String::decode(r)?,
+            last_ts_ns: u64::decode(r)?,
+            events: u64::decode(r)?,
+            stragglers: u64::decode(r)?,
+        })
+    }
+}
+
+/// One flagged straggler (kept for the `top` readout; the trace-side
+/// record is the `trace.straggler` instant).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StragglerFlag {
+    pub node: String,
+    /// Span kind that blew its baseline (`pool.run`, `ring.allreduce`, …).
+    pub name: String,
+    pub dur_ns: u64,
+    pub p99_ns: u64,
+}
+
+impl Encode for StragglerFlag {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.node.encode(buf);
+        self.name.encode(buf);
+        self.dur_ns.encode(buf);
+        self.p99_ns.encode(buf);
+    }
+}
+
+impl Decode for StragglerFlag {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(StragglerFlag {
+            node: String::decode(r)?,
+            name: String::decode(r)?,
+            dur_ns: u64::decode(r)?,
+            p99_ns: u64::decode(r)?,
+        })
+    }
+}
+
+/// A point-in-time readout of the [`Health`] model — what `fiber-cli top`
+/// renders and what the telemetry RPC ships (wire-encodable).
+#[derive(Clone, Debug, Default)]
+pub struct HealthSnapshot {
+    /// Leader-clock high-water mark of the observed stream, ns.
+    pub now_ns: u64,
+    pub nodes: Vec<NodeHealth>,
+    pub pool_runs: u64,
+    /// Pool throughput over the trailing window, runs/s × 1000.
+    pub pool_tp_milli: u64,
+    /// `pool.queue.depth` gauge (leader-process metrics; 0 offline).
+    pub pool_queue_depth: i64,
+    /// Highest ring generation seen (−1: no ring activity).
+    pub ring_gen: i64,
+    /// Completed collective ops (`ring.allreduce` + `ring.broadcast`).
+    pub ring_ops: u64,
+    /// Chunk-level progress instants (`ring.chunk.*`) — the in-flight op's
+    /// heartbeat between op completions.
+    pub ring_chunks: u64,
+    pub ring_heals: u64,
+    /// Latest `ring.chunk.*` chunk / step args (−1: none yet).
+    pub ring_last_chunk: i64,
+    pub ring_last_step: i64,
+    pub store_hits: u64,
+    pub store_fetches: u64,
+    /// `store.bytes` gauge (leader-process metrics; 0 offline).
+    pub store_bytes: i64,
+    /// Pop leaderboard: best `(trial, reward_milli)` pairs, reward-desc.
+    pub pop_best: Vec<(i64, i64)>,
+    pub straggler_flags: u64,
+    pub recent_stragglers: Vec<StragglerFlag>,
+}
+
+impl Encode for HealthSnapshot {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.now_ns.encode(buf);
+        self.nodes.encode(buf);
+        self.pool_runs.encode(buf);
+        self.pool_tp_milli.encode(buf);
+        self.pool_queue_depth.encode(buf);
+        self.ring_gen.encode(buf);
+        self.ring_ops.encode(buf);
+        self.ring_chunks.encode(buf);
+        self.ring_heals.encode(buf);
+        self.ring_last_chunk.encode(buf);
+        self.ring_last_step.encode(buf);
+        self.store_hits.encode(buf);
+        self.store_fetches.encode(buf);
+        self.store_bytes.encode(buf);
+        self.pop_best.encode(buf);
+        self.straggler_flags.encode(buf);
+        self.recent_stragglers.encode(buf);
+    }
+}
+
+impl Decode for HealthSnapshot {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        Ok(HealthSnapshot {
+            now_ns: u64::decode(r)?,
+            nodes: Vec::<NodeHealth>::decode(r)?,
+            pool_runs: u64::decode(r)?,
+            pool_tp_milli: u64::decode(r)?,
+            pool_queue_depth: i64::decode(r)?,
+            ring_gen: i64::decode(r)?,
+            ring_ops: u64::decode(r)?,
+            ring_chunks: u64::decode(r)?,
+            ring_heals: u64::decode(r)?,
+            ring_last_chunk: i64::decode(r)?,
+            ring_last_step: i64::decode(r)?,
+            store_hits: u64::decode(r)?,
+            store_fetches: u64::decode(r)?,
+            store_bytes: i64::decode(r)?,
+            pop_best: Vec::<(i64, i64)>::decode(r)?,
+            straggler_flags: u64::decode(r)?,
+            recent_stragglers: Vec::<StragglerFlag>::decode(r)?,
+        })
+    }
+}
+
+fn fmt_ms(ns: u64) -> String {
+    format!("{:.1} ms", ns as f64 / 1e6)
+}
+
+fn fmt_bytes(b: i64) -> String {
+    let b = b.max(0) as f64;
+    if b >= 1024.0 * 1024.0 {
+        format!("{:.1} MiB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1} KiB", b / 1024.0)
+    } else {
+        format!("{b:.0} B")
+    }
+}
+
+impl HealthSnapshot {
+    /// Plain-text rendering: one screen, grep-friendly section prefixes
+    /// (`NODE`, `POOL`, `RING`, `STORE`, `POP`, `STRAGGLER`) so CI can
+    /// assert on lines and humans can watch it refresh.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "fiber top — t={} — {} node(s), {} straggler flag(s)\n",
+            fmt_ms(self.now_ns),
+            self.nodes.len(),
+            self.straggler_flags
+        ));
+        out.push_str("NODE            LAST-EVENT-AGE      EVENTS  STRAGGLERS\n");
+        for n in &self.nodes {
+            out.push_str(&format!(
+                "NODE {:<14} {:>10}  {:>10}  {:>10}\n",
+                n.name,
+                fmt_ms(self.now_ns.saturating_sub(n.last_ts_ns)),
+                n.events,
+                n.stragglers
+            ));
+        }
+        out.push_str(&format!(
+            "POOL  runs {}  throughput {:.1}/s  queue-depth {}\n",
+            self.pool_runs,
+            self.pool_tp_milli as f64 / 1000.0,
+            self.pool_queue_depth
+        ));
+        out.push_str(&format!(
+            "RING  gen {}  ops {}  chunks {}  heals {}  last-chunk {}  last-step {}\n",
+            self.ring_gen,
+            self.ring_ops,
+            self.ring_chunks,
+            self.ring_heals,
+            self.ring_last_chunk,
+            self.ring_last_step
+        ));
+        let lookups = self.store_hits + self.store_fetches;
+        let hit_rate = if lookups == 0 {
+            0.0
+        } else {
+            self.store_hits as f64 * 100.0 / lookups as f64
+        };
+        out.push_str(&format!(
+            "STORE hits {}  fetches {}  hit-rate {:.1}%  bytes {}\n",
+            self.store_hits,
+            self.store_fetches,
+            hit_rate,
+            fmt_bytes(self.store_bytes)
+        ));
+        if self.pop_best.is_empty() {
+            out.push_str("POP   (no trials observed)\n");
+        } else {
+            let board: Vec<String> = self
+                .pop_best
+                .iter()
+                .map(|(t, r)| format!("trial {t}: {:.3}", *r as f64 / 1000.0))
+                .collect();
+            out.push_str(&format!("POP   leaderboard  {}\n", board.join("  |  ")));
+        }
+        for s in &self.recent_stragglers {
+            let factor = if s.p99_ns == 0 {
+                0.0
+            } else {
+                s.dur_ns as f64 / s.p99_ns as f64
+            };
+            out.push_str(&format!(
+                "STRAGGLER {} on {}: {} vs p99 {} ({factor:.1}x)\n",
+                s.name,
+                s.node,
+                fmt_ms(s.dur_ns),
+                fmt_ms(s.p99_ns)
+            ));
+        }
+        out
+    }
+}
+
+/// Online aggregator over the incremental event stream. Feed it batches
+/// with [`Health::observe`] (leader-clock order within a batch is fine —
+/// [`Collector::drain_incremental`] sorts), read it with
+/// [`Health::snapshot`].
+pub struct Health {
+    /// Straggler threshold multiplier: a span is flagged when its duration
+    /// exceeds `k × p99` of its kind's rolling baseline.
+    k: u64,
+    /// Minimum baseline samples before flagging (warm-up guard).
+    min_baseline: usize,
+    nodes: Vec<(String, NodeState)>,
+    baselines: HashMap<String, Baseline>,
+    now_ns: u64,
+    pool_runs: u64,
+    run_ends: VecDeque<u64>,
+    ring_gen: i64,
+    ring_ops: u64,
+    ring_chunks: u64,
+    ring_heals: u64,
+    ring_last_chunk: i64,
+    ring_last_step: i64,
+    store_hits: u64,
+    store_fetches: u64,
+    pop_best: HashMap<i64, i64>,
+    straggler_flags: u64,
+    recent_stragglers: VecDeque<StragglerFlag>,
+}
+
+/// Trailing window for pool throughput, ns.
+const TP_WINDOW_NS: u64 = 2_000_000_000;
+/// Rolling baseline window per span kind.
+const BASELINE_CAP: usize = 256;
+/// Recent straggler flags kept for display.
+const RECENT_STRAGGLERS: usize = 8;
+
+impl Health {
+    /// `k` is the straggler multiplier (duration > k × rolling p99 flags).
+    pub fn new(k: u64) -> Health {
+        Health {
+            k: k.max(1),
+            min_baseline: 20,
+            nodes: Vec::new(),
+            baselines: HashMap::new(),
+            now_ns: 0,
+            pool_runs: 0,
+            run_ends: VecDeque::new(),
+            ring_gen: -1,
+            ring_ops: 0,
+            ring_chunks: 0,
+            ring_heals: 0,
+            ring_last_chunk: -1,
+            ring_last_step: -1,
+            store_hits: 0,
+            store_fetches: 0,
+            pop_best: HashMap::new(),
+            straggler_flags: 0,
+            recent_stragglers: VecDeque::new(),
+        }
+    }
+
+    fn node_mut(&mut self, name: &str) -> &mut NodeState {
+        if let Some(pos) = self.nodes.iter().position(|(n, _)| n == name) {
+            return &mut self.nodes[pos].1;
+        }
+        self.nodes.push((
+            name.to_string(),
+            NodeState {
+                last_ts_ns: 0,
+                events: 0,
+                stragglers: 0,
+            },
+        ));
+        &mut self.nodes.last_mut().unwrap().1
+    }
+
+    /// Fold one batch of `(node, event)` pairs into the model. Straggler
+    /// flags are checked against the baseline *before* the new sample
+    /// joins it, then emitted as `trace.straggler` instants (parented
+    /// under the offending span) when tracing is enabled — so the flag
+    /// itself lands in the stream the next drain picks up.
+    pub fn observe(&mut self, events: &[(String, TraceEvent)]) {
+        for (node, ev) in events {
+            let end_ns = ev.ts_ns.saturating_add(ev.dur_ns);
+            self.now_ns = self.now_ns.max(end_ns);
+            {
+                let st = self.node_mut(node);
+                st.last_ts_ns = st.last_ts_ns.max(end_ns);
+                st.events += 1;
+            }
+            match ev.name.as_str() {
+                "pool.run" => {
+                    self.pool_runs += 1;
+                    self.run_ends.push_back(end_ns);
+                    while self
+                        .run_ends
+                        .front()
+                        .is_some_and(|&t| t + TP_WINDOW_NS < self.now_ns)
+                    {
+                        self.run_ends.pop_front();
+                    }
+                }
+                "ring.allreduce" | "ring.broadcast" => self.ring_ops += 1,
+                "ring.heal" => self.ring_heals += 1,
+                "store.fetch" => self.store_fetches += 1,
+                "store.hit" | "store.wait" => self.store_hits += 1,
+                "pop.score" => {
+                    if let (Some(trial), Some(reward)) =
+                        (ev.arg("trial"), ev.arg("reward_milli"))
+                    {
+                        let best = self.pop_best.entry(trial).or_insert(i64::MIN);
+                        *best = (*best).max(reward);
+                    }
+                }
+                name if name.starts_with("ring.chunk.") => {
+                    self.ring_chunks += 1;
+                    if let Some(c) = ev.arg("chunk") {
+                        self.ring_last_chunk = c;
+                    }
+                    if let Some(s) = ev.arg("step") {
+                        self.ring_last_step = s;
+                    }
+                }
+                _ => {}
+            }
+            if let Some(g) = ev.arg("gen") {
+                if ev.name.starts_with("ring.") {
+                    self.ring_gen = self.ring_gen.max(g);
+                }
+            }
+            // Straggler detection on every completed span.
+            if ev.dur_ns > 0 {
+                let (flagged, p99) = {
+                    let base = self
+                        .baselines
+                        .entry(ev.name.clone())
+                        .or_insert_with(|| Baseline::new(BASELINE_CAP));
+                    let p99 = base.quantile(0.99);
+                    let flagged = base.window.len() >= self.min_baseline
+                        && p99 > 0
+                        && ev.dur_ns > self.k.saturating_mul(p99);
+                    base.push(ev.dur_ns);
+                    (flagged, p99)
+                };
+                if flagged {
+                    self.straggler_flags += 1;
+                    self.node_mut(node).stragglers += 1;
+                    if self.recent_stragglers.len() >= RECENT_STRAGGLERS {
+                        self.recent_stragglers.pop_front();
+                    }
+                    self.recent_stragglers.push_back(StragglerFlag {
+                        node: node.clone(),
+                        name: ev.name.clone(),
+                        dur_ns: ev.dur_ns,
+                        p99_ns: p99,
+                    });
+                    super::instant_under(
+                        "trace.straggler",
+                        ev.span,
+                        &[
+                            ("dur_ns", ev.dur_ns as i64),
+                            ("p99_ns", p99 as i64),
+                            (
+                                "factor_milli",
+                                (ev.dur_ns.saturating_mul(1000) / p99.max(1)) as i64,
+                            ),
+                        ],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Current readout. Gauge-backed fields (`pool.queue.depth`,
+    /// `store.bytes`) are read from this process's metrics registry — live
+    /// in-process values on a leader, zeros when replaying a trace offline.
+    pub fn snapshot(&self) -> HealthSnapshot {
+        let mut nodes: Vec<NodeHealth> = self
+            .nodes
+            .iter()
+            .map(|(name, st)| NodeHealth {
+                name: name.clone(),
+                last_ts_ns: st.last_ts_ns,
+                events: st.events,
+                stragglers: st.stragglers,
+            })
+            .collect();
+        nodes.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut pop_best: Vec<(i64, i64)> =
+            self.pop_best.iter().map(|(&t, &r)| (t, r)).collect();
+        pop_best.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        pop_best.truncate(5);
+        let tp_milli = if self.run_ends.is_empty() {
+            0
+        } else {
+            // runs/s × 1000 over the trailing window.
+            self.run_ends.len() as u64 * 1_000_000 / (TP_WINDOW_NS / 1_000_000)
+        };
+        HealthSnapshot {
+            now_ns: self.now_ns,
+            nodes,
+            pool_runs: self.pool_runs,
+            pool_tp_milli: tp_milli,
+            pool_queue_depth: crate::metrics::gauge("pool.queue.depth").get(),
+            ring_gen: self.ring_gen,
+            ring_ops: self.ring_ops,
+            ring_chunks: self.ring_chunks,
+            ring_heals: self.ring_heals,
+            ring_last_chunk: self.ring_last_chunk,
+            ring_last_step: self.ring_last_step,
+            store_hits: self.store_hits,
+            store_fetches: self.store_fetches,
+            store_bytes: crate::metrics::gauge("store.bytes").get(),
+            pop_best,
+            straggler_flags: self.straggler_flags,
+            recent_stragglers: self.recent_stragglers.iter().cloned().collect(),
+        }
+    }
+}
+
+/// Replay a whole dump (a file or segment directory read back via
+/// [`super::export::read_trace`]) through a fresh [`Health`] — the offline
+/// path behind `fiber-cli top --input`.
+pub fn health_from_dump(dump: &TraceDump, k: u64) -> Health {
+    let mut h = Health::new(k);
+    h.observe(&dump.events);
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Telemetry RPC (fiber-cli top --connect)
+// ---------------------------------------------------------------------------
+
+/// RPC tags of the live-telemetry protocol.
+pub mod top_tags {
+    /// Request: empty. Reply: wire-encoded [`super::HealthSnapshot`].
+    pub const SNAPSHOT: u32 = 1;
+}
+
+/// Serve `health` snapshots for `fiber-cli top --connect ADDR`.
+pub fn serve_health(health: Arc<Mutex<Health>>, bind: &str) -> Result<RpcServer> {
+    RpcServer::bind(
+        bind,
+        Arc::new(move |tag, _payload| match tag {
+            top_tags::SNAPSHOT => {
+                let snap = health
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .snapshot();
+                Ok(wire::to_bytes(&snap))
+            }
+            other => Err(format!("unknown telemetry rpc tag {other}")),
+        }),
+    )
+}
+
+/// Pull one snapshot from a [`serve_health`] endpoint.
+pub fn fetch_snapshot(addr: SocketAddr) -> Result<HealthSnapshot> {
+    let cli = RpcClient::connect(addr).context("connect to telemetry endpoint")?;
+    let reply = cli
+        .call(top_tags::SNAPSHOT, &[])
+        .context("telemetry snapshot call")?;
+    wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("snapshot decode: {e}"))
+}
+
+// ---------------------------------------------------------------------------
+// Streamer
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`Streamer::start`].
+pub struct StreamerConfig {
+    /// Segment directory (created if absent).
+    pub dir: PathBuf,
+    /// Drain cadence.
+    pub interval: Duration,
+    /// Events per segment before rotation.
+    pub max_segment_events: usize,
+    /// Bind address for the [`serve_health`] telemetry endpoint
+    /// (`--serve-top`); `None` disables it.
+    pub serve: Option<String>,
+    /// Rewrite a Prometheus snapshot here on every cadence tick
+    /// (`--metrics-file` while live); `None` disables it.
+    pub metrics_file: Option<String>,
+    /// Straggler threshold multiplier ([`Health::new`]).
+    pub straggler_k: u64,
+}
+
+impl StreamerConfig {
+    pub fn to_dir(dir: &Path) -> StreamerConfig {
+        StreamerConfig {
+            dir: dir.to_path_buf(),
+            interval: Duration::from_millis(200),
+            max_segment_events: SEGMENT_EVENTS,
+            serve: None,
+            metrics_file: None,
+            straggler_k: 3,
+        }
+    }
+}
+
+/// The background drain loop: every `interval`, pull
+/// [`Collector::drain_incremental`], append to the [`SegmentWriter`], fold
+/// into [`Health`], and (optionally) refresh the Prometheus snapshot.
+/// [`Streamer::stop`] performs one final drain and seals the segment
+/// stream; a process that never reaches `stop` (kill −9) still leaves all
+/// previously appended segments on disk.
+pub struct Streamer {
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<(Collector, SegmentWriter)>>,
+    health: Arc<Mutex<Health>>,
+    /// Held for its Drop (listener lifetime) when `serve` was configured.
+    _server: Option<RpcServer>,
+    metrics_file: Option<String>,
+}
+
+impl Streamer {
+    pub fn start(mut collector: Collector, cfg: StreamerConfig) -> Result<Streamer> {
+        let mut writer = SegmentWriter::new(&cfg.dir, cfg.max_segment_events)?;
+        let health = Arc::new(Mutex::new(Health::new(cfg.straggler_k)));
+        let server = match &cfg.serve {
+            Some(bind) => Some(serve_health(health.clone(), bind)?),
+            None => None,
+        };
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_t = stop.clone();
+        let health_t = health.clone();
+        let interval = cfg.interval;
+        let metrics_file = cfg.metrics_file.clone();
+        let handle = std::thread::Builder::new()
+            .name("fiber-trace-live".into())
+            .spawn(move || {
+                while !stop_t.load(Ordering::Relaxed) {
+                    std::thread::sleep(interval);
+                    let dump = collector.drain_incremental();
+                    if !dump.events.is_empty() {
+                        if let Err(e) = writer.append(&dump) {
+                            eprintln!("warning: live trace append failed: {e:#}");
+                        }
+                        health_t
+                            .lock()
+                            .unwrap_or_else(|e| e.into_inner())
+                            .observe(&dump.events);
+                    }
+                    if let Some(path) = &metrics_file {
+                        let _ = std::fs::write(path, crate::metrics::export_prometheus());
+                    }
+                }
+                (collector, writer)
+            })
+            .context("spawn live trace streamer")?;
+        Ok(Streamer {
+            stop,
+            handle: Some(handle),
+            health,
+            _server: server,
+            metrics_file: cfg.metrics_file,
+        })
+    }
+
+    /// Shared handle to the live model (the telemetry RPC reads the same).
+    pub fn health(&self) -> Arc<Mutex<Health>> {
+        self.health.clone()
+    }
+
+    /// Stop the cadence, run one final drain (nothing recorded before
+    /// `stop` is lost), seal the segment stream, and return the final
+    /// snapshot.
+    pub fn stop(mut self) -> Result<HealthSnapshot> {
+        self.stop.store(true, Ordering::Relaxed);
+        let Some(handle) = self.handle.take() else {
+            anyhow::bail!("streamer already stopped");
+        };
+        let (mut collector, mut writer) = handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("live trace streamer panicked"))?;
+        let dump = collector.drain_incremental();
+        if !dump.events.is_empty() {
+            writer.append(&dump)?;
+            self.health
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .observe(&dump.events);
+        }
+        writer.finish()?;
+        if let Some(path) = &self.metrics_file {
+            let _ = std::fs::write(path, crate::metrics::export_prometheus());
+        }
+        Ok(self
+            .health
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .snapshot())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Crash flight-recorder dumps
+// ---------------------------------------------------------------------------
+
+static CRASH_DIR: Mutex<Option<PathBuf>> = Mutex::new(None);
+static HOOK_INSTALLED: AtomicBool = AtomicBool::new(false);
+
+/// Where crash dumps land (default: the current directory).
+pub fn set_crash_dir(dir: &Path) {
+    *CRASH_DIR.lock().unwrap_or_else(|e| e.into_inner()) = Some(dir.to_path_buf());
+}
+
+/// Dump the flight recorder's window to `fiber-crash-<pid>.jsonl` in the
+/// crash dir. The panicking/faulting context is marked by appending a
+/// `trace.crash` instant parented under the calling thread's current span
+/// — on a panic hook that is the span the panic unwound out of. The file
+/// carries the `crash` footer marker (plus a non-zero `dropped`, since the
+/// window is a truncated suffix by construction) so `trace-check` audits
+/// it with crash-window semantics.
+///
+/// Returns `None` when the flight recorder is disabled or empty — there is
+/// nothing to dump, and an empty file would be noise.
+pub fn crash_dump_now(reason: &str) -> Option<PathBuf> {
+    let (events, overwritten) = super::flight().snapshot();
+    if events.is_empty() {
+        return None;
+    }
+    let journal = super::global();
+    let node = journal.node_name();
+    let mut pairs: Vec<(String, TraceEvent)> =
+        events.into_iter().map(|e| (node.clone(), e)).collect();
+    pairs.push((
+        node,
+        TraceEvent {
+            ts_ns: journal.now_ns(),
+            dur_ns: 0,
+            span: super::fresh_span_id(),
+            parent: super::current_span(),
+            tid: super::thread_tid(),
+            name: "trace.crash".to_string(),
+            args: vec![
+                ("pid".to_string(), std::process::id() as i64),
+                ("overwritten".to_string(), overwritten as i64),
+            ],
+        },
+    ));
+    pairs.sort_by_key(|(_, e)| e.ts_ns);
+    let dump = TraceDump {
+        events: pairs,
+        // A flight window is always a truncated view: even when nothing
+        // rolled off the ring, history before the window is gone.
+        dropped: overwritten.max(1),
+        crash: true,
+    };
+    let dir = CRASH_DIR
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .clone()
+        .unwrap_or_else(|| PathBuf::from("."));
+    let path = dir.join(format!("fiber-crash-{}.jsonl", std::process::id()));
+    let path_str = path.to_string_lossy().to_string();
+    match super::export::write_jsonl(&path_str, &dump) {
+        Ok(()) => {
+            eprintln!(
+                "fiber: {reason} — flight recorder dumped {} event(s) to {path_str}",
+                dump.events.len()
+            );
+            Some(path)
+        }
+        Err(e) => {
+            eprintln!("fiber: {reason} — flight recorder dump failed: {e:#}");
+            None
+        }
+    }
+}
+
+/// Install a panic hook that dumps the flight recorder before the default
+/// hook runs. Idempotent; chains whatever hook was installed before.
+pub fn install_crash_hook() {
+    if HOOK_INSTALLED.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let _ = crash_dump_now("panic");
+        prev(info);
+    }));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::tests::TEST_GUARD;
+    use super::*;
+    use crate::trace::check::check;
+    use crate::trace::export::read_trace;
+    use crate::trace::{Journal, TraceEvent};
+
+    fn ev(ts: u64, dur: u64, span: u64, name: &str, args: &[(&str, i64)]) -> TraceEvent {
+        TraceEvent {
+            ts_ns: ts,
+            dur_ns: dur,
+            span,
+            parent: 0,
+            tid: 1,
+            name: name.into(),
+            args: args.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fiber_live_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn segments_rotate_without_duplication_or_loss() {
+        let dir = tmpdir("rotate");
+        let mut w = SegmentWriter::new(&dir, 3).unwrap();
+        // 8 events across three appends straddle two rotation boundaries.
+        let batches = [(0u64..4u64), (4..5), (5..8)];
+        let mut cumulative_dropped = 0;
+        for batch in batches {
+            let events: Vec<(String, TraceEvent)> = batch
+                .map(|i| ("n".to_string(), ev(i * 10, 0, i + 1, "x", &[("i", i as i64)])))
+                .collect();
+            cumulative_dropped += 2;
+            let dump = TraceDump {
+                events,
+                dropped: cumulative_dropped,
+                crash: false,
+            };
+            w.append(&dump).unwrap();
+        }
+        w.finish().unwrap();
+        assert!(w.segments_closed() >= 3, "rotation at 3 events per segment");
+        let back = read_trace(dir.to_str().unwrap()).unwrap();
+        assert_eq!(back.events.len(), 8, "no duplication, no loss across rotation");
+        let spans: Vec<u64> = back.events.iter().map(|(_, e)| e.span).collect();
+        assert_eq!(spans, (1..=8).collect::<Vec<_>>());
+        assert_eq!(
+            back.dropped, 6,
+            "per-segment deltas reassemble the cumulative dropped count"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cursor_monotonicity_under_concurrent_writers() {
+        // Writers hammer a journal while a collector incrementally drains
+        // into segments; every recorded event must land exactly once.
+        let journal = Journal::with_capacity(1 << 14);
+        journal.set_node_name("w");
+        let dir = tmpdir("concurrent");
+        let mut w = SegmentWriter::new(&dir, 64).unwrap();
+        let mut c = Collector::new();
+        c.add_local(journal.clone());
+
+        const WRITERS: u64 = 4;
+        const PER_WRITER: u64 = 500;
+        let mut handles = Vec::new();
+        for t in 0..WRITERS {
+            let j = journal.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    j.record(TraceEvent {
+                        ts_ns: t * 1_000_000 + i,
+                        dur_ns: 0,
+                        span: t * PER_WRITER + i + 1,
+                        parent: 0,
+                        tid: t as u32 + 1,
+                        name: "w.ev".into(),
+                        args: vec![],
+                    });
+                    if i % 64 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        // Drain concurrently with the writers.
+        loop {
+            let dump = c.drain_incremental();
+            w.append(&dump).unwrap();
+            if handles.iter().all(|h| h.is_finished()) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let dump = c.drain_incremental();
+        w.append(&dump).unwrap();
+        w.finish().unwrap();
+
+        let back = read_trace(dir.to_str().unwrap()).unwrap();
+        assert_eq!(
+            back.events.len() as u64,
+            WRITERS * PER_WRITER,
+            "every event exactly once despite concurrent writers and rotation"
+        );
+        let mut spans: Vec<u64> = back.events.iter().map(|(_, e)| e.span).collect();
+        spans.sort_unstable();
+        spans.dedup();
+        assert_eq!(spans.len() as u64, WRITERS * PER_WRITER, "no duplicates");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn segment_dir_audits_identically_to_single_file() {
+        // The same healthy stream written as (a) rotated segments and (b)
+        // one file must produce byte-identical check verdicts.
+        let events: Vec<(String, TraceEvent)> = vec![
+            ("leader".into(), ev(10, 600, 1, "pop.slice", &[("trial", 0), ("slice", 0), ("ckpt", 7)])),
+            ("leader".into(), {
+                let mut e = ev(20, 100, 2, "pool.dispatch", &[("map_id", 0), ("tasks", 1)]);
+                e.parent = 1;
+                e
+            }),
+            ("w1".into(), {
+                let mut e = ev(40, 200, 3, "pool.run", &[("worker", 1), ("index", 0)]);
+                e.parent = 2;
+                e
+            }),
+            ("leader".into(), ev(300, 150, 5, "ring.heal", &[("from_gen", 0), ("op_seq", 7), ("completed", 2)])),
+            ("leader".into(), {
+                let mut e = ev(440, 0, 6, "ring.resume", &[("op_seq", 7)]);
+                e.parent = 5;
+                e
+            }),
+        ];
+        let dump = TraceDump {
+            events: events.clone(),
+            dropped: 0,
+            crash: false,
+        };
+        let dir = tmpdir("parity");
+        let mut w = SegmentWriter::new(&dir, 2).unwrap();
+        w.append(&dump).unwrap();
+        w.finish().unwrap();
+        let single = std::env::temp_dir().join(format!(
+            "fiber_live_parity_single_{}.jsonl",
+            std::process::id()
+        ));
+        let single = single.to_str().unwrap().to_string();
+        crate::trace::export::write_jsonl(&single, &dump).unwrap();
+
+        let from_dir = read_trace(dir.to_str().unwrap()).unwrap();
+        let from_file = read_trace(&single).unwrap();
+        assert_eq!(from_dir.events, from_file.events);
+        assert_eq!(from_dir.dropped, from_file.dropped);
+        let rep_dir = check(&from_dir, "src");
+        let rep_file = check(&from_file, "src");
+        assert!(rep_dir.ok() && rep_file.ok(), "{}\n{}", rep_dir.render(), rep_file.render());
+        assert_eq!(rep_dir.warnings.len(), rep_file.warnings.len());
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_file(&single);
+    }
+
+    #[test]
+    fn health_flags_stragglers_against_rolling_p99() {
+        // Flagging emits a trace.straggler instant into the global journal
+        // when tracing is on — serialize with the other global-state tests.
+        let _g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        let mut h = Health::new(3);
+        let mut events: Vec<(String, TraceEvent)> = Vec::new();
+        // 30 well-behaved ~10ms runs build the baseline…
+        for i in 0..30u64 {
+            events.push((
+                format!("w{}", i % 3),
+                ev(i * 1_000_000, 10_000_000 + (i % 5) * 100_000, 100 + i, "pool.run", &[]),
+            ));
+        }
+        // …then one 60ms outlier (6× the baseline) on w2.
+        events.push(("w2".into(), ev(40_000_000, 60_000_000, 999, "pool.run", &[])));
+        h.observe(&events);
+        let snap = h.snapshot();
+        assert_eq!(snap.straggler_flags, 1, "exactly the outlier is flagged");
+        assert_eq!(snap.recent_stragglers.len(), 1);
+        let s = &snap.recent_stragglers[0];
+        assert_eq!(s.node, "w2");
+        assert_eq!(s.name, "pool.run");
+        assert!(s.dur_ns > 3 * s.p99_ns);
+        let w2 = snap.nodes.iter().find(|n| n.name == "w2").unwrap();
+        assert_eq!(w2.stragglers, 1);
+        let text = snap.render();
+        assert!(text.contains("STRAGGLER pool.run on w2"), "{text}");
+    }
+
+    #[test]
+    fn health_aggregates_all_layers_and_snapshot_roundtrips_wire() {
+        let mut h = Health::new(3);
+        h.observe(&[
+            ("leader".into(), ev(10, 100, 1, "pool.run", &[])),
+            ("leader".into(), ev(10, 0, 7, "pool.restart", &[])),
+            ("w1".into(), ev(20, 500, 2, "ring.allreduce", &[("gen", 2), ("elems", 64)])),
+            ("w1".into(), ev(25, 0, 3, "ring.chunk.send", &[("chunk", 3), ("step", 5)])),
+            ("w1".into(), ev(30, 200, 4, "ring.heal", &[("from_gen", 2)])),
+            ("w2".into(), ev(40, 0, 5, "store.hit", &[("obj", 9)])),
+            ("w2".into(), ev(41, 90, 6, "store.fetch", &[("obj", 8)])),
+            ("leader".into(), ev(50, 0, 8, "pop.score", &[("trial", 1), ("reward_milli", 812)])),
+            ("leader".into(), ev(51, 0, 9, "pop.score", &[("trial", 2), ("reward_milli", 790)])),
+            ("leader".into(), ev(52, 0, 10, "pop.score", &[("trial", 1), ("reward_milli", 700)])),
+        ]);
+        let snap = h.snapshot();
+        assert_eq!(snap.nodes.len(), 3);
+        assert_eq!(snap.pool_runs, 1);
+        assert_eq!(snap.ring_ops, 1);
+        assert_eq!(snap.ring_gen, 2);
+        assert_eq!(snap.ring_chunks, 1);
+        assert_eq!(snap.ring_last_chunk, 3);
+        assert_eq!(snap.ring_last_step, 5);
+        assert_eq!(snap.ring_heals, 1);
+        assert_eq!(snap.store_hits, 1);
+        assert_eq!(snap.store_fetches, 1);
+        assert_eq!(snap.pop_best, vec![(1, 812), (2, 790)], "best per trial, desc");
+        let bytes = wire::to_bytes(&snap);
+        let back: HealthSnapshot = wire::from_bytes(&bytes).unwrap();
+        assert_eq!(back.nodes, snap.nodes);
+        assert_eq!(back.pop_best, snap.pop_best);
+        assert_eq!(back.now_ns, snap.now_ns);
+        let text = back.render();
+        assert!(text.contains("POOL"), "{text}");
+        assert!(text.contains("RING"), "{text}");
+        assert!(text.contains("STORE"), "{text}");
+        assert!(text.contains("trial 1: 0.812"), "{text}");
+    }
+
+    #[test]
+    fn streamer_streams_journal_to_segments_and_serves_top() {
+        let journal = Journal::with_capacity(1 << 12);
+        journal.set_node_name("leader");
+        let dir = tmpdir("streamer");
+        let mut c = Collector::new();
+        c.add_local(journal.clone());
+        let mut cfg = StreamerConfig::to_dir(&dir);
+        cfg.interval = Duration::from_millis(10);
+        cfg.serve = Some("127.0.0.1:0".into());
+        let metrics_path = dir.join("metrics.prom");
+        cfg.metrics_file = Some(metrics_path.to_string_lossy().into_owned());
+        let s = Streamer::start(c, cfg).unwrap();
+        let addr = s._server.as_ref().unwrap().local_addr();
+        for i in 0..50u64 {
+            journal.record(ev(i * 1000, 100, i + 1, "pool.run", &[]));
+        }
+        std::thread::sleep(Duration::from_millis(60));
+        // Mid-run: segments exist on disk and the RPC serves a snapshot.
+        let live = fetch_snapshot(addr).unwrap();
+        assert!(live.pool_runs > 0, "telemetry visible while running");
+        journal.record(ev(100_000, 100, 777, "pool.run", &[]));
+        let snap = s.stop().unwrap();
+        assert_eq!(snap.pool_runs, 51, "final drain catches the tail");
+        let back = read_trace(dir.to_str().unwrap()).unwrap();
+        assert_eq!(back.events.len(), 51);
+        assert!(metrics_path.exists(), "prometheus snapshot refreshed");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn crash_dump_writes_marked_window_that_passes_check() {
+        let _g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        let dir = tmpdir("crash");
+        std::fs::create_dir_all(&dir).unwrap();
+        set_crash_dir(&dir);
+        crate::trace::set_flight_enabled(true);
+        let span_id;
+        {
+            let span = crate::trace::Span::begin_detached("pool.run", 0);
+            span_id = span.id();
+            // The "panicking" context: current span set via with_span.
+            crate::trace::with_span(span_id, || {
+                crate::trace::instant("test.live.mark", &[("v", 1)]);
+                let p = crash_dump_now("test fatal").expect("dump written");
+                assert!(p.exists());
+            });
+            drop(span);
+        }
+        crate::trace::set_flight_enabled(false);
+        let path = dir.join(format!("fiber-crash-{}.jsonl", std::process::id()));
+        let dump = read_trace(path.to_str().unwrap()).unwrap();
+        assert!(dump.crash, "crash marker in the footer");
+        assert!(dump.dropped >= 1, "crash windows are lossy by construction");
+        let crash_ev = dump
+            .events
+            .iter()
+            .find(|(_, e)| e.name == "trace.crash")
+            .expect("panicking span marked");
+        assert_eq!(crash_ev.1.parent, span_id, "crash instant names the open span");
+        let rep = check(&dump, "crash.jsonl");
+        assert!(rep.ok(), "{}", rep.render());
+        // set_crash_dir is global state: point it back at a harmless temp
+        // default for any later test in this process.
+        set_crash_dir(&std::env::temp_dir());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -29,6 +29,13 @@
 //!   Perfetto / `chrome://tracing`) and a replayable JSONL stream
 //!   (documented in `docs/trace_schema.md`) — the record side of the
 //!   ROADMAP's trace-driven cluster-simulation item.
+//! * **Live streaming & crash forensics.** Journals support cursor-based
+//!   incremental drains ([`Journal::drain_since`], at-least-once); the
+//!   [`live`] module streams those deltas to rotating on-disk JSONL
+//!   segments during the run, aggregates them into an online [`live::Health`]
+//!   model (behind `fiber-cli top`), and keeps a bounded [`FlightRecorder`]
+//!   ring whose last window is dumped to `fiber-crash-<pid>.jsonl` on
+//!   panic or fatal error.
 //! * **Audit, analytics, replay.** [`check`] is the causal invariant
 //!   engine behind `fiber-cli trace-check`; [`analyze`] extracts the
 //!   critical path, per-node busy/idle series and folded flamegraph
@@ -44,11 +51,12 @@ pub mod analyze;
 pub mod check;
 pub mod collect;
 pub mod export;
+pub mod live;
 pub mod replay;
 
 use std::cell::{Cell, RefCell};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
@@ -56,19 +64,68 @@ use once_cell::sync::Lazy;
 
 use crate::wire::{self, Decode, Encode};
 
-/// Master switch. Off by default; every instrumented site checks this with
-/// one relaxed atomic load before doing any other work.
-static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Journal bit of [`MODE`]: events go to the process-global [`Journal`]
+/// (what `--trace` and the live streamer drain).
+const MODE_JOURNAL: u8 = 1;
+/// Flight bit of [`MODE`]: events also land in the bounded in-memory
+/// [`FlightRecorder`] ring, dumped on panic/fatal error.
+const MODE_FLIGHT: u8 = 2;
 
-/// Is tracing globally enabled? This is the per-site fast-path check.
+/// Master switch, as a bitset so the journal pipeline and the flight
+/// recorder toggle independently. All bits off by default; every
+/// instrumented site checks this with one relaxed atomic load before
+/// doing any other work.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+/// Is any tracing sink enabled? This is the per-site fast-path check.
 #[inline(always)]
 pub fn enabled() -> bool {
-    ENABLED.load(Ordering::Relaxed)
+    MODE.load(Ordering::Relaxed) != 0
 }
 
-/// Turn tracing on or off process-wide.
+/// Turn journal tracing on or off process-wide (the `--trace` pipeline).
 pub fn set_enabled(on: bool) {
-    ENABLED.store(on, Ordering::Relaxed);
+    if on {
+        MODE.fetch_or(MODE_JOURNAL, Ordering::Relaxed);
+    } else {
+        MODE.fetch_and(!MODE_JOURNAL, Ordering::Relaxed);
+    }
+}
+
+/// Is the journal sink enabled (as opposed to flight-recorder-only)?
+pub fn journal_enabled() -> bool {
+    MODE.load(Ordering::Relaxed) & MODE_JOURNAL != 0
+}
+
+/// Turn the always-on crash flight recorder on or off. Independent of
+/// [`set_enabled`]: a run with no `--trace` can still keep the last few
+/// thousand events in memory for a crash dump.
+pub fn set_flight_enabled(on: bool) {
+    if on {
+        MODE.fetch_or(MODE_FLIGHT, Ordering::Relaxed);
+    } else {
+        MODE.fetch_and(!MODE_FLIGHT, Ordering::Relaxed);
+    }
+}
+
+/// Is the flight recorder capturing events?
+pub fn flight_enabled() -> bool {
+    MODE.load(Ordering::Relaxed) & MODE_FLIGHT != 0
+}
+
+/// Route one finished event to whichever sinks are enabled. Clones only
+/// when both sinks want it.
+fn record_event(ev: TraceEvent) {
+    let mode = MODE.load(Ordering::Relaxed);
+    match (mode & MODE_JOURNAL != 0, mode & MODE_FLIGHT != 0) {
+        (true, true) => {
+            flight().record(ev.clone());
+            global().record(ev);
+        }
+        (true, false) => global().record(ev),
+        (false, true) => flight().record(ev),
+        (false, false) => {}
+    }
 }
 
 /// Span-id allocator. Seeded with (the low 20 bits of) the OS pid in bits
@@ -96,7 +153,7 @@ thread_local! {
     static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
 }
 
-fn thread_tid() -> u32 {
+pub(crate) fn thread_tid() -> u32 {
     THREAD_TID.with(|t| {
         let mut id = t.get();
         if id == 0 {
@@ -203,6 +260,12 @@ impl Decode for TraceEvent {
 struct JournalInner {
     events: VecDeque<TraceEvent>,
     dropped: u64,
+    /// Sequence number of `events[0]`; buffered events are contiguous in
+    /// sequence, so `events[i]` has sequence `first_seq + i`.
+    first_seq: u64,
+    /// Sequence the *next* recorded event will get (== `first_seq +
+    /// events.len()`; dropped events consume no sequence number).
+    next_seq: u64,
 }
 
 /// A bounded per-node event buffer. Recording is one mutex push; when the
@@ -229,6 +292,8 @@ impl Journal {
             inner: Mutex::new(JournalInner {
                 events: VecDeque::new(),
                 dropped: 0,
+                first_seq: 0,
+                next_seq: 0,
             }),
         })
     }
@@ -254,6 +319,7 @@ impl Journal {
             inner.dropped += 1;
         } else {
             inner.events.push_back(ev);
+            inner.next_seq += 1;
         }
     }
 
@@ -275,8 +341,104 @@ impl Journal {
     /// journal keeps recording; drain is incremental by construction.
     pub fn drain(&self) -> (Vec<TraceEvent>, u64) {
         let mut inner = unpoison(self.inner.lock());
+        inner.first_seq = inner.next_seq;
         (inner.events.drain(..).collect(), inner.dropped)
     }
+
+    /// Cursor-based incremental drain with *at-least-once* delivery.
+    ///
+    /// `cursor` acknowledges everything the caller has durably consumed:
+    /// events with sequence `< cursor` are freed, then every still-buffered
+    /// event is **cloned** (not removed) and returned together with the
+    /// next cursor (pass it back on the next call) and the running dropped
+    /// count. Because events are only freed once a *later* call's cursor
+    /// acknowledges them, a lost reply (crashed collector, dropped RPC)
+    /// re-delivers the same window instead of losing it; the collector's
+    /// unchanged cursor also means it never double-processes. A cursor
+    /// older than `first_seq` (e.g. after a destructive [`Journal::drain`])
+    /// is clamped, never an error.
+    pub fn drain_since(&self, cursor: u64) -> (Vec<TraceEvent>, u64, u64) {
+        let mut inner = unpoison(self.inner.lock());
+        let first = inner.first_seq;
+        if cursor > first {
+            let ack = (cursor - first).min(inner.events.len() as u64);
+            inner.events.drain(..ack as usize);
+            inner.first_seq = first + ack;
+        }
+        let out: Vec<TraceEvent> = inner.events.iter().cloned().collect();
+        (out, inner.next_seq, inner.dropped)
+    }
+
+    /// Sequence number the next recorded event will receive (test and
+    /// diagnostics hook; the cursor returned by an up-to-date
+    /// [`Journal::drain_since`] equals this).
+    pub fn next_seq(&self) -> u64 {
+        unpoison(self.inner.lock()).next_seq
+    }
+}
+
+/// A fixed-size drop-*oldest* ring of the most recent events — the crash
+/// flight recorder. Unlike the [`Journal`] (which drops *new* events when
+/// full so the stream stays contiguous for the collector), the flight ring
+/// always holds the latest window: exactly what you want seconds before a
+/// panic. Dumped by [`live::crash_dump_now`] / the panic hook installed by
+/// [`live::install_crash_hook`].
+pub struct FlightRecorder {
+    cap: usize,
+    inner: Mutex<FlightInner>,
+}
+
+struct FlightInner {
+    events: VecDeque<TraceEvent>,
+    overwritten: u64,
+}
+
+impl FlightRecorder {
+    pub fn with_capacity(cap: usize) -> FlightRecorder {
+        FlightRecorder {
+            cap: cap.max(1),
+            inner: Mutex::new(FlightInner {
+                events: VecDeque::new(),
+                overwritten: 0,
+            }),
+        }
+    }
+
+    /// Append, evicting the oldest event when full.
+    pub fn record(&self, ev: TraceEvent) {
+        let mut inner = unpoison(self.inner.lock());
+        if inner.events.len() >= self.cap {
+            inner.events.pop_front();
+            inner.overwritten += 1;
+        }
+        inner.events.push_back(ev);
+    }
+
+    /// Non-destructive copy of the current window plus the count of events
+    /// that have already rolled off it.
+    pub fn snapshot(&self) -> (Vec<TraceEvent>, u64) {
+        let inner = unpoison(self.inner.lock());
+        (inner.events.iter().cloned().collect(), inner.overwritten)
+    }
+
+    pub fn len(&self) -> usize {
+        unpoison(self.inner.lock()).events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Default flight-recorder window: recent-history, not whole-run, sized.
+pub const FLIGHT_CAP: usize = 4096;
+
+static FLIGHT: Lazy<FlightRecorder> = Lazy::new(|| FlightRecorder::with_capacity(FLIGHT_CAP));
+
+/// The process-global flight recorder (shares the global journal's clock:
+/// flight events carry [`Journal::now_ns`] timestamps from [`global`]).
+pub fn flight() -> &'static FlightRecorder {
+    &FLIGHT
 }
 
 /// The process-global journal every instrumented site records into.
@@ -303,9 +465,8 @@ pub fn instant_under(name: &'static str, parent: u64, args: &[(&str, i64)]) {
     if !enabled() {
         return;
     }
-    let j = global();
-    j.record(TraceEvent {
-        ts_ns: j.now_ns(),
+    record_event(TraceEvent {
+        ts_ns: global().now_ns(),
         dur_ns: 0,
         span: fresh_span_id(),
         parent,
@@ -412,9 +573,8 @@ impl Drop for Span {
         if self.on_stack {
             stack_remove(self.id);
         }
-        let j = global();
-        let dur_ns = j.now_ns().saturating_sub(self.start_ns);
-        j.record(TraceEvent {
+        let dur_ns = global().now_ns().saturating_sub(self.start_ns);
+        record_event(TraceEvent {
             ts_ns: self.start_ns,
             dur_ns: dur_ns.max(1), // a span is never an instant
             span: self.id,
@@ -456,6 +616,100 @@ mod tests {
         assert_eq!(evs.len(), 2);
         assert_eq!(dropped, 3);
         assert!(j.is_empty());
+    }
+
+    fn ev(i: u64) -> TraceEvent {
+        TraceEvent {
+            ts_ns: i,
+            dur_ns: 0,
+            span: i + 1,
+            parent: 0,
+            tid: 1,
+            name: "x".into(),
+            args: vec![],
+        }
+    }
+
+    #[test]
+    fn drain_since_redelivers_until_acked() {
+        let j = Journal::with_capacity(16);
+        for i in 0..3 {
+            j.record(ev(i));
+        }
+        // First pull: everything, cursor advances to 3, nothing freed yet.
+        let (evs, cur, dropped) = j.drain_since(0);
+        assert_eq!(evs.len(), 3);
+        assert_eq!(cur, 3);
+        assert_eq!(dropped, 0);
+        assert_eq!(j.len(), 3, "at-least-once: events freed only on ack");
+        // A retry with the *old* cursor (lost reply) re-delivers the same
+        // window — no loss.
+        let (again, cur2, _) = j.drain_since(0);
+        assert_eq!(again.len(), 3);
+        assert_eq!(cur2, 3);
+        // Acking with the advanced cursor frees the prefix and returns
+        // only what arrived since.
+        j.record(ev(3));
+        let (fresh, cur3, _) = j.drain_since(cur);
+        assert_eq!(fresh.len(), 1);
+        assert_eq!(fresh[0].ts_ns, 3);
+        assert_eq!(cur3, 4);
+        assert_eq!(j.len(), 1);
+        // Empty steady state.
+        let (none, cur4, _) = j.drain_since(cur3);
+        assert!(none.is_empty());
+        assert_eq!(cur4, 4);
+        assert!(j.is_empty());
+    }
+
+    #[test]
+    fn drain_since_cursor_clamps_after_destructive_drain() {
+        let j = Journal::with_capacity(16);
+        for i in 0..4 {
+            j.record(ev(i));
+        }
+        let (_, cur, _) = j.drain_since(0);
+        assert_eq!(cur, 4);
+        j.drain(); // destructive full drain advances first_seq to next_seq
+        j.record(ev(4));
+        // Stale and future-less cursors both resolve to the live window.
+        let (evs, cur2, _) = j.drain_since(0);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(cur2, 5);
+        let (evs2, cur3, _) = j.drain_since(cur);
+        assert_eq!(evs2.len(), 1);
+        assert_eq!(cur3, 5);
+    }
+
+    #[test]
+    fn flight_ring_keeps_latest_window() {
+        let f = FlightRecorder::with_capacity(3);
+        for i in 0..7 {
+            f.record(ev(i));
+        }
+        let (evs, overwritten) = f.snapshot();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(overwritten, 4);
+        // Drop-oldest: the window is the *last* three events.
+        assert_eq!(evs.iter().map(|e| e.ts_ns).collect::<Vec<_>>(), vec![4, 5, 6]);
+        // Snapshot is non-destructive.
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn flight_mode_records_without_journal() {
+        let _g = TEST_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        set_enabled(false);
+        set_flight_enabled(true);
+        let journal_before = global().len();
+        let flight_before = flight().len();
+        {
+            let _s = Span::begin("test.trace.flightonly").arg("k", 1);
+            instant("test.trace.flightonly.i", &[]);
+        }
+        set_flight_enabled(false);
+        assert_eq!(global().len(), journal_before, "journal off: nothing lands there");
+        assert_eq!(flight().len(), flight_before + 2, "flight ring got span + instant");
     }
 
     #[test]

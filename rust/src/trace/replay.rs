@@ -284,7 +284,7 @@ pub fn replay(
     let outcome = driver.run()?;
     let mut events = outcome.events;
     events.sort_by_key(|(_, e)| e.ts_ns);
-    Ok((TraceDump { events, dropped: 0 }, outcome.stats))
+    Ok((TraceDump::new(events, 0), outcome.stats))
 }
 
 #[cfg(test)]
@@ -356,6 +356,7 @@ mod tests {
                 ("a".into(), mk(50, "ring.heal")),
             ],
             dropped: 0,
+            crash: false,
         };
         let c = Calibration::from_dump(&dump);
         assert_eq!(c.pool_run_ns, 20);

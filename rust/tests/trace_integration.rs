@@ -327,3 +327,130 @@ fn bundled_scenario_replays_and_audits_clean() {
     );
     let _ = std::fs::remove_file(&path);
 }
+
+/// The tentpole end to end on a real Pool run: a background [`Streamer`]
+/// incrementally drains the live journal into rotating on-disk segments
+/// *while the run executes*. Afterwards the segment directory must (a)
+/// read back through the ordinary `read_trace` path, (b) contain exactly
+/// the run's events — nothing duplicated or lost across rotation
+/// boundaries — with the causal links intact, (c) pass the full
+/// trace-check audit, and (d) drive the `top` health model offline.
+#[test]
+fn live_streamer_segments_pool_run_and_feeds_top() {
+    use fiber::trace::live::{health_from_dump, Streamer, StreamerConfig};
+
+    let _g = TRACE_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    register_task("tr.live_double", |x: i64| Ok::<i64, String>(x * 2));
+    let pool = Pool::new(2).unwrap();
+    trace::set_enabled(false);
+    drain_global();
+    trace::global().set_node_name("leader");
+    trace::set_enabled(true);
+
+    let dir = std::env::temp_dir().join(format!(
+        "fiber_live_integration_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut collector = Collector::new();
+    collector.add_global();
+    let mut cfg = StreamerConfig::to_dir(&dir);
+    cfg.interval = Duration::from_millis(5);
+    // Tiny segments force several rotations mid-run; a huge straggler
+    // multiplier keeps scheduler jitter on micro-tasks from injecting
+    // trace.straggler instants that would skew the exact counts below.
+    cfg.max_segment_events = 8;
+    cfg.straggler_k = u64::MAX / 2;
+    let streamer = Streamer::start(collector, cfg).unwrap();
+
+    let root = trace::Span::begin_detached("test.live.root", 0);
+    let root_id = root.id();
+    let out: Vec<i64> =
+        trace::with_span(root_id, || pool.map("tr.live_double", 0..16i64)).unwrap();
+    assert_eq!(out[11], 22);
+    drop(root);
+    // Let at least one cadence tick drain mid-run before stopping.
+    std::thread::sleep(Duration::from_millis(25));
+    trace::set_enabled(false);
+    let snap = streamer.stop().unwrap();
+
+    assert_eq!(snap.pool_runs, 16, "health model saw every worker run");
+
+    let dump = export::read_trace(dir.to_str().unwrap()).unwrap();
+    let segs = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter(|e| {
+            e.as_ref()
+                .unwrap()
+                .file_name()
+                .to_string_lossy()
+                .starts_with("segment-")
+        })
+        .count();
+    assert!(segs >= 3, "8-event segments must rotate during this run, got {segs}");
+
+    // Exactly once across rotation boundaries: the run's spans are all
+    // present, none twice (span ids are unique per span).
+    let runs = dump.named("pool.run");
+    assert_eq!(runs.len(), 16, "one pool.run per task, no loss, no duplication");
+    let dispatches = dump.named("pool.dispatch");
+    assert_eq!(dispatches.len(), 1);
+    assert_eq!(dispatches[0].parent, root_id);
+    for run in &runs {
+        assert_eq!(run.parent, dispatches[0].span, "links survive segmentation");
+    }
+    let mut spans: Vec<u64> = dump.events.iter().map(|(_, e)| e.span).collect();
+    spans.sort_unstable();
+    let n = spans.len();
+    spans.dedup();
+    assert_eq!(spans.len(), n, "no span id appears twice across segments");
+
+    let report = fiber::trace::check::check(&dump, "live-segments");
+    assert!(
+        report.ok(),
+        "segment directory must pass trace-check:\n{}",
+        report.render()
+    );
+
+    // Offline `top --input <segment dir>` over the same directory.
+    let health = health_from_dump(&dump, 3);
+    let offline = health.snapshot();
+    assert_eq!(offline.pool_runs, 16);
+    assert!(offline.nodes.iter().any(|nh| nh.name == "leader"));
+    assert!(offline.render().contains("POOL  runs 16"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The straggler acceptance path: replaying the bundled churn-storm
+/// scenario (which schedules a 4× straggle on rank 7) through the live
+/// health model must flag the straggling iteration against the rolling
+/// per-span-kind p99 baseline — the same math `fiber-cli top --input`
+/// runs on a replayed or recorded trace.
+#[test]
+fn replayed_storm_surfaces_stragglers_in_top_model() {
+    use fiber::trace::replay::{replay, Calibration, Scenario};
+
+    // Flagging emits trace.straggler instants into the process journal
+    // when tracing is enabled; serialize with the tracing tests.
+    let _g = TRACE_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let sc = Scenario::load("scenarios/churn_storm.json").unwrap();
+    let (dump, _) = replay(&sc, &Calibration::default()).unwrap();
+    let health = fiber::trace::live::health_from_dump(&dump, 3);
+    let snap = health.snapshot();
+    assert!(
+        snap.straggler_flags >= 1,
+        "the scheduled 4x straggle must trip the 3x-p99 threshold"
+    );
+    assert!(
+        snap.recent_stragglers.iter().any(|s| s.name == "pool.run"),
+        "the straggling span kind is the slowed iteration work"
+    );
+    for s in &snap.recent_stragglers {
+        assert!(s.dur_ns > 3 * s.p99_ns, "every flag beat the threshold");
+    }
+    let text = snap.render();
+    assert!(text.contains("STRAGGLER"), "{text}");
+    // The model also reconstructs cluster shape from the same stream.
+    assert!(snap.nodes.len() >= 1000, "per-node liveness covers the fleet");
+    assert!(snap.ring_ops > 0);
+}
