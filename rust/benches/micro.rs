@@ -172,6 +172,7 @@ fn main() {
                         span: 0,
                         fn_name: String::new(),
                         payload: vec![],
+                        operands: vec![],
                     },
                 );
             }

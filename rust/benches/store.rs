@@ -14,7 +14,11 @@
 //! path a rejoining ring member takes instead of a full re-stream. The
 //! cold-fetch series compares the serial per-chunk BLOB_META+BLOB_CHUNK
 //! ladder against the streaming BLOB_GET hot path (one request, all
-//! chunks pipelined on one connection).
+//! chunks pipelined on one connection). The locality series runs warm
+//! by-ref maps over per-worker store nodes and records the two-level
+//! scheduler's placement hit-rate plus worker-tier transfer count; the
+//! tiny-task series pushes no-op tasks through the batched submit +
+//! two-level dispatch path and reports tasks/minute.
 
 use std::time::Instant;
 
@@ -97,6 +101,75 @@ fn main() {
     }
     table.print();
 
+    // Locality: per-worker store nodes + directory-aware placement. The
+    // cold map faults the blob into the worker tier (placement misses —
+    // nothing held it yet); every warm map after that must place on a
+    // holding worker, so the hit-rate reads 1.0 and the transfer counter
+    // never moves again.
+    register_task("bench.loc_len", |r: ObjRef<Vec<u8>>| {
+        let v: Vec<u8> = r.get().map_err(|e| e.to_string())?;
+        Ok::<u64, String>(v.len() as u64)
+    });
+    let loc_mb = if quick { 1 } else { 8 };
+    let loc_tasks = 32usize;
+    let loc_leader = StoreNode::host(1 << 30);
+    let loc_pool = Pool::builder()
+        .processes(2)
+        .store(loc_leader.clone())
+        .worker_store_budget(256 << 20)
+        .build()
+        .expect("locality pool");
+    let loc_data = payload(loc_mb);
+    let loc_want = loc_data.len() as u64;
+    let loc_ref = loc_pool.put_ref(&loc_data).expect("put_ref");
+    let t = Instant::now();
+    let out: Vec<u64> = loc_pool
+        .map_chunked("bench.loc_len", (0..loc_tasks).map(|_| loc_ref), 1)
+        .expect("cold by-ref map");
+    let loc_cold_s = t.elapsed().as_secs_f64();
+    assert!(out.iter().all(|&l| l == loc_want));
+    let warm_base = loc_pool.sched_stats();
+    let loc_warm = measure(1, samples, || {
+        let out: Vec<u64> = loc_pool
+            .map_chunked("bench.loc_len", (0..loc_tasks).map(|_| loc_ref), 1)
+            .expect("warm by-ref map");
+        assert!(out.iter().all(|&l| l == loc_want));
+    });
+    let loc_stats = loc_pool.sched_stats();
+    let routed =
+        (loc_stats.local_hits + loc_stats.local_misses) - (warm_base.local_hits + warm_base.local_misses);
+    let hit_rate = (loc_stats.local_hits - warm_base.local_hits) as f64 / routed.max(1) as f64;
+    let loc_transfers: u64 = loc_pool
+        .worker_stores()
+        .iter()
+        .map(|(_, n)| n.transfers())
+        .sum();
+    println!(
+        "\nlocality, {loc_mb} MB blob × {loc_tasks} by-ref tasks on 2 worker stores: \
+         cold {:.2}ms, warm {:.2}ms, placement hit-rate {hit_rate:.2}, \
+         worker-tier transfers {loc_transfers}",
+        loc_cold_s * 1e3,
+        loc_warm.mean() * 1e3,
+    );
+
+    // Tiny-task throughput: no-op tasks through batched submit + the
+    // two-level dispatch plane (chunksize 1 — every item is a real task).
+    register_task("bench.tiny_inc", |x: u64| Ok::<u64, String>(x + 1));
+    let tiny_n: u64 = if quick { 20_000 } else { 100_000 };
+    let tiny = measure(1, if quick { 2 } else { 3 }, || {
+        let out: Vec<u64> = pool
+            .map_chunked("bench.tiny_inc", 0..tiny_n, 1)
+            .expect("tiny map");
+        assert_eq!(out.len(), tiny_n as usize);
+    });
+    let tiny_per_task_s = tiny.mean() / tiny_n as f64;
+    let tiny_m_per_min = 60.0 / tiny_per_task_s / 1e6;
+    println!(
+        "\ntiny tasks: {tiny_n} no-ops through the two-level scheduler: \
+         {:.1}µs/task — {tiny_m_per_min:.2} M tasks/min",
+        tiny_per_task_s * 1e6,
+    );
+
     // Broadcast cold vs warm over a real TCP hop: node A serves the blob,
     // node B fetches it chunk-by-chunk (cold), then re-reads it (warm).
     let bcast_mb = if quick { 4 } else { 16 };
@@ -157,6 +230,28 @@ fn main() {
         ("bench".into(), Json::str("store")),
         ("quick".into(), Json::Bool(quick)),
         ("pool".into(), Json::Arr(records)),
+        (
+            "locality".into(),
+            Json::Obj(vec![
+                ("payload_mb".into(), Json::num(loc_mb as f64)),
+                ("tasks".into(), Json::num(loc_tasks as f64)),
+                ("cold_s".into(), Json::num(loc_cold_s)),
+                ("warm_mean_s".into(), Json::num(loc_warm.mean())),
+                ("warm_std_s".into(), Json::num(loc_warm.std())),
+                ("warm_hit_rate".into(), Json::num(hit_rate)),
+                ("worker_transfers".into(), Json::num(loc_transfers as f64)),
+            ]),
+        ),
+        (
+            "tiny_tasks".into(),
+            Json::Obj(vec![
+                ("tasks".into(), Json::num(tiny_n as f64)),
+                ("mean_s".into(), Json::num(tiny.mean())),
+                ("std_s".into(), Json::num(tiny.std())),
+                ("us_per_task".into(), Json::num(tiny_per_task_s * 1e6)),
+                ("m_tasks_per_min".into(), Json::num(tiny_m_per_min)),
+            ]),
+        ),
         (
             "cold_fetch".into(),
             Json::Obj(vec![

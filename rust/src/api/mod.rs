@@ -24,9 +24,11 @@ pub mod pipe;
 pub mod pool;
 pub mod process;
 pub mod queue;
+pub mod sched;
 
 pub use manager::{Manager, ManagerClient, RemoteObj};
 pub use pipe::{Pipe, PipeEnd};
-pub use pool::{MapHandle, Pool, PoolBuilder};
+pub use pool::{MapHandle, MapSelect, Pool, PoolBuilder};
+pub use sched::{GlobalScheduler, NodeScheduler, SchedStats};
 pub use process::FiberProcess;
 pub use queue::{FiberQueue, QueueHub};

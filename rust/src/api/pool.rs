@@ -3,6 +3,12 @@
 //! `fiber.Pool` is the paper's workhorse: a list of job-backed worker
 //! processes fed from a shared task queue, with results collected through a
 //! result queue and failures healed through the pending table (Fig 2).
+//! Placement is two-level ([`crate::api::sched`]): submission ships one
+//! batch per node, each worker drains its own bounded run queue (stealing
+//! from the longest queue when idle), and tasks over [`ObjRef`] operands
+//! are routed to the node already holding the blob. Completion is
+//! event-driven: [`MapHandle::subscribe`] and [`MapSelect::wait_any`] wake
+//! from the collector's delivery itself — no polling cadence anywhere.
 //!
 //! ```
 //! use fiber::api::pool::Pool;
@@ -23,7 +29,7 @@ use std::time::Duration;
 use anyhow::{Context, Result};
 
 use crate::cluster::{ClusterBackend, JobHandle, JobSpec, JobStatus, LocalBackend};
-use crate::comms::chan::RecvError;
+use crate::comms::chan::{self, RecvError, Receiver, Sender};
 use crate::coordinator::batch::{make_chunks, register_chunk_runner, CHUNK_FN};
 use crate::coordinator::pool_server::{FetchReply, PoolServer, ResultMsg, WorkerId};
 use crate::coordinator::scaling::{Autoscaler, AutoscalePolicy};
@@ -73,6 +79,21 @@ fn task_runs_chunks(task: &Task) -> bool {
     false
 }
 
+/// Encode each item with the store's ref trap armed: returns the encoded
+/// payloads plus, per item, the [`ObjId`]s of every [`ObjRef`] the encode
+/// touched — the task's store operands, discovered with zero API impact
+/// on the item types (see [`crate::store::collect_refs`]).
+fn encode_items<I: Encode>(items: impl IntoIterator<Item = I>) -> (Vec<Vec<u8>>, Vec<Vec<ObjId>>) {
+    let mut enc = Vec::new();
+    let mut ops = Vec::new();
+    for i in items {
+        let (bytes, ids) = crate::store::collect_refs(|| wire::to_bytes(&i));
+        enc.push(bytes);
+        ops.push(ids);
+    }
+    (enc, ops)
+}
+
 /// How a finished map result is delivered.
 enum Sink {
     /// Collect into positional slots; `wait()` returns the ordered Vec.
@@ -91,6 +112,10 @@ struct MapState {
     /// Blobs auto-put for this map's oversized payloads; dereferenced
     /// (eviction-eligible again) when the map finishes.
     auto_refs: Vec<ObjId>,
+    /// Completion watchers ([`MapHandle::subscribe`]): on the done
+    /// transition each sender receives its key exactly once — the
+    /// event-driven completion plane [`MapSelect`] waits on.
+    watchers: Vec<(u64, Sender<u64>)>,
 }
 
 type SharedMap = Arc<(Mutex<MapState>, Condvar)>;
@@ -148,6 +173,129 @@ impl<O: Decode> MapHandle<O> {
             }
         }
         true
+    }
+
+    /// Register a completion watcher: when this map finishes (or already
+    /// has), `tx` receives `key` **exactly once**, sent by the collector
+    /// thread at the moment of delivery — no polling cadence between the
+    /// result arriving and the waiter waking. The primitive under
+    /// [`MapSelect`]; usable directly for custom completion planes.
+    pub fn subscribe(&self, key: u64, tx: Sender<u64>) {
+        let (lock, _cv) = &*self.shared;
+        let mut st = lock.lock().unwrap();
+        if st.done {
+            drop(st);
+            let _ = tx.send(key);
+        } else {
+            st.watchers.push((key, tx));
+        }
+    }
+}
+
+/// Select over many in-flight maps: an event-driven `wait_any`.
+///
+/// Each added handle subscribes its key to one shared completion channel;
+/// the collector's delivery of a map's final result sends that key, and
+/// [`MapSelect::wait_any`] returns the finished map's output — woken by
+/// the completion itself, not a poll loop. Clones share the same channel
+/// (it is MPMC), so N concurrent waiters split completions with **exactly
+/// one wakeup per finished map** — no lost and no duplicate wakeups.
+///
+/// ```
+/// use fiber::api::pool::{MapSelect, Pool};
+/// use fiber::coordinator::register_task;
+/// use std::time::Duration;
+///
+/// register_task("doc.sel", |x: i64| Ok::<i64, String>(x * 2));
+/// let pool = Pool::new(2).unwrap();
+/// let sel: MapSelect<i64> = MapSelect::new();
+/// for k in 0..3u64 {
+///     sel.add(k, pool.map_async("doc.sel", vec![k as i64]).unwrap());
+/// }
+/// let mut done = 0;
+/// while let Some((_k, out)) = sel.wait_any(Duration::from_secs(5)) {
+///     assert_eq!(out.unwrap().len(), 1);
+///     done += 1;
+/// }
+/// assert_eq!(done, 3);
+/// ```
+pub struct MapSelect<O> {
+    handles: Arc<Mutex<HashMap<u64, MapHandle<O>>>>,
+    tx: Sender<u64>,
+    rx: Receiver<u64>,
+}
+
+impl<O> Clone for MapSelect<O> {
+    fn clone(&self) -> Self {
+        MapSelect {
+            handles: self.handles.clone(),
+            tx: self.tx.clone(),
+            rx: self.rx.clone(),
+        }
+    }
+}
+
+impl<O> Default for MapSelect<O> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<O: Decode> MapSelect<O> {
+    pub fn new() -> MapSelect<O> {
+        let (tx, rx) = chan::unbounded();
+        MapSelect {
+            handles: Arc::new(Mutex::new(HashMap::new())),
+            tx,
+            rx,
+        }
+    }
+
+    /// Track `handle` under `key` (keys must be unique among in-flight
+    /// handles). A handle that already finished fires immediately.
+    pub fn add(&self, key: u64, handle: MapHandle<O>) {
+        handle.subscribe(key, self.tx.clone());
+        self.handles.lock().unwrap().insert(key, handle);
+    }
+
+    /// In-flight handles not yet claimed by a `wait_any`.
+    pub fn len(&self) -> usize {
+        self.handles.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Wait for **any** tracked map to finish: returns its key and output,
+    /// or `None` when the timeout elapses or nothing is tracked. Each
+    /// completion wakes exactly one waiter, exactly once.
+    pub fn wait_any(&self, timeout: Duration) -> Option<(u64, Result<Vec<O>>)> {
+        loop {
+            if self.handles.lock().unwrap().is_empty() {
+                return None;
+            }
+            let key = self.rx.recv_timeout(timeout).ok()?;
+            // A key without a handle means another clone removed it first
+            // (subscribe-after-done can double-fire only through explicit
+            // re-subscription, which `add` never does) — keep waiting.
+            if let Some(h) = self.handles.lock().unwrap().remove(&key) {
+                return Some((key, h.wait()));
+            }
+        }
+    }
+
+    /// Blocking [`MapSelect::wait_any`] (no timeout).
+    pub fn select(&self) -> Option<(u64, Result<Vec<O>>)> {
+        loop {
+            if self.handles.lock().unwrap().is_empty() {
+                return None;
+            }
+            let key = self.rx.recv().ok()?;
+            if let Some(h) = self.handles.lock().unwrap().remove(&key) {
+                return Some((key, h.wait()));
+            }
+        }
     }
 }
 
@@ -207,6 +355,14 @@ struct PoolShared {
     /// Auto-put threshold in bytes: task payloads above it are stored and
     /// passed by reference transparently (None = disabled).
     auto_put: Option<usize>,
+    /// When set, every **thread** worker gets its own [`StoreNode`] with
+    /// this byte budget, TCP-connected to the pool store's directory and
+    /// served — node-level locality (and the scheduler's placement query)
+    /// become real on the thread backend.
+    worker_store_budget: Option<usize>,
+    /// Per-worker store nodes (thread backend with
+    /// [`PoolBuilder::worker_store_budget`]); tests read their counters.
+    worker_stores: Mutex<Vec<(WorkerId, Arc<StoreNode>)>>,
 }
 
 /// Builder for [`Pool`].
@@ -220,6 +376,8 @@ pub struct PoolBuilder {
     fetch_timeout_ms: u64,
     store: Option<Arc<StoreNode>>,
     auto_put_threshold: Option<usize>,
+    worker_store_budget: Option<usize>,
+    node_queue_cap: Option<usize>,
 }
 
 impl Default for PoolBuilder {
@@ -234,6 +392,8 @@ impl Default for PoolBuilder {
             fetch_timeout_ms: 200,
             store: None,
             auto_put_threshold: None,
+            worker_store_budget: None,
+            node_queue_cap: None,
         }
     }
 }
@@ -297,6 +457,27 @@ impl PoolBuilder {
         self
     }
 
+    /// Give every **thread** worker its own served store node with `bytes`
+    /// of cache, joined to the pool store's directory over TCP — a genuine
+    /// multi-node store inside one process. With it, the scheduler's
+    /// locality query distinguishes workers: a task over an [`ObjRef`]
+    /// resident on worker 2's node routes to worker 2 (`sched.local_hit`),
+    /// and `ObjRef::get` inside that worker resolves through its own node.
+    /// Requires [`PoolBuilder::store`]. Proc workers already have
+    /// per-process nodes and ignore this.
+    pub fn worker_store_budget(mut self, bytes: usize) -> Self {
+        self.worker_store_budget = Some(bytes);
+        self
+    }
+
+    /// Bound on each worker node's local run queue (default
+    /// [`crate::api::sched::DEFAULT_QUEUE_CAP`]); submission beyond every
+    /// bound parks tasks in the global overflow queue.
+    pub fn node_queue_cap(mut self, cap: usize) -> Self {
+        self.node_queue_cap = Some(cap.max(1));
+        self
+    }
+
     pub fn build(self) -> Result<Pool> {
         Pool::from_builder(self)
     }
@@ -328,21 +509,38 @@ impl Pool {
             b.auto_put_threshold.is_none() || b.store.is_some(),
             "auto_put_threshold needs a store node (PoolBuilder::store)"
         );
+        anyhow::ensure!(
+            b.worker_store_budget.is_none() || b.store.is_some(),
+            "worker_store_budget needs a store node (PoolBuilder::store)"
+        );
         let backend: Arc<dyn ClusterBackend> = match (&b.backend, b.proc_workers) {
             (Some(be), _) => be.clone(),
             (None, false) => Arc::new(LocalBackend::new()),
             (None, true) => Arc::new(crate::cluster::ProcBackend::new()?),
         };
-        let server = Arc::new(PoolServer::new());
+        let server = Arc::new(PoolServer::with_queue_cap(
+            b.node_queue_cap
+                .unwrap_or(crate::api::sched::DEFAULT_QUEUE_CAP),
+        ));
         let rpc = if b.proc_workers {
             Some(server.serve_rpc("127.0.0.1:0")?)
         } else {
             None
         };
-        let store_addr = match (&b.store, b.proc_workers) {
+        // Per-worker stores also need the pool store served: they join its
+        // directory (and fetch its blobs) over TCP.
+        let store_addr = match (&b.store, b.proc_workers || b.worker_store_budget.is_some()) {
             (Some(node), true) => Some(node.serve("127.0.0.1:0")?),
             _ => None,
         };
+        if let Some(node) = &b.store {
+            // The scheduler's locality query: blob id -> current holders,
+            // answered by the store directory at placement time.
+            let dir_node = node.clone();
+            server.set_lookup(Arc::new(move |id| {
+                dir_node.directory().lookup(id).ok().map(|e| e.locations)
+            }));
+        }
         if let Some(node) = &b.store {
             if !crate::store::install_node_default(node) {
                 log::warn!(
@@ -367,6 +565,8 @@ impl Pool {
             store: b.store.clone(),
             store_addr,
             auto_put: b.auto_put_threshold,
+            worker_store_budget: b.worker_store_budget,
+            worker_stores: Mutex::new(Vec::new()),
         });
         for _ in 0..b.processes {
             spawn_worker(&shared)?;
@@ -455,7 +655,7 @@ impl Pool {
         I: Encode,
         O: Decode,
     {
-        let enc: Vec<Vec<u8>> = items.into_iter().map(|i| wire::to_bytes(&i)).collect();
+        let (enc, ops) = encode_items(items);
         let n = enc.len();
         let shared_map: SharedMap = Arc::new((
             Mutex::new(MapState {
@@ -466,10 +666,11 @@ impl Pool {
                 error: None,
                 done: n == 0,
                 auto_refs: Vec::new(),
+                watchers: Vec::new(),
             }),
             Condvar::new(),
         ));
-        let map_id = self.submit_map(fn_name, enc, chunksize, shared_map.clone())?;
+        let map_id = self.submit_map(fn_name, enc, ops, chunksize, shared_map.clone())?;
         let _ = map_id;
         Ok(MapHandle {
             shared: shared_map,
@@ -488,7 +689,7 @@ impl Pool {
         I: Encode,
         O: Decode,
     {
-        let enc: Vec<Vec<u8>> = items.into_iter().map(|i| wire::to_bytes(&i)).collect();
+        let (enc, ops) = encode_items(items);
         let n = enc.len();
         let (tx, rx) = crate::comms::chan::unbounded();
         if n == 0 {
@@ -500,10 +701,11 @@ impl Pool {
                 error: None,
                 done: n == 0,
                 auto_refs: Vec::new(),
+                watchers: Vec::new(),
             }),
             Condvar::new(),
         ));
-        self.submit_map(fn_name, enc, 1, shared_map)?;
+        self.submit_map(fn_name, enc, ops, 1, shared_map)?;
         Ok(ImapIter {
             rx,
             remaining: n,
@@ -530,10 +732,13 @@ impl Pool {
                 error: None,
                 done: n == 0,
                 auto_refs: Vec::new(),
+                watchers: Vec::new(),
             }),
             Condvar::new(),
         ));
-        self.submit_map(fn_name, payloads, chunksize, shared_map.clone())?;
+        // Pre-encoded payloads carry no operand info (the encode happened
+        // outside the ref trap): they place by load alone.
+        self.submit_map(fn_name, payloads, vec![Vec::new(); n], chunksize, shared_map.clone())?;
         RawMapHandle { shared: shared_map }.wait()
     }
 
@@ -572,6 +777,7 @@ impl Pool {
         &self,
         fn_name: &str,
         enc: Vec<Vec<u8>>,
+        ops: Vec<Vec<ObjId>>,
         chunksize: usize,
         shared_map: SharedMap,
     ) -> Result<u64> {
@@ -597,21 +803,32 @@ impl Pool {
         };
         let mut tasks: Vec<Task> = Vec::new();
         if chunksize > 1 {
-            let mut start = 0u64;
+            let mut start = 0usize;
             for chunk in make_chunks(fn_name, enc, chunksize) {
-                let k = chunk.items.len() as u64;
+                let k = chunk.items.len();
+                // A chunk's operands are the union over its items: the
+                // scheduler routes the whole chunk to a node holding them.
+                let mut operands: Vec<ObjId> = Vec::new();
+                for item_ops in ops.iter().skip(start).take(k) {
+                    for id in item_ops {
+                        if !operands.contains(id) {
+                            operands.push(*id);
+                        }
+                    }
+                }
                 tasks.push(Task {
                     id: TaskId::fresh(),
                     map_id,
-                    index: start,
+                    index: start as u64,
                     span: task_span,
                     fn_name: CHUNK_FN.to_string(),
                     payload: wire::to_bytes(&chunk),
+                    operands,
                 });
                 start += k;
             }
         } else {
-            for (i, payload) in enc.into_iter().enumerate() {
+            for (i, (payload, operands)) in enc.into_iter().zip(ops).enumerate() {
                 tasks.push(Task {
                     id: TaskId::fresh(),
                     map_id,
@@ -619,6 +836,7 @@ impl Pool {
                     span: task_span,
                     fn_name: fn_name.to_string(),
                     payload,
+                    operands,
                 });
             }
         }
@@ -634,9 +852,10 @@ impl Pool {
             }
         }
         self.shared.maps.lock().unwrap().insert(map_id, shared_map);
-        for t in tasks {
-            self.shared.server.submit(t);
-        }
+        // One placement pass for the whole map: the scheduler groups the
+        // tasks into per-node batches (one `sched.assign` envelope per
+        // node), instead of a lock round-trip per task.
+        self.shared.server.submit_batch(tasks);
         Ok(map_id)
     }
 
@@ -676,6 +895,12 @@ impl Pool {
             refs.push(id);
             let inner = std::mem::replace(&mut t.fn_name, AUTOREF_FN.to_string());
             t.payload = wire::to_bytes(&(inner, id, len));
+            // The payload blob is now a store operand like any ObjRef
+            // argument: placement can route the task to a node that
+            // already faulted it in.
+            if !t.operands.contains(&id) {
+                t.operands.push(id);
+            }
         }
         Ok(refs)
     }
@@ -704,6 +929,24 @@ impl Pool {
     /// Pending-table counters `(inserted, completed, requeued)`.
     pub fn counters(&self) -> (u64, u64, u64) {
         self.shared.server.counters()
+    }
+
+    /// Scheduler counters: placement batches, locality hits/misses,
+    /// spills, steals and re-assignments ([`crate::api::sched::SchedStats`]).
+    pub fn sched_stats(&self) -> crate::api::sched::SchedStats {
+        self.shared.server.sched_stats()
+    }
+
+    /// `(worker, queue length)` snapshot of every node's run queue.
+    pub fn queue_lens(&self) -> Vec<(WorkerId, usize)> {
+        self.shared.server.queue_lens()
+    }
+
+    /// Per-worker store nodes (thread backend with
+    /// [`PoolBuilder::worker_store_budget`]) — tests and dashboards read
+    /// their transfer/hit counters.
+    pub fn worker_stores(&self) -> Vec<(WorkerId, Arc<StoreNode>)> {
+        self.shared.worker_stores.lock().unwrap().clone()
     }
 
     /// Number of worker replacements performed after failures.
@@ -776,12 +1019,36 @@ fn spawn_worker(shared: &Arc<PoolShared>) -> Result<WorkerId> {
             args.push("--store".into());
             args.push(store.clone());
         }
+        // Known to the scheduler immediately (tasks can queue against it);
+        // its store endpoint arrives over the HELLO rpc once it serves.
+        shared.server.register_node(wid, None);
         JobSpec::command(format!("fiber-worker-{}", wid.0), args)
     } else {
+        // Thread worker. With a worker-store budget, build its own store
+        // node first: joined to the pool store's directory over TCP and
+        // served, so the directory can name this worker as a blob holder
+        // and the scheduler can route operand tasks to it.
+        let worker_node = match (shared.worker_store_budget, &shared.store_addr) {
+            (Some(budget), Some(dir)) => {
+                let node = StoreNode::connect(dir, budget)?;
+                let ep = node.serve("127.0.0.1:0")?;
+                shared.server.register_node(wid, Some(ep));
+                shared
+                    .worker_stores
+                    .lock()
+                    .unwrap()
+                    .push((wid, node.clone()));
+                Some(node)
+            }
+            _ => {
+                shared.server.register_node(wid, None);
+                None
+            }
+        };
         let server = shared.server.clone();
         let timeout = Duration::from_millis(shared.fetch_timeout_ms);
         JobSpec::thread(format!("fiber-worker-{}", wid.0), move |token| {
-            worker_loop_inproc(&server, wid, timeout, &token)
+            worker_loop_inproc(&server, wid, timeout, worker_node.clone(), &token)
         })
     };
     let handle = shared.backend.submit(spec)?;
@@ -800,9 +1067,17 @@ fn worker_loop_inproc(
     server: &PoolServer,
     wid: WorkerId,
     timeout: Duration,
+    store: Option<Arc<StoreNode>>,
     token: &crate::cluster::CancelToken,
 ) {
     crate::coordinator::task::set_current_worker(wid.0);
+    // With a per-worker store, ObjRef::get on this thread resolves through
+    // this worker's own node — cache hits and transfers are attributed to
+    // the worker that ran the task, which is what makes the locality
+    // counters (and the `transfers == 1` guarantee) observable per node.
+    if let Some(node) = store {
+        crate::store::install_thread_node(Some(node));
+    }
     loop {
         if token.is_cancelled() {
             return;
@@ -911,11 +1186,19 @@ fn deliver(shared: &Arc<PoolShared>, msg: ResultMsg) {
     if finished {
         st.done = true;
         let auto_refs = std::mem::take(&mut st.auto_refs);
+        let watchers = std::mem::take(&mut st.watchers);
         if let Sink::Stream(tx) = &st.sink {
             tx.close();
         }
         cv.notify_all();
         drop(st);
+        // The event-driven completion plane: each subscribed watcher gets
+        // its key exactly once, here, from the delivery that finished the
+        // map — the `done` guard above makes a second transition (and thus
+        // a duplicate wakeup) impossible.
+        for (key, tx) in watchers {
+            let _ = tx.send(key);
+        }
         // Auto-put payload blobs are done travelling: release them so the
         // LRU may reclaim the bytes.
         if let Some(node) = &shared.store {
@@ -977,12 +1260,23 @@ fn heal(shared: &Arc<PoolShared>) {
             retiring.remove(id);
         }
     }
+    if !cleaned.is_empty() || !failed.is_empty() {
+        let mut stores = shared.worker_stores.lock().unwrap();
+        stores.retain(|(id, _)| !cleaned.contains(id) && !failed.contains(id));
+    }
     for wid in failed {
-        let requeued = shared.server.fail_worker(wid);
-        log::warn!("worker {wid:?} failed; resubmitted {requeued} task(s)");
+        let (reruns, reassigned) = shared.server.fail_worker(wid);
+        log::warn!(
+            "worker {wid:?} failed; re-running {reruns} started task(s), \
+             re-assigning {reassigned} queued task(s)"
+        );
         crate::trace::instant(
             "pool.restart",
-            &[("worker", wid.0 as i64), ("requeued", requeued as i64)],
+            &[
+                ("worker", wid.0 as i64),
+                ("requeued", reruns as i64),
+                ("reassigned", reassigned as i64),
+            ],
         );
         if shared.stop.load(Ordering::SeqCst) || shared.server.is_closed() {
             continue;
@@ -1333,6 +1627,94 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("store"), "{err}");
+    }
+
+    #[test]
+    fn map_select_wait_any_is_event_driven() {
+        setup();
+        let pool = Pool::new(4).unwrap();
+        let sel: MapSelect<u64> = MapSelect::new();
+        // Key 1 is slow, key 2 is fast: wait_any must yield 2 first.
+        sel.add(1, pool.map_async("pool.slow", vec![200u64; 2]).unwrap());
+        sel.add(2, pool.map_async("pool.slow", vec![1u64]).unwrap());
+        assert_eq!(sel.len(), 2);
+        let (k, out) = sel.wait_any(Duration::from_secs(5)).unwrap();
+        assert_eq!(k, 2, "the fast map completes first");
+        assert_eq!(out.unwrap(), vec![1]);
+        let (k, out) = sel.wait_any(Duration::from_secs(5)).unwrap();
+        assert_eq!(k, 1);
+        assert_eq!(out.unwrap(), vec![200, 200]);
+        assert!(sel.wait_any(Duration::from_millis(10)).is_none());
+        assert!(sel.is_empty());
+    }
+
+    #[test]
+    fn subscribe_after_done_fires_immediately() {
+        setup();
+        let pool = Pool::new(2).unwrap();
+        let h = pool.map_async::<i64, i64>("pool.add1", 0..3i64).unwrap();
+        assert!(h.ready_timeout(Duration::from_secs(5)));
+        let sel: MapSelect<i64> = MapSelect::new();
+        sel.add(7, h);
+        let (k, out) = sel.wait_any(Duration::from_secs(1)).unwrap();
+        assert_eq!(k, 7);
+        assert_eq!(out.unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn worker_store_budget_builds_locality_nodes() {
+        setup();
+        register_task("pool.wsb_sum", |(r, bias): (ObjRef<Vec<f32>>, f32)| {
+            let v: Vec<f32> = r.get().map_err(|e| e.to_string())?;
+            Ok::<f32, String>(v.iter().sum::<f32>() + bias)
+        });
+        let leader = StoreNode::host(64 << 20);
+        let pool = Pool::builder()
+            .processes(2)
+            .store(leader.clone())
+            .worker_store_budget(16 << 20)
+            .build()
+            .unwrap();
+        let stores = pool.worker_stores();
+        assert_eq!(stores.len(), 2, "one store node per thread worker");
+        for (_, node) in &stores {
+            assert!(node.endpoint().is_some(), "worker nodes serve over TCP");
+        }
+        let payload: Vec<f32> = (0..20_000).map(|i| (i % 5) as f32).collect();
+        let want: f32 = payload.iter().sum();
+        let r = pool.put_ref(&payload).unwrap();
+        // Cold map: no worker holds the blob yet, so placements miss and
+        // each participating worker faults the blob in exactly once.
+        let out: Vec<f32> = pool
+            .map("pool.wsb_sum", (0..8).map(|i| (r, i as f32)))
+            .unwrap();
+        for (i, v) in out.iter().enumerate() {
+            assert!((v - (want + i as f32)).abs() < 1e-1, "task {i}: {v}");
+        }
+        let s = pool.sched_stats();
+        assert!(s.local_misses >= 1, "cold placements miss: {s:?}");
+        let transfers: u64 = stores.iter().map(|(_, n)| n.transfers()).sum();
+        assert!(
+            (1..=2).contains(&transfers),
+            "at most one transfer per worker node, got {transfers}"
+        );
+        // Warm map: the fetching workers republished the blob, so the
+        // scheduler now routes to a holder.
+        let out: Vec<f32> = pool
+            .map("pool.wsb_sum", (0..8).map(|i| (r, i as f32)))
+            .unwrap();
+        assert_eq!(out.len(), 8);
+        let s = pool.sched_stats();
+        assert!(s.local_hits >= 1, "warm placements hit: {s:?}");
+        let transfers_after: u64 = pool
+            .worker_stores()
+            .iter()
+            .map(|(_, n)| n.transfers())
+            .sum();
+        assert_eq!(
+            transfers_after, transfers,
+            "warm tasks are cache hits, not new transfers"
+        );
     }
 
     #[test]

@@ -1,0 +1,532 @@
+//! `api::sched` — the two-level, locality-aware task scheduler.
+//!
+//! The Pool used to dispatch every task from one leader queue; this module
+//! splits that into the two levels Ray-style scheduling uses to reach
+//! serving scale. A leader-side [`GlobalScheduler`] *places* each submitted
+//! batch: per worker node there is a [`NodeScheduler`] with a **bounded
+//! local run queue**, and placement consults the store directory (through
+//! a [`LookupFn`]) so a task whose [`ObjRef`](crate::store::ObjRef)
+//! operands are resident on a node is routed there — a *locality hit* —
+//! with spillover to the least-loaded node when the preferred one is
+//! saturated. Idle nodes **steal** from the longest queue, but only tasks
+//! whose operands they also hold (or tasks with no operands at all), so
+//! stealing never un-does a locality placement by moving a task away from
+//! its data.
+//!
+//! The scheduler is a plain (externally locked) structure: the
+//! [`PoolServer`](crate::coordinator::pool_server::PoolServer) drives it
+//! under the same mutex that guards the pending table, keeping "a task is
+//! in exactly one of {some queue, pending}" a single-lock invariant — and
+//! the property tests drive it directly, single-threaded.
+//!
+//! Trace events: `sched.assign` (one per node batch, not per task),
+//! `sched.local_hit` (a placement landed on an operand-holding node) and
+//! `sched.steal` (thief, victim) — see `docs/trace_schema.md`.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use crate::coordinator::pool_server::WorkerId;
+use crate::coordinator::task::Task;
+use crate::store::ObjId;
+
+/// Resolves a blob id to the location strings currently holding it
+/// (`None` = unknown blob). The pool installs a closure over its store
+/// node's directory client; tests install a table.
+pub type LookupFn = Arc<dyn Fn(ObjId) -> Option<Vec<String>> + Send + Sync>;
+
+/// Default bound on each node's local run queue.
+pub const DEFAULT_QUEUE_CAP: usize = 1024;
+
+/// Scheduler counters. `local_hits`/`local_misses` only count tasks that
+/// carry operands — tasks without store arguments have no locality to hit.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SchedStats {
+    /// Node-batch envelopes shipped by `submit_batch` (≤ one per node per
+    /// call — the "one envelope per node batch, not per task" guarantee).
+    pub assigned_batches: u64,
+    /// Tasks placed onto node queues.
+    pub assigned_tasks: u64,
+    /// Operand-carrying tasks placed on a node holding their operands.
+    pub local_hits: u64,
+    /// Operand-carrying tasks placed elsewhere (no holder registered, or
+    /// every holder saturated).
+    pub local_misses: u64,
+    /// Tasks a preferred-but-saturated placement spilled to the
+    /// least-loaded node (subset of `local_misses`) or to overflow.
+    pub spills: u64,
+    /// Tasks moved between node queues by work stealing.
+    pub steals: u64,
+    /// Queued-but-unstarted tasks re-placed after their node was removed
+    /// (failure or retirement) — distinct from pending-table reruns.
+    pub reassigned: u64,
+}
+
+/// One worker node's slice of the scheduler: its bounded run queue and the
+/// store endpoint its resident blobs are published under.
+pub struct NodeScheduler {
+    id: WorkerId,
+    /// The node's store location string ([`crate::store::StoreNode::publish_endpoint`];
+    /// `None` until known — proc workers report theirs over the HELLO rpc).
+    endpoint: Option<String>,
+    queue: VecDeque<Task>,
+}
+
+impl NodeScheduler {
+    pub fn id(&self) -> WorkerId {
+        self.id
+    }
+
+    pub fn endpoint(&self) -> Option<&str> {
+        self.endpoint.as_deref()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+/// Where a popped task came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Origin {
+    /// The node's own run queue.
+    Local,
+    /// The global overflow queue (every node was saturated at placement,
+    /// or no node was registered yet).
+    Overflow,
+    /// Stolen from `victim`'s queue.
+    Stolen { victim: WorkerId },
+}
+
+fn push(q: &mut VecDeque<Task>, task: Task, front: bool) {
+    if front {
+        q.push_front(task);
+    } else {
+        q.push_back(task);
+    }
+}
+
+/// The leader-side placement level.
+pub struct GlobalScheduler {
+    nodes: Vec<NodeScheduler>,
+    /// Unplaced tasks: submitted while no node was registered, or while
+    /// every node queue was at capacity. Drained by any fetching node.
+    overflow: VecDeque<Task>,
+    queue_cap: usize,
+    steal: bool,
+    lookup: Option<LookupFn>,
+    stats: SchedStats,
+}
+
+impl GlobalScheduler {
+    pub fn new(queue_cap: usize, steal: bool) -> GlobalScheduler {
+        GlobalScheduler {
+            nodes: Vec::new(),
+            overflow: VecDeque::new(),
+            queue_cap: queue_cap.max(1),
+            steal,
+            lookup: None,
+            stats: SchedStats::default(),
+        }
+    }
+
+    /// Install the directory query placement consults. Without one, every
+    /// operand-carrying task counts as a locality miss.
+    pub fn set_lookup(&mut self, lookup: LookupFn) {
+        self.lookup = Some(lookup);
+    }
+
+    /// Register a worker node (idempotent; a later call may supply the
+    /// endpoint a proc worker reported after spawning).
+    pub fn register_node(&mut self, id: WorkerId, endpoint: Option<String>) {
+        if let Some(n) = self.nodes.iter_mut().find(|n| n.id == id) {
+            if endpoint.is_some() {
+                n.endpoint = endpoint;
+            }
+            return;
+        }
+        self.nodes.push(NodeScheduler {
+            id,
+            endpoint,
+            queue: VecDeque::new(),
+        });
+    }
+
+    pub fn contains_node(&self, id: WorkerId) -> bool {
+        self.nodes.iter().any(|n| n.id == id)
+    }
+
+    /// Drop a node (failed or retired), returning its queued-but-unstarted
+    /// tasks. The caller re-places them with [`GlobalScheduler::reassign_batch`].
+    pub fn remove_node(&mut self, id: WorkerId) -> Vec<Task> {
+        match self.nodes.iter().position(|n| n.id == id) {
+            Some(i) => self.nodes.remove(i).queue.into(),
+            None => Vec::new(),
+        }
+    }
+
+    /// `(node id, queue length)` per registered node.
+    pub fn queue_lens(&self) -> Vec<(WorkerId, usize)> {
+        self.nodes.iter().map(|n| (n.id, n.queue.len())).collect()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Tasks queued anywhere (node queues + overflow).
+    pub fn queue_len(&self) -> usize {
+        self.overflow.len() + self.nodes.iter().map(|n| n.queue.len()).sum::<usize>()
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.stats
+    }
+
+    fn holders(&self, task: &Task) -> Option<Vec<String>> {
+        if task.operands.is_empty() {
+            return None;
+        }
+        let lookup = self.lookup.as_ref()?;
+        let mut eps: Vec<String> = Vec::new();
+        for id in &task.operands {
+            if let Some(locs) = lookup(*id) {
+                for l in locs {
+                    if !eps.contains(&l) {
+                        eps.push(l);
+                    }
+                }
+            }
+        }
+        (!eps.is_empty()).then_some(eps)
+    }
+
+    /// Place one task; returns the chosen node's index (None = overflow)
+    /// and whether the placement was a locality hit. `front` queues the
+    /// task ahead of already-placed work (failure resubmission retries
+    /// sooner — the pending table's old front-requeue contract).
+    fn place(&mut self, task: Task, front: bool) -> (Option<usize>, bool) {
+        let holders = self.holders(&task);
+        let with_operands = !task.operands.is_empty();
+        // Preferred: the least-loaded node (with queue space) already
+        // holding the task's operands.
+        let preferred = holders.as_ref().and_then(|eps| {
+            self.nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| n.queue.len() < self.queue_cap)
+                .filter(|(_, n)| n.endpoint.as_ref().is_some_and(|e| eps.contains(e)))
+                .min_by_key(|(_, n)| n.queue.len())
+                .map(|(i, _)| i)
+        });
+        if let Some(i) = preferred {
+            self.stats.local_hits += 1;
+            push(&mut self.nodes[i].queue, task, front);
+            return (Some(i), true);
+        }
+        if with_operands {
+            self.stats.local_misses += 1;
+            if holders.is_some() {
+                // A holder exists but can't take the task (saturated, or
+                // not a registered node): spill to least-loaded.
+                self.stats.spills += 1;
+            }
+        }
+        let fallback = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.queue.len() < self.queue_cap)
+            .min_by_key(|(_, n)| n.queue.len())
+            .map(|(i, _)| i);
+        match fallback {
+            Some(i) => {
+                push(&mut self.nodes[i].queue, task, front);
+                (Some(i), false)
+            }
+            None => {
+                // Every node saturated (or none registered): overflow.
+                self.stats.spills += 1;
+                push(&mut self.overflow, task, front);
+                (None, false)
+            }
+        }
+    }
+
+    fn assign(&mut self, tasks: Vec<Task>, front: bool) {
+        // (assigned, hits) per node index.
+        let mut batches: HashMap<usize, (u64, u64)> = HashMap::new();
+        // Front placement iterates in reverse so push_front preserves the
+        // batch's relative order at the head of each queue.
+        let ordered: Vec<Task> = if front {
+            tasks.into_iter().rev().collect()
+        } else {
+            tasks
+        };
+        for task in ordered {
+            let map_id = task.map_id;
+            let (slot, hit) = self.place(task, front);
+            if let Some(i) = slot {
+                self.stats.assigned_tasks += 1;
+                let e = batches.entry(i).or_insert((0, 0));
+                e.0 += 1;
+                if hit {
+                    e.1 += 1;
+                    crate::trace::instant(
+                        "sched.local_hit",
+                        &[("node", self.nodes[i].id.0 as i64), ("map", map_id as i64)],
+                    );
+                }
+            }
+        }
+        for (i, (n, hits)) in batches {
+            self.stats.assigned_batches += 1;
+            crate::trace::instant(
+                "sched.assign",
+                &[
+                    ("node", self.nodes[i].id.0 as i64),
+                    ("tasks", n as i64),
+                    ("hits", hits as i64),
+                ],
+            );
+        }
+    }
+
+    /// Place a batch: one grouped assignment per node (the per-node-batch
+    /// envelope), emitting `sched.assign` per node and `sched.local_hit`
+    /// per operand-holding placement.
+    pub fn submit_batch(&mut self, tasks: Vec<Task>) {
+        self.assign(tasks, false);
+    }
+
+    /// Re-place tasks at the *front* of their queues (failure resubmission
+    /// retries sooner).
+    pub fn resubmit_front(&mut self, tasks: Vec<Task>) {
+        self.assign(tasks, true);
+    }
+
+    /// Re-place tasks drained from a removed node, at the front (counted
+    /// separately so chaos tests can tell re-assignment of queued-but-
+    /// unstarted work from pending-table reruns).
+    pub fn reassign_batch(&mut self, tasks: Vec<Task>) {
+        self.stats.reassigned += tasks.len() as u64;
+        self.assign(tasks, true);
+    }
+
+    /// May `thief` run a queued task without moving data? Yes when the
+    /// task has no store operands, or when the thief's node currently
+    /// holds one of them (directory re-checked at steal time — a node that
+    /// cached the blob since placement becomes a legal thief).
+    fn stealable(&self, thief_ep: Option<&String>, task: &Task) -> bool {
+        if task.operands.is_empty() {
+            return true;
+        }
+        let (Some(ep), Some(eps)) = (thief_ep, self.holders(task)) else {
+            // Unresolvable operands pin the task to its placed node.
+            return false;
+        };
+        eps.contains(ep)
+    }
+
+    /// Pop work for node `id`: its own queue first, then the overflow
+    /// queue, then — when stealing is on — the newest stealable task from
+    /// the **longest** other queue.
+    pub fn pop_local(&mut self, id: WorkerId) -> Option<(Task, Origin)> {
+        if let Some(n) = self.nodes.iter_mut().find(|n| n.id == id) {
+            if let Some(t) = n.queue.pop_front() {
+                return Some((t, Origin::Local));
+            }
+        }
+        if let Some(t) = self.overflow.pop_front() {
+            return Some((t, Origin::Overflow));
+        }
+        if !self.steal {
+            return None;
+        }
+        let thief_ep = self
+            .nodes
+            .iter()
+            .find(|n| n.id == id)
+            .and_then(|n| n.endpoint.clone());
+        // Victim: strictly the longest queue among the other nodes. If its
+        // stealable tasks are exhausted the thief goes empty-handed rather
+        // than raiding a shorter queue — the invariant the property suite
+        // pins down.
+        let victim = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|(_, n)| n.id != id && !n.queue.is_empty())
+            .max_by_key(|(_, n)| n.queue.len())
+            .map(|(i, _)| i)?;
+        let steal_at = self.nodes[victim]
+            .queue
+            .iter()
+            .rposition(|t| self.stealable(thief_ep.as_ref(), t))?;
+        let task = self.nodes[victim].queue.remove(steal_at)?;
+        let victim_id = self.nodes[victim].id;
+        self.stats.steals += 1;
+        crate::trace::instant(
+            "sched.steal",
+            &[
+                ("thief", id.0 as i64),
+                ("victim", victim_id.0 as i64),
+                ("map", task.map_id as i64),
+            ],
+        );
+        Some((task, Origin::Stolen { victim: victim_id }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::TaskId;
+    use std::collections::HashMap as Map;
+    use std::sync::Mutex;
+
+    fn task(id: u64, operands: Vec<ObjId>) -> Task {
+        Task {
+            id: TaskId(id),
+            map_id: 1,
+            index: id,
+            span: 0,
+            fn_name: "f".into(),
+            payload: vec![],
+            operands,
+        }
+    }
+
+    fn table_lookup(table: Map<ObjId, Vec<String>>) -> LookupFn {
+        let table = Mutex::new(table);
+        Arc::new(move |id| table.lock().unwrap().get(&id).cloned())
+    }
+
+    #[test]
+    fn no_operands_places_least_loaded() {
+        let mut g = GlobalScheduler::new(16, true);
+        g.register_node(WorkerId(1), None);
+        g.register_node(WorkerId(2), None);
+        g.submit_batch((0..6).map(|i| task(i, vec![])).collect());
+        let lens = g.queue_lens();
+        assert_eq!(lens[0].1, 3);
+        assert_eq!(lens[1].1, 3);
+        assert_eq!(g.stats().assigned_tasks, 6);
+        assert_eq!(g.stats().local_hits, 0, "no operands, no locality");
+        // Each node drains its own queue.
+        for _ in 0..3 {
+            assert_eq!(g.pop_local(WorkerId(1)).unwrap().1, Origin::Local);
+        }
+        assert!(matches!(
+            g.pop_local(WorkerId(1)),
+            Some((_, Origin::Stolen { victim: WorkerId(2) }))
+        ));
+    }
+
+    #[test]
+    fn operand_task_routes_to_holding_node() {
+        let blob = ObjId::of(b"weights");
+        let mut g = GlobalScheduler::new(16, true);
+        g.register_node(WorkerId(1), Some("tcp://a".into()));
+        g.register_node(WorkerId(2), Some("tcp://b".into()));
+        g.set_lookup(table_lookup(Map::from([(
+            blob,
+            vec!["tcp://b".into()],
+        )])));
+        g.submit_batch((0..5).map(|i| task(i, vec![blob])).collect());
+        let lens = g.queue_lens();
+        assert_eq!(lens[0].1, 0, "non-holder gets nothing");
+        assert_eq!(lens[1].1, 5, "holder gets all");
+        assert_eq!(g.stats().local_hits, 5);
+        assert_eq!(g.stats().local_misses, 0);
+        // The non-holder cannot steal them either: stealing a by-ref task
+        // onto a node without the blob would force a transfer.
+        assert!(g.pop_local(WorkerId(1)).is_none());
+        assert!(g.pop_local(WorkerId(2)).is_some());
+    }
+
+    #[test]
+    fn saturated_holder_spills_to_least_loaded() {
+        let blob = ObjId::of(b"weights");
+        let mut g = GlobalScheduler::new(2, false);
+        g.register_node(WorkerId(1), Some("tcp://a".into()));
+        g.register_node(WorkerId(2), Some("tcp://b".into()));
+        g.set_lookup(table_lookup(Map::from([(
+            blob,
+            vec!["tcp://a".into()],
+        )])));
+        g.submit_batch((0..3).map(|i| task(i, vec![blob])).collect());
+        let lens = g.queue_lens();
+        assert_eq!(lens[0].1, 2, "holder filled to its bound");
+        assert_eq!(lens[1].1, 1, "third task spilled");
+        assert_eq!(g.stats().local_hits, 2);
+        assert_eq!(g.stats().local_misses, 1);
+        assert_eq!(g.stats().spills, 1);
+    }
+
+    #[test]
+    fn all_saturated_overflows_and_any_node_drains() {
+        let mut g = GlobalScheduler::new(1, false);
+        g.register_node(WorkerId(1), None);
+        g.register_node(WorkerId(2), None);
+        g.submit_batch((0..4).map(|i| task(i, vec![])).collect());
+        assert_eq!(g.queue_len(), 4);
+        assert_eq!(g.stats().spills, 2, "two tasks overflowed");
+        let mut seen = 0;
+        while g.pop_local(WorkerId(2)).is_some() {
+            seen += 1;
+        }
+        assert_eq!(seen, 3, "own queue + both overflow tasks");
+        assert_eq!(g.pop_local(WorkerId(1)).unwrap().1, Origin::Local);
+    }
+
+    #[test]
+    fn steal_victim_is_longest_queue() {
+        let mut g = GlobalScheduler::new(64, true);
+        for w in 1..=3 {
+            g.register_node(WorkerId(w), None);
+        }
+        // Load node 3 heaviest by removing+re-adding: place 7 tasks, then
+        // drain node 1 and 2 partially.
+        g.submit_batch((0..9).map(|i| task(i, vec![])).collect());
+        let _ = g.pop_local(WorkerId(1)); // 1 has 2 left
+        let _ = g.pop_local(WorkerId(1));
+        let _ = g.pop_local(WorkerId(1)); // 1 empty
+        let _ = g.pop_local(WorkerId(2)); // 2 has 2, 3 has 3
+        let lens: Map<WorkerId, usize> = g.queue_lens().into_iter().collect();
+        assert_eq!(lens[&WorkerId(3)], 3);
+        let (_, origin) = g.pop_local(WorkerId(1)).unwrap();
+        assert_eq!(origin, Origin::Stolen { victim: WorkerId(3) });
+        assert_eq!(g.stats().steals, 1);
+    }
+
+    #[test]
+    fn remove_node_hands_back_queued_tasks_for_reassignment() {
+        let mut g = GlobalScheduler::new(64, true);
+        g.register_node(WorkerId(1), None);
+        g.register_node(WorkerId(2), None);
+        g.submit_batch((0..6).map(|i| task(i, vec![])).collect());
+        let orphaned = g.remove_node(WorkerId(2));
+        assert_eq!(orphaned.len(), 3);
+        g.reassign_batch(orphaned);
+        assert_eq!(g.stats().reassigned, 3);
+        assert_eq!(g.queue_lens(), vec![(WorkerId(1), 6)]);
+    }
+
+    #[test]
+    fn endpoint_update_after_registration() {
+        let blob = ObjId::of(b"late");
+        let mut g = GlobalScheduler::new(8, true);
+        g.register_node(WorkerId(1), None);
+        g.set_lookup(table_lookup(Map::from([(
+            blob,
+            vec!["tcp://w1".into()],
+        )])));
+        g.submit_batch(vec![task(0, vec![blob])]);
+        assert_eq!(g.stats().local_misses, 1, "endpoint unknown: miss");
+        // The proc worker's HELLO arrives with its store endpoint.
+        g.register_node(WorkerId(1), Some("tcp://w1".into()));
+        g.submit_batch(vec![task(1, vec![blob])]);
+        assert_eq!(g.stats().local_hits, 1);
+    }
+}

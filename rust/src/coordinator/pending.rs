@@ -104,6 +104,7 @@ mod tests {
             span: 0,
             fn_name: "t".into(),
             payload: vec![],
+            operands: vec![],
         }
     }
 

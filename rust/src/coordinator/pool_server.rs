@@ -1,15 +1,22 @@
-//! The leader-side pool service: task queue + pending table + result queue.
+//! The leader-side pool service: two-level scheduler + pending table +
+//! result queue.
 //!
 //! Thread workers call [`PoolServer`] methods directly through an `Arc`;
 //! OS-process workers reach the same methods through the RPC facade
-//! ([`PoolServer::serve_rpc`]). Fetching and pending-table insertion are one
-//! atomic step under the server lock — the paper's "each time a task is
-//! removed from the task queue, an entry in the pending table is added".
+//! ([`PoolServer::serve_rpc`]). Placement lives in the two-level
+//! [`GlobalScheduler`](crate::api::sched::GlobalScheduler): every worker
+//! node owns a bounded local run queue, batches are assigned per node,
+//! idle nodes steal from the longest queue, and operand-holding nodes are
+//! preferred ([`crate::api::sched`]). Fetching (own queue, overflow or a
+//! steal) and pending-table insertion stay one atomic step under the
+//! server lock — the paper's "each time a task is removed from the task
+//! queue, an entry in the pending table is added".
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::HashSet;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::api::sched::{GlobalScheduler, LookupFn, Origin, SchedStats, DEFAULT_QUEUE_CAP};
 use crate::comms::chan::{self, Receiver, Sender};
 use crate::comms::rpc::RpcServer;
 use crate::wire::{self, Decode, Encode};
@@ -56,6 +63,42 @@ impl Decode for FetchReply {
     }
 }
 
+/// Reply to a batched fetch (`FETCH_BATCH`): the node-batch envelope —
+/// one round trip moves a worker's whole next slice of its run queue.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FetchBatchReply {
+    /// Run these tasks, in order.
+    Tasks(Vec<Task>),
+    /// Nothing available right now; poll again.
+    Wait,
+    /// Worker should exit cleanly.
+    Retire,
+}
+
+impl Encode for FetchBatchReply {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            FetchBatchReply::Tasks(ts) => {
+                buf.push(0);
+                ts.encode(buf);
+            }
+            FetchBatchReply::Wait => buf.push(1),
+            FetchBatchReply::Retire => buf.push(2),
+        }
+    }
+}
+
+impl Decode for FetchBatchReply {
+    fn decode(r: &mut wire::Reader<'_>) -> Result<Self, wire::WireError> {
+        match u8::decode(r)? {
+            0 => Ok(FetchBatchReply::Tasks(Vec::<Task>::decode(r)?)),
+            1 => Ok(FetchBatchReply::Wait),
+            2 => Ok(FetchBatchReply::Retire),
+            t => Err(wire::WireError::BadTag(t as u32)),
+        }
+    }
+}
+
 /// A completed task's result as delivered to the pool's collector.
 #[derive(Clone, Debug)]
 pub struct ResultMsg {
@@ -68,10 +111,16 @@ pub mod tags {
     pub const FETCH: u32 = 1;
     pub const PUT: u32 = 2;
     pub const QLEN: u32 = 3;
+    /// `HELLO(worker_id: u64, store_endpoint: Option<String>) -> ()` —
+    /// a spawned worker reports the endpoint its store node publishes
+    /// under, giving the scheduler's locality query a node to route to.
+    pub const HELLO: u32 = 4;
+    /// `FETCH_BATCH(worker_id: u64, max: u64) -> FetchBatchReply`.
+    pub const FETCH_BATCH: u32 = 5;
 }
 
 struct Inner {
-    queue: VecDeque<Task>,
+    sched: GlobalScheduler,
     pending: PendingTable,
     retiring: HashSet<WorkerId>,
     closed: bool,
@@ -96,10 +145,15 @@ impl Default for PoolServer {
 
 impl PoolServer {
     pub fn new() -> Self {
+        Self::with_queue_cap(DEFAULT_QUEUE_CAP)
+    }
+
+    /// A server whose per-node run queues are bounded at `cap` tasks.
+    pub fn with_queue_cap(cap: usize) -> Self {
         let (results_tx, results_rx) = chan::unbounded();
         Self {
             inner: Mutex::new(Inner {
-                queue: VecDeque::new(),
+                sched: GlobalScheduler::new(cap, true),
                 pending: PendingTable::new(),
                 retiring: HashSet::new(),
                 closed: false,
@@ -111,13 +165,37 @@ impl PoolServer {
         }
     }
 
-    /// Enqueue a new task at the back of the task queue.
-    pub fn submit(&self, task: Task) {
+    /// Install the directory query placement consults ([`crate::api::sched`]).
+    pub fn set_lookup(&self, lookup: LookupFn) {
+        self.inner.lock().unwrap().sched.set_lookup(lookup);
+    }
+
+    /// Register a worker node with the scheduler (idempotent; a second
+    /// call may supply the store endpoint a proc worker reported late).
+    pub fn register_node(&self, worker: WorkerId, endpoint: Option<String>) {
         let mut inner = self.inner.lock().unwrap();
-        inner.queue.push_back(task);
-        self.queue_depth.set(inner.queue.len() as i64);
+        inner.sched.register_node(worker, endpoint);
         drop(inner);
-        self.task_ready.notify_one();
+        // A node registration can make queued work reachable (e.g. tasks
+        // parked in overflow before the first node appeared).
+        self.task_ready.notify_all();
+    }
+
+    /// Enqueue a single task (convenience for [`PoolServer::submit_batch`]).
+    pub fn submit(&self, task: Task) {
+        self.submit_batch(vec![task]);
+    }
+
+    /// Place a batch of tasks: one scheduler assignment per node batch.
+    pub fn submit_batch(&self, tasks: Vec<Task>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.sched.submit_batch(tasks);
+        self.queue_depth.set(inner.sched.queue_len() as i64);
+        drop(inner);
+        self.task_ready.notify_all();
     }
 
     /// Re-queue tasks at the *front* (failure resubmission retries sooner).
@@ -126,29 +204,37 @@ impl PoolServer {
             return;
         }
         let mut inner = self.inner.lock().unwrap();
-        for t in tasks.into_iter().rev() {
-            inner.queue.push_front(t);
-        }
-        self.queue_depth.set(inner.queue.len() as i64);
+        inner.sched.resubmit_front(tasks);
+        self.queue_depth.set(inner.sched.queue_len() as i64);
         drop(inner);
         self.task_ready.notify_all();
     }
 
     /// Blocking fetch: wait up to `timeout` for a task. Atomically records
-    /// the task in the pending table under `worker`.
+    /// the task in the pending table under `worker`. The pop order is the
+    /// node scheduler's: own queue, overflow, then a steal from the
+    /// longest queue.
     pub fn fetch(&self, worker: WorkerId, timeout: Duration) -> FetchReply {
         let deadline = Instant::now() + timeout;
         let mut inner = self.inner.lock().unwrap();
         loop {
+            if !inner.sched.contains_node(worker) && !inner.closed {
+                // First contact (tests and bare drivers skip explicit
+                // registration): a node with no known store endpoint.
+                inner.sched.register_node(worker, None);
+            }
             if inner.retiring.remove(&worker) {
+                self.drop_node(&mut inner, worker);
                 return FetchReply::Retire;
             }
-            if let Some(task) = inner.queue.pop_front() {
-                self.queue_depth.set(inner.queue.len() as i64);
+            if let Some((task, origin)) = inner.sched.pop_local(worker) {
+                self.queue_depth.set(inner.sched.queue_len() as i64);
                 inner.pending.insert(worker, task.clone());
+                let _ = origin;
                 return FetchReply::Task(task);
             }
             if inner.closed {
+                self.drop_node(&mut inner, worker);
                 return FetchReply::Retire;
             }
             let now = Instant::now();
@@ -163,6 +249,62 @@ impl PoolServer {
         }
     }
 
+    /// Blocking batched fetch: up to `max` tasks for `worker` in one
+    /// envelope (own queue, then overflow, then steals). Each task is
+    /// atomically moved into the pending table.
+    pub fn fetch_batch(&self, worker: WorkerId, max: usize, timeout: Duration) -> FetchBatchReply {
+        let max = max.max(1);
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.sched.contains_node(worker) && !inner.closed {
+                inner.sched.register_node(worker, None);
+            }
+            if inner.retiring.remove(&worker) {
+                self.drop_node(&mut inner, worker);
+                return FetchBatchReply::Retire;
+            }
+            let mut got: Vec<Task> = Vec::new();
+            while got.len() < max {
+                match inner.sched.pop_local(worker) {
+                    Some((task, _origin)) => {
+                        inner.pending.insert(worker, task.clone());
+                        got.push(task);
+                    }
+                    None => break,
+                }
+            }
+            if !got.is_empty() {
+                self.queue_depth.set(inner.sched.queue_len() as i64);
+                return FetchBatchReply::Tasks(got);
+            }
+            if inner.closed {
+                self.drop_node(&mut inner, worker);
+                return FetchBatchReply::Retire;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return FetchBatchReply::Wait;
+            }
+            let (guard, _) = self
+                .task_ready
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+        }
+    }
+
+    /// Remove a departing worker's node; any queued-but-unstarted tasks it
+    /// still held are re-assigned across the surviving nodes.
+    fn drop_node(&self, inner: &mut Inner, worker: WorkerId) {
+        let orphaned = inner.sched.remove_node(worker);
+        if !orphaned.is_empty() {
+            inner.sched.reassign_batch(orphaned);
+            self.queue_depth.set(inner.sched.queue_len() as i64);
+            self.task_ready.notify_all();
+        }
+    }
+
     /// Deliver a result. Duplicate results (possible when a slow worker
     /// races its own failure-resubmission) are dropped — the pending table
     /// is the arbiter, making result delivery exactly-once per task.
@@ -173,21 +315,28 @@ impl PoolServer {
         }
     }
 
-    /// Handle a worker failure: move its pending tasks back to the queue.
-    /// Returns how many tasks were resubmitted.
-    pub fn fail_worker(&self, worker: WorkerId) -> usize {
+    /// Handle a worker failure: its queued-but-unstarted tasks are
+    /// **re-assigned** across surviving nodes, and its pending (started)
+    /// tasks are resubmitted at the front for a re-run. Returns
+    /// `(reruns, reassigned)`.
+    pub fn fail_worker(&self, worker: WorkerId) -> (usize, usize) {
         let mut inner = self.inner.lock().unwrap();
-        let tasks = inner.pending.drain_worker(worker);
-        let n = tasks.len();
-        for t in tasks.into_iter().rev() {
-            inner.queue.push_front(t);
+        let orphaned = inner.sched.remove_node(worker);
+        let reassigned = orphaned.len();
+        if reassigned > 0 {
+            inner.sched.reassign_batch(orphaned);
         }
-        self.queue_depth.set(inner.queue.len() as i64);
+        let started = inner.pending.drain_worker(worker);
+        let reruns = started.len();
+        if reruns > 0 {
+            inner.sched.resubmit_front(started);
+        }
+        self.queue_depth.set(inner.sched.queue_len() as i64);
         drop(inner);
-        if n > 0 {
+        if reruns + reassigned > 0 {
             self.task_ready.notify_all();
         }
-        n
+        (reruns, reassigned)
     }
 
     /// Ask a specific worker to retire at its next fetch.
@@ -198,7 +347,7 @@ impl PoolServer {
         self.task_ready.notify_all();
     }
 
-    /// Close the pool: workers retire once the queue drains.
+    /// Close the pool: workers retire once the queues drain.
     pub fn close(&self) {
         let mut inner = self.inner.lock().unwrap();
         inner.closed = true;
@@ -211,7 +360,7 @@ impl PoolServer {
     }
 
     pub fn queue_len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        self.inner.lock().unwrap().sched.queue_len()
     }
 
     pub fn pending_len(&self) -> usize {
@@ -223,6 +372,16 @@ impl PoolServer {
         self.inner.lock().unwrap().pending.counters()
     }
 
+    /// Scheduler counters (placement, locality, stealing, re-assignment).
+    pub fn sched_stats(&self) -> SchedStats {
+        self.inner.lock().unwrap().sched.stats()
+    }
+
+    /// `(node, queue length)` snapshot of every node scheduler.
+    pub fn queue_lens(&self) -> Vec<(WorkerId, usize)> {
+        self.inner.lock().unwrap().sched.queue_lens()
+    }
+
     /// Receiver of completed results (consumed by the pool's collector).
     pub fn results(&self) -> Receiver<ResultMsg> {
         self.results_rx.clone()
@@ -232,7 +391,9 @@ impl PoolServer {
     ///
     /// Protocol: `FETCH(worker_id: u64) -> FetchReply`,
     /// `PUT(worker_id: u64, task_id: u64, result: Result<Vec<u8>, String>) -> ()`,
-    /// `QLEN(()) -> u64`.
+    /// `QLEN(()) -> u64`,
+    /// `HELLO(worker_id: u64, store_endpoint: Option<String>) -> ()`,
+    /// `FETCH_BATCH(worker_id: u64, max: u64) -> FetchBatchReply`.
     pub fn serve_rpc(self: &Arc<Self>, bind: &str) -> anyhow::Result<RpcServer> {
         let srv = self.clone();
         RpcServer::bind(
@@ -244,10 +405,26 @@ impl PoolServer {
                     let reply = srv.fetch(WorkerId(worker), Duration::from_millis(500));
                     Ok(wire::to_bytes(&reply))
                 }
+                tags::FETCH_BATCH => {
+                    let (worker, max): (u64, u64) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    let reply = srv.fetch_batch(
+                        WorkerId(worker),
+                        max as usize,
+                        Duration::from_millis(500),
+                    );
+                    Ok(wire::to_bytes(&reply))
+                }
                 tags::PUT => {
                     let (_worker, task_id, result): (u64, u64, Result<Vec<u8>, String>) =
                         wire::from_bytes(payload).map_err(|e| e.to_string())?;
                     srv.put_result(TaskId(task_id), result);
+                    Ok(Vec::new())
+                }
+                tags::HELLO => {
+                    let (worker, endpoint): (u64, Option<String>) =
+                        wire::from_bytes(payload).map_err(|e| e.to_string())?;
+                    srv.register_node(WorkerId(worker), endpoint);
                     Ok(Vec::new())
                 }
                 tags::QLEN => Ok(wire::to_bytes(&(srv.queue_len() as u64))),
@@ -269,6 +446,7 @@ mod tests {
             span: 0,
             fn_name: "f".into(),
             payload: vec![id as u8],
+            operands: vec![],
         }
     }
 
@@ -318,14 +496,17 @@ mod tests {
     #[test]
     fn fail_worker_requeues_in_order() {
         let s = PoolServer::new();
+        s.register_node(WorkerId(7), None);
         s.submit(task(1));
         s.submit(task(2));
         s.submit(task(3));
         assert!(matches!(s.fetch(WorkerId(7), T), FetchReply::Task(_)));
         assert!(matches!(s.fetch(WorkerId(7), T), FetchReply::Task(_)));
-        assert_eq!(s.fail_worker(WorkerId(7)), 2);
+        let (reruns, reassigned) = s.fail_worker(WorkerId(7));
+        assert_eq!(reruns, 2, "both started tasks re-run");
+        assert_eq!(reassigned, 1, "the unstarted task is re-assigned");
         assert_eq!(s.queue_len(), 3);
-        // Requeued tasks come back out first, in original order.
+        // Resubmitted tasks come back out first, in original order.
         let r = s.fetch(WorkerId(8), T);
         assert_eq!(r, FetchReply::Task(task(1)));
         let r = s.fetch(WorkerId(8), T);
@@ -341,6 +522,25 @@ mod tests {
         assert_eq!(s.fetch(WorkerId(3), T), FetchReply::Retire);
         // Other workers unaffected.
         assert_eq!(s.fetch(WorkerId(4), Duration::from_millis(10)), FetchReply::Wait);
+    }
+
+    #[test]
+    fn retiring_node_queue_is_reassigned() {
+        let s = PoolServer::new();
+        s.register_node(WorkerId(1), None);
+        s.register_node(WorkerId(2), None);
+        for i in 0..4 {
+            s.submit(task(i));
+        }
+        // Node 1 retires with 2 queued tasks: both must move to node 2.
+        s.retire(WorkerId(1));
+        assert_eq!(s.fetch(WorkerId(1), T), FetchReply::Retire);
+        assert_eq!(s.sched_stats().reassigned, 2);
+        let mut got = 0;
+        while matches!(s.fetch(WorkerId(2), Duration::from_millis(10)), FetchReply::Task(_)) {
+            got += 1;
+        }
+        assert_eq!(got, 4, "no task may be lost to a retired node's queue");
     }
 
     #[test]
@@ -366,12 +566,39 @@ mod tests {
     }
 
     #[test]
+    fn fetch_batch_ships_one_envelope() {
+        let s = PoolServer::new();
+        s.register_node(WorkerId(1), None);
+        s.submit_batch((0..5).map(task).collect());
+        let r = s.fetch_batch(WorkerId(1), 3, T);
+        let FetchBatchReply::Tasks(ts) = r else {
+            panic!("expected a task batch, got {r:?}");
+        };
+        assert_eq!(ts.len(), 3, "bounded by max");
+        assert_eq!(s.pending_len(), 3, "each batched task is pending");
+        let FetchBatchReply::Tasks(rest) = s.fetch_batch(WorkerId(1), 8, T) else {
+            panic!("second batch expected");
+        };
+        assert_eq!(rest.len(), 2);
+        assert_eq!(
+            s.fetch_batch(WorkerId(1), 8, Duration::from_millis(10)),
+            FetchBatchReply::Wait
+        );
+    }
+
+    #[test]
     fn rpc_facade_roundtrip() {
         use crate::comms::rpc::RpcClient;
         let s = Arc::new(PoolServer::new());
         let rpc = s.serve_rpc("127.0.0.1:0").unwrap();
         s.submit(task(5));
         let cli = RpcClient::connect(rpc.local_addr()).unwrap();
+        // HELLO registers the node (with no store endpoint here).
+        cli.call(
+            tags::HELLO,
+            &wire::to_bytes(&(11u64, Option::<String>::None)),
+        )
+        .unwrap();
         let reply: FetchReply = {
             let bytes = cli.call(tags::FETCH, &wire::to_bytes(&11u64)).unwrap();
             wire::from_bytes(&bytes).unwrap()
@@ -389,5 +616,15 @@ mod tests {
         assert_eq!(msg.result, Ok(vec![9]));
         let qlen: u64 = cli.call_typed(tags::QLEN, &()).unwrap();
         assert_eq!(qlen, 0);
+        // Batched fetch over RPC.
+        s.submit_batch((20..23).map(task).collect());
+        let bytes = cli
+            .call(tags::FETCH_BATCH, &wire::to_bytes(&(11u64, 8u64)))
+            .unwrap();
+        let batch: FetchBatchReply = wire::from_bytes(&bytes).unwrap();
+        let FetchBatchReply::Tasks(ts) = batch else {
+            panic!("expected batch, got {batch:?}");
+        };
+        assert_eq!(ts.len(), 3);
     }
 }

@@ -41,6 +41,13 @@ pub struct Task {
     pub span: u64,
     pub fn_name: String,
     pub payload: Vec<u8>,
+    /// Store blobs this task reads ([`crate::store::ObjRef`] arguments,
+    /// recorded at encode time, plus any auto-put payload blob). The
+    /// scheduler's placement query resolves these against the store
+    /// directory to route the task onto a node already holding its
+    /// operands ([`crate::api::sched`]); they ride the envelope so a
+    /// re-assignment after node failure can re-derive the same placement.
+    pub operands: Vec<crate::store::ObjId>,
 }
 
 impl Encode for Task {
@@ -51,6 +58,7 @@ impl Encode for Task {
         self.span.encode(buf);
         self.fn_name.encode(buf);
         self.payload.encode(buf);
+        self.operands.encode(buf);
     }
 }
 
@@ -63,6 +71,7 @@ impl Decode for Task {
             span: u64::decode(r)?,
             fn_name: String::decode(r)?,
             payload: Vec::<u8>::decode(r)?,
+            operands: Vec::<crate::store::ObjId>::decode(r)?,
         })
     }
 }
@@ -180,6 +189,7 @@ mod tests {
             span: 42,
             fn_name: "f".into(),
             payload: vec![1, 2, 3],
+            operands: vec![crate::store::ObjId::of(b"operand")],
         };
         let bytes = wire::to_bytes(&t);
         let back: Task = wire::from_bytes(&bytes).unwrap();

@@ -22,6 +22,74 @@ pub fn register() {
     });
 }
 
+/// Deterministic two-level-scheduler demo (and the CI sched smoke).
+///
+/// Phase 1 — **stealing**: one long task pins worker 1 while short tasks
+/// queue behind it; worker 2 drains its own queue well inside the long
+/// task's runtime and must steal from worker 1 (the longest queue) —
+/// guaranteeing at least one `sched.steal` event without relying on race
+/// timing. Phase 2 — **locality**: a warm `apply` faults a store blob
+/// into one worker's node, then a map over the same [`ObjRef`] routes to
+/// that holder, producing `sched.local_hit` events. Run with `--trace
+/// FILE.jsonl` and the events land in the exported trace; the demo exits
+/// non-zero if either phase failed to produce its event.
+pub fn sched_demo(opts: &Opts) -> Result<()> {
+    use fiber::store::{ObjRef, StoreNode};
+    register_task("sched.spin", |ms: u64| {
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+        Ok::<u64, String>(ms)
+    });
+    register_task("sched.ref_sum", |r: ObjRef<Vec<f32>>| {
+        let v: Vec<f32> = r.get().map_err(|e| e.to_string())?;
+        Ok::<f32, String>(v.iter().sum())
+    });
+    let long_ms: u64 = opts.parse_or("long-ms", 120u64)?;
+    let short_ms: u64 = opts.parse_or("short-ms", 5u64)?;
+    let shorts: usize = opts.parse_or("shorts", 8usize)?;
+    let leader = StoreNode::host(64 << 20);
+    let pool = Pool::builder()
+        .processes(2)
+        .store(leader.clone())
+        .worker_store_budget(16 << 20)
+        .build()?;
+    // Phase 1: the long task is placed first (worker 1's queue), shorts
+    // alternate across both queues behind it.
+    let mut work = vec![long_ms];
+    work.extend(std::iter::repeat(short_ms).take(shorts));
+    let done: Vec<u64> = pool.map("sched.spin", work)?;
+    anyhow::ensure!(done.len() == shorts + 1);
+    // Phase 2: fault the blob into exactly one worker, then map over it.
+    let payload: Vec<f32> = (0..50_000).map(|i| (i % 11) as f32).collect();
+    let want: f32 = payload.iter().sum();
+    let r = pool.put_ref(&payload)?;
+    let warm: f32 = pool.apply("sched.ref_sum", r)?;
+    anyhow::ensure!((warm - want).abs() < 1.0, "warm sum {warm} != {want}");
+    let sums: Vec<f32> = pool.map("sched.ref_sum", std::iter::repeat(r).take(shorts))?;
+    anyhow::ensure!(sums.iter().all(|s| (s - want).abs() < 1.0));
+    let s = pool.sched_stats();
+    let routed = s.local_hits + s.local_misses;
+    println!(
+        "sched-demo: {} tasks in {} node batches | locality {}/{routed} hit \
+         | steals {} | spills {} | reassigned {}",
+        s.assigned_tasks, s.assigned_batches, s.local_hits, s.steals, s.spills, s.reassigned
+    );
+    let transfers: u64 = pool.worker_stores().iter().map(|(_, n)| n.transfers()).sum();
+    println!(
+        "sched-demo: worker-node blob transfers {transfers} (one fault-in, \
+         then cache hits on the holder)"
+    );
+    anyhow::ensure!(
+        s.steals >= 1,
+        "phase 1 produced no sched.steal (long {long_ms}ms, {shorts} x {short_ms}ms)"
+    );
+    anyhow::ensure!(s.local_hits >= 1, "phase 2 produced no sched.local_hit");
+    anyhow::ensure!(
+        transfers == 1,
+        "the by-ref blob must cross to the worker tier exactly once, got {transfers}"
+    );
+    Ok(())
+}
+
 pub fn pi_demo(opts: &Opts) -> Result<()> {
     register();
     let workers: usize = opts.parse_or("workers", 4)?;

@@ -13,7 +13,7 @@ use anyhow::{bail, Context, Result};
 use fiber::algo::es::register_es_tasks;
 use fiber::baselines::exec::register_bench_tasks;
 use fiber::comms::rpc::RpcClient;
-use fiber::coordinator::pool_server::{tags, FetchReply};
+use fiber::coordinator::pool_server::{tags, FetchBatchReply};
 use fiber::coordinator::task::execute_registered;
 use fiber::wire;
 
@@ -148,6 +148,7 @@ pub fn run(args: Vec<String>) -> Result<()> {
         "ring" => ring::ring_demo(&opts),
         "ring-node" => ring::ring_node(&opts),
         "demo" => demo::pi_demo(&opts),
+        "sched-demo" => demo::sched_demo(&opts),
         "overhead" => experiments::overhead(&opts),
         "es" => experiments::es(&opts),
         "es-node" => experiments::es_node(&opts),
@@ -350,6 +351,7 @@ fn worker(opts: &Opts) -> Result<()> {
     let leader: std::net::SocketAddr = opts.require("leader")?.parse()?;
     let worker_id: u64 = opts.require("worker")?.parse()?;
     fiber::coordinator::task::set_current_worker(worker_id);
+    let mut store_endpoint: Option<String> = None;
     if let Some(store) = opts.get("store") {
         // Join the leader's object store: ObjRef task arguments resolve
         // through this node (one transfer per payload per worker process,
@@ -365,35 +367,45 @@ fn worker(opts: &Opts) -> Result<()> {
                 .set_spill_dir(Some(dir.into()))
                 .with_context(|| format!("create spill dir {dir}"))?;
         }
-        node.serve("127.0.0.1:0").context("serve worker store node")?;
+        let ep = node.serve("127.0.0.1:0").context("serve worker store node")?;
+        store_endpoint = Some(ep);
         fiber::store::install_node(node);
     }
     let cli = RpcClient::connect(leader).context("connect to leader")?;
+    // HELLO: report the store endpoint this worker publishes blobs under,
+    // so the leader's scheduler can route operand-holding tasks here
+    // (`sched.local_hit`) instead of treating every proc worker alike.
+    cli.call(tags::HELLO, &wire::to_bytes(&(worker_id, store_endpoint)))?;
+    let batch: u64 = opts.parse_or("batch", 8u64)?;
     loop {
-        let reply = cli.call(tags::FETCH, &wire::to_bytes(&worker_id))?;
-        let fetched: FetchReply =
+        // One envelope moves a whole slice of this node's run queue. A
+        // `Wait` reply means the leader's 500 ms blocking fetch found
+        // nothing — loop straight back into it, no client-side sleep.
+        let reply = cli.call(tags::FETCH_BATCH, &wire::to_bytes(&(worker_id, batch)))?;
+        let fetched: FetchBatchReply =
             wire::from_bytes(&reply).map_err(|e| anyhow::anyhow!("fetch decode: {e}"))?;
         match fetched {
-            FetchReply::Task(task) => {
-                // Mirror of the in-process worker loop: the run span
-                // parents under the span id the envelope carried from the
-                // leader (recorded only if this process enables tracing).
-                let run = fiber::trace::Span::begin_child("pool.run", task.span)
-                    .arg("worker", worker_id as i64)
-                    .arg("index", task.index as i64);
-                let result = fiber::trace::with_span(run.id(), || {
-                    execute_registered(&task.fn_name, &task.payload)
-                });
-                drop(run);
-                cli.call(
-                    tags::PUT,
-                    &wire::to_bytes(&(worker_id, task.id.0, result)),
-                )?;
+            FetchBatchReply::Tasks(tasks) => {
+                for task in tasks {
+                    // Mirror of the in-process worker loop: the run span
+                    // parents under the span id the envelope carried from
+                    // the leader (recorded only if this process enables
+                    // tracing).
+                    let run = fiber::trace::Span::begin_child("pool.run", task.span)
+                        .arg("worker", worker_id as i64)
+                        .arg("index", task.index as i64);
+                    let result = fiber::trace::with_span(run.id(), || {
+                        execute_registered(&task.fn_name, &task.payload)
+                    });
+                    drop(run);
+                    cli.call(
+                        tags::PUT,
+                        &wire::to_bytes(&(worker_id, task.id.0, result)),
+                    )?;
+                }
             }
-            FetchReply::Wait => {
-                std::thread::sleep(Duration::from_millis(2));
-            }
-            FetchReply::Retire => return Ok(()),
+            FetchBatchReply::Wait => continue,
+            FetchBatchReply::Retire => return Ok(()),
         }
     }
 }
@@ -406,13 +418,18 @@ fn print_help() {
          \n\
          SUBCOMMANDS:\n\
            worker       worker-process entrypoint (spawned by ProcBackend)\n\
-                        --leader <addr> --worker <id>\n\
+                        --leader <addr> --worker <id> [--batch N tasks/envelope]\n\
                         [--store tcp://addr [--store-budget BYTES] [--spill-dir DIR]]\n\
            ring         ring-allreduce collective demo\n\
                         [--world N] [--elems N] [--proc true] [--overlap false]\n\
            ring-node    ring-member process entrypoint (spawned by `ring --proc true`)\n\
                         --rendezvous <addr> [--elems N] [--bind ip:port] [--overlap false]\n\
            demo         pi-estimation smoke demo  [--workers N] [--samples N] [--proc true]\n\
+           sched-demo   deterministic two-level-scheduler demo: a pinned worker\n\
+                        forces a steal, a store-resident ObjRef forces locality\n\
+                        routing; exits non-zero unless sched.steal and\n\
+                        sched.local_hit both fired\n\
+                        [--long-ms MS] [--short-ms MS] [--shorts N]\n\
            overhead     E1 Fig 3a framework-overhead experiment [--workers N]\n\
            es           E2 distributed ES on walker2d\n\
                         [--pop N] [--iters N] [--workers N] [--artifacts DIR]\n\

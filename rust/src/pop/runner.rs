@@ -17,11 +17,11 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
-use crate::api::pool::{MapHandle, Pool};
+use crate::api::pool::{MapHandle, MapSelect, Pool};
 use crate::store::{ObjId, ObjRef, StoreNode};
 use crate::util::Rng;
 
@@ -84,12 +84,6 @@ impl Default for PbtConfig {
         }
     }
 }
-
-/// How long the async runner's completion poll sleeps when nothing is
-/// ready: the upper bound on re-dispatch latency when the condvar wait
-/// misses (the wait itself wakes early on completion). The actual waits
-/// land in the `pop.poll.wait` latency metric.
-const POLL_INTERVAL: Duration = Duration::from_millis(5);
 
 /// How slices are scheduled.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -216,51 +210,29 @@ impl PopulationRunner {
     }
 
     fn run_async(&mut self, pool: &Pool) -> Result<()> {
-        let mut inflight: HashMap<TrialId, MapHandle<SliceOutput>> = HashMap::new();
+        // Event-driven wait-any: every in-flight slice subscribes its
+        // trial id to one completion channel, and the collector's delivery
+        // of a result wakes `select()` exactly once for it. There is no
+        // poll interval and no ready-scan — the re-dispatch latency is the
+        // wakeup itself.
+        let select: MapSelect<SliceOutput> = MapSelect::new();
         for idx in 0..self.trials.len() {
             let id = self.trials[idx].id;
-            inflight.insert(id, self.dispatch(pool, idx)?);
+            select.add(id.0, self.dispatch(pool, idx)?);
         }
-        while !inflight.is_empty() {
-            let ready: Vec<TrialId> = inflight
-                .iter()
-                .filter(|(_, h)| h.ready())
-                .map(|(id, _)| *id)
-                .collect();
-            if ready.is_empty() {
-                // Condvar-backed wait on one in-flight handle: wakes the
-                // moment that slice completes (completions of the others
-                // are caught by the next scan), or after the poll timeout.
-                // An event-driven wait-any over all handles would remove
-                // the timeout entirely (ROADMAP follow-up). The observed
-                // wait is recorded, so the re-dispatch latency this poll
-                // bounds is measurable, not guessed.
-                let t_wait = Instant::now();
-                match inflight.values().next() {
-                    Some(h) => {
-                        let _ = h.ready_timeout(POLL_INTERVAL);
-                    }
-                    None => std::thread::sleep(POLL_INTERVAL),
-                }
-                crate::metrics::latency("pop.poll.wait")
-                    .record_ns(t_wait.elapsed().as_nanos() as u64);
-                continue;
-            }
-            for id in ready {
-                let handle = inflight.remove(&id).expect("in-flight handle");
-                let out = handle
-                    .wait()
-                    .with_context(|| format!("pbt slice of {id}"))?
-                    .pop()
-                    .context("empty slice result")?;
-                let idx = self.trial_index(id);
-                self.complete(idx, out)?;
-                // No barrier: exploit against the scores of *right now*,
-                // then put the trial straight back to work.
-                if self.trials[idx].slices_done < self.cfg.slices {
-                    self.exploit_explore(idx)?;
-                    inflight.insert(id, self.dispatch(pool, idx)?);
-                }
+        while let Some((key, out)) = select.select() {
+            let id = TrialId(key);
+            let out = out
+                .with_context(|| format!("pbt slice of {id}"))?
+                .pop()
+                .context("empty slice result")?;
+            let idx = self.trial_index(id);
+            self.complete(idx, out)?;
+            // No barrier: exploit against the scores of *right now*, then
+            // put the trial straight back to work.
+            if self.trials[idx].slices_done < self.cfg.slices {
+                self.exploit_explore(idx)?;
+                select.add(key, self.dispatch(pool, idx)?);
             }
         }
         Ok(())

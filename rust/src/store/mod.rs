@@ -77,6 +77,58 @@ use crate::wire::{Decode, Encode, Reader, WireError};
 /// `PoolBuilder::store`, and [`ObjRef::get`] resolves through it.
 static GLOBAL_NODE: Lazy<Mutex<Option<Arc<StoreNode>>>> = Lazy::new(|| Mutex::new(None));
 
+thread_local! {
+    /// Per-thread node override: thread-backed pool workers configured
+    /// with their own store node ([`crate::api::pool::PoolBuilder::worker_store_budget`])
+    /// install it here, so `ObjRef::get` on a worker thread resolves
+    /// through that worker's node — making node-level locality (and the
+    /// scheduler's placement query) real on the thread backend, not just
+    /// for OS-process workers.
+    static THREAD_NODE: std::cell::RefCell<Option<Arc<StoreNode>>> =
+        const { std::cell::RefCell::new(None) };
+
+    /// When set, [`ObjRef`] encodes append their id here — how the pool
+    /// learns a task's store operands without decoding its payload.
+    static REF_TRAP: std::cell::RefCell<Option<Vec<ObjId>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Install (or clear) this thread's store node override. [`node`] prefers
+/// it over the process-global slot; other threads are unaffected.
+pub fn install_thread_node(node: Option<Arc<StoreNode>>) {
+    THREAD_NODE.with(|t| *t.borrow_mut() = node);
+}
+
+/// This thread's node override, if any.
+pub fn thread_node() -> Option<Arc<StoreNode>> {
+    THREAD_NODE.with(|t| t.borrow().clone())
+}
+
+/// Run `f` with the [`ObjRef`] trap armed: every handle encoded inside
+/// (task arguments, nested or not) reports its [`ObjId`]. The pool's
+/// submit path wraps each item's payload encode in this to learn the
+/// task's store operands — the inputs to the scheduler's locality query —
+/// with zero API impact on task functions.
+pub fn collect_refs<R>(f: impl FnOnce() -> R) -> (R, Vec<ObjId>) {
+    REF_TRAP.with(|t| *t.borrow_mut() = Some(Vec::new()));
+    let out = f();
+    let ids = REF_TRAP
+        .with(|t| t.borrow_mut().take())
+        .unwrap_or_default();
+    (out, ids)
+}
+
+/// Report an encoded handle to an armed trap (no-op otherwise).
+pub(crate) fn note_encoded_ref(id: ObjId) {
+    REF_TRAP.with(|t| {
+        if let Some(ids) = t.borrow_mut().as_mut() {
+            if !ids.contains(&id) {
+                ids.push(id);
+            }
+        }
+    });
+}
+
 /// Install (or replace) this process's store node.
 pub fn install_node(node: Arc<StoreNode>) {
     *GLOBAL_NODE.lock().unwrap() = Some(node);
@@ -103,8 +155,13 @@ pub fn installed() -> Option<Arc<StoreNode>> {
     GLOBAL_NODE.lock().unwrap().clone()
 }
 
-/// The installed node, or a descriptive error.
+/// The resolving node for this thread: the thread-local override when one
+/// is installed ([`install_thread_node`]), else the process-global node,
+/// else a descriptive error.
 pub fn node() -> Result<Arc<StoreNode>> {
+    if let Some(n) = thread_node() {
+        return Ok(n);
+    }
     installed().context(
         "no store node installed in this process \
          (fiber::store::install_node, PoolBuilder::store, or fiber-cli worker --store)",
@@ -193,6 +250,9 @@ impl<T> std::fmt::Debug for ObjRef<T> {
 
 impl<T> Encode for ObjRef<T> {
     fn encode(&self, buf: &mut Vec<u8>) {
+        // Operand discovery: a payload encode wrapped in `collect_refs`
+        // (the pool's submit path) learns every handle a task carries.
+        note_encoded_ref(self.id);
         self.id.encode(buf);
         self.len.encode(buf);
     }

@@ -231,6 +231,16 @@ impl StoreNode {
         self.endpoint.lock().unwrap().clone()
     }
 
+    /// The location string this node publishes blobs under: its served
+    /// endpoint, or the per-node local-only marker before [`StoreNode::serve`]
+    /// runs. Matching this against [`super::DirEntry::locations`] answers
+    /// "does this node hold that blob?" — the scheduler's locality query
+    /// ([`crate::api::sched`]).
+    pub fn publish_endpoint(&self) -> String {
+        self.endpoint()
+            .unwrap_or_else(|| self.local_marker.clone())
+    }
+
     /// Store a blob and publish this node as a location. Idempotent for
     /// identical bytes (content addressing).
     pub fn put_bytes(&self, bytes: &[u8]) -> Result<ObjId> {

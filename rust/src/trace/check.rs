@@ -35,6 +35,13 @@
 //! | `pool.dispatch-run` | a dispatch with tasks has at least one observed run (warning: workers may be untraced) |
 //! | `pool.rerun-restart` | a task that ran twice under one dispatch is explained by a `pool.restart` |
 //! | `pop.slice-ckpt` | re-dispatches of one `(trial, slice)` reuse the same checkpoint ref |
+//!
+//! The two-level scheduler's events (`sched.assign`, `sched.steal`,
+//! `sched.local_hit` — see `docs/trace_schema.md`) are instants: they
+//! carry no duration obligation and no cross-layer invariant of their
+//! own, so they pass the audit untouched — the CI sched smoke greps for
+//! their presence after running a traced `sched-demo` through this
+//! checker.
 
 use std::collections::HashMap;
 

@@ -12,6 +12,9 @@
 //!    drained tasks completes the batch; nothing is lost.
 //! 4. Ordered maps return results in input order regardless of completion
 //!    order (checked through the public Pool API).
+//! 5. Two-level scheduler: exactly-once pops, bounded node queues, steal
+//!    victims are always the longest queue, and by-ref tasks are only
+//!    stolen by operand holders (driven directly, single-threaded).
 
 use std::time::Duration;
 
@@ -27,6 +30,7 @@ fn mk_task(i: u64) -> Task {
         span: 0,
         fn_name: "prop".into(),
         payload: vec![i as u8],
+        operands: vec![],
     }
 }
 
@@ -70,8 +74,8 @@ fn random_schedule(seed: u64, steps: usize) {
                 // Worker failure: its in-flight tasks go back to the queue.
                 let w = rng.below(n_workers);
                 let had = in_worker[w].len();
-                let requeued = server.fail_worker(WorkerId(w as u64));
-                assert_eq!(requeued, had, "step {step}: drain mismatch (seed {seed})");
+                let (reruns, _reassigned) = server.fail_worker(WorkerId(w as u64));
+                assert_eq!(reruns, had, "step {step}: drain mismatch (seed {seed})");
                 in_worker[w].clear();
             }
             _ => {
@@ -150,6 +154,148 @@ fn run_to_completion(seed: u64) {
 fn batches_complete_under_random_failures() {
     for seed in 0..80 {
         run_to_completion(seed);
+    }
+}
+
+/// Two-level scheduler invariants over random task/node/steal schedules,
+/// driving [`fiber::api::sched::GlobalScheduler`] directly (single-threaded,
+/// as its module doc promises):
+/// - every submitted task is popped exactly once (node removal re-places
+///   queued tasks, it never duplicates or loses them);
+/// - no node's run queue ever exceeds its bound;
+/// - a steal's victim is always the longest other queue at steal time;
+/// - an operand-carrying task is only ever stolen by a holder of its blob.
+#[test]
+fn scheduler_exactly_once_bounded_queues_and_longest_victim() {
+    use fiber::api::sched::{GlobalScheduler, LookupFn, Origin};
+    use fiber::store::ObjId;
+    use std::collections::{HashMap, HashSet};
+    use std::sync::Arc;
+
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(seed ^ 0x5C4ED);
+        let cap = 1 + rng.below(6);
+        let n_nodes = 2 + rng.below(4);
+        // Three blobs, each resident on a random subset of the nodes.
+        let mut blobs: Vec<(ObjId, Vec<String>)> = Vec::new();
+        for b in 0..3u64 {
+            let id = ObjId::of(format!("prop-blob-{seed}-{b}").as_bytes());
+            let mut holders = Vec::new();
+            for w in 0..n_nodes {
+                if rng.chance(0.4) {
+                    holders.push(format!("tcp://w{w}"));
+                }
+            }
+            blobs.push((id, holders));
+        }
+        let holder_table: HashMap<ObjId, Vec<String>> = blobs.iter().cloned().collect();
+        let table = holder_table.clone();
+        let lookup: LookupFn = Arc::new(move |id| table.get(&id).cloned());
+
+        let mut g = GlobalScheduler::new(cap, true);
+        g.set_lookup(lookup);
+        let mut live: Vec<u64> = (0..n_nodes as u64).collect();
+        for &w in &live {
+            g.register_node(WorkerId(w), Some(format!("tcp://w{w}")));
+        }
+        let mut submitted = 0u64;
+        let mut operands_of: HashMap<u64, Vec<ObjId>> = HashMap::new();
+        let mut popped: HashSet<u64> = HashSet::new();
+
+        for step in 0..250 {
+            match rng.below(8) {
+                0..=2 => {
+                    let k = 1 + rng.below(4);
+                    let mut batch = Vec::new();
+                    for _ in 0..k {
+                        let mut t = mk_task(submitted);
+                        if rng.chance(0.3) {
+                            t.operands = vec![blobs[rng.below(blobs.len())].0];
+                        }
+                        operands_of.insert(submitted, t.operands.clone());
+                        submitted += 1;
+                        batch.push(t);
+                    }
+                    g.submit_batch(batch);
+                }
+                3..=6 => {
+                    // Pop for a random node (occasionally an unregistered
+                    // id, which drains overflow / steals no-operand tasks).
+                    let w = if rng.chance(0.9) {
+                        live[rng.below(live.len())]
+                    } else {
+                        900 + rng.below(4) as u64
+                    };
+                    let pre: HashMap<u64, usize> =
+                        g.queue_lens().into_iter().map(|(id, l)| (id.0, l)).collect();
+                    if let Some((t, origin)) = g.pop_local(WorkerId(w)) {
+                        assert!(
+                            popped.insert(t.index),
+                            "step {step}: task {} popped twice (seed {seed})",
+                            t.index
+                        );
+                        if let Origin::Stolen { victim } = origin {
+                            let longest = pre
+                                .iter()
+                                .filter(|(id, l)| **id != w && **l > 0)
+                                .map(|(_, l)| *l)
+                                .max()
+                                .unwrap();
+                            assert_eq!(
+                                pre[&victim.0], longest,
+                                "step {step}: steal victim not the longest \
+                                 queue (seed {seed})"
+                            );
+                            let ops = &operands_of[&t.index];
+                            if !ops.is_empty() {
+                                let ep = format!("tcp://w{w}");
+                                let held = ops.iter().any(|o| {
+                                    holder_table.get(o).is_some_and(|hs| hs.contains(&ep))
+                                });
+                                assert!(
+                                    held,
+                                    "step {step}: non-holder stole by-ref \
+                                     task (seed {seed})"
+                                );
+                            }
+                        }
+                    }
+                }
+                _ => {
+                    // Chaos: drop a node and re-place its queued tasks.
+                    if live.len() > 1 && rng.chance(0.5) {
+                        let i = rng.below(live.len());
+                        let w = live.remove(i);
+                        let orphans = g.remove_node(WorkerId(w));
+                        g.reassign_batch(orphans);
+                    }
+                }
+            }
+            for (id, len) in g.queue_lens() {
+                assert!(
+                    len <= cap,
+                    "step {step}: node {} queue {len} > cap {cap} (seed {seed})",
+                    id.0
+                );
+            }
+            assert_eq!(
+                popped.len() + g.queue_len(),
+                submitted as usize,
+                "step {step}: conservation broken (seed {seed})"
+            );
+        }
+
+        // Drain to empty: exactly-once over the whole schedule.
+        let mut guard = 0usize;
+        while g.queue_len() > 0 {
+            guard += 1;
+            assert!(guard < 100_000, "drain livelock (seed {seed})");
+            let w = live[guard % live.len()];
+            if let Some((t, _)) = g.pop_local(WorkerId(w)) {
+                assert!(popped.insert(t.index), "drain: duplicate pop (seed {seed})");
+            }
+        }
+        assert_eq!(popped.len() as u64, submitted, "lost tasks (seed {seed})");
     }
 }
 

@@ -1,0 +1,244 @@
+//! Integration tests for the two-level scheduler's failure and completion
+//! semantics, end-to-end through the public Pool API:
+//!
+//! * **Chaos re-assignment** — killing a worker mid-batch must re-*assign*
+//!   its queued-but-unstarted tasks to surviving nodes (`SchedStats::
+//!   reassigned`), distinct from re-*running* the one task it had started
+//!   (the pending-table requeue).
+//! * **Locality across heals** — by-ref maps keep routing to an operand
+//!   holder after a worker dies and is replaced.
+//! * **Event-driven completion** — `MapSelect::wait_any` wakes exactly one
+//!   waiter exactly once per finished map, under 4 concurrent waiters.
+//! * **Zero completion polling** — a traced PBT population run records no
+//!   `pop.poll.*` events: the runner sleeps on the completion channel, not
+//!   a poll cadence.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fiber::api::pool::{MapSelect, Pool};
+use fiber::coordinator::register_task;
+use fiber::store::{ObjRef, StoreNode};
+
+/// Serialize tests that flip the process-global tracing switch.
+static TRACE_GUARD: Mutex<()> = Mutex::new(());
+
+fn drain_global() -> fiber::trace::collect::TraceDump {
+    let mut c = fiber::trace::collect::Collector::new();
+    c.add_global();
+    c.drain()
+}
+
+/// **Chaos acceptance:** kill a worker while its local run queue is full.
+///
+/// Placement alternates the 8-task batch across the two empty queues:
+/// worker 1 gets `[poison, 5ms, 5ms, 5ms]`, worker 2 gets `[400ms, 5ms,
+/// 5ms, 5ms]`. The poison kills worker 1 at ~30 ms while worker 2 is
+/// pinned inside its 400 ms task — it cannot steal — so heal (10 ms
+/// supervisor tick) must *re-assign* worker 1's three queued-but-unstarted
+/// tasks (`reassigned == 3`), on top of re-running the started poison task
+/// through the pending table (`requeued >= 1`).
+#[test]
+fn killed_worker_queued_tasks_are_reassigned_not_just_rerun() {
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    register_task("sit.mix", |(mode, ms): (u64, u64)| {
+        std::thread::sleep(Duration::from_millis(ms));
+        if mode == 1 && ARMED.swap(false, Ordering::SeqCst) {
+            panic!("sit.mix chaos kill");
+        }
+        Ok::<u64, String>(ms)
+    });
+    ARMED.store(true, Ordering::SeqCst);
+    let pool = Pool::builder().processes(2).chunksize(1).build().unwrap();
+    let work: Vec<(u64, u64)> = vec![
+        (1, 30),
+        (0, 400),
+        (0, 5),
+        (0, 5),
+        (0, 5),
+        (0, 5),
+        (0, 5),
+        (0, 5),
+    ];
+    let out: Vec<u64> = pool.map("sit.mix", work).unwrap();
+    assert_eq!(out, vec![30, 400, 5, 5, 5, 5, 5, 5]);
+    let s = pool.sched_stats();
+    assert_eq!(
+        s.reassigned, 3,
+        "the dead worker's queued-but-unstarted tasks must be re-assigned"
+    );
+    let (_, _, requeued) = pool.counters();
+    assert!(requeued >= 1, "the started poison task must be re-run");
+    assert!(pool.restarts() >= 1, "the dead worker must be replaced");
+}
+
+/// **Locality across heals:** warm a blob into one worker's store, kill a
+/// worker (whichever draws the poison — holder or not), and after the
+/// replacement joins, a by-ref map must again place every task on a live
+/// operand holder.
+#[test]
+fn locality_routing_survives_worker_heal() {
+    static ARMED: AtomicBool = AtomicBool::new(false);
+    register_task("sit.ref_sum", |r: ObjRef<Vec<f32>>| {
+        let v: Vec<f32> = r.get().map_err(|e| e.to_string())?;
+        Ok::<f32, String>(v.iter().sum())
+    });
+    register_task("sit.poison_once", |x: u64| {
+        if ARMED.swap(false, Ordering::SeqCst) {
+            panic!("sit.poison_once chaos kill");
+        }
+        Ok::<u64, String>(x)
+    });
+    let leader = StoreNode::host(64 << 20);
+    let pool = Pool::builder()
+        .processes(2)
+        .chunksize(1)
+        .store(leader.clone())
+        .worker_store_budget(16 << 20)
+        .build()
+        .unwrap();
+    let payload: Vec<f32> = (0..40_000).map(|i| (i % 13) as f32).collect();
+    let want: f32 = payload.iter().sum();
+    let r: ObjRef<Vec<f32>> = pool.put_ref(&payload).unwrap();
+
+    // Warm fault-in (a locality miss: only the leader held the blob), then
+    // a warm map that must route to the holding worker.
+    let warm: f32 = pool.apply("sit.ref_sum", r).unwrap();
+    assert!((warm - want).abs() < 1.0);
+    let hits_warm = pool.sched_stats().local_hits;
+    let sums: Vec<f32> = pool
+        .map("sit.ref_sum", std::iter::repeat(r).take(6))
+        .unwrap();
+    assert!(sums.iter().all(|s| (s - want).abs() < 1.0));
+    assert!(
+        pool.sched_stats().local_hits >= hits_warm + 6,
+        "warm map must place on the holding worker"
+    );
+
+    // Chaos: one worker dies on the poison and is re-run elsewhere.
+    ARMED.store(true, Ordering::SeqCst);
+    let echoed: u64 = pool.apply("sit.poison_once", 7u64).unwrap();
+    assert_eq!(echoed, 7);
+    let t0 = Instant::now();
+    while pool.restarts() < 1 && t0.elapsed() < Duration::from_secs(3) {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(pool.restarts() >= 1, "the poisoned worker must be replaced");
+
+    // Re-warm pass: if the holder was the victim this faults the blob back
+    // into a live worker; if not, it hits straight away.
+    let rewarm: Vec<f32> = pool
+        .map("sit.ref_sum", std::iter::repeat(r).take(6))
+        .unwrap();
+    assert!(rewarm.iter().all(|s| (s - want).abs() < 1.0));
+    let before = pool.sched_stats().local_hits;
+    let after_heal: Vec<f32> = pool
+        .map("sit.ref_sum", std::iter::repeat(r).take(6))
+        .unwrap();
+    assert!(after_heal.iter().all(|s| (s - want).abs() < 1.0));
+    assert!(
+        pool.sched_stats().local_hits >= before + 6,
+        "locality must be re-established after the heal"
+    );
+}
+
+/// **Completion-plane acceptance:** 4 threads share one cloned
+/// [`MapSelect`]; 12 maps finish in arbitrary order; every completion
+/// wakes exactly one waiter exactly once — no duplicate and no lost
+/// wakeups, verified by collecting every `(waiter, key)` claim.
+#[test]
+fn wait_any_wakes_exactly_once_per_completion_across_waiters() {
+    register_task("sit.sleepy", |ms: u64| {
+        std::thread::sleep(Duration::from_millis(ms));
+        Ok::<u64, String>(ms)
+    });
+    let pool = Pool::new(4).unwrap();
+    let sel: MapSelect<u64> = MapSelect::new();
+    let n = 12u64;
+    for k in 0..n {
+        let ms = 5 + (k % 5) * 7;
+        sel.add(k, pool.map_async("sit.sleepy", vec![ms]).unwrap());
+    }
+    let got = Arc::new(Mutex::new(Vec::<(usize, u64)>::new()));
+    let waiters: Vec<_> = (0..4)
+        .map(|w| {
+            let sel = sel.clone();
+            let got = got.clone();
+            std::thread::spawn(move || loop {
+                match sel.wait_any(Duration::from_millis(200)) {
+                    Some((k, out)) => {
+                        assert_eq!(out.unwrap(), vec![5 + (k % 5) * 7]);
+                        got.lock().unwrap().push((w, k));
+                    }
+                    None => {
+                        if sel.is_empty() {
+                            return;
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in waiters {
+        h.join().unwrap();
+    }
+    let got = got.lock().unwrap();
+    assert_eq!(
+        got.len(),
+        n as usize,
+        "every completion must wake exactly one waiter"
+    );
+    let keys: HashSet<u64> = got.iter().map(|(_, k)| *k).collect();
+    assert_eq!(keys.len(), n as usize, "no duplicate wakeups");
+}
+
+/// **Zero-poll acceptance:** an async PBT population run under tracing
+/// records not a single `pop.poll.*` event — slice re-dispatch rides the
+/// completion channel (`MapSelect`), never a poll/sleep cadence.
+#[test]
+fn traced_pbt_run_records_no_completion_polling() {
+    use fiber::pop::{DispatchMode, EnvKind, PbtAlgo, PbtConfig, PopulationRunner};
+    let _g = TRACE_GUARD.lock().unwrap_or_else(|e| e.into_inner());
+    let store = fiber::store::node_or_host(1 << 30);
+    let cfg = PbtConfig {
+        algo: PbtAlgo::Es,
+        env: EnvKind::CartPole,
+        pop: 4,
+        slices: 2,
+        iters_per_slice: 1,
+        max_steps: 80,
+        pop_inner: 8,
+        horizon: 24,
+        seed: 9,
+        ..Default::default()
+    };
+    let slices = cfg.slices;
+    let pool = Pool::builder()
+        .processes(2)
+        .store(store.clone())
+        .build()
+        .unwrap();
+    let mut runner = PopulationRunner::new(cfg, store).unwrap();
+    fiber::trace::set_enabled(true);
+    drain_global();
+    let report = runner.run(&pool, DispatchMode::Async).unwrap();
+    fiber::trace::set_enabled(false);
+    let dump = drain_global();
+    assert_eq!(report.slices_completed, 4 * slices, "population completed");
+    assert!(
+        !dump.events.is_empty(),
+        "tracing was on: the run must have recorded events"
+    );
+    let polls: Vec<&str> = dump
+        .events
+        .iter()
+        .filter(|(_, e)| e.name.starts_with("pop.poll"))
+        .map(|(_, e)| e.name.as_str())
+        .collect();
+    assert!(
+        polls.is_empty(),
+        "the async runner must never poll for completions, saw {polls:?}"
+    );
+}

@@ -1,5 +1,6 @@
 //! Cross-layer integration tests for `fiber::store`: pass-by-reference
-//! Pool maps over a 2-node TCP store deployment, and the store-backed ring
+//! Pool maps over a 2-node TCP store deployment, scheduler locality
+//! routing over per-worker store nodes, and the store-backed ring
 //! broadcast's warm path across a heal.
 
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -145,6 +146,59 @@ fn auto_put_map_transfers_once_per_node() {
         );
         std::thread::sleep(Duration::from_millis(5));
     }
+}
+
+/// **Satellite acceptance (scheduler locality):** a 2-worker pool whose
+/// thread workers each run their own TCP store node
+/// (`worker_store_budget`): after one warm fault-in, ≥ 90 % of by-ref
+/// tasks are *placed* on the holding worker (here: all of them, verified
+/// through `current_worker()` recorded inside the task fn) and the worker
+/// tier's transfer counter stays at 1 — locality is a scheduling
+/// property, not just a cache property.
+#[test]
+fn by_ref_map_lands_on_holding_worker_with_one_transfer() {
+    register_task("storeit.loc_probe", |r: ObjRef<Vec<f32>>| {
+        let v: Vec<f32> = r.get().map_err(|e| e.to_string())?;
+        let w = fiber::coordinator::task::current_worker();
+        Ok::<(u64, f32), String>((w, v.iter().sum()))
+    });
+    let leader = StoreNode::host(128 << 20);
+    let pool = Pool::builder()
+        .processes(2)
+        .chunksize(1)
+        .store(leader.clone())
+        .worker_store_budget(32 << 20)
+        .build()
+        .unwrap();
+    let payload = big_payload(31);
+    let want: f32 = payload.iter().sum();
+    let r: ObjRef<Vec<f32>> = pool.put_ref(&payload).unwrap();
+
+    // Warm: one task faults the blob into exactly one worker's node.
+    let (holder, s0): (u64, f32) = pool.apply("storeit.loc_probe", r).unwrap();
+    assert!((s0 - want).abs() < 1.0);
+
+    let n = 20usize;
+    let out: Vec<(u64, f32)> = pool
+        .map("storeit.loc_probe", std::iter::repeat(r).take(n))
+        .unwrap();
+    for (_, s) in &out {
+        assert!((s - want).abs() < 1.0);
+    }
+    let on_holder = out.iter().filter(|(w, _)| *w == holder).count();
+    assert!(
+        on_holder * 10 >= n * 9,
+        "only {on_holder}/{n} by-ref tasks ran on the holding worker {holder}"
+    );
+
+    // The scheduler routed tasks to the data instead of copying the data
+    // to the tasks: exactly one worker-tier transfer, ever.
+    let transfers: u64 = pool.worker_stores().iter().map(|(_, s)| s.transfers()).sum();
+    assert_eq!(transfers, 1, "blob crossed to the worker tier exactly once");
+    assert!(
+        pool.sched_stats().local_hits >= n as u64,
+        "warm placements must count as locality hits"
+    );
 }
 
 /// **Acceptance:** `store_broadcast`'s warm path cache-hits after a heal.
